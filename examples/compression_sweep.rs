@@ -1,0 +1,60 @@
+//! Compression sweep: the accuracy/perplexity-vs-FLOPs trade-off on one
+//! model, for any subset of methods — the workhorse behind Figs. 1a/5.
+//!
+//!     cargo run --release --example compression_sweep -- \
+//!         --model llama-sim --methods rana,cats --rates 0.15,0.3,0.45
+//!
+//! Requires `make artifacts`.
+
+use rana::adapters::calibrate::Method;
+use rana::bench::experiments::{Opts, Workbench};
+use rana::bench::harness::Table;
+use rana::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let model = args.get_str("model", "llama-sim");
+    let methods: Vec<Method> = args
+        .get_str("methods", "rana,cats")
+        .split(',')
+        .map(Method::parse)
+        .collect::<anyhow::Result<_>>()?;
+    let rates: Vec<f64> = args
+        .get_str("rates", "0.15,0.3,0.45")
+        .split(',')
+        .filter_map(|s| s.parse().ok())
+        .collect();
+    let opts = Opts {
+        ppl_tokens: args.get_usize("ppl-tokens", 12_000),
+        items: args.get_usize("items", 40),
+        ..Opts::default()
+    };
+
+    let wb = Workbench::load(&model, opts)?;
+    let mut t = Table::new(&["Method", "Target", "Achieved", "Avg Acc", "PPL"]);
+    let dense = wb.eval_row(&wb.dense(), None);
+    t.row(vec![
+        "dense".into(),
+        "-".into(),
+        "0.0%".into(),
+        format!("{:.2}%", dense.avg * 100.0),
+        format!("{:.3}", dense.ppl),
+    ]);
+    for &method in &methods {
+        for &rate in &rates {
+            let (m, rep) = wb.adapt(method, rate);
+            let row = wb.eval_row(&m, Some(&rep));
+            t.row(vec![
+                method.label().into(),
+                format!("{:.0}%", rate * 100.0),
+                format!("{:.1}%", rep.total_compression * 100.0),
+                format!("{:.2}%", row.avg * 100.0),
+                format!("{:.3}", row.ppl),
+            ]);
+            t.print_last();
+        }
+    }
+    println!("\nfull table:");
+    t.print();
+    Ok(())
+}

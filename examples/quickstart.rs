@@ -1,0 +1,58 @@
+//! Quickstart: load a trained model, apply a RaNA adapter at ~30 % FLOP
+//! compression, and compare dense vs adapted behaviour on real text.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Requires `make artifacts` (trains the simulated models).
+
+use std::sync::Arc;
+
+use rana::adapters::calibrate::{self, CalibOptions, Method};
+use rana::adapters::AdaptedModel;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the trained llama-sim model (SwiGLU decoder, byte-level).
+    let model = Arc::new(rana::model::Model::load(&rana::model::model_dir("llama-sim"))?);
+    println!(
+        "loaded {}: {} params, {} layers",
+        model.cfg.name,
+        model.cfg.n_params(),
+        model.cfg.n_layers
+    );
+
+    // 2. Collect calibration hidden states (the paper's X, Eqn. 7).
+    let corpus = rana::data::generate_corpus(400_000, 40_000);
+    let calib = calibrate::collect(
+        &model,
+        &corpus.train,
+        &CalibOptions { n_fit: 1024, n_eval: 128, window: 128, seed: 7 },
+    );
+
+    // 3. Adapt with RaNA at a 30 % total-FLOP compression target.
+    let (rana_model, report) =
+        calibrate::adapt(Arc::clone(&model), &calib, Method::Rana, 0.30, 512, 7);
+    println!(
+        "RaNA adapted: total compression {:.1}% (mlp {:.1}%, qkv {:.1}%)",
+        report.total_compression * 100.0,
+        report.mlp_compression * 100.0,
+        report.qkv_compression * 100.0
+    );
+    for (l, lr) in report.layers.iter().enumerate() {
+        println!(
+            "  layer {l}: mlp reconstruction err {:.2}%, qkv err {:.2}%",
+            lr.mlp_err * 100.0,
+            lr.qkv_err * 100.0
+        );
+    }
+
+    // 4. Compare perplexity and generations.
+    let dense = AdaptedModel::unadapted(Arc::clone(&model));
+    let ppl_dense = rana::eval::perplexity(&dense, &corpus.heldout, 8_000, 256);
+    let ppl_rana = rana::eval::perplexity(&rana_model, &corpus.heldout, 8_000, 256);
+    println!("perplexity: dense {ppl_dense:.3} → RaNA {ppl_rana:.3}");
+
+    let prompt = "about xtatu : the ";
+    println!("dense  : {}", rana::eval::greedy_decode(&dense, prompt, 48));
+    println!("RaNA   : {}", rana::eval::greedy_decode(&rana_model, prompt, 48));
+    Ok(())
+}

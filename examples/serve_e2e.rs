@@ -1,0 +1,126 @@
+//! End-to-end serving driver (DESIGN.md §5 E2E): proves all three layers
+//! compose. Starts the coordinator over the **PJRT engine** (HLO artifacts
+//! AOT-compiled from the JAX+Pallas model — python is not running), fires
+//! a batched scoring + generation workload at it over TCP, and reports
+//! latency/throughput; then repeats on the native engine with the adaptive
+//! rank-budget ladder enabled.
+//!
+//!     cargo run --release --example serve_e2e
+//!
+//! Requires `make artifacts`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use rana::util::json::Json;
+
+fn client_call(addr: &str, req: &Json) -> anyhow::Result<Json> {
+    let mut stream = TcpStream::connect(addr)?;
+    writeln!(stream, "{req}")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Ok(Json::parse(line.trim())?)
+}
+
+fn drive(addr: &str, label: &str, n_requests: usize) -> anyhow::Result<()> {
+    // Wait for the server to come up.
+    for _ in 0..600 {
+        if TcpStream::connect(addr).is_ok() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    let g = rana::data::grammar();
+    let mut rng = rana::util::rng::Xoshiro256::new(99);
+    let texts: Vec<String> =
+        (0..n_requests).map(|_| g.document(&mut rng)).collect();
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = texts
+        .into_iter()
+        .map(|text| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let t = Instant::now();
+                let r = client_call(
+                    &addr,
+                    &Json::obj(vec![("op", Json::str("score")), ("text", Json::Str(text))]),
+                )
+                .expect("score call");
+                (t.elapsed(), r)
+            })
+        })
+        .collect();
+    let mut lats: Vec<Duration> = Vec::new();
+    for h in handles {
+        let (lat, r) = h.join().unwrap();
+        assert!(r.get_f64("logprob").is_ok(), "bad response {r}");
+        lats.push(lat);
+    }
+    let wall = t0.elapsed();
+    lats.sort();
+    let gen = client_call(
+        addr,
+        &Json::obj(vec![
+            ("op", Json::str("generate")),
+            ("prompt", Json::str("about ")),
+            ("tokens", Json::Num(24.0)),
+        ]),
+    )?;
+    let stats = client_call(addr, &Json::obj(vec![("op", Json::str("stats"))]))?;
+
+    println!("\n== {label} ==");
+    println!(
+        "{n_requests} scoring requests in {wall:?} → {:.1} req/s",
+        n_requests as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "latency p50 {:?}  p99 {:?}",
+        lats[lats.len() / 2],
+        lats[lats.len() * 99 / 100]
+    );
+    println!("sample generation: {:?}", gen.get_str("text").unwrap_or("?"));
+    println!("server stats: {stats}");
+    Ok(())
+}
+
+fn run_server_and_drive(cfg: rana::coordinator::ServerConfig, label: &str) -> anyhow::Result<()> {
+    let addr = format!("127.0.0.1:{}", cfg.port);
+    let server = std::thread::spawn(move || rana::coordinator::serve(cfg));
+    drive(&addr, label, 48)?;
+    client_call(&addr, &Json::obj(vec![("op", Json::str("shutdown"))]))?;
+    let _ = server.join();
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    // Phase 1: PJRT engine — AOT HLO artifacts from the JAX+Pallas layers.
+    run_server_and_drive(
+        rana::coordinator::ServerConfig {
+            model: "llama-sim".into(),
+            port: 7071,
+            max_batch: 4,
+            target_compression: 0.0,
+            adaptive_budget: true, // loads the rana AOT variant as tier 2
+            engine: "pjrt".into(),
+        },
+        "PJRT engine (AOT jax+pallas artifacts, adaptive rana tier)",
+    )?;
+
+    // Phase 2: native engine with the adaptive rank-budget ladder.
+    run_server_and_drive(
+        rana::coordinator::ServerConfig {
+            model: "llama-sim".into(),
+            port: 7072,
+            max_batch: 4,
+            target_compression: 0.0,
+            adaptive_budget: true,
+            engine: "native".into(),
+        },
+        "native engine (adaptive rank-budget ladder dense/0.2/0.35/0.5)",
+    )?;
+    println!("\nserve_e2e OK — all three layers composed (L1 pallas → L2 jax → HLO → L3 rust).");
+    Ok(())
+}

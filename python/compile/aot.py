@@ -1,0 +1,164 @@
+"""AOT export: lower the dense and RaNA-adapted forwards to HLO **text**.
+
+Interchange is HLO text, not serialized ``HloModuleProto`` -- jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 (the
+version the rust ``xla`` crate binds) rejects; the text parser reassigns
+ids (see /opt/xla-example/README.md and DESIGN.md section 3).
+
+Weights are passed as *arguments*, not baked constants, keeping the HLO
+small: ``aot_manifest.json`` records the flattened argument order/shapes
+and ``aot_weights_<variant>.bin`` holds the matching f32 blob; the rust
+runtime (rust/src/runtime) reconstructs the literals and calls the
+executable with ``[w_0, ..., w_n, tokens]``.
+
+Usage: ``python -m compile.aot [--model llama-sim]``
+"""
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile import rana as R
+
+REPO = Path(__file__).resolve().parents[2]
+ARTIFACTS = REPO / "artifacts"
+
+# (batch, seq) buckets exported per variant.
+BUCKETS = [(1, 32), (4, 128)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def load_trained(name):
+    """Read manifest.json + weights.bin back into the jax param pytree."""
+    d = ARTIFACTS / name
+    manifest = json.loads((d / "manifest.json").read_text())
+    blob = np.frombuffer((d / "weights.bin").read_bytes(), dtype=np.float32)
+    tensors = {
+        t["name"]: blob[t["offset"] : t["offset"] + int(np.prod(t["shape"]))].reshape(
+            t["shape"]
+        )
+        for t in manifest["tensors"]
+    }
+    c = manifest["config"]
+    cfg = M.Config(
+        name=c["name"], arch=c["arch"], d_model=c["d_model"], n_layers=c["n_layers"],
+        n_heads=c["n_heads"], d_hidden=c["d_hidden"], vocab=c["vocab"],
+        max_seq=c["max_seq"], rope_theta=c["rope_theta"], norm_eps=c["norm_eps"],
+    )
+    def norm(prefix):
+        p = {"scale": jnp.asarray(tensors[f"{prefix}.scale"])}
+        if cfg.arch == "gelu_neox":
+            p["bias"] = jnp.asarray(tensors[f"{prefix}.bias"])
+        return p
+    layers = []
+    for l in range(cfg.n_layers):
+        layer = {
+            n: jnp.asarray(tensors[f"layers.{l}.attn.{n}"]) for n in ["wq", "wk", "wv", "wo"]
+        }
+        layer["up"] = jnp.asarray(tensors[f"layers.{l}.mlp.up"])
+        if cfg.arch == "swiglu":
+            layer["gate"] = jnp.asarray(tensors[f"layers.{l}.mlp.gate"])
+        layer["down"] = jnp.asarray(tensors[f"layers.{l}.mlp.down"])
+        layer["norm1"] = norm(f"layers.{l}.norm1")
+        layer["norm2"] = norm(f"layers.{l}.norm2")
+        layers.append(layer)
+    params = {
+        "embed": jnp.asarray(tensors["embed"]),
+        "layers": layers,
+        "final_norm": norm("final_norm"),
+        "lm_head": jnp.asarray(tensors["lm_head"]),
+    }
+    return cfg, params
+
+
+def export_variant(cfg, fn, weights_tree, variant, out_dir, modules):
+    """Lower ``fn(tokens, *flat_weights)`` at each bucket; write HLO + blob."""
+    flat, treedef = jax.tree_util.tree_flatten(weights_tree)
+
+    def wrapped(tokens, *flat_args):
+        tree = jax.tree_util.tree_unflatten(treedef, flat_args)
+        return (fn(tree, tokens),)
+
+    # Weight blob in flattened order.
+    blob = np.concatenate([np.asarray(a, dtype=np.float32).ravel() for a in flat])
+    weights_file = f"aot_weights_{variant}.bin"
+    (out_dir / weights_file).write_bytes(blob.tobytes())
+    args_meta = []
+    off = 0
+    for a in flat:
+        a = np.asarray(a)
+        shape = list(a.shape) if a.ndim else [1]
+        args_meta.append({"shape": shape, "offset": off})
+        off += int(a.size)
+
+    for batch, seq in BUCKETS:
+        tok_spec = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        flat_specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in flat]
+        lowered = jax.jit(wrapped).lower(tok_spec, *flat_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{variant}_b{batch}_t{seq}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        modules.append({
+            "variant": variant,
+            "batch": batch,
+            "seq": seq,
+            "vocab": cfg.vocab,
+            "file": fname,
+            "weights_file": weights_file,
+            "args": args_meta,
+        })
+        print(f"[aot] {cfg.name}/{fname}: {len(text)/1e3:.0f} KB hlo, "
+              f"{blob.size*4/1e6:.1f} MB weights", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="llama-sim")
+    ap.add_argument("--rana-keep", type=float, default=0.6,
+                    help="keep fraction for the RaNA artifact (~40%% compression)")
+    args = ap.parse_args()
+
+    cfg, params = load_trained(args.model)
+    out_dir = ARTIFACTS / cfg.name
+    modules = []
+
+    # Dense variant.
+    export_variant(cfg, lambda p, t: M.forward(cfg, p, t), params, "dense",
+                   out_dir, modules)
+
+    # RaNA variant: adapters built from calibration data, Layer-1 Pallas
+    # kernels inlined into the lowered module.
+    corpus = np.frombuffer((ARTIFACTS / "corpus_train.txt").read_bytes(),
+                           dtype=np.uint8).astype(np.int32)
+    calib = R.collect_calib(cfg, params, corpus, n_windows=12, seq=128)
+    adapters = R.build_adapters(cfg, params, calib, keep=args.rana_keep)
+    tree = {"params": params, "adapters": adapters}
+    export_variant(
+        cfg,
+        lambda t_, tok: M.forward_rana(cfg, t_["params"], t_["adapters"], tok),
+        tree,
+        "rana",
+        out_dir,
+        modules,
+    )
+
+    (out_dir / "aot_manifest.json").write_text(json.dumps({"modules": modules}))
+    print(f"[aot] wrote {out_dir / 'aot_manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

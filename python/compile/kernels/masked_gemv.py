@@ -1,0 +1,245 @@
+"""Layer-1 Pallas kernels: the RaNA masked contraction hot-spot.
+
+HARDWARE ADAPTATION (DESIGN.md section 3). The paper realizes its latency
+wins with a Triton masked-GEMV on an L40S: each threadblock reads the mask
+and skips pruned columns of ``A``. TPUs have no threadblocks or shared
+memory; the same insight -- "only move and multiply the rows of ``A`` whose
+rank survives the mask" -- maps here to:
+
+* **BlockSpec tiling**: ``A^T`` is tiled ``(bd, bo)`` into VMEM and the
+  score tile ``(bt, bd)`` is masked on the VPU (``jnp.where``) before an
+  MXU ``dot`` contraction, accumulated over the ``d`` grid axis;
+* **(8, 128) alignment**: block shapes default to multiples of the MXU
+  systolic tile so the contraction runs at full utilization;
+* **VMEM budget**: ``bt*bd + bd*bo + bt*bo`` floats per step; the default
+  (64, 128, 128) tile set needs ~0.6 MiB of the ~16 MiB VMEM, leaving
+  room for double buffering (see DESIGN.md section-Perf).
+
+Kernels are lowered with ``interpret=True`` -- the CPU PJRT plugin cannot
+execute Mosaic custom-calls; real-TPU performance is *estimated* in
+DESIGN.md from the VMEM footprint and MXU arithmetic.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BT = 64   # token-tile rows
+DEFAULT_BD = 128  # rank-tile (contraction axis)
+DEFAULT_BO = 128  # output-tile cols
+
+
+def _round_up(n, m):
+    return ((n + m - 1) // m) * m
+
+
+def _pad2(a, m0, m1):
+    """Zero-pad a 2-d array so both dims are multiples of the tile shape.
+
+    Ragged tiles read NaN padding under ``interpret=True``; zero padding is
+    semantics-preserving for every kernel here (zero scores contribute
+    nothing to the contraction regardless of the threshold).
+    """
+    p0 = _round_up(a.shape[0], m0) - a.shape[0]
+    p1 = _round_up(a.shape[1], m1) - a.shape[1]
+    if p0 == 0 and p1 == 0:
+        return a
+    return jnp.pad(a, ((0, p0), (0, p1)))
+
+
+def _pad1(a, m):
+    p = _round_up(a.shape[0], m) - a.shape[0]
+    return a if p == 0 else jnp.pad(a, (0, p))
+
+
+def _rana_apply_kernel(s_ref, at_ref, t_ref, o_ref, *, n_d_steps):
+    """One (token-tile, out-tile, d-step) cell of the masked contraction.
+
+    ``o_ref`` accumulates over the d axis (grid dim 2); the mask is applied
+    to the score tile on the VPU before the MXU dot.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    s = s_ref[...]
+    t = t_ref[0]
+    masked = jnp.where(s * s >= t, s, 0.0)
+    o_ref[...] += jnp.dot(masked, at_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bd", "bo"))
+def rana_apply(s, at, threshold, bt=DEFAULT_BT, bd=DEFAULT_BD, bo=DEFAULT_BO):
+    """Masked rank contraction ``(m(s) * s) @ at`` with ``m = 1{s^2 >= t}``.
+
+    Args:
+      s: ``(T, d)`` scores ``Bx``.
+      at: ``(d, o)`` -- ``A^T``.
+      threshold: scalar B-masker threshold.
+      bt/bd/bo: tile sizes (clamped to the problem size).
+
+    Returns:
+      ``(T, o)`` float32.
+    """
+    tdim, d = s.shape
+    d2, o = at.shape
+    assert d == d2, f"s {s.shape} vs at {at.shape}"
+    bt = min(bt, tdim)
+    bd = min(bd, d)
+    bo = min(bo, o)
+    s_p = _pad2(s.astype(jnp.float32), bt, bd)
+    at_p = _pad2(at.astype(jnp.float32), bd, bo)
+    tp, dp = s_p.shape
+    op = at_p.shape[1]
+    grid = (pl.cdiv(tp, bt), pl.cdiv(op, bo), pl.cdiv(dp, bd))
+    t_arr = jnp.asarray([threshold], dtype=jnp.float32)
+    kernel = functools.partial(_rana_apply_kernel, n_d_steps=grid[2])
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bd), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bd, bo), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1,), lambda i, j, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, bo), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((tp, op), jnp.float32),
+        interpret=True,
+    )(s_p, at_p, t_arr)
+    return out[:tdim, :o]
+
+
+def _bmasker_kernel(x_ref, bt_ref, t_ref, o_ref, *, n_k_steps):
+    """Computes a tile of ``s = x @ b^T`` and masks it by ``s^2 >= t``."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], bt_ref[...], preferred_element_type=jnp.float32
+    )
+
+    # Final k-step: apply the B-masker in place (Eqn. 9).
+    @pl.when(k == n_k_steps - 1)
+    def _mask():
+        s = o_ref[...]
+        t = t_ref[0]
+        o_ref[...] = jnp.where(s * s >= t, s, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bi", "bd"))
+def bmasker_scores(x, b, threshold, bt=DEFAULT_BT, bi=DEFAULT_BD, bd=DEFAULT_BO):
+    """Fused ``Bx`` + B-masker: returns masked scores ``(T, d)``.
+
+    Args:
+      x: ``(T, i)`` layer inputs.
+      b: ``(d, i)`` -- ``B = U^T W``.
+      threshold: scalar.
+    """
+    tdim, i = x.shape
+    d, i2 = b.shape
+    assert i == i2
+    bt = min(bt, tdim)
+    bi = min(bi, i)
+    bd = min(bd, d)
+    x_p = _pad2(x.astype(jnp.float32), bt, bi)
+    bt_p = _pad2(b.T.astype(jnp.float32), bi, bd)  # (i, d)
+    tp, ip = x_p.shape
+    dp = bt_p.shape[1]
+    grid = (pl.cdiv(tp, bt), pl.cdiv(dp, bd), pl.cdiv(ip, bi))
+    t_arr = jnp.asarray([threshold], dtype=jnp.float32)
+    kernel = functools.partial(_bmasker_kernel, n_k_steps=grid[2])
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bi), lambda ti, dj, k: (ti, k)),
+            pl.BlockSpec((bi, bd), lambda ti, dj, k: (k, dj)),
+            pl.BlockSpec((1,), lambda ti, dj, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, bd), lambda ti, dj, k: (ti, dj)),
+        out_shape=jax.ShapeDtypeStruct((tp, dp), jnp.float32),
+        interpret=True,
+    )(x_p, bt_p, t_arr)
+    return out[:tdim, :d]
+
+
+def rana_linear(x, b, at, threshold):
+    """Full rank-adapted linear ``A(m(x) * Bx)`` built from the two kernels.
+
+    This is the composition the Layer-2 model calls; it lowers into the
+    same HLO module as the surrounding jax computation.
+    """
+    s = bmasker_scores(x, b, threshold)
+    # Scores are already masked; rana_apply re-checks the mask, which is
+    # idempotent for already-zeroed entries (0^2 < t for t > 0).
+    return rana_apply(s, at, threshold)
+
+
+def _neuron_threshold_kernel(x_ref, wt_ref, n_ref, t_ref, o_ref, *, n_k_steps):
+    """Masked Down-Projection tile: mask x by |x|*norm >= t, then dot."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    norms = n_ref[...]
+    t = t_ref[0]
+    masked = jnp.where(jnp.abs(x) * norms[None, :] >= t, x, 0.0)
+    o_ref[...] += jnp.dot(masked, wt_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bh", "bo"))
+def neuron_threshold_apply(
+    x, wt, col_norms, threshold, bt=DEFAULT_BT, bh=DEFAULT_BD, bo=DEFAULT_BO
+):
+    """Down-Projection neuron thresholding (Eqn. 12): ``W(m(x) * x)``.
+
+    Args:
+      x: ``(T, h)`` intermediates.
+      wt: ``(h, o)`` -- ``W_down^T``.
+      col_norms: ``(h,)``.
+    """
+    tdim, h = x.shape
+    h2, o = wt.shape
+    assert h == h2
+    bt = min(bt, tdim)
+    bh = min(bh, h)
+    bo = min(bo, o)
+    x_p = _pad2(x.astype(jnp.float32), bt, bh)
+    wt_p = _pad2(wt.astype(jnp.float32), bh, bo)
+    n_p = _pad1(col_norms.astype(jnp.float32), bh)
+    tp, hp = x_p.shape
+    op = wt_p.shape[1]
+    grid = (pl.cdiv(tp, bt), pl.cdiv(op, bo), pl.cdiv(hp, bh))
+    t_arr = jnp.asarray([threshold], dtype=jnp.float32)
+    kernel = functools.partial(_neuron_threshold_kernel, n_k_steps=grid[2])
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bh), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bh, bo), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bh,), lambda i, j, k: (k,)),
+            pl.BlockSpec((1,), lambda i, j, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, bo), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((tp, op), jnp.float32),
+        interpret=True,
+    )(x_p, wt_p, n_p, t_arr)
+    return out[:tdim, :o]
+
+
+def vmem_footprint_bytes(bt=DEFAULT_BT, bd=DEFAULT_BD, bo=DEFAULT_BO):
+    """Estimated per-step VMEM residency of ``rana_apply`` in bytes
+    (inputs + accumulator, f32). Used by DESIGN.md section-Perf."""
+    return 4 * (bt * bd + bd * bo + bt * bo)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every kernel in this package is validated against these references by
+``python/tests/test_kernels.py`` across seeded shape sweeps before it is
+allowed into the AOT model graph.
+"""
+
+import jax.numpy as jnp
+
+
+def rana_apply_ref(s, at, threshold):
+    """Reference for the RaNA masked rank contraction.
+
+    Args:
+      s: ``(T, d)`` pre-masker scores ``Bx`` per token.
+      at: ``(d, o)`` -- ``A^T`` (columns of ``A`` are rows here).
+      threshold: scalar ``t`` of the B-masker (Eqn. 9).
+
+    Returns:
+      ``(T, o)`` = ``(m * s) @ at`` with ``m = 1{s^2 >= t}``.
+    """
+    masked = jnp.where(s * s >= threshold, s, 0.0)
+    return masked @ at
+
+
+def bmasker_scores_ref(x, b, threshold):
+    """Reference B-masker: ``s = x @ b^T`` masked by ``s^2 >= t``.
+
+    Args:
+      x: ``(T, i)`` inputs.
+      b: ``(d, i)`` -- the ``B = U^T W`` factor.
+      threshold: scalar ``t``.
+
+    Returns:
+      ``(T, d)`` masked scores (zeros where pruned).
+    """
+    s = x @ b.T
+    return jnp.where(s * s >= threshold, s, 0.0)
+
+
+def rana_linear_ref(x, b, at, threshold):
+    """Full rank-adapted linear: ``A(m(x) * Bx)`` (paper Eqn. 4/9)."""
+    return rana_apply_ref(bmasker_scores_ref(x, b, threshold), at, threshold)
+
+
+def neuron_threshold_ref(x, wt, col_norms, threshold):
+    """Reference for Down-Projection neuron thresholding (Eqn. 12).
+
+    Args:
+      x: ``(T, h)`` MLP intermediates.
+      wt: ``(h, o)`` -- ``W_down^T``.
+      col_norms: ``(h,)`` -- column norms of ``W_down``.
+      threshold: scalar.
+    """
+    mask = jnp.abs(x) * col_norms[None, :] >= threshold
+    return jnp.where(mask, x, 0.0) @ wt

@@ -1,0 +1,266 @@
+"""Layer-2: the paper-testbed transformers in JAX.
+
+Architectures mirror ``rust/src/model`` exactly (same norms, RoPE
+convention, activations and parameter naming); parity is enforced by
+golden-logit files exported at training time and checked by
+``rust/tests/test_artifacts.rs``.
+
+Two forward passes are defined:
+
+* :func:`forward` -- the dense model (training + goldens + dense HLO);
+* :func:`forward_rana` -- the RaNA-adapted model whose Up/Gate/QKV ranks
+  go through the Layer-1 Pallas kernels (:mod:`compile.kernels`), so the
+  adapted graph lowers into a single HLO module with the kernels inlined.
+"""
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import masked_gemv as kernels
+
+MODEL_VOCAB = 288  # byte vocab + BOS + padding (mirrors rust tokenizer.rs)
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    name: str
+    arch: str  # "swiglu" | "gelu_neox"
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_hidden: int
+    vocab: int = MODEL_VOCAB
+    max_seq: int = 512
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+
+
+def llama_sim():
+    return Config("llama-sim", "swiglu", 192, 4, 6, 512)
+
+
+def gemma_sim():
+    return Config("gemma-sim", "swiglu", 160, 4, 5, 640)
+
+
+def pythia_sim(size):
+    d, l, h = {"s": (96, 4, 4), "m": (144, 4, 4), "l": (192, 5, 6)}[size]
+    return Config(f"pythia-sim-{size}", "gelu_neox", d, l, h, 4 * d)
+
+
+ALL_CONFIGS = [llama_sim(), gemma_sim(), pythia_sim("s"), pythia_sim("m"), pythia_sim("l")]
+
+
+def config_by_name(name):
+    for c in ALL_CONFIGS:
+        if c.name == name:
+            return c
+    raise KeyError(name)
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+
+def init_params(cfg: Config, key):
+    """Scaled-gaussian init (same scheme as rust ModelWeights::random_init)."""
+    d, h = cfg.d_model, cfg.d_hidden
+    std_d = 1.0 / jnp.sqrt(d)
+    std_h = 1.0 / jnp.sqrt(h)
+    keys = iter(jax.random.split(key, 10 + 10 * cfg.n_layers))
+
+    def lin(o, i, std):
+        return jax.random.normal(next(keys), (o, i), jnp.float32) * std
+
+    def norm():
+        p = {"scale": jnp.ones((d,), jnp.float32)}
+        if cfg.arch == "gelu_neox":
+            p["bias"] = jnp.zeros((d,), jnp.float32)
+        return p
+
+    layers = []
+    for _ in range(cfg.n_layers):
+        layer = {
+            "wq": lin(d, d, std_d),
+            "wk": lin(d, d, std_d),
+            "wv": lin(d, d, std_d),
+            "wo": lin(d, d, std_d),
+            "up": lin(h, d, std_d),
+            "down": lin(d, h, std_h),
+            "norm1": norm(),
+            "norm2": norm(),
+        }
+        if cfg.arch == "swiglu":
+            layer["gate"] = lin(h, d, std_d)
+        layers.append(layer)
+    return {
+        "embed": jax.random.normal(next(keys), (cfg.vocab, d), jnp.float32) * 0.02,
+        "layers": layers,
+        "final_norm": norm(),
+        "lm_head": lin(cfg.vocab, d, std_d),
+    }
+
+
+# --------------------------------------------------------------------------
+# Ops (mirroring rust/src/model/ops.rs)
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, eps):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x / jnp.sqrt(ms + eps) * scale
+
+
+def layernorm(x, scale, bias, eps):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * scale + bias
+
+
+def apply_norm(cfg, p, x):
+    if cfg.arch == "swiglu":
+        return rmsnorm(x, p["scale"], cfg.norm_eps)
+    return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+
+
+def rope(x, positions, theta):
+    """Split-half RoPE on ``x: (..., T, n_heads, hd)``."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / theta ** (2.0 * jnp.arange(half, dtype=jnp.float32) / hd)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (T, half)
+    sin = jnp.sin(angles)[..., None, :]  # broadcast over heads
+    cos = jnp.cos(angles)[..., None, :]
+    a, b = x[..., :half], x[..., half:]
+    # Move the head axis: x is (B, T, H, hd); angles (B?, T, 1, half).
+    return jnp.concatenate([a * cos - b * sin, a * sin + b * cos], axis=-1)
+
+
+def attention(cfg, q, k, v):
+    """Causal MHA over ``(B, T, d)`` inputs already projected."""
+    b_, t, d = q.shape
+    hd = d // cfg.n_heads
+    qh = q.reshape(b_, t, cfg.n_heads, hd)
+    kh = k.reshape(b_, t, cfg.n_heads, hd)
+    vh = v.reshape(b_, t, cfg.n_heads, hd)
+    pos = jnp.arange(t)
+    qh = rope(qh, pos, cfg.rope_theta)
+    kh = rope(kh, pos, cfg.rope_theta)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", qh, kh) / jnp.sqrt(hd).astype(jnp.float32)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vh)
+    return out.reshape(b_, t, d)
+
+
+def mlp(cfg, layer, x):
+    if cfg.arch == "swiglu":
+        up = x @ layer["up"].T
+        gate = x @ layer["gate"].T
+        inter = up * jax.nn.silu(gate)
+    else:
+        inter = jax.nn.gelu(x @ layer["up"].T, approximate=True)
+    return inter @ layer["down"].T
+
+
+def forward(cfg: Config, params, tokens):
+    """Dense forward: ``tokens (B, T) -> logits (B, T, vocab)``."""
+    x = params["embed"][tokens]
+    for layer in params["layers"]:
+        h1 = apply_norm(cfg, layer["norm1"], x)
+        q = h1 @ layer["wq"].T
+        k = h1 @ layer["wk"].T
+        v = h1 @ layer["wv"].T
+        attn = attention(cfg, q, k, v)
+        attn_o = attn @ layer["wo"].T
+        if cfg.arch == "swiglu":
+            x = x + attn_o
+            h2 = apply_norm(cfg, layer["norm2"], x)
+            x = x + mlp(cfg, layer, h2)
+        else:  # parallel residual (NeoX)
+            h2 = apply_norm(cfg, layer["norm2"], x)
+            x = x + attn_o + mlp(cfg, layer, h2)
+    hf = apply_norm(cfg, params["final_norm"], x)
+    return hf @ params["lm_head"].T
+
+
+def loss_fn(cfg: Config, params, tokens):
+    """Next-token cross-entropy over ``(B, T)`` token windows."""
+    logits = forward(cfg, params, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+# --------------------------------------------------------------------------
+# RaNA-adapted forward (Layer-1 kernels inlined)
+# --------------------------------------------------------------------------
+
+
+def rana_linear_2d(x2d, adapter):
+    """Apply a rank-adapted linear via the Pallas kernels on ``(N, i)``."""
+    return kernels.rana_linear(x2d, adapter["b"], adapter["at"], adapter["threshold"])
+
+
+def forward_rana(cfg: Config, params, adapters, tokens):
+    """RaNA-adapted forward (paper Eqn. 10/11), kernels on Up/Gate/QKV/Down.
+
+    ``adapters``: per layer, dict with optional entries
+      ``qkv``  -- {at (d_r, 3d), b (d_r, d), threshold}
+      ``up``/``gate`` -- same structure per projection
+      ``down`` -- {wt (h, d), col_norms (h,), threshold}
+    Layers without an entry stay dense.
+    """
+    b_, t = tokens.shape
+    x = params["embed"][tokens]
+    d = cfg.d_model
+    for li, layer in enumerate(params["layers"]):
+        ad = adapters[li] if li < len(adapters) else None
+        h1 = apply_norm(cfg, layer["norm1"], x)
+        if ad and "qkv" in ad:
+            fused = rana_linear_2d(h1.reshape(b_ * t, d), ad["qkv"]).reshape(b_, t, 3 * d)
+            q, k, v = fused[..., :d], fused[..., d : 2 * d], fused[..., 2 * d :]
+        else:
+            q = h1 @ layer["wq"].T
+            k = h1 @ layer["wk"].T
+            v = h1 @ layer["wv"].T
+        attn = attention(cfg, q, k, v)
+        attn_o = attn @ layer["wo"].T
+
+        def adapted_mlp(h2):
+            flat = h2.reshape(b_ * t, d)
+            if ad and "up" in ad:
+                up = rana_linear_2d(flat, ad["up"])
+            else:
+                up = flat @ layer["up"].T
+            if cfg.arch == "swiglu":
+                if ad and "gate" in ad:
+                    gate = rana_linear_2d(flat, ad["gate"])
+                else:
+                    gate = flat @ layer["gate"].T
+                inter = up * jax.nn.silu(gate)
+            else:
+                inter = jax.nn.gelu(up, approximate=True)
+            if ad and "down" in ad:
+                out = kernels.neuron_threshold_apply(
+                    inter, ad["down"]["wt"], ad["down"]["col_norms"], ad["down"]["threshold"]
+                )
+            else:
+                out = inter @ layer["down"].T
+            return out.reshape(b_, t, d)
+
+        if cfg.arch == "swiglu":
+            x = x + attn_o
+            h2 = apply_norm(cfg, layer["norm2"], x)
+            x = x + adapted_mlp(h2)
+        else:
+            h2 = apply_norm(cfg, layer["norm2"], x)
+            x = x + attn_o + adapted_mlp(h2)
+    hf = apply_norm(cfg, params["final_norm"], x)
+    return hf @ params["lm_head"].T

@@ -1,0 +1,120 @@
+"""Build-time RaNA adapter construction in JAX (for the AOT serving path).
+
+Produces the adapter tensors consumed by :func:`compile.model.forward_rana`:
+rank factors ``A = U_d``, ``B = U_d^T W`` from the SVD of ``W X`` over
+calibration hidden states (Theorem 1), B-masker thresholds from pooled
+score quantiles (Eqn. 8-9), and Down-Projection neuron thresholds
+(Eqn. 12).
+
+NOTE (DESIGN.md section 4): the *full* FLOP-allocation procedure (per-linear
+line search nested in a per-MLP grid search) lives in the rust layer, which
+generates every table/figure. This module uses the budget-balanced
+closed-form split (half the component budget to the masker, half to the
+masked contraction) -- adequate for the AOT serving artifact and much
+cheaper at build time.
+"""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+
+
+def collect_calib(cfg, params, tokens, n_windows=16, seq=128, seed=0):
+    """Capture hidden states at adapter insertion points.
+
+    Returns per-layer dicts with ``qkv_in (N, d)``, ``mlp_in (N, d)``,
+    ``down_in (N, h)`` as numpy arrays.
+    """
+    rng = np.random.default_rng(seed)
+    starts = rng.integers(0, len(tokens) - seq - 1, size=n_windows)
+    batch = jnp.asarray(np.stack([tokens[s : s + seq] for s in starts]))
+
+    captures = [dict(qkv_in=[], mlp_in=[], down_in=[]) for _ in range(cfg.n_layers)]
+    x = params["embed"][batch]
+    for li, layer in enumerate(params["layers"]):
+        h1 = M.apply_norm(cfg, layer["norm1"], x)
+        captures[li]["qkv_in"].append(np.asarray(h1).reshape(-1, cfg.d_model))
+        q = h1 @ layer["wq"].T
+        k = h1 @ layer["wk"].T
+        v = h1 @ layer["wv"].T
+        attn_o = M.attention(cfg, q, k, v) @ layer["wo"].T
+        if cfg.arch == "swiglu":
+            x = x + attn_o
+            h2 = M.apply_norm(cfg, layer["norm2"], x)
+        else:
+            h2 = M.apply_norm(cfg, layer["norm2"], x)
+        captures[li]["mlp_in"].append(np.asarray(h2).reshape(-1, cfg.d_model))
+        if cfg.arch == "swiglu":
+            inter = (h2 @ layer["up"].T) * jax.nn.silu(h2 @ layer["gate"].T)
+        else:
+            inter = jax.nn.gelu(h2 @ layer["up"].T, approximate=True)
+        captures[li]["down_in"].append(np.asarray(inter).reshape(-1, cfg.d_hidden))
+        mlp_out = inter @ layer["down"].T
+        if cfg.arch == "swiglu":
+            x = x + mlp_out
+        else:
+            x = x + attn_o + mlp_out
+    return [{k: np.concatenate(v) for k, v in c.items()} for c in captures]
+
+
+def build_rank_adapter(w, x_calib, budget):
+    """Rank adapter for ``w (o, i)`` with calibration inputs ``x (N, i)``.
+
+    Budget split: half to the masker (``Bx``: 2*d*i), half to the masked
+    contraction (2*o*E[r]).
+    """
+    o, i = w.shape
+    d_max = min(o, i)
+    d = int(np.clip(budget / 2.0 / (2.0 * i), 1, d_max))
+    r_target = float(np.clip(budget / 2.0 / (2.0 * o), 1.0, d))
+
+    wx = np.asarray(w) @ x_calib.T  # (o, N)
+    u, _, _ = np.linalg.svd(wx, full_matrices=False)
+    u_d = u[:, :d]  # (o, d)
+    b = u_d.T @ np.asarray(w)  # (d, i)
+    scores = (b @ x_calib.T) ** 2  # (d, N)
+    keep_frac = min(1.0, r_target / d)
+    threshold = float(np.quantile(scores.ravel(), 1.0 - keep_frac))
+    return {
+        "at": jnp.asarray(u_d.T, dtype=jnp.float32),  # (d, o)
+        "b": jnp.asarray(b, dtype=jnp.float32),
+        "threshold": jnp.float32(threshold),
+    }
+
+
+def build_down_adapter(w_down, inter_calib, budget):
+    """Neuron-thresholding adapter for the Down projection (Eqn. 12)."""
+    o, h = w_down.shape
+    col_norms = np.linalg.norm(np.asarray(w_down), axis=0)  # (h,)
+    r_target = float(np.clip((budget - 2.0 * h) / (2.0 * o), 1.0, h))
+    scores = np.abs(inter_calib) * col_norms[None, :]
+    threshold = float(np.quantile(scores.ravel(), 1.0 - min(1.0, r_target / h)))
+    return {
+        "wt": jnp.asarray(np.asarray(w_down).T, dtype=jnp.float32),  # (h, o)
+        "col_norms": jnp.asarray(col_norms, dtype=jnp.float32),
+        "threshold": jnp.float32(threshold),
+    }
+
+
+def build_adapters(cfg, params, calib, keep=0.65):
+    """RaNA adapters for every layer at a `keep` fraction of MLP/QKV FLOPs."""
+    adapters = []
+    d, h = cfg.d_model, cfg.d_hidden
+    for li, layer in enumerate(params["layers"]):
+        c = calib[li]
+        fused = np.concatenate(
+            [np.asarray(layer["wq"]), np.asarray(layer["wk"]), np.asarray(layer["wv"])]
+        )  # (3d, d)
+        qkv_budget = keep * 2.0 * 3 * d * d
+        ad = {"qkv": build_rank_adapter(fused, c["qkv_in"], qkv_budget)}
+        mlp_dense = (6.0 if cfg.arch == "swiglu" else 4.0) * h * d
+        comp = keep * mlp_dense / (3.0 if cfg.arch == "swiglu" else 2.0)
+        ad["up"] = build_rank_adapter(np.asarray(layer["up"]), c["mlp_in"], comp)
+        if cfg.arch == "swiglu":
+            ad["gate"] = build_rank_adapter(np.asarray(layer["gate"]), c["mlp_in"], comp)
+        ad["down"] = build_down_adapter(np.asarray(layer["down"]), c["down_in"], comp)
+        adapters.append(ad)
+    return adapters

@@ -1,0 +1,70 @@
+"""Tests over the AOT export path (skip when artifacts are not built)."""
+
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+ARTIFACTS = Path(__file__).resolve().parents[2] / "artifacts"
+
+needs_artifacts = pytest.mark.skipif(
+    not (ARTIFACTS / "llama-sim" / "manifest.json").exists(),
+    reason="run `make artifacts` first",
+)
+
+
+@needs_artifacts
+def test_load_trained_roundtrip_matches_goldens():
+    from compile import aot, model as M
+
+    cfg, params = aot.load_trained("llama-sim")
+    assert cfg.name == "llama-sim"
+    toks = np.frombuffer(
+        (ARTIFACTS / "llama-sim" / "golden_tokens.bin").read_bytes(), dtype=np.float32
+    ).astype(np.int32)
+    want = np.frombuffer(
+        (ARTIFACTS / "llama-sim" / "golden_logits.bin").read_bytes(), dtype=np.float32
+    )
+    t = toks.size // 2
+    tokens = jnp.asarray(toks.reshape(2, t))
+    got = np.asarray(M.forward(cfg, params, tokens), dtype=np.float32).ravel()
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@needs_artifacts
+def test_aot_manifest_consistent_with_blobs():
+    mpath = ARTIFACTS / "llama-sim" / "aot_manifest.json"
+    if not mpath.exists():
+        pytest.skip("aot not exported yet")
+    manifest = json.loads(mpath.read_text())
+    assert manifest["modules"], "no modules exported"
+    for mod in manifest["modules"]:
+        hlo = ARTIFACTS / "llama-sim" / mod["file"]
+        blob = ARTIFACTS / "llama-sim" / mod["weights_file"]
+        assert hlo.exists() and blob.exists()
+        n_floats = blob.stat().st_size // 4
+        last = mod["args"][-1]
+        need = last["offset"] + int(np.prod(last["shape"]))
+        assert need == n_floats, (mod["file"], need, n_floats)
+        text = hlo.read_text()
+        assert text.startswith("HloModule"), "not HLO text"
+
+
+@needs_artifacts
+def test_rana_artifact_contains_masking_graph():
+    """The RaNA HLO must actually contain the thresholding compare ops
+    (i.e. the Pallas kernels were inlined, not constant-folded away)."""
+    mpath = ARTIFACTS / "llama-sim" / "aot_manifest.json"
+    if not mpath.exists():
+        pytest.skip("aot not exported yet")
+    manifest = json.loads(mpath.read_text())
+    rana_mods = [m for m in manifest["modules"] if m["variant"] == "rana"]
+    assert rana_mods
+    text = (ARTIFACTS / "llama-sim" / rana_mods[0]["file"]).read_text()
+    assert "compare" in text, "no masking compare ops in RaNA HLO"
+    # RaNA modules carry the extra adapter weights.
+    dense_mods = [m for m in manifest["modules"] if m["variant"] == "dense"]
+    assert len(rana_mods[0]["args"]) > len(dense_mods[0]["args"])

@@ -1,0 +1,121 @@
+"""Layer-2 model tests: shapes, architecture semantics, training signal,
+and the RaNA-adapted forward (kernel-inlined) vs the dense forward."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile import rana as R
+
+
+def tiny_cfg(arch="swiglu"):
+    return M.Config("tiny", arch, d_model=16, n_layers=2, n_heads=2,
+                    d_hidden=32, vocab=64, max_seq=64)
+
+
+@pytest.mark.parametrize("arch", ["swiglu", "gelu_neox"])
+def test_forward_shapes_and_finiteness(arch):
+    cfg = tiny_cfg(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jnp.asarray(np.random.default_rng(0).integers(0, 64, size=(3, 10)))
+    logits = M.forward(cfg, params, tokens)
+    assert logits.shape == (3, 10, 64)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ["swiglu", "gelu_neox"])
+def test_causality(arch):
+    cfg = tiny_cfg(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    r = np.random.default_rng(1)
+    toks = r.integers(0, 64, size=(1, 8))
+    toks2 = toks.copy()
+    toks2[0, -1] = (toks2[0, -1] + 7) % 64
+    a = M.forward(cfg, params, jnp.asarray(toks))
+    b = M.forward(cfg, params, jnp.asarray(toks2))
+    # Positions before the change must be identical.
+    np.testing.assert_allclose(np.asarray(a)[0, :-1], np.asarray(b)[0, :-1],
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_loss_decreases_with_a_few_steps():
+    cfg = tiny_cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(2))
+    r = np.random.default_rng(2)
+    # Learnable toy stream: repeating pattern.
+    pattern = np.tile(r.integers(0, 64, size=16), 20)
+    batch = jnp.asarray(np.stack([pattern[i:i + 33] for i in range(8)]))
+
+    grad_fn = jax.jit(jax.value_and_grad(lambda p: M.loss_fn(cfg, p, batch)))
+    loss0, _ = grad_fn(params)
+    lr = 1e-2
+    for _ in range(25):
+        loss, grads = grad_fn(params)
+        params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    assert float(loss) < float(loss0) * 0.8, (float(loss0), float(loss))
+
+
+def test_rana_forward_matches_dense_at_full_rank_zero_threshold():
+    """With full-rank factors and t=0 the adapted model is exact."""
+    cfg = tiny_cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(3))
+    adapters = []
+    for layer in params["layers"]:
+        fused = jnp.concatenate([layer["wq"], layer["wk"], layer["wv"]])
+        d = cfg.d_model
+
+        def full_rank(w):
+            o, i = w.shape
+            u, _, _ = np.linalg.svd(np.asarray(w) @ np.eye(i), full_matrices=False)
+            return {
+                "at": jnp.asarray(u.T, dtype=jnp.float32),
+                "b": jnp.asarray(u.T @ np.asarray(w), dtype=jnp.float32),
+                "threshold": jnp.float32(0.0),
+            }
+
+        down = np.asarray(layer["down"])
+        adapters.append({
+            "qkv": full_rank(fused),
+            "up": full_rank(layer["up"]),
+            "gate": full_rank(layer["gate"]),
+            "down": {
+                "wt": jnp.asarray(down.T, dtype=jnp.float32),
+                "col_norms": jnp.asarray(np.linalg.norm(down, axis=0), dtype=jnp.float32),
+                "threshold": jnp.float32(0.0),
+            },
+        })
+    tokens = jnp.asarray(np.random.default_rng(3).integers(0, 64, size=(2, 9)))
+    dense = M.forward(cfg, params, tokens)
+    adapted = M.forward_rana(cfg, params, adapters, tokens)
+    np.testing.assert_allclose(np.asarray(adapted), np.asarray(dense),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rana_adapter_construction_reduces_with_budget():
+    cfg = tiny_cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(4))
+    tokens = np.random.default_rng(4).integers(0, 64, size=4000).astype(np.int32)
+    calib = R.collect_calib(cfg, params, tokens, n_windows=4, seq=32)
+    adapters = R.build_adapters(cfg, params, calib, keep=0.5)
+    assert len(adapters) == cfg.n_layers
+    for ad in adapters:
+        d_static = ad["up"]["at"].shape[0]
+        assert 1 <= d_static <= min(cfg.d_hidden, cfg.d_model)
+        assert float(ad["up"]["threshold"]) >= 0.0
+        assert ad["down"]["col_norms"].shape == (cfg.d_hidden,)
+
+    toks = jnp.asarray(np.random.default_rng(5).integers(0, 64, size=(2, 12)))
+    out = M.forward_rana(cfg, params, adapters, toks)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_config_registry_matches_rust_presets():
+    names = {c.name for c in M.ALL_CONFIGS}
+    assert names == {"llama-sim", "gemma-sim", "pythia-sim-s", "pythia-sim-m",
+                     "pythia-sim-l"}
+    for c in M.ALL_CONFIGS:
+        assert c.d_model % c.n_heads == 0
+        assert c.vocab == M.MODEL_VOCAB

@@ -1,0 +1,198 @@
+//! Fig. 1b — accuracy vs per-token decode latency (paper §5.3 "Latency
+//! Evaluations"), on the native engine where masked skipping is real work
+//! reduction, not simulated.
+//!
+//! Protocol mirrors the paper: decode 492 tokens with initial contexts of
+//! 1..1000 (clamped to the model's max_seq here), per-token wall-clock
+//! averaged across contexts; RaNA vs CATS vs dense at several rates.
+//!
+//! Usage: cargo bench --bench latency [-- fig1b|serving] [--fast]
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use rana::adapters::calibrate::Method;
+use rana::bench::experiments::{Opts, Workbench};
+use rana::bench::harness::Table;
+use rana::data::tasks::all_suites;
+use rana::model::{decode_step, KvCache};
+use rana::util::cli::Args;
+
+fn decode_latency<B: rana::model::BlockOps>(
+    b: &B,
+    contexts: &[usize],
+    decode_len: usize,
+    heldout: &[u32],
+) -> Duration {
+    let max_seq = b.config().max_seq;
+    let mut total = Duration::ZERO;
+    let mut tokens_timed = 0usize;
+    for &ctx in contexts {
+        let ctx = ctx.min(max_seq.saturating_sub(decode_len + 1)).max(1);
+        let mut cache = KvCache::new(b.config());
+        // Prefill (not timed — paper times decoding).
+        let mut logits = Vec::new();
+        for &t in &heldout[..ctx] {
+            logits = decode_step(b, t, &mut cache);
+        }
+        let n = decode_len.min(max_seq - ctx - 1);
+        let t0 = Instant::now();
+        for _ in 0..n {
+            let next = rana::eval::argmax(&logits) as u32;
+            logits = decode_step(b, next, &mut cache);
+        }
+        total += t0.elapsed();
+        tokens_timed += n;
+    }
+    total / tokens_timed.max(1) as u32
+}
+
+fn fig1b(opts: Opts, decode_len: usize) -> anyhow::Result<()> {
+    println!("\n== Fig.1b — accuracy vs per-token decode latency (native engine) ==");
+    let wb = Workbench::load("llama-sim", opts)?;
+    let contexts = [1usize, 128, 256, 448];
+    let g = rana::data::grammar();
+    let suites = all_suites(&g, opts.items, opts.seed ^ 0x7A5C);
+
+    let mut t = Table::new(&["Method", "Compression", "per-token latency", "Avg Acc"]);
+    let dense = wb.dense();
+    let lat = decode_latency(&dense, &contexts, decode_len, &wb.heldout);
+    let accs = rana::eval::task_accuracies(&dense, &suites);
+    let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+    t.row(vec!["dense".into(), "0%".into(), format!("{lat:.1?}"), format!("{:.2}%", avg * 100.0)]);
+
+    for method in [Method::Rana, Method::Cats] {
+        for &rate in &[0.2, 0.35, 0.5] {
+            let (m, rep) = wb.adapt(method, rate);
+            let lat = decode_latency(&m, &contexts, decode_len, &wb.heldout);
+            let accs = rana::eval::task_accuracies(&m, &suites);
+            let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+            t.row(vec![
+                method.label().into(),
+                format!("{:.1}%", rep.total_compression * 100.0),
+                format!("{lat:.1?}"),
+                format!("{:.2}%", avg * 100.0),
+            ]);
+        }
+    }
+    t.print();
+    println!("(masked GEMV realizes FLOP savings: latency should fall with compression for RaNA)");
+    Ok(())
+}
+
+/// Serving-path latency: coordinator + batcher overhead vs raw engine.
+fn serving(opts: Opts) -> anyhow::Result<()> {
+    use rana::adapters::AdaptedModel;
+    use rana::coordinator::batcher::{call, Batcher, BudgetLadder, Op};
+    use rana::coordinator::engine::{Engine, NativeEngine};
+
+    println!("\n== Serving-path overhead: coordinator vs raw engine ==");
+    let wb = Workbench::load("llama-sim", opts)?;
+    let engine: Arc<dyn Engine> =
+        Arc::new(NativeEngine::new(Arc::new(AdaptedModel::unadapted(Arc::clone(&wb.model)))));
+    let texts: Vec<String> =
+        (0..8).map(|i| format!("the dax lopa the fep number {i} .")).collect();
+
+    // Raw engine batch.
+    let t0 = Instant::now();
+    let _ = engine.score_batch(&texts);
+    let raw = t0.elapsed();
+
+    // Through the coordinator.
+    let batcher = Arc::new(Batcher::new(BudgetLadder::single(Arc::clone(&engine)), 8));
+    let tx = batcher.submitter();
+    let b2 = Arc::clone(&batcher);
+    std::thread::spawn(move || b2.run());
+    let t0 = Instant::now();
+    let handles: Vec<_> = texts
+        .iter()
+        .map(|txt| {
+            let tx = tx.clone();
+            let txt = txt.clone();
+            std::thread::spawn(move || call(&tx, Op::Score { text: txt }).unwrap())
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let coordinated = t0.elapsed();
+    println!("raw engine batch:   {raw:?}");
+    println!("via coordinator:    {coordinated:?}");
+    println!(
+        "overhead: {:.1}%  (target < 10% — DESIGN.md §Perf L3)",
+        (coordinated.as_secs_f64() / raw.as_secs_f64() - 1.0) * 100.0
+    );
+    Ok(())
+}
+
+/// Adaptive rank-budget ladder under load (the future-work extension):
+/// same overload burst with the ladder on vs off.
+fn load_bench(_opts: Opts) -> anyhow::Result<()> {
+    use rana::coordinator::batcher::Batcher;
+    use rana::coordinator::workload::{run_load, Arrivals, Mix};
+    use rana::coordinator::{build_ladder, ServerConfig};
+
+    println!("\n== Adaptive rank-budget ladder under load ==");
+    for adaptive in [false, true] {
+        let cfg = ServerConfig {
+            model: "llama-sim".into(),
+            port: 0,
+            max_batch: 4,
+            target_compression: 0.0,
+            adaptive_budget: adaptive,
+            engine: "native".into(),
+        };
+        let ladder = build_ladder(&cfg)?;
+        let batcher = Arc::new(Batcher::new(ladder, cfg.max_batch));
+        let b2 = Arc::clone(&batcher);
+        std::thread::spawn(move || b2.run());
+        let report = run_load(
+            &batcher,
+            Arrivals::ClosedLoop { clients: 16 },
+            Mix { generate_frac: 0.2, gen_tokens: 12 },
+            64,
+            0xF00D,
+        );
+        report.print(if adaptive { "adaptive ladder ON " } else { "adaptive ladder OFF" });
+        batcher.close();
+    }
+    println!("(expected: ON keeps p99 lower under overload by shifting to compressed tiers)");
+    Ok(())
+}
+
+fn main() {
+    let args = Args::from_env();
+    let mut opts = Opts::default();
+    let mut decode_len = 128usize; // scaled-down default of the paper's 492
+    if args.get_flag("fast") {
+        opts.items = 16;
+        opts.calib_fit = 512;
+        decode_len = 48;
+    }
+    if args.get_flag("full") {
+        opts.items = 100;
+        decode_len = 400; // max_seq-bounded
+    }
+    let mut ran = false;
+    if args.filter_matches("fig1b") {
+        ran = true;
+        if let Err(e) = fig1b(opts, decode_len) {
+            eprintln!("fig1b: {e:#}");
+        }
+    }
+    if args.filter_matches("serving") {
+        ran = true;
+        if let Err(e) = serving(opts) {
+            eprintln!("serving: {e:#}");
+        }
+    }
+    if args.filter_matches("load") {
+        ran = true;
+        if let Err(e) = load_bench(opts) {
+            eprintln!("load: {e:#}");
+        }
+    }
+    if !ran {
+        eprintln!("no latency bench matched");
+    }
+}

@@ -1,0 +1,123 @@
+//! Microbenchmarks for the performance pass (DESIGN.md §Perf): the masked
+//! GEMV hot path at several densities, dense GEMM/GEMV baselines, the
+//! randomized SVD used at calibration time, and single-token decode.
+//!
+//! Usage: cargo bench --bench microbench [-- gemv|gemm|svd|decode]
+
+use std::time::Duration;
+
+use rana::bench::harness::bench;
+use rana::model::BlockOps;
+use rana::tensor::{masked_acc_gemv, Mat};
+use rana::util::cli::Args;
+use rana::util::rng::Xoshiro256;
+
+fn gemv_suite() {
+    println!("\n== masked GEMV: latency vs density (512×2048 A, the Fig.1b primitive) ==");
+    let mut rng = Xoshiro256::new(1);
+    let (d, o) = (512usize, 2048usize);
+    let at = Mat::gaussian(d, o, 1.0, &mut rng);
+    let c: Vec<f32> = (0..d).map(|_| rng.gaussian()).collect();
+    let mut out = vec![0.0f32; o];
+    let dense_ref = bench("dense gemv (100% density)", Duration::from_millis(300), || {
+        out.fill(0.0);
+        let mask = vec![true; d];
+        masked_acc_gemv(&at, &mask, &c, &mut out);
+        std::hint::black_box(&out);
+    });
+    dense_ref.print();
+    for &density in &[0.75, 0.5, 0.25, 0.1] {
+        let mask: Vec<bool> = (0..d).map(|i| (i as f64 / d as f64) < density).collect();
+        let s = bench(
+            &format!("masked gemv ({:>3.0}% density)", density * 100.0),
+            Duration::from_millis(300),
+            || {
+                out.fill(0.0);
+                masked_acc_gemv(&at, &mask, &c, &mut out);
+                std::hint::black_box(&out);
+            },
+        );
+        s.print();
+        let speedup = dense_ref.mean.as_secs_f64() / s.mean.as_secs_f64();
+        println!(
+            "    → speedup {speedup:.2}× (ideal {:.2}×): skipping is {}linear in density",
+            1.0 / density,
+            if speedup > 0.8 / density { "" } else { "sub-" }
+        );
+    }
+}
+
+fn gemm_suite() {
+    println!("\n== GEMM throughput (parallel row-stripes) ==");
+    let mut rng = Xoshiro256::new(2);
+    for &(m, k, n) in &[(128usize, 192usize, 512usize), (256, 512, 192), (512, 192, 288)] {
+        let a = Mat::gaussian(m, k, 1.0, &mut rng);
+        let b = Mat::gaussian(k, n, 1.0, &mut rng);
+        let s = bench(&format!("gemm {m}×{k}×{n}"), Duration::from_millis(300), || {
+            std::hint::black_box(a.matmul(&b));
+        });
+        s.print();
+        let gflops = 2.0 * (m * k * n) as f64 / s.mean.as_secs_f64() / 1e9;
+        println!("    → {gflops:.2} GFLOP/s");
+    }
+}
+
+fn svd_suite() {
+    println!("\n== randomized SVD of W·X (calibration-time cost, Theorem 1) ==");
+    let mut rng = Xoshiro256::new(3);
+    for &(o, i, n, k) in &[(512usize, 192usize, 2048usize, 192usize), (576, 192, 2048, 192)] {
+        let w = Mat::gaussian(o, i, 0.05, &mut rng);
+        let x = Mat::gaussian(i, n, 1.0, &mut rng);
+        let s = bench(
+            &format!("left_sv_of_product {o}×{i} · {i}×{n}, k={k}"),
+            Duration::from_millis(500),
+            || {
+                std::hint::black_box(rana::tensor::linalg::left_sv_of_product(
+                    &w, &x, k, 2, 7,
+                ));
+            },
+        );
+        s.print();
+    }
+}
+
+fn decode_suite() {
+    println!("\n== single-token decode (native engine, llama-sim if trained) ==");
+    let Ok(model) = rana::model::Model::load(&rana::model::model_dir("llama-sim")) else {
+        eprintln!("llama-sim not trained; skipping");
+        return;
+    };
+    let model = std::sync::Arc::new(model);
+    let adapted = rana::adapters::AdaptedModel::unadapted(model);
+    let mut cache = rana::model::KvCache::new(adapted.config());
+    // Warm the cache to a realistic context.
+    for t in 0..256u32 {
+        rana::model::decode_step(&adapted, t % 256, &mut cache);
+    }
+    let s = bench("decode_step @ ctx ≥256", Duration::from_millis(500), || {
+        if cache.len() + 1 >= adapted.config().max_seq {
+            cache.clear();
+            for t in 0..256u32 {
+                rana::model::decode_step(&adapted, t % 256, &mut cache);
+            }
+        }
+        std::hint::black_box(rana::model::decode_step(&adapted, 65, &mut cache));
+    });
+    s.print();
+}
+
+fn main() {
+    let args = Args::from_env();
+    if args.filter_matches("gemv") {
+        gemv_suite();
+    }
+    if args.filter_matches("gemm") {
+        gemm_suite();
+    }
+    if args.filter_matches("svd") {
+        svd_suite();
+    }
+    if args.filter_matches("decode") {
+        decode_suite();
+    }
+}

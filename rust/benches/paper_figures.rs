@@ -1,0 +1,39 @@
+//! Regenerates the paper's figures (Fig. 1a, 1c, 2, 3, 4, 5) as printed
+//! curves/tables/ASCII histograms. Fig. 1b lives in `--bench latency`.
+//!
+//! Usage: cargo bench --bench paper_figures [-- fig1a|fig1c|fig2|fig3|fig4|fig5] [--fast|--full]
+
+use rana::bench::experiments::{self, Opts};
+use rana::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let mut opts = Opts::default();
+    if args.get_flag("full") {
+        opts.ppl_tokens = 64_000;
+        opts.items = 150;
+        opts.calib_fit = 4096;
+    }
+    if args.get_flag("fast") {
+        opts.ppl_tokens = 4_000;
+        opts.items = 20;
+        opts.calib_fit = 512;
+    }
+    let mut ran = false;
+    let mut run = |name: &str, f: &dyn Fn(Opts) -> anyhow::Result<()>| {
+        if args.filter_matches(name) {
+            ran = true;
+            if let Err(e) = f(opts) {
+                eprintln!("{name}: {e:#} (run `make artifacts` first?)");
+            }
+        }
+    };
+    run("fig1a", &|o| experiments::fig1a(o, false));
+    run("fig1c_fig4", &experiments::fig1c_fig4);
+    run("fig2", &experiments::fig2);
+    run("fig3", &experiments::fig3);
+    run("fig5", &|o| experiments::fig1a(o, true));
+    if !ran {
+        eprintln!("no figure matched the filter");
+    }
+}

@@ -1,0 +1,47 @@
+//! Regenerates the paper's tables (Tab. 1–4) on the simulated testbed.
+//!
+//! Usage:
+//!   cargo bench --bench paper_tables            # all tables
+//!   cargo bench --bench paper_tables -- tab1    # filter
+//!   cargo bench --bench paper_tables -- tab1 --full   # paper-scale eval
+//!
+//! Absolute numbers belong to the simulated models; the *shape* (method
+//! ordering, crossovers, breakdowns) is the reproduction target — see
+//! EXPERIMENTS.md for paper-vs-measured.
+
+use rana::bench::experiments::{self, Opts};
+use rana::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let mut opts = Opts::default();
+    if args.get_flag("full") {
+        opts.ppl_tokens = 64_000;
+        opts.items = 150;
+        opts.calib_fit = 4096;
+    }
+    if args.get_flag("fast") {
+        opts.ppl_tokens = 4_000;
+        opts.items = 20;
+        opts.calib_fit = 512;
+    }
+    let mut ran = false;
+    let mut run = |name: &str, f: &dyn Fn(Opts) -> anyhow::Result<()>| {
+        if args.filter_matches(name) {
+            ran = true;
+            if let Err(e) = f(opts) {
+                eprintln!("{name}: {e:#} (run `make artifacts` first?)");
+            }
+        }
+    };
+    run("tab1", &experiments::tab1);
+    run("tab2", &experiments::tab2);
+    run("tab3", &experiments::tab3);
+    run("tab4", &experiments::tab4);
+    run("ablations", &rana::bench::ablations::all);
+    run("ext_model_alloc", &rana::bench::ablations::ext_model_alloc);
+    run("ext_recovery", &rana::bench::ablations::ext_recovery);
+    if !ran {
+        eprintln!("no table matched the filter");
+    }
+}

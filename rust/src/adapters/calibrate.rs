@@ -1,0 +1,364 @@
+//! Calibration capture and model-level adaptation.
+//!
+//! [`collect`] runs the dense model over calibration text and records the
+//! hidden states at every adapter insertion point (the paper's `X`,
+//! Eqn. 7, k = 32 000 samples at paper scale; configurable here).
+//! [`adapt`] assembles an [`AdaptedModel`] for a chosen method at a target
+//! **model-level FLOP compression rate**, solving for per-component budgets
+//! the way the paper's evaluation does (§5.3, Appendix A.3): methods that
+//! cannot touch QKV (CATS, neuron-adaptive) must compress MLPs harder to
+//! reach the same total rate.
+
+use std::sync::Arc;
+
+use super::cats::CatsMlp;
+use super::llra::{LlraMlp, LlraQkv};
+use super::neuron_adaptive::NeuronAdaptiveMlp;
+use super::rana::{RanaMlpBuilder, RanaQkv};
+use super::slicegpt::{SliceMlp, SliceQkv};
+use super::{fused_qkv_weight, AdaptedModel, MlpAdapter, QkvAdapter};
+use crate::model::{forward_seq, BlockOps, Capture, Model};
+use crate::tensor::Mat;
+
+/// Calibration tensors for one layer. Fit sets drive SVD/threshold/masker
+/// construction; eval sets measure reconstruction errors.
+pub struct LayerCalib {
+    /// QKV input (post-norm1): `d × k_fit`.
+    pub qkv_in_fit: Mat,
+    pub qkv_in_eval: Mat,
+    /// MLP input (post-norm2): `d × k_fit`.
+    pub mlp_in_fit: Mat,
+    pub mlp_in_eval: Mat,
+    /// Dense MLP intermediate (Down input): `h × k_fit`.
+    pub down_in_fit: Mat,
+    /// Dense MLP output on the eval inputs: `k_eval × d` (rows = samples).
+    pub mlp_out_eval: Mat,
+    /// Dense fused-QKV output on the eval inputs: `k_eval × 3d`.
+    pub qkv_out_eval: Mat,
+}
+
+pub struct ModelCalib {
+    pub layers: Vec<LayerCalib>,
+    pub n_fit: usize,
+    pub n_eval: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct CalibOptions {
+    /// Hidden states used to fit adapters (paper: 32 000).
+    pub n_fit: usize,
+    /// Hidden states used to score reconstruction error.
+    pub n_eval: usize,
+    /// Window length for capture forwards.
+    pub window: usize,
+    pub seed: u64,
+}
+
+impl Default for CalibOptions {
+    fn default() -> Self {
+        Self { n_fit: 2048, n_eval: 256, window: 128, seed: 0xCA11B }
+    }
+}
+
+/// Run the dense model over windows of `tokens`, capturing hidden states.
+pub fn collect(model: &Model, tokens: &[u32], opts: &CalibOptions) -> ModelCalib {
+    let need = opts.n_fit + opts.n_eval;
+    let windows = crate::data::sample_windows(
+        tokens,
+        need.div_ceil(opts.window),
+        opts.window,
+        opts.seed,
+    );
+    let mut cap = Capture::new(model.cfg.n_layers);
+    for w in &windows {
+        let _ = forward_seq(model, w, Some(&mut cap));
+    }
+
+    let d = model.cfg.d_model;
+    let h = model.cfg.d_hidden;
+    let layers = (0..model.cfg.n_layers)
+        .map(|l| {
+            let (qkv_fit, qkv_eval) = split_fit_eval(&cap.qkv_in[l], d, opts.n_fit, opts.n_eval);
+            let (mlp_fit, mlp_eval) = split_fit_eval(&cap.mlp_in[l], d, opts.n_fit, opts.n_eval);
+            let (down_fit, _) = split_fit_eval(&cap.down_in[l], h, opts.n_fit, opts.n_eval);
+            // Dense references on the eval inputs.
+            let mlp_eval_rows = mlp_eval.transpose(); // k_eval × d
+            let mlp_out_eval =
+                model.mlp_seq(l, &mlp_eval_rows, None);
+            let fused = fused_qkv_weight(&model.w.layers[l]);
+            let qkv_out_eval = qkv_eval.transpose().matmul(&fused.transpose());
+            LayerCalib {
+                qkv_in_fit: qkv_fit,
+                qkv_in_eval: qkv_eval,
+                mlp_in_fit: mlp_fit,
+                mlp_in_eval: mlp_eval,
+                down_in_fit: down_fit,
+                mlp_out_eval,
+                qkv_out_eval,
+            }
+        })
+        .collect();
+    ModelCalib { layers, n_fit: opts.n_fit, n_eval: opts.n_eval }
+}
+
+/// Split a captured row buffer into fit/eval X-matrices (`dim × k`).
+fn split_fit_eval(buf: &[f32], dim: usize, n_fit: usize, n_eval: usize) -> (Mat, Mat) {
+    let rows = buf.len() / dim;
+    let n_fit = n_fit.min(rows.saturating_sub(1));
+    let n_eval = n_eval.min(rows - n_fit);
+    let fit = Mat::from_vec(n_fit, dim, buf[..n_fit * dim].to_vec()).transpose();
+    let eval =
+        Mat::from_vec(n_eval, dim, buf[n_fit * dim..(n_fit + n_eval) * dim].to_vec()).transpose();
+    (fit, eval)
+}
+
+/// The adaptation methods of the paper's evaluation (§5.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// RaNA on MLP + QKV with FLOP allocation (the paper's default).
+    Rana,
+    /// RaNA on MLP only (the Gemma configuration / Tab. 3 row 2).
+    RanaMlpOnly,
+    /// RaNA on MLP + QKV without the allocation grid search (Tab. 3 row 3).
+    RanaNoAlloc,
+    /// CATS (MLP only, SwiGLU only).
+    Cats,
+    /// Deja-Vu-style neuron adapter with trained masker (MLP only).
+    NeuronAdaptive,
+    /// Rank adapters + MLP-sigmoid maskers everywhere (MLP + QKV).
+    Llra,
+    /// PCA rotate-and-slice static baseline (MLP + QKV).
+    SliceGpt,
+}
+
+impl Method {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Rana => "RaNA",
+            Method::RanaMlpOnly => "RaNA-MLP",
+            Method::RanaNoAlloc => "RaNA-NoAlloc",
+            Method::Cats => "CATS",
+            Method::NeuronAdaptive => "Neuron",
+            Method::Llra => "LLRA",
+            Method::SliceGpt => "SliceGPT",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "rana" => Method::Rana,
+            "rana-mlp" => Method::RanaMlpOnly,
+            "rana-noalloc" => Method::RanaNoAlloc,
+            "cats" => Method::Cats,
+            "neuron" => Method::NeuronAdaptive,
+            "llra" => Method::Llra,
+            "slicegpt" => Method::SliceGpt,
+            other => anyhow::bail!("unknown method {other:?}"),
+        })
+    }
+
+    pub fn adapts_qkv(&self) -> bool {
+        matches!(self, Method::Rana | Method::RanaNoAlloc | Method::Llra | Method::SliceGpt)
+    }
+}
+
+/// Per-layer adaptation outcome.
+#[derive(Clone, Debug, Default)]
+pub struct LayerReport {
+    pub mlp_err: f64,
+    pub qkv_err: f64,
+}
+
+/// Whole-model adaptation outcome.
+#[derive(Clone, Debug, Default)]
+pub struct AdaptReport {
+    pub layers: Vec<LayerReport>,
+    /// Achieved total FLOP compression (vs. dense, 512-token decode).
+    pub total_compression: f64,
+    pub mlp_compression: f64,
+    pub qkv_compression: f64,
+}
+
+/// Adapt `model` with `method` targeting `target_compression` of total
+/// decode FLOPs at `seq_len` (the paper's 512). Returns the adapted model
+/// and a report with per-layer reconstruction errors + achieved rates.
+pub fn adapt(
+    model: Arc<Model>,
+    calib: &ModelCalib,
+    method: Method,
+    target_compression: f64,
+    seq_len: usize,
+    seed: u64,
+) -> (AdaptedModel, AdaptReport) {
+    let dense = AdaptedModel::unadapted(Arc::clone(&model)).decode_flops(seq_len);
+    let cfg = &model.cfg;
+    let d = cfg.d_model;
+    // Llama + Pythia configurations adapt MLP and QKV; the Gemma
+    // configuration (RanaMlpOnly) and the MLP-only baselines do not.
+    let adapt_qkv = method.adapts_qkv();
+
+    // Solve per-component keep fractions for the target total rate.
+    let cut = target_compression * dense.total;
+    let (keep_mlp, keep_qkv) = if adapt_qkv {
+        let c = (cut / (dense.mlp + dense.qkv)).min(0.98);
+        (1.0 - c, 1.0 - c)
+    } else {
+        let c = (cut / dense.mlp).min(0.98);
+        (1.0 - c, 1.0)
+    };
+
+    let dense_mlp_flops = match cfg.arch {
+        crate::model::Arch::SwiGlu => {
+            crate::flops::MlpFlops::dense_swiglu(d, cfg.d_hidden).total()
+        }
+        crate::model::Arch::GeluNeoX => {
+            crate::flops::MlpFlops::dense_gelu(d, cfg.d_hidden).total()
+        }
+    };
+    let mlp_budget = keep_mlp * dense_mlp_flops;
+    let qkv_budget = keep_qkv * crate::flops::linear(3 * d, d);
+
+    let mut adapted = AdaptedModel::unadapted(Arc::clone(&model));
+    adapted.method = method.label().to_string();
+    let mut report = AdaptReport::default();
+
+    for l in 0..cfg.n_layers {
+        let lw = &model.w.layers[l];
+        let lc = &calib.layers[l];
+        let lseed = seed ^ ((l as u64 + 1) << 8);
+        let mut lr = LayerReport::default();
+
+        // --- MLP adapter ---------------------------------------------------
+        let (mlp_ad, mlp_err): (Box<dyn MlpAdapter>, f64) = match method {
+            Method::Rana | Method::RanaMlpOnly => {
+                let b = RanaMlpBuilder::new(cfg.arch, lw, lc, lseed);
+                let (m, e) = b.build(mlp_budget, true);
+                (Box::new(m), e)
+            }
+            Method::RanaNoAlloc => {
+                let b = RanaMlpBuilder::new(cfg.arch, lw, lc, lseed);
+                let (m, e) = b.build(mlp_budget, false);
+                (Box::new(m), e)
+            }
+            Method::Cats => {
+                let (m, e) = CatsMlp::build(cfg.arch, lw, lc, mlp_budget);
+                (Box::new(m), e)
+            }
+            Method::NeuronAdaptive => {
+                let (m, e) = NeuronAdaptiveMlp::build(cfg.arch, lw, lc, mlp_budget, lseed);
+                (Box::new(m), e)
+            }
+            Method::Llra => {
+                let (m, e) = LlraMlp::build(cfg.arch, lw, lc, mlp_budget, lseed);
+                (Box::new(m), e)
+            }
+            Method::SliceGpt => {
+                let (m, e) = SliceMlp::build(cfg.arch, lw, lc, mlp_budget, lseed);
+                (Box::new(m), e)
+            }
+        };
+        lr.mlp_err = mlp_err;
+        adapted.mlp[l] = Some(mlp_ad);
+
+        // --- QKV adapter -----------------------------------------------------
+        if adapt_qkv {
+            let fused = fused_qkv_weight(lw);
+            let (qkv_ad, qkv_err): (Box<dyn QkvAdapter>, f64) = match method {
+                Method::Rana | Method::RanaNoAlloc => {
+                    let (q, e) = RanaQkv::build(&fused, lc, qkv_budget, lseed ^ 0x51);
+                    (Box::new(q), e)
+                }
+                Method::Llra => {
+                    let (q, e) = LlraQkv::build(&fused, lc, qkv_budget, lseed ^ 0x52);
+                    (Box::new(q), e)
+                }
+                Method::SliceGpt => {
+                    let (q, e) = SliceQkv::build(&fused, lc, qkv_budget, lseed ^ 0x53);
+                    (Box::new(q), e)
+                }
+                _ => unreachable!("method {method:?} does not adapt QKV"),
+            };
+            lr.qkv_err = qkv_err;
+            adapted.qkv[l] = Some(qkv_ad);
+        }
+        report.layers.push(lr);
+    }
+
+    let achieved = adapted.decode_flops(seq_len);
+    report.total_compression = achieved.compression_vs(&dense);
+    report.mlp_compression = achieved.mlp_compression_vs(&dense);
+    report.qkv_compression = achieved.qkv_compression_vs(&dense);
+    (adapted, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapters::test_support::tiny_model;
+    use crate::model::Arch;
+
+    fn calib_tokens() -> Vec<u32> {
+        (0..1200).map(|i| (i * 13 % 48) as u32).collect()
+    }
+
+    #[test]
+    fn collect_shapes() {
+        let m = tiny_model(Arch::SwiGlu, 41);
+        let opts = CalibOptions { n_fit: 64, n_eval: 16, window: 20, seed: 1 };
+        let calib = collect(&m, &calib_tokens(), &opts);
+        assert_eq!(calib.layers.len(), m.cfg.n_layers);
+        let l = &calib.layers[0];
+        assert_eq!(l.qkv_in_fit.rows, m.cfg.d_model);
+        assert_eq!(l.qkv_in_fit.cols, 64);
+        assert_eq!(l.qkv_in_eval.cols, 16);
+        assert_eq!(l.down_in_fit.rows, m.cfg.d_hidden);
+        assert_eq!(l.mlp_out_eval.rows, 16);
+        assert_eq!(l.mlp_out_eval.cols, m.cfg.d_model);
+        assert_eq!(l.qkv_out_eval.cols, 3 * m.cfg.d_model);
+    }
+
+    #[test]
+    fn adapt_rana_hits_target_compression() {
+        let m = tiny_model(Arch::SwiGlu, 43);
+        let opts = CalibOptions { n_fit: 96, n_eval: 24, window: 24, seed: 2 };
+        let calib = collect(&m, &calib_tokens(), &opts);
+        let (adapted, report) = adapt(m, &calib, Method::Rana, 0.30, 32, 7);
+        // Achieved total compression within a few points of target.
+        assert!(
+            (report.total_compression - 0.30).abs() < 0.10,
+            "achieved {} target 0.30",
+            report.total_compression
+        );
+        assert_eq!(adapted.mlp.iter().filter(|a| a.is_some()).count(), 2);
+        assert_eq!(adapted.qkv.iter().filter(|a| a.is_some()).count(), 2);
+        for lr in &report.layers {
+            assert!(lr.mlp_err.is_finite() && lr.mlp_err >= 0.0);
+        }
+    }
+
+    #[test]
+    fn adapt_mlp_only_leaves_qkv_dense() {
+        let m = tiny_model(Arch::SwiGlu, 45);
+        let opts = CalibOptions { n_fit: 96, n_eval: 24, window: 24, seed: 3 };
+        let calib = collect(&m, &calib_tokens(), &opts);
+        let (adapted, report) = adapt(m, &calib, Method::RanaMlpOnly, 0.2, 32, 9);
+        assert!(adapted.qkv.iter().all(|a| a.is_none()));
+        assert!(report.qkv_compression.abs() < 1e-9);
+        assert!(report.mlp_compression > 0.1);
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in [
+            Method::Rana,
+            Method::RanaMlpOnly,
+            Method::RanaNoAlloc,
+            Method::Cats,
+            Method::NeuronAdaptive,
+            Method::Llra,
+            Method::SliceGpt,
+        ] {
+            assert_eq!(Method::parse(&m.label().to_ascii_lowercase()).unwrap(), m);
+        }
+    }
+}

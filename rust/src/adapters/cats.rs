@@ -1,0 +1,171 @@
+//! CATS — Contextually-Aware Thresholding for Sparsity (Lee et al. 2024),
+//! the paper's main neuron-adaptive comparator for SwiGLU MLPs.
+//!
+//! CATS computes the **full** Gate projection, thresholds on
+//! `|SiLU(W_gate·x)|`, then computes Up and Down only for the surviving
+//! neurons. The full Gate pass is exactly the inefficiency the paper
+//! criticizes (§2): at high compression the Gate projection consumes the
+//! bulk of the remaining FLOP budget, capping how far CATS can compress
+//! (MLP compression ≳ 1/3 is unreachable — see Tab. 4 where CATS shows
+//! 65 % MLP compression to RaNA's 47 % at equal total FLOPs).
+
+use super::calibrate::LayerCalib;
+use super::rana::normalized_err;
+use super::MlpAdapter;
+use crate::flops::{self, MlpFlops};
+use crate::model::{ops, Arch, LayerWeights};
+use crate::tensor::{masked_acc_gemv, masked_rows_gemv, threshold_for_keep, Mat};
+
+pub struct CatsMlp {
+    /// Dense gate `h×d` (always fully computed — that is CATS).
+    w_gate: Mat,
+    /// Up rows `h×d` — only active rows computed.
+    w_up: Mat,
+    /// Downᵀ `h×d_out` — masked accumulate.
+    w_down_t: Mat,
+    pub threshold: f32,
+    pub exp_keep: f64,
+}
+
+impl CatsMlp {
+    /// Build for a per-token MLP FLOP budget. CATS is defined for SwiGLU
+    /// MLPs (the gate path); building it for a GeLU arch is a logic error.
+    pub fn build(
+        arch: Arch,
+        lw: &LayerWeights,
+        calib: &LayerCalib,
+        budget: f64,
+    ) -> (Self, f64) {
+        assert_eq!(arch, Arch::SwiGlu, "CATS requires a SwiGLU MLP");
+        let gate = lw.gate.as_ref().expect("swiglu gate");
+        let (h, d) = (gate.w.rows, gate.w.cols);
+
+        // budget = 2hd (gate) + h (act+threshold) + 4d·E[r] (up+down rows)
+        let r_target =
+            ((budget - flops::linear(h, d) - h as f64) / (4.0 * d as f64)).clamp(0.5, h as f64);
+
+        // Pooled |SiLU(gate(x))| over the fit set.
+        let gate_fit = gate.w.matmul(&calib.mlp_in_fit); // h × k
+        let k = gate_fit.cols;
+        let mut scores: Vec<f32> =
+            gate_fit.data.iter().map(|&g| ops::silu(g).abs()).collect();
+        let keep = ((r_target * k as f64).round() as usize).min(scores.len());
+        let threshold = threshold_for_keep(&mut scores, keep);
+        let active = gate_fit
+            .data
+            .iter()
+            .filter(|&&g| ops::silu(g).abs() >= threshold)
+            .count();
+        let exp_keep = active as f64 / k as f64;
+
+        let cats = Self {
+            w_gate: gate.w.clone(),
+            w_up: lw.up.w.clone(),
+            w_down_t: lw.down.w.transpose(),
+            threshold,
+            exp_keep,
+        };
+        let xs = calib.mlp_in_eval.transpose();
+        let err = normalized_err(&cats.apply_seq(&xs), &calib.mlp_out_eval);
+        (cats, err)
+    }
+}
+
+impl MlpAdapter for CatsMlp {
+    fn name(&self) -> &'static str {
+        "CATS"
+    }
+
+    fn apply_tok(&self, x: &[f32]) -> Vec<f32> {
+        // Full gate — the CATS signature move.
+        let gate = self.w_gate.matvec(x);
+        let act: Vec<f32> = gate.iter().map(|&g| ops::silu(g)).collect();
+        let mask: Vec<bool> = act.iter().map(|&a| a.abs() >= self.threshold).collect();
+        // Up only on active neurons.
+        let mut up = vec![0.0f32; self.w_up.rows];
+        masked_rows_gemv(&self.w_up, &mask, x, &mut up);
+        let inter: Vec<f32> = up.iter().zip(&act).map(|(&u, &a)| u * a).collect();
+        // Down only over active neurons.
+        let mut out = vec![0.0f32; self.w_down_t.cols];
+        masked_acc_gemv(&self.w_down_t, &mask, &inter, &mut out);
+        out
+    }
+
+    fn apply_seq(&self, xs: &Mat) -> Mat {
+        let gate = xs.matmul(&self.w_gate.transpose());
+        let up = xs.matmul(&self.w_up.transpose());
+        let mut inter = up;
+        for (v, &g) in inter.data.iter_mut().zip(&gate.data) {
+            let a = ops::silu(g);
+            *v = if a.abs() >= self.threshold { *v * a } else { 0.0 };
+        }
+        inter.matmul(&self.w_down_t)
+    }
+
+    fn flops(&self) -> MlpFlops {
+        let d = self.w_gate.cols;
+        let h = self.w_gate.rows;
+        flops::cats_mlp(d, h, self.exp_keep)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapters::calibrate::{collect, CalibOptions};
+    use crate::adapters::test_support::tiny_model;
+
+    fn setup() -> (std::sync::Arc<crate::model::Model>, crate::adapters::calibrate::ModelCalib)
+    {
+        let m = tiny_model(Arch::SwiGlu, 91);
+        let tokens: Vec<u32> = (0..800).map(|i| (i * 11 % 48) as u32).collect();
+        let calib =
+            collect(&m, &tokens, &CalibOptions { n_fit: 96, n_eval: 32, window: 24, seed: 9 });
+        (m, calib)
+    }
+
+    #[test]
+    fn tok_and_seq_agree() {
+        let (m, calib) = setup();
+        let budget = MlpFlops::dense_swiglu(m.cfg.d_model, m.cfg.d_hidden).total() * 0.6;
+        let (cats, _) = CatsMlp::build(Arch::SwiGlu, &m.w.layers[0], &calib.layers[0], budget);
+        let mut rng = crate::util::rng::Xoshiro256::new(3);
+        let xs = Mat::gaussian(4, m.cfg.d_model, 1.0, &mut rng);
+        let seq = cats.apply_seq(&xs);
+        for r in 0..4 {
+            let tok = cats.apply_tok(xs.row(r));
+            crate::util::prop::close_slices(&tok, seq.row(r), 1e-4, 1e-3).unwrap();
+        }
+    }
+
+    #[test]
+    fn near_full_budget_recovers_dense_mlp() {
+        let (m, calib) = setup();
+        let dense = MlpFlops::dense_swiglu(m.cfg.d_model, m.cfg.d_hidden).total();
+        let (_, err) = CatsMlp::build(Arch::SwiGlu, &m.w.layers[0], &calib.layers[0], dense);
+        assert!(err < 0.05, "err {err}");
+    }
+
+    #[test]
+    fn gate_cost_floors_cats_compression() {
+        // Even with a tiny budget, CATS FLOPs cannot drop below the dense
+        // gate cost — the paper's §2 critique, reproduced as a unit test.
+        let (m, calib) = setup();
+        let dense = MlpFlops::dense_swiglu(m.cfg.d_model, m.cfg.d_hidden).total();
+        let (cats, _) =
+            CatsMlp::build(Arch::SwiGlu, &m.w.layers[0], &calib.layers[0], dense * 0.05);
+        let gate_cost = flops::linear(m.cfg.d_hidden, m.cfg.d_model);
+        assert!(cats.flops().total() >= gate_cost);
+    }
+
+    #[test]
+    fn error_decreases_with_budget() {
+        let (m, calib) = setup();
+        let dense = MlpFlops::dense_swiglu(m.cfg.d_model, m.cfg.d_hidden).total();
+        let (_, e_lo) =
+            CatsMlp::build(Arch::SwiGlu, &m.w.layers[1], &calib.layers[1], dense * 0.4);
+        let (_, e_hi) =
+            CatsMlp::build(Arch::SwiGlu, &m.w.layers[1], &calib.layers[1], dense * 0.9);
+        assert!(e_hi <= e_lo + 1e-9, "hi {e_hi} lo {e_lo}");
+    }
+}

@@ -1,0 +1,273 @@
+//! LLRA baseline (§5.1): Linear-Layer Rank adapters with **MLP-sigmoid
+//! maskers** applied to all linear layers (QKV and all three MLP
+//! projections — including Down, where the B-masker would be too
+//! expensive). The predictive masker lets the adapter skip computing
+//! `(Bx)_i` for inactive ranks, trading masker quality for FLOPs; the
+//! paper finds the B-masker variant (RaNA) more accurate (Fig. 3d).
+
+use super::calibrate::LayerCalib;
+use super::maskers::MlpMasker;
+use super::rana::normalized_err;
+use super::rank_adapter::RankPrecomp;
+use super::{split3, split3_seq, MlpAdapter, QkvAdapter};
+use crate::flops::{LinearFlops, MlpFlops};
+use crate::model::{ops, Arch, LayerWeights};
+use crate::tensor::{dot, indexed_acc_gemv, Mat};
+
+/// A rank-decomposed linear with a learned rank-masker.
+pub struct LlraLinear {
+    /// `Aᵀ = U_dᵀ` — `d × o`.
+    at: Mat,
+    /// `B = U_dᵀ W` — `d × i`.
+    b: Mat,
+    pub masker: MlpMasker,
+}
+
+impl LlraLinear {
+    /// Masker budget share of the component budget.
+    const MASKER_SHARE: f64 = 0.06;
+
+    /// Build from dense `w`, fit/eval inputs (`i×k`), and a FLOP budget.
+    pub fn build(
+        w: &Mat,
+        x_fit: &Mat,
+        x_eval: &Mat,
+        budget: f64,
+        seed: u64,
+    ) -> (Self, f64) {
+        let (o, i) = (w.rows, w.cols);
+        let pre = RankPrecomp::new(w, x_fit, x_eval, seed);
+        // Static truncation: keep the full available rank; the predictive
+        // masker provides the sparsity (unlike the B-masker there is no
+        // mandatory `Bx` cost, so a large d is affordable).
+        let d = pre.d_max;
+        let masker_budget = budget * Self::MASKER_SHARE;
+        let r_inner = MlpMasker::r_inner_for_budget(i, d, masker_budget);
+        // Per-active-rank cost: one row of B (2i) + one row of A (2o).
+        let r_target =
+            ((budget - masker_budget) / (2.0 * (i + o) as f64)).clamp(1.0, d as f64);
+
+        // Ground-truth labels from the B-masker criterion: top-r by (Bx)².
+        // (The paper: "train this masker ... to match the output of the
+        // B-masker".)
+        let full = pre.adapter_for_budget(f64::INFINITY).0; // full-rank, t→0
+        let n = x_fit.cols;
+        let inputs = x_fit.transpose(); // n × i
+        let mut labels = vec![0.0f32; n * d];
+        let k_keep = r_target.round() as usize;
+        for s in 0..n {
+            let scores = full.contribution_scores(inputs.row(s));
+            let mut idx: Vec<usize> = (0..d).collect();
+            idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+            for &j in idx.iter().take(k_keep) {
+                labels[s * d + j] = 1.0;
+            }
+        }
+        let masker = MlpMasker::train(&inputs, &labels, d, r_inner, r_target, 10, seed);
+        let lin = Self { at: full.at, b: full.b, masker };
+        let err = lin.eval_error(x_eval, w);
+        (lin, err)
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.at.cols
+    }
+
+    /// Compute `A(m ⊙ Bx)` touching only predicted-active ranks: for each
+    /// active rank `j`, compute `(Bx)_j` (one dot) and accumulate `a_j`.
+    pub fn apply_tok(&self, x: &[f32]) -> Vec<f32> {
+        let mask = self.masker.mask(x);
+        let active: Vec<usize> = crate::tensor::mask_to_indices(&mask);
+        let mut s = vec![0.0f32; self.b.rows];
+        for &j in &active {
+            s[j] = dot(self.b.row(j), x);
+        }
+        let mut out = vec![0.0f32; self.out_dim()];
+        indexed_acc_gemv(&self.at, &active, &s, &mut out);
+        out
+    }
+
+    pub fn apply_seq(&self, xs: &Mat) -> Mat {
+        let mut out = Mat::zeros(xs.rows, self.out_dim());
+        for r in 0..xs.rows {
+            out.row_mut(r).copy_from_slice(&self.apply_tok(xs.row(r)));
+        }
+        out
+    }
+
+    pub fn flops(&self) -> LinearFlops {
+        let (o, i) = (self.at.cols, self.b.cols);
+        let r = self.masker.exp_keep;
+        LinearFlops { masker: self.masker.flops(), main: 2.0 * r * (i + o) as f64 }
+    }
+
+    fn eval_error(&self, x_eval: &Mat, w: &Mat) -> f64 {
+        let xs = x_eval.transpose();
+        let got = self.apply_seq(&xs);
+        let want = xs.matmul(&w.transpose());
+        normalized_err(&got, &want)
+    }
+}
+
+/// LLRA-adapted MLP: rank adapters with sigmoid maskers on Up/Gate/Down.
+pub struct LlraMlp {
+    arch: Arch,
+    up: LlraLinear,
+    gate: Option<LlraLinear>,
+    down: LlraLinear,
+}
+
+impl LlraMlp {
+    pub fn build(
+        arch: Arch,
+        lw: &LayerWeights,
+        calib: &LayerCalib,
+        budget: f64,
+        seed: u64,
+    ) -> (Self, f64) {
+        // Dense-proportional split (LLRA has no allocation procedure).
+        let (fu, fg, fd) = match arch {
+            Arch::SwiGlu => (1.0 / 3.0, 1.0 / 3.0, 1.0 / 3.0),
+            Arch::GeluNeoX => (0.5, 0.0, 0.5),
+        };
+        // Down's calibration inputs are the dense intermediates; eval uses
+        // the fit tail since down_in eval isn't captured separately.
+        let k = calib.down_in_fit.cols;
+        let split = (k * 7) / 8;
+        let down_fit = Mat::from_fn(calib.down_in_fit.rows, split, |r, c| {
+            calib.down_in_fit.at(r, c)
+        });
+        let down_eval = Mat::from_fn(calib.down_in_fit.rows, k - split, |r, c| {
+            calib.down_in_fit.at(r, split + c)
+        });
+
+        let (up, _) = LlraLinear::build(
+            &lw.up.w,
+            &calib.mlp_in_fit,
+            &calib.mlp_in_eval,
+            budget * fu,
+            seed,
+        );
+        let gate = lw.gate.as_ref().map(|g| {
+            LlraLinear::build(
+                &g.w,
+                &calib.mlp_in_fit,
+                &calib.mlp_in_eval,
+                budget * fg,
+                seed ^ 0x11,
+            )
+            .0
+        });
+        let (down, _) =
+            LlraLinear::build(&lw.down.w, &down_fit, &down_eval, budget * fd, seed ^ 0x22);
+        let mlp = Self { arch, up, gate, down };
+        let xs = calib.mlp_in_eval.transpose();
+        let err = normalized_err(&mlp.apply_seq(&xs), &calib.mlp_out_eval);
+        (mlp, err)
+    }
+}
+
+impl MlpAdapter for LlraMlp {
+    fn name(&self) -> &'static str {
+        "LLRA"
+    }
+
+    fn apply_tok(&self, x: &[f32]) -> Vec<f32> {
+        let inter: Vec<f32> = match self.arch {
+            Arch::SwiGlu => {
+                let up = self.up.apply_tok(x);
+                let gate = self.gate.as_ref().unwrap().apply_tok(x);
+                up.iter().zip(&gate).map(|(&u, &g)| u * ops::silu(g)).collect()
+            }
+            Arch::GeluNeoX => self.up.apply_tok(x).iter().map(|&v| ops::gelu(v)).collect(),
+        };
+        self.down.apply_tok(&inter)
+    }
+
+    fn apply_seq(&self, xs: &Mat) -> Mat {
+        let mut out = Mat::zeros(xs.rows, self.down.out_dim());
+        for r in 0..xs.rows {
+            out.row_mut(r).copy_from_slice(&self.apply_tok(xs.row(r)));
+        }
+        out
+    }
+
+    fn flops(&self) -> MlpFlops {
+        MlpFlops {
+            up: self.up.flops(),
+            gate: self.gate.as_ref().map(|g| g.flops()).unwrap_or_default(),
+            down: self.down.flops(),
+            act: 2.0 * self.up.out_dim() as f64,
+        }
+    }
+}
+
+/// LLRA-adapted fused QKV.
+pub struct LlraQkv {
+    lin: LlraLinear,
+}
+
+impl LlraQkv {
+    pub fn build(fused_w: &Mat, calib: &LayerCalib, budget: f64, seed: u64) -> (Self, f64) {
+        let (lin, err) =
+            LlraLinear::build(fused_w, &calib.qkv_in_fit, &calib.qkv_in_eval, budget, seed);
+        (Self { lin }, err)
+    }
+}
+
+impl QkvAdapter for LlraQkv {
+    fn name(&self) -> &'static str {
+        "LLRA"
+    }
+
+    fn apply_tok(&self, x: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        split3(self.lin.apply_tok(x))
+    }
+
+    fn apply_seq(&self, xs: &Mat) -> (Mat, Mat, Mat) {
+        split3_seq(&self.lin.apply_seq(xs))
+    }
+
+    fn flops(&self) -> LinearFlops {
+        self.lin.flops()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapters::calibrate::{collect, CalibOptions};
+    use crate::adapters::test_support::tiny_model;
+
+    #[test]
+    fn llra_linear_full_budget_close_to_dense() {
+        let m = tiny_model(Arch::SwiGlu, 111);
+        let tokens: Vec<u32> = (0..800).map(|i| (i * 19 % 48) as u32).collect();
+        let calib =
+            collect(&m, &tokens, &CalibOptions { n_fit: 96, n_eval: 24, window: 24, seed: 13 });
+        let w = &m.w.layers[0].up.w;
+        let dense = crate::flops::linear(w.rows, w.cols);
+        let (lin, err) = LlraLinear::build(
+            w,
+            &calib.layers[0].mlp_in_fit,
+            &calib.layers[0].mlp_in_eval,
+            dense * 3.0,
+            1,
+        );
+        // Masker is imperfect, but with a huge budget most ranks are kept.
+        assert!(err < 0.5, "err {err}");
+        assert!(lin.flops().total() > 0.0);
+    }
+
+    #[test]
+    fn llra_mlp_builds_and_reports_flops() {
+        let m = tiny_model(Arch::SwiGlu, 113);
+        let tokens: Vec<u32> = (0..800).map(|i| (i * 23 % 48) as u32).collect();
+        let calib =
+            collect(&m, &tokens, &CalibOptions { n_fit: 96, n_eval: 24, window: 24, seed: 17 });
+        let budget = MlpFlops::dense_swiglu(m.cfg.d_model, m.cfg.d_hidden).total() * 0.5;
+        let (mlp, err) = LlraMlp::build(Arch::SwiGlu, &m.w.layers[0], &calib.layers[0], budget, 2);
+        assert!(err.is_finite());
+        assert!(mlp.flops().total() <= budget * 1.3, "{}", mlp.flops().total());
+    }
+}

@@ -1,0 +1,242 @@
+//! Learned MLP-Sigmoid maskers (paper §4.1 "MLP-Sigmoid Masker").
+//!
+//! `m(x) = 1{σ(C·D·x) ≥ τ}` with `D: r'×i`, `C: h×r'` — the predictive
+//! masker family used by the neuron-adaptive literature (Deja-Vu, ReLU²)
+//! and by the paper's LLRA baseline. Trained here with Adam on binary
+//! cross-entropy to match ground-truth importance labels (top-k activations
+//! for neuron adapters, B-masker output for LLRA), exactly as described in
+//! the paper ("we train this masker on a binary cross-entropy loss to match
+//! the output of the B-masker").
+
+use crate::tensor::{threshold_for_keep, Mat};
+use crate::util::rng::Xoshiro256;
+
+/// A trained sigmoid masker.
+#[derive(Clone, Debug)]
+pub struct MlpMasker {
+    /// `r' × i`
+    pub d: Mat,
+    /// `h × r'`
+    pub c: Mat,
+    /// Decision threshold on the sigmoid output.
+    pub threshold: f32,
+    /// Calibrated expected number of active outputs.
+    pub exp_keep: f64,
+}
+
+impl MlpMasker {
+    /// Masker FLOPs per token.
+    pub fn flops(&self) -> f64 {
+        let (rp, i) = (self.d.rows, self.d.cols);
+        let h = self.c.rows;
+        crate::flops::mlp_sigmoid_masker(i, rp, h)
+    }
+
+    /// Inner dimension r' that fits a masker FLOP budget for an `i → h`
+    /// prediction problem.
+    pub fn r_inner_for_budget(i: usize, h: usize, budget: f64) -> usize {
+        ((budget / (2.0 * (i + h) as f64)).floor() as usize).max(1)
+    }
+
+    /// Raw sigmoid scores for one input.
+    pub fn scores(&self, x: &[f32]) -> Vec<f32> {
+        let z = self.d.matvec(x);
+        self.c.matvec(&z).iter().map(|&a| sigmoid(a)).collect()
+    }
+
+    pub fn mask(&self, x: &[f32]) -> Vec<bool> {
+        self.scores(x).iter().map(|&p| p >= self.threshold).collect()
+    }
+
+    /// Train on `(inputs, labels)`: `inputs` is `n × i` (rows = samples),
+    /// `labels[s*h + j] = 1.0` iff output `j` should be active for sample
+    /// `s`. `target_keep` calibrates the decision threshold after training.
+    pub fn train(
+        inputs: &Mat,
+        labels: &[f32],
+        h: usize,
+        r_inner: usize,
+        target_keep: f64,
+        epochs: usize,
+        seed: u64,
+    ) -> Self {
+        let (n, i) = (inputs.rows, inputs.cols);
+        assert_eq!(labels.len(), n * h);
+        let mut rng = Xoshiro256::new(seed);
+        let mut d = Mat::gaussian(r_inner, i, 1.0 / (i as f32).sqrt(), &mut rng);
+        let mut c = Mat::gaussian(h, r_inner, 1.0 / (r_inner as f32).sqrt(), &mut rng);
+
+        // Adam state.
+        let mut md = vec![0.0f32; d.data.len()];
+        let mut vd = vec![0.0f32; d.data.len()];
+        let mut mc = vec![0.0f32; c.data.len()];
+        let mut vc = vec![0.0f32; c.data.len()];
+        let (b1, b2, eps, lr) = (0.9f32, 0.999f32, 1e-8f32, 3e-2f32);
+        let mut step = 0;
+
+        let batch = 64.min(n);
+        let mut order: Vec<usize> = (0..n).collect();
+        for _epoch in 0..epochs {
+            rng.shuffle(&mut order);
+            for chunk in order.chunks(batch) {
+                step += 1;
+                let mut gd = vec![0.0f32; d.data.len()];
+                let mut gc = vec![0.0f32; c.data.len()];
+                for &s in chunk {
+                    let x = inputs.row(s);
+                    let z = d.matvec(x); // r'
+                    let a = c.matvec(&z); // h
+                    // dL/da = (σ(a) - y) / batch
+                    let mut da = vec![0.0f32; h];
+                    for j in 0..h {
+                        da[j] = (sigmoid(a[j]) - labels[s * h + j]) / chunk.len() as f32;
+                    }
+                    // gc += da ⊗ z ; dz = Cᵀ da ; gd += dz ⊗ x
+                    for j in 0..h {
+                        if da[j] != 0.0 {
+                            crate::tensor::axpy(
+                                da[j],
+                                &z,
+                                &mut gc[j * r_inner..(j + 1) * r_inner],
+                            );
+                        }
+                    }
+                    let dz = c.t_matvec(&da);
+                    for r in 0..r_inner {
+                        if dz[r] != 0.0 {
+                            crate::tensor::axpy(dz[r], x, &mut gd[r * i..(r + 1) * i]);
+                        }
+                    }
+                }
+                adam_update(&mut d.data, &gd, &mut md, &mut vd, lr, b1, b2, eps, step);
+                adam_update(&mut c.data, &gc, &mut mc, &mut vc, lr, b1, b2, eps, step);
+            }
+        }
+
+        // Calibrate the decision threshold to the target keep rate.
+        let mut pooled: Vec<f32> = Vec::with_capacity(n * h);
+        let mut tmp = Self { d, c, threshold: 0.5, exp_keep: 0.0 };
+        for s in 0..n {
+            pooled.extend(tmp.scores(inputs.row(s)));
+        }
+        let keep = ((target_keep * n as f64).round() as usize).min(pooled.len());
+        let mut pooled_for_t = pooled.clone();
+        tmp.threshold = threshold_for_keep(&mut pooled_for_t, keep);
+        let active = pooled.iter().filter(|&&p| p >= tmp.threshold).count();
+        tmp.exp_keep = active as f64 / n as f64;
+        tmp
+    }
+
+    /// BCE + accuracy of the masker against labels (diagnostics/tests).
+    pub fn evaluate(&self, inputs: &Mat, labels: &[f32]) -> (f64, f64) {
+        let (n, h) = (inputs.rows, self.c.rows);
+        let mut bce = 0.0f64;
+        let mut correct = 0usize;
+        for s in 0..n {
+            let p = self.scores(inputs.row(s));
+            for j in 0..h {
+                let y = labels[s * h + j] as f64;
+                let pj = (p[j] as f64).clamp(1e-7, 1.0 - 1e-7);
+                bce -= y * pj.ln() + (1.0 - y) * (1.0 - pj).ln();
+                if (p[j] >= self.threshold) == (y > 0.5) {
+                    correct += 1;
+                }
+            }
+        }
+        (bce / (n * h) as f64, correct as f64 / (n * h) as f64)
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn adam_update(
+    w: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    lr: f32,
+    b1: f32,
+    b2: f32,
+    eps: f32,
+    step: i32,
+) {
+    let bc1 = 1.0 - b1.powi(step);
+    let bc2 = 1.0 - b2.powi(step);
+    for i in 0..w.len() {
+        m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+        v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+        let mh = m[i] / bc1;
+        let vh = v[i] / bc2;
+        w[i] -= lr * mh / (vh.sqrt() + eps);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A learnable problem: outputs active when a linear score is high.
+    fn synthetic_problem(
+        n: usize,
+        i: usize,
+        h: usize,
+        seed: u64,
+    ) -> (Mat, Vec<f32>, Mat) {
+        let mut rng = Xoshiro256::new(seed);
+        let proj = Mat::gaussian(h, i, 1.0 / (i as f32).sqrt(), &mut rng);
+        let inputs = Mat::gaussian(n, i, 1.0, &mut rng);
+        let mut labels = vec![0.0f32; n * h];
+        for s in 0..n {
+            let scores = proj.matvec(inputs.row(s));
+            for j in 0..h {
+                if scores[j] > 0.4 {
+                    labels[s * h + j] = 1.0;
+                }
+            }
+        }
+        (inputs, labels, proj)
+    }
+
+    #[test]
+    fn masker_learns_linear_rule() {
+        let (inputs, labels, _) = synthetic_problem(512, 16, 24, 1);
+        let pos_rate =
+            labels.iter().filter(|&&y| y > 0.5).count() as f64 / labels.len() as f64;
+        let masker = MlpMasker::train(&inputs, &labels, 24, 8, pos_rate * 24.0, 30, 2);
+        let (bce, acc) = masker.evaluate(&inputs, &labels);
+        // Majority-class baseline accuracy:
+        let base = pos_rate.max(1.0 - pos_rate);
+        assert!(acc > base + 0.05, "acc {acc} vs baseline {base} (bce {bce})");
+    }
+
+    #[test]
+    fn threshold_hits_target_keep_rate() {
+        let (inputs, labels, _) = synthetic_problem(256, 12, 16, 3);
+        let masker = MlpMasker::train(&inputs, &labels, 16, 6, 5.0, 10, 4);
+        assert!(
+            (masker.exp_keep - 5.0).abs() < 1.5,
+            "exp_keep {} target 5",
+            masker.exp_keep
+        );
+    }
+
+    #[test]
+    fn r_inner_budget_math() {
+        let r = MlpMasker::r_inner_for_budget(100, 300, 8000.0);
+        // 2·r'·(100+300) ≤ 8000 → r' = 10
+        assert_eq!(r, 10);
+        assert!(MlpMasker::r_inner_for_budget(100, 300, 1.0) >= 1);
+    }
+
+    #[test]
+    fn flops_accounting_matches_dims() {
+        let (inputs, labels, _) = synthetic_problem(64, 10, 12, 5);
+        let m = MlpMasker::train(&inputs, &labels, 12, 4, 6.0, 2, 6);
+        let f = m.flops();
+        assert_eq!(f, 2.0 * 4.0 * 10.0 + 2.0 * 12.0 * 4.0 + 2.0 * 12.0);
+    }
+}

@@ -1,0 +1,280 @@
+//! The paper's adapters and every baseline it compares against.
+//!
+//! * [`rank_adapter`] — Linear-Layer Rank Adapter + B-masker (paper §4.1);
+//! * [`neuron_threshold`] — Down-Projection neuron thresholding (Eqn. 12);
+//! * [`maskers`] — learned MLP-Sigmoid maskers (§4.1);
+//! * [`rana`] — the RaNA adapter: rank adapters on Up/Gate/QKV + neuron
+//!   thresholding on Down + line/grid-search FLOP allocation (§4.2);
+//! * [`cats`] — CATS (Lee et al. 2024) reimplementation;
+//! * [`neuron_adaptive`] — Deja-Vu-style neuron adapter with a trained
+//!   masker at 6 % of MLP FLOPs (Liu et al. 2023 / Zhang et al. 2024);
+//! * [`llra`] — rank adapters with MLP-sigmoid maskers everywhere (§5.1);
+//! * [`slicegpt`] — PCA rotate-and-slice static baseline (Ashkboos et al.);
+//! * [`svd_baseline`] — plain truncated SVD of `W` (Fig. 3 comparator);
+//! * [`calibrate`] — capture calibration data and assemble adapted models
+//!   at a target model-level FLOP compression rate.
+//!
+//! Adapted models implement [`crate::model::BlockOps`], so every harness
+//! (perplexity, accuracy, latency, serving) runs them interchangeably with
+//! the dense model.
+
+pub mod calibrate;
+pub mod cats;
+pub mod llra;
+pub mod maskers;
+pub mod model_alloc;
+pub mod neuron_adaptive;
+pub mod neuron_threshold;
+pub mod rana;
+pub mod recovery;
+pub mod rank_adapter;
+pub mod slicegpt;
+pub mod svd_baseline;
+
+use std::sync::Arc;
+
+use crate::flops::{LinearFlops, MlpFlops};
+use crate::model::{BlockOps, Capture, Model, ModelConfig, ModelWeights};
+use crate::tensor::Mat;
+
+/// An adapted MLP block: one of the paper's methods applied to Up/Gate/Down.
+pub trait MlpAdapter: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Decode path (GEMV, real skipping).
+    fn apply_tok(&self, x: &[f32]) -> Vec<f32>;
+    /// Sequence path (GEMM, mask-as-zero).
+    fn apply_seq(&self, xs: &Mat) -> Mat;
+    /// Expected per-token FLOPs.
+    fn flops(&self) -> MlpFlops;
+}
+
+/// An adapted (fused) QKV projection.
+pub trait QkvAdapter: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn apply_tok(&self, x: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>);
+    fn apply_seq(&self, xs: &Mat) -> (Mat, Mat, Mat);
+    /// Expected per-token FLOPs of the fused projection.
+    fn flops(&self) -> LinearFlops;
+}
+
+/// Split a fused `[3d]` vector into (q, k, v).
+pub(crate) fn split3(v: Vec<f32>) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let d = v.len() / 3;
+    let q = v[..d].to_vec();
+    let k = v[d..2 * d].to_vec();
+    let val = v[2 * d..].to_vec();
+    (q, k, val)
+}
+
+/// Split a fused `[T, 3d]` matrix into three `[T, d]` matrices.
+pub(crate) fn split3_seq(m: &Mat) -> (Mat, Mat, Mat) {
+    let d = m.cols / 3;
+    let mut q = Mat::zeros(m.rows, d);
+    let mut k = Mat::zeros(m.rows, d);
+    let mut v = Mat::zeros(m.rows, d);
+    for r in 0..m.rows {
+        let row = m.row(r);
+        q.row_mut(r).copy_from_slice(&row[..d]);
+        k.row_mut(r).copy_from_slice(&row[d..2 * d]);
+        v.row_mut(r).copy_from_slice(&row[2 * d..]);
+    }
+    (q, k, v)
+}
+
+/// Stack `wq`, `wk`, `wv` (`d×d` each) into the fused `3d×d` QKV matrix.
+pub fn fused_qkv_weight(w: &crate::model::LayerWeights) -> Mat {
+    let d = w.wq.w.cols;
+    let mut fused = Mat::zeros(3 * d, d);
+    fused.data[..d * d].copy_from_slice(&w.wq.w.data);
+    fused.data[d * d..2 * d * d].copy_from_slice(&w.wk.w.data);
+    fused.data[2 * d * d..].copy_from_slice(&w.wv.w.data);
+    fused
+}
+
+/// A model with per-layer adapters plugged in. Layers without an adapter
+/// fall back to the dense ops — so partially-adapted configurations (e.g.
+/// Gemma-style MLP-only adaptation) are first-class.
+pub struct AdaptedModel {
+    pub base: Arc<Model>,
+    pub mlp: Vec<Option<Box<dyn MlpAdapter>>>,
+    pub qkv: Vec<Option<Box<dyn QkvAdapter>>>,
+    /// Human-readable method label ("RaNA", "CATS", …).
+    pub method: String,
+}
+
+impl AdaptedModel {
+    pub fn unadapted(base: Arc<Model>) -> Self {
+        let n = base.cfg.n_layers;
+        Self {
+            base,
+            mlp: (0..n).map(|_| None).collect(),
+            qkv: (0..n).map(|_| None).collect(),
+            method: "dense".into(),
+        }
+    }
+
+    /// Per-token FLOPs of one block at a context length, honoring adapters.
+    pub fn block_flops(&self, layer: usize, ctx: usize) -> crate::flops::BlockFlops {
+        let cfg = &self.base.cfg;
+        let (d, h) = (cfg.d_model, cfg.d_hidden);
+        let mut b = crate::flops::BlockFlops {
+            attn: crate::flops::AttnFlops::dense(d, ctx),
+            mlp: match cfg.arch {
+                crate::model::Arch::SwiGlu => MlpFlops::dense_swiglu(d, h),
+                crate::model::Arch::GeluNeoX => MlpFlops::dense_gelu(d, h),
+            },
+            norms: 8.0 * d as f64,
+        };
+        if let Some(ad) = &self.mlp[layer] {
+            b.mlp = ad.flops();
+        }
+        if let Some(ad) = &self.qkv[layer] {
+            b.attn.qkv = ad.flops();
+        }
+        b
+    }
+
+    /// Whole-model decode FLOPs (paper's 512-token decode metric).
+    pub fn decode_flops(&self, seq_len: usize) -> crate::flops::DecodeFlops {
+        let cfg = &self.base.cfg;
+        let n_layers = cfg.n_layers;
+        let mut out = crate::flops::DecodeFlops::default();
+        for ctx in 1..=seq_len {
+            for layer in 0..n_layers {
+                let b = self.block_flops(layer, ctx);
+                out.mlp += b.mlp.total();
+                out.qkv += b.attn.qkv.total();
+                out.attn_other += b.attn.out_proj + b.attn.attention + b.attn.rope + b.norms;
+            }
+            out.lm_head += crate::flops::linear(cfg.vocab, cfg.d_model);
+        }
+        let n = seq_len as f64;
+        out.mlp /= n;
+        out.qkv /= n;
+        out.attn_other /= n;
+        out.lm_head /= n;
+        out.total = out.mlp + out.qkv + out.attn_other + out.lm_head;
+        out
+    }
+}
+
+impl BlockOps for AdaptedModel {
+    fn config(&self) -> &ModelConfig {
+        &self.base.cfg
+    }
+
+    fn weights(&self) -> &ModelWeights {
+        &self.base.w
+    }
+
+    fn qkv_seq(&self, layer: usize, xs: &Mat) -> (Mat, Mat, Mat) {
+        match &self.qkv[layer] {
+            Some(ad) => ad.apply_seq(xs),
+            None => self.base.qkv_seq(layer, xs),
+        }
+    }
+
+    fn attn_out_seq(&self, layer: usize, xs: &Mat) -> Mat {
+        self.base.attn_out_seq(layer, xs)
+    }
+
+    fn mlp_seq(&self, layer: usize, xs: &Mat, cap: Option<&mut Capture>) -> Mat {
+        match &self.mlp[layer] {
+            Some(ad) => ad.apply_seq(xs),
+            None => self.base.mlp_seq(layer, xs, cap),
+        }
+    }
+
+    fn qkv_tok(&self, layer: usize, x: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        match &self.qkv[layer] {
+            Some(ad) => ad.apply_tok(x),
+            None => self.base.qkv_tok(layer, x),
+        }
+    }
+
+    fn attn_out_tok(&self, layer: usize, x: &[f32]) -> Vec<f32> {
+        self.base.attn_out_tok(layer, x)
+    }
+
+    fn mlp_tok(&self, layer: usize, x: &[f32]) -> Vec<f32> {
+        match &self.mlp[layer] {
+            Some(ad) => ad.apply_tok(x),
+            None => self.base.mlp_tok(layer, x),
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::model::Arch;
+
+    /// A tiny model shared by adapter tests.
+    pub fn tiny_model(arch: Arch, seed: u64) -> Arc<Model> {
+        let cfg = ModelConfig {
+            name: "tiny".into(),
+            arch,
+            d_model: 12,
+            n_layers: 2,
+            n_heads: 2,
+            d_hidden: 24,
+            // Byte-tokenizer tests feed tokens up to BOS=256, so the test
+            // model uses the real MODEL_VOCAB.
+            vocab: crate::data::tokenizer::MODEL_VOCAB,
+            max_seq: 32,
+            rope_theta: 10_000.0,
+            norm_eps: 1e-5,
+        };
+        let w = ModelWeights::random_init(&cfg, seed);
+        Arc::new(Model::new(cfg, w).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::tiny_model;
+    use super::*;
+    use crate::model::{forward_seq, Arch};
+
+    #[test]
+    fn unadapted_model_matches_dense() {
+        for arch in [Arch::SwiGlu, Arch::GeluNeoX] {
+            let m = tiny_model(arch, 31);
+            let adapted = AdaptedModel::unadapted(Arc::clone(&m));
+            let a = forward_seq(&*m, &[1, 2, 3, 4], None);
+            let b = forward_seq(&adapted, &[1, 2, 3, 4], None);
+            crate::util::prop::close_slices(&a.data, &b.data, 1e-6, 1e-6).unwrap();
+        }
+    }
+
+    #[test]
+    fn split3_roundtrip() {
+        let fused: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        let (q, k, v) = split3(fused);
+        assert_eq!(q, vec![0.0, 1.0, 2.0]);
+        assert_eq!(k, vec![3.0, 4.0, 5.0]);
+        assert_eq!(v, vec![6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn fused_qkv_matches_separate_products() {
+        let m = tiny_model(Arch::SwiGlu, 31);
+        let lw = &m.w.layers[0];
+        let fused = fused_qkv_weight(lw);
+        let x: Vec<f32> = (0..12).map(|i| (i as f32 - 6.0) / 6.0).collect();
+        let (q, k, v) = split3(fused.matvec(&x));
+        crate::util::prop::close_slices(&q, &lw.wq.apply(&x), 1e-6, 1e-6).unwrap();
+        crate::util::prop::close_slices(&k, &lw.wk.apply(&x), 1e-6, 1e-6).unwrap();
+        crate::util::prop::close_slices(&v, &lw.wv.apply(&x), 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn dense_decode_flops_are_self_consistent() {
+        let m = tiny_model(Arch::SwiGlu, 31);
+        let adapted = AdaptedModel::unadapted(m);
+        let df = adapted.decode_flops(8);
+        assert!(df.total > 0.0);
+        assert!(df.compression_vs(&df).abs() < 1e-12);
+        assert!((df.total - (df.mlp + df.qkv + df.attn_other + df.lm_head)).abs() < 1e-6);
+    }
+}

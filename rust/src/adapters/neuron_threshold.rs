@@ -1,0 +1,169 @@
+//! Neuron-thresholding adapter for Down-Projection layers (paper Eqn. 12):
+//!
+//! `Down'(x) = W_down (m(x) ⊙ x)` with
+//! `m(x)_i = 1{ |x_i| · ‖W^{down}_{:,i}‖ ≥ t }`.
+//!
+//! Down projections are short/wide, so a rank adapter's `Bx` masker would
+//! cost as much as the layer itself; weight-norm-scaled input magnitude is
+//! a free importance score instead (§4.2).
+
+use crate::flops::{self, LinearFlops};
+use crate::tensor::{masked_acc_gemv, threshold_for_keep, Mat};
+
+#[derive(Clone, Debug)]
+pub struct NeuronThresholdAdapter {
+    /// `Wᵀ` stored `h × o`: masking input coordinate `i` skips row `i`.
+    pub wt: Mat,
+    /// `‖W_{:,i}‖` per input coordinate.
+    pub col_norms: Vec<f32>,
+    /// Threshold `t` on `|x_i|·‖W_{:,i}‖`.
+    pub threshold: f32,
+    /// Calibrated expected number of active neurons.
+    pub exp_keep: f64,
+}
+
+impl NeuronThresholdAdapter {
+    /// Build from the dense weight (`o×h`) and calibration inputs to this
+    /// layer (`x_fit: h×k`), targeting `budget` per-token FLOPs.
+    pub fn build(w: &Mat, x_fit: &Mat, budget: f64) -> Self {
+        let (o, h) = (w.rows, w.cols);
+        let wt = w.transpose();
+        let col_norms: Vec<f32> = (0..h)
+            .map(|i| wt.row(i).iter().map(|&v| v * v).sum::<f32>().sqrt())
+            .collect();
+        // budget = masker (2h) + 2·o·E[r]  →  E[r]
+        let r_target = ((budget - 2.0 * h as f64) / (2.0 * o as f64)).clamp(0.0, h as f64);
+        let k = x_fit.cols;
+        let mut scores: Vec<f32> = Vec::with_capacity(h * k);
+        for i in 0..h {
+            for c in 0..k {
+                scores.push(x_fit.at(i, c).abs() * col_norms[i]);
+            }
+        }
+        let keep = ((r_target * k as f64).round() as usize).min(scores.len());
+        let threshold = threshold_for_keep(&mut scores, keep);
+        // Achieved keep rate on the fit set.
+        let mut active = 0usize;
+        for i in 0..h {
+            for c in 0..k {
+                if x_fit.at(i, c).abs() * col_norms[i] >= threshold {
+                    active += 1;
+                }
+            }
+        }
+        let exp_keep = active as f64 / k as f64;
+        Self { wt, col_norms, threshold, exp_keep }
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.wt.cols
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.wt.rows
+    }
+
+    pub fn mask(&self, x: &[f32]) -> Vec<bool> {
+        x.iter()
+            .zip(&self.col_norms)
+            .map(|(&v, &n)| v.abs() * n >= self.threshold)
+            .collect()
+    }
+
+    /// Decode path with genuine neuron skipping.
+    pub fn apply_tok(&self, x: &[f32]) -> Vec<f32> {
+        let mask = self.mask(x);
+        let mut out = vec![0.0f32; self.out_dim()];
+        masked_acc_gemv(&self.wt, &mask, x, &mut out);
+        out
+    }
+
+    /// Sequence path: zero masked inputs, dense GEMM.
+    pub fn apply_seq(&self, xs: &Mat) -> Mat {
+        let mut masked = xs.clone();
+        for r in 0..masked.rows {
+            let row = masked.row_mut(r);
+            for (i, v) in row.iter_mut().enumerate() {
+                if v.abs() * self.col_norms[i] < self.threshold {
+                    *v = 0.0;
+                }
+            }
+        }
+        masked.matmul(&self.wt)
+    }
+
+    pub fn flops(&self) -> LinearFlops {
+        flops::neuron_threshold(self.out_dim(), self.in_dim(), self.exp_keep)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn setup(o: usize, h: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Xoshiro256::new(seed);
+        let w = Mat::gaussian(o, h, 1.0 / (h as f32).sqrt(), &mut rng);
+        // Heavy-tailed inputs: many near-zero coordinates (like SwiGLU
+        // intermediates), some large.
+        let mut x = Mat::gaussian(h, 128, 1.0, &mut rng);
+        for v in x.data.iter_mut() {
+            *v = v.powi(3) * 0.3;
+        }
+        (w, x)
+    }
+
+    #[test]
+    fn full_budget_is_identity() {
+        let (w, x) = setup(12, 48, 1);
+        let ad = NeuronThresholdAdapter::build(&w, &x, flops::linear(12, 48) * 2.0);
+        let mut rng = Xoshiro256::new(2);
+        let v: Vec<f32> = (0..48).map(|_| rng.gaussian()).collect();
+        crate::util::prop::close_slices(&ad.apply_tok(&v), &w.matvec(&v), 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn tok_and_seq_agree() {
+        let (w, x) = setup(16, 32, 3);
+        let ad = NeuronThresholdAdapter::build(&w, &x, flops::linear(16, 32) * 0.5);
+        let mut rng = Xoshiro256::new(4);
+        let xs = Mat::gaussian(6, 32, 1.0, &mut rng);
+        let seq = ad.apply_seq(&xs);
+        for r in 0..6 {
+            let tok = ad.apply_tok(xs.row(r));
+            crate::util::prop::close_slices(&tok, seq.row(r), 1e-5, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn budget_respected_and_keep_rate_sane() {
+        let (w, x) = setup(24, 96, 5);
+        for frac in [0.3, 0.6] {
+            let budget = flops::linear(24, 96) * frac;
+            let ad = NeuronThresholdAdapter::build(&w, &x, budget);
+            assert!(ad.flops().total() <= budget * 1.05, "frac {frac}");
+            assert!(ad.exp_keep > 0.0 && ad.exp_keep <= 96.0);
+        }
+    }
+
+    #[test]
+    fn keeps_high_importance_coordinates() {
+        let (w, x) = setup(8, 16, 7);
+        let ad = NeuronThresholdAdapter::build(&w, &x, flops::linear(8, 16) * 0.5);
+        let mut v = vec![0.01f32; 16];
+        v[3] = 10.0; // dominant coordinate
+        let mask = ad.mask(&v);
+        assert!(mask[3], "dominant coordinate must stay active");
+        // Output should be close to the rank-1 contribution of coord 3.
+        let got = ad.apply_tok(&v);
+        let want = w.matvec(&v);
+        let rel: f32 = got
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).powi(2))
+            .sum::<f32>()
+            / want.iter().map(|b| b * b).sum::<f32>();
+        assert!(rel < 0.05, "rel err {rel}");
+    }
+}

@@ -1,0 +1,319 @@
+//! RaNA adapters (paper §4.2): Linear-Layer Rank Adapters on Up/Gate/QKV,
+//! neuron thresholding on Down, and the FLOP allocation procedure —
+//! per-linear **line search** (inside [`RankPrecomp::adapter_for_budget`])
+//! nested in a per-MLP **grid search** over the Up/Gate/Down budget split.
+
+use super::calibrate::LayerCalib;
+use super::neuron_threshold::NeuronThresholdAdapter;
+use super::rank_adapter::{RankAdapter, RankPrecomp};
+use super::{split3, split3_seq, MlpAdapter, QkvAdapter};
+use crate::flops::{LinearFlops, MlpFlops};
+use crate::model::{ops, Arch, LayerWeights};
+use crate::tensor::Mat;
+
+/// RaNA-adapted MLP block.
+pub struct RanaMlp {
+    pub arch: Arch,
+    pub up: RankAdapter,
+    /// SwiGLU only.
+    pub gate: Option<RankAdapter>,
+    pub down: NeuronThresholdAdapter,
+    /// Budget split chosen by the grid search `(up, gate, down)`.
+    pub split: (f64, f64, f64),
+}
+
+impl RanaMlp {
+    fn intermediate_tok(&self, x: &[f32]) -> Vec<f32> {
+        match self.arch {
+            Arch::SwiGlu => {
+                let up = self.up.apply_tok(x);
+                let gate = self.gate.as_ref().unwrap().apply_tok(x);
+                up.iter().zip(&gate).map(|(&u, &g)| u * ops::silu(g)).collect()
+            }
+            Arch::GeluNeoX => {
+                self.up.apply_tok(x).iter().map(|&v| ops::gelu(v)).collect()
+            }
+        }
+    }
+
+    fn intermediate_seq(&self, xs: &Mat) -> Mat {
+        match self.arch {
+            Arch::SwiGlu => {
+                let mut up = self.up.apply_seq(xs);
+                let gate = self.gate.as_ref().unwrap().apply_seq(xs);
+                for (v, g) in up.data.iter_mut().zip(&gate.data) {
+                    *v *= ops::silu(*g);
+                }
+                up
+            }
+            Arch::GeluNeoX => {
+                let mut up = self.up.apply_seq(xs);
+                for v in up.data.iter_mut() {
+                    *v = ops::gelu(*v);
+                }
+                up
+            }
+        }
+    }
+}
+
+impl MlpAdapter for RanaMlp {
+    fn name(&self) -> &'static str {
+        "RaNA"
+    }
+
+    fn apply_tok(&self, x: &[f32]) -> Vec<f32> {
+        self.down.apply_tok(&self.intermediate_tok(x))
+    }
+
+    fn apply_seq(&self, xs: &Mat) -> Mat {
+        self.down.apply_seq(&self.intermediate_seq(xs))
+    }
+
+    fn flops(&self) -> MlpFlops {
+        MlpFlops {
+            up: self.up.flops(),
+            gate: self.gate.as_ref().map(|g| g.flops()).unwrap_or_default(),
+            down: self.down.flops(),
+            act: 2.0 * self.up.out_dim() as f64,
+        }
+    }
+}
+
+/// Per-layer builder: owns the expensive [`RankPrecomp`]s so that grid
+/// searches and multi-rate sweeps only pay the SVD once.
+pub struct RanaMlpBuilder<'a> {
+    arch: Arch,
+    lw: &'a LayerWeights,
+    calib: &'a LayerCalib,
+    pre_up: RankPrecomp,
+    pre_gate: Option<RankPrecomp>,
+}
+
+impl<'a> RanaMlpBuilder<'a> {
+    pub fn new(arch: Arch, lw: &'a LayerWeights, calib: &'a LayerCalib, seed: u64) -> Self {
+        let pre_up = RankPrecomp::new(&lw.up.w, &calib.mlp_in_fit, &calib.mlp_in_eval, seed);
+        let pre_gate = lw.gate.as_ref().map(|g| {
+            RankPrecomp::new(&g.w, &calib.mlp_in_fit, &calib.mlp_in_eval, seed ^ 0x9E37)
+        });
+        Self { arch, lw, calib, pre_up, pre_gate }
+    }
+
+    /// Dense per-token FLOPs of this MLP.
+    pub fn dense_flops(&self) -> f64 {
+        match self.arch {
+            Arch::SwiGlu => MlpFlops::dense_swiglu(self.lw.up.in_dim(), self.lw.up.out_dim()),
+            Arch::GeluNeoX => MlpFlops::dense_gelu(self.lw.up.in_dim(), self.lw.up.out_dim()),
+        }
+        .total()
+    }
+
+    /// Build the best RaNA MLP under `budget` per-token FLOPs.
+    /// `grid = false` disables the FLOP-allocation grid search and uses the
+    /// dense-proportional split (the Tab. 3 "No FLOP Allocation" ablation).
+    pub fn build(&self, budget: f64, grid: bool) -> (RanaMlp, f64) {
+        let candidates: Vec<(f64, f64, f64)> = if !grid {
+            vec![self.proportional_split()]
+        } else {
+            let mut c = vec![self.proportional_split()];
+            match self.arch {
+                Arch::SwiGlu => {
+                    for &fu in &[0.15, 0.25, 0.35, 0.45] {
+                        for &fg in &[0.15, 0.25, 0.35, 0.45] {
+                            let fd = 1.0 - fu - fg;
+                            if fd >= 0.1 {
+                                c.push((fu, fg, fd));
+                            }
+                        }
+                    }
+                }
+                Arch::GeluNeoX => {
+                    for &fu in &[0.3, 0.4, 0.5, 0.6, 0.7] {
+                        c.push((fu, 0.0, 1.0 - fu));
+                    }
+                }
+            }
+            c
+        };
+
+        let mut best: Option<(RanaMlp, f64)> = None;
+        for split in candidates {
+            let mlp = self.build_with_split(budget, split);
+            let err = self.eval_error(&mlp);
+            if best.as_ref().map(|(_, e)| err < *e).unwrap_or(true) {
+                best = Some((mlp, err));
+            }
+        }
+        best.expect("at least one candidate")
+    }
+
+    /// Dense-proportional budget split.
+    fn proportional_split(&self) -> (f64, f64, f64) {
+        match self.arch {
+            Arch::SwiGlu => (1.0 / 3.0, 1.0 / 3.0, 1.0 / 3.0),
+            Arch::GeluNeoX => (0.5, 0.0, 0.5),
+        }
+    }
+
+    fn build_with_split(&self, budget: f64, split: (f64, f64, f64)) -> RanaMlp {
+        let (fu, fg, fd) = split;
+        let (up, _) = self.pre_up.adapter_for_budget(budget * fu);
+        let gate = self
+            .pre_gate
+            .as_ref()
+            .map(|pre| pre.adapter_for_budget(budget * fg).0);
+        let down =
+            NeuronThresholdAdapter::build(&self.lw.down.w, &self.calib.down_in_fit, budget * fd);
+        RanaMlp { arch: self.arch, up, gate, down, split }
+    }
+
+    /// Normalized MLP output error on the eval inputs (paper §5.3 metric).
+    pub fn eval_error(&self, mlp: &RanaMlp) -> f64 {
+        let xs = self.calib.mlp_in_eval.transpose(); // rows = samples
+        let got = mlp.apply_seq(&xs);
+        let want = &self.calib.mlp_out_eval;
+        normalized_err(&got, want)
+    }
+}
+
+/// `‖got − want‖² / ‖want‖²` over all entries.
+pub fn normalized_err(got: &Mat, want: &Mat) -> f64 {
+    debug_assert_eq!((got.rows, got.cols), (want.rows, want.cols));
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (g, w) in got.data.iter().zip(&want.data) {
+        num += ((g - w) as f64).powi(2);
+        den += (*w as f64).powi(2);
+    }
+    num / den.max(1e-30)
+}
+
+/// RaNA-adapted fused QKV projection (Eqn. 10).
+pub struct RanaQkv {
+    pub ad: RankAdapter,
+}
+
+impl RanaQkv {
+    /// Build from the fused `3d×d` weight and QKV-input calibration.
+    pub fn build(
+        fused_w: &Mat,
+        calib: &LayerCalib,
+        budget: f64,
+        seed: u64,
+    ) -> (Self, f64) {
+        let pre = RankPrecomp::new(fused_w, &calib.qkv_in_fit, &calib.qkv_in_eval, seed);
+        let (ad, err) = pre.adapter_for_budget(budget);
+        (Self { ad }, err)
+    }
+}
+
+impl QkvAdapter for RanaQkv {
+    fn name(&self) -> &'static str {
+        "RaNA"
+    }
+
+    fn apply_tok(&self, x: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        split3(self.ad.apply_tok(x))
+    }
+
+    fn apply_seq(&self, xs: &Mat) -> (Mat, Mat, Mat) {
+        split3_seq(&self.ad.apply_seq(xs))
+    }
+
+    fn flops(&self) -> LinearFlops {
+        self.ad.flops()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapters::calibrate::{collect, CalibOptions};
+    use crate::adapters::test_support::tiny_model;
+    use crate::model::Arch;
+
+    fn setup(arch: Arch) -> (std::sync::Arc<crate::model::Model>, super::super::calibrate::ModelCalib) {
+        let m = tiny_model(arch, 77);
+        let tokens: Vec<u32> = (0..600).map(|i| (i * 7 % 48) as u32).collect();
+        let calib = collect(&m, &tokens, &CalibOptions { n_fit: 96, n_eval: 32, window: 24, seed: 5 });
+        (m, calib)
+    }
+
+    #[test]
+    fn rana_mlp_error_decreases_with_budget_swiglu() {
+        let (m, calib) = setup(Arch::SwiGlu);
+        let b = RanaMlpBuilder::new(m.cfg.arch, &m.w.layers[0], &calib.layers[0], 1);
+        let dense = b.dense_flops();
+        let (_, err_lo) = b.build(dense * 0.3, true);
+        let (_, err_hi) = b.build(dense * 0.9, true);
+        assert!(err_hi <= err_lo + 1e-9, "hi {err_hi} lo {err_lo}");
+        assert!(err_hi < 0.5, "err at 90% budget should be small: {err_hi}");
+    }
+
+    #[test]
+    fn grid_search_not_worse_than_proportional() {
+        let (m, calib) = setup(Arch::SwiGlu);
+        let b = RanaMlpBuilder::new(m.cfg.arch, &m.w.layers[1], &calib.layers[1], 2);
+        let budget = b.dense_flops() * 0.5;
+        let (_, err_grid) = b.build(budget, true);
+        let (_, err_prop) = b.build(budget, false);
+        assert!(err_grid <= err_prop + 1e-9, "grid {err_grid} vs prop {err_prop}");
+    }
+
+    #[test]
+    fn rana_mlp_flops_respect_budget() {
+        let (m, calib) = setup(Arch::SwiGlu);
+        let b = RanaMlpBuilder::new(m.cfg.arch, &m.w.layers[0], &calib.layers[0], 3);
+        let budget = b.dense_flops() * 0.5;
+        let (mlp, _) = b.build(budget, true);
+        let total = mlp.flops().total();
+        // act glue is small but counted; allow 10% headroom.
+        assert!(total <= budget * 1.10, "flops {total} budget {budget}");
+    }
+
+    #[test]
+    fn rana_mlp_gelu_arch_works() {
+        let (m, calib) = setup(Arch::GeluNeoX);
+        let b = RanaMlpBuilder::new(m.cfg.arch, &m.w.layers[0], &calib.layers[0], 4);
+        let (mlp, err) = b.build(b.dense_flops() * 0.6, true);
+        assert!(mlp.gate.is_none());
+        assert!(err < 1.0);
+        // tok/seq agreement
+        let x: Vec<f32> = (0..m.cfg.d_model).map(|i| (i as f32 - 6.0) / 6.0).collect();
+        let tok = mlp.apply_tok(&x);
+        let seq = mlp.apply_seq(&Mat::from_vec(1, m.cfg.d_model, x));
+        crate::util::prop::close_slices(&tok, &seq.data, 1e-4, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn rana_qkv_reconstructs_at_high_budget() {
+        let (m, calib) = setup(Arch::SwiGlu);
+        let fused = crate::adapters::fused_qkv_weight(&m.w.layers[0]);
+        let budget = crate::flops::linear(fused.rows, fused.cols) * 2.0;
+        let (qkv, err) = RanaQkv::build(&fused, &calib.layers[0], budget, 5);
+        assert!(err < 0.05, "err {err}");
+        let x: Vec<f32> = (0..m.cfg.d_model).map(|i| (i as f32) / 12.0 - 0.5).collect();
+        let (q, _k, _v) = qkv.apply_tok(&x);
+        let want_q = m.w.layers[0].wq.apply(&x);
+        let rel: f32 = q.iter().zip(&want_q).map(|(a, b)| (a - b).powi(2)).sum::<f32>()
+            / want_q.iter().map(|b| b * b).sum::<f32>().max(1e-9);
+        assert!(rel < 0.1, "q rel err {rel}");
+    }
+
+    #[test]
+    fn rana_qkv_tok_seq_agree() {
+        let (m, calib) = setup(Arch::SwiGlu);
+        let fused = crate::adapters::fused_qkv_weight(&m.w.layers[1]);
+        let budget = crate::flops::linear(fused.rows, fused.cols) * 0.5;
+        let (qkv, _) = RanaQkv::build(&fused, &calib.layers[1], budget, 6);
+        let mut rng = crate::util::rng::Xoshiro256::new(8);
+        let xs = Mat::gaussian(3, m.cfg.d_model, 1.0, &mut rng);
+        let (qs, ks, vs) = qkv.apply_seq(&xs);
+        for r in 0..3 {
+            let (q, k, v) = qkv.apply_tok(xs.row(r));
+            crate::util::prop::close_slices(&q, qs.row(r), 1e-4, 1e-3).unwrap();
+            crate::util::prop::close_slices(&k, ks.row(r), 1e-4, 1e-3).unwrap();
+            crate::util::prop::close_slices(&v, vs.row(r), 1e-4, 1e-3).unwrap();
+        }
+    }
+}

@@ -1,0 +1,405 @@
+//! Linear-Layer Rank Adapter (paper §4.1).
+//!
+//! Replaces `Linear(x) = Wx` by `A (m(x) ⊙ Bx)` with
+//!
+//! * `A := U_d` — the top-`d` left singular vectors of `W·X` over a
+//!   calibration set `X` (Theorem 1 / Eckart–Young);
+//! * `B := U_dᵀ W`;
+//! * `m(x)_i = 1{(Bx)_i² ≥ t}` — the **B-masker** (Eqn. 9). Because the
+//!   columns of `U` are orthonormal, `(Bx)_i²` *is* the contribution of
+//!   rank `i` to `‖A(Bx)‖²`, so thresholding keeps the most descriptive
+//!   ranks for each input.
+//!
+//! The FLOP split between the masker (`Bx`, `2·d·i`) and the masked main
+//! contraction (`2·o·E[r]`) is chosen by the paper's **line search**
+//! (§4.2 "RaNA FLOP Allocation"): [`RankPrecomp::adapter_for_budget`]
+//! scans static truncations `d`, derives the admissible expected rank from
+//! the budget, calibrates the threshold to hit it, and keeps the `(d, t)`
+//! minimizing calibration reconstruction error.
+
+use crate::flops::{self, LinearFlops};
+use crate::tensor::linalg::left_sv_of_product;
+use crate::tensor::{threshold_for_keep, Mat};
+
+/// A constructed rank adapter, ready for both execution paths.
+#[derive(Clone, Debug)]
+pub struct RankAdapter {
+    /// `Aᵀ = U_dᵀ`, stored `d × o` so the masked contraction walks rows.
+    pub at: Mat,
+    /// `B = U_dᵀ W`, `d × i` (decode path: `s = B·x`).
+    pub b: Mat,
+    /// `Bᵀ`, `i × d` (sequence path: `S = Xs·Bᵀ`).
+    pub bt: Mat,
+    /// B-masker threshold `t` on `(Bx)_i²`.
+    pub threshold: f32,
+    /// Calibrated `E[‖m(x)‖₀]` (the paper's expected-rank constraint).
+    pub exp_rank: f64,
+    /// Static truncation rank `d`.
+    pub d: usize,
+}
+
+impl RankAdapter {
+    pub fn out_dim(&self) -> usize {
+        self.at.cols
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.b.cols
+    }
+
+    /// Rank contribution scores `(Bx)_i²` for one input (Fig. 2 histograms).
+    pub fn contribution_scores(&self, x: &[f32]) -> Vec<f32> {
+        self.b.matvec(x).iter().map(|&s| s * s).collect()
+    }
+
+    /// Decode path: `A(m ⊙ Bx)` with genuine skipping of masked ranks.
+    /// Fused single pass (§Perf L3.6): each rank computes its score
+    /// `(b_i·x)` and, if it survives the threshold, immediately accumulates
+    /// `s_i · a_i` — no intermediate score/mask vectors, one touch of `B`
+    /// and of the surviving rows of `A`.
+    pub fn apply_tok(&self, x: &[f32]) -> Vec<f32> {
+        let t = self.threshold;
+        let mut out = vec![0.0f32; self.out_dim()];
+        for i in 0..self.d {
+            let s = crate::tensor::dot(self.b.row(i), x);
+            if s * s >= t {
+                crate::tensor::axpy(s, self.at.row(i), &mut out);
+            }
+        }
+        out
+    }
+
+    /// Sequence path: dense GEMMs with masked entries zeroed (used by the
+    /// PPL/accuracy harness where reconstruction, not wall-clock, matters).
+    pub fn apply_seq(&self, xs: &Mat) -> Mat {
+        let mut s = xs.matmul(&self.bt); // T × d
+        let t = self.threshold;
+        for v in s.data.iter_mut() {
+            if *v * *v < t {
+                *v = 0.0;
+            }
+        }
+        s.matmul(&self.at) // T × o
+    }
+
+    /// Expected per-token FLOPs.
+    pub fn flops(&self) -> LinearFlops {
+        flops::rank_adapter(self.out_dim(), self.in_dim(), self.d, self.exp_rank)
+    }
+
+    /// Average active rank measured on a batch of inputs (test/diagnostics).
+    pub fn measured_rank(&self, xs: &Mat) -> f64 {
+        let s = xs.matmul(&self.bt);
+        let t = self.threshold;
+        let active = s.data.iter().filter(|&&v| v * v >= t).count();
+        active as f64 / xs.rows as f64
+    }
+}
+
+/// Per-linear precomputation shared by every budget: the SVD of `W·X`
+/// (done once) plus fit/eval score matrices. Reused across the MLP grid
+/// search and multi-rate sweeps.
+pub struct RankPrecomp {
+    /// `U` — `o × d_max`.
+    u: Mat,
+    /// `B_full = Uᵀ W` — `d_max × i`.
+    b_full: Mat,
+    /// Scores on the fit set: `S_fit = B_full · X_fit` — `d_max × k_fit`.
+    s_fit: Mat,
+    /// Scores on the eval set.
+    s_eval: Mat,
+    /// `‖W x_j‖²` for each eval column (exact, via one GEMM).
+    wx_eval_sq: Vec<f64>,
+    pub o: usize,
+    pub i: usize,
+    pub d_max: usize,
+}
+
+impl RankPrecomp {
+    /// `w: o×i`; `x_fit: i×k_fit`; `x_eval: i×k_eval`.
+    pub fn new(w: &Mat, x_fit: &Mat, x_eval: &Mat, seed: u64) -> Self {
+        Self::new_with_basis(w, x_fit, x_fit, x_eval, seed)
+    }
+
+    /// Like [`RankPrecomp::new`] but with a distinct calibration set for the
+    /// SVD basis (`x_basis`) vs the threshold-fit set — used by the
+    /// data-awareness ablation (`x_basis = I` emulates plain SVD(W)).
+    pub fn new_with_basis(w: &Mat, x_basis: &Mat, x_fit: &Mat, x_eval: &Mat, seed: u64) -> Self {
+        let (o, i) = (w.rows, w.cols);
+        // The SVD cannot return more directions than calibration columns;
+        // d_max is whatever the range finder actually produced.
+        let svd = left_sv_of_product(w, x_basis, o.min(i), 2, seed);
+        let d_max = svd.u.cols;
+        let b_full = svd.u.transpose().matmul(w); // d_max × i
+        let s_fit = b_full.matmul(x_fit);
+        let s_eval = b_full.matmul(x_eval);
+        let wx_eval = w.matmul(x_eval); // o × k_eval
+        let mut wx_eval_sq = vec![0.0f64; x_eval.cols];
+        for r in 0..o {
+            for (c, acc) in wx_eval_sq.iter_mut().enumerate() {
+                let v = wx_eval.at(r, c) as f64;
+                *acc += v * v;
+            }
+        }
+        Self { u: svd.u, b_full, s_fit, s_eval, wx_eval_sq, o, i, d_max }
+    }
+
+    /// Dense-layer FLOPs this adapter is replacing.
+    pub fn dense_flops(&self) -> f64 {
+        flops::linear(self.o, self.i)
+    }
+
+    /// The paper's line search: build the best adapter under `budget`
+    /// per-token FLOPs. Returns the adapter and its relative reconstruction
+    /// error on the eval set.
+    pub fn adapter_for_budget(&self, budget: f64) -> (RankAdapter, f64) {
+        let mut best: Option<(RankAdapter, f64)> = None;
+        // Candidate static truncations d (line-search grid).
+        let mut cand: Vec<usize> = (1..=16)
+            .map(|g| (self.d_max as f64 * g as f64 / 16.0).round() as usize)
+            .filter(|&d| d >= 1)
+            .collect();
+        cand.dedup();
+        for d in cand {
+            let masker = 2.0 * d as f64 * self.i as f64 + d as f64;
+            let main_budget = budget - masker;
+            if main_budget <= 0.0 {
+                continue;
+            }
+            let r_target = (main_budget / (2.0 * self.o as f64)).min(d as f64);
+            if r_target < 0.5 {
+                continue;
+            }
+            let (threshold, exp_rank) = self.threshold_for_rank(d, r_target);
+            let err = self.eval_error(d, threshold);
+            if best.as_ref().map(|(_, e)| err < *e).unwrap_or(true) {
+                let adapter = self.build(d, threshold, exp_rank);
+                best = Some((adapter, err));
+            }
+        }
+        best.unwrap_or_else(|| {
+            // Degenerate budget: keep rank 1 deterministically.
+            let (t, r) = self.threshold_for_rank(1, 1.0);
+            (self.build(1, t, r), self.eval_error(1, t))
+        })
+    }
+
+    /// Threshold on `(Bx)²` so that on average `r_target` of the first `d`
+    /// ranks stay active (pooled quantile over the fit set), per Eqn. 8-9.
+    fn threshold_for_rank(&self, d: usize, r_target: f64) -> (f32, f64) {
+        let k = self.s_fit.cols;
+        let mut scores: Vec<f32> = Vec::with_capacity(d * k);
+        for row in 0..d {
+            scores.extend(self.s_fit.row(row).iter().map(|&v| v * v));
+        }
+        let keep = ((r_target * k as f64).round() as usize).min(scores.len());
+        let t = threshold_for_keep(&mut scores, keep);
+        // Measure the achieved expected rank on the fit set.
+        let mut active = 0usize;
+        for row in 0..d {
+            active += self.s_fit.row(row).iter().filter(|&&v| v * v >= t).count();
+        }
+        (t, active as f64 / k as f64)
+    }
+
+    /// Relative reconstruction error on the eval set:
+    /// `Σ_j (‖Wx_j‖² − Σ_{i<d active} s_ij²) / Σ_j ‖Wx_j‖²`
+    /// (exact because the columns of `U` are orthonormal).
+    fn eval_error(&self, d: usize, threshold: f32) -> f64 {
+        let k = self.s_eval.cols;
+        let mut kept = vec![0.0f64; k];
+        for row in 0..d {
+            for (j, &v) in self.s_eval.row(row).iter().enumerate() {
+                let v2 = v * v;
+                if v2 >= threshold {
+                    kept[j] += v2 as f64;
+                }
+            }
+        }
+        let total: f64 = self.wx_eval_sq.iter().sum();
+        let err: f64 = self
+            .wx_eval_sq
+            .iter()
+            .zip(&kept)
+            .map(|(&n, &kp)| (n - kp).max(0.0))
+            .sum();
+        err / total.max(1e-30)
+    }
+
+    fn build(&self, d: usize, threshold: f32, exp_rank: f64) -> RankAdapter {
+        // at = U_dᵀ (d × o)
+        let mut at = Mat::zeros(d, self.o);
+        for r in 0..self.o {
+            for c in 0..d {
+                *at.at_mut(c, r) = self.u.at(r, c);
+            }
+        }
+        let b = self.b_full.top_rows(d);
+        let bt = b.transpose();
+        RankAdapter { at, b, bt, threshold, exp_rank, d }
+    }
+
+    /// Pooled rank-contribution scores on the fit set (Fig. 2 data).
+    pub fn fit_scores_squared(&self) -> Vec<f32> {
+        self.s_fit.data.iter().map(|&v| v * v).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    /// Calibration inputs with an anisotropic covariance (heavy-tailed
+    /// direction importances — the regime the paper's method targets).
+    fn aniso_inputs(i: usize, k: usize, rng: &mut Xoshiro256) -> Mat {
+        let basis = crate::tensor::linalg::qr_q(&Mat::gaussian(i, i, 1.0, rng));
+        let mut x = Mat::zeros(i, k);
+        for col in 0..k {
+            let mut v = vec![0.0f32; i];
+            for dir in 0..i {
+                let scale = 1.0 / (1.0 + dir as f32); // power-law spectrum
+                let coef = rng.gaussian() * scale;
+                crate::tensor::axpy(coef, basis.col(dir).as_slice(), &mut v);
+            }
+            for r in 0..i {
+                *x.at_mut(r, col) = v[r];
+            }
+        }
+        x
+    }
+
+    fn setup(o: usize, i: usize, seed: u64) -> (Mat, Mat, Mat) {
+        let mut rng = Xoshiro256::new(seed);
+        let w = Mat::gaussian(o, i, 1.0 / (i as f32).sqrt(), &mut rng);
+        let x_fit = aniso_inputs(i, 256, &mut rng);
+        let x_eval = aniso_inputs(i, 64, &mut rng);
+        (w, x_fit, x_eval)
+    }
+
+    #[test]
+    fn full_budget_recovers_layer_almost_exactly() {
+        let (w, xf, xe) = setup(48, 16, 1);
+        let pre = RankPrecomp::new(&w, &xf, &xe, 7);
+        // Generous budget: full rank affordable.
+        let (ad, err) = pre.adapter_for_budget(pre.dense_flops() * 4.0);
+        assert!(err < 0.02, "err={err}");
+        // Check actual reconstruction on a fresh input.
+        let mut rng = Xoshiro256::new(9);
+        let x: Vec<f32> = (0..16).map(|_| rng.gaussian()).collect();
+        let want = w.matvec(&x);
+        let got = ad.apply_tok(&x);
+        // Full-rank, low threshold → near-exact.
+        let num: f32 = want.iter().zip(&got).map(|(a, b)| (a - b).powi(2)).sum();
+        let den: f32 = want.iter().map(|a| a * a).sum();
+        assert!(num / den < 0.05, "rel err {}", num / den);
+    }
+
+    #[test]
+    fn tok_and_seq_paths_agree() {
+        let (w, xf, xe) = setup(32, 24, 2);
+        let pre = RankPrecomp::new(&w, &xf, &xe, 3);
+        let (ad, _) = pre.adapter_for_budget(pre.dense_flops() * 0.5);
+        let mut rng = Xoshiro256::new(4);
+        let xs = Mat::gaussian(5, 24, 1.0, &mut rng);
+        let seq = ad.apply_seq(&xs);
+        for r in 0..5 {
+            let tok = ad.apply_tok(xs.row(r));
+            crate::util::prop::close_slices(&tok, seq.row(r), 1e-4, 1e-3)
+                .unwrap_or_else(|e| panic!("row {r}: {e}"));
+        }
+    }
+
+    #[test]
+    fn budget_is_respected() {
+        let (w, xf, xe) = setup(40, 20, 3);
+        let pre = RankPrecomp::new(&w, &xf, &xe, 5);
+        for frac in [0.25, 0.5, 0.75] {
+            let budget = pre.dense_flops() * frac;
+            let (ad, _) = pre.adapter_for_budget(budget);
+            let f = ad.flops();
+            assert!(
+                f.total() <= budget * 1.05,
+                "frac {frac}: flops {} > budget {budget}",
+                f.total()
+            );
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_budget() {
+        let (w, xf, xe) = setup(48, 24, 4);
+        let pre = RankPrecomp::new(&w, &xf, &xe, 11);
+        let errs: Vec<f64> = [0.25, 0.5, 0.9]
+            .iter()
+            .map(|&f| pre.adapter_for_budget(pre.dense_flops() * f).1)
+            .collect();
+        assert!(errs[0] >= errs[1] - 1e-9 && errs[1] >= errs[2] - 1e-9, "errs={errs:?}");
+    }
+
+    #[test]
+    fn data_aware_svd_beats_plain_svd_on_anisotropic_inputs() {
+        // Theorem 1 (Eckart–Young): the rank-d projector built from
+        // SVD(WX) minimizes ‖WX − P WX‖_F over all rank-d projectors —
+        // in particular it beats the projector from SVD(W) when the input
+        // distribution is anisotropic.
+        let (w, xf, _) = setup(40, 32, 5);
+        let m = w.matmul(&xf); // WX
+        let d = 8;
+        let u_data = crate::tensor::linalg::exact_left_sv(&m, d).u;
+        let u_plain = crate::tensor::linalg::exact_left_sv(&w, d).u;
+        let err = |u: &Mat| {
+            let proj = u.matmul(&u.transpose().matmul(&m));
+            proj.sub(&m).fro_norm()
+        };
+        let (e_data, e_plain) = (err(&u_data), err(&u_plain));
+        assert!(
+            e_data < e_plain,
+            "data-aware {e_data} vs plain {e_plain}"
+        );
+    }
+
+    #[test]
+    fn contribution_scores_are_heavy_tailed_on_aniso_inputs() {
+        // Fig. 2 property: most rank contributions near zero, few dominate.
+        let (w, xf, xe) = setup(36, 36, 6);
+        let pre = RankPrecomp::new(&w, &xf, &xe, 17);
+        let (ad, _) = pre.adapter_for_budget(pre.dense_flops());
+        let mut rng = Xoshiro256::new(21);
+        let x = aniso_inputs(36, 1, &mut rng);
+        let scores = ad.contribution_scores(&x.col(0));
+        let mut sorted = scores.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let total: f32 = sorted.iter().sum();
+        let top_quarter: f32 = sorted[..sorted.len() / 4].iter().sum();
+        assert!(
+            top_quarter / total > 0.5,
+            "top 25% of ranks carry {}% of contribution",
+            100.0 * top_quarter / total
+        );
+    }
+
+    #[test]
+    fn measured_rank_tracks_expected_rank() {
+        // Generate fit/eval/fresh from ONE anisotropic stream so they share
+        // the same covariance (the paper's i.i.d. calibration assumption).
+        let mut rng = Xoshiro256::new(7);
+        let (o, i) = (40, 20);
+        let w = Mat::gaussian(o, i, 1.0 / (i as f32).sqrt(), &mut rng);
+        let all = aniso_inputs(i, 256 + 64 + 128, &mut rng); // i × n
+        let cols = |lo: usize, hi: usize| {
+            Mat::from_fn(i, hi - lo, |r, c| all.at(r, lo + c))
+        };
+        let xf = cols(0, 256);
+        let xe = cols(256, 320);
+        let fresh = cols(320, 448).transpose(); // rows = samples
+        let pre = RankPrecomp::new(&w, &xf, &xe, 19);
+        let (ad, _) = pre.adapter_for_budget(pre.dense_flops() * 0.5);
+        let measured = ad.measured_rank(&fresh);
+        assert!(
+            (measured - ad.exp_rank).abs() / ad.exp_rank.max(1.0) < 0.35,
+            "measured {measured} vs expected {}",
+            ad.exp_rank
+        );
+    }
+}

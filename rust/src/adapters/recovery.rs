@@ -1,0 +1,157 @@
+//! Post-adaptation recovery calibration.
+//!
+//! The paper fine-tunes adapted models (LoRA, ~31M tokens) to recover
+//! quality. A full fine-tune is out of scope for the rust request path
+//! (DESIGN.md §2 substitution), but its cheapest useful slice isn't: a
+//! closed-form, per-coordinate affine correction `ŷ = a ⊙ y + b` fitted by
+//! least squares on calibration pairs (adapted output, dense output) of
+//! every adapted MLP block. This recovers the systematic bias/attenuation
+//! that masking introduces, at zero inference cost beyond an FMA per
+//! output coordinate.
+
+use super::{AdaptedModel, MlpAdapter};
+use crate::flops::MlpFlops;
+use crate::tensor::Mat;
+
+/// An MLP adapter wrapped with an affine output correction.
+pub struct RecoveredMlp {
+    inner: Box<dyn MlpAdapter>,
+    scale: Vec<f32>,
+    bias: Vec<f32>,
+}
+
+impl RecoveredMlp {
+    /// Fit `a, b` minimizing `Σ ‖a ⊙ y + b − y*‖²` per coordinate, where
+    /// `y` are adapted outputs and `y*` dense outputs on the eval inputs.
+    pub fn fit(inner: Box<dyn MlpAdapter>, xs_eval: &Mat, dense_out: &Mat) -> Self {
+        let got = inner.apply_seq(xs_eval);
+        let d = got.cols;
+        let n = got.rows as f64;
+        let mut scale = vec![1.0f32; d];
+        let mut bias = vec![0.0f32; d];
+        for c in 0..d {
+            // Per-coordinate simple linear regression y* ≈ a·y + b.
+            let (mut sy, mut syy, mut st, mut syt) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+            for r in 0..got.rows {
+                let y = got.at(r, c) as f64;
+                let t = dense_out.at(r, c) as f64;
+                sy += y;
+                syy += y * y;
+                st += t;
+                syt += y * t;
+            }
+            let var = syy - sy * sy / n;
+            if var > 1e-12 {
+                let a = (syt - sy * st / n) / var;
+                // Guard against degenerate fits on dead coordinates.
+                let a = a.clamp(0.0, 4.0);
+                scale[c] = a as f32;
+                bias[c] = ((st - a * sy) / n) as f32;
+            }
+        }
+        Self { inner, scale, bias }
+    }
+
+    fn correct(&self, out: &mut [f32]) {
+        for (v, (&a, &b)) in out.iter_mut().zip(self.scale.iter().zip(&self.bias)) {
+            *v = a * *v + b;
+        }
+    }
+}
+
+impl MlpAdapter for RecoveredMlp {
+    fn name(&self) -> &'static str {
+        "RaNA+recovery"
+    }
+
+    fn apply_tok(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = self.inner.apply_tok(x);
+        self.correct(&mut out);
+        out
+    }
+
+    fn apply_seq(&self, xs: &Mat) -> Mat {
+        let mut out = self.inner.apply_seq(xs);
+        for r in 0..out.rows {
+            let row = out.row_mut(r);
+            for (v, (&a, &b)) in row.iter_mut().zip(self.scale.iter().zip(&self.bias)) {
+                *v = a * *v + b;
+            }
+        }
+        out
+    }
+
+    fn flops(&self) -> MlpFlops {
+        let mut f = self.inner.flops();
+        f.act += 2.0 * self.scale.len() as f64; // the affine FMA
+        f
+    }
+}
+
+/// Wrap every adapted MLP of `model` with a fitted recovery correction,
+/// using the calibration eval sets. Returns the per-layer error before and
+/// after correction.
+pub fn apply_recovery(
+    model: &mut AdaptedModel,
+    calib: &super::calibrate::ModelCalib,
+) -> Vec<(f64, f64)> {
+    let mut deltas = Vec::new();
+    for l in 0..model.base.cfg.n_layers {
+        if model.mlp[l].is_none() {
+            deltas.push((0.0, 0.0));
+            continue;
+        }
+        let lc = &calib.layers[l];
+        let xs = lc.mlp_in_eval.transpose();
+        let inner = model.mlp[l].take().unwrap();
+        let before = super::rana::normalized_err(&inner.apply_seq(&xs), &lc.mlp_out_eval);
+        let rec = RecoveredMlp::fit(inner, &xs, &lc.mlp_out_eval);
+        let after = super::rana::normalized_err(&rec.apply_seq(&xs), &lc.mlp_out_eval);
+        model.mlp[l] = Some(Box::new(rec));
+        deltas.push((before, after));
+    }
+    deltas
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapters::calibrate::{adapt, collect, CalibOptions, Method};
+    use crate::adapters::test_support::tiny_model;
+    use crate::model::Arch;
+    use std::sync::Arc;
+
+    #[test]
+    fn recovery_never_hurts_calibration_error() {
+        let m = tiny_model(Arch::SwiGlu, 701);
+        let tokens: Vec<u32> = (0..1200).map(|i| (i * 13 % 48) as u32).collect();
+        let calib =
+            collect(&m, &tokens, &CalibOptions { n_fit: 96, n_eval: 32, window: 24, seed: 3 });
+        let (mut adapted, _) = adapt(Arc::clone(&m), &calib, Method::Rana, 0.35, 32, 5);
+        let deltas = apply_recovery(&mut adapted, &calib);
+        for (l, (before, after)) in deltas.iter().enumerate() {
+            assert!(
+                after <= &(before + 1e-9),
+                "layer {l}: recovery made it worse ({before} → {after})"
+            );
+        }
+    }
+
+    #[test]
+    fn recovered_tok_and_seq_agree() {
+        let m = tiny_model(Arch::SwiGlu, 703);
+        let tokens: Vec<u32> = (0..1200).map(|i| (i * 17 % 48) as u32).collect();
+        let calib =
+            collect(&m, &tokens, &CalibOptions { n_fit: 96, n_eval: 32, window: 24, seed: 5 });
+        let (mut adapted, _) = adapt(Arc::clone(&m), &calib, Method::Rana, 0.35, 32, 7);
+        apply_recovery(&mut adapted, &calib);
+        let ad = adapted.mlp[0].as_ref().unwrap();
+        let mut rng = crate::util::rng::Xoshiro256::new(9);
+        let xs = Mat::gaussian(3, m.cfg.d_model, 1.0, &mut rng);
+        let seq = ad.apply_seq(&xs);
+        for r in 0..3 {
+            crate::util::prop::close_slices(&ad.apply_tok(xs.row(r)), seq.row(r), 1e-4, 1e-3)
+                .unwrap();
+        }
+    }
+}

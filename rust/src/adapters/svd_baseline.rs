@@ -1,0 +1,199 @@
+//! Plain truncated-SVD baseline (the "SVD" comparator of Fig. 3):
+//! `W ≈ U_r (U_rᵀ W)` from the SVD of `W` itself — *not* data-aware and
+//! *not* adaptive. Included to isolate how much of RaNA's win comes from
+//! (a) calibration-aware factors (Theorem 1) and (b) input-adaptive
+//! masking.
+
+use super::calibrate::LayerCalib;
+use super::rana::normalized_err;
+use super::{split3, split3_seq, MlpAdapter, QkvAdapter};
+use crate::flops::{self, LinearFlops, MlpFlops};
+use crate::model::{ops, Arch, LayerWeights};
+use crate::tensor::linalg::left_sv;
+use crate::tensor::Mat;
+
+/// `W ≈ A (B x)` with `A = U_r`, `B = U_rᵀ W` from SVD(W).
+pub struct SvdLinear {
+    b: Mat,  // r × i
+    a: Mat,  // o × r
+    at: Mat, // r × o
+    bt: Mat, // i × r
+}
+
+impl SvdLinear {
+    pub fn build(w: &Mat, budget: f64, seed: u64) -> Self {
+        let (o, i) = (w.rows, w.cols);
+        let r = ((budget / (2.0 * (i + o) as f64)).floor() as usize).clamp(1, o.min(i));
+        let svd = left_sv(w, r, 2, seed);
+        let a = svd.u; // o × r
+        let b = a.transpose().matmul(w); // r × i
+        let at = a.transpose();
+        let bt = b.transpose();
+        Self { b, a, at, bt }
+    }
+
+    pub fn apply_tok(&self, x: &[f32]) -> Vec<f32> {
+        self.a.matvec(&self.b.matvec(x))
+    }
+
+    pub fn apply_seq(&self, xs: &Mat) -> Mat {
+        xs.matmul(&self.bt).matmul(&self.at)
+    }
+
+    pub fn flops(&self) -> LinearFlops {
+        let r = self.b.rows;
+        LinearFlops {
+            masker: 0.0,
+            main: flops::linear(r, self.b.cols) + flops::linear(self.a.rows, r),
+        }
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.a.rows
+    }
+
+    /// Relative reconstruction error vs the dense layer on eval inputs.
+    pub fn eval_error(&self, w: &Mat, x_eval: &Mat) -> f64 {
+        let xs = x_eval.transpose();
+        normalized_err(&self.apply_seq(&xs), &xs.matmul(&w.transpose()))
+    }
+}
+
+/// SVD-adapted MLP (Fig. 3 comparator).
+pub struct SvdMlp {
+    arch: Arch,
+    up: SvdLinear,
+    gate: Option<SvdLinear>,
+    down: SvdLinear,
+}
+
+impl SvdMlp {
+    pub fn build(
+        arch: Arch,
+        lw: &LayerWeights,
+        calib: &LayerCalib,
+        budget: f64,
+        seed: u64,
+    ) -> (Self, f64) {
+        let (fu, fg, fd) = match arch {
+            Arch::SwiGlu => (1.0 / 3.0, 1.0 / 3.0, 1.0 / 3.0),
+            Arch::GeluNeoX => (0.5, 0.0, 0.5),
+        };
+        let up = SvdLinear::build(&lw.up.w, budget * fu, seed);
+        let gate = lw.gate.as_ref().map(|g| SvdLinear::build(&g.w, budget * fg, seed ^ 0x41));
+        let down = SvdLinear::build(&lw.down.w, budget * fd, seed ^ 0x42);
+        let mlp = Self { arch, up, gate, down };
+        let xs = calib.mlp_in_eval.transpose();
+        let err = normalized_err(&mlp.apply_seq(&xs), &calib.mlp_out_eval);
+        (mlp, err)
+    }
+}
+
+impl MlpAdapter for SvdMlp {
+    fn name(&self) -> &'static str {
+        "SVD"
+    }
+
+    fn apply_tok(&self, x: &[f32]) -> Vec<f32> {
+        let inter: Vec<f32> = match self.arch {
+            Arch::SwiGlu => {
+                let up = self.up.apply_tok(x);
+                let gate = self.gate.as_ref().unwrap().apply_tok(x);
+                up.iter().zip(&gate).map(|(&u, &g)| u * ops::silu(g)).collect()
+            }
+            Arch::GeluNeoX => self.up.apply_tok(x).iter().map(|&v| ops::gelu(v)).collect(),
+        };
+        self.down.apply_tok(&inter)
+    }
+
+    fn apply_seq(&self, xs: &Mat) -> Mat {
+        let inter = match self.arch {
+            Arch::SwiGlu => {
+                let mut up = self.up.apply_seq(xs);
+                let gate = self.gate.as_ref().unwrap().apply_seq(xs);
+                for (v, g) in up.data.iter_mut().zip(&gate.data) {
+                    *v *= ops::silu(*g);
+                }
+                up
+            }
+            Arch::GeluNeoX => {
+                let mut up = self.up.apply_seq(xs);
+                for v in up.data.iter_mut() {
+                    *v = ops::gelu(*v);
+                }
+                up
+            }
+        };
+        self.down.apply_seq(&inter)
+    }
+
+    fn flops(&self) -> MlpFlops {
+        MlpFlops {
+            up: self.up.flops(),
+            gate: self.gate.as_ref().map(|g| g.flops()).unwrap_or_default(),
+            down: self.down.flops(),
+            act: 2.0 * self.up.out_dim() as f64,
+        }
+    }
+}
+
+/// SVD-adapted fused QKV (Fig. 3d comparator).
+pub struct SvdQkv {
+    lin: SvdLinear,
+}
+
+impl SvdQkv {
+    pub fn build(fused_w: &Mat, calib: &LayerCalib, budget: f64, seed: u64) -> (Self, f64) {
+        let lin = SvdLinear::build(fused_w, budget, seed);
+        let xs = calib.qkv_in_eval.transpose();
+        let err = normalized_err(&lin.apply_seq(&xs), &calib.qkv_out_eval);
+        (Self { lin }, err)
+    }
+}
+
+impl QkvAdapter for SvdQkv {
+    fn name(&self) -> &'static str {
+        "SVD"
+    }
+
+    fn apply_tok(&self, x: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        split3(self.lin.apply_tok(x))
+    }
+
+    fn apply_seq(&self, xs: &Mat) -> (Mat, Mat, Mat) {
+        split3_seq(&self.lin.apply_seq(xs))
+    }
+
+    fn flops(&self) -> LinearFlops {
+        self.lin.flops()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapters::calibrate::{collect, CalibOptions};
+    use crate::adapters::test_support::tiny_model;
+
+    #[test]
+    fn svd_linear_full_rank_is_exact() {
+        let m = tiny_model(Arch::SwiGlu, 131);
+        let w = &m.w.layers[0].up.w;
+        let lin = SvdLinear::build(w, f64::MAX / 4.0, 1);
+        let mut rng = crate::util::rng::Xoshiro256::new(6);
+        let x: Vec<f32> = (0..w.cols).map(|_| rng.gaussian()).collect();
+        crate::util::prop::close_slices(&lin.apply_tok(&x), &w.matvec(&x), 5e-3, 5e-3).unwrap();
+    }
+
+    #[test]
+    fn svd_mlp_builds_within_budget() {
+        let m = tiny_model(Arch::SwiGlu, 133);
+        let tokens: Vec<u32> = (0..800).map(|i| (i * 31 % 48) as u32).collect();
+        let calib =
+            collect(&m, &tokens, &CalibOptions { n_fit: 96, n_eval: 24, window: 24, seed: 23 });
+        let budget = MlpFlops::dense_swiglu(m.cfg.d_model, m.cfg.d_hidden).total() * 0.5;
+        let (mlp, err) = SvdMlp::build(Arch::SwiGlu, &m.w.layers[0], &calib.layers[0], budget, 2);
+        assert!(err.is_finite() && err >= 0.0);
+        assert!(mlp.flops().total() <= budget * 1.1);
+    }
+}

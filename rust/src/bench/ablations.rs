@@ -1,0 +1,199 @@
+//! Design-choice ablations beyond the paper's Tab. 3 — the decisions
+//! DESIGN.md §4 calls out, each isolated at matched FLOP budgets:
+//!
+//! * **abl-down**: why neuron thresholding (Eqn. 12) on Down-Projections
+//!   instead of a rank adapter — the B-masker's `Bx` cost eats the whole
+//!   budget on short/wide matrices (paper §4.2, first paragraph).
+//! * **abl-masker**: B-masker vs learned MLP-sigmoid masker on the same
+//!   rank decomposition (the Fig. 3d comparison, isolated per layer).
+//! * **abl-dataaware**: SVD(WX) vs SVD(W) factors under the same B-masker
+//!   (what Theorem 1's data-awareness buys).
+//! * **abl-calib**: reconstruction error vs calibration-set size
+//!   (robustness of the paper's k = 32 000 choice at our scale).
+
+use super::experiments::{Opts, Workbench};
+use super::harness::Table;
+use crate::adapters::calibrate::{collect, CalibOptions};
+use crate::adapters::llra::LlraLinear;
+use crate::adapters::neuron_threshold::NeuronThresholdAdapter;
+use crate::adapters::rana::normalized_err;
+use crate::adapters::rank_adapter::RankPrecomp;
+use crate::flops;
+
+fn pct(x: f64) -> String {
+    format!("{:.2}%", x * 100.0)
+}
+
+/// Down-Projection: rank adapter vs neuron thresholding at 50 % FLOPs.
+pub fn abl_down(opts: Opts) -> anyhow::Result<()> {
+    println!("\n== Ablation: Down-Projection adapter choice @ 50% layer FLOPs ==");
+    let wb = Workbench::load("llama-sim", opts)?;
+    let cfg = &wb.model.cfg;
+    let mut t = Table::new(&["Layer", "rank-adapter err", "neuron-threshold err"]);
+    for l in 0..cfg.n_layers {
+        let w = &wb.model.w.layers[l].down.w; // d × h (short/wide)
+        let lc = &wb.calib.layers[l];
+        let budget = 0.5 * flops::linear(w.rows, w.cols);
+        // Rank adapter on the down projection (what RaNA deliberately avoids).
+        let k = lc.down_in_fit.cols;
+        let split = (k * 7) / 8;
+        let fit = crate::tensor::Mat::from_fn(w.cols, split, |r, c| lc.down_in_fit.at(r, c));
+        let eval = crate::tensor::Mat::from_fn(w.cols, k - split, |r, c| {
+            lc.down_in_fit.at(r, split + c)
+        });
+        let pre = RankPrecomp::new(w, &fit, &eval, opts.seed);
+        let (_, rank_err) = pre.adapter_for_budget(budget);
+        // Neuron thresholding (the paper's choice).
+        let nt = NeuronThresholdAdapter::build(w, &fit, budget);
+        let got = nt.apply_seq(&eval.transpose());
+        let want = eval.transpose().matmul(&w.transpose());
+        let nt_err = normalized_err(&got, &want);
+        t.row(vec![format!("{l}"), pct(rank_err), pct(nt_err)]);
+    }
+    t.print();
+    println!("(expected: neuron thresholding wins on short/wide Down matrices — §4.2)");
+    Ok(())
+}
+
+/// B-masker vs trained MLP-sigmoid masker on the Up-Projection rank space.
+pub fn abl_masker(opts: Opts) -> anyhow::Result<()> {
+    println!("\n== Ablation: B-masker vs MLP-sigmoid masker @ 50% layer FLOPs ==");
+    let wb = Workbench::load("llama-sim", opts)?;
+    let cfg = &wb.model.cfg;
+    let mut t = Table::new(&["Layer", "B-masker err", "MLP-sigmoid (LLRA) err"]);
+    for l in 0..cfg.n_layers {
+        let w = &wb.model.w.layers[l].up.w;
+        let lc = &wb.calib.layers[l];
+        let budget = 0.5 * flops::linear(w.rows, w.cols);
+        let pre = RankPrecomp::new(w, &lc.mlp_in_fit, &lc.mlp_in_eval, opts.seed);
+        let (_, b_err) = pre.adapter_for_budget(budget);
+        let (_, s_err) =
+            LlraLinear::build(w, &lc.mlp_in_fit, &lc.mlp_in_eval, budget, opts.seed);
+        t.row(vec![format!("{l}"), pct(b_err), pct(s_err)]);
+    }
+    t.print();
+    println!("(expected: exact B-masker beats the learned predictor — Fig. 3d)");
+    Ok(())
+}
+
+/// SVD(WX) vs SVD(W) factors, both with the B-masker, at 50 % FLOPs.
+pub fn abl_dataaware(opts: Opts) -> anyhow::Result<()> {
+    println!("\n== Ablation: data-aware SVD(WX) vs plain SVD(W) factors ==");
+    let wb = Workbench::load("llama-sim", opts)?;
+    let cfg = &wb.model.cfg;
+    let mut t = Table::new(&["Layer", "SVD(WX) err", "SVD(W) err"]);
+    for l in 0..cfg.n_layers {
+        let w = &wb.model.w.layers[l].up.w;
+        let lc = &wb.calib.layers[l];
+        let budget = 0.5 * flops::linear(w.rows, w.cols);
+        let pre = RankPrecomp::new(w, &lc.mlp_in_fit, &lc.mlp_in_eval, opts.seed);
+        let (_, aware_err) = pre.adapter_for_budget(budget);
+        // Plain: X = I for the factor step, same masker machinery.
+        let eye = crate::tensor::Mat::eye(w.cols);
+        let pre_plain = RankPrecomp::new_with_basis(w, &eye, &lc.mlp_in_fit, &lc.mlp_in_eval, opts.seed);
+        let (_, plain_err) = pre_plain.adapter_for_budget(budget);
+        t.row(vec![format!("{l}"), pct(aware_err), pct(plain_err)]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Reconstruction error vs calibration size (k sensitivity).
+pub fn abl_calib(opts: Opts) -> anyhow::Result<()> {
+    println!("\n== Ablation: calibration-set size sensitivity (Up-Projection, layer 1) ==");
+    let model =
+        std::sync::Arc::new(crate::model::Model::load(&crate::model::model_dir("llama-sim"))?);
+    let corpus = crate::data::generate_corpus(600_000, 2_000);
+    let mut t = Table::new(&["k_fit", "RaNA MLP err @50%"]);
+    for &k in &[128usize, 512, 2048] {
+        let calib = collect(
+            &model,
+            &corpus.train,
+            &CalibOptions { n_fit: k, n_eval: 192, window: 128, seed: opts.seed },
+        );
+        let cfg = &model.cfg;
+        let lw = &model.w.layers[1];
+        let b = crate::adapters::rana::RanaMlpBuilder::new(cfg.arch, lw, &calib.layers[1], opts.seed);
+        let (_, err) = b.build(b.dense_flops() * 0.5, true);
+        t.row(vec![format!("{k}"), pct(err)]);
+    }
+    t.print();
+    Ok(())
+}
+
+pub fn all(opts: Opts) -> anyhow::Result<()> {
+    abl_down(opts)?;
+    abl_masker(opts)?;
+    abl_dataaware(opts)?;
+    abl_calib(opts)
+}
+
+/// Extension: model-level FLOP allocation (paper future work §6) vs the
+/// uniform per-layer allocation, at matched total compression.
+pub fn ext_model_alloc(opts: Opts) -> anyhow::Result<()> {
+    println!("\n== Extension: model-level FLOP allocation vs uniform (llama-sim) ==");
+    let wb = Workbench::load("llama-sim", opts)?;
+    let mut t = Table::new(&["Variant", "Compression", "Avg Acc", "PPL", "per-layer mlp keep"]);
+    for &rate in &[0.3, 0.45] {
+        let (uniform, rep_u) =
+            wb.adapt(crate::adapters::calibrate::Method::Rana, rate);
+        let row_u = wb.eval_row(&uniform, Some(&rep_u));
+        t.row(vec![
+            "uniform".into(),
+            pct(rep_u.total_compression),
+            pct(row_u.avg),
+            format!("{:.2}", row_u.ppl),
+            "-".into(),
+        ]);
+        let (alloc, rep_a, fractions) = crate::adapters::model_alloc::adapt_model_level(
+            std::sync::Arc::clone(&wb.model),
+            &wb.calib,
+            rate,
+            opts.seq_len,
+            opts.seed,
+        );
+        let row_a = wb.eval_row(&alloc, Some(&rep_a));
+        let keeps: Vec<String> =
+            fractions.iter().map(|(m, _)| format!("{m:.2}")).collect();
+        t.row(vec![
+            "model-level".into(),
+            pct(rep_a.total_compression),
+            pct(row_a.avg),
+            format!("{:.2}", row_a.ppl),
+            keeps.join("/"),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Extension: recovery calibration (stand-in for the paper's fine-tune).
+pub fn ext_recovery(opts: Opts) -> anyhow::Result<()> {
+    println!("\n== Extension: affine recovery calibration (fine-tune stand-in) ==");
+    let wb = Workbench::load("llama-sim", opts)?;
+    let mut t = Table::new(&["Variant", "Compression", "PPL"]);
+    for &rate in &[0.42] {
+        let (mut m, rep) = wb.adapt(crate::adapters::calibrate::Method::Rana, rate);
+        let ppl_before =
+            crate::eval::perplexity(&m, &wb.heldout, opts.ppl_tokens, 256);
+        t.row(vec!["RaNA".into(), pct(rep.total_compression), format!("{ppl_before:.3}")]);
+        let deltas = crate::adapters::recovery::apply_recovery(&mut m, &wb.calib);
+        let ppl_after = crate::eval::perplexity(&m, &wb.heldout, opts.ppl_tokens, 256);
+        t.row(vec![
+            "RaNA + recovery".into(),
+            pct(rep.total_compression),
+            format!("{ppl_after:.3}"),
+        ]);
+        let mean_before: f64 =
+            deltas.iter().map(|(b, _)| b).sum::<f64>() / deltas.len() as f64;
+        let mean_after: f64 =
+            deltas.iter().map(|(_, a)| a).sum::<f64>() / deltas.len() as f64;
+        println!(
+            "mean layer reconstruction err: {:.2}% → {:.2}%",
+            mean_before * 100.0,
+            mean_after * 100.0
+        );
+    }
+    t.print();
+    Ok(())
+}

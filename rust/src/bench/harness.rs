@@ -1,0 +1,115 @@
+//! Criterion-style timing harness (criterion itself is unreachable offline).
+
+use std::time::{Duration, Instant};
+
+/// Timing summary of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+}
+
+/// Time `f` with warmup; adapts iteration count to the target budget.
+pub fn bench<F: FnMut()>(name: &str, target: Duration, mut f: F) -> Summary {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(100));
+    let iters = ((target.as_secs_f64() / once.as_secs_f64()).ceil() as usize).clamp(3, 10_000);
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    Summary {
+        name: name.to_string(),
+        iters,
+        mean,
+        p50: samples[iters / 2],
+        p99: samples[(iters * 99) / 100],
+    }
+}
+
+impl Summary {
+    pub fn print(&self) {
+        println!(
+            "{:<42} {:>10.3?} mean  {:>10.3?} p50  {:>10.3?} p99  ({} iters)",
+            self.name, self.mean, self.p50, self.p99, self.iters
+        );
+    }
+}
+
+/// Simple aligned table printer for paper-style outputs.
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Print just the most recent row (progress feedback in long sweeps).
+    pub fn print_last(&self) {
+        if let Some(row) = self.rows.last() {
+            println!("  ... {}", row.join("  "));
+        }
+    }
+
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("| {:<w$} ", c, w = widths.get(i).copied().unwrap_or(8)));
+            }
+            s.push('|');
+            s
+        };
+        println!("{}", line(&self.headers));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("{}", line(&sep));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_quantiles() {
+        let s = bench("noop-ish", Duration::from_millis(20), || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.iters >= 3);
+        assert!(s.p50 <= s.p99);
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["Method", "PPL"]);
+        t.row(vec!["RaNA".into(), "8.04".into()]);
+        t.print();
+    }
+}

@@ -1,0 +1,4 @@
+//! Bench harness + paper experiment drivers.
+pub mod ablations;
+pub mod experiments;
+pub mod harness;

@@ -1,0 +1,276 @@
+//! Continuous batcher + adaptive rank-budget controller.
+//!
+//! Requests enter an admission queue; the batcher thread drains it,
+//! groups compatible scoring jobs into engine batches (up to `max_batch`,
+//! bounded wait), and runs generation jobs on the engine between batches.
+//!
+//! The **adaptive rank-budget controller** implements the paper's
+//! future-work §6 item ("a FLOP allocation strategy at the model level"):
+//! under load it routes batches to more-compressed RaNA variants, trading
+//! a little accuracy for throughput; idle traffic gets the dense model.
+
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::engine::Engine;
+use super::metrics::Metrics;
+use crate::util::json::Json;
+
+/// A unit of work submitted to the coordinator.
+pub enum Op {
+    Score { text: String },
+    Generate { prompt: String, n: usize },
+    Stats,
+}
+
+pub struct Job {
+    pub op: Op,
+    pub resp: mpsc::Sender<Json>,
+    pub arrived: Instant,
+}
+
+/// A ladder of engines ordered by compression rate (index 0 = dense).
+pub struct BudgetLadder {
+    pub engines: Vec<(f64, Arc<dyn Engine>)>,
+    /// Queue-depth thresholds: depth ≥ thresholds[i] → use engine i+1.
+    pub thresholds: Vec<usize>,
+}
+
+impl BudgetLadder {
+    pub fn single(engine: Arc<dyn Engine>) -> Self {
+        Self { engines: vec![(0.0, engine)], thresholds: vec![] }
+    }
+
+    /// Pick an engine for the current queue depth.
+    pub fn pick(&self, depth: usize) -> (f64, &Arc<dyn Engine>) {
+        let mut idx = 0;
+        for (i, &t) in self.thresholds.iter().enumerate() {
+            if depth >= t {
+                idx = (i + 1).min(self.engines.len() - 1);
+            }
+        }
+        let (rate, e) = &self.engines[idx];
+        (*rate, e)
+    }
+}
+
+pub struct Batcher {
+    tx: Mutex<Option<mpsc::Sender<Job>>>,
+    queue: Arc<Mutex<Option<mpsc::Receiver<Job>>>>,
+    pub metrics: Arc<Metrics>,
+    max_batch: usize,
+    ladder: Arc<BudgetLadder>,
+    batch_wait: Duration,
+}
+
+impl Batcher {
+    pub fn new(ladder: BudgetLadder, max_batch: usize) -> Self {
+        let (tx, rx) = mpsc::channel();
+        Self {
+            tx: Mutex::new(Some(tx)),
+            queue: Arc::new(Mutex::new(Some(rx))),
+            metrics: Arc::new(Metrics::new()),
+            max_batch: max_batch.max(1),
+            ladder: Arc::new(ladder),
+            batch_wait: Duration::from_millis(2),
+        }
+    }
+
+    /// Handle used by the server / in-process clients to submit work.
+    pub fn submitter(&self) -> mpsc::Sender<Job> {
+        self.tx.lock().unwrap().as_ref().expect("batcher closed").clone()
+    }
+
+    /// Drop the batcher's own sender: `run` exits once all external
+    /// submitters are gone too. Required for clean shutdown because the
+    /// batcher outlives the server loop via its `Arc`.
+    pub fn close(&self) {
+        self.tx.lock().unwrap().take();
+    }
+
+    /// Run the batching loop until all submitters hang up.
+    /// Call from a dedicated thread.
+    pub fn run(&self) {
+        let rx = self
+            .queue
+            .lock()
+            .unwrap()
+            .take()
+            .expect("Batcher::run called twice");
+        let mut pending: Vec<Job> = Vec::new();
+        loop {
+            // Block for the first job (or shut down on disconnect).
+            if pending.is_empty() {
+                match rx.recv() {
+                    Ok(j) => pending.push(j),
+                    Err(_) => return,
+                }
+            }
+            // Bounded wait to fill the batch.
+            let deadline = Instant::now() + self.batch_wait;
+            while pending.len() < self.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(j) => pending.push(j),
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            // Drain whatever is immediately available up to the cap.
+            while pending.len() < self.max_batch {
+                match rx.try_recv() {
+                    Ok(j) => pending.push(j),
+                    Err(_) => break,
+                }
+            }
+            self.metrics.queue_depth.store(pending.len() as u64, Ordering::Relaxed);
+            let batch: Vec<Job> = pending.drain(..).collect();
+            self.execute(batch);
+        }
+    }
+
+    fn execute(&self, jobs: Vec<Job>) {
+        let depth = jobs.len();
+        let (rate, engine) = self.ladder.pick(depth);
+        self.metrics
+            .rank_budget_milli
+            .store((rate * 1000.0) as u64, Ordering::Relaxed);
+        self.metrics.batches.fetch_add(1, Ordering::Relaxed);
+        self.metrics.batched_jobs.fetch_add(depth as u64, Ordering::Relaxed);
+
+        // Partition: score jobs batch together, generation jobs batch
+        // together (request-level continuous batching); stats are instant.
+        let mut score_jobs: Vec<Job> = Vec::new();
+        let mut gen_jobs: Vec<(Job, String, usize)> = Vec::new();
+        for job in jobs {
+            self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+            match job.op {
+                Op::Score { .. } => score_jobs.push(job),
+                Op::Generate { ref prompt, n } => {
+                    let p = prompt.clone();
+                    gen_jobs.push((job, p, n));
+                }
+                Op::Stats => {
+                    let _ = job.resp.send(self.metrics.snapshot());
+                    self.metrics.observe_latency(job.arrived.elapsed());
+                }
+            }
+        }
+        if !gen_jobs.is_empty() {
+            let prompts: Vec<(String, usize)> =
+                gen_jobs.iter().map(|(_, p, n)| (p.clone(), *n)).collect();
+            let outs = engine.generate_batch(&prompts);
+            for ((job, _, n), out) in gen_jobs.into_iter().zip(outs) {
+                self.metrics.tokens_generated.fetch_add(n as u64, Ordering::Relaxed);
+                self.metrics.observe_latency(job.arrived.elapsed());
+                let _ = job.resp.send(Json::obj(vec![
+                    ("text", Json::Str(out)),
+                    ("engine", Json::Str(engine.name())),
+                ]));
+            }
+        }
+        if !score_jobs.is_empty() {
+            let texts: Vec<String> = score_jobs
+                .iter()
+                .map(|j| match &j.op {
+                    Op::Score { text } => text.clone(),
+                    _ => unreachable!(),
+                })
+                .collect();
+            let scores = engine.score_batch(&texts);
+            for (job, score) in score_jobs.into_iter().zip(scores) {
+                self.metrics.observe_latency(job.arrived.elapsed());
+                let _ = job.resp.send(Json::obj(vec![
+                    ("logprob", Json::Num(score)),
+                    ("engine", Json::Str(engine.name())),
+                    ("rank_budget", Json::Num(rate)),
+                ]));
+            }
+        }
+    }
+}
+
+/// In-process client: submit one op and wait for the response.
+pub fn call(tx: &mpsc::Sender<Job>, op: Op) -> anyhow::Result<Json> {
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Job { op, resp: rtx, arrived: Instant::now() })
+        .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
+    rrx.recv_timeout(Duration::from_secs(120))
+        .map_err(|_| anyhow::anyhow!("coordinator response timeout"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapters::test_support::tiny_model;
+    use crate::adapters::AdaptedModel;
+    use crate::coordinator::engine::NativeEngine;
+    use crate::model::Arch;
+
+    fn start_batcher(max_batch: usize) -> (Arc<Batcher>, mpsc::Sender<Job>) {
+        let m = tiny_model(Arch::SwiGlu, 401);
+        let engine: Arc<dyn Engine> =
+            Arc::new(NativeEngine::new(Arc::new(AdaptedModel::unadapted(m))));
+        let batcher = Arc::new(Batcher::new(BudgetLadder::single(engine), max_batch));
+        let tx = batcher.submitter();
+        let b2 = Arc::clone(&batcher);
+        std::thread::spawn(move || b2.run());
+        (batcher, tx)
+    }
+
+    #[test]
+    fn score_and_generate_roundtrip() {
+        let (_b, tx) = start_batcher(4);
+        let r = call(&tx, Op::Score { text: "hello world".into() }).unwrap();
+        assert!(r.get_f64("logprob").unwrap() < 0.0);
+        let g = call(&tx, Op::Generate { prompt: "ab".into(), n: 3 }).unwrap();
+        assert!(g.get_str("text").unwrap().starts_with("ab"));
+    }
+
+    #[test]
+    fn concurrent_jobs_get_batched() {
+        let (b, tx) = start_batcher(8);
+        let handles: Vec<_> = (0..16)
+            .map(|i| {
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    call(&tx, Op::Score { text: format!("request number {i}") }).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            let r = h.join().unwrap();
+            assert!(r.get_f64("logprob").unwrap().is_finite());
+        }
+        let batches = b.metrics.batches.load(Ordering::Relaxed);
+        let jobs = b.metrics.batched_jobs.load(Ordering::Relaxed);
+        assert_eq!(jobs, 16);
+        assert!(batches < 16, "expected batching, got {batches} batches for 16 jobs");
+    }
+
+    #[test]
+    fn stats_op_reports_counters() {
+        let (_b, tx) = start_batcher(2);
+        call(&tx, Op::Score { text: "x y z".into() }).unwrap();
+        let s = call(&tx, Op::Stats).unwrap();
+        assert!(s.get_f64("requests").unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn budget_ladder_picks_by_depth() {
+        let m = tiny_model(Arch::SwiGlu, 403);
+        let e: Arc<dyn Engine> =
+            Arc::new(NativeEngine::new(Arc::new(AdaptedModel::unadapted(m))));
+        let ladder = BudgetLadder {
+            engines: vec![(0.0, Arc::clone(&e)), (0.3, Arc::clone(&e)), (0.5, e)],
+            thresholds: vec![4, 8],
+        };
+        assert_eq!(ladder.pick(1).0, 0.0);
+        assert_eq!(ladder.pick(5).0, 0.3);
+        assert_eq!(ladder.pick(20).0, 0.5);
+    }
+}

@@ -1,0 +1,251 @@
+//! Engine abstraction: the coordinator schedules work onto an [`Engine`],
+//! which is either the pure-rust **native** engine (dense or adapted model,
+//! real masked skipping on the decode path) or the **PJRT** engine running
+//! AOT-compiled HLO artifacts built by the python layer.
+
+use std::sync::Arc;
+
+use crate::adapters::AdaptedModel;
+use crate::data::tokenizer;
+use crate::model::{forward_seq, ops};
+use crate::runtime::EnginePool;
+use crate::util::pool::parallel_map;
+
+pub trait Engine: Send + Sync {
+    fn name(&self) -> String;
+    /// Total log-likelihood of each text (scoring workload).
+    fn score_batch(&self, texts: &[String]) -> Vec<f64>;
+    /// Greedy-decode `n` tokens after `prompt`.
+    fn generate(&self, prompt: &str, n: usize) -> String;
+    /// Batched generation: engines override when they can run requests
+    /// concurrently (the native engine decodes them in parallel, each with
+    /// its own KV cache); default is sequential.
+    fn generate_batch(&self, prompts: &[(String, usize)]) -> Vec<String> {
+        prompts.iter().map(|(p, n)| self.generate(p, *n)).collect()
+    }
+}
+
+/// Pure-rust engine over a (possibly adapted) model.
+pub struct NativeEngine {
+    pub model: Arc<AdaptedModel>,
+    label: String,
+}
+
+impl NativeEngine {
+    pub fn new(model: Arc<AdaptedModel>) -> Self {
+        let label = format!("native:{}", model.method);
+        Self { model, label }
+    }
+}
+
+impl Engine for NativeEngine {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn score_batch(&self, texts: &[String]) -> Vec<f64> {
+        parallel_map(texts.len(), |i| {
+            let toks = tokenizer::encode(&texts[i], true);
+            let max = self.model.base.cfg.max_seq;
+            let toks = &toks[..toks.len().min(max)];
+            if toks.len() < 2 {
+                return 0.0;
+            }
+            let logits = forward_seq(&*self.model, &toks[..toks.len() - 1], None);
+            let mut ll = 0.0;
+            for pos in 0..logits.rows {
+                ll += ops::log_softmax_at(logits.row(pos), toks[pos + 1] as usize);
+            }
+            ll
+        })
+    }
+
+    fn generate(&self, prompt: &str, n: usize) -> String {
+        crate::eval::greedy_decode(&*self.model, prompt, n)
+    }
+
+    /// Request-level continuous batching: every generation request decodes
+    /// on its own KV cache, in parallel across worker threads.
+    fn generate_batch(&self, prompts: &[(String, usize)]) -> Vec<String> {
+        parallel_map(prompts.len(), |i| {
+            let (p, n) = &prompts[i];
+            crate::eval::greedy_decode(&*self.model, p, *n)
+        })
+    }
+}
+
+/// PJRT engine handle. PJRT objects are `Rc`-based and must stay on one
+/// thread, so the engine is an **actor**: a dedicated thread owns the
+/// [`EnginePool`] (client created on that thread) and serves requests over
+/// channels; this handle is `Send + Sync`. Generation falls back to
+/// repeated bucket-forwards (prefill-style greedy) — the rust request path
+/// never touches python.
+pub struct PjrtScoreEngine {
+    tx: std::sync::Mutex<std::sync::mpsc::Sender<PjrtReq>>,
+    label: String,
+}
+
+enum PjrtReq {
+    Score(Vec<String>, std::sync::mpsc::Sender<Vec<f64>>),
+    Generate(String, usize, std::sync::mpsc::Sender<String>),
+}
+
+impl PjrtScoreEngine {
+    pub fn load(model: &str, variant: &str) -> anyhow::Result<Self> {
+        let (tx, rx) = std::sync::mpsc::channel::<PjrtReq>();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<anyhow::Result<()>>();
+        let model_s = model.to_string();
+        let variant_s = variant.to_string();
+        std::thread::Builder::new()
+            .name(format!("pjrt-{model}-{variant}"))
+            .spawn(move || {
+                let pool = match EnginePool::load(&model_s, &variant_s) {
+                    Ok(p) => {
+                        let _ = ready_tx.send(Ok(()));
+                        p
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        PjrtReq::Score(texts, resp) => {
+                            let _ = resp.send(score_on_pool(&pool, &texts));
+                        }
+                        PjrtReq::Generate(prompt, n, resp) => {
+                            let _ = resp.send(generate_on_pool(&pool, &prompt, n));
+                        }
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("pjrt thread died during load"))??;
+        Ok(Self {
+            tx: std::sync::Mutex::new(tx),
+            label: format!("pjrt:{model}:{variant}"),
+        })
+    }
+}
+
+/// Pad/truncate a token sequence to `len` (pad with BOS: padded positions'
+/// logits are ignored by scoring anyway).
+fn fit(toks: &[u32], len: usize) -> Vec<u32> {
+    let mut v = toks[..toks.len().min(len)].to_vec();
+    while v.len() < len {
+        v.push(tokenizer::BOS);
+    }
+    v
+}
+
+fn score_on_pool(pool: &EnginePool, texts: &[String]) -> Vec<f64> {
+    let toks: Vec<Vec<u32>> = texts.iter().map(|t| tokenizer::encode(t, true)).collect();
+    let max_len = toks.iter().map(|t| t.len()).max().unwrap_or(1);
+    let mut out = vec![0.0f64; texts.len()];
+    let mut idx = 0;
+    while idx < toks.len() {
+        let remaining = toks.len() - idx;
+        let engine = pool
+            .pick(remaining.min(8).max(1), max_len.min(512))
+            .or_else(|| pool.engines.iter().max_by_key(|e| e.batch * e.seq))
+            .expect("engine pool non-empty");
+        let take = remaining.min(engine.batch);
+        let mut batch: Vec<Vec<u32>> = Vec::with_capacity(engine.batch);
+        for j in 0..engine.batch {
+            let src = if j < take { &toks[idx + j] } else { &toks[idx] };
+            batch.push(fit(src, engine.seq));
+        }
+        if let Ok(logit_mats) = engine.forward(&batch) {
+            for j in 0..take {
+                let t = &toks[idx + j];
+                let n = t.len().min(engine.seq);
+                let mut ll = 0.0;
+                for pos in 1..n {
+                    ll += ops::log_softmax_at(logit_mats[j].row(pos - 1), t[pos] as usize);
+                }
+                out[idx + j] = ll;
+            }
+        }
+        idx += take;
+    }
+    out
+}
+
+fn generate_on_pool(pool: &EnginePool, prompt: &str, n: usize) -> String {
+    let mut toks = tokenizer::encode(prompt, true);
+    let engine = pool.engines.iter().max_by_key(|e| e.seq).expect("non-empty pool");
+    for _ in 0..n {
+        let len = toks.len().min(engine.seq);
+        let batch: Vec<Vec<u32>> =
+            (0..engine.batch).map(|_| fit(&toks, engine.seq)).collect();
+        let Ok(mats) = engine.forward(&batch) else { break };
+        let next = crate::eval::argmax(mats[0].row(len - 1)) as u32;
+        toks.push(next);
+        if toks.len() >= engine.seq {
+            break;
+        }
+    }
+    tokenizer::decode(&toks)
+}
+
+impl Engine for PjrtScoreEngine {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn score_batch(&self, texts: &[String]) -> Vec<f64> {
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        let ok = self
+            .tx
+            .lock()
+            .unwrap()
+            .send(PjrtReq::Score(texts.to_vec(), rtx))
+            .is_ok();
+        if !ok {
+            return vec![0.0; texts.len()];
+        }
+        rrx.recv().unwrap_or_else(|_| vec![0.0; texts.len()])
+    }
+
+    fn generate(&self, prompt: &str, n: usize) -> String {
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        let ok = self
+            .tx
+            .lock()
+            .unwrap()
+            .send(PjrtReq::Generate(prompt.to_string(), n, rtx))
+            .is_ok();
+        if !ok {
+            return prompt.to_string();
+        }
+        rrx.recv().unwrap_or_else(|_| prompt.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapters::test_support::tiny_model;
+    use crate::model::Arch;
+
+    #[test]
+    fn native_engine_scores_deterministically() {
+        let m = tiny_model(Arch::SwiGlu, 301);
+        let engine = NativeEngine::new(Arc::new(AdaptedModel::unadapted(m)));
+        let texts = vec!["abc def".to_string(), "xyz".to_string()];
+        let a = engine.score_batch(&texts);
+        let b = engine.score_batch(&texts);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|s| s.is_finite() && *s < 0.0));
+    }
+
+    #[test]
+    fn native_engine_generates() {
+        let m = tiny_model(Arch::SwiGlu, 303);
+        let engine = NativeEngine::new(Arc::new(AdaptedModel::unadapted(m)));
+        let out = engine.generate("ab", 4);
+        assert!(out.starts_with("ab"));
+    }
+}

@@ -1,0 +1,115 @@
+//! Serving metrics: lock-free counters and a coarse latency histogram,
+//! snapshotted to JSON for the `stats` op and the benches.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Upper edges of the latency histogram buckets, in microseconds.
+/// Samples above the last edge clamp into the last bucket.
+pub const LATENCY_EDGES_US: [u64; 10] =
+    [100, 300, 1_000, 3_000, 10_000, 30_000, 100_000, 300_000, 1_000_000, 3_000_000];
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_jobs: AtomicU64,
+    pub tokens_generated: AtomicU64,
+    pub queue_depth: AtomicU64,
+    pub rank_budget_milli: AtomicU64, // current compression rate ×1000
+    latency: [AtomicU64; 10],
+    latency_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe_latency(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = LATENCY_EDGES_US.iter().position(|&e| us <= e).unwrap_or(9);
+        self.latency[idx].fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+        self.responses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Approximate latency quantile from the histogram (upper-edge bound).
+    pub fn latency_quantile_us(&self, q: f64) -> u64 {
+        let counts: Vec<u64> = self.latency.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return LATENCY_EDGES_US[i];
+            }
+        }
+        LATENCY_EDGES_US[9]
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.responses.load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
+            ("responses", Json::Num(self.responses.load(Ordering::Relaxed) as f64)),
+            ("batches", Json::Num(self.batches.load(Ordering::Relaxed) as f64)),
+            ("batched_jobs", Json::Num(self.batched_jobs.load(Ordering::Relaxed) as f64)),
+            (
+                "tokens_generated",
+                Json::Num(self.tokens_generated.load(Ordering::Relaxed) as f64),
+            ),
+            ("queue_depth", Json::Num(self.queue_depth.load(Ordering::Relaxed) as f64)),
+            (
+                "rank_budget",
+                Json::Num(self.rank_budget_milli.load(Ordering::Relaxed) as f64 / 1000.0),
+            ),
+            ("mean_latency_us", Json::Num(self.mean_latency_us())),
+            ("p50_latency_us", Json::Num(self.latency_quantile_us(0.5) as f64)),
+            ("p99_latency_us", Json::Num(self.latency_quantile_us(0.99) as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_are_monotone() {
+        let m = Metrics::new();
+        for us in [50u64, 200, 500, 2_000, 5_000, 20_000, 50_000, 200_000] {
+            m.observe_latency(Duration::from_micros(us));
+        }
+        let p50 = m.latency_quantile_us(0.5);
+        let p99 = m.latency_quantile_us(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 >= 1_000 && p99 >= 100_000, "p50={p50} p99={p99}");
+        assert!(m.mean_latency_us() > 0.0);
+    }
+
+    #[test]
+    fn snapshot_has_all_keys() {
+        let m = Metrics::new();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        let s = m.snapshot();
+        for key in ["requests", "p99_latency_us", "rank_budget", "queue_depth"] {
+            assert!(s.get(key).is_ok(), "missing {key}");
+        }
+    }
+}

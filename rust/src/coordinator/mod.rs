@@ -1,0 +1,218 @@
+//! Layer-3 serving coordinator.
+//!
+//! A vLLM-router-shaped serving stack scaled to this reproduction:
+//! TCP line-protocol front end → admission queue → continuous batcher →
+//! engine (native masked-skipping or PJRT AOT artifacts), with an adaptive
+//! rank-budget controller that implements the paper's future-work item of
+//! model-level FLOP allocation under load. Python is never on this path —
+//! after `make artifacts` the binary is self-contained.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod workload;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+
+use batcher::{Batcher, BudgetLadder, Job, Op};
+use engine::{Engine, NativeEngine, PjrtScoreEngine};
+
+use crate::adapters::calibrate::{self, CalibOptions, Method};
+use crate::adapters::AdaptedModel;
+use crate::util::json::Json;
+
+/// Configuration of `rana serve`.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub model: String,
+    pub port: u16,
+    pub max_batch: usize,
+    /// Fixed target compression (0 → dense) when `adaptive_budget` is off.
+    pub target_compression: f64,
+    /// Enable the adaptive rank-budget ladder (dense/0.2/0.35/0.5).
+    pub adaptive_budget: bool,
+    /// "native" or "pjrt".
+    pub engine: String,
+}
+
+/// Build the engine ladder for a config (exposed for examples/benches).
+pub fn build_ladder(cfg: &ServerConfig) -> anyhow::Result<BudgetLadder> {
+    if cfg.engine == "pjrt" {
+        let dense: Arc<dyn Engine> = Arc::new(PjrtScoreEngine::load(&cfg.model, "dense")?);
+        // A RaNA-adapted artifact is exported alongside dense; use it as
+        // the loaded tier if present.
+        let mut engines: Vec<(f64, Arc<dyn Engine>)> = vec![(0.0, dense)];
+        if let Ok(rana) = PjrtScoreEngine::load(&cfg.model, "rana") {
+            engines.push((0.35, Arc::new(rana)));
+        }
+        let thresholds = if cfg.adaptive_budget && engines.len() > 1 {
+            vec![cfg.max_batch]
+        } else {
+            vec![]
+        };
+        return Ok(BudgetLadder { engines, thresholds });
+    }
+
+    let model = Arc::new(crate::model::Model::load(&crate::model::model_dir(&cfg.model))?);
+    let mut engines: Vec<(f64, Arc<dyn Engine>)> = Vec::new();
+    let rates: Vec<f64> = if cfg.adaptive_budget {
+        vec![0.0, 0.2, 0.35, 0.5]
+    } else {
+        vec![cfg.target_compression.max(0.0)]
+    };
+    let needs_calib = rates.iter().any(|&r| r > 0.0);
+    let calib = if needs_calib {
+        let corpus = crate::data::generate_corpus(400_000, 1_000);
+        Some(calibrate::collect(
+            &model,
+            &corpus.train,
+            &CalibOptions { n_fit: 1024, n_eval: 128, window: 128, seed: 0x5E12 },
+        ))
+    } else {
+        None
+    };
+    for &rate in &rates {
+        let adapted = if rate > 0.0 {
+            let (a, _) = calibrate::adapt(
+                Arc::clone(&model),
+                calib.as_ref().unwrap(),
+                Method::Rana,
+                rate,
+                512,
+                0x5E12,
+            );
+            a
+        } else {
+            AdaptedModel::unadapted(Arc::clone(&model))
+        };
+        engines.push((rate, Arc::new(NativeEngine::new(Arc::new(adapted)))));
+    }
+    // Queue-depth thresholds: step up one tier per max_batch of backlog.
+    let thresholds: Vec<usize> =
+        (1..engines.len()).map(|i| i * cfg.max_batch.max(1)).collect();
+    Ok(BudgetLadder { engines, thresholds })
+}
+
+/// Start the coordinator and serve the TCP line protocol until a client
+/// sends `{"op":"shutdown"}`.
+pub fn serve(cfg: ServerConfig) -> anyhow::Result<()> {
+    let ladder = build_ladder(&cfg)?;
+    println!(
+        "coordinator: model={} engine={} tiers={} max_batch={}",
+        cfg.model,
+        cfg.engine,
+        ladder.engines.len(),
+        cfg.max_batch
+    );
+    let batcher = Arc::new(Batcher::new(ladder, cfg.max_batch));
+    let submit = batcher.submitter();
+    let b2 = Arc::clone(&batcher);
+    let batch_thread = std::thread::spawn(move || b2.run());
+
+    let listener = TcpListener::bind(("127.0.0.1", cfg.port))?;
+    println!("listening on 127.0.0.1:{}", cfg.port);
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut conns = Vec::new();
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = stream?;
+        let submit = submit.clone();
+        let stop_conn = Arc::clone(&stop);
+        conns.push(std::thread::spawn(move || {
+            let _ = handle_conn(stream, submit, stop_conn);
+        }));
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    drop(submit);
+    batcher.close();
+    let _ = batch_thread.join();
+    for c in conns {
+        let _ = c.join();
+    }
+    Ok(())
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    submit: mpsc::Sender<Job>,
+    stop: Arc<AtomicBool>,
+) -> anyhow::Result<()> {
+    let local = stream.local_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match parse_request(&line) {
+            Ok(ParsedOp::Shutdown) => {
+                stop.store(true, Ordering::SeqCst);
+                // Unblock the accept loop by poking the listener.
+                let _ = TcpStream::connect(local);
+                writeln!(writer, "{}", Json::obj(vec![("ok", Json::Bool(true))]))?;
+                break;
+            }
+            Ok(ParsedOp::Op(op)) => match batcher::call(&submit, op) {
+                Ok(j) => j,
+                Err(e) => err_json(&e.to_string()),
+            },
+            Err(e) => err_json(&e.to_string()),
+        };
+        writeln!(writer, "{resp}")?;
+    }
+    Ok(())
+}
+
+enum ParsedOp {
+    Op(Op),
+    Shutdown,
+}
+
+fn parse_request(line: &str) -> anyhow::Result<ParsedOp> {
+    let j = Json::parse(line)?;
+    Ok(match j.get_str("op")? {
+        "score" => ParsedOp::Op(Op::Score { text: j.get_str("text")?.to_string() }),
+        "generate" => ParsedOp::Op(Op::Generate {
+            prompt: j.get_str("prompt")?.to_string(),
+            n: j.get_usize("tokens").unwrap_or(32),
+        }),
+        "stats" => ParsedOp::Op(Op::Stats),
+        "shutdown" => ParsedOp::Shutdown,
+        other => anyhow::bail!("unknown op {other:?}"),
+    })
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj(vec![("error", Json::str(msg))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_ops() {
+        assert!(matches!(
+            parse_request(r#"{"op":"score","text":"abc"}"#).unwrap(),
+            ParsedOp::Op(Op::Score { .. })
+        ));
+        assert!(matches!(
+            parse_request(r#"{"op":"generate","prompt":"p","tokens":4}"#).unwrap(),
+            ParsedOp::Op(Op::Generate { n: 4, .. })
+        ));
+        assert!(matches!(
+            parse_request(r#"{"op":"shutdown"}"#).unwrap(),
+            ParsedOp::Shutdown
+        ));
+        assert!(parse_request(r#"{"op":"nope"}"#).is_err());
+        assert!(parse_request("not json").is_err());
+    }
+}

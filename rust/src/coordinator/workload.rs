@@ -1,0 +1,244 @@
+//! Workload generation + closed/open-loop load driving for the serving
+//! stack. The paper's latency evaluation replays fixed traces; serving the
+//! adaptive rank-budget ladder (future-work extension) additionally needs
+//! load *pressure*, so this module provides Poisson and bursty open-loop
+//! arrivals plus a closed-loop multi-client driver, with request bodies
+//! drawn from the synthlang grammar.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use super::batcher::{Batcher, Job, Op};
+use crate::data::synthlang::Grammar;
+use crate::util::rng::Xoshiro256;
+
+/// Arrival process of an open-loop workload.
+#[derive(Clone, Copy, Debug)]
+pub enum Arrivals {
+    /// Poisson with `rate` requests/second.
+    Poisson { rate: f64 },
+    /// On/off bursts: `on`/`off` durations, Poisson(`rate`) while on.
+    Bursty { rate: f64, on: Duration, off: Duration },
+    /// `clients` concurrent closed-loop clients (next request on response).
+    ClosedLoop { clients: usize },
+}
+
+/// Request mix and shapes.
+#[derive(Clone, Copy, Debug)]
+pub struct Mix {
+    /// Fraction of generate (vs score) requests.
+    pub generate_frac: f64,
+    /// Tokens per generation.
+    pub gen_tokens: usize,
+}
+
+impl Default for Mix {
+    fn default() -> Self {
+        Self { generate_frac: 0.25, gen_tokens: 16 }
+    }
+}
+
+/// Latency/throughput summary of one load run.
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    pub completed: usize,
+    pub wall: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub mean: Duration,
+    /// Fraction of responses served at a compressed tier (rank_budget > 0).
+    pub compressed_frac: f64,
+}
+
+impl LoadReport {
+    pub fn throughput(&self) -> f64 {
+        self.completed as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    pub fn print(&self, label: &str) {
+        println!(
+            "{label}: {:.1} req/s  p50 {:?}  p99 {:?}  mean {:?}  compressed {:.0}%",
+            self.throughput(),
+            self.p50,
+            self.p99,
+            self.mean,
+            self.compressed_frac * 100.0
+        );
+    }
+}
+
+fn make_op(g: &Grammar, mix: &Mix, rng: &mut Xoshiro256) -> Op {
+    if rng.f64() < mix.generate_frac {
+        Op::Generate { prompt: format!("about {} :", g.entities[rng.below(g.entities.len())]), n: mix.gen_tokens }
+    } else {
+        Op::Score { text: g.document(rng) }
+    }
+}
+
+/// Drive `batcher` with `n_requests` under the given arrivals/mix.
+pub fn run_load(
+    batcher: &Arc<Batcher>,
+    arrivals: Arrivals,
+    mix: Mix,
+    n_requests: usize,
+    seed: u64,
+) -> LoadReport {
+    let g = crate::data::grammar();
+    let mut rng = Xoshiro256::new(seed);
+    let tx = batcher.submitter();
+    let lat_sink: Arc<std::sync::Mutex<Vec<(Duration, bool)>>> =
+        Arc::new(std::sync::Mutex::new(Vec::with_capacity(n_requests)));
+    let inflight = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+
+    let fire = |op: Op,
+                tx: &mpsc::Sender<Job>,
+                sink: &Arc<std::sync::Mutex<Vec<(Duration, bool)>>>,
+                inflight: &Arc<AtomicU64>| {
+        let (rtx, rrx) = mpsc::channel();
+        let sink = Arc::clone(sink);
+        let inflight2 = Arc::clone(inflight);
+        inflight.fetch_add(1, Ordering::Relaxed);
+        let start = Instant::now();
+        let _ = tx.send(Job { op, resp: rtx, arrived: start });
+        std::thread::spawn(move || {
+            let resp = rrx.recv_timeout(Duration::from_secs(120)).ok();
+            let compressed = resp
+                .as_ref()
+                .and_then(|j| j.get_f64("rank_budget").ok())
+                .map(|b| b > 0.0)
+                .unwrap_or(false);
+            sink.lock().unwrap().push((start.elapsed(), compressed));
+            inflight2.fetch_sub(1, Ordering::Relaxed);
+        });
+    };
+
+    match arrivals {
+        Arrivals::Poisson { rate } => {
+            for _ in 0..n_requests {
+                let gap = -rng.f64().max(1e-12).ln() / rate;
+                std::thread::sleep(Duration::from_secs_f64(gap));
+                fire(make_op(&g, &mix, &mut rng), &tx, &lat_sink, &inflight);
+            }
+        }
+        Arrivals::Bursty { rate, on, off } => {
+            let mut fired = 0;
+            while fired < n_requests {
+                let burst_end = Instant::now() + on;
+                while Instant::now() < burst_end && fired < n_requests {
+                    let gap = -rng.f64().max(1e-12).ln() / rate;
+                    std::thread::sleep(Duration::from_secs_f64(gap));
+                    fire(make_op(&g, &mix, &mut rng), &tx, &lat_sink, &inflight);
+                    fired += 1;
+                }
+                if fired < n_requests {
+                    std::thread::sleep(off);
+                }
+            }
+        }
+        Arrivals::ClosedLoop { clients } => {
+            let per_client = n_requests.div_ceil(clients.max(1));
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    let tx = tx.clone();
+                    let sink = Arc::clone(&lat_sink);
+                    let g = crate::data::grammar();
+                    let mix = mix;
+                    let mut rng = Xoshiro256::new(seed ^ (c as u64 + 1));
+                    std::thread::spawn(move || {
+                        for _ in 0..per_client {
+                            let (rtx, rrx) = mpsc::channel();
+                            let start = Instant::now();
+                            let _ = tx.send(Job {
+                                op: make_op(&g, &mix, &mut rng),
+                                resp: rtx,
+                                arrived: start,
+                            });
+                            let resp = rrx.recv_timeout(Duration::from_secs(120)).ok();
+                            let compressed = resp
+                                .as_ref()
+                                .and_then(|j| j.get_f64("rank_budget").ok())
+                                .map(|b| b > 0.0)
+                                .unwrap_or(false);
+                            sink.lock().unwrap().push((start.elapsed(), compressed));
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                let _ = h.join();
+            }
+        }
+    }
+
+    // Wait for stragglers (open-loop).
+    while inflight.load(Ordering::Relaxed) > 0 {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let wall = t0.elapsed();
+    let mut lats = lat_sink.lock().unwrap().clone();
+    lats.sort_by_key(|(d, _)| *d);
+    let completed = lats.len();
+    if completed == 0 {
+        return LoadReport::default();
+    }
+    let mean = lats.iter().map(|(d, _)| *d).sum::<Duration>() / completed as u32;
+    let compressed = lats.iter().filter(|(_, c)| *c).count();
+    LoadReport {
+        completed,
+        wall,
+        p50: lats[completed / 2].0,
+        p99: lats[(completed * 99) / 100].0,
+        mean,
+        compressed_frac: compressed as f64 / completed as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapters::test_support::tiny_model;
+    use crate::adapters::AdaptedModel;
+    use crate::coordinator::batcher::BudgetLadder;
+    use crate::coordinator::engine::{Engine, NativeEngine};
+    use crate::model::Arch;
+
+    fn start() -> Arc<Batcher> {
+        let m = tiny_model(Arch::SwiGlu, 601);
+        let e: Arc<dyn Engine> =
+            Arc::new(NativeEngine::new(Arc::new(AdaptedModel::unadapted(m))));
+        let b = Arc::new(Batcher::new(BudgetLadder::single(e), 8));
+        let b2 = Arc::clone(&b);
+        std::thread::spawn(move || b2.run());
+        b
+    }
+
+    #[test]
+    fn closed_loop_completes_all_requests() {
+        let b = start();
+        let r = run_load(
+            &b,
+            Arrivals::ClosedLoop { clients: 4 },
+            Mix { generate_frac: 0.25, gen_tokens: 3 },
+            16,
+            7,
+        );
+        assert_eq!(r.completed, 16);
+        assert!(r.p50 <= r.p99);
+        assert!(r.throughput() > 0.0);
+    }
+
+    #[test]
+    fn poisson_open_loop_completes() {
+        let b = start();
+        let r = run_load(
+            &b,
+            Arrivals::Poisson { rate: 200.0 },
+            Mix { generate_frac: 0.0, gen_tokens: 1 },
+            12,
+            9,
+        );
+        assert_eq!(r.completed, 12);
+    }
+}

@@ -1,0 +1,110 @@
+//! Data substrate: synthetic corpus, tokenizer, calibration sampling and
+//! downstream task suites (the stand-ins for RedPajama / Pile / lm-eval,
+//! per DESIGN.md §2).
+
+pub mod synthlang;
+pub mod tasks;
+pub mod tokenizer;
+
+use crate::util::rng::Xoshiro256;
+use synthlang::Grammar;
+
+/// Canonical corpus seeds: keep python (training) and rust (eval) on the
+/// same distribution by sharing the generated files in `artifacts/`.
+pub const GRAMMAR_SEED: u64 = 20_250_710;
+pub const TRAIN_SEED: u64 = 1;
+pub const HELDOUT_SEED: u64 = 2;
+pub const CALIB_SEED: u64 = 3;
+
+/// A tokenized corpus with train/held-out splits.
+pub struct Corpus {
+    pub train: Vec<u32>,
+    pub heldout: Vec<u32>,
+}
+
+/// Generate the canonical corpus (train + held-out from disjoint RNG
+/// streams of the same grammar).
+pub fn generate_corpus(train_bytes: usize, heldout_bytes: usize) -> Corpus {
+    let g = Grammar::new(GRAMMAR_SEED);
+    let mut rng_t = Xoshiro256::new(TRAIN_SEED);
+    let mut rng_h = Xoshiro256::new(HELDOUT_SEED);
+    let train_text = g.corpus(train_bytes, &mut rng_t);
+    let heldout_text = g.corpus(heldout_bytes, &mut rng_h);
+    Corpus {
+        train: tokenizer::encode(&train_text, false),
+        heldout: tokenizer::encode(&heldout_text, false),
+    }
+}
+
+/// The canonical grammar (shared by tasks + corpus).
+pub fn grammar() -> Grammar {
+    Grammar::new(GRAMMAR_SEED)
+}
+
+/// Sample `n` windows of length `len` from a token stream (for calibration
+/// hidden-state collection; paper uses k = 32 000 hidden states).
+pub fn sample_windows(tokens: &[u32], n: usize, len: usize, seed: u64) -> Vec<Vec<u32>> {
+    let mut rng = Xoshiro256::new(seed);
+    assert!(tokens.len() > len, "token stream shorter than window");
+    (0..n)
+        .map(|_| {
+            let start = rng.below(tokens.len() - len);
+            tokens[start..start + len].to_vec()
+        })
+        .collect()
+}
+
+/// Write the canonical corpus + docs to `artifacts/` for the python build
+/// path (train.py reads these files; single source of truth is this module).
+pub fn export_corpus(
+    dir: &std::path::Path,
+    train_bytes: usize,
+    heldout_bytes: usize,
+) -> anyhow::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let g = Grammar::new(GRAMMAR_SEED);
+    let mut rng_t = Xoshiro256::new(TRAIN_SEED);
+    let mut rng_h = Xoshiro256::new(HELDOUT_SEED);
+    std::fs::write(dir.join("corpus_train.txt"), g.corpus(train_bytes, &mut rng_t))?;
+    std::fs::write(dir.join("corpus_heldout.txt"), g.corpus(heldout_bytes, &mut rng_h))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_splits_are_disjoint_streams() {
+        let c = generate_corpus(5_000, 2_000);
+        assert!(c.train.len() >= 5_000);
+        assert!(c.heldout.len() >= 2_000);
+        // train and heldout should differ (different RNG streams)
+        assert_ne!(&c.train[..500], &c.heldout[..500]);
+    }
+
+    #[test]
+    fn sample_windows_shapes_and_bounds() {
+        let c = generate_corpus(4_000, 1_000);
+        let ws = sample_windows(&c.train, 10, 64, 5);
+        assert_eq!(ws.len(), 10);
+        for w in &ws {
+            assert_eq!(w.len(), 64);
+            assert!(w.iter().all(|&t| t < 256));
+        }
+    }
+
+    #[test]
+    fn export_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("rana-corpus-{}", std::process::id()));
+        export_corpus(&dir, 2_000, 1_000).unwrap();
+        let text = std::fs::read_to_string(dir.join("corpus_train.txt")).unwrap();
+        let again = {
+            let g = Grammar::new(GRAMMAR_SEED);
+            let mut r = Xoshiro256::new(TRAIN_SEED);
+            g.corpus(2_000, &mut r)
+        };
+        assert_eq!(text, again);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

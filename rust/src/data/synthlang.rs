@@ -1,0 +1,275 @@
+//! "synthlang" — a seeded stochastic grammar that stands in for
+//! RedPajama/The-Pile in this reproduction (see DESIGN.md §2).
+//!
+//! The generator emits byte-text documents with learnable structure at
+//! several scales, chosen so that (a) small transformers trained on it have
+//! anisotropic, heavy-tailed hidden-state distributions (the property that
+//! makes data-aware SVD(WX) beat SVD(W), which RaNA relies on), and (b) the
+//! six downstream task suites in [`crate::data::tasks`] can be generated
+//! from the same distribution:
+//!
+//! * **topics** — each document commits to one of 8 topics; topic-specific
+//!   word inventories give long-range lexical coherence;
+//! * **agreement** — singular subjects take verbs ending in `a`, plural
+//!   subjects (suffix `es`) take verbs ending in `on`;
+//! * **arithmetic** — `sum 3 plus 4 is 7 .` facts (mod 10);
+//! * **parity** — `bits 1 0 1 odd .` XOR facts over 3–6 bits;
+//! * **copy/recall** — documents open `about <entity>` and close
+//!   `recall <entity> .`, a long-range copy dependency.
+
+use crate::util::rng::Xoshiro256;
+
+pub const N_TOPICS: usize = 8;
+pub const WORDS_PER_TOPIC: usize = 24;
+pub const N_ENTITIES: usize = 40;
+pub const N_VERBS: usize = 20;
+
+/// The deterministic word inventories of synthlang.
+pub struct Grammar {
+    /// `topic_words[t]` — nouns/adjectives of topic `t`.
+    pub topic_words: Vec<Vec<String>>,
+    /// Shared entity names (for copy/recall).
+    pub entities: Vec<String>,
+    /// Verb stems (suffix added by agreement rule).
+    pub verbs: Vec<String>,
+}
+
+/// Topic-specific consonant inventories: gives each topic a character-level
+/// signature a byte-level model can pick up.
+const TOPIC_CONSONANTS: [&str; N_TOPICS] =
+    ["bdg", "ptk", "mnr", "szf", "lvw", "bkt", "drs", "gmp"];
+const VOWELS: &str = "aeiou";
+
+fn syllable(cons: &str, rng: &mut Xoshiro256) -> String {
+    let cs: Vec<char> = cons.chars().collect();
+    let vs: Vec<char> = VOWELS.chars().collect();
+    let mut s = String::new();
+    s.push(cs[rng.below(cs.len())]);
+    s.push(vs[rng.below(vs.len())]);
+    s
+}
+
+fn make_word(cons: &str, n_syll: usize, rng: &mut Xoshiro256) -> String {
+    (0..n_syll).map(|_| syllable(cons, rng)).collect()
+}
+
+impl Grammar {
+    /// Build the (fully seed-determined) grammar.
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Xoshiro256::new(seed ^ 0x5AFE_6A44);
+        let mut topic_words = Vec::with_capacity(N_TOPICS);
+        for t in 0..N_TOPICS {
+            let mut words = Vec::with_capacity(WORDS_PER_TOPIC);
+            while words.len() < WORDS_PER_TOPIC {
+                let w = make_word(TOPIC_CONSONANTS[t], 2 + rng.below(2), &mut rng);
+                if !words.contains(&w) {
+                    words.push(w);
+                }
+            }
+            topic_words.push(words);
+        }
+        let mut entities = Vec::with_capacity(N_ENTITIES);
+        while entities.len() < N_ENTITIES {
+            // Entities use a mixed consonant set, capitalized by convention
+            // prefix "x" so they are distinctive at byte level.
+            let w = format!("x{}", make_word("bdgklmnprst", 2, &mut rng));
+            if !entities.contains(&w) {
+                entities.push(w);
+            }
+        }
+        let mut verbs = Vec::with_capacity(N_VERBS);
+        while verbs.len() < N_VERBS {
+            let w = make_word("lrmnst", 2, &mut rng);
+            if !verbs.contains(&w) && !entities.contains(&w) {
+                verbs.push(w);
+            }
+        }
+        Self { topic_words, entities, verbs }
+    }
+
+    /// Agreement rule: suffix for a verb given subject plurality.
+    pub fn verb_form(&self, stem: &str, plural: bool) -> String {
+        if plural {
+            format!("{stem}on")
+        } else {
+            format!("{stem}a")
+        }
+    }
+
+    /// Noun form given plurality.
+    pub fn noun_form(&self, noun: &str, plural: bool) -> String {
+        if plural {
+            format!("{noun}es")
+        } else {
+            noun.to_string()
+        }
+    }
+
+    /// One agreement sentence within `topic`; returns text.
+    pub fn agreement_sentence(&self, topic: usize, rng: &mut Xoshiro256) -> String {
+        let words = &self.topic_words[topic];
+        let plural = rng.f32() < 0.5;
+        let subj = self.noun_form(&words[rng.below(words.len())], plural);
+        let verb = self.verb_form(&self.verbs[rng.below(self.verbs.len())], plural);
+        let obj = &words[rng.below(words.len())];
+        format!("the {subj} {verb} the {obj} .")
+    }
+
+    /// One arithmetic (mod 10) sentence.
+    pub fn arithmetic_sentence(&self, rng: &mut Xoshiro256) -> String {
+        let a = rng.below(10);
+        let b = rng.below(10);
+        format!("sum {a} plus {b} is {} .", (a + b) % 10)
+    }
+
+    /// One parity sentence over 3..=6 bits.
+    pub fn parity_sentence(&self, rng: &mut Xoshiro256) -> String {
+        let n = 3 + rng.below(4);
+        let bits: Vec<usize> = (0..n).map(|_| rng.below(2)).collect();
+        let ones: usize = bits.iter().sum();
+        let word = if ones % 2 == 1 { "odd" } else { "even" };
+        let bit_str: Vec<String> = bits.iter().map(|b| b.to_string()).collect();
+        format!("bits {} {word} .", bit_str.join(" "))
+    }
+
+    /// A plain topical sentence (no special structure).
+    pub fn topical_sentence(&self, topic: usize, rng: &mut Xoshiro256) -> String {
+        let words = &self.topic_words[topic];
+        let n = 3 + rng.below(3);
+        let picked: Vec<&str> =
+            (0..n).map(|_| words[rng.below(words.len())].as_str()).collect();
+        format!("{} .", picked.join(" "))
+    }
+
+    /// Generate one document: topic header, entity intro, body sentences,
+    /// entity recall. This is the unit the corpus is a concatenation of.
+    pub fn document(&self, rng: &mut Xoshiro256) -> String {
+        let topic = rng.below(N_TOPICS);
+        let entity = &self.entities[rng.below(N_ENTITIES)];
+        let mut out = format!("about {entity} :");
+        let n_sent = 3 + rng.below(5);
+        for _ in 0..n_sent {
+            let s = match rng.below(10) {
+                0..=3 => self.agreement_sentence(topic, rng),
+                4..=5 => self.arithmetic_sentence(rng),
+                6 => self.parity_sentence(rng),
+                _ => self.topical_sentence(topic, rng),
+            };
+            out.push(' ');
+            out.push_str(&s);
+        }
+        out.push_str(&format!(" recall {entity} .\n"));
+        out
+    }
+
+    /// Generate a corpus of roughly `target_bytes` bytes.
+    pub fn corpus(&self, target_bytes: usize, rng: &mut Xoshiro256) -> String {
+        let mut out = String::with_capacity(target_bytes + 256);
+        while out.len() < target_bytes {
+            out.push_str(&self.document(rng));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_is_deterministic_per_seed() {
+        let g1 = Grammar::new(7);
+        let g2 = Grammar::new(7);
+        assert_eq!(g1.topic_words, g2.topic_words);
+        assert_eq!(g1.entities, g2.entities);
+        let mut r1 = Xoshiro256::new(1);
+        let mut r2 = Xoshiro256::new(1);
+        assert_eq!(g1.document(&mut r1), g2.document(&mut r2));
+    }
+
+    #[test]
+    fn inventories_have_expected_sizes_and_no_dupes() {
+        let g = Grammar::new(3);
+        assert_eq!(g.topic_words.len(), N_TOPICS);
+        for words in &g.topic_words {
+            assert_eq!(words.len(), WORDS_PER_TOPIC);
+            let mut w = words.clone();
+            w.sort();
+            w.dedup();
+            assert_eq!(w.len(), WORDS_PER_TOPIC);
+        }
+        assert_eq!(g.entities.len(), N_ENTITIES);
+    }
+
+    #[test]
+    fn agreement_rule_consistent_in_sentences() {
+        let g = Grammar::new(5);
+        let mut rng = Xoshiro256::new(11);
+        for _ in 0..200 {
+            let s = g.agreement_sentence(rng.below(N_TOPICS), &mut rng);
+            let toks: Vec<&str> = s.split_whitespace().collect();
+            // "the SUBJ VERB the OBJ ."
+            assert_eq!(toks[0], "the");
+            let subj = toks[1];
+            let verb = toks[2];
+            if subj.ends_with("es") {
+                assert!(verb.ends_with("on"), "plural subject {subj} verb {verb}");
+            } else {
+                assert!(verb.ends_with('a'), "singular subject {subj} verb {verb}");
+            }
+        }
+    }
+
+    #[test]
+    fn arithmetic_sentences_are_correct() {
+        let g = Grammar::new(5);
+        let mut rng = Xoshiro256::new(13);
+        for _ in 0..100 {
+            let s = g.arithmetic_sentence(&mut rng);
+            let toks: Vec<&str> = s.split_whitespace().collect();
+            let a: usize = toks[1].parse().unwrap();
+            let b: usize = toks[3].parse().unwrap();
+            let c: usize = toks[5].parse().unwrap();
+            assert_eq!((a + b) % 10, c);
+        }
+    }
+
+    #[test]
+    fn parity_sentences_are_correct() {
+        let g = Grammar::new(5);
+        let mut rng = Xoshiro256::new(17);
+        for _ in 0..100 {
+            let s = g.parity_sentence(&mut rng);
+            let toks: Vec<&str> = s.split_whitespace().collect();
+            let bits: Vec<usize> =
+                toks[1..toks.len() - 2].iter().map(|t| t.parse().unwrap()).collect();
+            let word = toks[toks.len() - 2];
+            let want = if bits.iter().sum::<usize>() % 2 == 1 { "odd" } else { "even" };
+            assert_eq!(word, want);
+        }
+    }
+
+    #[test]
+    fn documents_open_and_close_with_same_entity() {
+        let g = Grammar::new(5);
+        let mut rng = Xoshiro256::new(19);
+        for _ in 0..50 {
+            let d = g.document(&mut rng);
+            let toks: Vec<&str> = d.split_whitespace().collect();
+            assert_eq!(toks[0], "about");
+            let entity = toks[1];
+            let recall_pos = toks.iter().rposition(|&t| t == "recall").unwrap();
+            assert_eq!(toks[recall_pos + 1], entity);
+        }
+    }
+
+    #[test]
+    fn corpus_reaches_target_size() {
+        let g = Grammar::new(5);
+        let mut rng = Xoshiro256::new(23);
+        let c = g.corpus(10_000, &mut rng);
+        assert!(c.len() >= 10_000);
+        assert!(c.len() < 12_000);
+        assert!(c.is_ascii());
+    }
+}

@@ -1,0 +1,276 @@
+//! Synthetic downstream task suites.
+//!
+//! Six zero-shot multiple-choice suites generated from the synthlang
+//! grammar, standing in for HellaSwag / PIQA / WinoGrande / ARC-Easy /
+//! ARC-Challenge / RACE (see DESIGN.md §2). Scoring follows lm-eval-harness:
+//! each choice is appended to the context and scored by length-normalized
+//! model log-likelihood; the argmax is the prediction.
+
+use super::synthlang::{Grammar, N_TOPICS};
+use crate::util::rng::Xoshiro256;
+
+/// One multiple-choice item: token-ready text pieces.
+#[derive(Clone, Debug)]
+pub struct McItem {
+    pub context: String,
+    pub choices: Vec<String>,
+    pub correct: usize,
+}
+
+/// A named task suite.
+#[derive(Clone, Debug)]
+pub struct TaskSuite {
+    pub name: &'static str,
+    pub items: Vec<McItem>,
+}
+
+pub const TASK_NAMES: [&str; 6] =
+    ["Continuation", "Agreement", "CopyRecall", "ArithmeticMod", "Parity", "TopicMatch"];
+
+/// Generate all six suites with `n_items` each.
+pub fn all_suites(grammar: &Grammar, n_items: usize, seed: u64) -> Vec<TaskSuite> {
+    vec![
+        continuation_suite(grammar, n_items, seed ^ 0x01),
+        agreement_suite(grammar, n_items, seed ^ 0x02),
+        copy_recall_suite(grammar, n_items, seed ^ 0x03),
+        arithmetic_suite(grammar, n_items, seed ^ 0x04),
+        parity_suite(grammar, n_items, seed ^ 0x05),
+        topic_match_suite(grammar, n_items, seed ^ 0x06),
+    ]
+}
+
+/// HellaSwag-analogue: choose the continuation that matches the document's
+/// topic and structure, vs. continuations from other topics.
+pub fn continuation_suite(g: &Grammar, n: usize, seed: u64) -> TaskSuite {
+    let mut rng = Xoshiro256::new(seed);
+    let mut items = Vec::with_capacity(n);
+    for _ in 0..n {
+        let topic = rng.below(N_TOPICS);
+        let ctx = format!(
+            "{} {}",
+            g.topical_sentence(topic, &mut rng),
+            g.agreement_sentence(topic, &mut rng)
+        );
+        let correct_txt = format!(" {}", g.topical_sentence(topic, &mut rng));
+        let mut choices = vec![correct_txt];
+        while choices.len() < 4 {
+            let other = rng.below(N_TOPICS);
+            if other != topic {
+                choices.push(format!(" {}", g.topical_sentence(other, &mut rng)));
+            }
+        }
+        let correct = shuffle_choices(&mut choices, &mut rng);
+        items.push(McItem { context: ctx, choices, correct });
+    }
+    TaskSuite { name: TASK_NAMES[0], items }
+}
+
+/// WinoGrande-analogue: pick the verb form that agrees with the subject.
+pub fn agreement_suite(g: &Grammar, n: usize, seed: u64) -> TaskSuite {
+    let mut rng = Xoshiro256::new(seed);
+    let mut items = Vec::with_capacity(n);
+    for _ in 0..n {
+        let topic = rng.below(N_TOPICS);
+        let words = &g.topic_words[topic];
+        let plural = rng.f32() < 0.5;
+        let subj = g.noun_form(&words[rng.below(words.len())], plural);
+        let stem = &g.verbs[rng.below(g.verbs.len())];
+        let obj = &words[rng.below(words.len())];
+        let ctx = format!("the {subj}");
+        let good = format!(" {} the {obj} .", g.verb_form(stem, plural));
+        let bad = format!(" {} the {obj} .", g.verb_form(stem, !plural));
+        let mut choices = vec![good, bad];
+        let correct = shuffle_choices(&mut choices, &mut rng);
+        items.push(McItem { context: ctx, choices, correct });
+    }
+    TaskSuite { name: TASK_NAMES[1], items }
+}
+
+/// RACE-analogue: read a document, recall the entity it is about.
+pub fn copy_recall_suite(g: &Grammar, n: usize, seed: u64) -> TaskSuite {
+    let mut rng = Xoshiro256::new(seed);
+    let mut items = Vec::with_capacity(n);
+    for _ in 0..n {
+        let doc = g.document(&mut rng);
+        // Strip the trailing "recall <entity> .\n" and make it the question.
+        let recall_pos = doc.rfind(" recall ").unwrap();
+        let ctx = format!("{} recall", &doc[..recall_pos]);
+        let entity_and_rest = &doc[recall_pos + " recall ".len()..];
+        let entity = entity_and_rest.split_whitespace().next().unwrap().to_string();
+        let mut choices = vec![format!(" {entity} .")];
+        while choices.len() < 4 {
+            let other = &g.entities[rng.below(g.entities.len())];
+            let cand = format!(" {other} .");
+            if !choices.contains(&cand) {
+                choices.push(cand);
+            }
+        }
+        let correct = shuffle_choices(&mut choices, &mut rng);
+        items.push(McItem { context: ctx, choices, correct });
+    }
+    TaskSuite { name: TASK_NAMES[2], items }
+}
+
+/// PIQA-analogue (numeric commonsense): complete `sum a plus b is _`.
+pub fn arithmetic_suite(g: &Grammar, n: usize, seed: u64) -> TaskSuite {
+    let _ = g;
+    let mut rng = Xoshiro256::new(seed);
+    let mut items = Vec::with_capacity(n);
+    for _ in 0..n {
+        let a = rng.below(10);
+        let b = rng.below(10);
+        let c = (a + b) % 10;
+        let ctx = format!("sum {a} plus {b} is");
+        let mut wrong = (c + 1 + rng.below(9)) % 10;
+        if wrong == c {
+            wrong = (c + 1) % 10;
+        }
+        let mut choices = vec![format!(" {c} ."), format!(" {wrong} .")];
+        let correct = shuffle_choices(&mut choices, &mut rng);
+        items.push(McItem { context: ctx, choices, correct });
+    }
+    TaskSuite { name: TASK_NAMES[3], items }
+}
+
+/// ARC-Challenge-analogue: parity of a bit string.
+pub fn parity_suite(g: &Grammar, n: usize, seed: u64) -> TaskSuite {
+    let _ = g;
+    let mut rng = Xoshiro256::new(seed);
+    let mut items = Vec::with_capacity(n);
+    for _ in 0..n {
+        let len = 3 + rng.below(4);
+        let bits: Vec<usize> = (0..len).map(|_| rng.below(2)).collect();
+        let ones: usize = bits.iter().sum();
+        let bits_str: Vec<String> = bits.iter().map(|b| b.to_string()).collect();
+        let ctx = format!("bits {}", bits_str.join(" "));
+        let (good, bad) =
+            if ones % 2 == 1 { (" odd .", " even .") } else { (" even .", " odd .") };
+        let mut choices = vec![good.to_string(), bad.to_string()];
+        let correct = shuffle_choices(&mut choices, &mut rng);
+        items.push(McItem { context: ctx, choices, correct });
+    }
+    TaskSuite { name: TASK_NAMES[4], items }
+}
+
+/// ARC-Easy-analogue: which word belongs to the paragraph's topic?
+pub fn topic_match_suite(g: &Grammar, n: usize, seed: u64) -> TaskSuite {
+    let mut rng = Xoshiro256::new(seed);
+    let mut items = Vec::with_capacity(n);
+    for _ in 0..n {
+        let topic = rng.below(N_TOPICS);
+        let ctx = format!(
+            "{} {}",
+            g.topical_sentence(topic, &mut rng),
+            g.topical_sentence(topic, &mut rng)
+        );
+        let words = &g.topic_words[topic];
+        let mut choices = vec![format!(" {}", words[rng.below(words.len())])];
+        while choices.len() < 4 {
+            let other = rng.below(N_TOPICS);
+            if other != topic {
+                let w = &g.topic_words[other][rng.below(g.topic_words[other].len())];
+                choices.push(format!(" {w}"));
+            }
+        }
+        let correct = shuffle_choices(&mut choices, &mut rng);
+        items.push(McItem { context: ctx, choices, correct });
+    }
+    TaskSuite { name: TASK_NAMES[5], items }
+}
+
+/// Shuffle choices in place, returning the new index of the (previously
+/// first) correct choice.
+fn shuffle_choices(choices: &mut [String], rng: &mut Xoshiro256) -> usize {
+    let correct_value = choices[0].clone();
+    rng.shuffle(choices);
+    choices.iter().position(|c| *c == correct_value).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grammar() -> Grammar {
+        Grammar::new(7)
+    }
+
+    #[test]
+    fn all_suites_have_requested_size_and_valid_correct_index() {
+        let g = grammar();
+        let suites = all_suites(&g, 25, 99);
+        assert_eq!(suites.len(), 6);
+        for s in &suites {
+            assert_eq!(s.items.len(), 25, "{}", s.name);
+            for item in &s.items {
+                assert!(item.correct < item.choices.len());
+                assert!(!item.context.is_empty());
+                assert!(item.choices.iter().all(|c| !c.is_empty()));
+            }
+        }
+    }
+
+    #[test]
+    fn suites_are_deterministic() {
+        let g = grammar();
+        let a = arithmetic_suite(&g, 10, 5);
+        let b = arithmetic_suite(&g, 10, 5);
+        for (x, y) in a.items.iter().zip(&b.items) {
+            assert_eq!(x.context, y.context);
+            assert_eq!(x.choices, y.choices);
+            assert_eq!(x.correct, y.correct);
+        }
+    }
+
+    #[test]
+    fn arithmetic_correct_choice_is_right_answer() {
+        let g = grammar();
+        let s = arithmetic_suite(&g, 50, 21);
+        for item in &s.items {
+            let toks: Vec<&str> = item.context.split_whitespace().collect();
+            let a: usize = toks[1].parse().unwrap();
+            let b: usize = toks[3].parse().unwrap();
+            let chosen = item.choices[item.correct].trim().trim_end_matches(" .");
+            let c: usize = chosen.split_whitespace().next().unwrap().parse().unwrap();
+            assert_eq!((a + b) % 10, c);
+        }
+    }
+
+    #[test]
+    fn agreement_correct_choice_agrees() {
+        let g = grammar();
+        let s = agreement_suite(&g, 50, 31);
+        for item in &s.items {
+            let subj = item.context.split_whitespace().nth(1).unwrap();
+            let verb = item.choices[item.correct].trim().split_whitespace().next().unwrap();
+            if subj.ends_with("es") {
+                assert!(verb.ends_with("on"));
+            } else {
+                assert!(verb.ends_with('a'));
+            }
+        }
+    }
+
+    #[test]
+    fn copy_recall_correct_choice_matches_document_entity() {
+        let g = grammar();
+        let s = copy_recall_suite(&g, 30, 41);
+        for item in &s.items {
+            let entity = item.context.split_whitespace().nth(1).unwrap();
+            let chosen = item.choices[item.correct].trim().split_whitespace().next().unwrap();
+            assert_eq!(entity, chosen);
+        }
+    }
+
+    #[test]
+    fn choices_are_distinct() {
+        let g = grammar();
+        for s in all_suites(&g, 20, 77) {
+            for item in &s.items {
+                let mut c = item.choices.clone();
+                c.sort();
+                c.dedup();
+                assert_eq!(c.len(), item.choices.len(), "{} has dup choices", s.name);
+            }
+        }
+    }
+}

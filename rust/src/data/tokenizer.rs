@@ -1,0 +1,54 @@
+//! Byte-level tokenizer.
+//!
+//! The simulated models are byte-level (vocab 256 + BOS), standing in for
+//! the BPE vocabularies of the paper's models. Byte-level keeps the
+//! tokenizer deterministic across the rust and python layers: both sides
+//! just use the raw bytes. Token 256 is BOS; the effective vocab is 257
+//! rounded up to 288 in the model configs for alignment.
+
+pub const BYTE_VOCAB: usize = 256;
+pub const BOS: u32 = 256;
+/// Vocab size models are built with (BOS + padding to a multiple of 32).
+pub const MODEL_VOCAB: usize = 288;
+
+/// Encode text as byte tokens, optionally prepending BOS.
+pub fn encode(text: &str, with_bos: bool) -> Vec<u32> {
+    let mut out = Vec::with_capacity(text.len() + 1);
+    if with_bos {
+        out.push(BOS);
+    }
+    out.extend(text.as_bytes().iter().map(|&b| b as u32));
+    out
+}
+
+/// Decode tokens back to text (BOS and padding ids dropped; invalid UTF-8
+/// replaced, though synthlang is pure ASCII).
+pub fn decode(tokens: &[u32]) -> String {
+    let bytes: Vec<u8> =
+        tokens.iter().filter(|&&t| t < BYTE_VOCAB as u32).map(|&t| t as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "the dax lopa the fep . sum 3 plus 4 is 7 .";
+        assert_eq!(decode(&encode(s, false)), s);
+    }
+
+    #[test]
+    fn bos_prepended_and_stripped() {
+        let toks = encode("ab", true);
+        assert_eq!(toks, vec![BOS, 97, 98]);
+        assert_eq!(decode(&toks), "ab");
+    }
+
+    #[test]
+    fn model_vocab_covers_bos() {
+        assert!(MODEL_VOCAB > BOS as usize);
+        assert_eq!(MODEL_VOCAB % 32, 0);
+    }
+}

@@ -1,0 +1,33 @@
+//! # RaNA — Adaptive Rank Allocation for Modern Transformers
+//!
+//! A production-grade reproduction of *"Adaptive Rank Allocation: Speeding Up
+//! Modern Transformers with RaNA Adapters"* (ICLR 2025).
+//!
+//! The crate is organised as the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **Layer 1** (`python/compile/kernels/`) — Pallas masked-GEMV / B-masker
+//!   kernels, validated against a pure-`jnp` oracle and lowered (interpret
+//!   mode) into the model HLO.
+//! * **Layer 2** (`python/compile/model.py`) — the JAX transformer forward
+//!   pass (SwiGLU / GeLU-NeoX variants) with RaNA-adapted linear layers,
+//!   AOT-exported as HLO text into `artifacts/`.
+//! * **Layer 3** (this crate) — a rust serving coordinator (request router,
+//!   continuous batcher, adaptive rank-budget controller) plus a complete
+//!   pure-rust implementation of the paper's adapters, baselines, evaluation
+//!   harness and every substrate they need (tensor/linalg with SVD, FLOP
+//!   accounting, synthetic corpus + downstream tasks, transformer reference
+//!   forward, PJRT runtime).
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index that
+//! maps every table and figure of the paper onto modules and bench targets.
+
+pub mod adapters;
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod flops;
+pub mod model;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,162 @@
+//! `rana` — leader entrypoint and CLI.
+//!
+//! Subcommands:
+//! * `gen-data`       — generate the synthlang corpus into `artifacts/`
+//!   (single source of truth shared with the python build path);
+//! * `serve`          — start the serving coordinator (TCP line protocol);
+//! * `adapt`          — adapt a trained model and print the report;
+//! * `eval`           — perplexity + downstream accuracy of a (possibly
+//!   adapted) model;
+//! * `decode`         — greedy decode from a prompt (smoke/demo);
+//! * `runtime-check`  — load an HLO artifact via PJRT and verify parity
+//!   against the native engine.
+
+use std::sync::Arc;
+
+use rana::adapters::calibrate::{self, CalibOptions, Method};
+use rana::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    match args.subcommand() {
+        Some("gen-data") => gen_data(args),
+        Some("serve") => serve(args),
+        Some("adapt") => adapt_cmd(args),
+        Some("eval") => eval_cmd(args),
+        Some("decode") => decode_cmd(args),
+        Some("runtime-check") => runtime_check(args),
+        Some(other) => anyhow::bail!("unknown subcommand {other:?} (see README)"),
+        None => {
+            println!("{}", usage());
+            Ok(())
+        }
+    }
+}
+
+fn usage() -> &'static str {
+    "rana — Adaptive Rank Allocation serving stack\n\
+     usage: rana <gen-data|serve|adapt|eval|decode|runtime-check> [--flags]\n\
+     see README.md for the full CLI reference"
+}
+
+/// Generate the canonical corpus files into artifacts/.
+fn gen_data(args: &Args) -> anyhow::Result<()> {
+    let dir = rana::util::artifacts_dir();
+    let train_mb = args.get_f64("train-mb", 4.0);
+    let heldout_kb = args.get_f64("heldout-kb", 512.0);
+    rana::data::export_corpus(
+        &dir,
+        (train_mb * 1e6) as usize,
+        (heldout_kb * 1e3) as usize,
+    )?;
+    println!(
+        "wrote corpus_train.txt ({train_mb} MB) + corpus_heldout.txt ({heldout_kb} KB) to {}",
+        dir.display()
+    );
+    Ok(())
+}
+
+/// Load a model and calibration data, honoring --model/--method/--rate.
+fn load_and_adapt(
+    args: &Args,
+) -> anyhow::Result<(Arc<rana::model::Model>, rana::adapters::AdaptedModel, calibrate::AdaptReport)>
+{
+    let name = args.get_str("model", "llama-sim");
+    let model = Arc::new(rana::model::Model::load(&rana::model::model_dir(&name))?);
+    let method = Method::parse(&args.get_str("method", "rana"))?;
+    let rate = args.get_f64("rate", 0.3);
+    if rate <= 0.0 {
+        let adapted = rana::adapters::AdaptedModel::unadapted(Arc::clone(&model));
+        return Ok((model, adapted, calibrate::AdaptReport::default()));
+    }
+    let corpus = rana::data::generate_corpus(600_000, 1_000);
+    let opts = CalibOptions {
+        n_fit: args.get_usize("calib", 2048),
+        n_eval: 256,
+        window: 128,
+        seed: args.get_u64("seed", 0xCA11B),
+    };
+    let calib = calibrate::collect(&model, &corpus.train, &opts);
+    let (adapted, report) =
+        calibrate::adapt(Arc::clone(&model), &calib, method, rate, 512, opts.seed);
+    Ok((model, adapted, report))
+}
+
+fn adapt_cmd(args: &Args) -> anyhow::Result<()> {
+    let (_, adapted, report) = load_and_adapt(args)?;
+    println!("method={}", adapted.method);
+    println!(
+        "achieved compression: total={:.1}% mlp={:.1}% qkv={:.1}%",
+        report.total_compression * 100.0,
+        report.mlp_compression * 100.0,
+        report.qkv_compression * 100.0
+    );
+    for (l, lr) in report.layers.iter().enumerate() {
+        println!(
+            "layer {l}: mlp_err={:.2}% qkv_err={:.2}%",
+            lr.mlp_err * 100.0,
+            lr.qkv_err * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn eval_cmd(args: &Args) -> anyhow::Result<()> {
+    let (model, adapted, report) = load_and_adapt(args)?;
+    let ppl_tokens = args.get_usize("ppl-tokens", 20_000);
+    let items = args.get_usize("items", 60);
+    let corpus = rana::data::generate_corpus(1_000, 2 * ppl_tokens + 2_000);
+    let ppl = rana::eval::perplexity(&adapted, &corpus.heldout, ppl_tokens, 256);
+    let g = rana::data::grammar();
+    let suites = rana::data::tasks::all_suites(&g, items, 0xE7A1);
+    let accs = rana::eval::task_accuracies(&adapted, &suites);
+    println!("model={} method={}", model.cfg.name, adapted.method);
+    println!("compression: {:.1}%", report.total_compression * 100.0);
+    println!("ppl: {ppl:.3}");
+    let mut avg = 0.0;
+    for (s, a) in suites.iter().zip(&accs) {
+        println!("  {:<14} {:.2}%", s.name, a * 100.0);
+        avg += a;
+    }
+    println!("avg acc: {:.2}%", avg / accs.len() as f64 * 100.0);
+    Ok(())
+}
+
+fn decode_cmd(args: &Args) -> anyhow::Result<()> {
+    let name = args.get_str("model", "llama-sim");
+    let model = Arc::new(rana::model::Model::load(&rana::model::model_dir(&name))?);
+    let prompt = args.get_str("prompt", "the ");
+    let n = args.get_usize("tokens", 64);
+    let adapted = rana::adapters::AdaptedModel::unadapted(model);
+    let out = rana::eval::greedy_decode(&adapted, &prompt, n);
+    println!("{out}");
+    Ok(())
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = rana::coordinator::ServerConfig {
+        model: args.get_str("model", "llama-sim"),
+        port: args.get_usize("port", 7070) as u16,
+        max_batch: args.get_usize("max-batch", 8),
+        target_compression: args.get_f64("rate", 0.0),
+        adaptive_budget: args.get_flag("adaptive-budget"),
+        engine: args.get_str("engine", "native"),
+    };
+    rana::coordinator::serve(cfg)
+}
+
+fn runtime_check(args: &Args) -> anyhow::Result<()> {
+    let name = args.get_str("model", "llama-sim");
+    rana::runtime::parity_check(&name)
+}

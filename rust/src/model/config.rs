@@ -1,0 +1,224 @@
+//! Model configurations.
+//!
+//! Three families simulate the paper's testbed (DESIGN.md §2):
+//! * `llama-sim` — SwiGLU decoder, RMSNorm, RoPE (Llama2-7b stand-in);
+//! * `gemma-sim` — SwiGLU decoder with a wider MLP (Gemma-2b stand-in;
+//!   adapters applied to MLPs only, as in the paper §5.3);
+//! * `pythia-sim-{s,m,l}` — GeLU NeoX-style decoders with parallel
+//!   residual and LayerNorm (Pythia suite stand-in).
+
+use crate::util::json::Json;
+
+/// Architecture family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arch {
+    /// Llama/Gemma style: RMSNorm, sequential residual, SwiGLU MLP.
+    SwiGlu,
+    /// GPT-NeoX style: LayerNorm, parallel residual, GeLU MLP.
+    GeluNeoX,
+}
+
+impl Arch {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Arch::SwiGlu => "swiglu",
+            Arch::GeluNeoX => "gelu_neox",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "swiglu" => Ok(Arch::SwiGlu),
+            "gelu_neox" => Ok(Arch::GeluNeoX),
+            other => anyhow::bail!("unknown arch {other:?}"),
+        }
+    }
+}
+
+/// Hyper-parameters of one model. Mirrored by `python/compile/model.py`;
+/// the JSON manifest written at training time is the source of truth.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub arch: Arch,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_hidden: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub rope_theta: f32,
+    pub norm_eps: f32,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameter count (untied embeddings).
+    pub fn n_params(&self) -> usize {
+        let attn = 4 * self.d_model * self.d_model;
+        let mlp = match self.arch {
+            Arch::SwiGlu => 3 * self.d_model * self.d_hidden,
+            Arch::GeluNeoX => 2 * self.d_model * self.d_hidden,
+        };
+        let norms = match self.arch {
+            Arch::SwiGlu => 2 * self.d_model,
+            Arch::GeluNeoX => 4 * self.d_model, // scale + bias, two norms
+        };
+        self.n_layers * (attn + mlp + norms)
+            + 2 * self.vocab * self.d_model
+            + self.d_model
+    }
+
+    /// Llama2-7b stand-in: SwiGLU, MLP ratio ≈ 2.67.
+    pub fn llama_sim() -> Self {
+        Self {
+            name: "llama-sim".into(),
+            arch: Arch::SwiGlu,
+            d_model: 192,
+            n_layers: 4,
+            n_heads: 6,
+            d_hidden: 512,
+            vocab: crate::data::tokenizer::MODEL_VOCAB,
+            max_seq: 512,
+            rope_theta: 10_000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    /// Gemma-2b stand-in: SwiGLU with wider MLP (ratio 4).
+    pub fn gemma_sim() -> Self {
+        Self {
+            name: "gemma-sim".into(),
+            arch: Arch::SwiGlu,
+            d_model: 160,
+            n_layers: 4,
+            n_heads: 5,
+            d_hidden: 640,
+            vocab: crate::data::tokenizer::MODEL_VOCAB,
+            max_seq: 512,
+            rope_theta: 10_000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    /// Pythia suite stand-ins (GeLU NeoX), three sizes.
+    pub fn pythia_sim(size: PythiaSize) -> Self {
+        let (name, d, l, h) = match size {
+            PythiaSize::S => ("pythia-sim-s", 96, 4, 4),
+            PythiaSize::M => ("pythia-sim-m", 144, 4, 4),
+            PythiaSize::L => ("pythia-sim-l", 192, 5, 6),
+        };
+        Self {
+            name: name.into(),
+            arch: Arch::GeluNeoX,
+            d_model: d,
+            n_layers: l,
+            n_heads: h,
+            d_hidden: 4 * d,
+            vocab: crate::data::tokenizer::MODEL_VOCAB,
+            max_seq: 512,
+            rope_theta: 10_000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    /// All model configs in the canonical order used by `make artifacts`.
+    pub fn all() -> Vec<ModelConfig> {
+        vec![
+            Self::llama_sim(),
+            Self::gemma_sim(),
+            Self::pythia_sim(PythiaSize::S),
+            Self::pythia_sim(PythiaSize::M),
+            Self::pythia_sim(PythiaSize::L),
+        ]
+    }
+
+    pub fn by_name(name: &str) -> anyhow::Result<ModelConfig> {
+        Self::all()
+            .into_iter()
+            .find(|c| c.name == name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {name:?}"))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("arch", Json::str(self.arch.as_str())),
+            ("d_model", Json::Num(self.d_model as f64)),
+            ("n_layers", Json::Num(self.n_layers as f64)),
+            ("n_heads", Json::Num(self.n_heads as f64)),
+            ("d_hidden", Json::Num(self.d_hidden as f64)),
+            ("vocab", Json::Num(self.vocab as f64)),
+            ("max_seq", Json::Num(self.max_seq as f64)),
+            ("rope_theta", Json::Num(self.rope_theta as f64)),
+            ("norm_eps", Json::Num(self.norm_eps as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        Ok(Self {
+            name: j.get_str("name")?.to_string(),
+            arch: Arch::parse(j.get_str("arch")?)?,
+            d_model: j.get_usize("d_model")?,
+            n_layers: j.get_usize("n_layers")?,
+            n_heads: j.get_usize("n_heads")?,
+            d_hidden: j.get_usize("d_hidden")?,
+            vocab: j.get_usize("vocab")?,
+            max_seq: j.get_usize("max_seq")?,
+            rope_theta: j.get_f64("rope_theta")? as f32,
+            norm_eps: j.get_f64("norm_eps")? as f32,
+        })
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub enum PythiaSize {
+    S,
+    M,
+    L,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_dim_divides() {
+        for c in ModelConfig::all() {
+            assert_eq!(c.d_model % c.n_heads, 0, "{}", c.name);
+            assert_eq!(c.head_dim() % 2, 0, "{}: rope needs even head_dim", c.name);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for c in ModelConfig::all() {
+            let j = c.to_json();
+            let back = ModelConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+            assert_eq!(back, c);
+        }
+    }
+
+    #[test]
+    fn param_counts_are_plausible() {
+        let c = ModelConfig::llama_sim();
+        let p = c.n_params();
+        assert!(p > 1_000_000 && p < 4_000_000, "llama-sim params {p}");
+        // pythia sizes are ordered
+        let s = ModelConfig::pythia_sim(PythiaSize::S).n_params();
+        let m = ModelConfig::pythia_sim(PythiaSize::M).n_params();
+        let l = ModelConfig::pythia_sim(PythiaSize::L).n_params();
+        assert!(s < m && m < l);
+    }
+
+    #[test]
+    fn by_name_finds_all() {
+        for c in ModelConfig::all() {
+            assert_eq!(ModelConfig::by_name(&c.name).unwrap(), c);
+        }
+        assert!(ModelConfig::by_name("nope").is_err());
+    }
+}

@@ -1,0 +1,454 @@
+//! Generic forward pass over pluggable block operators.
+//!
+//! [`BlockOps`] abstracts the three places adapters intervene — QKV, the
+//! attention output projection (never adapted, but kept symmetric) and the
+//! MLP — over both execution paths:
+//!
+//! * the **sequence path** (`forward_seq`): GEMM-based, used for
+//!   perplexity / task scoring / calibration capture;
+//! * the **decode path** (`decode_step`): GEMV + KV-cache, used by the
+//!   serving coordinator and latency benchmarks (where masked skipping
+//!   yields real wall-clock wins).
+//!
+//! The dense model implements `BlockOps` here; RaNA/CATS/… adapted models
+//! implement it in [`crate::adapters`], and every evaluation harness is
+//! generic over it — the paper's technique is a first-class plug-in, not a
+//! fork of the model code.
+
+use super::config::{Arch, ModelConfig};
+use super::ops;
+use super::weights::ModelWeights;
+use crate::tensor::Mat;
+
+/// Calibration capture: hidden states observed at adapter insertion points.
+/// Rows are samples; `to_x_matrix` transposes into the `X ∈ R^{i×k}` layout
+/// of the paper's Eqn. 7.
+#[derive(Default)]
+pub struct Capture {
+    /// Input to QKV (post-norm1), per layer: rows of dim `d_model`.
+    pub qkv_in: Vec<Vec<f32>>,
+    /// Input to Up/Gate (post-norm2), per layer: rows of dim `d_model`.
+    pub mlp_in: Vec<Vec<f32>>,
+    /// Input to Down (the MLP intermediate), per layer: rows of dim `d_hidden`.
+    pub down_in: Vec<Vec<f32>>,
+    pub n_layers: usize,
+}
+
+impl Capture {
+    pub fn new(n_layers: usize) -> Self {
+        Self {
+            qkv_in: vec![Vec::new(); n_layers],
+            mlp_in: vec![Vec::new(); n_layers],
+            down_in: vec![Vec::new(); n_layers],
+            n_layers,
+        }
+    }
+
+    pub fn push(buf: &mut Vec<f32>, rows: &Mat) {
+        buf.extend_from_slice(&rows.data);
+    }
+
+    /// Samples collected for layer `l` at a site, as `X: i×k` (columns are
+    /// hidden states, the layout of Eqn. 7).
+    pub fn x_matrix(buf: &[f32], dim: usize) -> Mat {
+        let k = buf.len() / dim;
+        Mat::from_vec(k, dim, buf.to_vec()).transpose()
+    }
+}
+
+/// Pluggable per-layer computation.
+pub trait BlockOps: Sync {
+    fn config(&self) -> &ModelConfig;
+    fn weights(&self) -> &ModelWeights;
+
+    // --- sequence (GEMM) path -------------------------------------------
+    fn qkv_seq(&self, layer: usize, xs: &Mat) -> (Mat, Mat, Mat);
+    fn attn_out_seq(&self, layer: usize, xs: &Mat) -> Mat;
+    fn mlp_seq(&self, layer: usize, xs: &Mat, cap: Option<&mut Capture>) -> Mat;
+
+    // --- decode (GEMV) path ---------------------------------------------
+    fn qkv_tok(&self, layer: usize, x: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>);
+    fn attn_out_tok(&self, layer: usize, x: &[f32]) -> Vec<f32>;
+    fn mlp_tok(&self, layer: usize, x: &[f32]) -> Vec<f32>;
+}
+
+/// The dense (unadapted) model.
+pub struct Model {
+    pub cfg: ModelConfig,
+    pub w: ModelWeights,
+}
+
+impl Model {
+    pub fn new(cfg: ModelConfig, w: ModelWeights) -> anyhow::Result<Self> {
+        w.validate(&cfg)?;
+        Ok(Self { cfg, w })
+    }
+
+    pub fn load(dir: &std::path::Path) -> anyhow::Result<Self> {
+        let (cfg, w) = ModelWeights::load(dir)?;
+        Ok(Self { cfg, w })
+    }
+
+    fn dense_mlp_seq(&self, layer: usize, xs: &Mat, cap: Option<&mut Capture>) -> Mat {
+        let l = &self.w.layers[layer];
+        let inter = match self.cfg.arch {
+            Arch::SwiGlu => {
+                let up = l.up.apply_seq(xs);
+                let gate = l.gate.as_ref().unwrap().apply_seq(xs);
+                let mut inter = up;
+                for (v, g) in inter.data.iter_mut().zip(&gate.data) {
+                    *v *= ops::silu(*g);
+                }
+                inter
+            }
+            Arch::GeluNeoX => {
+                let mut up = l.up.apply_seq(xs);
+                for v in up.data.iter_mut() {
+                    *v = ops::gelu(*v);
+                }
+                up
+            }
+        };
+        if let Some(cap) = cap {
+            Capture::push(&mut cap.down_in[layer], &inter);
+        }
+        l.down.apply_seq(&inter)
+    }
+
+    fn dense_mlp_tok(&self, layer: usize, x: &[f32]) -> Vec<f32> {
+        let l = &self.w.layers[layer];
+        let inter: Vec<f32> = match self.cfg.arch {
+            Arch::SwiGlu => {
+                let up = l.up.apply(x);
+                let gate = l.gate.as_ref().unwrap().apply(x);
+                up.iter().zip(&gate).map(|(&u, &g)| u * ops::silu(g)).collect()
+            }
+            Arch::GeluNeoX => l.up.apply(x).iter().map(|&v| ops::gelu(v)).collect(),
+        };
+        l.down.apply(&inter)
+    }
+}
+
+impl BlockOps for Model {
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn weights(&self) -> &ModelWeights {
+        &self.w
+    }
+
+    fn qkv_seq(&self, layer: usize, xs: &Mat) -> (Mat, Mat, Mat) {
+        let l = &self.w.layers[layer];
+        (l.wq.apply_seq(xs), l.wk.apply_seq(xs), l.wv.apply_seq(xs))
+    }
+
+    fn attn_out_seq(&self, layer: usize, xs: &Mat) -> Mat {
+        self.w.layers[layer].wo.apply_seq(xs)
+    }
+
+    fn mlp_seq(&self, layer: usize, xs: &Mat, cap: Option<&mut Capture>) -> Mat {
+        self.dense_mlp_seq(layer, xs, cap)
+    }
+
+    fn qkv_tok(&self, layer: usize, x: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let l = &self.w.layers[layer];
+        (l.wq.apply(x), l.wk.apply(x), l.wv.apply(x))
+    }
+
+    fn attn_out_tok(&self, layer: usize, x: &[f32]) -> Vec<f32> {
+        self.w.layers[layer].wo.apply(x)
+    }
+
+    fn mlp_tok(&self, layer: usize, x: &[f32]) -> Vec<f32> {
+        self.dense_mlp_tok(layer, x)
+    }
+}
+
+/// Apply the arch's norm to every row.
+fn norm_rows(cfg: &ModelConfig, norm: &super::weights::Norm, xs: &Mat) -> Mat {
+    let mut out = Mat::zeros(xs.rows, xs.cols);
+    for r in 0..xs.rows {
+        let y = match cfg.arch {
+            Arch::SwiGlu => ops::rmsnorm(xs.row(r), &norm.scale, cfg.norm_eps),
+            Arch::GeluNeoX => ops::layernorm(
+                xs.row(r),
+                &norm.scale,
+                norm.bias.as_ref().expect("neox norm bias"),
+                cfg.norm_eps,
+            ),
+        };
+        out.row_mut(r).copy_from_slice(&y);
+    }
+    out
+}
+
+fn norm_tok(cfg: &ModelConfig, norm: &super::weights::Norm, x: &[f32]) -> Vec<f32> {
+    match cfg.arch {
+        Arch::SwiGlu => ops::rmsnorm(x, &norm.scale, cfg.norm_eps),
+        Arch::GeluNeoX => ops::layernorm(
+            x,
+            &norm.scale,
+            norm.bias.as_ref().expect("neox norm bias"),
+            cfg.norm_eps,
+        ),
+    }
+}
+
+/// Full-sequence forward: returns logits `[T, vocab]`. `positions[i] = i`.
+pub fn forward_seq<B: BlockOps>(b: &B, tokens: &[u32], mut cap: Option<&mut Capture>) -> Mat {
+    let cfg = b.config().clone();
+    let w = b.weights();
+    let t = tokens.len();
+    let mut xs = Mat::zeros(t, cfg.d_model);
+    for (r, &tok) in tokens.iter().enumerate() {
+        xs.row_mut(r).copy_from_slice(w.embed.row(tok as usize));
+    }
+
+    for layer in 0..cfg.n_layers {
+        let lw = &w.layers[layer];
+        let h1 = norm_rows(&cfg, &lw.norm1, &xs);
+        if let Some(cap) = cap.as_deref_mut() {
+            Capture::push(&mut cap.qkv_in[layer], &h1);
+        }
+        let (mut q, mut k, v) = b.qkv_seq(layer, &h1);
+        for r in 0..t {
+            ops::rope_heads(q.row_mut(r), cfg.n_heads, r, cfg.rope_theta);
+            ops::rope_heads(k.row_mut(r), cfg.n_heads, r, cfg.rope_theta);
+        }
+        let attn = ops::causal_attention_seq(&q, &k, &v, cfg.n_heads);
+        let attn_o = b.attn_out_seq(layer, &attn);
+
+        match cfg.arch {
+            Arch::SwiGlu => {
+                // Sequential residual: x += attn; x += mlp(norm2(x)).
+                for i in 0..xs.data.len() {
+                    xs.data[i] += attn_o.data[i];
+                }
+                let h2 = norm_rows(&cfg, &lw.norm2, &xs);
+                if let Some(cap) = cap.as_deref_mut() {
+                    Capture::push(&mut cap.mlp_in[layer], &h2);
+                }
+                let m = b.mlp_seq(layer, &h2, cap.as_deref_mut());
+                for i in 0..xs.data.len() {
+                    xs.data[i] += m.data[i];
+                }
+            }
+            Arch::GeluNeoX => {
+                // Parallel residual: x += attn(norm1(x)) + mlp(norm2(x)).
+                let h2 = norm_rows(&cfg, &lw.norm2, &xs);
+                if let Some(cap) = cap.as_deref_mut() {
+                    Capture::push(&mut cap.mlp_in[layer], &h2);
+                }
+                let m = b.mlp_seq(layer, &h2, cap.as_deref_mut());
+                for i in 0..xs.data.len() {
+                    xs.data[i] += attn_o.data[i] + m.data[i];
+                }
+            }
+        }
+    }
+
+    let hf = norm_rows(&cfg, &w.final_norm, &xs);
+    hf.matmul(&w.lm_head.wt)
+}
+
+/// KV cache for incremental decoding.
+pub struct KvCache {
+    k: Vec<Mat>,
+    v: Vec<Mat>,
+    len: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        Self {
+            k: (0..cfg.n_layers).map(|_| Mat::zeros(cfg.max_seq, cfg.d_model)).collect(),
+            v: (0..cfg.n_layers).map(|_| Mat::zeros(cfg.max_seq, cfg.d_model)).collect(),
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+}
+
+/// One decode step: append `token` at position `cache.len()`, return logits.
+pub fn decode_step<B: BlockOps>(b: &B, token: u32, cache: &mut KvCache) -> Vec<f32> {
+    let cfg = b.config().clone();
+    let w = b.weights();
+    let pos = cache.len;
+    assert!(pos < cfg.max_seq, "KV cache full");
+    let mut x: Vec<f32> = w.embed.row(token as usize).to_vec();
+
+    for layer in 0..cfg.n_layers {
+        let lw = &w.layers[layer];
+        let h1 = norm_tok(&cfg, &lw.norm1, &x);
+        let (mut q, mut k, v) = b.qkv_tok(layer, &h1);
+        ops::rope_heads(&mut q, cfg.n_heads, pos, cfg.rope_theta);
+        ops::rope_heads(&mut k, cfg.n_heads, pos, cfg.rope_theta);
+        cache.k[layer].row_mut(pos).copy_from_slice(&k);
+        cache.v[layer].row_mut(pos).copy_from_slice(&v);
+
+        // Attend over rows 0..=pos of the cache.
+        let attn = attention_over_cache(&q, &cache.k[layer], &cache.v[layer], pos + 1, cfg.n_heads);
+        let attn_o = b.attn_out_tok(layer, &attn);
+
+        match cfg.arch {
+            Arch::SwiGlu => {
+                for i in 0..x.len() {
+                    x[i] += attn_o[i];
+                }
+                let h2 = norm_tok(&cfg, &lw.norm2, &x);
+                let m = b.mlp_tok(layer, &h2);
+                for i in 0..x.len() {
+                    x[i] += m[i];
+                }
+            }
+            Arch::GeluNeoX => {
+                let h2 = norm_tok(&cfg, &lw.norm2, &x);
+                let m = b.mlp_tok(layer, &h2);
+                for i in 0..x.len() {
+                    x[i] += attn_o[i] + m[i];
+                }
+            }
+        }
+    }
+    cache.len = pos + 1;
+
+    let hf = norm_tok(&cfg, &w.final_norm, &x);
+    w.lm_head.apply(&hf)
+}
+
+/// Attention for the decode path against the first `ctx` cache rows.
+fn attention_over_cache(q: &[f32], k: &Mat, v: &Mat, ctx: usize, n_heads: usize) -> Vec<f32> {
+    let d = q.len();
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = vec![0.0f32; d];
+    let mut scores = vec![0.0f32; ctx];
+    for h in 0..n_heads {
+        let off = h * hd;
+        for (ki, s) in scores.iter_mut().enumerate() {
+            *s = crate::tensor::dot(&q[off..off + hd], &k.row(ki)[off..off + hd]) * scale;
+        }
+        ops::softmax(&mut scores);
+        for (ki, &sc) in scores.iter().enumerate() {
+            crate::tensor::axpy(sc, &v.row(ki)[off..off + hd], &mut out[off..off + hd]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::PythiaSize;
+
+    fn tiny_cfg(arch: Arch) -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            arch,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_hidden: 32,
+            vocab: 64,
+            max_seq: 32,
+            rope_theta: 10_000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    fn tiny_model(arch: Arch) -> Model {
+        let cfg = tiny_cfg(arch);
+        let w = ModelWeights::random_init(&cfg, 11);
+        Model::new(cfg, w).unwrap()
+    }
+
+    #[test]
+    fn decode_matches_seq_forward_swiglu() {
+        let m = tiny_model(Arch::SwiGlu);
+        let tokens: Vec<u32> = vec![1, 5, 9, 30, 2, 17];
+        let seq_logits = forward_seq(&m, &tokens, None);
+        let mut cache = KvCache::new(&m.cfg);
+        for (i, &t) in tokens.iter().enumerate() {
+            let logits = decode_step(&m, t, &mut cache);
+            crate::util::prop::close_slices(&logits, seq_logits.row(i), 2e-4, 2e-4)
+                .unwrap_or_else(|e| panic!("pos {i}: {e}"));
+        }
+    }
+
+    #[test]
+    fn decode_matches_seq_forward_neox() {
+        let m = tiny_model(Arch::GeluNeoX);
+        let tokens: Vec<u32> = vec![3, 8, 61, 0, 44];
+        let seq_logits = forward_seq(&m, &tokens, None);
+        let mut cache = KvCache::new(&m.cfg);
+        for (i, &t) in tokens.iter().enumerate() {
+            let logits = decode_step(&m, t, &mut cache);
+            crate::util::prop::close_slices(&logits, seq_logits.row(i), 2e-4, 2e-4)
+                .unwrap_or_else(|e| panic!("pos {i}: {e}"));
+        }
+    }
+
+    #[test]
+    fn capture_collects_expected_shapes() {
+        let m = tiny_model(Arch::SwiGlu);
+        let tokens: Vec<u32> = vec![1, 2, 3, 4];
+        let mut cap = Capture::new(m.cfg.n_layers);
+        let _ = forward_seq(&m, &tokens, Some(&mut cap));
+        for l in 0..m.cfg.n_layers {
+            assert_eq!(cap.qkv_in[l].len(), 4 * m.cfg.d_model);
+            assert_eq!(cap.mlp_in[l].len(), 4 * m.cfg.d_model);
+            assert_eq!(cap.down_in[l].len(), 4 * m.cfg.d_hidden);
+        }
+        let x = Capture::x_matrix(&cap.qkv_in[0], m.cfg.d_model);
+        assert_eq!((x.rows, x.cols), (m.cfg.d_model, 4));
+    }
+
+    #[test]
+    fn logits_depend_on_context() {
+        let m = tiny_model(Arch::SwiGlu);
+        let a = forward_seq(&m, &[1, 2, 3], None);
+        let b = forward_seq(&m, &[9, 2, 3], None);
+        // Same last token, different context → different last-row logits.
+        let diff: f32 = a
+            .row(2)
+            .iter()
+            .zip(b.row(2))
+            .map(|(x, y)| (x - y).abs())
+            .sum();
+        assert!(diff > 1e-3);
+    }
+
+    #[test]
+    fn prefix_property_of_causal_lm() {
+        // Logits at position i must not depend on tokens after i.
+        let m = tiny_model(Arch::GeluNeoX);
+        let full = forward_seq(&m, &[5, 6, 7, 8], None);
+        let prefix = forward_seq(&m, &[5, 6], None);
+        crate::util::prop::close_slices(full.row(0), prefix.row(0), 1e-4, 1e-4).unwrap();
+        crate::util::prop::close_slices(full.row(1), prefix.row(1), 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn all_preset_configs_forward() {
+        for cfg in [ModelConfig::pythia_sim(PythiaSize::S)] {
+            let w = ModelWeights::random_init(&cfg, 5);
+            let m = Model::new(cfg, w).unwrap();
+            let logits = forward_seq(&m, &[1, 2, 3], None);
+            assert_eq!(logits.rows, 3);
+            assert_eq!(logits.cols, m.cfg.vocab);
+            assert!(logits.data.iter().all(|v| v.is_finite()));
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! Transformer reference implementation: configs, weights, and the generic
+//! forward pass ([`BlockOps`]) that both the dense model and every adapted
+//! model implement.
+
+pub mod config;
+pub mod forward;
+pub mod ops;
+pub mod weights;
+
+pub use config::{Arch, ModelConfig, PythiaSize};
+pub use forward::{decode_step, forward_seq, BlockOps, Capture, KvCache, Model};
+pub use weights::{LayerWeights, Linear, ModelWeights, Norm};
+
+use std::path::PathBuf;
+
+/// Directory holding a trained model's artifacts.
+pub fn model_dir(name: &str) -> PathBuf {
+    crate::util::artifacts_dir().join(name)
+}
+
+/// Load a trained model from `artifacts/<name>/`; falls back to a seeded
+/// random init when artifacts have not been built (tests, smoke paths) —
+/// callers that need trained weights should use [`Model::load`] directly.
+pub fn load_or_random(name: &str, seed: u64) -> anyhow::Result<Model> {
+    let dir = model_dir(name);
+    if dir.join("manifest.json").exists() {
+        Model::load(&dir)
+    } else {
+        let cfg = ModelConfig::by_name(name)?;
+        let w = ModelWeights::random_init(&cfg, seed);
+        Model::new(cfg, w)
+    }
+}

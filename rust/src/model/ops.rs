@@ -1,0 +1,270 @@
+//! Elementwise / normalization / attention primitives shared by the dense
+//! and adapted forward passes. Definitions mirror `python/compile/model.py`
+//! exactly (tested against exported JAX goldens in `rust/tests/`).
+
+use crate::tensor::Mat;
+
+/// RMSNorm: `x / sqrt(mean(x²) + eps) * scale`.
+pub fn rmsnorm(x: &[f32], scale: &[f32], eps: f32) -> Vec<f32> {
+    let ms: f64 =
+        x.iter().map(|&v| (v as f64).powi(2)).sum::<f64>() / x.len() as f64;
+    let inv = 1.0 / (ms + eps as f64).sqrt() as f32;
+    x.iter().zip(scale).map(|(&v, &s)| v * inv * s).collect()
+}
+
+/// LayerNorm with scale and bias.
+pub fn layernorm(x: &[f32], scale: &[f32], bias: &[f32], eps: f32) -> Vec<f32> {
+    let n = x.len() as f64;
+    let mean: f64 = x.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let var: f64 = x.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+    let inv = (1.0 / (var + eps as f64).sqrt()) as f32;
+    let mean = mean as f32;
+    x.iter()
+        .zip(scale.iter().zip(bias))
+        .map(|(&v, (&s, &b))| (v - mean) * inv * s + b)
+        .collect()
+}
+
+/// SiLU (a.k.a. swish): `x * sigmoid(x)`.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// GeLU, tanh approximation (matches `jax.nn.gelu(approximate=True)`).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.7978845608028654; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Numerically-stable in-place softmax.
+pub fn softmax(x: &mut [f32]) {
+    let max = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f64;
+    for v in x.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v as f64;
+    }
+    let inv = (1.0 / sum) as f32;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Log-softmax value at one index (used for LM scoring without
+/// materializing the whole normalized distribution).
+pub fn log_softmax_at(logits: &[f32], idx: usize) -> f64 {
+    let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lse: f64 =
+        logits.iter().map(|&v| ((v as f64) - max).exp()).sum::<f64>().ln() + max;
+    logits[idx] as f64 - lse
+}
+
+/// Rotary position embedding applied in-place to one head vector `v`
+/// (length = head_dim, paired as (0, hd/2), (1, hd/2+1)… like jax's
+/// split-half convention).
+pub fn rope_in_place(v: &mut [f32], pos: usize, theta: f32) {
+    let hd = v.len();
+    let half = hd / 2;
+    for i in 0..half {
+        let freq = 1.0 / theta.powf(2.0 * i as f32 / hd as f32);
+        let angle = pos as f32 * freq;
+        let (sin, cos) = angle.sin_cos();
+        let a = v[i];
+        let b = v[i + half];
+        v[i] = a * cos - b * sin;
+        v[i + half] = a * sin + b * cos;
+    }
+}
+
+/// Apply RoPE to every head of a packed `[n_heads * head_dim]` vector.
+pub fn rope_heads(v: &mut [f32], n_heads: usize, pos: usize, theta: f32) {
+    let hd = v.len() / n_heads;
+    for h in 0..n_heads {
+        rope_in_place(&mut v[h * hd..(h + 1) * hd], pos, theta);
+    }
+}
+
+/// Causal multi-head attention over full sequences (gemm path).
+/// `q`, `k`, `v` are `[T, d_model]`; returns `[T, d_model]`.
+pub fn causal_attention_seq(q: &Mat, k: &Mat, v: &Mat, n_heads: usize) -> Mat {
+    let t = q.rows;
+    let d = q.cols;
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = Mat::zeros(t, d);
+    for h in 0..n_heads {
+        let off = h * hd;
+        for qi in 0..t {
+            // scores over keys 0..=qi
+            let mut scores: Vec<f32> = (0..=qi)
+                .map(|ki| {
+                    crate::tensor::dot(
+                        &q.row(qi)[off..off + hd],
+                        &k.row(ki)[off..off + hd],
+                    ) * scale
+                })
+                .collect();
+            softmax(&mut scores);
+            let orow = out.row_mut(qi);
+            for (ki, &w) in scores.iter().enumerate() {
+                crate::tensor::axpy(w, &v.row(ki)[off..off + hd], &mut orow[off..off + hd]);
+            }
+        }
+    }
+    out
+}
+
+/// One decode step of causal attention against cached K/V (`[ctx, d]`).
+pub fn causal_attention_step(
+    q: &[f32],
+    k_cache: &Mat,
+    v_cache: &Mat,
+    n_heads: usize,
+) -> Vec<f32> {
+    let ctx = k_cache.rows;
+    let d = q.len();
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = vec![0.0f32; d];
+    for h in 0..n_heads {
+        let off = h * hd;
+        let mut scores: Vec<f32> = (0..ctx)
+            .map(|ki| {
+                crate::tensor::dot(&q[off..off + hd], &k_cache.row(ki)[off..off + hd]) * scale
+            })
+            .collect();
+        softmax(&mut scores);
+        for (ki, &w) in scores.iter().enumerate() {
+            crate::tensor::axpy(w, &v_cache.row(ki)[off..off + hd], &mut out[off..off + hd]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn rmsnorm_unit_output_scale() {
+        let x = vec![3.0f32, -4.0];
+        let scale = vec![1.0f32, 1.0];
+        let y = rmsnorm(&x, &scale, 0.0);
+        // rms = sqrt((9+16)/2) = sqrt(12.5)
+        let rms = 12.5f32.sqrt();
+        assert!((y[0] - 3.0 / rms).abs() < 1e-6);
+        assert!((y[1] + 4.0 / rms).abs() < 1e-6);
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let s = vec![1.0f32; 4];
+        let b = vec![0.0f32; 4];
+        let y = layernorm(&x, &s, &b, 0.0);
+        let mean: f32 = y.iter().sum::<f32>() / 4.0;
+        let var: f32 = y.iter().map(|&v| (v - mean).powi(2)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn activation_values() {
+        assert!((silu(0.0)).abs() < 1e-7);
+        assert!((silu(1.0) - 0.7310586).abs() < 1e-5);
+        assert!(gelu(0.0).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let mut x = vec![1000.0f32, 1001.0, 999.0];
+        softmax(&mut x);
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(x[1] > x[0] && x[0] > x[2]);
+    }
+
+    #[test]
+    fn log_softmax_at_matches_direct() {
+        let logits = vec![0.5f32, -1.0, 2.0];
+        let mut probs = logits.clone();
+        softmax(&mut probs);
+        for i in 0..3 {
+            assert!((log_softmax_at(&logits, i) - (probs[i] as f64).ln()).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_pos0_is_identity() {
+        let mut v = vec![1.0f32, 2.0, 3.0, 4.0];
+        let orig = v.clone();
+        rope_in_place(&mut v, 0, 10_000.0);
+        assert_eq!(v, orig);
+        rope_in_place(&mut v, 7, 10_000.0);
+        let n0: f32 = orig.iter().map(|x| x * x).sum();
+        let n1: f32 = v.iter().map(|x| x * x).sum();
+        assert!((n0 - n1).abs() < 1e-4);
+        assert_ne!(v, orig);
+    }
+
+    #[test]
+    fn rope_relative_property() {
+        // <rope(q,m), rope(k,n)> depends only on m-n (per 2D pair).
+        let q = vec![0.3f32, -0.7];
+        let k = vec![1.1f32, 0.4];
+        let dots: Vec<f32> = (0..3)
+            .map(|shift| {
+                let mut qq = q.clone();
+                let mut kk = k.clone();
+                rope_in_place(&mut qq, 5 + shift, 10_000.0);
+                rope_in_place(&mut kk, 2 + shift, 10_000.0);
+                crate::tensor::dot(&qq, &kk)
+            })
+            .collect();
+        assert!((dots[0] - dots[1]).abs() < 1e-4);
+        assert!((dots[1] - dots[2]).abs() < 1e-4);
+    }
+
+    #[test]
+    fn attention_step_matches_seq_last_row() {
+        let mut rng = Xoshiro256::new(3);
+        let (t, d, heads) = (5, 8, 2);
+        let q = Mat::gaussian(t, d, 1.0, &mut rng);
+        let k = Mat::gaussian(t, d, 1.0, &mut rng);
+        let v = Mat::gaussian(t, d, 1.0, &mut rng);
+        let seq = causal_attention_seq(&q, &k, &v, heads);
+        let step = causal_attention_step(q.row(t - 1), &k, &v, heads);
+        crate::util::prop::close_slices(seq.row(t - 1), &step, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn attention_is_causal() {
+        // Changing a future key/value must not change earlier outputs.
+        let mut rng = Xoshiro256::new(4);
+        let (t, d, heads) = (6, 4, 1);
+        let q = Mat::gaussian(t, d, 1.0, &mut rng);
+        let k = Mat::gaussian(t, d, 1.0, &mut rng);
+        let v = Mat::gaussian(t, d, 1.0, &mut rng);
+        let base = causal_attention_seq(&q, &k, &v, heads);
+        let mut k2 = k.clone();
+        let mut v2 = v.clone();
+        for c in 0..d {
+            *k2.at_mut(t - 1, c) += 5.0;
+            *v2.at_mut(t - 1, c) -= 3.0;
+        }
+        let mod_out = causal_attention_seq(&q, &k2, &v2, heads);
+        for r in 0..t - 1 {
+            crate::util::prop::close_slices(base.row(r), mod_out.row(r), 1e-6, 1e-6).unwrap();
+        }
+    }
+}

@@ -1,0 +1,337 @@
+//! Weight storage and the manifest/.bin interchange format.
+//!
+//! `python/compile/train.py` writes `artifacts/<model>/manifest.json` (the
+//! config plus a tensor directory) and `weights.bin` (concatenated
+//! little-endian f32). This module loads them into [`ModelWeights`]; for
+//! tests that must run before `make artifacts`, [`ModelWeights::random_init`]
+//! produces a weight set with realistic scales.
+//!
+//! Every linear is stored both as `w` (`out×in`, for GEMV decode) and as
+//! `wt` (`in×out`, for the GEMM sequence path) — the transposes are built
+//! once at load time.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::config::{Arch, ModelConfig};
+use crate::tensor::Mat;
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256;
+
+/// A linear layer kept in both orientations.
+#[derive(Clone, Debug)]
+pub struct Linear {
+    /// `out × in` — `y = w·x` (decode path).
+    pub w: Mat,
+    /// `in × out` — `ys = xs·wt` (sequence path).
+    pub wt: Mat,
+}
+
+impl Linear {
+    pub fn new(w: Mat) -> Self {
+        let wt = w.transpose();
+        Self { w, wt }
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.w.rows
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.w.cols
+    }
+
+    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+        self.w.matvec(x)
+    }
+
+    pub fn apply_seq(&self, xs: &Mat) -> Mat {
+        xs.matmul(&self.wt)
+    }
+}
+
+/// Norm parameters (bias present only for LayerNorm archs).
+#[derive(Clone, Debug)]
+pub struct Norm {
+    pub scale: Vec<f32>,
+    pub bias: Option<Vec<f32>>,
+}
+
+/// Per-layer weights.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub wq: Linear,
+    pub wk: Linear,
+    pub wv: Linear,
+    pub wo: Linear,
+    pub up: Linear,
+    /// Present for SwiGLU archs only.
+    pub gate: Option<Linear>,
+    pub down: Linear,
+    pub norm1: Norm,
+    pub norm2: Norm,
+}
+
+/// Full model weights.
+pub struct ModelWeights {
+    pub embed: Mat, // vocab × d
+    pub layers: Vec<LayerWeights>,
+    pub final_norm: Norm,
+    pub lm_head: Linear, // vocab × d
+}
+
+impl ModelWeights {
+    /// Scaled-gaussian initialization (same scheme as train.py's init) —
+    /// used by tests and by the training-free smoke paths.
+    pub fn random_init(cfg: &ModelConfig, seed: u64) -> Self {
+        let mut rng = Xoshiro256::new(seed);
+        let d = cfg.d_model;
+        let h = cfg.d_hidden;
+        let std_d = 1.0 / (d as f32).sqrt();
+        let std_h = 1.0 / (h as f32).sqrt();
+        let lin = |o: usize, i: usize, std: f32, rng: &mut Xoshiro256| {
+            Linear::new(Mat::gaussian(o, i, std, rng))
+        };
+        let norm = |cfg: &ModelConfig, d: usize| Norm {
+            scale: vec![1.0; d],
+            bias: if cfg.arch == Arch::GeluNeoX { Some(vec![0.0; d]) } else { None },
+        };
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerWeights {
+                wq: lin(d, d, std_d, &mut rng),
+                wk: lin(d, d, std_d, &mut rng),
+                wv: lin(d, d, std_d, &mut rng),
+                wo: lin(d, d, std_d, &mut rng),
+                up: lin(h, d, std_d, &mut rng),
+                gate: if cfg.arch == Arch::SwiGlu {
+                    Some(lin(h, d, std_d, &mut rng))
+                } else {
+                    None
+                },
+                down: lin(d, h, std_h, &mut rng),
+                norm1: norm(cfg, d),
+                norm2: norm(cfg, d),
+            })
+            .collect();
+        Self {
+            embed: Mat::gaussian(cfg.vocab, d, 0.02, &mut rng),
+            layers,
+            final_norm: norm(cfg, d),
+            lm_head: lin(cfg.vocab, d, std_d, &mut rng),
+        }
+    }
+
+    /// Load a trained model from `dir/manifest.json` + `dir/weights.bin`.
+    pub fn load(dir: &Path) -> anyhow::Result<(ModelConfig, ModelWeights)> {
+        let manifest = Json::parse(&std::fs::read_to_string(dir.join("manifest.json"))?)?;
+        let cfg = ModelConfig::from_json(manifest.get("config")?)?;
+        let blob = crate::util::read_f32_bin(&dir.join("weights.bin"))?;
+
+        // Tensor directory: name → (shape, offset in floats).
+        let mut dirmap: BTreeMap<String, (Vec<usize>, usize)> = BTreeMap::new();
+        for t in manifest
+            .get("tensors")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("tensors not an array"))?
+        {
+            let name = t.get_str("name")?.to_string();
+            let shape: Vec<usize> = t
+                .get("shape")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("shape not an array"))?
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0))
+                .collect();
+            let offset = t.get_usize("offset")?;
+            dirmap.insert(name, (shape, offset));
+        }
+
+        let fetch_mat = |name: &str| -> anyhow::Result<Mat> {
+            let (shape, off) = dirmap
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("tensor {name:?} missing from manifest"))?;
+            anyhow::ensure!(shape.len() == 2, "{name}: expected 2-d tensor");
+            let n = shape[0] * shape[1];
+            anyhow::ensure!(off + n <= blob.len(), "{name}: out of range");
+            Ok(Mat::from_vec(shape[0], shape[1], blob[*off..off + n].to_vec()))
+        };
+        let fetch_vec = |name: &str| -> anyhow::Result<Vec<f32>> {
+            let (shape, off) = dirmap
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("tensor {name:?} missing from manifest"))?;
+            let n: usize = shape.iter().product();
+            Ok(blob[*off..off + n].to_vec())
+        };
+        let fetch_norm = |prefix: &str, has_bias: bool| -> anyhow::Result<Norm> {
+            Ok(Norm {
+                scale: fetch_vec(&format!("{prefix}.scale"))?,
+                bias: if has_bias {
+                    Some(fetch_vec(&format!("{prefix}.bias"))?)
+                } else {
+                    None
+                },
+            })
+        };
+
+        let has_bias = cfg.arch == Arch::GeluNeoX;
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let p = format!("layers.{l}");
+            layers.push(LayerWeights {
+                wq: Linear::new(fetch_mat(&format!("{p}.attn.wq"))?),
+                wk: Linear::new(fetch_mat(&format!("{p}.attn.wk"))?),
+                wv: Linear::new(fetch_mat(&format!("{p}.attn.wv"))?),
+                wo: Linear::new(fetch_mat(&format!("{p}.attn.wo"))?),
+                up: Linear::new(fetch_mat(&format!("{p}.mlp.up"))?),
+                gate: if cfg.arch == Arch::SwiGlu {
+                    Some(Linear::new(fetch_mat(&format!("{p}.mlp.gate"))?))
+                } else {
+                    None
+                },
+                down: Linear::new(fetch_mat(&format!("{p}.mlp.down"))?),
+                norm1: fetch_norm(&format!("{p}.norm1"), has_bias)?,
+                norm2: fetch_norm(&format!("{p}.norm2"), has_bias)?,
+            });
+        }
+        let weights = ModelWeights {
+            embed: fetch_mat("embed")?,
+            layers,
+            final_norm: fetch_norm("final_norm", has_bias)?,
+            lm_head: Linear::new(fetch_mat("lm_head")?),
+        };
+        weights.validate(&cfg)?;
+        Ok((cfg, weights))
+    }
+
+    /// Shape-check against a config.
+    pub fn validate(&self, cfg: &ModelConfig) -> anyhow::Result<()> {
+        let (d, h, v) = (cfg.d_model, cfg.d_hidden, cfg.vocab);
+        anyhow::ensure!(self.embed.rows == v && self.embed.cols == d, "embed shape");
+        anyhow::ensure!(self.layers.len() == cfg.n_layers, "layer count");
+        for (i, l) in self.layers.iter().enumerate() {
+            let shapes = [
+                (l.wq.w.rows, l.wq.w.cols, d, d, "wq"),
+                (l.wk.w.rows, l.wk.w.cols, d, d, "wk"),
+                (l.wv.w.rows, l.wv.w.cols, d, d, "wv"),
+                (l.wo.w.rows, l.wo.w.cols, d, d, "wo"),
+                (l.up.w.rows, l.up.w.cols, h, d, "up"),
+                (l.down.w.rows, l.down.w.cols, d, h, "down"),
+            ];
+            for (r, c, er, ec, name) in shapes {
+                anyhow::ensure!(r == er && c == ec, "layer {i} {name}: {r}×{c} != {er}×{ec}");
+            }
+            anyhow::ensure!(
+                l.gate.is_some() == (cfg.arch == Arch::SwiGlu),
+                "layer {i}: gate presence vs arch"
+            );
+            anyhow::ensure!(l.norm1.scale.len() == d, "layer {i} norm1");
+            anyhow::ensure!(
+                l.norm1.bias.is_some() == (cfg.arch == Arch::GeluNeoX),
+                "layer {i}: norm bias vs arch"
+            );
+        }
+        anyhow::ensure!(
+            self.lm_head.w.rows == v && self.lm_head.w.cols == d,
+            "lm_head shape"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::PythiaSize;
+
+    #[test]
+    fn random_init_validates_for_all_archs() {
+        for cfg in ModelConfig::all() {
+            let w = ModelWeights::random_init(&cfg, 1);
+            w.validate(&cfg).unwrap();
+        }
+    }
+
+    #[test]
+    fn linear_orientations_agree() {
+        let mut rng = Xoshiro256::new(2);
+        let lin = Linear::new(Mat::gaussian(6, 4, 1.0, &mut rng));
+        let x: Vec<f32> = (0..4).map(|_| rng.gaussian()).collect();
+        let y1 = lin.apply(&x);
+        let xs = Mat::from_vec(1, 4, x);
+        let y2 = lin.apply_seq(&xs);
+        crate::util::prop::close_slices(&y1, &y2.data, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn manifest_roundtrip_via_files() {
+        // Write a tiny random model in the manifest format and load it back.
+        let cfg = ModelConfig {
+            name: "tiny".into(),
+            d_model: 8,
+            n_layers: 1,
+            n_heads: 2,
+            d_hidden: 16,
+            vocab: 32,
+            ..ModelConfig::pythia_sim(PythiaSize::S)
+        };
+        let w = ModelWeights::random_init(&cfg, 3);
+        let dir = std::env::temp_dir().join(format!("rana-weights-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // Serialize by walking the same naming scheme.
+        let mut blob: Vec<f32> = Vec::new();
+        let mut tensors: Vec<Json> = Vec::new();
+        let mut push = |name: String, shape: Vec<usize>, data: &[f32], blob: &mut Vec<f32>| {
+            tensors.push(Json::obj(vec![
+                ("name", Json::Str(name)),
+                ("shape", Json::arr_usize(&shape)),
+                ("offset", Json::Num(blob.len() as f64)),
+            ]));
+            blob.extend_from_slice(data);
+        };
+        push("embed".into(), vec![cfg.vocab, cfg.d_model], &w.embed.data, &mut blob);
+        let l = &w.layers[0];
+        for (n, m) in [
+            ("wq", &l.wq),
+            ("wk", &l.wk),
+            ("wv", &l.wv),
+            ("wo", &l.wo),
+        ] {
+            push(format!("layers.0.attn.{n}"), vec![m.w.rows, m.w.cols], &m.w.data, &mut blob);
+        }
+        for (n, m) in [("up", &l.up), ("down", &l.down)] {
+            push(format!("layers.0.mlp.{n}"), vec![m.w.rows, m.w.cols], &m.w.data, &mut blob);
+        }
+        for (n, norm) in [("norm1", &l.norm1), ("norm2", &l.norm2)] {
+            push(format!("layers.0.{n}.scale"), vec![cfg.d_model], &norm.scale, &mut blob);
+            push(
+                format!("layers.0.{n}.bias"),
+                vec![cfg.d_model],
+                norm.bias.as_ref().unwrap(),
+                &mut blob,
+            );
+        }
+        push("final_norm.scale".into(), vec![cfg.d_model], &w.final_norm.scale, &mut blob);
+        push(
+            "final_norm.bias".into(),
+            vec![cfg.d_model],
+            w.final_norm.bias.as_ref().unwrap(),
+            &mut blob,
+        );
+        push("lm_head".into(), vec![cfg.vocab, cfg.d_model], &w.lm_head.w.data, &mut blob);
+
+        let manifest = Json::obj(vec![
+            ("config", cfg.to_json()),
+            ("tensors", Json::Arr(tensors)),
+        ]);
+        std::fs::write(dir.join("manifest.json"), manifest.to_string()).unwrap();
+        crate::util::write_f32_bin(&dir.join("weights.bin"), &blob).unwrap();
+
+        let (cfg2, w2) = ModelWeights::load(&dir).unwrap();
+        assert_eq!(cfg2, cfg);
+        assert_eq!(w2.embed, w.embed);
+        assert_eq!(w2.layers[0].down.w, w.layers[0].down.w);
+        assert_eq!(w2.lm_head.w, w.lm_head.w);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

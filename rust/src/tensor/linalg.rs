@@ -1,0 +1,393 @@
+//! Dense linear algebra: Householder QR, cyclic Jacobi symmetric
+//! eigendecomposition, and the randomized thin SVD that powers Theorem 1
+//! (`A = U`, `B = UᵀW` with `U` the left singular vectors of `W·X`).
+//!
+//! For the matrix sizes in this reproduction (output dims ≤ ~1k, calibration
+//! sets of tens of thousands of columns) the right tool is a randomized
+//! range-finder with power iterations (Halko–Martinsson–Tropp): we never form
+//! `W·X` when only `k` singular vectors are needed, and accuracy is cross-
+//! checked against exact Jacobi on small cases in the tests below.
+
+use super::Mat;
+use crate::util::rng::Xoshiro256;
+
+/// Householder QR: returns `Q` with orthonormal columns such that
+/// `Q R = a` (thin form, `Q` is `rows × min(rows, cols)`).
+pub fn qr_q(a: &Mat) -> Mat {
+    let (m, n) = (a.rows, a.cols);
+    let k = m.min(n);
+    let mut r = a.clone();
+    // Householder vectors stored below the diagonal of `r`; betas kept aside.
+    let mut betas = vec![0.0f32; k];
+    for j in 0..k {
+        // Compute the Householder reflector for column j.
+        let mut norm = 0.0f64;
+        for i in j..m {
+            norm += (r.at(i, j) as f64).powi(2);
+        }
+        let norm = norm.sqrt() as f32;
+        if norm < 1e-20 {
+            betas[j] = 0.0;
+            continue;
+        }
+        let alpha = if r.at(j, j) >= 0.0 { -norm } else { norm };
+        let v0 = r.at(j, j) - alpha;
+        // v = [v0, r[j+1..m, j]]; normalize so v[0] = 1.
+        let mut vnorm_sq = (v0 as f64).powi(2);
+        for i in j + 1..m {
+            vnorm_sq += (r.at(i, j) as f64).powi(2);
+        }
+        if vnorm_sq < 1e-30 {
+            betas[j] = 0.0;
+            *r.at_mut(j, j) = alpha;
+            continue;
+        }
+        let beta = (2.0 * (v0 as f64).powi(2) / vnorm_sq) as f32;
+        // Store normalized v (v/v0) below diagonal; v[j] implicit 1.
+        for i in j + 1..m {
+            *r.at_mut(i, j) /= v0;
+        }
+        betas[j] = beta;
+        *r.at_mut(j, j) = alpha;
+        // Apply reflector to the trailing columns.
+        for c in j + 1..n {
+            let mut dot = r.at(j, c) as f64;
+            for i in j + 1..m {
+                dot += r.at(i, j) as f64 * r.at(i, c) as f64;
+            }
+            let s = beta as f64 * dot;
+            *r.at_mut(j, c) -= s as f32;
+            for i in j + 1..m {
+                let vij = r.at(i, j);
+                *r.at_mut(i, c) -= (s * vij as f64) as f32;
+            }
+        }
+    }
+    // Accumulate Q = H_0 H_1 ... H_{k-1} applied to the thin identity.
+    let mut q = Mat::from_fn(m, k, |i, j| if i == j { 1.0 } else { 0.0 });
+    for j in (0..k).rev() {
+        let beta = betas[j];
+        if beta == 0.0 {
+            continue;
+        }
+        for c in 0..k {
+            let mut dot = q.at(j, c) as f64;
+            for i in j + 1..m {
+                dot += r.at(i, j) as f64 * q.at(i, c) as f64;
+            }
+            let s = beta as f64 * dot;
+            *q.at_mut(j, c) -= s as f32;
+            for i in j + 1..m {
+                let vij = r.at(i, j);
+                *q.at_mut(i, c) -= (s * vij as f64) as f32;
+            }
+        }
+    }
+    q
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+/// Returns `(eigenvalues, eigenvectors)` sorted by descending eigenvalue;
+/// eigenvectors are the *columns* of the returned matrix.
+pub fn jacobi_eigh(a: &Mat) -> (Vec<f32>, Mat) {
+    assert_eq!(a.rows, a.cols, "eigh needs a square matrix");
+    let n = a.rows;
+    let mut m: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let idx = |r: usize, c: usize| r * n + c;
+    for _sweep in 0..64 {
+        // Off-diagonal Frobenius mass → convergence test.
+        let mut off = 0.0f64;
+        for r in 0..n {
+            for c in r + 1..n {
+                off += m[idx(r, c)].powi(2);
+            }
+        }
+        if off < 1e-22 * n as f64 {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m[idx(p, q)];
+                if apq.abs() < 1e-30 {
+                    continue;
+                }
+                let app = m[idx(p, p)];
+                let aqq = m[idx(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p and q of m.
+                for k in 0..n {
+                    let mkp = m[idx(k, p)];
+                    let mkq = m[idx(k, q)];
+                    m[idx(k, p)] = c * mkp - s * mkq;
+                    m[idx(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[idx(p, k)];
+                    let mqk = m[idx(q, k)];
+                    m[idx(p, k)] = c * mpk - s * mqk;
+                    m[idx(q, k)] = s * mpk + c * mqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v[idx(k, p)];
+                    let vkq = v[idx(k, q)];
+                    v[idx(k, p)] = c * vkp - s * vkq;
+                    v[idx(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    // Extract, sort by descending eigenvalue.
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[idx(i, i)], i)).collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let vals: Vec<f32> = pairs.iter().map(|&(val, _)| val as f32).collect();
+    let mut vecs = Mat::zeros(n, n);
+    for (new_c, &(_, old_c)) in pairs.iter().enumerate() {
+        for r in 0..n {
+            *vecs.at_mut(r, new_c) = v[idx(r, old_c)] as f32;
+        }
+    }
+    (vals, vecs)
+}
+
+/// Result of a thin left-SVD: `u` has orthonormal columns, `s` descending.
+pub struct ThinSvd {
+    /// `o × k` — left singular vectors (columns).
+    pub u: Mat,
+    /// `k` singular values, descending.
+    pub s: Vec<f32>,
+}
+
+/// Randomized thin SVD of an *implicit product* `M = W·X` (`W: o×i`,
+/// `X: i×n`), returning the top-`k` left singular vectors without forming
+/// `M`. `power` = subspace-iteration count (2 is plenty for heavy-tailed
+/// spectra like transformer activations).
+///
+/// This is the computational heart of Theorem 1: the paper's `A := U_r`,
+/// `B := U_rᵀ W` uses exactly these `U_r`.
+pub fn left_sv_of_product(w: &Mat, x: &Mat, k: usize, power: usize, seed: u64) -> ThinSvd {
+    assert_eq!(w.cols, x.rows, "W (o×i) and X (i×n) disagree on i");
+    let o = w.rows;
+    let n = x.cols;
+    let k = k.min(o).min(n);
+    let oversample = (k / 8).clamp(8, 32);
+    let l = (k + oversample).min(o).min(n);
+    let mut rng = Xoshiro256::new(seed);
+
+    // Range finder: Y = M Ω = W (X Ω), Ω: n×l.
+    let omega = Mat::gaussian(n, l, 1.0, &mut rng);
+    let xo = x.matmul(&omega); // i × l
+    let mut y = w.matmul(&xo); // o × l
+    // Power iterations with re-orthonormalization: Y ← M Mᵀ Y.
+    for _ in 0..power {
+        let q = qr_q(&y); // o × l
+        // Mᵀ Q = Xᵀ (Wᵀ Q): compute Wᵀ Q (i×l) then Xᵀ· (n×l).
+        let wtq = w.transpose().matmul(&q);
+        let mtq = x.transpose().matmul(&wtq);
+        // Y = M (Mᵀ Q) = W (X (MᵀQ))
+        let xm = x.matmul(&mtq);
+        y = w.matmul(&xm);
+    }
+    let q = qr_q(&y); // o × l, orthonormal columns spanning range(M)
+
+    // Project: B = Qᵀ M = (Qᵀ W) X  — l × n. Then SVD(B) via the Gram trick:
+    // B Bᵀ = V Λ Vᵀ (l×l, Jacobi), U = Q V, σ = sqrt(Λ).
+    let qtw = q.transpose().matmul(w); // l × i
+    let b = qtw.matmul(x); // l × n
+    let gram = b.matmul(&b.transpose()); // l × l
+    let (vals, vecs) = jacobi_eigh(&gram);
+    let u_full = q.matmul(&vecs); // o × l
+    // Keep top-k.
+    let mut u = Mat::zeros(o, k);
+    for r in 0..o {
+        for c in 0..k {
+            *u.at_mut(r, c) = u_full.at(r, c);
+        }
+    }
+    let s: Vec<f32> = vals.iter().take(k).map(|&v| v.max(0.0).sqrt()).collect();
+    ThinSvd { u, s }
+}
+
+/// Thin SVD (left vectors + values) of an explicit matrix, via the product
+/// form with `X = I`.
+pub fn left_sv(m: &Mat, k: usize, power: usize, seed: u64) -> ThinSvd {
+    let eye = Mat::eye(m.cols);
+    left_sv_of_product(m, &eye, k, power, seed)
+}
+
+/// Exact left singular vectors of a small matrix via Jacobi on `M Mᵀ`
+/// (test oracle + used when `k ≈ min(o, n)` and the matrix is small).
+pub fn exact_left_sv(m: &Mat, k: usize) -> ThinSvd {
+    let gram = m.matmul(&m.transpose());
+    let (vals, vecs) = jacobi_eigh(&gram);
+    let k = k.min(m.rows);
+    let mut u = Mat::zeros(m.rows, k);
+    for r in 0..m.rows {
+        for c in 0..k {
+            *u.at_mut(r, c) = vecs.at(r, c);
+        }
+    }
+    let s = vals.iter().take(k).map(|&v| v.max(0.0).sqrt()).collect();
+    ThinSvd { u, s }
+}
+
+/// Top principal directions of the *rows* of `X` seen as samples
+/// (`X: i×n` column-samples → PCA of the i-dimensional distribution).
+/// Returns `i × k` orthonormal basis. Used by the SliceGPT-style baseline.
+pub fn pca_basis(x: &Mat, k: usize, seed: u64) -> Mat {
+    // Left singular vectors of X itself.
+    let svd = left_sv(x, k, 2, seed);
+    svd.u
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+
+    fn orthonormal_cols(q: &Mat, tol: f32) -> Result<(), String> {
+        for c1 in 0..q.cols {
+            for c2 in c1..q.cols {
+                let d: f64 = (0..q.rows)
+                    .map(|r| q.at(r, c1) as f64 * q.at(r, c2) as f64)
+                    .sum();
+                let want = if c1 == c2 { 1.0 } else { 0.0 };
+                if (d - want).abs() > tol as f64 {
+                    return Err(format!("Q col {c1}·{c2} = {d}, want {want}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn qr_q_is_orthonormal_and_spans() {
+        check("qr_q", Config { cases: 20, max_size: 32, ..Default::default() }, |rng, size| {
+            let m = 2 + rng.below(size.max(2));
+            let n = 1 + rng.below(m);
+            let a = Mat::gaussian(m, n, 1.0, rng);
+            let q = qr_q(&a);
+            orthonormal_cols(&q, 1e-3)?;
+            // Q Qᵀ a == a (Q spans the column space of a)
+            let proj = q.matmul(&q.transpose().matmul(&a));
+            crate::util::prop::close_slices(&proj.data, &a.data, 1e-2, 1e-2)
+        });
+    }
+
+    #[test]
+    fn jacobi_diagonalizes_known_matrix() {
+        // [[2,1],[1,2]] has eigenvalues 3, 1 with vectors [1,1]/√2, [1,-1]/√2.
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let (vals, vecs) = jacobi_eigh(&a);
+        assert!((vals[0] - 3.0).abs() < 1e-5);
+        assert!((vals[1] - 1.0).abs() < 1e-5);
+        let v0 = vecs.col(0);
+        assert!((v0[0].abs() - std::f32::consts::FRAC_1_SQRT_2).abs() < 1e-4);
+        assert!((v0[0] - v0[1]).abs() < 1e-4);
+    }
+
+    #[test]
+    fn jacobi_reconstructs_symmetric() {
+        check("eigh-reconstruct", Config { cases: 12, max_size: 24, ..Default::default() }, |rng, size| {
+            let n = 2 + rng.below(size.max(2));
+            let g = Mat::gaussian(n, n, 1.0, rng);
+            let a = {
+                // symmetrize
+                let t = g.transpose();
+                let mut s = g.clone();
+                for i in 0..n * n {
+                    s.data[i] = 0.5 * (g.data[i] + t.data[i]);
+                }
+                s
+            };
+            let (vals, vecs) = jacobi_eigh(&a);
+            // A ≈ V diag(vals) Vᵀ
+            let mut vd = vecs.clone();
+            for r in 0..n {
+                for c in 0..n {
+                    *vd.at_mut(r, c) *= vals[c];
+                }
+            }
+            let recon = vd.matmul(&vecs.transpose());
+            crate::util::prop::close_slices(&recon.data, &a.data, 1e-3, 1e-3)
+        });
+    }
+
+    #[test]
+    fn randomized_svd_matches_exact_on_small() {
+        check("rsvd==exact", Config { cases: 10, max_size: 20, ..Default::default() }, |rng, size| {
+            let o = 3 + rng.below(size.max(2));
+            let i = 3 + rng.below(size.max(2));
+            let n = o + i + 5;
+            let w = Mat::gaussian(o, i, 1.0, rng);
+            let x = Mat::gaussian(i, n, 1.0, rng);
+            let m = w.matmul(&x);
+            let k = 2.min(o);
+            let fast = left_sv_of_product(&w, &x, k, 3, 42);
+            let exact = exact_left_sv(&m, k);
+            // Compare singular values and subspace alignment |u_fastᵀ u_exact| ≈ 1.
+            for j in 0..k {
+                let rel = (fast.s[j] - exact.s[j]).abs() / exact.s[j].max(1e-6);
+                if rel > 0.05 {
+                    return Err(format!("σ{j}: {} vs {}", fast.s[j], exact.s[j]));
+                }
+                // Only check alignment when the singular value is well-separated
+                // from its neighbours (otherwise vectors can rotate freely).
+                let sep_ok = (j == 0 || (exact.s[j - 1] - exact.s[j]) / exact.s[0] > 0.05)
+                    && (j + 1 >= exact.s.len()
+                        || (exact.s[j] - exact.s[j + 1]) / exact.s[0] > 0.05);
+                if sep_ok {
+                    let d: f64 = (0..o)
+                        .map(|r| fast.u.at(r, j) as f64 * exact.u.at(r, j) as f64)
+                        .sum();
+                    if d.abs() < 0.98 {
+                        return Err(format!("u{j} alignment {d}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn low_rank_reconstruction_error_is_optimal_ish() {
+        // Build M with a planted fast-decaying spectrum; rank-k approx from
+        // left_sv_of_product should capture almost all the energy.
+        let mut rng = Xoshiro256::new(17);
+        let (o, i, n) = (24, 16, 64);
+        let u = qr_q(&Mat::gaussian(o, 4, 1.0, &mut rng));
+        let v = qr_q(&Mat::gaussian(i, 4, 1.0, &mut rng));
+        // W = U diag(10, 5, 1, 0.1) Vᵀ → rank 4 exactly.
+        let mut ud = u.clone();
+        let sv = [10.0f32, 5.0, 1.0, 0.1];
+        for r in 0..o {
+            for c in 0..4 {
+                *ud.at_mut(r, c) *= sv[c];
+            }
+        }
+        let w = ud.matmul(&v.transpose());
+        let x = Mat::gaussian(i, n, 1.0, &mut rng);
+        let svd = left_sv_of_product(&w, &x, 3, 2, 7);
+        // Error of projecting M = WX onto span(U_3) should be ≤ σ₄-scale.
+        let m = w.matmul(&x);
+        let proj = svd.u.matmul(&svd.u.transpose().matmul(&m));
+        let err = proj.sub(&m).fro_norm() / m.fro_norm();
+        assert!(err < 0.05, "relative err {err}");
+    }
+
+    #[test]
+    fn pca_basis_is_orthonormal() {
+        let mut rng = Xoshiro256::new(23);
+        let x = Mat::gaussian(12, 40, 1.0, &mut rng);
+        let q = pca_basis(&x, 5, 3);
+        assert_eq!((q.rows, q.cols), (12, 5));
+        orthonormal_cols(&q, 1e-3).unwrap();
+    }
+}

@@ -1,0 +1,431 @@
+//! Row-major f32 matrix/vector kernels.
+//!
+//! This is the numerical substrate for the pure-rust engine: blocked and
+//! parallel GEMM, GEMV, and the **masked** GEMV/GEMM fast paths that realize
+//! RaNA's FLOP savings in wall-clock time (the rust analogue of the paper's
+//! Triton masked-GEMV kernel, §5.3 "Latency Evaluations").
+//!
+//! Layout conventions:
+//! * [`Mat`] is row-major `(rows, cols)`.
+//! * Masked products are expressed over the *transposed* operand so the
+//!   inner loop walks contiguous memory: `masked_acc_gemv(at, m, c, out)`
+//!   computes `out += A (m ⊙ c) = Σ_{i: m_i} c_i · at.row(i)` — i.e. `A`
+//!   stored column-major as `at = Aᵀ`. Skipped rows are genuinely skipped,
+//!   which is where the latency win comes from.
+
+pub mod linalg;
+
+use crate::util::pool::parallel_chunks;
+use crate::util::rng::Xoshiro256;
+
+/// Dense row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Self::from_fn(n, n, |r, c| if r == c { 1.0 } else { 0.0 })
+    }
+
+    pub fn gaussian(rows: usize, cols: usize, std: f32, rng: &mut Xoshiro256) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        rng.fill_gaussian(&mut m.data, std);
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness.
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        out.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Select a subset of rows.
+    pub fn rows_subset(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (j, &i) in idx.iter().enumerate() {
+            out.row_mut(j).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// First `k` rows as a new matrix.
+    pub fn top_rows(&self, k: usize) -> Mat {
+        assert!(k <= self.rows);
+        Mat::from_vec(k, self.cols, self.data[..k * self.cols].to_vec())
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt() as f32
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        )
+    }
+
+    /// `self @ other` — parallel over row stripes.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        let out_ptr = SendPtr(out.data.as_mut_ptr());
+        parallel_chunks(m, 8, |range| {
+            let out_ptr = &out_ptr;
+            for r in range {
+                // SAFETY: each row of `out` is written by exactly one chunk.
+                let orow: &mut [f32] =
+                    unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(r * n), n) };
+                gemm_row(self.row(r), other, k, n, orow);
+            }
+        });
+        out
+    }
+
+    /// `self @ v` for a dense vector.
+    pub fn matvec(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows).map(|r| dot(self.row(r), v)).collect()
+    }
+
+    /// `selfᵀ @ v` without materializing the transpose.
+    pub fn t_matvec(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(self.rows, v.len());
+        let mut out = vec![0.0f32; self.cols];
+        for (r, &vr) in v.iter().enumerate() {
+            if vr != 0.0 {
+                axpy(vr, self.row(r), &mut out);
+            }
+        }
+        out
+    }
+
+    /// Mean squared value (used in reconstruction-error metrics).
+    pub fn mean_sq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / self.data.len().max(1) as f64
+    }
+}
+
+/// One output row of a GEMM: `orow = arow @ b` with a k-outer loop that
+/// streams rows of `b` (good locality for row-major `b`).
+#[inline]
+fn gemm_row(arow: &[f32], b: &Mat, k: usize, n: usize, orow: &mut [f32]) {
+    orow.fill(0.0);
+    for kk in 0..k {
+        let a = arow[kk];
+        if a != 0.0 {
+            axpy(a, &b.data[kk * n..(kk + 1) * n], orow);
+        }
+    }
+}
+
+/// Pointer wrapper so parallel row-stripe writers can share `out`.
+struct SendPtr(*mut f32);
+unsafe impl Sync for SendPtr {}
+unsafe impl Send for SendPtr {}
+
+/// `out += a * x` — the auto-vectorized hot loop of the whole engine.
+#[inline(always)]
+pub fn axpy(a: f32, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    // 8-wide unroll: LLVM reliably lifts this to AVX2 vfmadd.
+    let n = x.len();
+    let chunks = n / 8;
+    let (xs, os) = (&x[..chunks * 8], &mut out[..chunks * 8]);
+    for (xc, oc) in xs.chunks_exact(8).zip(os.chunks_exact_mut(8)) {
+        oc[0] += a * xc[0];
+        oc[1] += a * xc[1];
+        oc[2] += a * xc[2];
+        oc[3] += a * xc[3];
+        oc[4] += a * xc[4];
+        oc[5] += a * xc[5];
+        oc[6] += a * xc[6];
+        oc[7] += a * xc[7];
+    }
+    for i in chunks * 8..n {
+        out[i] += a * x[i];
+    }
+}
+
+/// Dot product with 8-wide unroll.
+#[inline(always)]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = [0.0f32; 8];
+    for (ac, bc) in a[..chunks * 8].chunks_exact(8).zip(b[..chunks * 8].chunks_exact(8)) {
+        for j in 0..8 {
+            acc[j] += ac[j] * bc[j];
+        }
+    }
+    let mut s = (acc[0] + acc[4]) + (acc[1] + acc[5]) + (acc[2] + acc[6]) + (acc[3] + acc[7]);
+    for i in chunks * 8..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Masked kernels — the latency-realizing fast paths (paper §5.3).
+// ---------------------------------------------------------------------------
+
+/// `out += Σ_{i : mask[i]} c[i] · at.row(i)`, i.e. `out += A (m ⊙ c)` with
+/// `at = Aᵀ` stored row-major. Rows with `mask[i] == false` are *skipped*,
+/// so work is proportional to the number of active ranks/neurons.
+pub fn masked_acc_gemv(at: &Mat, mask: &[bool], c: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(at.rows, mask.len());
+    debug_assert_eq!(at.rows, c.len());
+    debug_assert_eq!(at.cols, out.len());
+    for i in 0..at.rows {
+        if mask[i] {
+            axpy(c[i], at.row(i), out);
+        }
+    }
+}
+
+/// Same contraction driven by an explicit active-index list (pre-gathered
+/// masks amortize the branch when one mask feeds several products).
+pub fn indexed_acc_gemv(at: &Mat, active: &[usize], c: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(at.cols, out.len());
+    for &i in active {
+        axpy(c[i], at.row(i), out);
+    }
+}
+
+/// Masked GEMV where only *selected rows of a row-major matrix* are computed:
+/// `out[i] = w.row(i) · x` for `mask[i]`, `out[i] = 0` otherwise.
+/// This is the CATS-style "compute only active neurons of Up-Projection".
+pub fn masked_rows_gemv(w: &Mat, mask: &[bool], x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(w.rows, mask.len());
+    debug_assert_eq!(w.rows, out.len());
+    for i in 0..w.rows {
+        out[i] = if mask[i] { dot(w.row(i), x) } else { 0.0 };
+    }
+}
+
+/// Collect `mask` into an index list.
+pub fn mask_to_indices(mask: &[bool]) -> Vec<usize> {
+    mask.iter()
+        .enumerate()
+        .filter_map(|(i, &m)| if m { Some(i) } else { None })
+        .collect()
+}
+
+/// Pick the threshold `t` such that keeping `{v_i : score_i ≥ t}` retains
+/// (approximately) `keep` of `n` entries, computed over a flat score sample.
+/// Scores are magnitudes; returns the `(1 - keep/n)` quantile.
+pub fn threshold_for_keep(scores: &mut [f32], keep: usize) -> f32 {
+    if keep >= scores.len() {
+        return f32::NEG_INFINITY;
+    }
+    if keep == 0 {
+        return f32::INFINITY;
+    }
+    let idx = scores.len() - keep;
+    // select_nth_unstable is O(n) — fine for calibration-time use.
+    let (_, t, _) = scores
+        .select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    *t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, close_slices, Config};
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0f64;
+                for k in 0..a.cols {
+                    s += a.at(i, k) as f64 * b.at(k, j) as f64;
+                }
+                *out.at_mut(i, j) = s as f32;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive_property() {
+        check("matmul==naive", Config { cases: 24, max_size: 40, ..Default::default() }, |rng, size| {
+            let (m, k, n) = (1 + rng.below(size), 1 + rng.below(size), 1 + rng.below(size));
+            let a = Mat::gaussian(m, k, 1.0, rng);
+            let b = Mat::gaussian(k, n, 1.0, rng);
+            close_slices(&a.matmul(&b).data, &naive_matmul(&a, &b).data, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn matvec_consistent_with_matmul() {
+        check("matvec==matmul", Config { cases: 16, max_size: 32, ..Default::default() }, |rng, size| {
+            let (m, k) = (1 + rng.below(size), 1 + rng.below(size));
+            let a = Mat::gaussian(m, k, 1.0, rng);
+            let v = Mat::gaussian(k, 1, 1.0, rng);
+            close_slices(&a.matvec(&v.data), &a.matmul(&v).data, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn t_matvec_matches_transpose() {
+        check("t_matvec", Config { cases: 16, max_size: 32, ..Default::default() }, |rng, size| {
+            let (m, k) = (1 + rng.below(size), 1 + rng.below(size));
+            let a = Mat::gaussian(m, k, 1.0, rng);
+            let v: Vec<f32> = (0..m).map(|_| rng.gaussian()).collect();
+            close_slices(&a.t_matvec(&v), &a.transpose().matvec(&v), 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Xoshiro256::new(5);
+        let a = Mat::gaussian(13, 37, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn masked_acc_gemv_equals_dense_with_zeroed_entries() {
+        check("masked_gemv", Config { cases: 24, max_size: 48, ..Default::default() }, |rng, size| {
+            let (d, o) = (1 + rng.below(size), 1 + rng.below(size));
+            let at = Mat::gaussian(d, o, 1.0, rng); // Aᵀ
+            let c: Vec<f32> = (0..d).map(|_| rng.gaussian()).collect();
+            let mask: Vec<bool> = (0..d).map(|_| rng.f32() < 0.5).collect();
+            let mut fast = vec![0.0f32; o];
+            masked_acc_gemv(&at, &mask, &c, &mut fast);
+            // reference: A (m ⊙ c)
+            let a = at.transpose();
+            let mc: Vec<f32> =
+                c.iter().zip(&mask).map(|(&x, &m)| if m { x } else { 0.0 }).collect();
+            close_slices(&fast, &a.matvec(&mc), 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn indexed_gemv_matches_masked() {
+        let mut rng = Xoshiro256::new(8);
+        let at = Mat::gaussian(64, 32, 1.0, &mut rng);
+        let c: Vec<f32> = (0..64).map(|_| rng.gaussian()).collect();
+        let mask: Vec<bool> = (0..64).map(|_| rng.f32() < 0.3).collect();
+        let mut a_out = vec![0.0f32; 32];
+        let mut b_out = vec![0.0f32; 32];
+        masked_acc_gemv(&at, &mask, &c, &mut a_out);
+        indexed_acc_gemv(&at, &mask_to_indices(&mask), &c, &mut b_out);
+        assert_eq!(a_out, b_out);
+    }
+
+    #[test]
+    fn masked_rows_gemv_zeroes_inactive() {
+        let mut rng = Xoshiro256::new(9);
+        let w = Mat::gaussian(16, 8, 1.0, &mut rng);
+        let x: Vec<f32> = (0..8).map(|_| rng.gaussian()).collect();
+        let mask: Vec<bool> = (0..16).map(|i| i % 2 == 0).collect();
+        let mut out = vec![f32::NAN; 16];
+        masked_rows_gemv(&w, &mask, &x, &mut out);
+        for i in 0..16 {
+            if i % 2 == 0 {
+                assert!((out[i] - dot(w.row(i), &x)).abs() < 1e-5);
+            } else {
+                assert_eq!(out[i], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn threshold_for_keep_quantile() {
+        let mut scores: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let t = threshold_for_keep(&mut scores, 10);
+        // keeping scores >= t should keep exactly 10 (90..99)
+        assert_eq!(t, 90.0);
+        let mut s2 = vec![1.0f32, 2.0, 3.0];
+        assert_eq!(threshold_for_keep(&mut s2, 3), f32::NEG_INFINITY);
+        assert_eq!(threshold_for_keep(&mut s2, 0), f32::INFINITY);
+    }
+
+    #[test]
+    fn fro_norm_and_mean_sq() {
+        let m = Mat::from_vec(2, 2, vec![3.0, 4.0, 0.0, 0.0]);
+        assert!((m.fro_norm() - 5.0).abs() < 1e-6);
+        assert!((m.mean_sq() - 6.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rows_subset_and_top_rows() {
+        let m = Mat::from_fn(4, 3, |r, c| (r * 3 + c) as f32);
+        let s = m.rows_subset(&[2, 0]);
+        assert_eq!(s.row(0), &[6.0, 7.0, 8.0]);
+        assert_eq!(s.row(1), &[0.0, 1.0, 2.0]);
+        assert_eq!(m.top_rows(2).rows, 2);
+        assert_eq!(m.top_rows(2).row(1), &[3.0, 4.0, 5.0]);
+    }
+}

@@ -1,0 +1,136 @@
+//! Declarative command-line flag parsing for the `rana` binary, examples and
+//! bench harnesses (the environment has no `clap`).
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't inherit the xla rpath in this image)
+//! use rana::util::cli::Args;
+//! let args = Args::from_vec(vec!["--rate".into(), "0.42".into(), "--fast".into()]);
+//! assert_eq!(args.get_f64("rate", 0.0), 0.42);
+//! assert!(args.get_flag("fast"));
+//! ```
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positional arguments plus `--key value` / `--flag`
+/// options. `--key=value` is also accepted.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from the process environment, skipping argv[0].
+    pub fn from_env() -> Self {
+        Self::from_vec(std::env::args().skip(1).collect())
+    }
+
+    pub fn from_vec(argv: Vec<String>) -> Self {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.options.insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.options.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.options
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.options
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.options
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// First positional argument (the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Does any positional argument contain `needle`? Used by the bench
+    /// harness to support `cargo bench -- tab1` style filters.
+    pub fn filter_matches(&self, needle: &str) -> bool {
+        self.positional.is_empty() || self.positional.iter().any(|p| needle.contains(p.as_str()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_flags_positionals() {
+        let a = Args::from_vec(v(&["serve", "--port", "8080", "--verbose", "--rate=0.5"]));
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert_eq!(a.get_usize("port", 0), 8080);
+        assert!(a.get_flag("verbose"));
+        assert_eq!(a.get_f64("rate", 0.0), 0.5);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::from_vec(v(&[]));
+        assert_eq!(a.get_str("model", "llama-sim"), "llama-sim");
+        assert_eq!(a.get_f64("x", 1.5), 1.5);
+        assert!(!a.get_flag("missing"));
+        assert_eq!(a.subcommand(), None);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::from_vec(v(&["--fast"]));
+        assert!(a.get_flag("fast"));
+    }
+
+    #[test]
+    fn filter_matching() {
+        let a = Args::from_vec(v(&["tab1"]));
+        assert!(a.filter_matches("tab1_llama"));
+        assert!(!a.filter_matches("fig2"));
+        let none = Args::from_vec(v(&[]));
+        assert!(none.filter_matches("anything"));
+    }
+}

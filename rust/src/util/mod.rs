@@ -1,0 +1,76 @@
+//! Dependency-free substrates: RNG, JSON, CLI parsing, thread pool,
+//! property-test driver, and small I/O helpers.
+
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Read a little-endian f32 binary blob (the weight interchange format
+/// written by `python/compile/train.py`).
+pub fn read_f32_bin(path: &Path) -> anyhow::Result<Vec<f32>> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("open {path:?}: {e}"))?
+        .read_to_end(&mut bytes)?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "{path:?}: length not a multiple of 4");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write a little-endian f32 binary blob.
+pub fn write_f32_bin(path: &Path, data: &[f32]) -> anyhow::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    let mut buf = Vec::with_capacity(data.len() * 4);
+    for &x in data {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Repository root: walk up from the cwd until Cargo.toml + python/ is found.
+pub fn repo_root() -> std::path::PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        if dir.join("Cargo.toml").exists() && dir.join("python").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            return std::env::current_dir().unwrap_or_else(|_| ".".into());
+        }
+    }
+}
+
+/// `artifacts/` directory under the repo root.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    repo_root().join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_bin_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("rana-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blob.bin");
+        let data = vec![0.0f32, -1.5, 3.25, f32::MAX, f32::MIN_POSITIVE];
+        write_f32_bin(&path, &data).unwrap();
+        assert_eq!(read_f32_bin(&path).unwrap(), data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn repo_root_found() {
+        let root = repo_root();
+        assert!(root.join("Cargo.toml").exists());
+    }
+}

@@ -1,0 +1,101 @@
+//! Tiny property-based testing driver (proptest is not available offline).
+//!
+//! `check` runs a property over many seeded random cases; on failure it
+//! re-runs with the failing seed printed so the case is reproducible, and
+//! performs a simple size-shrinking pass for generators that honour the
+//! `size` hint.
+
+use crate::util::rng::Xoshiro256;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// Maximum "size" hint passed to the generator (e.g. matrix dim).
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0xC0FFEE, max_size: 48 }
+    }
+}
+
+/// Run `prop(rng, size)` for `cfg.cases` cases. `prop` returns `Err(msg)` to
+/// signal failure. On failure, retries smaller sizes with the same seed to
+/// report the smallest size that still fails.
+pub fn check<F>(name: &str, cfg: Config, prop: F)
+where
+    F: Fn(&mut Xoshiro256, usize) -> Result<(), String>,
+{
+    let mut master = Xoshiro256::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_seed = master.next_u64();
+        // Ramp sizes from small to max so early failures are small already.
+        let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
+        let mut rng = Xoshiro256::new(case_seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // Shrink: find the smallest size that fails under this seed.
+            let mut smallest = (size, msg.clone());
+            for s in 1..size {
+                let mut rng = Xoshiro256::new(case_seed);
+                if let Err(m) = prop(&mut rng, s) {
+                    smallest = (s, m);
+                    break;
+                }
+            }
+            panic!(
+                "property {name:?} failed (case {case}, seed {case_seed:#x}, size {}):\n  {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Assert two slices are element-wise close; returns a property-style error.
+pub fn close_slices(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs() {
+        check("reverse-involution", Config::default(), |rng, size| {
+            let v: Vec<u64> = (0..size).map(|_| rng.next_u64()).collect();
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            if v == w { Ok(()) } else { Err("reverse twice != id".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-fails\" failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            "always-fails",
+            Config { cases: 4, ..Default::default() },
+            |_rng, _size| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn close_slices_tolerances() {
+        assert!(close_slices(&[1.0, 2.0], &[1.0 + 1e-7, 2.0], 1e-5, 0.0).is_ok());
+        assert!(close_slices(&[1.0], &[1.1], 1e-5, 1e-5).is_err());
+        assert!(close_slices(&[1.0], &[1.0, 2.0], 1e-5, 0.0).is_err());
+    }
+}

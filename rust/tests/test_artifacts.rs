@@ -1,0 +1,109 @@
+//! Integration tests over `make artifacts` outputs: weight loading, JAX↔rust
+//! forward parity (golden logits), calibration + adaptation on trained
+//! weights, and the PJRT runtime path. Every test skips gracefully (with a
+//! message) when artifacts have not been built yet, so `cargo test` is
+//! green both before and after `make artifacts`.
+
+use std::sync::Arc;
+
+use rana::adapters::calibrate::{self, CalibOptions, Method};
+use rana::model::{forward_seq, Model, ModelConfig};
+
+fn trained(name: &str) -> Option<Model> {
+    let dir = rana::model::model_dir(name);
+    if dir.join("manifest.json").exists() {
+        Some(Model::load(&dir).expect("manifest exists but load failed"))
+    } else {
+        eprintln!("[skip] no trained artifacts for {name}; run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn golden_logits_parity_all_models() {
+    for cfg in ModelConfig::all() {
+        let Some(model) = trained(&cfg.name) else { continue };
+        let dir = rana::model::model_dir(&cfg.name);
+        let tok_f = rana::util::read_f32_bin(&dir.join("golden_tokens.bin")).unwrap();
+        let logits_f = rana::util::read_f32_bin(&dir.join("golden_logits.bin")).unwrap();
+        let n_windows = 2;
+        let t = tok_f.len() / n_windows;
+        let v = model.cfg.vocab;
+        for w in 0..n_windows {
+            let tokens: Vec<u32> =
+                tok_f[w * t..(w + 1) * t].iter().map(|&x| x as u32).collect();
+            let ours = forward_seq(&model, &tokens, None);
+            let theirs = &logits_f[w * t * v..(w + 1) * t * v];
+            let mut max_abs = 0.0f32;
+            for (a, b) in ours.data.iter().zip(theirs) {
+                max_abs = max_abs.max((a - b).abs());
+            }
+            // f32 accumulation-order differences only; logits are O(10).
+            assert!(
+                max_abs < 0.05,
+                "{}: window {w} max_abs logit divergence {max_abs}",
+                cfg.name
+            );
+        }
+        println!("golden parity OK: {}", cfg.name);
+    }
+}
+
+#[test]
+fn trained_model_perplexity_beats_uniform() {
+    let Some(model) = trained("llama-sim") else { return };
+    let corpus = rana::data::generate_corpus(1_000, 60_000);
+    let adapted = rana::adapters::AdaptedModel::unadapted(Arc::new(model));
+    let ppl = rana::eval::perplexity(&adapted, &corpus.heldout, 8_000, 256);
+    // Uniform over the byte vocab would be ~256; synthlang is compressible
+    // far below that for a trained model.
+    assert!(ppl < 30.0, "trained llama-sim ppl {ppl} looks untrained");
+}
+
+#[test]
+fn rana_adaptation_on_trained_weights_preserves_quality_shape() {
+    let Some(model) = trained("llama-sim") else { return };
+    let model = Arc::new(model);
+    let corpus = rana::data::generate_corpus(400_000, 60_000);
+    let opts = CalibOptions { n_fit: 768, n_eval: 128, window: 128, seed: 42 };
+    let calib = calibrate::collect(&model, &corpus.train, &opts);
+
+    let (rana, rana_rep) =
+        calibrate::adapt(Arc::clone(&model), &calib, Method::Rana, 0.3, 512, 42);
+    let (cats, cats_rep) =
+        calibrate::adapt(Arc::clone(&model), &calib, Method::Cats, 0.3, 512, 42);
+
+    // Compression targets hit.
+    assert!((rana_rep.total_compression - 0.3).abs() < 0.08, "{rana_rep:?}");
+    assert!((cats_rep.total_compression - 0.3).abs() < 0.08, "{cats_rep:?}");
+
+    // RaNA reconstruction error ≤ CATS at matched budgets (Fig. 3 shape),
+    // on average across layers.
+    let mean = |r: &calibrate::AdaptReport| {
+        r.layers.iter().map(|l| l.mlp_err).sum::<f64>() / r.layers.len() as f64
+    };
+    assert!(
+        mean(&rana_rep) <= mean(&cats_rep) + 0.02,
+        "RaNA {} vs CATS {}",
+        mean(&rana_rep),
+        mean(&cats_rep)
+    );
+
+    // Adapted PPL stays finite and in a sane band.
+    let ppl_rana = rana::eval::perplexity(&rana, &corpus.heldout, 4_000, 256);
+    let ppl_cats = rana::eval::perplexity(&cats, &corpus.heldout, 4_000, 256);
+    assert!(ppl_rana.is_finite() && ppl_rana < 200.0);
+    assert!(ppl_cats.is_finite());
+    println!("ppl: rana={ppl_rana:.2} cats={ppl_cats:.2}");
+}
+
+#[test]
+fn pjrt_runtime_parity_if_artifacts_exist() {
+    let name = "llama-sim";
+    let dir = rana::model::model_dir(name);
+    if !dir.join("aot_manifest.json").exists() {
+        eprintln!("[skip] no AOT artifacts for {name}");
+        return;
+    }
+    rana::runtime::parity_check(name).expect("pjrt parity");
+}

@@ -1,0 +1,180 @@
+//! End-to-end coordinator tests (in-process; no trained artifacts needed).
+
+use std::sync::Arc;
+
+use rana::adapters::AdaptedModel;
+use rana::coordinator::batcher::{call, Batcher, BudgetLadder, Op};
+use rana::coordinator::engine::{Engine, NativeEngine};
+use rana::model::{Model, ModelConfig, ModelWeights};
+
+fn tiny_engine(seed: u64) -> Arc<dyn Engine> {
+    let cfg = ModelConfig {
+        name: "tiny".into(),
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_hidden: 32,
+        vocab: 288,
+        max_seq: 64,
+        ..ModelConfig::llama_sim()
+    };
+    let w = ModelWeights::random_init(&cfg, seed);
+    let model = Arc::new(Model::new(cfg, w).unwrap());
+    Arc::new(NativeEngine::new(Arc::new(AdaptedModel::unadapted(model))))
+}
+
+#[test]
+fn coordinator_serves_mixed_workload() {
+    let batcher = Arc::new(Batcher::new(BudgetLadder::single(tiny_engine(1)), 4));
+    let tx = batcher.submitter();
+    let b = Arc::clone(&batcher);
+    std::thread::spawn(move || b.run());
+
+    let mut handles = Vec::new();
+    for i in 0..12 {
+        let tx = tx.clone();
+        handles.push(std::thread::spawn(move || {
+            if i % 3 == 0 {
+                call(&tx, Op::Generate { prompt: "ab".into(), n: 2 }).unwrap()
+            } else {
+                call(&tx, Op::Score { text: format!("sample text {i}") }).unwrap()
+            }
+        }));
+    }
+    for h in handles {
+        let r = h.join().unwrap();
+        assert!(r.get("error").is_err(), "got error response: {r}");
+    }
+    let stats = call(&tx, Op::Stats).unwrap();
+    assert!(stats.get_f64("responses").unwrap() >= 12.0);
+}
+
+#[test]
+fn adaptive_budget_ladder_shifts_under_load() {
+    let ladder = BudgetLadder {
+        engines: vec![(0.0, tiny_engine(2)), (0.5, tiny_engine(3))],
+        thresholds: vec![3],
+    };
+    let batcher = Arc::new(Batcher::new(ladder, 8));
+    let tx = batcher.submitter();
+    let b = Arc::clone(&batcher);
+    std::thread::spawn(move || b.run());
+
+    // Flood with concurrent requests; at least one batch should run at the
+    // compressed tier (queue depth >= 3).
+    let handles: Vec<_> = (0..32)
+        .map(|i| {
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                call(&tx, Op::Score { text: format!("load {i}") }).unwrap()
+            })
+        })
+        .collect();
+    let mut budgets = Vec::new();
+    for h in handles {
+        let r = h.join().unwrap();
+        budgets.push(r.get_f64("rank_budget").unwrap());
+    }
+    assert!(
+        budgets.iter().any(|&b| b > 0.0),
+        "adaptive budget never engaged under load: {budgets:?}"
+    );
+}
+
+/// Property: under arbitrary interleavings of concurrent score requests,
+/// every response corresponds to its request (scores are a pure function
+/// of the text — the batcher must never cross wires), and batching never
+/// loses or duplicates jobs.
+#[test]
+fn prop_batcher_routing_preserves_request_response_mapping() {
+    use rana::util::prop::{check, Config};
+
+    let engine = tiny_engine(11);
+    // Ground truth scores, computed once, single-threaded.
+    let texts: Vec<String> = (0..24).map(|i| format!("probe text {i} {}", i * 7)).collect();
+    let truth = engine.score_batch(&texts);
+
+    check(
+        "batcher-routing",
+        Config { cases: 6, max_size: 24, ..Default::default() },
+        |rng, size| {
+            let n = size.max(2).min(24);
+            let batcher = Arc::new(Batcher::new(
+                BudgetLadder::single(Arc::clone(&engine)),
+                1 + rng.below(8),
+            ));
+            let tx = batcher.submitter();
+            let b = Arc::clone(&batcher);
+            let runner = std::thread::spawn(move || b.run());
+
+            // Random subset, random submission order, concurrent.
+            let picked = rng.choose_k(24, n);
+            let handles: Vec<_> = picked
+                .iter()
+                .map(|&i| {
+                    let tx = tx.clone();
+                    let text = texts[i].clone();
+                    std::thread::spawn(move || {
+                        (i, call(&tx, Op::Score { text }).unwrap())
+                    })
+                })
+                .collect();
+            let mut seen = 0usize;
+            for h in handles {
+                let (i, resp) = h.join().unwrap();
+                let got = resp.get_f64("logprob").map_err(|e| e.to_string())?;
+                if (got - truth[i]).abs() > 1e-9 {
+                    return Err(format!("request {i}: got {got}, want {}", truth[i]));
+                }
+                seen += 1;
+            }
+            if seen != n {
+                return Err(format!("lost responses: {seen}/{n}"));
+            }
+            batcher.close();
+            drop(tx);
+            let _ = runner.join();
+            let m = &batcher.metrics;
+            let jobs = m.batched_jobs.load(std::sync::atomic::Ordering::Relaxed) as usize;
+            if jobs != n {
+                return Err(format!("batched_jobs {jobs} != submitted {n}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Property: the budget ladder is monotone — deeper queues never pick a
+/// *less* compressed tier.
+#[test]
+fn prop_budget_ladder_monotone_in_depth() {
+    use rana::util::prop::{check, Config};
+
+    let e = tiny_engine(13);
+    check(
+        "ladder-monotone",
+        Config { cases: 32, max_size: 12, ..Default::default() },
+        |rng, size| {
+            let tiers = 1 + rng.below(size.max(1).min(5));
+            let mut rates: Vec<f64> = (0..tiers).map(|i| i as f64 * 0.15).collect();
+            rates.dedup();
+            let mut thresholds: Vec<usize> = (1..rates.len())
+                .map(|_| 1 + rng.below(20))
+                .collect();
+            thresholds.sort_unstable();
+            let ladder = BudgetLadder {
+                engines: rates.iter().map(|&r| (r, Arc::clone(&e))).collect(),
+                thresholds,
+            };
+            let mut last = -1.0f64;
+            for depth in 0..64 {
+                let (rate, _) = ladder.pick(depth);
+                if rate < last {
+                    return Err(format!("depth {depth}: rate {rate} < previous {last}"));
+                }
+                last = rate;
+            }
+            Ok(())
+        },
+    );
+}
