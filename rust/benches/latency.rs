@@ -6,17 +6,18 @@
 //! 1..1000 (clamped to the model's max_seq here), per-token wall-clock
 //! averaged across contexts; RaNA vs CATS vs dense at several rates.
 //!
-//! Usage: cargo bench --bench latency [-- fig1b|serving] [--fast]
+//! Usage: cargo bench --bench latency [-- fig1b|serving|load|gemm] [--fast]
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use rana::adapters::calibrate::Method;
 use rana::bench::experiments::{Opts, Workbench};
-use rana::bench::harness::Table;
+use rana::bench::harness::{bench, Table};
 use rana::data::tasks::all_suites;
 use rana::model::{decode_step, KvCache};
 use rana::util::cli::Args;
+use rana::util::json::Json;
 
 fn decode_latency<B: rana::model::BlockOps>(
     b: &B,
@@ -160,6 +161,60 @@ fn load_bench(_opts: Opts) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Sequence-path (prefill) latency of the model's linear layers: packed
+/// GEMM vs the seed's axpy-row loop at llama-sim shapes, per-window cost.
+/// Needs no trained artifacts (weights are random; latency is shape-bound),
+/// and emits JSON rows so the speedup lands in the bench trajectory.
+fn seq_gemm() -> anyhow::Result<()> {
+    use rana::tensor::gemm::{gemm_packed, gemm_rows_axpy};
+    use rana::tensor::Mat;
+    use rana::util::rng::Xoshiro256;
+
+    println!("\n== sequence-path GEMM latency (prefill window × model linears) ==");
+    let cfg = rana::model::ModelConfig::llama_sim();
+    let (d, h, v) = (cfg.d_model, cfg.d_hidden, cfg.vocab);
+    let t = 128usize; // prefill window of the PPL/calibration harness
+    let mut rng = Xoshiro256::new(4);
+    let shapes: &[(&str, usize, usize, usize)] = &[
+        ("up/gate proj", t, d, h),
+        ("down proj", t, h, d),
+        ("fused qkv", t, d, 3 * d),
+        ("lm head", t, d, v),
+    ];
+    for &(label, m, k, n) in shapes {
+        let a = Mat::gaussian(m, k, 1.0, &mut rng);
+        let b = Mat::gaussian(k, n, 1.0, &mut rng);
+        let mut out = Mat::zeros(m, n);
+        let axpy = bench(&format!("axpy {label} {m}×{k}×{n}"), Duration::from_millis(200), || {
+            gemm_rows_axpy(m, k, n, &a.data, &b.data, &mut out.data, 1.0, 0.0);
+            std::hint::black_box(&out);
+        });
+        axpy.print();
+        let packed = bench(&format!("packed {label} {m}×{k}×{n}"), Duration::from_millis(200), || {
+            gemm_packed(m, k, n, &a.data, &b.data, &mut out.data, 1.0, 0.0);
+            std::hint::black_box(&out);
+        });
+        packed.print();
+        let speedup = axpy.mean.as_secs_f64() / packed.mean.as_secs_f64();
+        println!(
+            "{}",
+            Json::obj(vec![
+                ("bench", Json::str("seq_gemm")),
+                ("label", Json::str(label)),
+                ("m", Json::Num(m as f64)),
+                ("k", Json::Num(k as f64)),
+                ("n", Json::Num(n as f64)),
+                // Same field names/units as microbench's gemm rows, so one
+                // trajectory consumer handles both suites.
+                ("axpy_ms", Json::Num(axpy.mean.as_secs_f64() * 1e3)),
+                ("packed_ms", Json::Num(packed.mean.as_secs_f64() * 1e3)),
+                ("speedup", Json::Num(speedup)),
+            ])
+        );
+    }
+    Ok(())
+}
+
 fn main() {
     let args = Args::from_env();
     let mut opts = Opts::default();
@@ -190,6 +245,12 @@ fn main() {
         ran = true;
         if let Err(e) = load_bench(opts) {
             eprintln!("load: {e:#}");
+        }
+    }
+    if args.filter_matches("gemm") {
+        ran = true;
+        if let Err(e) = seq_gemm() {
+            eprintln!("gemm: {e:#}");
         }
     }
     if !ran {

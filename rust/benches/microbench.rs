@@ -1,6 +1,11 @@
 //! Microbenchmarks for the performance pass (DESIGN.md §Perf): the masked
-//! GEMV hot path at several densities, dense GEMM/GEMV baselines, the
-//! randomized SVD used at calibration time, and single-token decode.
+//! GEMV hot path at several densities, packed-vs-axpy GEMM across the
+//! paper's shapes, the randomized SVD used at calibration time, and
+//! single-token decode.
+//!
+//! The GEMM suite emits one JSON line per shape (`{"bench":"gemm",...}`)
+//! so the packed-vs-axpy speedup lands in the bench trajectory as data,
+//! not prose.
 //!
 //! Usage: cargo bench --bench microbench [-- gemv|gemm|svd|decode]
 
@@ -8,8 +13,10 @@ use std::time::Duration;
 
 use rana::bench::harness::bench;
 use rana::model::BlockOps;
+use rana::tensor::gemm::{gemm_packed, gemm_rows_axpy};
 use rana::tensor::{masked_acc_gemv, Mat};
 use rana::util::cli::Args;
+use rana::util::json::Json;
 use rana::util::rng::Xoshiro256;
 
 fn gemv_suite() {
@@ -48,17 +55,64 @@ fn gemv_suite() {
 }
 
 fn gemm_suite() {
-    println!("\n== GEMM throughput (parallel row-stripes) ==");
+    println!("\n== GEMM: packed/blocked kernel vs the seed's axpy-row loop ==");
     let mut rng = Xoshiro256::new(2);
-    for &(m, k, n) in &[(128usize, 192usize, 512usize), (256, 512, 192), (512, 192, 288)] {
+    // The paper's shapes: sequence × (d_model → d_ff) MLP projections,
+    // the fused QKV projection, a low-rank U·V product, plus square
+    // references where the packed kernel's cache blocking matters most.
+    let shapes: &[(&str, usize, usize, usize)] = &[
+        ("seq×dmodel×dff (up-proj)", 256, 192, 512),
+        ("seq×dff×dmodel (down-proj)", 256, 512, 192),
+        ("seq×dmodel×3dmodel (fused qkv)", 256, 192, 576),
+        ("low-rank U·V (T×r×o)", 512, 64, 512),
+        ("square 256", 256, 256, 256),
+        ("square 512", 512, 512, 512),
+    ];
+    for &(label, m, k, n) in shapes {
         let a = Mat::gaussian(m, k, 1.0, &mut rng);
         let b = Mat::gaussian(k, n, 1.0, &mut rng);
-        let s = bench(&format!("gemm {m}×{k}×{n}"), Duration::from_millis(300), || {
-            std::hint::black_box(a.matmul(&b));
-        });
-        s.print();
-        let gflops = 2.0 * (m * k * n) as f64 / s.mean.as_secs_f64() / 1e9;
-        println!("    → {gflops:.2} GFLOP/s");
+        let mut out = Mat::zeros(m, n);
+        let axpy = bench(
+            &format!("axpy-row gemm {m}×{k}×{n}"),
+            Duration::from_millis(300),
+            || {
+                gemm_rows_axpy(m, k, n, &a.data, &b.data, &mut out.data, 1.0, 0.0);
+                std::hint::black_box(&out);
+            },
+        );
+        axpy.print();
+        let packed = bench(
+            &format!("packed gemm {m}×{k}×{n}"),
+            Duration::from_millis(300),
+            || {
+                gemm_packed(m, k, n, &a.data, &b.data, &mut out.data, 1.0, 0.0);
+                std::hint::black_box(&out);
+            },
+        );
+        packed.print();
+        let flops = 2.0 * (m * k * n) as f64;
+        let axpy_gflops = flops / axpy.mean.as_secs_f64() / 1e9;
+        let packed_gflops = flops / packed.mean.as_secs_f64() / 1e9;
+        let speedup = axpy.mean.as_secs_f64() / packed.mean.as_secs_f64();
+        println!(
+            "    → {axpy_gflops:.2} → {packed_gflops:.2} GFLOP/s ({speedup:.2}× packed)"
+        );
+        // Machine-readable row for the bench trajectory.
+        println!(
+            "{}",
+            Json::obj(vec![
+                ("bench", Json::str("gemm")),
+                ("label", Json::str(label)),
+                ("m", Json::Num(m as f64)),
+                ("k", Json::Num(k as f64)),
+                ("n", Json::Num(n as f64)),
+                ("axpy_ms", Json::Num(axpy.mean.as_secs_f64() * 1e3)),
+                ("packed_ms", Json::Num(packed.mean.as_secs_f64() * 1e3)),
+                ("axpy_gflops", Json::Num(axpy_gflops)),
+                ("packed_gflops", Json::Num(packed_gflops)),
+                ("speedup", Json::Num(speedup)),
+            ])
+        );
     }
 }
 

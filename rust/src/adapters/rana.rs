@@ -88,6 +88,10 @@ pub struct RanaMlpBuilder<'a> {
     calib: &'a LayerCalib,
     pre_up: RankPrecomp,
     pre_gate: Option<RankPrecomp>,
+    /// Eval inputs as rows (`k_eval × d`) — the transpose is invariant
+    /// across grid-search candidates, so it is materialized once here
+    /// instead of once per [`RanaMlpBuilder::eval_error`] call.
+    eval_rows: Mat,
 }
 
 impl<'a> RanaMlpBuilder<'a> {
@@ -96,7 +100,8 @@ impl<'a> RanaMlpBuilder<'a> {
         let pre_gate = lw.gate.as_ref().map(|g| {
             RankPrecomp::new(&g.w, &calib.mlp_in_fit, &calib.mlp_in_eval, seed ^ 0x9E37)
         });
-        Self { arch, lw, calib, pre_up, pre_gate }
+        let eval_rows = calib.mlp_in_eval.transpose();
+        Self { arch, lw, calib, pre_up, pre_gate, eval_rows }
     }
 
     /// Dense per-token FLOPs of this MLP.
@@ -136,9 +141,15 @@ impl<'a> RanaMlpBuilder<'a> {
             c
         };
 
+        // Grid-search candidates share component budgets (the same `fu`
+        // appears with several `fg`, and distinct `(fu, fg)` pairs collapse
+        // to the same `fd`), so each component adapter is built once per
+        // distinct budget and cloned thereafter — the per-candidate line
+        // searches and threshold calibrations are the expensive part.
+        let mut cache = AdapterCache::default();
         let mut best: Option<(RanaMlp, f64)> = None;
         for split in candidates {
-            let mlp = self.build_with_split(budget, split);
+            let mlp = self.build_with_split_cached(budget, split, &mut cache);
             let err = self.eval_error(&mlp);
             if best.as_ref().map(|(_, e)| err < *e).unwrap_or(true) {
                 best = Some((mlp, err));
@@ -155,24 +166,58 @@ impl<'a> RanaMlpBuilder<'a> {
         }
     }
 
-    fn build_with_split(&self, budget: f64, split: (f64, f64, f64)) -> RanaMlp {
+    fn build_with_split_cached(
+        &self,
+        budget: f64,
+        split: (f64, f64, f64),
+        cache: &mut AdapterCache,
+    ) -> RanaMlp {
         let (fu, fg, fd) = split;
-        let (up, _) = self.pre_up.adapter_for_budget(budget * fu);
+        let up = cache.up.get_or_build(budget * fu, |b| self.pre_up.adapter_for_budget(b).0);
         let gate = self
             .pre_gate
             .as_ref()
-            .map(|pre| pre.adapter_for_budget(budget * fg).0);
-        let down =
-            NeuronThresholdAdapter::build(&self.lw.down.w, &self.calib.down_in_fit, budget * fd);
+            .map(|pre| cache.gate.get_or_build(budget * fg, |b| pre.adapter_for_budget(b).0));
+        let down = cache.down.get_or_build(budget * fd, |b| {
+            NeuronThresholdAdapter::build(&self.lw.down.w, &self.calib.down_in_fit, b)
+        });
         RanaMlp { arch: self.arch, up, gate, down, split }
     }
 
     /// Normalized MLP output error on the eval inputs (paper §5.3 metric).
     pub fn eval_error(&self, mlp: &RanaMlp) -> f64 {
-        let xs = self.calib.mlp_in_eval.transpose(); // rows = samples
-        let got = mlp.apply_seq(&xs);
+        let got = mlp.apply_seq(&self.eval_rows);
         let want = &self.calib.mlp_out_eval;
         normalized_err(&got, want)
+    }
+}
+
+/// Memo of component adapters built during one grid search, keyed by the
+/// exact component budget (bit pattern — budgets come from a fixed grid).
+#[derive(Default)]
+struct AdapterCache {
+    up: BudgetMemo<RankAdapter>,
+    gate: BudgetMemo<RankAdapter>,
+    down: BudgetMemo<NeuronThresholdAdapter>,
+}
+
+struct BudgetMemo<T>(Vec<(u64, T)>);
+
+impl<T> Default for BudgetMemo<T> {
+    fn default() -> Self {
+        Self(Vec::new())
+    }
+}
+
+impl<T: Clone> BudgetMemo<T> {
+    fn get_or_build(&mut self, budget: f64, build: impl FnOnce(f64) -> T) -> T {
+        let key = budget.to_bits();
+        if let Some((_, v)) = self.0.iter().find(|(k, _)| *k == key) {
+            return v.clone();
+        }
+        let v = build(budget);
+        self.0.push((key, v.clone()));
+        v
     }
 }
 
@@ -258,6 +303,20 @@ mod tests {
         let (_, err_grid) = b.build(budget, true);
         let (_, err_prop) = b.build(budget, false);
         assert!(err_grid <= err_prop + 1e-9, "grid {err_grid} vs prop {err_prop}");
+    }
+
+    #[test]
+    fn grid_search_is_deterministic_with_memoized_adapters() {
+        // The per-budget adapter memo must not change results — two full
+        // grid searches at the same budget pick the same split and error.
+        let (m, calib) = setup(Arch::SwiGlu);
+        let b = RanaMlpBuilder::new(m.cfg.arch, &m.w.layers[0], &calib.layers[0], 8);
+        let budget = b.dense_flops() * 0.5;
+        let (m1, e1) = b.build(budget, true);
+        let (m2, e2) = b.build(budget, true);
+        assert_eq!(e1, e2);
+        assert_eq!(m1.split, m2.split);
+        assert_eq!(m1.up.d, m2.up.d);
     }
 
     #[test]

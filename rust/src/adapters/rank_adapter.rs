@@ -69,8 +69,10 @@ impl RankAdapter {
         out
     }
 
-    /// Sequence path: dense GEMMs with masked entries zeroed (used by the
-    /// PPL/accuracy harness where reconstruction, not wall-clock, matters).
+    /// Sequence path: the two-stage low-rank product `(Xs·Bᵀ)·Aᵀ` with
+    /// masked entries zeroed between the stages, both stages running on the
+    /// packed GEMM (used by the PPL/accuracy harness where reconstruction,
+    /// not wall-clock, matters).
     pub fn apply_seq(&self, xs: &Mat) -> Mat {
         let mut s = xs.matmul(&self.bt); // T × d
         let t = self.threshold;

@@ -14,9 +14,11 @@
 //! * **Layer 3** (this crate) — a rust serving coordinator (request router,
 //!   continuous batcher, adaptive rank-budget controller) plus a complete
 //!   pure-rust implementation of the paper's adapters, baselines, evaluation
-//!   harness and every substrate they need (tensor/linalg with SVD, FLOP
-//!   accounting, synthetic corpus + downstream tasks, transformer reference
-//!   forward, PJRT runtime).
+//!   harness and every substrate they need (tensor/linalg with a packed,
+//!   blocked GEMM under every dense product — see [`tensor::gemm`] — SVD,
+//!   FLOP accounting, synthetic corpus + downstream tasks, transformer
+//!   reference forward, and the PJRT runtime behind the optional `xla`
+//!   feature).
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index that
 //! maps every table and figure of the paper onto modules and bench targets.

@@ -45,6 +45,8 @@ impl Linear {
         self.w.matvec(x)
     }
 
+    /// Sequence path: `ys = xs @ wt` through the packed GEMM (single-row
+    /// sequences dispatch to its GEMV fast path).
     pub fn apply_seq(&self, xs: &Mat) -> Mat {
         xs.matmul(&self.wt)
     }
@@ -260,6 +262,22 @@ mod tests {
         let xs = Mat::from_vec(1, 4, x);
         let y2 = lin.apply_seq(&xs);
         crate::util::prop::close_slices(&y1, &y2.data, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn apply_seq_agrees_with_per_token_apply() {
+        // tok/seq agreement through Linear::apply_seq across a shape large
+        // enough to engage the packed GEMM path.
+        let mut rng = Xoshiro256::new(5);
+        let lin = Linear::new(Mat::gaussian(96, 80, 1.0, &mut rng));
+        let xs = Mat::gaussian(64, 80, 1.0, &mut rng);
+        let seq = lin.apply_seq(&xs);
+        assert_eq!((seq.rows, seq.cols), (64, 96));
+        for r in 0..xs.rows {
+            let tok = lin.apply(xs.row(r));
+            crate::util::prop::close_slices(&tok, seq.row(r), 1e-4, 1e-3)
+                .unwrap_or_else(|e| panic!("row {r}: {e}"));
+        }
     }
 
     #[test]

@@ -1,0 +1,215 @@
+//! Real PJRT runtime: load AOT-compiled HLO text artifacts (produced by
+//! `python/compile/aot.py`) and execute them from the rust hot path.
+//! Compiled only with `--features xla` (needs the image's xla-rs crate; see
+//! Cargo.toml).
+//!
+//! Interchange format is **HLO text**, not serialized `HloModuleProto`:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md). One compiled executable per
+//! `(model, variant, batch-bucket)`; the coordinator picks the bucket.
+
+use std::path::PathBuf;
+
+use crate::tensor::Mat;
+use crate::util::json::Json;
+
+/// A compiled forward-pass executable at a fixed `(batch, seq)` bucket.
+/// Weights are passed as arguments (HLO stays small); the literals are
+/// built once at load time and reused across calls.
+pub struct PjrtEngine {
+    exe: xla::PjRtLoadedExecutable,
+    weights: Vec<xla::Literal>,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    pub variant: String,
+}
+
+/// Bucket metadata written by aot.py alongside each `.hlo.txt`.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub model: String,
+    pub variant: String, // "dense" | "rana"
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    pub path: PathBuf,
+    pub weights_path: PathBuf,
+    /// Flattened weight-argument shapes/offsets (into the weights blob).
+    pub args: Vec<(Vec<usize>, usize)>,
+}
+
+/// Read `artifacts/<model>/aot_manifest.json` and list available buckets.
+pub fn list_artifacts(model: &str) -> anyhow::Result<Vec<ArtifactMeta>> {
+    let dir = crate::util::artifacts_dir().join(model);
+    let manifest_path = dir.join("aot_manifest.json");
+    anyhow::ensure!(
+        manifest_path.exists(),
+        "no AOT manifest at {manifest_path:?}; run `make artifacts`"
+    );
+    let manifest = Json::parse(&std::fs::read_to_string(&manifest_path)?)?;
+    let mut out = Vec::new();
+    for e in manifest
+        .get("modules")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("modules not an array"))?
+    {
+        let mut args = Vec::new();
+        for a in e
+            .get("args")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("args not an array"))?
+        {
+            let shape: Vec<usize> = a
+                .get("shape")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("shape not an array"))?
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0))
+                .collect();
+            args.push((shape, a.get_usize("offset")?));
+        }
+        out.push(ArtifactMeta {
+            model: model.to_string(),
+            variant: e.get_str("variant")?.to_string(),
+            batch: e.get_usize("batch")?,
+            seq: e.get_usize("seq")?,
+            vocab: e.get_usize("vocab")?,
+            path: dir.join(e.get_str("file")?),
+            weights_path: dir.join(e.get_str("weights_file")?),
+            args,
+        });
+    }
+    Ok(out)
+}
+
+impl PjrtEngine {
+    /// Compile one artifact on the PJRT CPU client.
+    pub fn load(client: &xla::PjRtClient, meta: &ArtifactMeta) -> anyhow::Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.path
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        // Build the weight-argument literals once.
+        let blob = crate::util::read_f32_bin(&meta.weights_path)?;
+        let mut weights = Vec::with_capacity(meta.args.len());
+        for (shape, offset) in &meta.args {
+            let n: usize = shape.iter().product();
+            anyhow::ensure!(offset + n <= blob.len(), "weights blob out of range");
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            weights.push(xla::Literal::vec1(&blob[*offset..offset + n]).reshape(&dims)?);
+        }
+        Ok(Self {
+            exe,
+            weights,
+            batch: meta.batch,
+            seq: meta.seq,
+            vocab: meta.vocab,
+            variant: meta.variant.clone(),
+        })
+    }
+
+    /// Run the forward pass on a batch of token sequences (each exactly
+    /// `seq` long; shorter inputs must be padded by the caller). Returns
+    /// per-sequence logits `[seq, vocab]`.
+    pub fn forward(&self, seqs: &[Vec<u32>]) -> anyhow::Result<Vec<Mat>> {
+        anyhow::ensure!(seqs.len() == self.batch, "batch mismatch");
+        let mut flat: Vec<i32> = Vec::with_capacity(self.batch * self.seq);
+        for s in seqs {
+            anyhow::ensure!(s.len() == self.seq, "seq len mismatch");
+            flat.extend(s.iter().map(|&t| t as i32));
+        }
+        let tokens =
+            xla::Literal::vec1(&flat).reshape(&[self.batch as i64, self.seq as i64])?;
+        // Argument order from aot.py's `wrapped(tokens, *flat_weights)`.
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + self.weights.len());
+        args.push(&tokens);
+        args.extend(self.weights.iter());
+        let result = self.exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        anyhow::ensure!(
+            values.len() == self.batch * self.seq * self.vocab,
+            "logits size {} != {}×{}×{}",
+            values.len(),
+            self.batch,
+            self.seq,
+            self.vocab
+        );
+        let stride = self.seq * self.vocab;
+        Ok((0..self.batch)
+            .map(|b| {
+                Mat::from_vec(self.seq, self.vocab, values[b * stride..(b + 1) * stride].to_vec())
+            })
+            .collect())
+    }
+}
+
+/// A pool of engines (one per bucket) for one model variant.
+pub struct EnginePool {
+    pub engines: Vec<PjrtEngine>,
+    _client: xla::PjRtClient,
+}
+
+impl EnginePool {
+    pub fn load(model: &str, variant: &str) -> anyhow::Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        let metas = list_artifacts(model)?;
+        let engines: Vec<PjrtEngine> = metas
+            .iter()
+            .filter(|m| m.variant == variant)
+            .map(|m| PjrtEngine::load(&client, m))
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(
+            !engines.is_empty(),
+            "no artifacts for model {model:?} variant {variant:?}"
+        );
+        Ok(Self { engines, _client: client })
+    }
+
+    /// Smallest bucket that fits `(n_seqs, seq_len)`.
+    pub fn pick(&self, n_seqs: usize, seq_len: usize) -> Option<&PjrtEngine> {
+        self.engines
+            .iter()
+            .filter(|e| e.batch >= n_seqs && e.seq >= seq_len)
+            .min_by_key(|e| e.batch * e.seq)
+    }
+}
+
+/// Verify the PJRT path against the native engine on golden tokens:
+/// loads the dense artifact, runs both, compares logits.
+pub fn parity_check(model_name: &str) -> anyhow::Result<()> {
+    let model = crate::model::Model::load(&crate::model::model_dir(model_name))?;
+    let pool = EnginePool::load(model_name, "dense")?;
+    let engine = &pool.engines[0];
+    // Build a deterministic batch padded to the bucket.
+    let corpus = crate::data::generate_corpus(1_000, engine.seq * engine.batch + 64);
+    let seqs: Vec<Vec<u32>> = (0..engine.batch)
+        .map(|b| corpus.heldout[b * engine.seq..(b + 1) * engine.seq].to_vec())
+        .collect();
+    let pjrt_logits = engine.forward(&seqs)?;
+    let mut max_abs = 0.0f32;
+    let mut max_rel = 0.0f32;
+    for (s, pl) in seqs.iter().zip(&pjrt_logits) {
+        let native = crate::model::forward_seq(&model, s, None);
+        for (a, b) in native.data.iter().zip(&pl.data) {
+            let abs = (a - b).abs();
+            max_abs = max_abs.max(abs);
+            max_rel = max_rel.max(abs / a.abs().max(1.0));
+        }
+    }
+    println!(
+        "parity {model_name}: bucket b{}×t{} max_abs={max_abs:.2e} max_rel={max_rel:.2e}",
+        engine.batch, engine.seq
+    );
+    anyhow::ensure!(
+        max_rel < 2e-2 && max_abs < 0.5,
+        "PJRT vs native logits diverge: max_abs={max_abs} max_rel={max_rel}"
+    );
+    println!("parity OK");
+    Ok(())
+}

@@ -1,0 +1,536 @@
+//! Blocked, packed GEMM — the dense-product engine under every hot path.
+//!
+//! The seed computed `A @ B` one output row at a time with a k-outer axpy
+//! loop: each `B` row is re-streamed from cache for every output row and the
+//! output row is loaded+stored once per FMA. That algorithm is kept (as
+//! [`gemm_rows_axpy`]) because it is the right shape for small products and
+//! for the single-row GEMV path, but large GEMMs now go through a classic
+//! three-level blocked kernel in the style of rten's `GenericKernel` /
+//! BLIS:
+//!
+//! * **Microkernel** — an `MR×NR` (8×8) register tile; the innermost loop
+//!   does `acc[r][c] += a[r] * b[c]` over the depth, which LLVM reliably
+//!   auto-vectorizes to one FMA vector op per accumulator row. Every loaded
+//!   `a`/`b` element is reused 8 times from registers instead of once.
+//! * **Packing** — before the microkernel runs, the operands are repacked
+//!   into contiguous panels: `A` blocks become `MR`-tall column-interleaved
+//!   panels, `B` blocks become `NR`-wide row-interleaved panels, so the
+//!   microkernel's loads are sequential and edge tiles are zero-padded (the
+//!   kernel itself never branches on shape).
+//! * **Cache blocking** — the depth dimension is split into `KC`-sized
+//!   blocks (packed `B` panel stays L2-resident) and rows into `MC`-sized
+//!   blocks (packed `A` block stays L1/L2-resident).
+//!
+//! Parallelism: output row-blocks are distributed over
+//! [`parallel_chunks`]; each worker packs its own `A` block, the packed `B`
+//! block is shared read-only. All kernels honor `alpha`/`beta` semantics
+//! (`out = alpha·A@B + beta·out`) so callers can accumulate without temp
+//! buffers.
+//!
+//! Dispatch ([`gemm_into`]): single-row products use the streaming GEMV
+//! path, small products use the axpy fallback (packing would dominate), and
+//! everything else uses the packed kernel. The crossover is validated by
+//! `cargo bench --bench microbench -- gemm`, which emits the packed-vs-axpy
+//! comparison as JSON.
+
+use super::{axpy, dot, Mat};
+use crate::util::pool::{default_parallelism, parallel_chunks};
+
+/// Microkernel tile height (rows of `A` per register tile).
+pub const MR: usize = 8;
+/// Microkernel tile width (cols of `B` per register tile).
+pub const NR: usize = 8;
+/// Depth (k) cache block: packed B panel bytes per column ≈ KC·4.
+const KC: usize = 256;
+/// Row (m) cache block: packed A block is at most MC·KC floats (64 KiB).
+const MC: usize = 64;
+/// Below this many multiply-adds the packed path loses to the axpy loop.
+const PACK_MIN_MADDS: usize = 48 * 48 * 48;
+
+/// Pointer wrapper so parallel tile writers can share one output buffer.
+/// Safety contract: every writer touches a disjoint set of rows.
+pub(crate) struct SendPtr(pub *mut f32);
+unsafe impl Sync for SendPtr {}
+unsafe impl Send for SendPtr {}
+
+/// `out = alpha·(a @ b) + beta·out` with shape checks and path dispatch.
+/// (Plain products go through [`Mat::matmul`], which delegates here with
+/// `alpha = 1, beta = 0` — there is deliberately one public entry point per
+/// operation.)
+pub fn gemm_into(out: &mut Mat, a: &Mat, b: &Mat, alpha: f32, beta: f32) {
+    assert_eq!(a.cols, b.rows, "gemm shape mismatch");
+    assert_eq!(out.rows, a.rows, "gemm out rows");
+    assert_eq!(out.cols, b.cols, "gemm out cols");
+    gemm_slices(a.rows, a.cols, b.cols, &a.data, &b.data, &mut out.data, alpha, beta);
+}
+
+/// Slice-level dispatcher (row-major `a: m×k`, `b: k×n`, `out: m×n`).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_slices(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    alpha: f32,
+    beta: f32,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        scale(out, beta);
+        return;
+    }
+    if m == 1 {
+        gemv_slices(out, a, b, k, n, alpha, beta);
+    } else if m < MR || n < NR || m * k * n < PACK_MIN_MADDS {
+        gemm_rows_axpy(m, k, n, a, b, out, alpha, beta);
+    } else {
+        gemm_packed(m, k, n, a, b, out, alpha, beta);
+    }
+}
+
+/// `out = beta·out` (with `beta = 0` short-circuiting possible NaNs away).
+#[inline]
+fn scale(out: &mut [f32], beta: f32) {
+    if beta == 0.0 {
+        out.fill(0.0);
+    } else if beta != 1.0 {
+        for v in out.iter_mut() {
+            *v *= beta;
+        }
+    }
+}
+
+/// Row-vector × matrix: `out = alpha·(x @ b) + beta·out` for `x: 1×k`,
+/// `b: k×n`. The k-outer axpy loop streams each `b` row exactly once and
+/// keeps the whole output row cache-resident — the GEMV fast path of the
+/// sequence stack (and the dense fallback of the masked kernels).
+pub fn gemv_into(out: &mut [f32], x: &[f32], b: &Mat, alpha: f32, beta: f32) {
+    assert_eq!(x.len(), b.rows, "gemv shape mismatch");
+    assert_eq!(out.len(), b.cols, "gemv out len");
+    gemv_slices(out, x, &b.data, b.rows, b.cols, alpha, beta);
+}
+
+fn gemv_slices(out: &mut [f32], x: &[f32], b: &[f32], k: usize, n: usize, alpha: f32, beta: f32) {
+    scale(out, beta);
+    for kk in 0..k {
+        let av = alpha * x[kk];
+        if av != 0.0 {
+            axpy(av, &b[kk * n..(kk + 1) * n], out);
+        }
+    }
+}
+
+/// Matrix × column-vector: `out[r] = w.row(r) · x` — the decode-path
+/// product. One dot per row (streams `w` exactly once); parallel over row
+/// stripes only when the matrix is large enough to amortize the scoped
+/// thread fork (`parallel_chunks` has no persistent pool, so the threshold
+/// must sit well above the sim models' decode matvecs — forking per token
+/// would swamp the ~20 µs of dot work and poison the latency baselines).
+pub fn matvec_into(out: &mut [f32], w: &Mat, x: &[f32]) {
+    assert_eq!(x.len(), w.cols, "matvec shape mismatch");
+    assert_eq!(out.len(), w.rows, "matvec out len");
+    if w.rows * w.cols >= 1 << 20 {
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        parallel_chunks(w.rows, 32, |range| {
+            let out_ptr = &out_ptr;
+            for r in range {
+                // SAFETY: each output element is written by exactly one chunk.
+                unsafe { *out_ptr.0.add(r) = dot(w.row(r), x) };
+            }
+        });
+    } else {
+        for (r, o) in out.iter_mut().enumerate() {
+            *o = dot(w.row(r), x);
+        }
+    }
+}
+
+/// The seed's algorithm: one output row at a time, k-outer axpy over rows
+/// of `b`. Kept as the small-shape fallback and as the bench baseline the
+/// packed kernel is measured against. Parallel over output row stripes.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_rows_axpy(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    alpha: f32,
+    beta: f32,
+) {
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    parallel_chunks(m, 8, |range| {
+        let out_ptr = &out_ptr;
+        for r in range {
+            // SAFETY: each row of `out` is written by exactly one chunk.
+            let orow: &mut [f32] =
+                unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(r * n), n) };
+            scale(orow, beta);
+            let arow = &a[r * k..(r + 1) * k];
+            for kk in 0..k {
+                let av = alpha * arow[kk];
+                if av != 0.0 {
+                    axpy(av, &b[kk * n..(kk + 1) * n], orow);
+                }
+            }
+        }
+    });
+}
+
+/// The packed, blocked kernel. Public so benches and property tests can pit
+/// it against the reference regardless of where the dispatcher's crossover
+/// sits.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_packed(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    alpha: f32,
+    beta: f32,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        scale(out, beta);
+        return;
+    }
+    let n_panels = n.div_ceil(NR);
+    // Row-block size: at most MC for cache residency of the packed A block,
+    // but shrunk (to a multiple of MR) when `m` is small so every worker
+    // thread gets a block — a 128-row prefill GEMM should still fan out.
+    let mc_block = {
+        let per_thread = m.div_ceil(default_parallelism()).clamp(MR, MC);
+        per_thread.div_ceil(MR) * MR
+    };
+    let row_blocks = m.div_ceil(mc_block);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    // Packed-B buffer, reused across depth blocks (sized for the largest).
+    let mut bp = vec![0.0f32; n_panels * NR * KC.min(k)];
+    for (kbi, kb) in (0..k).step_by(KC).enumerate() {
+        let kc = KC.min(k - kb);
+        // Pack B's depth block into NR-wide panels (parallel over panels).
+        {
+            let bp_ptr = SendPtr(bp.as_mut_ptr());
+            parallel_chunks(n_panels, 8, |range| {
+                let bp_ptr = &bp_ptr;
+                for q in range {
+                    // SAFETY: panel ranges [q·NR·kc, (q+1)·NR·kc) are disjoint.
+                    let panel: &mut [f32] = unsafe {
+                        std::slice::from_raw_parts_mut(bp_ptr.0.add(q * NR * kc), NR * kc)
+                    };
+                    pack_b_panel(panel, b, n, kb, kc, q * NR);
+                }
+            });
+        }
+        let bp = &bp[..];
+        // `beta` applies only on the first depth block; later blocks accumulate.
+        let first = kbi == 0;
+        parallel_chunks(row_blocks, 1, |range| {
+            let out_ptr = &out_ptr;
+            for blk in range {
+                let i0 = blk * mc_block;
+                let mc = mc_block.min(m - i0);
+                let mr_panels = mc.div_ceil(MR);
+                let mut ap = vec![0.0f32; mr_panels * MR * kc];
+                for p in 0..mr_panels {
+                    let r0 = i0 + p * MR;
+                    pack_a_panel(
+                        &mut ap[p * MR * kc..(p + 1) * MR * kc],
+                        a,
+                        k,
+                        kb,
+                        kc,
+                        r0,
+                        MR.min(m - r0),
+                    );
+                }
+                for p in 0..mr_panels {
+                    let row0 = i0 + p * MR;
+                    let rows = MR.min(m - row0);
+                    let ap_panel = &ap[p * MR * kc..(p + 1) * MR * kc];
+                    for q in 0..n_panels {
+                        let col0 = q * NR;
+                        let cols = NR.min(n - col0);
+                        let acc = microkernel(ap_panel, &bp[q * NR * kc..(q + 1) * NR * kc], kc);
+                        // SAFETY: this worker owns rows [i0, i0+mc).
+                        unsafe {
+                            store_tile(
+                                &acc, out_ptr.0, n, row0, col0, rows, cols, alpha, beta, first,
+                            )
+                        };
+                    }
+                }
+            }
+        });
+    }
+}
+
+/// Pack `NR.min(n-j0)` columns of `b[kb..kb+kc, j0..]` row-interleaved:
+/// `panel[kk·NR + c] = b[kb+kk, j0+c]`, zero-padded to `NR`.
+#[inline]
+fn pack_b_panel(panel: &mut [f32], b: &[f32], n: usize, kb: usize, kc: usize, j0: usize) {
+    let cols = NR.min(n - j0);
+    for kk in 0..kc {
+        let src = &b[(kb + kk) * n + j0..(kb + kk) * n + j0 + cols];
+        let dst = &mut panel[kk * NR..kk * NR + NR];
+        dst[..cols].copy_from_slice(src);
+        dst[cols..].fill(0.0);
+    }
+}
+
+/// Pack `rows` rows of `a[r0.., kb..kb+kc]` column-interleaved:
+/// `panel[kk·MR + r] = a[r0+r, kb+kk]`, zero-padded to `MR`.
+#[inline]
+fn pack_a_panel(
+    panel: &mut [f32],
+    a: &[f32],
+    k: usize,
+    kb: usize,
+    kc: usize,
+    r0: usize,
+    rows: usize,
+) {
+    for r in 0..rows {
+        let arow = &a[(r0 + r) * k + kb..(r0 + r) * k + kb + kc];
+        for (kk, &v) in arow.iter().enumerate() {
+            panel[kk * MR + r] = v;
+        }
+    }
+    if rows < MR {
+        for kk in 0..kc {
+            panel[kk * MR + rows..(kk + 1) * MR].fill(0.0);
+        }
+    }
+}
+
+/// The `MR×NR` register tile: `acc[r][c] += ap[kk·MR+r] · bp[kk·NR+c]`.
+/// The `c` loop vectorizes to one FMA per accumulator row; `a` elements are
+/// broadcast. Operands come pre-packed so every load is sequential.
+#[inline(always)]
+fn microkernel(ap: &[f32], bp: &[f32], kc: usize) -> [[f32; NR]; MR] {
+    let mut acc = [[0.0f32; NR]; MR];
+    for kk in 0..kc {
+        let av = &ap[kk * MR..kk * MR + MR];
+        let bv = &bp[kk * NR..kk * NR + NR];
+        for r in 0..MR {
+            let ar = av[r];
+            for c in 0..NR {
+                acc[r][c] += ar * bv[c];
+            }
+        }
+    }
+    acc
+}
+
+/// Write an accumulator tile into `out` honoring alpha/beta and edge clips.
+///
+/// # Safety
+/// The caller must own rows `[row0, row0+rows)` of `out` exclusively, and
+/// the tile must be in-bounds (`row0+rows ≤ m`, `col0+cols ≤ n`).
+#[allow(clippy::too_many_arguments)]
+unsafe fn store_tile(
+    acc: &[[f32; NR]; MR],
+    out: *mut f32,
+    n: usize,
+    row0: usize,
+    col0: usize,
+    rows: usize,
+    cols: usize,
+    alpha: f32,
+    beta: f32,
+    first: bool,
+) {
+    for (r, acc_row) in acc.iter().enumerate().take(rows) {
+        let orow = std::slice::from_raw_parts_mut(out.add((row0 + r) * n + col0), cols);
+        if first {
+            if beta == 0.0 {
+                for (o, &v) in orow.iter_mut().zip(acc_row.iter()) {
+                    *o = alpha * v;
+                }
+            } else {
+                for (o, &v) in orow.iter_mut().zip(acc_row.iter()) {
+                    *o = alpha * v + beta * *o;
+                }
+            }
+        } else {
+            for (o, &v) in orow.iter_mut().zip(acc_row.iter()) {
+                *o += alpha * v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, close_slices, Config};
+    use crate::util::rng::Xoshiro256;
+
+    /// f64-accumulating triple loop, the correctness oracle.
+    #[allow(clippy::too_many_arguments)]
+    fn naive(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        out0: &[f32],
+        alpha: f32,
+        beta: f32,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f64;
+                for kk in 0..k {
+                    s += a[i * k + kk] as f64 * b[kk * n + j] as f64;
+                }
+                out[i * n + j] = alpha * s as f32
+                    + if beta == 0.0 { 0.0 } else { beta * out0[i * n + j] };
+            }
+        }
+        out
+    }
+
+    fn rand_vec(n: usize, rng: &mut Xoshiro256) -> Vec<f32> {
+        (0..n).map(|_| rng.gaussian()).collect()
+    }
+
+    #[test]
+    fn packed_matches_naive_on_ragged_shapes() {
+        let cfg = Config { cases: 48, max_size: 40, ..Default::default() };
+        check("gemm_packed==naive", cfg, |rng, size| {
+            let m = 1 + rng.below(size);
+            let k = 1 + rng.below(2 * size);
+            let n = 1 + rng.below(size);
+            let (alpha, beta) = match rng.below(4) {
+                0 => (1.0, 0.0),
+                1 => (0.5, 1.0),
+                2 => (-2.0, 0.25),
+                _ => (0.0, 0.5),
+            };
+            let a = rand_vec(m * k, rng);
+            let b = rand_vec(k * n, rng);
+            let out0 = rand_vec(m * n, rng);
+            let want = naive(m, k, n, &a, &b, &out0, alpha, beta);
+            let mut got = out0.clone();
+            gemm_packed(m, k, n, &a, &b, &mut got, alpha, beta);
+            close_slices(&got, &want, 1e-4, 1e-3)
+        });
+    }
+
+    #[test]
+    fn axpy_fallback_matches_naive_with_alpha_beta() {
+        let cfg = Config { cases: 32, max_size: 32, ..Default::default() };
+        check("gemm_axpy==naive", cfg, |rng, size| {
+            let m = 1 + rng.below(size);
+            let k = 1 + rng.below(size);
+            let n = 1 + rng.below(size);
+            let (alpha, beta) = if rng.f32() < 0.5 { (1.0, 0.0) } else { (0.7, -0.5) };
+            let a = rand_vec(m * k, rng);
+            let b = rand_vec(k * n, rng);
+            let out0 = rand_vec(m * n, rng);
+            let want = naive(m, k, n, &a, &b, &out0, alpha, beta);
+            let mut got = out0.clone();
+            gemm_rows_axpy(m, k, n, &a, &b, &mut got, alpha, beta);
+            close_slices(&got, &want, 1e-4, 1e-3)
+        });
+    }
+
+    #[test]
+    fn dispatcher_handles_single_row_and_odd_k() {
+        let mut rng = Xoshiro256::new(5);
+        // 1×k (GEMV path) with k not a multiple of the unroll width.
+        for k in [1usize, 7, 9, 17, 63, 65] {
+            let n = 13;
+            let a = rand_vec(k, &mut rng);
+            let b = rand_vec(k * n, &mut rng);
+            let want = naive(1, k, n, &a, &b, &vec![0.0; n], 1.0, 0.0);
+            let mut got = vec![0.0f32; n];
+            gemm_slices(1, k, n, &a, &b, &mut got, 1.0, 0.0);
+            close_slices(&got, &want, 1e-4, 1e-3).unwrap();
+        }
+    }
+
+    #[test]
+    fn empty_matrices_are_noops_or_beta_scales() {
+        // m = 0 / n = 0: nothing to write.
+        let mut empty: Vec<f32> = vec![];
+        gemm_slices(0, 5, 4, &[], &rand_vec(20, &mut Xoshiro256::new(1)), &mut empty, 1.0, 0.0);
+        let mut empty2: Vec<f32> = vec![];
+        gemm_slices(3, 5, 0, &rand_vec(15, &mut Xoshiro256::new(2)), &[], &mut empty2, 1.0, 0.0);
+        // k = 0: out = beta·out (alpha·0 contributes nothing).
+        let mut out = vec![2.0f32, -4.0, 6.0, 8.0];
+        gemm_slices(2, 0, 2, &[], &[], &mut out, 1.0, 0.5);
+        assert_eq!(out, vec![1.0, -2.0, 3.0, 4.0]);
+        let mut out = vec![f32::NAN; 4];
+        gemm_slices(2, 0, 2, &[], &[], &mut out, 1.0, 0.0);
+        assert_eq!(out, vec![0.0; 4]);
+        // Same contract on the packed kernel directly.
+        let mut out = vec![3.0f32; 4];
+        gemm_packed(2, 0, 2, &[], &[], &mut out, 1.0, 0.0);
+        assert_eq!(out, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn packed_crossover_shape_matches_reference() {
+        // A shape big enough to take the packed path through the dispatcher
+        // (multiple KC/MC blocks, ragged edges in every direction).
+        let mut rng = Xoshiro256::new(9);
+        let (m, k, n) = (67, 300, 71);
+        let a = rand_vec(m * k, &mut rng);
+        let b = rand_vec(k * n, &mut rng);
+        let mut packed = vec![0.0f32; m * n];
+        gemm_slices(m, k, n, &a, &b, &mut packed, 1.0, 0.0);
+        let mut reference = vec![0.0f32; m * n];
+        gemm_rows_axpy(m, k, n, &a, &b, &mut reference, 1.0, 0.0);
+        close_slices(&packed, &reference, 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn gemv_and_matvec_match_matmul() {
+        let mut rng = Xoshiro256::new(11);
+        let (k, n) = (37, 29);
+        let b = Mat::gaussian(k, n, 1.0, &mut rng);
+        let x = rand_vec(k, &mut rng);
+        let mut out = rand_vec(n, &mut rng);
+        let base = out.clone();
+        gemv_into(&mut out, &x, &b, 2.0, 1.0);
+        let xm = Mat::from_vec(1, k, x.clone());
+        let prod = xm.matmul(&b);
+        for j in 0..n {
+            let want = 2.0 * prod.data[j] + base[j];
+            assert!((out[j] - want).abs() < 1e-3, "col {j}: {} vs {want}", out[j]);
+        }
+        // matvec: W·x against the transpose identity.
+        let w = Mat::gaussian(19, k, 1.0, &mut rng);
+        let mut y = vec![0.0f32; 19];
+        matvec_into(&mut y, &w, &x);
+        close_slices(&y, &w.matmul(&Mat::from_vec(k, 1, x)).data, 1e-4, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn gemm_into_accumulates() {
+        let mut rng = Xoshiro256::new(13);
+        let a = Mat::gaussian(6, 10, 1.0, &mut rng);
+        let b = Mat::gaussian(10, 4, 1.0, &mut rng);
+        let mut out = a.matmul(&b);
+        gemm_into(&mut out, &a, &b, 1.0, 1.0); // out = 2·(a@b)
+        let want = a.matmul(&b);
+        for (o, w) in out.data.iter().zip(&want.data) {
+            assert!((o - 2.0 * w).abs() < 1e-4);
+        }
+    }
+}

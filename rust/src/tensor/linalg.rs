@@ -7,6 +7,11 @@
 //! range-finder with power iterations (Halko–Martinsson–Tropp): we never form
 //! `W·X` when only `k` singular vectors are needed, and accuracy is cross-
 //! checked against exact Jacobi on small cases in the tests below.
+//!
+//! All the large inner products here (`W·XΩ`, the power-iteration chain, the
+//! Gram matrix `B·Bᵀ`) go through [`Mat::matmul`] and therefore the packed,
+//! blocked [`crate::tensor::gemm`] kernel — calibration-time SVDs are
+//! GEMM-bound, so they speed up with it.
 
 use super::Mat;
 use crate::util::rng::Xoshiro256;
@@ -186,14 +191,21 @@ pub fn left_sv_of_product(w: &Mat, x: &Mat, k: usize, power: usize, seed: u64) -
     let xo = x.matmul(&omega); // i × l
     let mut y = w.matmul(&xo); // o × l
     // Power iterations with re-orthonormalization: Y ← M Mᵀ Y.
-    for _ in 0..power {
-        let q = qr_q(&y); // o × l
-        // Mᵀ Q = Xᵀ (Wᵀ Q): compute Wᵀ Q (i×l) then Xᵀ· (n×l).
-        let wtq = w.transpose().matmul(&q);
-        let mtq = x.transpose().matmul(&wtq);
-        // Y = M (Mᵀ Q) = W (X (MᵀQ))
-        let xm = x.matmul(&mtq);
-        y = w.matmul(&xm);
+    // The transposes are loop-invariant — materialize them once instead of
+    // per iteration (they feed the packed GEMM, which wants contiguous
+    // row-major operands anyway).
+    if power > 0 {
+        let wt = w.transpose(); // i × o
+        let xt = x.transpose(); // n × i
+        for _ in 0..power {
+            let q = qr_q(&y); // o × l
+            // Mᵀ Q = Xᵀ (Wᵀ Q): compute Wᵀ Q (i×l) then Xᵀ· (n×l).
+            let wtq = wt.matmul(&q);
+            let mtq = xt.matmul(&wtq);
+            // Y = M (Mᵀ Q) = W (X (MᵀQ))
+            let xm = x.matmul(&mtq);
+            y = w.matmul(&xm);
+        }
     }
     let q = qr_q(&y); // o × l, orthonormal columns spanning range(M)
 

@@ -13,9 +13,9 @@
 //!   stored column-major as `at = Aᵀ`. Skipped rows are genuinely skipped,
 //!   which is where the latency win comes from.
 
+pub mod gemm;
 pub mod linalg;
 
-use crate::util::pool::parallel_chunks;
 use crate::util::rng::Xoshiro256;
 
 /// Dense row-major f32 matrix.
@@ -133,39 +133,29 @@ impl Mat {
         )
     }
 
-    /// `self @ other` — parallel over row stripes.
+    /// `self @ other` via the packed, blocked GEMM subsystem ([`gemm`]):
+    /// single-row inputs take the GEMV fast path, small products the axpy
+    /// fallback, large ones the cache-blocked `MR×NR` microkernel.
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(m, n);
-        let out_ptr = SendPtr(out.data.as_mut_ptr());
-        parallel_chunks(m, 8, |range| {
-            let out_ptr = &out_ptr;
-            for r in range {
-                // SAFETY: each row of `out` is written by exactly one chunk.
-                let orow: &mut [f32] =
-                    unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(r * n), n) };
-                gemm_row(self.row(r), other, k, n, orow);
-            }
-        });
+        let mut out = Mat::zeros(self.rows, other.cols);
+        gemm::gemm_into(&mut out, self, other, 1.0, 0.0);
         out
     }
 
-    /// `self @ v` for a dense vector.
+    /// `self @ v` for a dense vector (one dot per row, parallel when large).
     pub fn matvec(&self, v: &[f32]) -> Vec<f32> {
         assert_eq!(self.cols, v.len());
-        (0..self.rows).map(|r| dot(self.row(r), v)).collect()
+        let mut out = vec![0.0f32; self.rows];
+        gemm::matvec_into(&mut out, self, v);
+        out
     }
 
-    /// `selfᵀ @ v` without materializing the transpose.
+    /// `selfᵀ @ v` without materializing the transpose (row-vector GEMV).
     pub fn t_matvec(&self, v: &[f32]) -> Vec<f32> {
         assert_eq!(self.rows, v.len());
         let mut out = vec![0.0f32; self.cols];
-        for (r, &vr) in v.iter().enumerate() {
-            if vr != 0.0 {
-                axpy(vr, self.row(r), &mut out);
-            }
-        }
+        gemm::gemv_into(&mut out, v, self, 1.0, 0.0);
         out
     }
 
@@ -174,24 +164,6 @@ impl Mat {
         self.data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / self.data.len().max(1) as f64
     }
 }
-
-/// One output row of a GEMM: `orow = arow @ b` with a k-outer loop that
-/// streams rows of `b` (good locality for row-major `b`).
-#[inline]
-fn gemm_row(arow: &[f32], b: &Mat, k: usize, n: usize, orow: &mut [f32]) {
-    orow.fill(0.0);
-    for kk in 0..k {
-        let a = arow[kk];
-        if a != 0.0 {
-            axpy(a, &b.data[kk * n..(kk + 1) * n], orow);
-        }
-    }
-}
-
-/// Pointer wrapper so parallel row-stripe writers can share `out`.
-struct SendPtr(*mut f32);
-unsafe impl Sync for SendPtr {}
-unsafe impl Send for SendPtr {}
 
 /// `out += a * x` — the auto-vectorized hot loop of the whole engine.
 #[inline(always)]
@@ -246,6 +218,12 @@ pub fn masked_acc_gemv(at: &Mat, mask: &[bool], c: &[f32], out: &mut [f32]) {
     debug_assert_eq!(at.rows, mask.len());
     debug_assert_eq!(at.rows, c.len());
     debug_assert_eq!(at.cols, out.len());
+    // Dense fallback: a fully-active mask is just an accumulating GEMV, so
+    // route it through the gemm subsystem (no per-row branch).
+    if mask.iter().all(|&m| m) {
+        gemm::gemv_into(out, c, at, 1.0, 1.0);
+        return;
+    }
     for i in 0..at.rows {
         if mask[i] {
             axpy(c[i], at.row(i), out);
