@@ -81,16 +81,56 @@ fn fig1b(opts: Opts, decode_len: usize) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Serving-path latency: coordinator + batcher overhead vs raw engine.
+/// Serving-path benches: (1) decode throughput of the iteration-level
+/// batched path vs the per-thread request-level baseline, across batch
+/// sizes, emitted as JSON rows; (2) coordinator + batcher overhead vs raw
+/// engine. Runs on trained artifacts when present, else a seeded random
+/// init (latency is shape-bound), so it doubles as the CI smoke bench.
 fn serving(opts: Opts) -> anyhow::Result<()> {
     use rana::adapters::AdaptedModel;
     use rana::coordinator::batcher::{call, Batcher, BudgetLadder, Op};
     use rana::coordinator::engine::{Engine, NativeEngine};
 
+    println!("\n== Serving: batched decode vs per-thread baseline ==");
+    let model = Arc::new(rana::model::load_or_random("llama-sim", 0xDECADE)?);
+    let adapted = Arc::new(AdaptedModel::unadapted(Arc::clone(&model)));
+    let gen_tokens = if opts.items <= 16 { 16 } else { 48 };
+    for batch in [1usize, 2, 4, 8] {
+        let prompts: Vec<(String, usize)> = (0..batch)
+            .map(|i| (format!("the dax lopa the fep number {i} ."), gen_tokens))
+            .collect();
+        let engine = NativeEngine::new(Arc::clone(&adapted)).with_decode_capacity(batch);
+        // Warm both paths (first run pays cache/page faults).
+        let _ = engine.generate_batch_threads(&prompts);
+        let _ = engine.generate_batch(&prompts);
+        let t0 = Instant::now();
+        let _ = engine.generate_batch_threads(&prompts);
+        let threads = t0.elapsed();
+        let t0 = Instant::now();
+        let _ = engine.generate_batch(&prompts);
+        let batched = t0.elapsed();
+        let toks = (batch * gen_tokens) as f64;
+        let threads_tps = toks / threads.as_secs_f64().max(1e-12);
+        let batched_tps = toks / batched.as_secs_f64().max(1e-12);
+        println!(
+            "batch {batch}: per-thread {threads_tps:7.0} tok/s   batched {batched_tps:7.0} tok/s   ({:.2}x)",
+            batched_tps / threads_tps
+        );
+        println!(
+            "{}",
+            Json::obj(vec![
+                ("bench", Json::str("serving_decode")),
+                ("batch", Json::Num(batch as f64)),
+                ("gen_tokens", Json::Num(gen_tokens as f64)),
+                ("threads_tok_s", Json::Num(threads_tps)),
+                ("batched_tok_s", Json::Num(batched_tps)),
+                ("speedup", Json::Num(batched_tps / threads_tps)),
+            ])
+        );
+    }
+
     println!("\n== Serving-path overhead: coordinator vs raw engine ==");
-    let wb = Workbench::load("llama-sim", opts)?;
-    let engine: Arc<dyn Engine> =
-        Arc::new(NativeEngine::new(Arc::new(AdaptedModel::unadapted(Arc::clone(&wb.model)))));
+    let engine: Arc<dyn Engine> = Arc::new(NativeEngine::new(Arc::clone(&adapted)));
     let texts: Vec<String> =
         (0..8).map(|i| format!("the dax lopa the fep number {i} .")).collect();
 

@@ -44,6 +44,13 @@ pub trait MlpAdapter: Send + Sync {
     fn apply_tok(&self, x: &[f32]) -> Vec<f32>;
     /// Sequence path (GEMM, mask-as-zero).
     fn apply_seq(&self, xs: &Mat) -> Mat;
+    /// Batched decode path: one row per in-flight sequence. The default
+    /// stacks per-token applications; adapters with batched masked kernels
+    /// (RaNA) override to ride `masked_acc_gemm`.
+    fn apply_tok_batch(&self, xs: &Mat) -> Mat {
+        let rows: Vec<Vec<f32>> = (0..xs.rows).map(|r| self.apply_tok(xs.row(r))).collect();
+        Mat::from_rows(&rows)
+    }
     /// Expected per-token FLOPs.
     fn flops(&self) -> MlpFlops;
 }
@@ -53,6 +60,10 @@ pub trait QkvAdapter: Send + Sync {
     fn name(&self) -> &'static str;
     fn apply_tok(&self, x: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>);
     fn apply_seq(&self, xs: &Mat) -> (Mat, Mat, Mat);
+    /// Batched decode path; default stacks per-token applications.
+    fn apply_tok_batch(&self, xs: &Mat) -> (Mat, Mat, Mat) {
+        crate::tensor::stack3_rows((0..xs.rows).map(|r| self.apply_tok(xs.row(r))).collect())
+    }
     /// Expected per-token FLOPs of the fused projection.
     fn flops(&self) -> LinearFlops;
 }
@@ -200,6 +211,24 @@ impl BlockOps for AdaptedModel {
         match &self.mlp[layer] {
             Some(ad) => ad.apply_tok(x),
             None => self.base.mlp_tok(layer, x),
+        }
+    }
+
+    fn qkv_tok_batch(&self, layer: usize, xs: &Mat) -> (Mat, Mat, Mat) {
+        match &self.qkv[layer] {
+            Some(ad) => ad.apply_tok_batch(xs),
+            None => self.base.qkv_tok_batch(layer, xs),
+        }
+    }
+
+    fn attn_out_tok_batch(&self, layer: usize, xs: &Mat) -> Mat {
+        self.base.attn_out_tok_batch(layer, xs)
+    }
+
+    fn mlp_tok_batch(&self, layer: usize, xs: &Mat) -> Mat {
+        match &self.mlp[layer] {
+            Some(ad) => ad.apply_tok_batch(xs),
+            None => self.base.mlp_tok_batch(layer, xs),
         }
     }
 }

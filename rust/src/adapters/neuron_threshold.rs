@@ -8,7 +8,7 @@
 //! a free importance score instead (§4.2).
 
 use crate::flops::{self, LinearFlops};
-use crate::tensor::{masked_acc_gemv, threshold_for_keep, Mat};
+use crate::tensor::{masked_acc_gemm, masked_acc_gemv, threshold_for_keep, Mat};
 
 #[derive(Clone, Debug)]
 pub struct NeuronThresholdAdapter {
@@ -78,6 +78,20 @@ impl NeuronThresholdAdapter {
         out
     }
 
+    /// Batched decode path: per-row neuron masks drive one batched masked
+    /// accumulation — active rows of `Wᵀ` stream once per engine pass.
+    pub fn apply_tok_batch(&self, xs: &Mat) -> Mat {
+        let mut mask = Vec::with_capacity(xs.rows * xs.cols);
+        for r in 0..xs.rows {
+            for (&v, &n) in xs.row(r).iter().zip(&self.col_norms) {
+                mask.push(v.abs() * n >= self.threshold);
+            }
+        }
+        let mut out = Mat::zeros(xs.rows, self.out_dim());
+        masked_acc_gemm(&self.wt, &mask, xs, &mut out);
+        out
+    }
+
     /// Sequence path: zero masked inputs, dense GEMM.
     pub fn apply_seq(&self, xs: &Mat) -> Mat {
         let mut masked = xs.clone();
@@ -133,6 +147,21 @@ mod tests {
         for r in 0..6 {
             let tok = ad.apply_tok(xs.row(r));
             crate::util::prop::close_slices(&tok, seq.row(r), 1e-5, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn tok_batch_matches_tok() {
+        let (w, x) = setup(16, 32, 9);
+        let ad = NeuronThresholdAdapter::build(&w, &x, flops::linear(16, 32) * 0.5);
+        let mut rng = Xoshiro256::new(10);
+        let xs = Mat::gaussian(5, 32, 1.0, &mut rng);
+        let batched = ad.apply_tok_batch(&xs);
+        for r in 0..xs.rows {
+            crate::util::prop::close_slices(&ad.apply_tok(xs.row(r)), batched.row(r), 1e-5, 1e-4)
+                .unwrap_or_else(|e| panic!("row {r}: {e}"));
+            let solo = ad.apply_tok_batch(&Mat::from_vec(1, 32, xs.row(r).to_vec()));
+            assert_eq!(solo.data, batched.row(r).to_vec(), "row {r} batch-dependent");
         }
     }
 

@@ -36,24 +36,18 @@ impl RanaMlp {
         }
     }
 
+    fn intermediate_tok_batch(&self, xs: &Mat) -> Mat {
+        let mut up = self.up.apply_tok_batch(xs);
+        let gate = self.gate.as_ref().map(|g| g.apply_tok_batch(xs));
+        ops::mlp_activate(self.arch, &mut up, gate.as_ref());
+        up
+    }
+
     fn intermediate_seq(&self, xs: &Mat) -> Mat {
-        match self.arch {
-            Arch::SwiGlu => {
-                let mut up = self.up.apply_seq(xs);
-                let gate = self.gate.as_ref().unwrap().apply_seq(xs);
-                for (v, g) in up.data.iter_mut().zip(&gate.data) {
-                    *v *= ops::silu(*g);
-                }
-                up
-            }
-            Arch::GeluNeoX => {
-                let mut up = self.up.apply_seq(xs);
-                for v in up.data.iter_mut() {
-                    *v = ops::gelu(*v);
-                }
-                up
-            }
-        }
+        let mut up = self.up.apply_seq(xs);
+        let gate = self.gate.as_ref().map(|g| g.apply_seq(xs));
+        ops::mlp_activate(self.arch, &mut up, gate.as_ref());
+        up
     }
 }
 
@@ -68,6 +62,13 @@ impl MlpAdapter for RanaMlp {
 
     fn apply_seq(&self, xs: &Mat) -> Mat {
         self.down.apply_seq(&self.intermediate_seq(xs))
+    }
+
+    /// Batched decode: every stage (Up/Gate rank adapters, Down neuron
+    /// thresholding) runs its batched masked kernel across the whole
+    /// in-flight set in one pass.
+    fn apply_tok_batch(&self, xs: &Mat) -> Mat {
+        self.down.apply_tok_batch(&self.intermediate_tok_batch(xs))
     }
 
     fn flops(&self) -> MlpFlops {
@@ -265,6 +266,10 @@ impl QkvAdapter for RanaQkv {
         split3_seq(&self.ad.apply_seq(xs))
     }
 
+    fn apply_tok_batch(&self, xs: &Mat) -> (Mat, Mat, Mat) {
+        split3_seq(&self.ad.apply_tok_batch(xs))
+    }
+
     fn flops(&self) -> LinearFlops {
         self.ad.flops()
     }
@@ -342,6 +347,44 @@ mod tests {
         let tok = mlp.apply_tok(&x);
         let seq = mlp.apply_seq(&Mat::from_vec(1, m.cfg.d_model, x));
         crate::util::prop::close_slices(&tok, &seq.data, 1e-4, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn rana_mlp_tok_batch_matches_tok_both_archs() {
+        for arch in [Arch::SwiGlu, Arch::GeluNeoX] {
+            let (m, calib) = setup(arch);
+            let b = RanaMlpBuilder::new(m.cfg.arch, &m.w.layers[0], &calib.layers[0], 9);
+            let (mlp, _) = b.build(b.dense_flops() * 0.5, true);
+            let mut rng = crate::util::rng::Xoshiro256::new(10);
+            let xs = Mat::gaussian(6, m.cfg.d_model, 1.0, &mut rng);
+            let batched = mlp.apply_tok_batch(&xs);
+            for r in 0..xs.rows {
+                let tok = mlp.apply_tok(xs.row(r));
+                crate::util::prop::close_slices(&tok, batched.row(r), 1e-4, 1e-3)
+                    .unwrap_or_else(|e| panic!("{arch:?} row {r}: {e}"));
+                // Batch-composition determinism.
+                let solo =
+                    mlp.apply_tok_batch(&Mat::from_vec(1, m.cfg.d_model, xs.row(r).to_vec()));
+                assert_eq!(solo.data, batched.row(r).to_vec(), "{arch:?} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn rana_qkv_tok_batch_matches_tok() {
+        let (m, calib) = setup(Arch::SwiGlu);
+        let fused = crate::adapters::fused_qkv_weight(&m.w.layers[0]);
+        let budget = crate::flops::linear(fused.rows, fused.cols) * 0.5;
+        let (qkv, _) = RanaQkv::build(&fused, &calib.layers[0], budget, 11);
+        let mut rng = crate::util::rng::Xoshiro256::new(12);
+        let xs = Mat::gaussian(4, m.cfg.d_model, 1.0, &mut rng);
+        let (qs, ks, vs) = qkv.apply_tok_batch(&xs);
+        for r in 0..xs.rows {
+            let (q, k, v) = qkv.apply_tok(xs.row(r));
+            crate::util::prop::close_slices(&q, qs.row(r), 1e-4, 1e-3).unwrap();
+            crate::util::prop::close_slices(&k, ks.row(r), 1e-4, 1e-3).unwrap();
+            crate::util::prop::close_slices(&v, vs.row(r), 1e-4, 1e-3).unwrap();
+        }
     }
 
     #[test]

@@ -19,7 +19,7 @@
 
 use crate::flops::{self, LinearFlops};
 use crate::tensor::linalg::left_sv_of_product;
-use crate::tensor::{threshold_for_keep, Mat};
+use crate::tensor::{gemm, masked_acc_gemm, threshold_for_keep, Mat};
 
 /// A constructed rank adapter, ready for both execution paths.
 #[derive(Clone, Debug)]
@@ -66,6 +66,27 @@ impl RankAdapter {
                 crate::tensor::axpy(s, self.at.row(i), &mut out);
             }
         }
+        out
+    }
+
+    /// Batched decode path: B-masker scoring fused with the batched masked
+    /// accumulation. Scores for the whole batch come from **one**
+    /// shared-stream product `S = Xs·Bᵀ` (each row of `B` streamed once per
+    /// engine pass, not once per sequence), the per-row active-rank masks
+    /// are `S_{ri}² ≥ t`, and the surviving coefficients accumulate through
+    /// [`masked_acc_gemm`] — batch-size buys arithmetic intensity on both
+    /// stages while masked ranks still cost nothing on the sparse path.
+    ///
+    /// Row `r` is bit-identical to decoding that sequence at any other
+    /// batch size (the kernels' determinism contract), and numerically
+    /// matches [`RankAdapter::apply_tok`] / [`RankAdapter::apply_seq`].
+    pub fn apply_tok_batch(&self, xs: &Mat) -> Mat {
+        let mut s = Mat::zeros(xs.rows, self.d);
+        gemm::gemv_batch(xs.rows, xs.cols, self.d, &xs.data, &self.bt.data, &mut s.data, 1.0, 0.0);
+        let t = self.threshold;
+        let mask: Vec<bool> = s.data.iter().map(|&v| v * v >= t).collect();
+        let mut out = Mat::zeros(xs.rows, self.out_dim());
+        masked_acc_gemm(&self.at, &mask, &s, &mut out);
         out
     }
 
@@ -309,6 +330,28 @@ mod tests {
             let tok = ad.apply_tok(xs.row(r));
             crate::util::prop::close_slices(&tok, seq.row(r), 1e-4, 1e-3)
                 .unwrap_or_else(|e| panic!("row {r}: {e}"));
+        }
+    }
+
+    #[test]
+    fn tok_batch_matches_tok_and_is_batch_independent() {
+        let (w, xf, xe) = setup(32, 24, 12);
+        let pre = RankPrecomp::new(&w, &xf, &xe, 13);
+        for frac in [0.3, 0.9] {
+            let (ad, _) = pre.adapter_for_budget(pre.dense_flops() * frac);
+            let mut rng = Xoshiro256::new(14);
+            let xs = Mat::gaussian(7, 24, 1.0, &mut rng);
+            let batched = ad.apply_tok_batch(&xs);
+            assert_eq!((batched.rows, batched.cols), (7, 32));
+            for r in 0..xs.rows {
+                // Numerically equivalent to the fused per-token path…
+                let tok = ad.apply_tok(xs.row(r));
+                crate::util::prop::close_slices(&tok, batched.row(r), 1e-4, 1e-3)
+                    .unwrap_or_else(|e| panic!("frac {frac} row {r}: {e}"));
+                // …and bit-identical to decoding the row alone.
+                let solo = ad.apply_tok_batch(&Mat::from_vec(1, 24, xs.row(r).to_vec()));
+                assert_eq!(solo.data, batched.row(r).to_vec(), "frac {frac} row {r}");
+            }
         }
     }
 

@@ -9,11 +9,12 @@
 //! under load it routes batches to more-compressed RaNA variants, trading
 //! a little accuracy for throughput; idle traffic gets the dense model.
 
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use super::engine::Engine;
+use super::engine::{DecodeSession, Engine};
 use super::metrics::Metrics;
 use crate::util::json::Json;
 
@@ -67,10 +68,16 @@ pub struct Batcher {
 impl Batcher {
     pub fn new(ladder: BudgetLadder, max_batch: usize) -> Self {
         let (tx, rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::new());
+        // Wire the serving metrics into every engine tier, so batched
+        // decode occupancy/throughput land in the `stats` snapshot.
+        for (_, engine) in &ladder.engines {
+            engine.set_metrics(Arc::clone(&metrics));
+        }
         Self {
             tx: Mutex::new(Some(tx)),
             queue: Arc::new(Mutex::new(Some(rx))),
-            metrics: Arc::new(Metrics::new()),
+            metrics,
             max_batch: max_batch.max(1),
             ladder: Arc::new(ladder),
             batch_wait: Duration::from_millis(2),
@@ -129,11 +136,14 @@ impl Batcher {
             }
             self.metrics.queue_depth.store(pending.len() as u64, Ordering::Relaxed);
             let batch: Vec<Job> = pending.drain(..).collect();
-            self.execute(batch);
+            pending.extend(self.execute(batch, &rx));
         }
     }
 
-    fn execute(&self, jobs: Vec<Job>) {
+    /// Execute one batch. Returns jobs that arrived *during* a decode
+    /// session but belong to the next batch (scores picked up while
+    /// admitting generation work between steps).
+    fn execute(&self, jobs: Vec<Job>, rx: &mpsc::Receiver<Job>) -> Vec<Job> {
         let depth = jobs.len();
         let (rate, engine) = self.ladder.pick(depth);
         self.metrics
@@ -142,8 +152,8 @@ impl Batcher {
         self.metrics.batches.fetch_add(1, Ordering::Relaxed);
         self.metrics.batched_jobs.fetch_add(depth as u64, Ordering::Relaxed);
 
-        // Partition: score jobs batch together, generation jobs batch
-        // together (request-level continuous batching); stats are instant.
+        // Partition: score jobs batch together, generation jobs share an
+        // iteration-level decode session; stats are instant.
         let mut score_jobs: Vec<Job> = Vec::new();
         let mut gen_jobs: Vec<(Job, String, usize)> = Vec::new();
         for job in jobs {
@@ -160,17 +170,30 @@ impl Batcher {
                 }
             }
         }
+        let mut carried: Vec<Job> = Vec::new();
         if !gen_jobs.is_empty() {
-            let prompts: Vec<(String, usize)> =
-                gen_jobs.iter().map(|(_, p, n)| (p.clone(), *n)).collect();
-            let outs = engine.generate_batch(&prompts);
-            for ((job, _, n), out) in gen_jobs.into_iter().zip(outs) {
-                self.metrics.tokens_generated.fetch_add(n as u64, Ordering::Relaxed);
-                self.metrics.observe_latency(job.arrived.elapsed());
-                let _ = job.resp.send(Json::obj(vec![
-                    ("text", Json::Str(out)),
-                    ("engine", Json::Str(engine.name())),
-                ]));
+            if let Some(mut session) = engine.begin_decode_session() {
+                carried = self.run_decode_session(
+                    &mut *session,
+                    gen_jobs,
+                    rx,
+                    &engine.name(),
+                    rate,
+                );
+            } else {
+                // Request-level fallback for engines without sessions.
+                let prompts: Vec<(String, usize)> =
+                    gen_jobs.iter().map(|(_, p, n)| (p.clone(), *n)).collect();
+                let outs = engine.generate_batch(&prompts);
+                for ((job, _, n), out) in gen_jobs.into_iter().zip(outs) {
+                    self.metrics.tokens_generated.fetch_add(n as u64, Ordering::Relaxed);
+                    self.metrics.observe_latency(job.arrived.elapsed());
+                    let _ = job.resp.send(Json::obj(vec![
+                        ("text", Json::Str(out)),
+                        ("engine", Json::Str(engine.name())),
+                        ("rank_budget", Json::Num(rate)),
+                    ]));
+                }
             }
         }
         if !score_jobs.is_empty() {
@@ -191,6 +214,94 @@ impl Batcher {
                 ]));
             }
         }
+        carried
+    }
+
+    /// Drive one iteration-level decode session: sequences join and retire
+    /// *between engine steps*. New `Generate` jobs arriving on the live
+    /// queue are admitted straight into free slots mid-decode (instead of
+    /// waiting for the whole batch to finish); `Stats` is answered
+    /// immediately; anything else is carried to the next batch.
+    fn run_decode_session(
+        &self,
+        session: &mut dyn DecodeSession,
+        gen_jobs: Vec<(Job, String, usize)>,
+        rx: &mpsc::Receiver<Job>,
+        engine_name: &str,
+        rate: f64,
+    ) -> Vec<Job> {
+        let mut waiting: VecDeque<(Job, String, usize)> = gen_jobs.into();
+        let mut inflight: HashMap<u64, Job> = HashMap::new();
+        let mut carried: Vec<Job> = Vec::new();
+        // Bound on mid-session admissions: under sustained generate-only
+        // load the session must still drain and return to `run`, so the
+        // ladder tier and queue-depth accounting are re-evaluated instead
+        // of being frozen at the depth seen when the session started.
+        let mut fresh_budget = 2 * session.capacity();
+        loop {
+            // Fill free slots: queued work first, then fresh arrivals.
+            loop {
+                let next = if let Some(w) = waiting.pop_front() {
+                    Some(w)
+                } else if carried.is_empty()
+                    && fresh_budget > 0
+                    && session.active() < session.capacity()
+                {
+                    // Admit fresh arrivals only until a score job queues up,
+                    // so decode sessions cannot starve the scoring path.
+                    match rx.try_recv() {
+                        Ok(job) => match job.op {
+                            Op::Generate { ref prompt, n } => {
+                                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                                fresh_budget -= 1;
+                                let p = prompt.clone();
+                                Some((job, p, n))
+                            }
+                            Op::Stats => {
+                                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                                let _ = job.resp.send(self.metrics.snapshot());
+                                self.metrics.observe_latency(job.arrived.elapsed());
+                                continue;
+                            }
+                            Op::Score { .. } => {
+                                carried.push(job);
+                                continue;
+                            }
+                        },
+                        Err(_) => None,
+                    }
+                } else {
+                    None
+                };
+                let Some((job, p, n)) = next else { break };
+                match session.try_join(&p, n) {
+                    Some(id) => {
+                        inflight.insert(id, job);
+                    }
+                    None => {
+                        waiting.push_front((job, p, n));
+                        break;
+                    }
+                }
+            }
+            if inflight.is_empty() && waiting.is_empty() {
+                break;
+            }
+            for (id, text, generated) in session.step() {
+                if let Some(job) = inflight.remove(&id) {
+                    // Credit the tokens actually decoded, not the requested
+                    // n (the KV cache can cap a sequence short).
+                    self.metrics.tokens_generated.fetch_add(generated as u64, Ordering::Relaxed);
+                    self.metrics.observe_latency(job.arrived.elapsed());
+                    let _ = job.resp.send(Json::obj(vec![
+                        ("text", Json::Str(text)),
+                        ("engine", Json::str(engine_name)),
+                        ("rank_budget", Json::Num(rate)),
+                    ]));
+                }
+            }
+        }
+        carried
     }
 }
 
@@ -250,6 +361,38 @@ mod tests {
         let jobs = b.metrics.batched_jobs.load(Ordering::Relaxed);
         assert_eq!(jobs, 16);
         assert!(batches < 16, "expected batching, got {batches} batches for 16 jobs");
+    }
+
+    #[test]
+    fn concurrent_generates_share_decode_batches() {
+        let (b, tx) = start_batcher(8);
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    call(&tx, Op::Generate { prompt: format!("p{i}"), n: 12 }).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            let r = h.join().unwrap();
+            assert!(r.get_str("text").unwrap().starts_with('p'));
+            // Generate responses now carry the tier's rank budget too.
+            assert!(r.get_f64("rank_budget").is_ok());
+        }
+        assert_eq!(b.metrics.tokens_generated.load(Ordering::Relaxed), 96);
+        let steps = b.metrics.decode_steps.load(Ordering::Relaxed);
+        let toks = b.metrics.decode_tokens.load(Ordering::Relaxed);
+        assert!(steps > 0, "batched decode sessions must report steps");
+        assert!(toks >= steps, "occupancy below 1: {toks} tokens in {steps} steps");
+        // If any two requests landed in one batch (batches < jobs), they
+        // shared a decode session, so some engine pass carried ≥ 2 tokens.
+        // Guarding on the batch count keeps this deterministic even under
+        // pathological scheduling where all 8 arrivals fully serialize.
+        let batches = b.metrics.batches.load(Ordering::Relaxed);
+        if batches < 8 {
+            assert!(toks > steps, "co-batched requests did not share engine passes");
+        }
     }
 
     #[test]

@@ -3,11 +3,14 @@
 //! real masked skipping on the decode path) or the **PJRT** engine running
 //! AOT-compiled HLO artifacts built by the python layer.
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
+use super::metrics::Metrics;
 use crate::adapters::AdaptedModel;
 use crate::data::tokenizer;
-use crate::model::{forward_seq, ops};
+use crate::model::{forward_seq, ops, DecodeBatch};
 use crate::runtime::EnginePool;
 use crate::util::pool::parallel_map;
 
@@ -18,23 +21,68 @@ pub trait Engine: Send + Sync {
     /// Greedy-decode `n` tokens after `prompt`.
     fn generate(&self, prompt: &str, n: usize) -> String;
     /// Batched generation: engines override when they can run requests
-    /// concurrently (the native engine decodes them in parallel, each with
-    /// its own KV cache); default is sequential.
+    /// concurrently (the native engine steps them through one
+    /// iteration-level decode batch); default is sequential.
     fn generate_batch(&self, prompts: &[(String, usize)]) -> Vec<String> {
         prompts.iter().map(|(p, n)| self.generate(p, *n)).collect()
     }
+    /// Attach serving metrics so the engine can report decode-batch
+    /// occupancy and throughput; default ignores them.
+    fn set_metrics(&self, _m: Arc<Metrics>) {}
+    /// Start an iteration-level batched decode session (sequences join and
+    /// retire between engine steps). `None` when the engine only supports
+    /// request-level batching — callers fall back to `generate_batch`.
+    fn begin_decode_session(&self) -> Option<Box<dyn DecodeSession>> {
+        None
+    }
+}
+
+/// A running batched-decode session: the coordinator admits sequences
+/// *between* engine steps (token-level continuous batching) instead of
+/// between requests.
+pub trait DecodeSession: Send {
+    /// Admit a request; returns its session-local id, or `None` when every
+    /// slot is occupied (retry after the next step retires something).
+    fn try_join(&mut self, prompt: &str, n: usize) -> Option<u64>;
+    /// One engine pass over all in-flight sequences; returns
+    /// `(id, full text, tokens actually generated)` for every sequence that
+    /// finished and was retired by this step (the generated count can fall
+    /// short of the requested `n` when the KV cache fills first).
+    fn step(&mut self) -> Vec<(u64, String, usize)>;
+    /// Sequences currently holding a slot.
+    fn active(&self) -> usize;
+    fn capacity(&self) -> usize;
 }
 
 /// Pure-rust engine over a (possibly adapted) model.
 pub struct NativeEngine {
     pub model: Arc<AdaptedModel>,
     label: String,
+    /// Max in-flight sequences per decode session (engine-pass batch size).
+    decode_capacity: usize,
+    metrics: Mutex<Option<Arc<Metrics>>>,
 }
 
 impl NativeEngine {
     pub fn new(model: Arc<AdaptedModel>) -> Self {
         let label = format!("native:{}", model.method);
-        Self { model, label }
+        Self { model, label, decode_capacity: 8, metrics: Mutex::new(None) }
+    }
+
+    pub fn with_decode_capacity(mut self, capacity: usize) -> Self {
+        self.decode_capacity = capacity.max(1);
+        self
+    }
+
+    /// The pre-batching execution model — each request decodes on its own
+    /// worker thread with per-token GEMVs. Kept as the baseline that
+    /// `cargo bench --bench latency -- serving` pits the iteration-level
+    /// batched path against.
+    pub fn generate_batch_threads(&self, prompts: &[(String, usize)]) -> Vec<String> {
+        parallel_map(prompts.len(), |i| {
+            let (p, n) = &prompts[i];
+            crate::eval::greedy_decode(&*self.model, p, *n)
+        })
     }
 }
 
@@ -64,13 +112,106 @@ impl Engine for NativeEngine {
         crate::eval::greedy_decode(&*self.model, prompt, n)
     }
 
-    /// Request-level continuous batching: every generation request decodes
-    /// on its own KV cache, in parallel across worker threads.
+    /// Iteration-level batched generation: all requests advance one token
+    /// per engine pass through a [`DecodeBatch`]; when there are more
+    /// requests than slots, later ones join as earlier ones retire.
     fn generate_batch(&self, prompts: &[(String, usize)]) -> Vec<String> {
-        parallel_map(prompts.len(), |i| {
-            let (p, n) = &prompts[i];
-            crate::eval::greedy_decode(&*self.model, p, *n)
-        })
+        let mut session = self.begin_decode_session().expect("native decode session");
+        let mut out: Vec<Option<String>> = (0..prompts.len()).map(|_| None).collect();
+        let mut id_to_idx: HashMap<u64, usize> = HashMap::new();
+        let mut next = 0usize;
+        let mut pending = prompts.len();
+        while pending > 0 {
+            while next < prompts.len() {
+                let (p, n) = &prompts[next];
+                match session.try_join(p, *n) {
+                    Some(id) => {
+                        id_to_idx.insert(id, next);
+                        next += 1;
+                    }
+                    None => break,
+                }
+            }
+            let finished = session.step();
+            if finished.is_empty() && session.active() == 0 {
+                break; // defensive: nothing in flight and nothing retiring
+            }
+            for (id, text, _) in finished {
+                if let Some(idx) = id_to_idx.remove(&id) {
+                    out[idx] = Some(text);
+                    pending -= 1;
+                }
+            }
+        }
+        out.into_iter()
+            .enumerate()
+            .map(|(i, t)| t.unwrap_or_else(|| prompts[i].0.clone()))
+            .collect()
+    }
+
+    fn set_metrics(&self, m: Arc<Metrics>) {
+        *self.metrics.lock().unwrap() = Some(m);
+    }
+
+    fn begin_decode_session(&self) -> Option<Box<dyn DecodeSession>> {
+        Some(Box::new(NativeDecodeSession {
+            model: Arc::clone(&self.model),
+            batch: DecodeBatch::new(&self.model.base.cfg, self.decode_capacity),
+            prompts: HashMap::new(),
+            metrics: self.metrics.lock().unwrap().clone(),
+        }))
+    }
+}
+
+/// Native iteration-level decode session over a [`DecodeBatch`].
+struct NativeDecodeSession {
+    model: Arc<AdaptedModel>,
+    batch: DecodeBatch,
+    /// Original prompt strings, so finished texts are exact prefixes of
+    /// what the client sent (byte-token decoding is applied only to the
+    /// generated suffix, one token at a time, matching `greedy_decode`).
+    prompts: HashMap<u64, String>,
+    metrics: Option<Arc<Metrics>>,
+}
+
+impl DecodeSession for NativeDecodeSession {
+    fn try_join(&mut self, prompt: &str, n: usize) -> Option<u64> {
+        let toks = tokenizer::encode(prompt, true);
+        let id = self.batch.try_join(toks, n)?;
+        self.prompts.insert(id, prompt.to_string());
+        Some(id)
+    }
+
+    fn step(&mut self) -> Vec<(u64, String, usize)> {
+        let t0 = Instant::now();
+        let advanced = self.batch.step(&*self.model);
+        if advanced > 0 {
+            if let Some(m) = &self.metrics {
+                m.observe_decode_step(advanced, t0.elapsed());
+            }
+        }
+        self.batch
+            .retire_finished()
+            .into_iter()
+            .map(|f| {
+                let mut text = self
+                    .prompts
+                    .remove(&f.id)
+                    .unwrap_or_else(|| tokenizer::decode(&f.prompt));
+                for t in &f.generated {
+                    text.push_str(&tokenizer::decode(&[*t]));
+                }
+                (f.id, text, f.generated.len())
+            })
+            .collect()
+    }
+
+    fn active(&self) -> usize {
+        self.batch.active()
+    }
+
+    fn capacity(&self) -> usize {
+        self.batch.capacity()
     }
 }
 
@@ -247,5 +388,63 @@ mod tests {
         let engine = NativeEngine::new(Arc::new(AdaptedModel::unadapted(m)));
         let out = engine.generate("ab", 4);
         assert!(out.starts_with("ab"));
+    }
+
+    #[test]
+    fn batched_generate_is_independent_of_batch_composition() {
+        // The decode-determinism contract end to end: a request's text must
+        // not depend on batch size, cohabitants, or slot capacity (which
+        // forces different join/retire waves).
+        let m = tiny_model(Arch::SwiGlu, 305);
+        let engine = NativeEngine::new(Arc::new(AdaptedModel::unadapted(m)));
+        let solo = engine.generate_batch(&[("ab".to_string(), 4)]);
+        let trio = engine.generate_batch(&[
+            ("xy".to_string(), 3),
+            ("ab".to_string(), 4),
+            ("qq rr".to_string(), 5),
+        ]);
+        assert_eq!(solo[0], trio[1], "cohabitants changed a sequence's decode");
+
+        let m2 = tiny_model(Arch::SwiGlu, 305);
+        let tight = NativeEngine::new(Arc::new(AdaptedModel::unadapted(m2))).with_decode_capacity(2);
+        let waves = tight.generate_batch(&[
+            ("xy".to_string(), 3),
+            ("ab".to_string(), 4),
+            ("qq rr".to_string(), 5),
+            ("zz".to_string(), 2),
+        ]);
+        assert_eq!(solo[0], waves[1], "join/retire schedule changed a sequence's decode");
+        assert!(waves.iter().zip([("xy", 3), ("ab", 4), ("qq rr", 5), ("zz", 2)]).all(
+            |(out, (p, _))| out.starts_with(p)
+        ));
+    }
+
+    #[test]
+    fn decode_session_joins_between_steps() {
+        let m = tiny_model(Arch::GeluNeoX, 307);
+        let engine = NativeEngine::new(Arc::new(AdaptedModel::unadapted(m))).with_decode_capacity(2);
+        let metrics = Arc::new(Metrics::new());
+        engine.set_metrics(Arc::clone(&metrics));
+        let mut session = engine.begin_decode_session().unwrap();
+        assert_eq!(session.capacity(), 2);
+        let a = session.try_join("ab", 2).unwrap();
+        let _ = session.step(); // a mid-flight…
+        let b = session.try_join("cd", 2).unwrap(); // …b joins between steps
+        assert!(session.try_join("ef", 1).is_none(), "full session must refuse");
+        let mut finished = Vec::new();
+        let mut guard = 0;
+        while session.active() > 0 {
+            finished.extend(session.step());
+            guard += 1;
+            assert!(guard < 64, "session failed to drain");
+        }
+        assert_eq!(finished.len(), 2);
+        let ta = &finished.iter().find(|(id, _, _)| *id == a).unwrap().1;
+        let tb = &finished.iter().find(|(id, _, _)| *id == b).unwrap().1;
+        assert!(ta.starts_with("ab") && tb.starts_with("cd"));
+        assert!(finished.iter().all(|(_, _, g)| *g == 2), "requested 2 tokens each");
+        use std::sync::atomic::Ordering;
+        assert!(metrics.decode_steps.load(Ordering::Relaxed) > 0);
+        assert!(metrics.decode_tokens.load(Ordering::Relaxed) >= 4);
     }
 }

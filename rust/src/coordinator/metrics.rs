@@ -20,6 +20,12 @@ pub struct Metrics {
     pub tokens_generated: AtomicU64,
     pub queue_depth: AtomicU64,
     pub rank_budget_milli: AtomicU64, // current compression rate ×1000
+    /// Engine passes of the iteration-level batched decoder.
+    pub decode_steps: AtomicU64,
+    /// Tokens fed across those passes (prefill + generation).
+    pub decode_tokens: AtomicU64,
+    /// Wall-clock spent inside batched decode passes.
+    decode_time_us: AtomicU64,
     latency: [AtomicU64; 10],
     latency_sum_us: AtomicU64,
 }
@@ -35,6 +41,33 @@ impl Metrics {
         self.latency[idx].fetch_add(1, Ordering::Relaxed);
         self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
         self.responses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one batched decode pass: `tokens` sequences advanced in `d`.
+    pub fn observe_decode_step(&self, tokens: usize, d: Duration) {
+        self.decode_steps.fetch_add(1, Ordering::Relaxed);
+        self.decode_tokens.fetch_add(tokens as u64, Ordering::Relaxed);
+        self.decode_time_us.fetch_add(d.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    /// Mean batch occupancy of the decode passes (tokens per engine pass).
+    pub fn decode_occupancy(&self) -> f64 {
+        let steps = self.decode_steps.load(Ordering::Relaxed);
+        if steps == 0 {
+            0.0
+        } else {
+            self.decode_tokens.load(Ordering::Relaxed) as f64 / steps as f64
+        }
+    }
+
+    /// Decode throughput over the time spent inside engine passes.
+    pub fn decode_tokens_per_sec(&self) -> f64 {
+        let us = self.decode_time_us.load(Ordering::Relaxed);
+        if us == 0 {
+            0.0
+        } else {
+            self.decode_tokens.load(Ordering::Relaxed) as f64 / (us as f64 / 1e6)
+        }
     }
 
     /// Approximate latency quantile from the histogram (upper-edge bound).
@@ -79,6 +112,10 @@ impl Metrics {
                 "rank_budget",
                 Json::Num(self.rank_budget_milli.load(Ordering::Relaxed) as f64 / 1000.0),
             ),
+            ("decode_steps", Json::Num(self.decode_steps.load(Ordering::Relaxed) as f64)),
+            ("decode_tokens", Json::Num(self.decode_tokens.load(Ordering::Relaxed) as f64)),
+            ("decode_occupancy", Json::Num(self.decode_occupancy())),
+            ("decode_tokens_per_sec", Json::Num(self.decode_tokens_per_sec())),
             ("mean_latency_us", Json::Num(self.mean_latency_us())),
             ("p50_latency_us", Json::Num(self.latency_quantile_us(0.5) as f64)),
             ("p99_latency_us", Json::Num(self.latency_quantile_us(0.99) as f64)),
@@ -108,8 +145,30 @@ mod tests {
         let m = Metrics::new();
         m.requests.fetch_add(3, Ordering::Relaxed);
         let s = m.snapshot();
-        for key in ["requests", "p99_latency_us", "rank_budget", "queue_depth"] {
+        for key in [
+            "requests",
+            "p99_latency_us",
+            "rank_budget",
+            "queue_depth",
+            "decode_steps",
+            "decode_occupancy",
+            "decode_tokens_per_sec",
+        ] {
             assert!(s.get(key).is_ok(), "missing {key}");
         }
+    }
+
+    #[test]
+    fn decode_counters_aggregate() {
+        let m = Metrics::new();
+        assert_eq!(m.decode_occupancy(), 0.0);
+        assert_eq!(m.decode_tokens_per_sec(), 0.0);
+        m.observe_decode_step(4, Duration::from_micros(100));
+        m.observe_decode_step(2, Duration::from_micros(100));
+        assert_eq!(m.decode_steps.load(Ordering::Relaxed), 2);
+        assert_eq!(m.decode_tokens.load(Ordering::Relaxed), 6);
+        assert!((m.decode_occupancy() - 3.0).abs() < 1e-9);
+        // 6 tokens over 200 µs = 30k tokens/s.
+        assert!((m.decode_tokens_per_sec() - 30_000.0).abs() < 1.0);
     }
 }

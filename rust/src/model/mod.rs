@@ -8,7 +8,10 @@ pub mod ops;
 pub mod weights;
 
 pub use config::{Arch, ModelConfig, PythiaSize};
-pub use forward::{decode_step, forward_seq, BlockOps, Capture, KvCache, Model};
+pub use forward::{
+    decode_step, decode_step_batch, forward_seq, BlockOps, Capture, DecodeBatch, FinishedSeq,
+    KvCache, Model,
+};
 pub use weights::{LayerWeights, Linear, ModelWeights, Norm};
 
 use std::path::PathBuf;

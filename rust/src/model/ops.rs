@@ -2,6 +2,7 @@
 //! and adapted forward passes. Definitions mirror `python/compile/model.py`
 //! exactly (tested against exported JAX goldens in `rust/tests/`).
 
+use super::config::Arch;
 use crate::tensor::Mat;
 
 /// RMSNorm: `x / sqrt(mean(x²) + eps) * scale`.
@@ -41,6 +42,27 @@ pub fn gelu(x: f32) -> f32 {
 #[inline]
 pub fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
+}
+
+/// Apply the arch's MLP activation in place over a `[rows, d_hidden]`
+/// intermediate: SwiGLU (`up ⊙ silu(gate)`, gate required) or GeLU over
+/// `up` alone. Shared by the sequence and batched-decode MLP paths of the
+/// dense model and the RaNA adapters.
+pub fn mlp_activate(arch: Arch, up: &mut Mat, gate: Option<&Mat>) {
+    match arch {
+        Arch::SwiGlu => {
+            let gate = gate.expect("swiglu activation needs a gate");
+            debug_assert_eq!(up.data.len(), gate.data.len());
+            for (v, g) in up.data.iter_mut().zip(&gate.data) {
+                *v *= silu(*g);
+            }
+        }
+        Arch::GeluNeoX => {
+            for v in up.data.iter_mut() {
+                *v = gelu(*v);
+            }
+        }
+    }
 }
 
 /// Numerically-stable in-place softmax.

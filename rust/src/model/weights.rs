@@ -50,6 +50,27 @@ impl Linear {
     pub fn apply_seq(&self, xs: &Mat) -> Mat {
         xs.matmul(&self.wt)
     }
+
+    /// Batched decode path: one row per in-flight sequence, through the
+    /// shared-stream batched GEMV — the weight matrix is streamed once per
+    /// engine step instead of once per sequence, and each output row is
+    /// bit-identical to the single-row GEMV path regardless of batch
+    /// composition (the decode-determinism contract).
+    pub fn apply_tok_batch(&self, xs: &Mat) -> Mat {
+        assert_eq!(xs.cols, self.in_dim(), "apply_tok_batch shape mismatch");
+        let mut out = Mat::zeros(xs.rows, self.out_dim());
+        crate::tensor::gemm::gemv_batch(
+            xs.rows,
+            xs.cols,
+            self.wt.cols,
+            &xs.data,
+            &self.wt.data,
+            &mut out.data,
+            1.0,
+            0.0,
+        );
+        out
+    }
 }
 
 /// Norm parameters (bias present only for LayerNorm archs).
@@ -276,6 +297,24 @@ mod tests {
         for r in 0..xs.rows {
             let tok = lin.apply(xs.row(r));
             crate::util::prop::close_slices(&tok, seq.row(r), 1e-4, 1e-3)
+                .unwrap_or_else(|e| panic!("row {r}: {e}"));
+        }
+    }
+
+    #[test]
+    fn apply_tok_batch_rows_match_single_row_path_bitwise() {
+        // The batched decode path must be bit-identical to decoding each
+        // row alone (batch-composition determinism).
+        let mut rng = Xoshiro256::new(7);
+        let lin = Linear::new(Mat::gaussian(96, 80, 1.0, &mut rng));
+        let xs = Mat::gaussian(5, 80, 1.0, &mut rng);
+        let batched = lin.apply_tok_batch(&xs);
+        assert_eq!((batched.rows, batched.cols), (5, 96));
+        for r in 0..xs.rows {
+            let solo = lin.apply_tok_batch(&Mat::from_vec(1, 80, xs.row(r).to_vec()));
+            assert_eq!(solo.data, batched.row(r).to_vec(), "row {r}");
+            // And numerically consistent with the per-token GEMV decode path.
+            crate::util::prop::close_slices(&solo.data, &lin.apply(xs.row(r)), 1e-4, 1e-3)
                 .unwrap_or_else(|e| panic!("row {r}: {e}"));
         }
     }

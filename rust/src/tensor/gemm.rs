@@ -152,6 +152,95 @@ pub fn matvec_into(out: &mut [f32], w: &Mat, x: &[f32]) {
     }
 }
 
+/// Shared-stream batched GEMV: `out = alpha·(a @ b) + beta·out` for a
+/// *short* `a` (`m` = a decode batch, tens of rows at most). The k-outer
+/// loop streams each row of `b` exactly once and applies it to **every**
+/// batch row before moving on — the arithmetic-intensity win of batched
+/// decode (the per-thread baseline streams the whole weight matrix once
+/// per sequence; this path streams it once per step).
+///
+/// Bit-stability contract: each output element accumulates in ascending-k
+/// order with the same `av != 0` skip as [`gemv_into`], and the parallel
+/// split is over *column* stripes (element-wise independent), so a row's
+/// result is identical no matter which other rows share the batch — and
+/// identical to the `m = 1` GEMV path. Batched decode relies on this for
+/// batch-size-independent greedy decoding.
+#[allow(clippy::too_many_arguments)]
+pub fn gemv_batch(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    alpha: f32,
+    beta: f32,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        scale(out, beta);
+        return;
+    }
+    // Column stripe width: wide enough that axpy's 8-wide unroll stays hot.
+    const CB: usize = 256;
+    let blocks = n.div_ceil(CB);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    if blocks < 2 || m * k * n < (1 << 18) {
+        // SAFETY: single caller owns the whole output.
+        unsafe { gemv_batch_stripe(m, k, n, a, b, out_ptr.0, alpha, beta, 0, n) };
+        return;
+    }
+    parallel_chunks(blocks, 1, |range| {
+        let out_ptr = &out_ptr;
+        for blk in range {
+            let c0 = blk * CB;
+            let c1 = (c0 + CB).min(n);
+            // SAFETY: column stripes [c0, c1) are disjoint across workers.
+            unsafe { gemv_batch_stripe(m, k, n, a, b, out_ptr.0, alpha, beta, c0, c1) };
+        }
+    });
+}
+
+/// One column stripe of [`gemv_batch`].
+///
+/// # Safety
+/// The caller must guarantee exclusive access to columns `[c0, c1)` of the
+/// `m × n` output behind `out`, and that the stripe is in-bounds.
+#[allow(clippy::too_many_arguments)]
+unsafe fn gemv_batch_stripe(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    out: *mut f32,
+    alpha: f32,
+    beta: f32,
+    c0: usize,
+    c1: usize,
+) {
+    let w = c1 - c0;
+    for r in 0..m {
+        let orow = std::slice::from_raw_parts_mut(out.add(r * n + c0), w);
+        scale(orow, beta);
+    }
+    for kk in 0..k {
+        let brow = &b[kk * n + c0..kk * n + c1];
+        for r in 0..m {
+            let av = alpha * a[r * k + kk];
+            if av != 0.0 {
+                let orow = std::slice::from_raw_parts_mut(out.add(r * n + c0), w);
+                axpy(av, brow, orow);
+            }
+        }
+    }
+}
+
 /// The seed's algorithm: one output row at a time, k-outer axpy over rows
 /// of `b`. Kept as the small-shape fallback and as the bench baseline the
 /// packed kernel is measured against. Parallel over output row stripes.
@@ -519,6 +608,60 @@ mod tests {
         let mut y = vec![0.0f32; 19];
         matvec_into(&mut y, &w, &x);
         close_slices(&y, &w.matmul(&Mat::from_vec(k, 1, x)).data, 1e-4, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn gemv_batch_matches_naive_property() {
+        let cfg = Config { cases: 32, max_size: 40, ..Default::default() };
+        check("gemv_batch==naive", cfg, |rng, size| {
+            let m = 1 + rng.below(12);
+            let k = 1 + rng.below(2 * size);
+            let n = 1 + rng.below(8 * size);
+            let (alpha, beta) = match rng.below(3) {
+                0 => (1.0, 0.0),
+                1 => (1.0, 1.0),
+                _ => (-0.5, 0.25),
+            };
+            let a = rand_vec(m * k, rng);
+            let b = rand_vec(k * n, rng);
+            let out0 = rand_vec(m * n, rng);
+            let want = naive(m, k, n, &a, &b, &out0, alpha, beta);
+            let mut got = out0.clone();
+            gemv_batch(m, k, n, &a, &b, &mut got, alpha, beta);
+            close_slices(&got, &want, 1e-4, 1e-3)
+        });
+    }
+
+    #[test]
+    fn gemv_batch_rows_are_bitwise_independent_of_batch() {
+        // The decode-determinism contract: a row's result must be identical
+        // whether it decodes alone (the m = 1 GEMV path) or inside any
+        // batch, including shapes wide enough to take the parallel stripes.
+        let mut rng = Xoshiro256::new(21);
+        for (m, k, n) in [(3usize, 17usize, 29usize), (8, 192, 576), (5, 300, 640)] {
+            let a = rand_vec(m * k, &mut rng);
+            let b = rand_vec(k * n, &mut rng);
+            let mut batched = vec![0.0f32; m * n];
+            gemv_batch(m, k, n, &a, &b, &mut batched, 1.0, 0.0);
+            let bm = Mat::from_vec(k, n, b.clone());
+            for r in 0..m {
+                let mut solo = vec![0.0f32; n];
+                gemv_into(&mut solo, &a[r * k..(r + 1) * k], &bm, 1.0, 0.0);
+                assert_eq!(solo, batched[r * n..(r + 1) * n].to_vec(), "row {r} of {m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_batch_empty_shapes() {
+        // k = 0: out = beta·out.
+        let mut out = vec![2.0f32, -4.0, 6.0, 8.0];
+        gemv_batch(2, 0, 2, &[], &[], &mut out, 1.0, 0.5);
+        assert_eq!(out, vec![1.0, -2.0, 3.0, 4.0]);
+        // m = 0 / n = 0: no-ops.
+        let mut empty: Vec<f32> = vec![];
+        gemv_batch(0, 3, 4, &[], &rand_vec(12, &mut Xoshiro256::new(3)), &mut empty, 1.0, 0.0);
+        gemv_batch(2, 3, 0, &rand_vec(6, &mut Xoshiro256::new(4)), &[], &mut empty, 1.0, 0.0);
     }
 
     #[test]

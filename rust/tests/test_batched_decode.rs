@@ -1,0 +1,233 @@
+//! Iteration-level batched decode: equivalence against the sequential
+//! `decode_step` oracle (dense + RaNA-adapted, both archs, ragged
+//! join/retire schedules), batch-composition determinism of greedy
+//! decoding, and the coordinator under a mixed load through the
+//! `BudgetLadder`.
+
+use std::sync::Arc;
+
+use rana::adapters::calibrate::{self, CalibOptions, Method};
+use rana::adapters::AdaptedModel;
+use rana::coordinator::batcher::{call, Batcher, BudgetLadder, Op};
+use rana::coordinator::engine::{Engine, NativeEngine};
+use rana::coordinator::workload::{run_load, Arrivals, Mix};
+use rana::model::{
+    decode_step, decode_step_batch, Arch, BlockOps, KvCache, Model, ModelConfig, ModelWeights,
+};
+use rana::util::prop::close_slices;
+
+fn tiny_cfg(arch: Arch) -> ModelConfig {
+    ModelConfig {
+        name: "tiny".into(),
+        arch,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_hidden: 32,
+        vocab: 288,
+        max_seq: 64,
+        rope_theta: 10_000.0,
+        norm_eps: 1e-5,
+    }
+}
+
+fn rana_adapted(arch: Arch, seed: u64) -> AdaptedModel {
+    let cfg = tiny_cfg(arch);
+    let w = ModelWeights::random_init(&cfg, seed);
+    let model = Arc::new(Model::new(cfg, w).unwrap());
+    let tokens: Vec<u32> = (0..800).map(|i| (i * 13 % 97) as u32).collect();
+    let calib = calibrate::collect(
+        &model,
+        &tokens,
+        &CalibOptions { n_fit: 96, n_eval: 32, window: 24, seed: seed ^ 0xA5 },
+    );
+    let (adapted, _) = calibrate::adapt(model, &calib, Method::Rana, 0.5, 64, seed);
+    adapted
+}
+
+/// Replay `streams` (each with a join step) through `decode_step_batch`
+/// with ragged joins/retires and compare every per-step logits row against
+/// the sequential `decode_step` oracle.
+fn assert_ragged_equivalence<B: BlockOps>(
+    b: &B,
+    streams: &[(Vec<u32>, usize)],
+    atol: f32,
+    rtol: f32,
+) {
+    // Sequential oracle, one isolated cache per stream.
+    let mut oracles: Vec<Vec<Vec<f32>>> = Vec::new();
+    for (toks, _) in streams {
+        let mut cache = KvCache::new(b.config());
+        oracles.push(toks.iter().map(|&t| decode_step(b, t, &mut cache)).collect());
+    }
+    // Batched replay: stream i contributes tokens during steps
+    // [join_i, join_i + len_i), so membership of each engine pass is ragged.
+    let mut caches: Vec<KvCache> = streams.iter().map(|_| KvCache::new(b.config())).collect();
+    let total = streams.iter().map(|(s, j)| s.len() + j).max().unwrap();
+    for step in 0..total {
+        let mut idxs: Vec<usize> = Vec::new();
+        let mut tokens: Vec<u32> = Vec::new();
+        for (i, (toks, join)) in streams.iter().enumerate() {
+            if step >= *join && step - join < toks.len() {
+                idxs.push(i);
+                tokens.push(toks[step - join]);
+            }
+        }
+        if idxs.is_empty() {
+            continue;
+        }
+        let mut refs: Vec<&mut KvCache> = caches
+            .iter_mut()
+            .enumerate()
+            .filter(|(i, _)| idxs.contains(i))
+            .map(|(_, c)| c)
+            .collect();
+        let logits = decode_step_batch(b, &tokens, &mut refs);
+        for (r, &i) in idxs.iter().enumerate() {
+            let t = step - streams[i].1;
+            close_slices(logits.row(r), &oracles[i][t], atol, rtol)
+                .unwrap_or_else(|e| panic!("stream {i} step {t} (batch {}): {e}", idxs.len()));
+        }
+    }
+}
+
+#[test]
+fn dense_batched_decode_matches_sequential_all_presets() {
+    // llama-sim (SwiGLU), gemma-sim (wider MLP), pythia-sim (GeLU-NeoX
+    // parallel residual): full preset shapes, random weights.
+    for cfg in [
+        ModelConfig::llama_sim(),
+        ModelConfig::gemma_sim(),
+        ModelConfig::pythia_sim(rana::model::PythiaSize::S),
+    ] {
+        let name = cfg.name.clone();
+        let w = ModelWeights::random_init(&cfg, 0x51);
+        let m = Model::new(cfg, w).unwrap();
+        let streams: Vec<(Vec<u32>, usize)> = vec![
+            (vec![1, 5, 9, 30, 2, 17, 100, 42], 0),
+            (vec![8, 200, 1, 0, 63, 2], 2),
+            (vec![40, 3, 3, 12, 9], 5),
+        ];
+        println!("preset {name}");
+        assert_ragged_equivalence(&m, &streams, 1e-4, 1e-4);
+    }
+}
+
+#[test]
+fn rana_adapted_batched_decode_matches_sequential_swiglu() {
+    let m = rana_adapted(Arch::SwiGlu, 0x61);
+    for n in [1usize, 3, 8] {
+        let streams: Vec<(Vec<u32>, usize)> = (0..n)
+            .map(|i| {
+                let len = 5 + (i * 2) % 5;
+                ((0..len).map(|t| ((t * 31 + i * 7) % 288) as u32).collect(), i % 3)
+            })
+            .collect();
+        assert_ragged_equivalence(&m, &streams, 2e-4, 1e-3);
+    }
+}
+
+#[test]
+fn rana_adapted_batched_decode_matches_sequential_neox() {
+    let m = rana_adapted(Arch::GeluNeoX, 0x62);
+    for n in [1usize, 3, 8] {
+        let streams: Vec<(Vec<u32>, usize)> = (0..n)
+            .map(|i| {
+                let len = 4 + (i * 3) % 6;
+                ((0..len).map(|t| ((t * 17 + i * 11) % 288) as u32).collect(), (i * 2) % 4)
+            })
+            .collect();
+        assert_ragged_equivalence(&m, &streams, 2e-4, 1e-3);
+    }
+}
+
+#[test]
+fn greedy_text_is_independent_of_batch_size_and_cohabitants() {
+    // Same prompt must decode to the same text alone, in a batch of 3, in
+    // a batch of 8, and when slot pressure forces join/retire waves —
+    // dense and RaNA-adapted.
+    let dense = {
+        let cfg = tiny_cfg(Arch::SwiGlu);
+        let w = ModelWeights::random_init(&cfg, 0x71);
+        AdaptedModel::unadapted(Arc::new(Model::new(cfg, w).unwrap()))
+    };
+    let rana = rana_adapted(Arch::SwiGlu, 0x72);
+    for model in [dense, rana] {
+        let label = model.method.clone();
+        let model = Arc::new(model);
+        let engine = NativeEngine::new(Arc::clone(&model));
+        let p = ("dax lopa".to_string(), 6);
+        let solo = engine.generate_batch(std::slice::from_ref(&p));
+        let others: Vec<(String, usize)> = (0..7)
+            .map(|i| (format!("fep wug {i}"), 3 + i % 4))
+            .collect();
+        let mut trio = vec![p.clone()];
+        trio.extend(others.iter().take(2).cloned());
+        let got3 = engine.generate_batch(&trio);
+        assert_eq!(solo[0], got3[0], "[{label}] batch of 3 changed the decode");
+        let mut eight = vec![p.clone()];
+        eight.extend(others.iter().cloned());
+        let got8 = engine.generate_batch(&eight);
+        assert_eq!(solo[0], got8[0], "[{label}] batch of 8 changed the decode");
+        // Tight capacity: sequences join as others retire.
+        let tight = NativeEngine::new(model).with_decode_capacity(2);
+        let waves = tight.generate_batch(&eight);
+        assert_eq!(solo[0], waves[0], "[{label}] join/retire waves changed the decode");
+    }
+}
+
+#[test]
+fn coordinator_mixed_load_through_budget_ladder() {
+    // Mixed score/generate closed-loop load over a two-tier ladder:
+    // switching must fire at the configured queue depth, and the Stats
+    // counters must reconcile with the submitted jobs.
+    let mk_engine = |seed: u64| -> Arc<dyn Engine> {
+        let cfg = tiny_cfg(Arch::SwiGlu);
+        let w = ModelWeights::random_init(&cfg, seed);
+        let model = Arc::new(Model::new(cfg, w).unwrap());
+        Arc::new(NativeEngine::new(Arc::new(AdaptedModel::unadapted(model))))
+    };
+    let ladder = BudgetLadder {
+        engines: vec![(0.0, mk_engine(0x81)), (0.35, mk_engine(0x82))],
+        thresholds: vec![3],
+    };
+    let batcher = Arc::new(Batcher::new(ladder, 8));
+    let b2 = Arc::clone(&batcher);
+    std::thread::spawn(move || b2.run());
+
+    let n_requests = 40;
+    let report = run_load(
+        &batcher,
+        Arrivals::ClosedLoop { clients: 8 },
+        Mix { generate_frac: 0.5, gen_tokens: 4 },
+        n_requests,
+        0xBEEF,
+    );
+    assert_eq!(report.completed, n_requests);
+    assert!(report.p50 <= report.p99);
+    assert!(
+        report.compressed_frac > 0.0,
+        "ladder never switched to a compressed tier under 8-client load"
+    );
+
+    use std::sync::atomic::Ordering;
+    let m = &batcher.metrics;
+    assert_eq!(m.requests.load(Ordering::Relaxed), n_requests as u64);
+    assert_eq!(m.responses.load(Ordering::Relaxed), n_requests as u64);
+    let gen_tokens = m.tokens_generated.load(Ordering::Relaxed);
+    assert!(gen_tokens > 0 && gen_tokens % 4 == 0, "tokens_generated {gen_tokens}");
+    // Iteration-level decode ran and its occupancy accounting is sane.
+    let steps = m.decode_steps.load(Ordering::Relaxed);
+    let toks = m.decode_tokens.load(Ordering::Relaxed);
+    assert!(steps > 0, "no batched decode steps recorded");
+    assert!(toks >= steps, "occupancy below 1: {toks} tokens in {steps} steps");
+    assert!(m.decode_tokens_per_sec() > 0.0);
+
+    // The stats op reconciles with the live counters (itself included).
+    let tx = batcher.submitter();
+    let stats = call(&tx, Op::Stats).unwrap();
+    assert_eq!(stats.get_f64("requests").unwrap(), (n_requests + 1) as f64);
+    assert_eq!(stats.get_f64("decode_steps").unwrap(), steps as f64);
+    assert!(stats.get_f64("decode_occupancy").unwrap() >= 1.0);
+    batcher.close();
+}
