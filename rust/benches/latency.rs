@@ -34,13 +34,13 @@ fn decode_latency<B: rana::model::BlockOps>(
         // Prefill (not timed — paper times decoding).
         let mut logits = Vec::new();
         for &t in &heldout[..ctx] {
-            logits = decode_step(b, t, &mut cache);
+            logits = decode_step(b, t, &mut cache).expect("ctx clamped below max_seq");
         }
         let n = decode_len.min(max_seq - ctx - 1);
         let t0 = Instant::now();
         for _ in 0..n {
             let next = rana::eval::argmax(&logits) as u32;
-            logits = decode_step(b, next, &mut cache);
+            logits = decode_step(b, next, &mut cache).expect("n clamped below max_seq");
         }
         total += t0.elapsed();
         tokens_timed += n;
@@ -113,7 +113,8 @@ fn serving(opts: Opts) -> anyhow::Result<()> {
         let threads_tps = toks / threads.as_secs_f64().max(1e-12);
         let batched_tps = toks / batched.as_secs_f64().max(1e-12);
         println!(
-            "batch {batch}: per-thread {threads_tps:7.0} tok/s   batched {batched_tps:7.0} tok/s   ({:.2}x)",
+            "batch {batch}: per-thread {threads_tps:7.0} tok/s   \
+             batched {batched_tps:7.0} tok/s   ({:.2}x)",
             batched_tps / threads_tps
         );
         println!(
@@ -125,6 +126,80 @@ fn serving(opts: Opts) -> anyhow::Result<()> {
                 ("threads_tok_s", Json::Num(threads_tps)),
                 ("batched_tok_s", Json::Num(batched_tps)),
                 ("speedup", Json::Num(batched_tps / threads_tps)),
+            ])
+        );
+    }
+
+    println!("\n== Serving: paged KV cache (50% memory, shared prefix) vs dense slots ==");
+    {
+        use rana::coordinator::metrics::Metrics;
+        use rana::data::tokenizer;
+        use std::sync::atomic::Ordering;
+        let g = rana::data::grammar();
+        let prefix = rana::coordinator::workload::shared_prefix(&g, 24);
+        let batch = 8usize;
+        let prompts: Vec<(String, usize)> = (0..batch)
+            .map(|i| (format!("{prefix}about request {i} :"), gen_tokens))
+            .collect();
+        let bs = 16usize;
+        let dense_blocks = batch * model.cfg.max_seq.div_ceil(bs);
+        let dense_engine = NativeEngine::new(Arc::clone(&adapted))
+            .with_dense_cache()
+            .with_decode_capacity(batch);
+        let paged_engine = NativeEngine::new(Arc::clone(&adapted))
+            .with_paged_cache(bs, dense_blocks / 2)
+            .with_decode_capacity(batch);
+        let metrics = Arc::new(Metrics::new());
+        paged_engine.set_metrics(Arc::clone(&metrics));
+        // Warm both paths; the paged warm run also fills the engine's
+        // persistent prefix trie, so the timed run measures reuse.
+        let _ = dense_engine.generate_batch(&prompts);
+        let _ = paged_engine.generate_batch(&prompts);
+        let hits_before = metrics.prefix_hit_tokens.load(Ordering::Relaxed);
+        let t0 = Instant::now();
+        let dense_out = dense_engine.generate_batch(&prompts);
+        let dense_t = t0.elapsed();
+        let t0 = Instant::now();
+        let paged_out = paged_engine.generate_batch(&prompts);
+        let paged_t = t0.elapsed();
+        let hits = metrics.prefix_hit_tokens.load(Ordering::Relaxed) - hits_before;
+        let prompt_tokens: usize =
+            prompts.iter().map(|(p, _)| tokenizer::encode(p, true).len()).sum();
+        let toks = (batch * gen_tokens) as f64;
+        let dense_tps = toks / dense_t.as_secs_f64().max(1e-12);
+        let paged_tps = toks / paged_t.as_secs_f64().max(1e-12);
+        println!(
+            "dense {dense_tps:7.0} tok/s   paged@50% mem {paged_tps:7.0} tok/s ({:.2}x)   \
+             prefix hits {hits}/{prompt_tokens} prompt tokens   texts identical: {}",
+            paged_tps / dense_tps,
+            dense_out == paged_out
+        );
+        println!(
+            "{}",
+            Json::obj(vec![
+                ("bench", Json::str("serving_paged")),
+                ("batch", Json::Num(batch as f64)),
+                ("gen_tokens", Json::Num(gen_tokens as f64)),
+                ("block_size", Json::Num(bs as f64)),
+                ("pool_blocks", Json::Num((dense_blocks / 2) as f64)),
+                ("dense_blocks", Json::Num(dense_blocks as f64)),
+                ("dense_tok_s", Json::Num(dense_tps)),
+                ("paged_tok_s", Json::Num(paged_tps)),
+                ("speedup", Json::Num(paged_tps / dense_tps)),
+                ("prefix_hit_tokens", Json::Num(hits as f64)),
+                (
+                    "prefix_hit_rate",
+                    Json::Num(hits as f64 / prompt_tokens.max(1) as f64),
+                ),
+                (
+                    "kv_blocks_in_use",
+                    Json::Num(metrics.kv_blocks_in_use.load(Ordering::Relaxed) as f64),
+                ),
+                (
+                    "kv_blocks_peak",
+                    Json::Num(metrics.kv_blocks_peak.load(Ordering::Relaxed) as f64),
+                ),
+                ("texts_match_dense", Json::Bool(dense_out == paged_out)),
             ])
         );
     }
@@ -190,7 +265,7 @@ fn load_bench(_opts: Opts) -> anyhow::Result<()> {
         let report = run_load(
             &batcher,
             Arrivals::ClosedLoop { clients: 16 },
-            Mix { generate_frac: 0.2, gen_tokens: 12 },
+            Mix { generate_frac: 0.2, gen_tokens: 12, ..Mix::default() },
             64,
             0xF00D,
         );
@@ -230,7 +305,8 @@ fn seq_gemm() -> anyhow::Result<()> {
             std::hint::black_box(&out);
         });
         axpy.print();
-        let packed = bench(&format!("packed {label} {m}×{k}×{n}"), Duration::from_millis(200), || {
+        let packed_label = format!("packed {label} {m}×{k}×{n}");
+        let packed = bench(&packed_label, Duration::from_millis(200), || {
             gemm_packed(m, k, n, &a.data, &b.data, &mut out.data, 1.0, 0.0);
             std::hint::black_box(&out);
         });

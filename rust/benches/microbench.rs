@@ -146,16 +146,19 @@ fn decode_suite() {
     let mut cache = rana::model::KvCache::new(adapted.config());
     // Warm the cache to a realistic context.
     for t in 0..256u32 {
-        rana::model::decode_step(&adapted, t % 256, &mut cache);
+        rana::model::decode_step(&adapted, t % 256, &mut cache).expect("warmup fits max_seq");
     }
     let s = bench("decode_step @ ctx ≥256", Duration::from_millis(500), || {
         if cache.len() + 1 >= adapted.config().max_seq {
             cache.clear();
             for t in 0..256u32 {
-                rana::model::decode_step(&adapted, t % 256, &mut cache);
+                rana::model::decode_step(&adapted, t % 256, &mut cache)
+                    .expect("warmup fits max_seq");
             }
         }
-        std::hint::black_box(rana::model::decode_step(&adapted, 65, &mut cache));
+        std::hint::black_box(
+            rana::model::decode_step(&adapted, 65, &mut cache).expect("guarded above"),
+        );
     });
     s.print();
 }

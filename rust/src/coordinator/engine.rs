@@ -10,7 +10,9 @@ use std::time::Instant;
 use super::metrics::Metrics;
 use crate::adapters::AdaptedModel;
 use crate::data::tokenizer;
-use crate::model::{forward_seq, ops, DecodeBatch};
+use crate::model::{
+    forward_seq, ops, DecodeBatch, FinishedSeq, PagedBatchConfig, PagedDecodeBatch,
+};
 use crate::runtime::EnginePool;
 use crate::util::pool::parallel_map;
 
@@ -54,23 +56,67 @@ pub trait DecodeSession: Send {
     fn capacity(&self) -> usize;
 }
 
+/// KV storage backing the native engine's decode sessions.
+#[derive(Clone, Copy, Debug)]
+pub enum CacheMode {
+    /// One dense `max_seq × d_model` K/V matrix per layer per slot — the
+    /// pre-paging execution model, kept as the bit-exact oracle and the
+    /// memory baseline the paged benches compare against.
+    Dense,
+    /// Paged block-pool cache with shared-prefix reuse, memory-aware
+    /// admission and preemption (DESIGN.md §2b). `n_blocks == 0` sizes the
+    /// pool to dense-equivalent memory.
+    Paged { block_size: usize, n_blocks: usize },
+}
+
+impl Default for CacheMode {
+    fn default() -> Self {
+        CacheMode::Paged { block_size: 16, n_blocks: 0 }
+    }
+}
+
 /// Pure-rust engine over a (possibly adapted) model.
 pub struct NativeEngine {
     pub model: Arc<AdaptedModel>,
     label: String,
     /// Max in-flight sequences per decode session (engine-pass batch size).
     decode_capacity: usize,
+    cache_mode: CacheMode,
+    /// Persistent paged state: the block pool and prefix trie outlive
+    /// individual decode sessions, so shared prefixes are reused across
+    /// batches, not just within one (lazily built on first session).
+    paged: Mutex<Option<Arc<Mutex<PagedDecodeBatch>>>>,
     metrics: Mutex<Option<Arc<Metrics>>>,
 }
 
 impl NativeEngine {
     pub fn new(model: Arc<AdaptedModel>) -> Self {
         let label = format!("native:{}", model.method);
-        Self { model, label, decode_capacity: 8, metrics: Mutex::new(None) }
+        Self {
+            model,
+            label,
+            decode_capacity: 8,
+            cache_mode: CacheMode::default(),
+            paged: Mutex::new(None),
+            metrics: Mutex::new(None),
+        }
     }
 
     pub fn with_decode_capacity(mut self, capacity: usize) -> Self {
         self.decode_capacity = capacity.max(1);
+        self
+    }
+
+    /// Dense per-slot KV caches (oracle / memory baseline).
+    pub fn with_dense_cache(mut self) -> Self {
+        self.cache_mode = CacheMode::Dense;
+        self
+    }
+
+    /// Paged block-pool KV cache; `n_blocks == 0` → dense-equivalent
+    /// memory, smaller values trade memory for admission pressure.
+    pub fn with_paged_cache(mut self, block_size: usize, n_blocks: usize) -> Self {
+        self.cache_mode = CacheMode::Paged { block_size: block_size.max(1), n_blocks };
         self
     }
 
@@ -154,27 +200,130 @@ impl Engine for NativeEngine {
     }
 
     fn begin_decode_session(&self) -> Option<Box<dyn DecodeSession>> {
-        Some(Box::new(NativeDecodeSession {
-            model: Arc::clone(&self.model),
-            batch: DecodeBatch::new(&self.model.base.cfg, self.decode_capacity),
-            prompts: HashMap::new(),
-            metrics: self.metrics.lock().unwrap().clone(),
-        }))
+        let cfg = &self.model.base.cfg;
+        let metrics = self.metrics.lock().unwrap().clone();
+        match self.cache_mode {
+            CacheMode::Dense => Some(Box::new(NativeDecodeSession::new(
+                Arc::clone(&self.model),
+                DecodeBatch::new(cfg, self.decode_capacity),
+                metrics,
+            ))),
+            CacheMode::Paged { block_size, n_blocks } => {
+                let shared = Arc::clone(self.paged.lock().unwrap().get_or_insert_with(|| {
+                    Arc::new(Mutex::new(PagedDecodeBatch::new(
+                        cfg,
+                        PagedBatchConfig { block_size, n_blocks, slots: self.decode_capacity },
+                    )))
+                }));
+                Some(Box::new(NativeDecodeSession::new(
+                    Arc::clone(&self.model),
+                    shared,
+                    metrics,
+                )))
+            }
+        }
     }
 }
 
-/// Native iteration-level decode session over a [`DecodeBatch`].
-struct NativeDecodeSession {
+/// What a decode session needs from a batch implementation: the dense
+/// [`DecodeBatch`] and the paged [`PagedDecodeBatch`] share the
+/// join/step/retire surface; only the paged one reports pool stats.
+trait SessionBatch: Send {
+    fn try_join(&mut self, prompt: Vec<u32>, n: usize) -> Option<u64>;
+    fn step(&mut self, model: &AdaptedModel) -> usize;
+    /// Retire finished sequences this session owns. `owned` is the
+    /// session's id → prompt map: a shared (engine-persistent) batch may
+    /// host sequences from several sessions, and each must only consume
+    /// its own results.
+    fn retire_finished(&mut self, owned: &HashMap<u64, String>) -> Vec<FinishedSeq>;
+    fn active(&self) -> usize;
+    fn capacity(&self) -> usize;
+    /// `(blocks_in_use, blocks_peak, prefix_hit_tokens, preemptions)`;
+    /// `None` on the dense path.
+    fn kv_stats(&self) -> Option<(usize, usize, u64, u64)> {
+        None
+    }
+}
+
+impl SessionBatch for DecodeBatch {
+    fn try_join(&mut self, prompt: Vec<u32>, n: usize) -> Option<u64> {
+        DecodeBatch::try_join(self, prompt, n)
+    }
+
+    fn step(&mut self, model: &AdaptedModel) -> usize {
+        DecodeBatch::step(self, model)
+    }
+
+    fn retire_finished(&mut self, _owned: &HashMap<u64, String>) -> Vec<FinishedSeq> {
+        // A dense batch is per-session: everything in it is owned.
+        DecodeBatch::retire_finished(self)
+    }
+
+    fn active(&self) -> usize {
+        DecodeBatch::active(self)
+    }
+
+    fn capacity(&self) -> usize {
+        DecodeBatch::capacity(self)
+    }
+}
+
+/// The engine-persistent paged batch: sessions borrow it through a mutex
+/// (the batcher drives one session at a time, so the lock is uncontended;
+/// concurrent sessions interleave engine passes safely and retire only
+/// their own sequences).
+impl SessionBatch for Arc<Mutex<PagedDecodeBatch>> {
+    fn try_join(&mut self, prompt: Vec<u32>, n: usize) -> Option<u64> {
+        self.lock().unwrap().try_join(prompt, n)
+    }
+
+    fn step(&mut self, model: &AdaptedModel) -> usize {
+        self.lock().unwrap().step(model)
+    }
+
+    fn retire_finished(&mut self, owned: &HashMap<u64, String>) -> Vec<FinishedSeq> {
+        self.lock().unwrap().retire_finished_owned(|id| owned.contains_key(&id))
+    }
+
+    fn active(&self) -> usize {
+        self.lock().unwrap().active()
+    }
+
+    fn capacity(&self) -> usize {
+        self.lock().unwrap().capacity()
+    }
+
+    fn kv_stats(&self) -> Option<(usize, usize, u64, u64)> {
+        Some(self.lock().unwrap().kv_stats())
+    }
+}
+
+/// Native iteration-level decode session, generic over the cache layout.
+struct NativeDecodeSession<T: SessionBatch> {
     model: Arc<AdaptedModel>,
-    batch: DecodeBatch,
+    batch: T,
     /// Original prompt strings, so finished texts are exact prefixes of
     /// what the client sent (byte-token decoding is applied only to the
     /// generated suffix, one token at a time, matching `greedy_decode`).
     prompts: HashMap<u64, String>,
     metrics: Option<Arc<Metrics>>,
+    /// Cumulative pool counters already forwarded to `metrics` (the batch
+    /// reports running totals; the metrics want deltas).
+    reported_hits: u64,
+    reported_preempts: u64,
 }
 
-impl DecodeSession for NativeDecodeSession {
+impl<T: SessionBatch> NativeDecodeSession<T> {
+    fn new(model: Arc<AdaptedModel>, batch: T, metrics: Option<Arc<Metrics>>) -> Self {
+        // A persistent batch carries counters from previous sessions; only
+        // deltas accrued by *this* session are forwarded to the metrics.
+        let (reported_hits, reported_preempts) =
+            batch.kv_stats().map(|(_, _, h, p)| (h, p)).unwrap_or((0, 0));
+        Self { model, batch, prompts: HashMap::new(), metrics, reported_hits, reported_preempts }
+    }
+}
+
+impl<T: SessionBatch> DecodeSession for NativeDecodeSession<T> {
     fn try_join(&mut self, prompt: &str, n: usize) -> Option<u64> {
         let toks = tokenizer::encode(prompt, true);
         let id = self.batch.try_join(toks, n)?;
@@ -184,14 +333,26 @@ impl DecodeSession for NativeDecodeSession {
 
     fn step(&mut self) -> Vec<(u64, String, usize)> {
         let t0 = Instant::now();
-        let advanced = self.batch.step(&*self.model);
+        let advanced = self.batch.step(&self.model);
         if advanced > 0 {
             if let Some(m) = &self.metrics {
                 m.observe_decode_step(advanced, t0.elapsed());
             }
         }
+        if let Some(m) = &self.metrics {
+            if let Some((in_use, peak, hits, preempts)) = self.batch.kv_stats() {
+                m.observe_kv_pool(
+                    in_use,
+                    peak,
+                    hits - self.reported_hits,
+                    preempts - self.reported_preempts,
+                );
+                self.reported_hits = hits;
+                self.reported_preempts = preempts;
+            }
+        }
         self.batch
-            .retire_finished()
+            .retire_finished(&self.prompts)
             .into_iter()
             .map(|f| {
                 let mut text = self
@@ -406,7 +567,8 @@ mod tests {
         assert_eq!(solo[0], trio[1], "cohabitants changed a sequence's decode");
 
         let m2 = tiny_model(Arch::SwiGlu, 305);
-        let tight = NativeEngine::new(Arc::new(AdaptedModel::unadapted(m2))).with_decode_capacity(2);
+        let tight =
+            NativeEngine::new(Arc::new(AdaptedModel::unadapted(m2))).with_decode_capacity(2);
         let waves = tight.generate_batch(&[
             ("xy".to_string(), 3),
             ("ab".to_string(), 4),
@@ -422,7 +584,8 @@ mod tests {
     #[test]
     fn decode_session_joins_between_steps() {
         let m = tiny_model(Arch::GeluNeoX, 307);
-        let engine = NativeEngine::new(Arc::new(AdaptedModel::unadapted(m))).with_decode_capacity(2);
+        let engine =
+            NativeEngine::new(Arc::new(AdaptedModel::unadapted(m))).with_decode_capacity(2);
         let metrics = Arc::new(Metrics::new());
         engine.set_metrics(Arc::clone(&metrics));
         let mut session = engine.begin_decode_session().unwrap();
@@ -446,5 +609,33 @@ mod tests {
         use std::sync::atomic::Ordering;
         assert!(metrics.decode_steps.load(Ordering::Relaxed) > 0);
         assert!(metrics.decode_tokens.load(Ordering::Relaxed) >= 4);
+    }
+
+    #[test]
+    fn concurrent_sessions_only_retire_their_own_sequences() {
+        // Two sessions share the engine-persistent paged batch; each must
+        // only consume results for sequences it admitted, even though
+        // either session's step advances (and finishes) both.
+        let m = tiny_model(Arch::SwiGlu, 309);
+        let engine =
+            NativeEngine::new(Arc::new(AdaptedModel::unadapted(m))).with_decode_capacity(4);
+        let mut s1 = engine.begin_decode_session().unwrap();
+        let mut s2 = engine.begin_decode_session().unwrap();
+        let a = s1.try_join("ab", 2).unwrap();
+        let b = s2.try_join("cd", 2).unwrap();
+        let mut got1 = Vec::new();
+        let mut got2 = Vec::new();
+        let mut guard = 0;
+        while (got1.is_empty() || got2.is_empty()) && guard < 64 {
+            got1.extend(s1.step());
+            got2.extend(s2.step());
+            guard += 1;
+        }
+        assert_eq!(got1.len(), 1, "session 1 must get exactly its own result");
+        assert_eq!(got2.len(), 1, "session 2 must get exactly its own result");
+        assert_eq!(got1[0].0, a);
+        assert_eq!(got2[0].0, b);
+        assert!(got1[0].1.starts_with("ab"));
+        assert!(got2[0].1.starts_with("cd"));
     }
 }

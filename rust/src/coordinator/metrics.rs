@@ -24,6 +24,15 @@ pub struct Metrics {
     pub decode_steps: AtomicU64,
     /// Tokens fed across those passes (prefill + generation).
     pub decode_tokens: AtomicU64,
+    /// KV blocks currently allocated in the paged pool (gauge; 0 on the
+    /// dense path).
+    pub kv_blocks_in_use: AtomicU64,
+    /// High-water mark of pool blocks in use.
+    pub kv_blocks_peak: AtomicU64,
+    /// Prompt tokens whose prefill was skipped via prefix-trie hits.
+    pub prefix_hit_tokens: AtomicU64,
+    /// Sequences preempted (blocks released, requeued) under pool pressure.
+    pub kv_preemptions: AtomicU64,
     /// Wall-clock spent inside batched decode passes.
     decode_time_us: AtomicU64,
     latency: [AtomicU64; 10],
@@ -48,6 +57,15 @@ impl Metrics {
         self.decode_steps.fetch_add(1, Ordering::Relaxed);
         self.decode_tokens.fetch_add(tokens as u64, Ordering::Relaxed);
         self.decode_time_us.fetch_add(d.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    /// Record paged-pool state after a decode pass: current occupancy
+    /// (gauge), high-water mark, and *newly* prefix-hit / preempted counts.
+    pub fn observe_kv_pool(&self, in_use: usize, peak: usize, new_hits: u64, new_preempts: u64) {
+        self.kv_blocks_in_use.store(in_use as u64, Ordering::Relaxed);
+        self.kv_blocks_peak.fetch_max(peak as u64, Ordering::Relaxed);
+        self.prefix_hit_tokens.fetch_add(new_hits, Ordering::Relaxed);
+        self.kv_preemptions.fetch_add(new_preempts, Ordering::Relaxed);
     }
 
     /// Mean batch occupancy of the decode passes (tokens per engine pass).
@@ -114,6 +132,16 @@ impl Metrics {
             ),
             ("decode_steps", Json::Num(self.decode_steps.load(Ordering::Relaxed) as f64)),
             ("decode_tokens", Json::Num(self.decode_tokens.load(Ordering::Relaxed) as f64)),
+            (
+                "kv_blocks_in_use",
+                Json::Num(self.kv_blocks_in_use.load(Ordering::Relaxed) as f64),
+            ),
+            ("kv_blocks_peak", Json::Num(self.kv_blocks_peak.load(Ordering::Relaxed) as f64)),
+            (
+                "prefix_hit_tokens",
+                Json::Num(self.prefix_hit_tokens.load(Ordering::Relaxed) as f64),
+            ),
+            ("kv_preemptions", Json::Num(self.kv_preemptions.load(Ordering::Relaxed) as f64)),
             ("decode_occupancy", Json::Num(self.decode_occupancy())),
             ("decode_tokens_per_sec", Json::Num(self.decode_tokens_per_sec())),
             ("mean_latency_us", Json::Num(self.mean_latency_us())),
@@ -153,9 +181,27 @@ mod tests {
             "decode_steps",
             "decode_occupancy",
             "decode_tokens_per_sec",
+            "kv_blocks_in_use",
+            "kv_blocks_peak",
+            "prefix_hit_tokens",
+            "kv_preemptions",
         ] {
             assert!(s.get(key).is_ok(), "missing {key}");
         }
+    }
+
+    #[test]
+    fn kv_pool_metrics_track_gauge_peak_and_counters() {
+        let m = Metrics::new();
+        m.observe_kv_pool(4, 6, 16, 0);
+        m.observe_kv_pool(2, 6, 8, 1);
+        assert_eq!(m.kv_blocks_in_use.load(Ordering::Relaxed), 2, "gauge is last value");
+        assert_eq!(m.kv_blocks_peak.load(Ordering::Relaxed), 6);
+        assert_eq!(m.prefix_hit_tokens.load(Ordering::Relaxed), 24, "hits accumulate");
+        assert_eq!(m.kv_preemptions.load(Ordering::Relaxed), 1);
+        // Peak never regresses.
+        m.observe_kv_pool(1, 3, 0, 0);
+        assert_eq!(m.kv_blocks_peak.load(Ordering::Relaxed), 6);
     }
 
     #[test]

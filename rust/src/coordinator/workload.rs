@@ -31,12 +31,30 @@ pub struct Mix {
     pub generate_frac: f64,
     /// Tokens per generation.
     pub gen_tokens: usize,
+    /// Fraction of generate requests that open with the shared
+    /// system-prompt prefix (exercises the paged cache's prefix trie).
+    pub shared_prefix_frac: f64,
+    /// Length of that shared prefix in words (0 disables it).
+    pub prefix_words: usize,
 }
 
 impl Default for Mix {
     fn default() -> Self {
-        Self { generate_frac: 0.25, gen_tokens: 16 }
+        Self { generate_frac: 0.25, gen_tokens: 16, shared_prefix_frac: 0.0, prefix_words: 0 }
     }
+}
+
+/// The deterministic system-prompt prefix of `words` grammar entities —
+/// every request built with the same `Mix` shares it byte-for-byte, so the
+/// byte-level tokenizer maps it to an identical token prefix.
+pub fn shared_prefix(g: &Grammar, words: usize) -> String {
+    let mut s = String::from("sys:");
+    for i in 0..words {
+        s.push(' ');
+        s.push_str(&g.entities[i % g.entities.len()]);
+    }
+    s.push_str(" . ");
+    s
 }
 
 /// Latency/throughput summary of one load run.
@@ -70,7 +88,13 @@ impl LoadReport {
 
 fn make_op(g: &Grammar, mix: &Mix, rng: &mut Xoshiro256) -> Op {
     if rng.f64() < mix.generate_frac {
-        Op::Generate { prompt: format!("about {} :", g.entities[rng.below(g.entities.len())]), n: mix.gen_tokens }
+        let about = format!("about {} :", g.entities[rng.below(g.entities.len())]);
+        let prompt = if mix.prefix_words > 0 && rng.f64() < mix.shared_prefix_frac {
+            format!("{}{about}", shared_prefix(g, mix.prefix_words))
+        } else {
+            about
+        };
+        Op::Generate { prompt, n: mix.gen_tokens }
     } else {
         Op::Score { text: g.document(rng) }
     }
@@ -220,7 +244,7 @@ mod tests {
         let r = run_load(
             &b,
             Arrivals::ClosedLoop { clients: 4 },
-            Mix { generate_frac: 0.25, gen_tokens: 3 },
+            Mix { generate_frac: 0.25, gen_tokens: 3, ..Mix::default() },
             16,
             7,
         );
@@ -230,12 +254,64 @@ mod tests {
     }
 
     #[test]
+    fn shared_prefix_mix_reuses_prefill_blocks() {
+        // All generate requests share the system prefix: the paged engine's
+        // prefix trie must register hits after the first prefill. Needs a
+        // model whose max_seq fits the byte-tokenized prefix.
+        let cfg = crate::model::ModelConfig {
+            name: "tiny-long".into(),
+            arch: Arch::SwiGlu,
+            d_model: 12,
+            n_layers: 2,
+            n_heads: 2,
+            d_hidden: 24,
+            vocab: crate::data::tokenizer::MODEL_VOCAB,
+            max_seq: 128,
+            rope_theta: 10_000.0,
+            norm_eps: 1e-5,
+        };
+        let w = crate::model::ModelWeights::random_init(&cfg, 603);
+        let model = Arc::new(crate::model::Model::new(cfg, w).unwrap());
+        let e: Arc<dyn Engine> = Arc::new(
+            NativeEngine::new(Arc::new(AdaptedModel::unadapted(model))).with_paged_cache(8, 0),
+        );
+        let b = Arc::new(Batcher::new(BudgetLadder::single(e), 8));
+        let b2 = Arc::clone(&b);
+        std::thread::spawn(move || b2.run());
+        let r = run_load(
+            &b,
+            Arrivals::ClosedLoop { clients: 4 },
+            Mix { generate_frac: 1.0, gen_tokens: 3, shared_prefix_frac: 1.0, prefix_words: 6 },
+            12,
+            11,
+        );
+        assert_eq!(r.completed, 12);
+        use std::sync::atomic::Ordering;
+        assert!(
+            b.metrics.prefix_hit_tokens.load(Ordering::Relaxed) > 0,
+            "identical system prompts must hit the prefix trie"
+        );
+        assert!(b.metrics.kv_blocks_peak.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn shared_prefix_is_deterministic_and_sized() {
+        let g = crate::data::grammar();
+        let a = shared_prefix(&g, 8);
+        let c = shared_prefix(&g, 8);
+        assert_eq!(a, c);
+        assert!(a.starts_with("sys:") && a.len() > 8);
+        let longer = shared_prefix(&g, 16);
+        assert!(longer.starts_with(&a[..a.len() - 3]), "prefixes nest by construction");
+    }
+
+    #[test]
     fn poisson_open_loop_completes() {
         let b = start();
         let r = run_load(
             &b,
             Arrivals::Poisson { rate: 200.0 },
-            Mix { generate_frac: 0.0, gen_tokens: 1 },
+            Mix { generate_frac: 0.0, gen_tokens: 1, ..Mix::default() },
             12,
             9,
         );

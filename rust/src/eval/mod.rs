@@ -70,12 +70,17 @@ pub fn task_accuracies<B: BlockOps>(b: &B, suites: &[TaskSuite]) -> Vec<f64> {
 }
 
 /// Greedy decode `n` tokens from a text prompt (demo/smoke paths).
+/// A hostile (over-long) prompt truncates prefill via the typed
+/// [`crate::kvcache::CacheError`] instead of aborting the caller.
 pub fn greedy_decode<B: BlockOps>(b: &B, prompt: &str, n: usize) -> String {
     let mut cache = KvCache::new(b.config());
     let toks = tokenizer::encode(prompt, true);
     let mut logits = Vec::new();
     for &t in &toks {
-        logits = decode_step(b, t, &mut cache);
+        match decode_step(b, t, &mut cache) {
+            Ok(l) => logits = l,
+            Err(_) => break, // cache full: decode from the truncated prefix
+        }
     }
     let mut out = prompt.to_string();
     for _ in 0..n {
@@ -84,7 +89,10 @@ pub fn greedy_decode<B: BlockOps>(b: &B, prompt: &str, n: usize) -> String {
         }
         let next = argmax(&logits) as u32;
         out.push_str(&tokenizer::decode(&[next]));
-        logits = decode_step(b, next, &mut cache);
+        match decode_step(b, next, &mut cache) {
+            Ok(l) => logits = l,
+            Err(_) => break,
+        }
     }
     out
 }

@@ -1,0 +1,107 @@
+//! Paged KV-cache subsystem: block-pool allocator, per-sequence paged
+//! caches with copy-on-write, and a prefix trie for shared-prefix reuse.
+//!
+//! This is the serving engine's memory-management layer (DESIGN.md §2b).
+//! Instead of one dense `max_seq × d_model` K and V matrix per layer per
+//! decode slot, KV rows live in a [`BlockPool`] of fixed-size token blocks
+//! shared by every in-flight sequence:
+//!
+//! * [`pool::BlockPool`] — ref-counted blocks behind a free list; one
+//!   logical block spans all layers.
+//! * [`pool::PagedKvCache`] — a sequence's view: a chain of block ids plus
+//!   a length, growing a block at a time, with copy-on-write on the first
+//!   divergent append to a shared tail block ([`pool::PagedKvCache::fork`]).
+//! * [`trie::PrefixTrie`] — prompt-prefix → block-chain map at block
+//!   granularity, so identical prompt prefixes (system prompts) share
+//!   blocks and skip prefill entirely; unreferenced entries are evicted
+//!   under pool pressure.
+//!
+//! The decode path over this storage is `model::decode_step_paged` /
+//! `model::PagedDecodeBatch`; the block-strided attention kernel is
+//! [`crate::tensor::attention_over_paged`], bit-for-bit identical to the
+//! contiguous-cache kernel (the §2a determinism contract extends to paging).
+
+pub mod pool;
+pub mod trie;
+
+pub use pool::{BlockPool, PagedKvCache};
+pub use trie::PrefixTrie;
+
+/// Typed decode-path cache failures. These replace the former
+/// `assert!(pos < cfg.max_seq, "KV cache full")` panics: the engine maps
+/// them to graceful per-sequence retirement (a hostile prompt must not
+/// abort a whole engine pass), and the paged batcher maps pool exhaustion
+/// to eviction/preemption instead of aborting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheError {
+    /// The sequence reached the model's positional capacity (`max_seq`).
+    CacheFull {
+        /// Batch row of the offending sequence (0 for single-sequence ops).
+        seq: usize,
+        /// Position that could not be appended.
+        pos: usize,
+        /// The model's `max_seq`.
+        capacity: usize,
+    },
+    /// The block pool has no free block for the next append.
+    PoolExhausted {
+        /// Batch row of the offending sequence (0 for single-sequence ops).
+        seq: usize,
+        needed: usize,
+        available: usize,
+    },
+}
+
+impl CacheError {
+    /// Batch row the error refers to.
+    pub fn seq(&self) -> usize {
+        match *self {
+            CacheError::CacheFull { seq, .. } | CacheError::PoolExhausted { seq, .. } => seq,
+        }
+    }
+
+    /// Same error re-attributed to batch row `seq` (helpers report row 0).
+    pub fn with_seq(self, new_seq: usize) -> Self {
+        match self {
+            CacheError::CacheFull { pos, capacity, .. } => {
+                CacheError::CacheFull { seq: new_seq, pos, capacity }
+            }
+            CacheError::PoolExhausted { needed, available, .. } => {
+                CacheError::PoolExhausted { seq: new_seq, needed, available }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for CacheError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            CacheError::CacheFull { seq, pos, capacity } => {
+                write!(f, "KV cache full: seq {seq} at position {pos} (max_seq {capacity})")
+            }
+            CacheError::PoolExhausted { seq, needed, available } => {
+                write!(
+                    f,
+                    "KV block pool exhausted: seq {seq} needs {needed} block(s), {available} free"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for CacheError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_error_display_and_seq_rewrite() {
+        let e = CacheError::CacheFull { seq: 0, pos: 64, capacity: 64 };
+        assert!(e.to_string().contains("position 64"));
+        assert_eq!(e.with_seq(3).seq(), 3);
+        let p = CacheError::PoolExhausted { seq: 1, needed: 2, available: 0 };
+        assert!(p.to_string().contains("exhausted"));
+        assert_eq!(p.with_seq(5).seq(), 5);
+    }
+}

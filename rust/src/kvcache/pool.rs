@@ -1,0 +1,454 @@
+//! Ref-counted fixed-size block pool + per-sequence paged KV cache view.
+//!
+//! One **logical block** spans all layers: block `b` owns token rows
+//! `[b·bs, (b+1)·bs)` of every layer's pool-wide K and V buffers. A
+//! sequence's cache is just a chain of block ids plus a token count; block
+//! contents are written once per (layer, position) during decode and read
+//! by the block-strided attention kernel
+//! ([`crate::tensor::attention_over_paged`]).
+//!
+//! Sharing rules (DESIGN.md §2b):
+//! * Blocks are ref-counted. The prefix trie and any number of sequences
+//!   may hold the same block; only a block with refcount 1 is writable.
+//! * All appends go to the position `len`, i.e. into the chain's *last*
+//!   block. Shared **full** blocks are therefore never written again; a
+//!   shared *partial* tail block (created by [`PagedKvCache::fork`]) is
+//!   **copied on the first divergent append** (COW), so forks never observe
+//!   each other's tokens.
+
+use crate::model::ModelConfig;
+use crate::tensor::Mat;
+
+use super::CacheError;
+
+/// Pool of fixed-size KV blocks, one K and one V buffer per layer.
+pub struct BlockPool {
+    block_size: usize,
+    n_blocks: usize,
+    n_layers: usize,
+    /// Per layer: `[n_blocks * block_size, d_model]` key rows.
+    k: Vec<Mat>,
+    /// Per layer: `[n_blocks * block_size, d_model]` value rows.
+    v: Vec<Mat>,
+    ref_counts: Vec<u32>,
+    /// LIFO free list (hot blocks are reused first).
+    free: Vec<usize>,
+    peak_in_use: usize,
+}
+
+impl BlockPool {
+    /// Pool with `n_blocks` blocks of `block_size` token rows each, shaped
+    /// for `cfg` (one K + one V row of `d_model` per layer per token).
+    pub fn new(cfg: &ModelConfig, block_size: usize, n_blocks: usize) -> Self {
+        assert!(block_size > 0, "block_size must be positive");
+        assert!(n_blocks > 0, "pool needs at least one block");
+        let rows = n_blocks * block_size;
+        Self {
+            block_size,
+            n_blocks,
+            n_layers: cfg.n_layers,
+            k: (0..cfg.n_layers).map(|_| Mat::zeros(rows, cfg.d_model)).collect(),
+            v: (0..cfg.n_layers).map(|_| Mat::zeros(rows, cfg.d_model)).collect(),
+            ref_counts: vec![0; n_blocks],
+            // LIFO: block 0 pops first.
+            free: (0..n_blocks).rev().collect(),
+            peak_in_use: 0,
+        }
+    }
+
+    /// Blocks needed to hold `tokens` token rows.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn blocks_in_use(&self) -> usize {
+        self.n_blocks - self.free.len()
+    }
+
+    pub fn blocks_peak(&self) -> usize {
+        self.peak_in_use
+    }
+
+    pub fn ref_count(&self, block: usize) -> u32 {
+        self.ref_counts[block]
+    }
+
+    /// Pool-wide K buffer of one layer (block-strided rows).
+    #[inline]
+    pub fn layer_k(&self, layer: usize) -> &Mat {
+        &self.k[layer]
+    }
+
+    /// Pool-wide V buffer of one layer (block-strided rows).
+    #[inline]
+    pub fn layer_v(&self, layer: usize) -> &Mat {
+        &self.v[layer]
+    }
+
+    /// Allocate one block (refcount 1), or `None` when the pool is empty.
+    pub fn alloc(&mut self) -> Option<usize> {
+        let b = self.free.pop()?;
+        debug_assert_eq!(self.ref_counts[b], 0, "free-list block had live refs");
+        self.ref_counts[b] = 1;
+        self.peak_in_use = self.peak_in_use.max(self.blocks_in_use());
+        Some(b)
+    }
+
+    /// Add one reference to a live block (prefix share / fork).
+    pub fn retain(&mut self, block: usize) {
+        assert!(self.ref_counts[block] > 0, "retain of a free block");
+        self.ref_counts[block] += 1;
+    }
+
+    /// Drop one reference; the block returns to the free list at zero.
+    pub fn release(&mut self, block: usize) {
+        assert!(self.ref_counts[block] > 0, "release of a free block");
+        self.ref_counts[block] -= 1;
+        if self.ref_counts[block] == 0 {
+            self.free.push(block);
+        }
+    }
+
+    #[inline]
+    fn row_index(&self, block: usize, slot: usize) -> usize {
+        debug_assert!(slot < self.block_size);
+        block * self.block_size + slot
+    }
+
+    /// Write one token's K/V rows for one layer into `(block, slot)`.
+    pub fn write_kv(&mut self, layer: usize, block: usize, slot: usize, k: &[f32], v: &[f32]) {
+        debug_assert!(self.ref_counts[block] == 1, "write to a shared/free block");
+        let row = self.row_index(block, slot);
+        self.k[layer].row_mut(row).copy_from_slice(k);
+        self.v[layer].row_mut(row).copy_from_slice(v);
+    }
+
+    /// Copy the first `filled` slots of `src` into `dst` across all layers
+    /// (the COW body).
+    fn copy_block(&mut self, src: usize, dst: usize, filled: usize) {
+        for layer in 0..self.n_layers {
+            for slot in 0..filled {
+                let s = self.row_index(src, slot);
+                let d = self.row_index(dst, slot);
+                let krow = self.k[layer].row(s).to_vec();
+                self.k[layer].row_mut(d).copy_from_slice(&krow);
+                let vrow = self.v[layer].row(s).to_vec();
+                self.v[layer].row_mut(d).copy_from_slice(&vrow);
+            }
+        }
+    }
+
+    /// Internal consistency: every block is either free (refcount 0, on the
+    /// free list exactly once) or live (refcount > 0, not on it).
+    #[cfg(test)]
+    pub fn check_invariants(&self) {
+        assert!(self.free.len() <= self.n_blocks);
+        let mut on_free = vec![false; self.n_blocks];
+        for &b in &self.free {
+            assert!(!on_free[b], "block {b} on free list twice");
+            on_free[b] = true;
+        }
+        for b in 0..self.n_blocks {
+            assert_eq!(
+                self.ref_counts[b] == 0,
+                on_free[b],
+                "block {b}: refcount {} vs free-list {}",
+                self.ref_counts[b],
+                on_free[b]
+            );
+        }
+        assert!(self.peak_in_use <= self.n_blocks);
+        assert!(self.peak_in_use >= self.blocks_in_use());
+    }
+}
+
+/// Per-sequence paged cache: a chain of pool blocks plus a token count.
+/// Appending always targets position `len`; the chain grows a block at a
+/// time and shared tail blocks are copied on first write (COW).
+#[derive(Clone, Debug, Default)]
+pub struct PagedKvCache {
+    chain: Vec<usize>,
+    len: usize,
+}
+
+impl PagedKvCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Adopt an already-retained prefix chain of `tokens` tokens (the trie
+    /// hands out full blocks whose refcounts it has bumped for the caller).
+    pub fn from_shared_prefix(chain: Vec<usize>, tokens: usize, block_size: usize) -> Self {
+        debug_assert_eq!(chain.len() * block_size, tokens, "prefix must be full blocks");
+        Self { chain, len: tokens }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn chain(&self) -> &[usize] {
+        &self.chain
+    }
+
+    /// Blocks this cache currently holds a reference to.
+    pub fn blocks_held(&self) -> usize {
+        self.chain.len()
+    }
+
+    /// Make position `len` writable: allocate a fresh block when the chain
+    /// is exactly full, and copy a shared tail block (COW) before the first
+    /// divergent append. Idempotent once it has succeeded for a given `len`.
+    pub fn prepare_append(&mut self, pool: &mut BlockPool) -> Result<(), CacheError> {
+        let bs = pool.block_size();
+        if self.len == self.chain.len() * bs {
+            let b = pool.alloc().ok_or(CacheError::PoolExhausted {
+                seq: 0,
+                needed: 1,
+                available: 0,
+            })?;
+            self.chain.push(b);
+            return Ok(());
+        }
+        let idx = self.len / bs;
+        debug_assert!(idx < self.chain.len());
+        if pool.ref_count(self.chain[idx]) > 1 {
+            // COW: the tail block is shared (fork); copy its filled prefix.
+            let fresh = pool.alloc().ok_or(CacheError::PoolExhausted {
+                seq: 0,
+                needed: 1,
+                available: 0,
+            })?;
+            pool.copy_block(self.chain[idx], fresh, self.len % bs);
+            pool.release(self.chain[idx]);
+            self.chain[idx] = fresh;
+        }
+        Ok(())
+    }
+
+    /// Write one layer's K/V rows for the token at position `len`.
+    /// Requires a preceding successful [`PagedKvCache::prepare_append`].
+    pub fn write_kv(&self, pool: &mut BlockPool, layer: usize, k: &[f32], v: &[f32]) {
+        let bs = pool.block_size();
+        let idx = self.len / bs;
+        pool.write_kv(layer, self.chain[idx], self.len % bs, k, v);
+    }
+
+    /// Commit the append: position `len` is now part of the context.
+    pub fn advance(&mut self) {
+        self.len += 1;
+    }
+
+    /// Share the whole cache (including a partial tail block) with a new
+    /// handle; the next divergent append on either handle triggers COW.
+    pub fn fork(&self, pool: &mut BlockPool) -> PagedKvCache {
+        for &b in &self.chain {
+            pool.retain(b);
+        }
+        self.clone()
+    }
+
+    /// Drop every block reference and reset to empty.
+    pub fn release(&mut self, pool: &mut BlockPool) {
+        for &b in &self.chain {
+            pool.release(b);
+        }
+        self.chain.clear();
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Arch, ModelConfig};
+    use crate::util::rng::Xoshiro256;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            arch: Arch::SwiGlu,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_hidden: 16,
+            vocab: 32,
+            max_seq: 64,
+            rope_theta: 10_000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let mut pool = BlockPool::new(&cfg(), 4, 3);
+        assert_eq!(pool.free_blocks(), 3);
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        let c = pool.alloc().unwrap();
+        assert!(pool.alloc().is_none(), "pool of 3 must refuse a 4th block");
+        assert_eq!(pool.blocks_in_use(), 3);
+        assert_eq!(pool.blocks_peak(), 3);
+        pool.release(b);
+        assert_eq!(pool.free_blocks(), 1);
+        let b2 = pool.alloc().unwrap();
+        assert_eq!(b2, b, "LIFO free list reuses the last released block");
+        pool.release(a);
+        pool.release(b2);
+        pool.release(c);
+        assert_eq!(pool.free_blocks(), 3);
+        assert_eq!(pool.blocks_peak(), 3, "peak persists after release");
+        pool.check_invariants();
+    }
+
+    #[test]
+    fn retain_keeps_block_alive_until_last_release() {
+        let mut pool = BlockPool::new(&cfg(), 2, 2);
+        let b = pool.alloc().unwrap();
+        pool.retain(b);
+        pool.retain(b);
+        assert_eq!(pool.ref_count(b), 3);
+        pool.release(b);
+        pool.release(b);
+        assert_eq!(pool.free_blocks(), 1, "still one live reference");
+        pool.release(b);
+        assert_eq!(pool.free_blocks(), 2);
+        pool.check_invariants();
+    }
+
+    #[test]
+    fn cow_preserves_fork_prefix_and_isolates_divergence() {
+        let c = cfg();
+        let mut pool = BlockPool::new(&c, 4, 8);
+        let mut a = PagedKvCache::new();
+        // Fill 6 positions (one full block + 2 slots of the next).
+        for p in 0..6 {
+            a.prepare_append(&mut pool).unwrap();
+            for layer in 0..c.n_layers {
+                let k = vec![p as f32; c.d_model];
+                let v = vec![-(p as f32); c.d_model];
+                a.write_kv(&mut pool, layer, &k, &v);
+            }
+            a.advance();
+        }
+        let mut b = a.fork(&mut pool);
+        assert_eq!(a.chain(), b.chain());
+        assert_eq!(pool.ref_count(a.chain()[1]), 2);
+
+        // Divergent append on the fork: must COW the partial tail block.
+        b.prepare_append(&mut pool).unwrap();
+        assert_ne!(a.chain()[1], b.chain()[1], "COW must copy the shared tail");
+        assert_eq!(a.chain()[0], b.chain()[0], "full block stays shared");
+        let (k99, v99) = (vec![99.0; c.d_model], vec![-99.0; c.d_model]);
+        for layer in 0..c.n_layers {
+            b.write_kv(&mut pool, layer, &k99, &v99);
+        }
+        b.advance();
+        // a's view of positions 4..6 is untouched.
+        let bs = pool.block_size();
+        for p in 4..6 {
+            let row = a.chain()[p / bs] * bs + p % bs;
+            assert_eq!(pool.layer_k(0).row(row)[0], p as f32);
+        }
+        // b's copied prefix (4, 5) matches and its new position 6 diverged.
+        for p in 4..6 {
+            let row = b.chain()[p / bs] * bs + p % bs;
+            assert_eq!(pool.layer_k(0).row(row)[0], p as f32, "COW lost the copied prefix");
+        }
+        let row = b.chain()[1] * bs + 2;
+        assert_eq!(pool.layer_k(0).row(row)[0], 99.0);
+
+        a.release(&mut pool);
+        b.release(&mut pool);
+        assert_eq!(pool.free_blocks(), 8);
+        pool.check_invariants();
+    }
+
+    #[test]
+    fn pool_exhaustion_is_a_typed_error() {
+        let mut pool = BlockPool::new(&cfg(), 2, 1);
+        let mut a = PagedKvCache::new();
+        a.prepare_append(&mut pool).unwrap();
+        a.advance();
+        a.advance(); // block full at 2 tokens
+        let mut b = PagedKvCache::new();
+        match b.prepare_append(&mut pool) {
+            Err(CacheError::PoolExhausted { .. }) => {}
+            other => panic!("expected PoolExhausted, got {other:?}"),
+        }
+        a.release(&mut pool);
+        assert!(b.prepare_append(&mut pool).is_ok(), "freed block is reusable");
+        b.release(&mut pool);
+        pool.check_invariants();
+    }
+
+    /// Randomized alloc/append/fork/release schedule; the pool invariants
+    /// (refcount ↔ free-list consistency, conservation of blocks) must hold
+    /// at every step, and held-block accounting must reconcile.
+    #[test]
+    fn randomized_alloc_free_fork_keeps_invariants() {
+        let c = cfg();
+        for seed in 0..6u64 {
+            let mut rng = Xoshiro256::new(0xB10C ^ seed);
+            let bs = 1 + rng.below(5);
+            let n_blocks = 4 + rng.below(12);
+            let mut pool = BlockPool::new(&c, bs, n_blocks);
+            let mut caches: Vec<PagedKvCache> = Vec::new();
+            for _ in 0..300 {
+                match rng.below(5) {
+                    0 => caches.push(PagedKvCache::new()),
+                    1 | 2 => {
+                        // Append one token to a random cache (may exhaust).
+                        if let Some(i) = (!caches.is_empty()).then(|| rng.below(caches.len())) {
+                            if caches[i].prepare_append(&mut pool).is_ok() {
+                                for layer in 0..c.n_layers {
+                                    let k = vec![rng.gaussian(); c.d_model];
+                                    caches[i].write_kv(&mut pool, layer, &k, &k);
+                                }
+                                caches[i].advance();
+                            }
+                        }
+                    }
+                    3 => {
+                        if let Some(i) = (!caches.is_empty()).then(|| rng.below(caches.len())) {
+                            let f = caches[i].fork(&mut pool);
+                            caches.push(f);
+                        }
+                    }
+                    _ => {
+                        if let Some(i) = (!caches.is_empty()).then(|| rng.below(caches.len())) {
+                            let mut cche = caches.swap_remove(i);
+                            cche.release(&mut pool);
+                        }
+                    }
+                }
+                pool.check_invariants();
+                // Total references held by caches == sum of live refcounts.
+                let held: usize = caches.iter().map(|ca| ca.blocks_held()).sum();
+                let refs: usize = (0..pool.n_blocks()).map(|b| pool.ref_count(b) as usize).sum();
+                assert_eq!(held, refs, "seed {seed}: dangling or leaked references");
+            }
+            for mut cche in caches {
+                cche.release(&mut pool);
+            }
+            assert_eq!(pool.free_blocks(), n_blocks, "seed {seed}: leaked blocks");
+            pool.check_invariants();
+        }
+    }
+}

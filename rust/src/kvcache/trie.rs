@@ -1,0 +1,254 @@
+//! Prefix trie: prompt-token prefixes → shared KV block chains.
+//!
+//! The trie is keyed at **block granularity**: each edge is one full block
+//! of `block_size` prompt tokens and each node owns one pool block holding
+//! that edge's K/V rows (for every layer). Because a block's contents are a
+//! deterministic function of the *entire* token path from the root and of
+//! the positions along it, two sequences whose prompts share a token prefix
+//! can share the prefix's blocks bit-for-bit — prefill for those tokens is
+//! skipped entirely (the AdapterDrop lesson: the fastest computation is the
+//! one you don't run).
+//!
+//! The trie holds its own reference on every adopted block, so shared
+//! prefixes survive sequence retirement. Under pool pressure,
+//! [`PrefixTrie::evict`] releases leaf-first any block referenced *only* by
+//! the trie (refcount 1), i.e. prefixes with no live reader.
+//!
+//! `BTreeMap` keeps walk/evict order deterministic across runs.
+
+use std::collections::BTreeMap;
+
+use super::pool::BlockPool;
+
+#[derive(Default)]
+struct Node {
+    /// Pool block holding this edge's `block_size` token rows.
+    block: usize,
+    children: BTreeMap<Vec<u32>, Node>,
+}
+
+/// Trie over full prompt blocks. See the module docs for sharing rules.
+#[derive(Default)]
+pub struct PrefixTrie {
+    children: BTreeMap<Vec<u32>, Node>,
+    /// Blocks currently referenced by trie nodes.
+    held: usize,
+}
+
+impl PrefixTrie {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Blocks the trie currently holds a reference on.
+    pub fn blocks_held(&self) -> usize {
+        self.held
+    }
+
+    /// Longest shared prefix of `tokens` present in the trie, capped at
+    /// `max_blocks` blocks. Returns the block chain with **one reference
+    /// per block retained for the caller** (release via
+    /// `PagedKvCache::release` or `BlockPool::release`).
+    pub fn lookup(
+        &self,
+        tokens: &[u32],
+        max_blocks: usize,
+        pool: &mut BlockPool,
+    ) -> Vec<usize> {
+        let bs = pool.block_size();
+        let mut chain = Vec::new();
+        let mut level = &self.children;
+        while chain.len() < max_blocks {
+            let start = chain.len() * bs;
+            if start + bs > tokens.len() {
+                break;
+            }
+            match level.get(&tokens[start..start + bs]) {
+                Some(node) => {
+                    pool.retain(node.block);
+                    chain.push(node.block);
+                    level = &node.children;
+                }
+                None => break,
+            }
+        }
+        chain
+    }
+
+    /// Register the first `chain.len()` full blocks of `tokens` (the
+    /// caller's live chain, block `i` covering tokens `[i·bs, (i+1)·bs)`).
+    /// Nodes already present keep their existing block (first writer wins —
+    /// identical contents by determinism); newly-adopted blocks get one
+    /// trie-owned reference.
+    pub fn insert(&mut self, tokens: &[u32], chain: &[usize], pool: &mut BlockPool) {
+        let bs = pool.block_size();
+        debug_assert!(chain.len() * bs <= tokens.len(), "insert beyond full blocks");
+        let mut level = &mut self.children;
+        for (i, &block) in chain.iter().enumerate() {
+            let key = tokens[i * bs..(i + 1) * bs].to_vec();
+            let node = level.entry(key).or_insert_with(|| {
+                pool.retain(block);
+                self.held += 1;
+                Node { block, children: BTreeMap::new() }
+            });
+            // On a pre-existing node with a different block, keep the
+            // existing one; the caller's copy simply isn't shared. Either
+            // way the walk continues through the node that *is* in the trie.
+            level = &mut node.children;
+        }
+    }
+
+    /// Release up to `need` blocks whose only reference is the trie's own
+    /// (no live reader), deepest-first so inner nodes become evictable as
+    /// their children go. Returns how many blocks were freed.
+    pub fn evict(&mut self, pool: &mut BlockPool, need: usize) -> usize {
+        if need == 0 {
+            return 0;
+        }
+        let mut freed = 0;
+        Self::evict_level(&mut self.children, pool, need, &mut freed);
+        self.held -= freed;
+        freed
+    }
+
+    fn evict_level(
+        level: &mut BTreeMap<Vec<u32>, Node>,
+        pool: &mut BlockPool,
+        need: usize,
+        freed: &mut usize,
+    ) {
+        level.retain(|_, node| {
+            if *freed >= need {
+                return true;
+            }
+            Self::evict_level(&mut node.children, pool, need, freed);
+            // A node is removable once it has no children and no reader
+            // other than the trie itself.
+            if node.children.is_empty() && *freed < need && pool.ref_count(node.block) == 1 {
+                pool.release(node.block);
+                *freed += 1;
+                false
+            } else {
+                true
+            }
+        });
+    }
+
+    /// Drop every trie reference (shutdown / tests).
+    pub fn clear(&mut self, pool: &mut BlockPool) {
+        Self::clear_level(&mut self.children, pool);
+        self.held = 0;
+    }
+
+    fn clear_level(level: &mut BTreeMap<Vec<u32>, Node>, pool: &mut BlockPool) {
+        for node in level.values_mut() {
+            Self::clear_level(&mut node.children, pool);
+            pool.release(node.block);
+        }
+        level.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Arch, ModelConfig};
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            arch: Arch::SwiGlu,
+            d_model: 8,
+            n_layers: 1,
+            n_heads: 2,
+            d_hidden: 16,
+            vocab: 32,
+            max_seq: 64,
+            rope_theta: 10_000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    /// Allocate a chain of `n` blocks directly from the pool.
+    fn chain(pool: &mut BlockPool, n: usize) -> Vec<usize> {
+        (0..n).map(|_| pool.alloc().unwrap()).collect()
+    }
+
+    #[test]
+    fn lookup_matches_longest_full_block_prefix() {
+        let mut pool = BlockPool::new(&cfg(), 2, 8);
+        let mut trie = PrefixTrie::new();
+        let toks: Vec<u32> = vec![1, 2, 3, 4, 5, 6];
+        let ch = chain(&mut pool, 3);
+        trie.insert(&toks, &ch, &mut pool);
+        assert_eq!(trie.blocks_held(), 3);
+
+        // Full match, capped by max_blocks.
+        let hit = trie.lookup(&toks, 2, &mut pool);
+        assert_eq!(hit, ch[..2].to_vec());
+        assert_eq!(pool.ref_count(ch[0]), 3, "owner + trie + lookup");
+        for &b in &hit {
+            pool.release(b);
+        }
+
+        // Diverging third block: only two blocks match.
+        let other: Vec<u32> = vec![1, 2, 3, 4, 9, 9];
+        let hit = trie.lookup(&other, 8, &mut pool);
+        assert_eq!(hit.len(), 2);
+        for &b in &hit {
+            pool.release(b);
+        }
+
+        // Shorter than one block: no match.
+        assert!(trie.lookup(&[1], 8, &mut pool).is_empty());
+
+        for &b in &ch {
+            pool.release(b);
+        }
+        trie.clear(&mut pool);
+        assert_eq!(pool.free_blocks(), 8);
+    }
+
+    #[test]
+    fn insert_keeps_first_writer_on_duplicate_paths() {
+        let mut pool = BlockPool::new(&cfg(), 2, 8);
+        let mut trie = PrefixTrie::new();
+        let toks: Vec<u32> = vec![7, 7, 8, 8];
+        let a = chain(&mut pool, 2);
+        let b = chain(&mut pool, 2);
+        trie.insert(&toks, &a, &mut pool);
+        trie.insert(&toks, &b, &mut pool); // duplicate path: ignored
+        assert_eq!(trie.blocks_held(), 2);
+        let hit = trie.lookup(&toks, 8, &mut pool);
+        assert_eq!(hit, a, "first writer's blocks stay in the trie");
+        for &x in hit.iter().chain(&a).chain(&b) {
+            pool.release(x);
+        }
+        trie.clear(&mut pool);
+        assert_eq!(pool.free_blocks(), 8);
+    }
+
+    #[test]
+    fn evict_frees_only_unreferenced_leaf_first() {
+        let mut pool = BlockPool::new(&cfg(), 2, 8);
+        let mut trie = PrefixTrie::new();
+        let toks: Vec<u32> = vec![1, 2, 3, 4, 5, 6];
+        let ch = chain(&mut pool, 3);
+        trie.insert(&toks, &ch, &mut pool);
+        // Simulate a live reader of the first two blocks; drop our own refs
+        // on the third.
+        pool.release(ch[2]);
+        // Trie-only references: ch[2] (leaf). ch[0]/ch[1] still ours.
+        let freed = trie.evict(&mut pool, 8);
+        assert_eq!(freed, 1, "only the unreferenced leaf is evictable");
+        assert_eq!(trie.blocks_held(), 2);
+        // Release our refs; now the rest becomes evictable, deepest first.
+        pool.release(ch[0]);
+        pool.release(ch[1]);
+        let freed = trie.evict(&mut pool, 1);
+        assert_eq!(freed, 1, "evict honours the `need` cap");
+        assert_eq!(trie.evict(&mut pool, 8), 1);
+        assert_eq!(pool.free_blocks(), 8);
+        assert_eq!(trie.blocks_held(), 0);
+    }
+}

@@ -29,6 +29,7 @@ pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod flops;
+pub mod kvcache;
 pub mod model;
 pub mod runtime;
 pub mod tensor;

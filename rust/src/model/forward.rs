@@ -18,7 +18,8 @@
 use super::config::{Arch, ModelConfig};
 use super::ops;
 use super::weights::ModelWeights;
-use crate::tensor::Mat;
+use crate::kvcache::CacheError;
+use crate::tensor::{attention_over_cache, Mat};
 
 /// Calibration capture: hidden states observed at adapter insertion points.
 /// Rows are samples; `to_x_matrix` transposes into the `X ∈ R^{i×k}` layout
@@ -213,7 +214,7 @@ fn norm_rows(cfg: &ModelConfig, norm: &super::weights::Norm, xs: &Mat) -> Mat {
     out
 }
 
-fn norm_tok(cfg: &ModelConfig, norm: &super::weights::Norm, x: &[f32]) -> Vec<f32> {
+pub(super) fn norm_tok(cfg: &ModelConfig, norm: &super::weights::Norm, x: &[f32]) -> Vec<f32> {
     match cfg.arch {
         Arch::SwiGlu => ops::rmsnorm(x, &norm.scale, cfg.norm_eps),
         Arch::GeluNeoX => ops::layernorm(
@@ -312,11 +313,21 @@ impl KvCache {
 }
 
 /// One decode step: append `token` at position `cache.len()`, return logits.
-pub fn decode_step<B: BlockOps>(b: &B, token: u32, cache: &mut KvCache) -> Vec<f32> {
+///
+/// A sequence at the model's positional capacity yields a typed
+/// [`CacheError::CacheFull`] (not a panic): callers retire the sequence and
+/// keep serving.
+pub fn decode_step<B: BlockOps>(
+    b: &B,
+    token: u32,
+    cache: &mut KvCache,
+) -> Result<Vec<f32>, CacheError> {
     let cfg = b.config().clone();
     let w = b.weights();
     let pos = cache.len;
-    assert!(pos < cfg.max_seq, "KV cache full");
+    if pos >= cfg.max_seq {
+        return Err(CacheError::CacheFull { seq: 0, pos, capacity: cfg.max_seq });
+    }
     let mut x: Vec<f32> = w.embed.row(token as usize).to_vec();
 
     for layer in 0..cfg.n_layers {
@@ -355,7 +366,7 @@ pub fn decode_step<B: BlockOps>(b: &B, token: u32, cache: &mut KvCache) -> Vec<f
     cache.len = pos + 1;
 
     let hf = norm_tok(&cfg, &w.final_norm, &x);
-    w.lm_head.apply(&hf)
+    Ok(w.lm_head.apply(&hf))
 }
 
 /// One **batched** decode step: row `r` of `tokens`/`caches` is an
@@ -371,16 +382,48 @@ pub fn decode_step_batch<B: BlockOps>(
     b: &B,
     tokens: &[u32],
     caches: &mut [&mut KvCache],
-) -> Mat {
+) -> Result<Mat, CacheError> {
     assert_eq!(tokens.len(), caches.len(), "decode_step_batch arity");
+    let cfg = b.config().clone();
+    let positions: Vec<usize> = caches.iter().map(|c| c.len).collect();
+    for (r, &pos) in positions.iter().enumerate() {
+        if pos >= cfg.max_seq {
+            // Typed, pre-state-mutation: no cache has been written yet, so
+            // the caller can drop row `r` and retry the pass.
+            return Err(CacheError::CacheFull { seq: r, pos, capacity: cfg.max_seq });
+        }
+    }
+
+    let n_heads = cfg.n_heads;
+    let logits = decode_step_body(b, tokens, &positions, |layer, r, q, k, v| {
+        let pos = positions[r];
+        let cache = &mut *caches[r];
+        cache.k[layer].row_mut(pos).copy_from_slice(k);
+        cache.v[layer].row_mut(pos).copy_from_slice(v);
+        attention_over_cache(q, &cache.k[layer], &cache.v[layer], pos + 1, n_heads)
+    });
+    for (r, cache) in caches.iter_mut().enumerate() {
+        cache.len = positions[r] + 1;
+    }
+    Ok(logits)
+}
+
+/// Shared per-layer body of one batched decode step, generic over the KV
+/// layout: `append_attend(layer, r, q, k, v)` commits row `r`'s (already
+/// roped) K/V at its position and returns its attention output. The dense
+/// ([`decode_step_batch`]) and paged (`decode_step_paged`) paths both run
+/// exactly this code, so their logits agree **bit-for-bit** by
+/// construction — only cache addressing differs (the §2a/§2b determinism
+/// contract).
+pub(super) fn decode_step_body<B: BlockOps>(
+    b: &B,
+    tokens: &[u32],
+    positions: &[usize],
+    mut append_attend: impl FnMut(usize, usize, &[f32], &[f32], &[f32]) -> Vec<f32>,
+) -> Mat {
     let cfg = b.config().clone();
     let w = b.weights();
     let n = tokens.len();
-    let positions: Vec<usize> = caches.iter().map(|c| c.len).collect();
-    for &pos in &positions {
-        assert!(pos < cfg.max_seq, "KV cache full");
-    }
-
     let mut xs = Mat::zeros(n, cfg.d_model);
     for (r, &tok) in tokens.iter().enumerate() {
         xs.row_mut(r).copy_from_slice(w.embed.row(tok as usize));
@@ -398,16 +441,7 @@ pub fn decode_step_batch<B: BlockOps>(
             let pos = positions[r];
             ops::rope_heads(q.row_mut(r), cfg.n_heads, pos, cfg.rope_theta);
             ops::rope_heads(k.row_mut(r), cfg.n_heads, pos, cfg.rope_theta);
-            let cache = &mut *caches[r];
-            cache.k[layer].row_mut(pos).copy_from_slice(k.row(r));
-            cache.v[layer].row_mut(pos).copy_from_slice(v.row(r));
-            let a = attention_over_cache(
-                q.row(r),
-                &cache.k[layer],
-                &cache.v[layer],
-                pos + 1,
-                cfg.n_heads,
-            );
+            let a = append_attend(layer, r, q.row(r), k.row(r), v.row(r));
             attn.row_mut(r).copy_from_slice(&a);
         }
         let attn_o = b.attn_out_tok_batch(layer, &attn);
@@ -437,9 +471,6 @@ pub fn decode_step_batch<B: BlockOps>(
                 }
             }
         }
-    }
-    for (r, cache) in caches.iter_mut().enumerate() {
-        cache.len = positions[r] + 1;
     }
 
     let mut hf = Mat::zeros(n, cfg.d_model);
@@ -576,13 +607,24 @@ impl DecodeBatch {
             };
             stepping.push((s, tok));
         }
-        if stepping.is_empty() {
-            return 0;
-        }
-        let tokens: Vec<u32> = stepping.iter().map(|(_, t)| *t).collect();
-        let mut caches: Vec<&mut KvCache> =
-            stepping.iter_mut().map(|(s, _)| &mut s.cache).collect();
-        let logits = decode_step_batch(b, &tokens, &mut caches);
+        let logits = loop {
+            if stepping.is_empty() {
+                return 0;
+            }
+            let tokens: Vec<u32> = stepping.iter().map(|(_, t)| *t).collect();
+            let mut caches: Vec<&mut KvCache> =
+                stepping.iter_mut().map(|(s, _)| &mut s.cache).collect();
+            match decode_step_batch(b, &tokens, &mut caches) {
+                Ok(l) => break l,
+                Err(e) => {
+                    // Unreachable given the pre-guards above, but the
+                    // contract stands: a full sequence retires; the rest of
+                    // the pass proceeds.
+                    let r = e.seq().min(stepping.len() - 1);
+                    stepping.remove(r).0.done = true;
+                }
+            }
+        };
         for (r, (s, _)) in stepping.iter_mut().enumerate() {
             s.last_logits = logits.row(r).to_vec();
         }
@@ -603,26 +645,6 @@ impl DecodeBatch {
         }
         out
     }
-}
-
-/// Attention for the decode path against the first `ctx` cache rows.
-fn attention_over_cache(q: &[f32], k: &Mat, v: &Mat, ctx: usize, n_heads: usize) -> Vec<f32> {
-    let d = q.len();
-    let hd = d / n_heads;
-    let scale = 1.0 / (hd as f32).sqrt();
-    let mut out = vec![0.0f32; d];
-    let mut scores = vec![0.0f32; ctx];
-    for h in 0..n_heads {
-        let off = h * hd;
-        for (ki, s) in scores.iter_mut().enumerate() {
-            *s = crate::tensor::dot(&q[off..off + hd], &k.row(ki)[off..off + hd]) * scale;
-        }
-        ops::softmax(&mut scores);
-        for (ki, &sc) in scores.iter().enumerate() {
-            crate::tensor::axpy(sc, &v.row(ki)[off..off + hd], &mut out[off..off + hd]);
-        }
-    }
-    out
 }
 
 #[cfg(test)]
@@ -658,7 +680,7 @@ mod tests {
         let seq_logits = forward_seq(&m, &tokens, None);
         let mut cache = KvCache::new(&m.cfg);
         for (i, &t) in tokens.iter().enumerate() {
-            let logits = decode_step(&m, t, &mut cache);
+            let logits = decode_step(&m, t, &mut cache).unwrap();
             crate::util::prop::close_slices(&logits, seq_logits.row(i), 2e-4, 2e-4)
                 .unwrap_or_else(|e| panic!("pos {i}: {e}"));
         }
@@ -671,7 +693,7 @@ mod tests {
         let seq_logits = forward_seq(&m, &tokens, None);
         let mut cache = KvCache::new(&m.cfg);
         for (i, &t) in tokens.iter().enumerate() {
-            let logits = decode_step(&m, t, &mut cache);
+            let logits = decode_step(&m, t, &mut cache).unwrap();
             crate::util::prop::close_slices(&logits, seq_logits.row(i), 2e-4, 2e-4)
                 .unwrap_or_else(|e| panic!("pos {i}: {e}"));
         }
@@ -688,7 +710,7 @@ mod tests {
         let mut seq_logits: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n];
         for t in 0..len {
             for (i, s) in streams.iter().enumerate() {
-                seq_logits[i].push(decode_step(m, s[t], &mut seq_caches[i]));
+                seq_logits[i].push(decode_step(m, s[t], &mut seq_caches[i]).unwrap());
             }
         }
         // Batched.
@@ -696,7 +718,7 @@ mod tests {
         for t in 0..len {
             let tokens: Vec<u32> = streams.iter().map(|s| s[t]).collect();
             let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
-            let logits = decode_step_batch(m, &tokens, &mut refs);
+            let logits = decode_step_batch(m, &tokens, &mut refs).unwrap();
             for i in 0..n {
                 crate::util::prop::close_slices(logits.row(i), &seq_logits[i][t], 1e-4, 1e-4)
                     .unwrap_or_else(|e| panic!("seq {i} step {t}: {e}"));
@@ -734,10 +756,10 @@ mod tests {
         let mut want_a = Vec::new();
         let mut want_b = Vec::new();
         for &t in &a {
-            want_a.push(decode_step(&m, t, &mut ca));
+            want_a.push(decode_step(&m, t, &mut ca).unwrap());
         }
         for &t in &b_toks {
-            want_b.push(decode_step(&m, t, &mut cb));
+            want_b.push(decode_step(&m, t, &mut cb).unwrap());
         }
         // Batched with b joining three steps late (ragged join).
         let mut ca2 = KvCache::new(&m.cfg);
@@ -745,12 +767,12 @@ mod tests {
         for t in 0..a.len() {
             if t < 3 || t >= 3 + b_toks.len() {
                 let mut refs = vec![&mut ca2];
-                let logits = decode_step_batch(&m, &[a[t]], &mut refs);
+                let logits = decode_step_batch(&m, &[a[t]], &mut refs).unwrap();
                 crate::util::prop::close_slices(logits.row(0), &want_a[t], 1e-4, 1e-4)
                     .unwrap_or_else(|e| panic!("a step {t}: {e}"));
             } else {
                 let mut refs = vec![&mut ca2, &mut cb2];
-                let logits = decode_step_batch(&m, &[a[t], b_toks[t - 3]], &mut refs);
+                let logits = decode_step_batch(&m, &[a[t], b_toks[t - 3]], &mut refs).unwrap();
                 crate::util::prop::close_slices(logits.row(0), &want_a[t], 1e-4, 1e-4)
                     .unwrap_or_else(|e| panic!("a step {t}: {e}"));
                 crate::util::prop::close_slices(logits.row(1), &want_b[t - 3], 1e-4, 1e-4)
@@ -803,7 +825,7 @@ mod tests {
         let mut logits: Vec<f32> = Vec::new();
         for &t in &prompt {
             let mut refs = vec![&mut cache];
-            logits = decode_step_batch(&m, &[t], &mut refs).row(0).to_vec();
+            logits = decode_step_batch(&m, &[t], &mut refs).unwrap().row(0).to_vec();
         }
         let mut want = Vec::new();
         for g in 0..n_gen {
@@ -811,7 +833,7 @@ mod tests {
             want.push(next);
             if g + 1 < n_gen {
                 let mut refs = vec![&mut cache];
-                logits = decode_step_batch(&m, &[next], &mut refs).row(0).to_vec();
+                logits = decode_step_batch(&m, &[next], &mut refs).unwrap().row(0).to_vec();
             }
         }
         // Batched (capacity 1).

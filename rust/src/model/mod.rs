@@ -5,6 +5,7 @@
 pub mod config;
 pub mod forward;
 pub mod ops;
+pub mod paged;
 pub mod weights;
 
 pub use config::{Arch, ModelConfig, PythiaSize};
@@ -12,6 +13,7 @@ pub use forward::{
     decode_step, decode_step_batch, forward_seq, BlockOps, Capture, DecodeBatch, FinishedSeq,
     KvCache, Model,
 };
+pub use paged::{decode_step_paged, PagedBatchConfig, PagedDecodeBatch};
 pub use weights::{LayerWeights, Linear, ModelWeights, Norm};
 
 use std::path::PathBuf;

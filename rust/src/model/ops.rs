@@ -65,19 +65,10 @@ pub fn mlp_activate(arch: Arch, up: &mut Mat, gate: Option<&Mat>) {
     }
 }
 
-/// Numerically-stable in-place softmax.
-pub fn softmax(x: &mut [f32]) {
-    let max = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-    let mut sum = 0.0f64;
-    for v in x.iter_mut() {
-        *v = (*v - max).exp();
-        sum += *v as f64;
-    }
-    let inv = (1.0 / sum) as f32;
-    for v in x.iter_mut() {
-        *v *= inv;
-    }
-}
+/// Numerically-stable in-place softmax. The implementation lives in
+/// [`crate::tensor::attention`] so the contiguous and paged decode-path
+/// attention kernels share it bit-for-bit with the sequence path.
+pub use crate::tensor::attention::softmax;
 
 /// Log-softmax value at one index (used for LM scoring without
 /// materializing the whole normalized distribution).

@@ -1,0 +1,676 @@
+//! Paged decode path: batched decoding over the block-pool KV cache
+//! (`crate::kvcache`), with shared-prefix reuse, memory-aware admission,
+//! and preemption under pool pressure.
+//!
+//! [`decode_step_paged`] computes, row for row, exactly what
+//! [`super::forward::decode_step_batch`] computes over dense caches — the
+//! only change is KV row *addressing* (block chains into the shared pool,
+//! attended by [`crate::tensor::attention_over_paged`]), so its logits are
+//! bit-for-bit identical to the contiguous path and the dense cache stays
+//! the test oracle (DESIGN.md §2b).
+//!
+//! [`PagedDecodeBatch`] is the paged sibling of [`super::DecodeBatch`]:
+//! same join/step/retire schedule over a virtual token stream
+//! `prompt ++ generated`, plus
+//!
+//! * **prefix reuse** — joins adopt the longest full-block prompt prefix
+//!   from the [`PrefixTrie`] and skip prefill for those tokens entirely;
+//!   completed prefills publish their full prompt blocks back to the trie;
+//! * **memory-aware admission** — a join is admitted against the pool's
+//!   free-block budget (after trying trie eviction), not just a slot count;
+//! * **preemption** — when an append finds the pool exhausted mid-flight,
+//!   trie eviction is tried first, then the youngest other live sequence
+//!   releases its blocks and requeues (its refeed re-runs prefill, usually
+//!   hitting the trie). Greedy decoding is deterministic, so preemption
+//!   never changes a sequence's text.
+
+use std::collections::VecDeque;
+
+use super::config::ModelConfig;
+use super::forward::{decode_step_body, BlockOps, FinishedSeq};
+use crate::kvcache::{BlockPool, CacheError, PagedKvCache, PrefixTrie};
+use crate::tensor::{attention_over_paged, Mat};
+
+/// One batched decode step over paged caches: row `r` of `tokens`/`seqs`
+/// appends at its own position `seqs[r].len()`. Returns logits `[N, vocab]`
+/// or a typed [`CacheError`] (positional capacity, or pool exhaustion from
+/// the up-front block allocation) *before* any KV row is written.
+pub fn decode_step_paged<B: BlockOps>(
+    b: &B,
+    tokens: &[u32],
+    pool: &mut BlockPool,
+    seqs: &mut [&mut PagedKvCache],
+) -> Result<Mat, CacheError> {
+    assert_eq!(tokens.len(), seqs.len(), "decode_step_paged arity");
+    let cfg = b.config().clone();
+    let positions: Vec<usize> = seqs.iter().map(|s| s.len()).collect();
+    for (r, &pos) in positions.iter().enumerate() {
+        if pos >= cfg.max_seq {
+            return Err(CacheError::CacheFull { seq: r, pos, capacity: cfg.max_seq });
+        }
+    }
+    // Make every append target writable up front (block alloc + COW), so a
+    // pool failure surfaces before any state is mutated. Idempotent for
+    // callers (the batcher) that already prepared.
+    for (r, s) in seqs.iter_mut().enumerate() {
+        s.prepare_append(pool).map_err(|e| e.with_seq(r))?;
+    }
+
+    let bs = pool.block_size();
+    let n_heads = cfg.n_heads;
+    // Same per-layer body as the dense path — only the KV addressing in
+    // this closure differs, which is what makes the paged logits
+    // bit-for-bit identical to the contiguous oracle by construction.
+    let logits = decode_step_body(b, tokens, &positions, |layer, r, q, k, v| {
+        seqs[r].write_kv(pool, layer, k, v);
+        attention_over_paged(
+            q,
+            pool.layer_k(layer),
+            pool.layer_v(layer),
+            seqs[r].chain(),
+            bs,
+            positions[r] + 1,
+            n_heads,
+        )
+    });
+    for s in seqs.iter_mut() {
+        s.advance();
+    }
+    Ok(logits)
+}
+
+/// Sizing of a [`PagedDecodeBatch`].
+#[derive(Clone, Copy, Debug)]
+pub struct PagedBatchConfig {
+    /// Tokens per KV block.
+    pub block_size: usize,
+    /// Total pool blocks; `0` → dense-equivalent memory
+    /// (`slots × ⌈max_seq / block_size⌉`).
+    pub n_blocks: usize,
+    /// Maximum in-flight sequences per engine pass.
+    pub slots: usize,
+}
+
+impl Default for PagedBatchConfig {
+    fn default() -> Self {
+        Self { block_size: 16, n_blocks: 0, slots: 8 }
+    }
+}
+
+/// State of one in-flight sequence. `fed` indexes the virtual token stream
+/// `prompt ++ generated`, so a preempted sequence simply resets `fed` and
+/// re-runs prefill over everything it had already committed to.
+struct PagedSeqState {
+    id: u64,
+    prompt: Vec<u32>,
+    fed: usize,
+    n_gen: usize,
+    generated: Vec<u32>,
+    last_logits: Vec<f32>,
+    cache: PagedKvCache,
+    done: bool,
+    /// Prompt's full blocks have been published to the trie.
+    prompt_in_trie: bool,
+}
+
+impl PagedSeqState {
+    fn stream_len(&self) -> usize {
+        self.prompt.len() + self.generated.len()
+    }
+
+    fn stream_tok(&self, i: usize) -> u32 {
+        if i < self.prompt.len() {
+            self.prompt[i]
+        } else {
+            self.generated[i - self.prompt.len()]
+        }
+    }
+}
+
+/// Iteration-level batched greedy decoder over a shared [`BlockPool`] —
+/// the paged replacement for [`super::DecodeBatch`] (see module docs).
+pub struct PagedDecodeBatch {
+    cfg: ModelConfig,
+    pool: BlockPool,
+    trie: PrefixTrie,
+    slots: Vec<Option<PagedSeqState>>,
+    /// Preempted sequences awaiting re-admission (front = oldest).
+    preempted: VecDeque<PagedSeqState>,
+    next_id: u64,
+    /// Tokens fed across all steps (batch-occupancy accounting).
+    pub tokens_processed: u64,
+    /// Engine passes executed.
+    pub steps: u64,
+    /// Prompt tokens whose prefill was skipped via trie hits.
+    pub prefix_hit_tokens: u64,
+    /// Sequences preempted (blocks released, requeued) under pool pressure.
+    pub preemptions: u64,
+}
+
+impl PagedDecodeBatch {
+    pub fn new(cfg: &ModelConfig, pc: PagedBatchConfig) -> Self {
+        let slots = pc.slots.max(1);
+        let block_size = pc.block_size.max(1);
+        let dense_equiv = slots * cfg.max_seq.div_ceil(block_size);
+        let n_blocks = if pc.n_blocks == 0 { dense_equiv } else { pc.n_blocks };
+        Self {
+            cfg: cfg.clone(),
+            pool: BlockPool::new(cfg, block_size, n_blocks),
+            trie: PrefixTrie::new(),
+            slots: (0..slots).map(|_| None).collect(),
+            preempted: VecDeque::new(),
+            next_id: 0,
+            tokens_processed: 0,
+            steps: 0,
+            prefix_hit_tokens: 0,
+            preemptions: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Sequences currently admitted or awaiting re-admission (a preempted
+    /// sequence still owes its caller a result).
+    pub fn active(&self) -> usize {
+        self.slots.iter().flatten().count() + self.preempted.len()
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.slots.iter().flatten().any(|s| !s.done) || !self.preempted.is_empty()
+    }
+
+    pub fn pool(&self) -> &BlockPool {
+        &self.pool
+    }
+
+    /// Pool snapshot for the serving metrics:
+    /// `(blocks_in_use, blocks_peak, prefix_hit_tokens, preemptions)`.
+    pub fn kv_stats(&self) -> (usize, usize, u64, u64) {
+        (
+            self.pool.blocks_in_use(),
+            self.pool.blocks_peak(),
+            self.prefix_hit_tokens,
+            self.preemptions,
+        )
+    }
+
+    fn live_count(&self) -> usize {
+        self.slots.iter().flatten().filter(|s| !s.done).count()
+    }
+
+    /// Admit `st` against the free-block budget: adopt the longest shared
+    /// prompt prefix from the trie, then require the sequence's whole
+    /// remaining run to fit in free blocks (after trying trie eviction).
+    /// `force` overrides the budget when nothing else is in flight, so one
+    /// sequence always makes progress.
+    fn admit(&mut self, st: &mut PagedSeqState, force: bool) -> bool {
+        let bs = self.pool.block_size();
+        // At least one stream token must remain to feed (its logits seed
+        // generation), and only prompt tokens live in the trie.
+        let reusable = st.stream_len().saturating_sub(1).min(st.prompt.len());
+        let chain = self.trie.lookup(&st.prompt, reusable / bs, &mut self.pool);
+        let matched = chain.len() * bs;
+        // Optimistic (vLLM-style) budget: the stream already committed plus
+        // one generated token must fit *now*; later decode growth is served
+        // lazily and handled by eviction/preemption when the pool runs dry.
+        let total = (st.stream_len() + 1).min(self.cfg.max_seq);
+        let needed = self.pool.blocks_for(total).saturating_sub(chain.len());
+        if self.pool.free_blocks() < needed {
+            let short = needed - self.pool.free_blocks();
+            self.trie.evict(&mut self.pool, short);
+        }
+        if self.pool.free_blocks() < needed && !force {
+            for &b in &chain {
+                self.pool.release(b);
+            }
+            return false;
+        }
+        self.prefix_hit_tokens += matched as u64;
+        st.cache = PagedKvCache::from_shared_prefix(chain, matched, bs);
+        st.fed = matched;
+        true
+    }
+
+    /// Admit a sequence; `None` when every slot is occupied **or** the
+    /// free-block budget refuses the join (retry after steps retire or
+    /// preemption frees blocks).
+    pub fn try_join(&mut self, prompt: Vec<u32>, n_gen: usize) -> Option<u64> {
+        let slot_idx = self.slots.iter().position(|s| s.is_none())?;
+        let done = prompt.is_empty();
+        let mut st = PagedSeqState {
+            id: 0,
+            prompt,
+            fed: 0,
+            n_gen,
+            generated: Vec::new(),
+            last_logits: Vec::new(),
+            cache: PagedKvCache::new(),
+            done,
+            prompt_in_trie: false,
+        };
+        if !done {
+            let force = self.live_count() == 0 && self.preempted.is_empty();
+            if !self.admit(&mut st, force) {
+                return None;
+            }
+        }
+        st.id = self.next_id;
+        self.next_id += 1;
+        let id = st.id;
+        self.slots[slot_idx] = Some(st);
+        Some(id)
+    }
+
+    fn finish(pool: &mut BlockPool, s: &mut PagedSeqState) {
+        s.done = true;
+        s.cache.release(pool);
+    }
+
+    /// Youngest live sequence other than slot `except` (preemption victim).
+    fn youngest_other_live(&self, except: usize) -> Option<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| *i != except && s.as_ref().map(|s| !s.done).unwrap_or(false))
+            .max_by_key(|(_, s)| s.as_ref().map(|s| s.id).unwrap_or(0))
+            .map(|(i, _)| i)
+    }
+
+    /// One engine pass; returns how many sequences advanced. Handles
+    /// re-admission of preempted sequences, per-sequence block preparation
+    /// with eviction/preemption under pool pressure, the batched paged
+    /// forward, and trie publication of completed prefills.
+    pub fn step<B: BlockOps>(&mut self, b: &B) -> usize {
+        let max_seq = self.cfg.max_seq;
+        let bs = self.pool.block_size();
+
+        // 1. Re-admit preempted sequences into free slots, oldest first.
+        while let Some(free_idx) = self.slots.iter().position(|s| s.is_none()) {
+            let Some(mut st) = self.preempted.pop_front() else { break };
+            let force = self.live_count() == 0;
+            if self.admit(&mut st, force) {
+                self.slots[free_idx] = Some(st);
+            } else {
+                self.preempted.push_front(st);
+                break;
+            }
+        }
+
+        // 2. Token selection over the virtual stream (same schedule as the
+        // dense DecodeBatch; `fed` resets on preemption).
+        let mut stepping: Vec<usize> = Vec::new();
+        let mut tokens: Vec<u32> = Vec::new();
+        for idx in 0..self.slots.len() {
+            let Some(s) = self.slots[idx].as_mut() else { continue };
+            if s.done {
+                continue;
+            }
+            if s.cache.len() >= max_seq {
+                // Over-long prompt: truncate prefill rather than overflow.
+                Self::finish(&mut self.pool, s);
+                continue;
+            }
+            let tok = if s.fed < s.stream_len() {
+                let t = s.stream_tok(s.fed);
+                s.fed += 1;
+                t
+            } else if s.generated.len() >= s.n_gen {
+                Self::finish(&mut self.pool, s);
+                continue;
+            } else if s.cache.len() + 1 >= max_seq {
+                Self::finish(&mut self.pool, s);
+                continue;
+            } else {
+                let next = crate::eval::argmax(&s.last_logits) as u32;
+                s.generated.push(next);
+                if s.generated.len() >= s.n_gen {
+                    // Final token: recorded, needs no engine pass.
+                    Self::finish(&mut self.pool, s);
+                    continue;
+                }
+                s.fed += 1;
+                next
+            };
+            stepping.push(idx);
+            tokens.push(tok);
+        }
+
+        // 3. Prepare every append (alloc/COW). On exhaustion: evict
+        // trie-only blocks, else preempt the youngest other live sequence;
+        // a sequence the pool cannot hold even alone is truncated.
+        let mut i = 0;
+        while i < stepping.len() {
+            let idx = stepping[i];
+            let res = self.slots[idx]
+                .as_mut()
+                .expect("stepping slot occupied")
+                .cache
+                .prepare_append(&mut self.pool);
+            match res {
+                Ok(()) => i += 1,
+                Err(_) => {
+                    if self.trie.evict(&mut self.pool, 1) > 0 {
+                        continue; // retry this sequence
+                    }
+                    match self.youngest_other_live(idx) {
+                        Some(v) => {
+                            let mut st = self.slots[v].take().expect("victim occupied");
+                            st.cache.release(&mut self.pool);
+                            st.fed = 0;
+                            st.prompt_in_trie = false;
+                            self.preemptions += 1;
+                            self.preempted.push_back(st);
+                            if let Some(p) = stepping.iter().position(|&x| x == v) {
+                                if p < i {
+                                    i -= 1;
+                                }
+                                stepping.remove(p);
+                                tokens.remove(p);
+                            }
+                        }
+                        None => {
+                            let s = self.slots[idx].as_mut().expect("stepping slot occupied");
+                            Self::finish(&mut self.pool, s);
+                            stepping.remove(i);
+                            tokens.remove(i);
+                        }
+                    }
+                }
+            }
+        }
+
+        // 4. Batched paged forward. CacheErrors are unreachable after the
+        // guards above, but the contract stands: the offending sequence
+        // retires; the pass retries with the rest.
+        let logits = loop {
+            if stepping.is_empty() {
+                return 0;
+            }
+            let res = {
+                let mut seq_refs: Vec<&mut PagedKvCache> = Vec::with_capacity(stepping.len());
+                let mut want = stepping.iter().peekable();
+                for (idx, slot) in self.slots.iter_mut().enumerate() {
+                    if want.peek() == Some(&&idx) {
+                        want.next();
+                        seq_refs.push(&mut slot.as_mut().expect("stepping slot occupied").cache);
+                    }
+                }
+                decode_step_paged(b, &tokens, &mut self.pool, &mut seq_refs)
+            };
+            match res {
+                Ok(l) => break l,
+                Err(e) => {
+                    let p = e.seq().min(stepping.len() - 1);
+                    let idx = stepping.remove(p);
+                    tokens.remove(p);
+                    let s = self.slots[idx].as_mut().expect("stepping slot occupied");
+                    Self::finish(&mut self.pool, s);
+                }
+            }
+        };
+
+        // 5. Record logits; publish completed prefills' full prompt blocks.
+        for (r, &idx) in stepping.iter().enumerate() {
+            let s = self.slots[idx].as_mut().expect("stepping slot occupied");
+            s.last_logits = logits.row(r).to_vec();
+            if !s.prompt_in_trie && s.cache.len() >= s.prompt.len() {
+                let n_full = s.prompt.len() / bs;
+                if n_full > 0 {
+                    self.trie.insert(&s.prompt, &s.cache.chain()[..n_full], &mut self.pool);
+                }
+                s.prompt_in_trie = true;
+            }
+        }
+        let n = stepping.len();
+        self.steps += 1;
+        self.tokens_processed += n as u64;
+        n
+    }
+
+    /// Remove finished sequences, freeing their slots (their blocks were
+    /// already released at finish time).
+    pub fn retire_finished(&mut self) -> Vec<FinishedSeq> {
+        self.retire_finished_owned(|_| true)
+    }
+
+    /// Like [`PagedDecodeBatch::retire_finished`], but only for sequences
+    /// whose id satisfies `owned`. An engine-persistent batch can host
+    /// sequences admitted by several sessions; each session retires only
+    /// its own, leaving the rest in their slots for their owners.
+    pub fn retire_finished_owned(&mut self, owned: impl Fn(u64) -> bool) -> Vec<FinishedSeq> {
+        let mut out = Vec::new();
+        for slot in &mut self.slots {
+            if slot.as_ref().map(|s| s.done && owned(s.id)).unwrap_or(false) {
+                let s = slot.take().expect("checked above");
+                out.push(FinishedSeq { id: s.id, prompt: s.prompt, generated: s.generated });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::Arch;
+    use crate::model::forward::{decode_step, decode_step_batch, KvCache, Model};
+    use crate::model::weights::ModelWeights;
+
+    fn tiny_cfg(arch: Arch) -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            arch,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_hidden: 32,
+            vocab: 64,
+            max_seq: 32,
+            rope_theta: 10_000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    fn tiny_model(arch: Arch) -> Model {
+        let cfg = tiny_cfg(arch);
+        let w = ModelWeights::random_init(&cfg, 11);
+        Model::new(cfg, w).unwrap()
+    }
+
+    #[test]
+    fn paged_step_bitwise_matches_dense_batch() {
+        for arch in [Arch::SwiGlu, Arch::GeluNeoX] {
+            let m = tiny_model(arch);
+            for &bs in &[1usize, 7, 16] {
+                let mut pool = BlockPool::new(&m.cfg, bs, 64);
+                let streams: Vec<Vec<u32>> =
+                    vec![vec![1, 5, 9, 30, 2, 17], vec![8, 8, 1, 0, 63, 2]];
+                let mut dense: Vec<KvCache> =
+                    streams.iter().map(|_| KvCache::new(&m.cfg)).collect();
+                let mut paged: Vec<PagedKvCache> =
+                    streams.iter().map(|_| PagedKvCache::new()).collect();
+                for t in 0..streams[0].len() {
+                    let toks: Vec<u32> = streams.iter().map(|s| s[t]).collect();
+                    let mut drefs: Vec<&mut KvCache> = dense.iter_mut().collect();
+                    let want = decode_step_batch(&m, &toks, &mut drefs).unwrap();
+                    let mut prefs: Vec<&mut PagedKvCache> = paged.iter_mut().collect();
+                    let got = decode_step_paged(&m, &toks, &mut pool, &mut prefs).unwrap();
+                    assert_eq!(got.data, want.data, "arch {arch:?} bs {bs} step {t}");
+                }
+                for mut p in paged {
+                    p.release(&mut pool);
+                }
+                assert_eq!(pool.free_blocks(), 64);
+            }
+        }
+    }
+
+    #[test]
+    fn paged_batch_reproduces_dense_batch_texts() {
+        let m = tiny_model(Arch::SwiGlu);
+        let prompts: Vec<(Vec<u32>, usize)> =
+            vec![(vec![1, 2, 3], 4), (vec![4, 5], 3), (vec![9, 9, 9, 9], 2)];
+        // Dense oracle.
+        let mut dense = super::super::forward::DecodeBatch::new(&m.cfg, 3);
+        for (p, n) in &prompts {
+            dense.try_join(p.clone(), *n).unwrap();
+        }
+        let mut want = Vec::new();
+        while dense.has_work() {
+            dense.step(&m);
+            want.extend(dense.retire_finished());
+        }
+        want.extend(dense.retire_finished());
+        want.sort_by_key(|f| f.prompt.clone());
+        // Paged, small blocks.
+        let mut paged = PagedDecodeBatch::new(
+            &m.cfg,
+            PagedBatchConfig { block_size: 2, n_blocks: 0, slots: 3 },
+        );
+        for (p, n) in &prompts {
+            paged.try_join(p.clone(), *n).unwrap();
+        }
+        let mut got = Vec::new();
+        let mut guard = 0;
+        while paged.has_work() {
+            paged.step(&m);
+            got.extend(paged.retire_finished());
+            guard += 1;
+            assert!(guard < 128, "paged batch failed to converge");
+        }
+        got.extend(paged.retire_finished());
+        got.sort_by_key(|f| f.prompt.clone());
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.prompt, w.prompt);
+            assert_eq!(g.generated, w.generated, "paged text diverged from dense oracle");
+        }
+        // All blocks returned (trie may retain prompt blocks).
+        assert_eq!(
+            paged.pool.blocks_in_use(),
+            paged.trie.blocks_held(),
+            "retired sequences must only leave trie-held blocks"
+        );
+    }
+
+    #[test]
+    fn shared_prefix_skips_prefill_and_matches_solo_decode() {
+        let m = tiny_model(Arch::SwiGlu);
+        let prefix: Vec<u32> = (0..8).map(|i| (i * 3 + 1) % 60).collect();
+        let mk = |tail: &[u32]| {
+            let mut p = prefix.clone();
+            p.extend_from_slice(tail);
+            p
+        };
+        let mut paged = PagedDecodeBatch::new(
+            &m.cfg,
+            PagedBatchConfig { block_size: 4, n_blocks: 0, slots: 2 },
+        );
+        // First request warms the trie.
+        paged.try_join(mk(&[7]), 3).unwrap();
+        while paged.has_work() {
+            paged.step(&m);
+        }
+        let first = paged.retire_finished();
+        assert_eq!(first.len(), 1);
+        assert_eq!(paged.prefix_hit_tokens, 0, "cold trie cannot hit");
+        assert!(paged.trie.blocks_held() > 0, "completed prefill must publish blocks");
+
+        // Second request with the same 8-token prefix: 2 full blocks reused.
+        paged.try_join(mk(&[50, 51]), 3).unwrap();
+        while paged.has_work() {
+            paged.step(&m);
+        }
+        let second = paged.retire_finished();
+        assert_eq!(paged.prefix_hit_tokens, 8, "2 full blocks of 4 must be reused");
+        // Reused-prefix decode must equal an isolated sequential decode.
+        let mut cache = KvCache::new(&m.cfg);
+        let mut logits = Vec::new();
+        for &t in &mk(&[50, 51]) {
+            logits = decode_step(&m, t, &mut cache).unwrap();
+        }
+        let mut want = Vec::new();
+        for _ in 0..3 {
+            let next = crate::eval::argmax(&logits) as u32;
+            want.push(next);
+            logits = decode_step(&m, next, &mut cache).unwrap();
+        }
+        assert_eq!(second[0].generated, want, "prefix reuse changed the decode");
+    }
+
+    #[test]
+    fn preemption_under_tiny_pool_still_completes_correctly() {
+        let m = tiny_model(Arch::GeluNeoX);
+        // Pool fits ~1.5 sequences: joins are budget-refused or preempted,
+        // but everything must finish with oracle-identical text.
+        let prompts: Vec<(Vec<u32>, usize)> =
+            vec![(vec![1, 2, 3, 4], 4), (vec![5, 6, 7], 4), (vec![8, 9], 4)];
+        let mut oracle_texts = Vec::new();
+        for (p, n) in &prompts {
+            let mut cache = KvCache::new(&m.cfg);
+            let mut logits = Vec::new();
+            for &t in p {
+                logits = decode_step(&m, t, &mut cache).unwrap();
+            }
+            let mut gen = Vec::new();
+            for _ in 0..*n {
+                let next = crate::eval::argmax(&logits) as u32;
+                gen.push(next);
+                logits = decode_step(&m, next, &mut cache).unwrap();
+            }
+            oracle_texts.push(gen);
+        }
+        let mut paged = PagedDecodeBatch::new(
+            &m.cfg,
+            PagedBatchConfig { block_size: 2, n_blocks: 6, slots: 3 },
+        );
+        let mut joined: Vec<Option<u64>> = prompts.iter().map(|_| None).collect();
+        let mut finished: Vec<FinishedSeq> = Vec::new();
+        let mut guard = 0;
+        loop {
+            for (i, (p, n)) in prompts.iter().enumerate() {
+                if joined[i].is_none() {
+                    joined[i] = paged.try_join(p.clone(), *n);
+                }
+            }
+            if !paged.has_work() && joined.iter().all(|j| j.is_some()) {
+                break;
+            }
+            paged.step(&m);
+            finished.extend(paged.retire_finished());
+            guard += 1;
+            assert!(guard < 512, "tiny-pool schedule failed to converge");
+        }
+        finished.extend(paged.retire_finished());
+        assert_eq!(finished.len(), 3);
+        for (i, (p, _)) in prompts.iter().enumerate() {
+            let f = finished.iter().find(|f| f.prompt == *p).unwrap();
+            assert_eq!(f.generated, oracle_texts[i], "prompt {i} text diverged");
+        }
+        assert!(
+            paged.preemptions > 0,
+            "a 6-block pool under ~11 blocks of demand must preempt"
+        );
+    }
+
+    #[test]
+    fn empty_prompt_and_zero_gen_are_degenerate_but_safe() {
+        let m = tiny_model(Arch::SwiGlu);
+        let mut paged = PagedDecodeBatch::new(&m.cfg, PagedBatchConfig::default());
+        paged.try_join(vec![], 4).unwrap();
+        paged.try_join(vec![1, 2], 0).unwrap();
+        let long: Vec<u32> = (0..m.cfg.max_seq as u32 + 8).map(|i| i % 60).collect();
+        paged.try_join(long, 2).unwrap();
+        let mut guard = 0;
+        while paged.has_work() {
+            paged.step(&m);
+            paged.retire_finished();
+            guard += 1;
+            assert!(guard < 2 * m.cfg.max_seq + 16, "did not converge");
+        }
+        paged.retire_finished();
+        assert_eq!(paged.active(), 0);
+    }
+}

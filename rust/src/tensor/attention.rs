@@ -1,0 +1,163 @@
+//! Decode-path attention kernels over contiguous and **paged** KV storage.
+//!
+//! Both kernels compute one query token's causal attention against `ctx`
+//! cached key/value rows. [`attention_over_cache`] reads a contiguous
+//! `[max_seq, d]` cache matrix; [`attention_over_paged`] reads the same
+//! logical rows through a block chain into a shared [`BlockPool`]-style
+//! buffer (fixed-size token blocks, possibly shared between sequences).
+//!
+//! **Determinism contract (DESIGN.md §2a/§2b).** Per head, both kernels
+//! score keys in ascending position order, share one [`softmax`], and
+//! accumulate the value rows in ascending position order via
+//! [`crate::axpy`]. The paged kernel only changes *row addressing*
+//! (`row = chain[pos / bs] * bs + pos % bs`), never operation order, so its
+//! output is bit-for-bit identical to the contiguous kernel on the same
+//! logical rows — the contiguous cache stays the test oracle for every
+//! paged-decode path.
+
+use super::Mat;
+
+/// Numerically-stable in-place softmax (max-subtracted, f64 sum).
+///
+/// Lives in `tensor` so the contiguous and paged attention kernels share one
+/// implementation; `model::ops::softmax` re-exports it.
+pub fn softmax(x: &mut [f32]) {
+    let max = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f64;
+    for v in x.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v as f64;
+    }
+    let inv = (1.0 / sum) as f32;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Attention for the decode path against the first `ctx` rows of a
+/// contiguous cache: `k`/`v` are `[max_seq, d]`, `q` is `[d]`, heads are
+/// interleaved along the feature dimension.
+pub fn attention_over_cache(q: &[f32], k: &Mat, v: &Mat, ctx: usize, n_heads: usize) -> Vec<f32> {
+    let d = q.len();
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = vec![0.0f32; d];
+    let mut scores = vec![0.0f32; ctx];
+    for h in 0..n_heads {
+        let off = h * hd;
+        for (ki, s) in scores.iter_mut().enumerate() {
+            *s = super::dot(&q[off..off + hd], &k.row(ki)[off..off + hd]) * scale;
+        }
+        softmax(&mut scores);
+        for (ki, &sc) in scores.iter().enumerate() {
+            super::axpy(sc, &v.row(ki)[off..off + hd], &mut out[off..off + hd]);
+        }
+    }
+    out
+}
+
+/// Block-strided sibling of [`attention_over_cache`]: logical position `p`
+/// (for `p < ctx`) lives at row `chain[p / block_size] * block_size +
+/// p % block_size` of the pool-wide `k`/`v` buffers. The per-block inner
+/// loops walk physically contiguous rows, so the access pattern streams one
+/// block at a time; scoring and value accumulation stay in ascending
+/// logical-position order (see the module determinism contract).
+pub fn attention_over_paged(
+    q: &[f32],
+    k: &Mat,
+    v: &Mat,
+    chain: &[usize],
+    block_size: usize,
+    ctx: usize,
+    n_heads: usize,
+) -> Vec<f32> {
+    debug_assert!(block_size > 0);
+    debug_assert!(
+        chain.len() * block_size >= ctx,
+        "chain covers {} rows, ctx {ctx}",
+        chain.len() * block_size
+    );
+    let d = q.len();
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = vec![0.0f32; d];
+    let mut scores = vec![0.0f32; ctx];
+    for h in 0..n_heads {
+        let off = h * hd;
+        let mut pos = 0usize;
+        for &b in chain {
+            if pos >= ctx {
+                break;
+            }
+            let take = block_size.min(ctx - pos);
+            for slot in 0..take {
+                let row = k.row(b * block_size + slot);
+                scores[pos + slot] = super::dot(&q[off..off + hd], &row[off..off + hd]) * scale;
+            }
+            pos += take;
+        }
+        softmax(&mut scores);
+        let mut pos = 0usize;
+        for &b in chain {
+            if pos >= ctx {
+                break;
+            }
+            let take = block_size.min(ctx - pos);
+            for slot in 0..take {
+                let row = v.row(b * block_size + slot);
+                super::axpy(scores[pos + slot], &row[off..off + hd], &mut out[off..off + hd]);
+            }
+            pos += take;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    /// Scatter the first `ctx` rows of a contiguous cache into a paged
+    /// buffer under an arbitrary (non-monotone) block chain, then check the
+    /// paged kernel reproduces the contiguous kernel **bit-for-bit**.
+    #[test]
+    fn paged_matches_contiguous_bitwise_across_block_sizes() {
+        let mut rng = Xoshiro256::new(0xA77);
+        for &bs in &[1usize, 2, 7, 16] {
+            for &ctx in &[1usize, 2, 7, 16, 33] {
+                let d = 24;
+                let n_heads = 3;
+                let k = Mat::gaussian(64, d, 1.0, &mut rng);
+                let v = Mat::gaussian(64, d, 1.0, &mut rng);
+                let q: Vec<f32> = (0..d).map(|_| rng.gaussian()).collect();
+                let want = attention_over_cache(&q, &k, &v, ctx, n_heads);
+
+                // Physical blocks in reversed order (logical block 0 lives
+                // at the highest physical block), so row addressing is
+                // genuinely non-identity: chain[p/bs]*bs + p%bs.
+                let n_blocks = ctx.div_ceil(bs);
+                let chain: Vec<usize> = (0..n_blocks).rev().map(|i| i + 1).collect();
+                let pool_rows = (chain.iter().max().unwrap() + 1) * bs;
+                let mut pk = Mat::zeros(pool_rows, d);
+                let mut pv = Mat::zeros(pool_rows, d);
+                for p in 0..ctx {
+                    let row = chain[p / bs] * bs + p % bs;
+                    pk.row_mut(row).copy_from_slice(k.row(p));
+                    pv.row_mut(row).copy_from_slice(v.row(p));
+                }
+                let got = attention_over_paged(&q, &pk, &pv, &chain, bs, ctx, n_heads);
+                assert_eq!(got, want, "bs {bs} ctx {ctx}: paged != contiguous");
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut x = vec![1.0f32, 2.0, 3.0, 1000.0];
+        softmax(&mut x);
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+}

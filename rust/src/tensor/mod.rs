@@ -13,8 +13,11 @@
 //!   stored column-major as `at = Aᵀ`. Skipped rows are genuinely skipped,
 //!   which is where the latency win comes from.
 
+pub mod attention;
 pub mod gemm;
 pub mod linalg;
+
+pub use attention::{attention_over_cache, attention_over_paged};
 
 use crate::util::rng::Xoshiro256;
 

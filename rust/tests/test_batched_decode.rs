@@ -58,7 +58,7 @@ fn assert_ragged_equivalence<B: BlockOps>(
     let mut oracles: Vec<Vec<Vec<f32>>> = Vec::new();
     for (toks, _) in streams {
         let mut cache = KvCache::new(b.config());
-        oracles.push(toks.iter().map(|&t| decode_step(b, t, &mut cache)).collect());
+        oracles.push(toks.iter().map(|&t| decode_step(b, t, &mut cache).unwrap()).collect());
     }
     // Batched replay: stream i contributes tokens during steps
     // [join_i, join_i + len_i), so membership of each engine pass is ragged.
@@ -82,7 +82,7 @@ fn assert_ragged_equivalence<B: BlockOps>(
             .filter(|(i, _)| idxs.contains(i))
             .map(|(_, c)| c)
             .collect();
-        let logits = decode_step_batch(b, &tokens, &mut refs);
+        let logits = decode_step_batch(b, &tokens, &mut refs).unwrap();
         for (r, &i) in idxs.iter().enumerate() {
             let t = step - streams[i].1;
             close_slices(logits.row(r), &oracles[i][t], atol, rtol)
@@ -199,7 +199,7 @@ fn coordinator_mixed_load_through_budget_ladder() {
     let report = run_load(
         &batcher,
         Arrivals::ClosedLoop { clients: 8 },
-        Mix { generate_frac: 0.5, gen_tokens: 4 },
+        Mix { generate_frac: 0.5, gen_tokens: 4, ..Mix::default() },
         n_requests,
         0xBEEF,
     );
