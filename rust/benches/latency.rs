@@ -88,7 +88,7 @@ fn fig1b(opts: Opts, decode_len: usize) -> anyhow::Result<()> {
 /// init (latency is shape-bound), so it doubles as the CI smoke bench.
 fn serving(opts: Opts) -> anyhow::Result<()> {
     use rana::adapters::AdaptedModel;
-    use rana::coordinator::batcher::{call, Batcher, BudgetLadder, Op};
+    use rana::coordinator::batcher::{call, score_req, Batcher, BudgetPolicy};
     use rana::coordinator::engine::{Engine, NativeEngine};
 
     println!("\n== Serving: batched decode vs per-thread baseline ==");
@@ -204,6 +204,110 @@ fn serving(opts: Opts) -> anyhow::Result<()> {
         );
     }
 
+    println!("\n== Serving: one runtime-budget engine vs the per-tier engine ladder ==");
+    {
+        use rana::adapters::calibrate::{self, CalibOptions, Method};
+
+        // Fast mode trims tiers + calibration so the CI smoke stays quick.
+        let fast = opts.items <= 16;
+        let rates: Vec<f64> = if fast { vec![0.35, 0.5] } else { vec![0.2, 0.35, 0.5] };
+        let seq_len = 128usize;
+        let calib_opts = CalibOptions {
+            n_fit: opts.calib_fit.min(if fast { 384 } else { 1024 }),
+            n_eval: 96,
+            window: 96,
+            seed: 0x5E12,
+        };
+        let corpus = rana::data::generate_corpus(200_000, 1_000);
+        let t0 = Instant::now();
+        let calib = calibrate::collect(&model, &corpus.train, &calib_opts);
+        let calib_t = t0.elapsed();
+
+        // ONE runtime-budget engine: calibration once, one weight set.
+        let t0 = Instant::now();
+        let (runtime, _) =
+            calibrate::adapt_runtime(Arc::clone(&model), &calib, &rates, seq_len, 0x5E12);
+        let runtime_build = calib_t + t0.elapsed();
+        let runtime_bytes = runtime.adapter_param_bytes();
+        let runtime_engine = NativeEngine::new(Arc::new(runtime));
+
+        // The retained ladder baseline: one full adapt per tier (what the
+        // pre-redesign server did at startup — N× search time, N× weights).
+        let t0 = Instant::now();
+        let ladder: Vec<(f64, Arc<AdaptedModel>)> = rates
+            .iter()
+            .map(|&r| {
+                let (m, _) =
+                    calibrate::adapt(Arc::clone(&model), &calib, Method::Rana, r, seq_len, 0x5E12);
+                (r, Arc::new(m))
+            })
+            .collect();
+        let ladder_build = calib_t + t0.elapsed();
+        let ladder_bytes: usize = ladder.iter().map(|(_, m)| m.adapter_param_bytes()).sum();
+
+        println!(
+            "startup: runtime {runtime_build:?} vs ladder {ladder_build:?} ({:.2}x)   \
+             adapter memory: runtime {:.1} MB vs ladder {:.1} MB ({:.2}x)",
+            ladder_build.as_secs_f64() / runtime_build.as_secs_f64().max(1e-9),
+            runtime_bytes as f64 / 1e6,
+            ladder_bytes as f64 / 1e6,
+            ladder_bytes as f64 / runtime_bytes.max(1) as f64,
+        );
+        println!(
+            "{}",
+            Json::obj(vec![
+                ("bench", Json::str("serving_budget")),
+                ("kind", Json::str("startup")),
+                ("tiers", Json::Num(rates.len() as f64)),
+                ("runtime_startup_s", Json::Num(runtime_build.as_secs_f64())),
+                ("ladder_startup_s", Json::Num(ladder_build.as_secs_f64())),
+                ("runtime_adapter_mb", Json::Num(runtime_bytes as f64 / 1e6)),
+                ("ladder_adapter_mb", Json::Num(ladder_bytes as f64 / 1e6)),
+                (
+                    "memory_ratio",
+                    Json::Num(ladder_bytes as f64 / runtime_bytes.max(1) as f64),
+                ),
+            ])
+        );
+
+        let prompts: Vec<(String, usize)> = (0..4)
+            .map(|i| (format!("the dax lopa the fep number {i} ."), gen_tokens))
+            .collect();
+        for (i, &rate) in rates.iter().enumerate() {
+            runtime_engine.set_budget(rate);
+            let _ = runtime_engine.generate_batch(&prompts); // warm
+            let t0 = Instant::now();
+            let rt_out = runtime_engine.generate_batch(&prompts);
+            let rt_t = t0.elapsed();
+            let tier_engine = NativeEngine::new(Arc::clone(&ladder[i].1));
+            let _ = tier_engine.generate_batch(&prompts); // warm
+            let t0 = Instant::now();
+            let tier_out = tier_engine.generate_batch(&prompts);
+            let tier_t = t0.elapsed();
+            let toks = (prompts.len() * gen_tokens) as f64;
+            let rt_tps = toks / rt_t.as_secs_f64().max(1e-12);
+            let tier_tps = toks / tier_t.as_secs_f64().max(1e-12);
+            let matches = rt_out == tier_out;
+            println!(
+                "tier {rate:.2}: runtime {rt_tps:7.0} tok/s   static tier {tier_tps:7.0} \
+                 tok/s   texts match static: {matches}"
+            );
+            println!(
+                "{}",
+                Json::obj(vec![
+                    ("bench", Json::str("serving_budget")),
+                    ("kind", Json::str("tier")),
+                    ("rate", Json::Num(rate)),
+                    ("gen_tokens", Json::Num(gen_tokens as f64)),
+                    ("runtime_tok_s", Json::Num(rt_tps)),
+                    ("ladder_tok_s", Json::Num(tier_tps)),
+                    ("texts_match_static", Json::Bool(matches)),
+                ])
+            );
+        }
+        runtime_engine.set_budget(0.0);
+    }
+
     println!("\n== Serving-path overhead: coordinator vs raw engine ==");
     let engine: Arc<dyn Engine> = Arc::new(NativeEngine::new(Arc::clone(&adapted)));
     let texts: Vec<String> =
@@ -215,7 +319,8 @@ fn serving(opts: Opts) -> anyhow::Result<()> {
     let raw = t0.elapsed();
 
     // Through the coordinator.
-    let batcher = Arc::new(Batcher::new(BudgetLadder::single(Arc::clone(&engine)), 8));
+    let batcher =
+        Arc::new(Batcher::new(Arc::clone(&engine), BudgetPolicy::fixed(0.0), 8));
     let tx = batcher.submitter();
     let b2 = Arc::clone(&batcher);
     std::thread::spawn(move || b2.run());
@@ -225,7 +330,7 @@ fn serving(opts: Opts) -> anyhow::Result<()> {
         .map(|txt| {
             let tx = tx.clone();
             let txt = txt.clone();
-            std::thread::spawn(move || call(&tx, Op::Score { text: txt }).unwrap())
+            std::thread::spawn(move || call(&tx, score_req(&txt)).unwrap())
         })
         .collect();
     for h in handles {
@@ -241,25 +346,26 @@ fn serving(opts: Opts) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Adaptive rank-budget ladder under load (the future-work extension):
-/// same overload burst with the ladder on vs off.
+/// Adaptive rank-budget controller under load (the future-work extension):
+/// same overload burst with the runtime-budget controller on vs off — ONE
+/// engine either way; only the shared budget scalar moves.
 fn load_bench(_opts: Opts) -> anyhow::Result<()> {
     use rana::coordinator::batcher::Batcher;
     use rana::coordinator::workload::{run_load, Arrivals, Mix};
-    use rana::coordinator::{build_ladder, ServerConfig};
+    use rana::coordinator::{build_engine, ServerConfig};
 
-    println!("\n== Adaptive rank-budget ladder under load ==");
+    println!("\n== Adaptive rank-budget controller under load ==");
     for adaptive in [false, true] {
         let cfg = ServerConfig {
             model: "llama-sim".into(),
             port: 0,
             max_batch: 4,
-            target_compression: 0.0,
             adaptive_budget: adaptive,
-            engine: "native".into(),
+            calib_fit: 512,
+            ..ServerConfig::default()
         };
-        let ladder = build_ladder(&cfg)?;
-        let batcher = Arc::new(Batcher::new(ladder, cfg.max_batch));
+        let engine = build_engine(&cfg)?;
+        let batcher = Arc::new(Batcher::new(engine, cfg.policy(), cfg.max_batch));
         let b2 = Arc::clone(&batcher);
         std::thread::spawn(move || b2.run());
         let report = run_load(
@@ -269,10 +375,20 @@ fn load_bench(_opts: Opts) -> anyhow::Result<()> {
             64,
             0xF00D,
         );
-        report.print(if adaptive { "adaptive ladder ON " } else { "adaptive ladder OFF" });
+        report.print(if adaptive {
+            "adaptive controller ON "
+        } else {
+            "adaptive controller OFF"
+        });
+        use std::sync::atomic::Ordering;
+        println!(
+            "  budget_switches={} effective_rank_frac={:.3}",
+            batcher.metrics.budget_switches.load(Ordering::Relaxed),
+            batcher.metrics.effective_rank_frac_milli.load(Ordering::Relaxed) as f64 / 1000.0,
+        );
         batcher.close();
     }
-    println!("(expected: ON keeps p99 lower under overload by shifting to compressed tiers)");
+    println!("(expected: ON keeps p99 lower under overload by raising the shared budget)");
     Ok(())
 }
 

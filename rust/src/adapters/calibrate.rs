@@ -182,6 +182,36 @@ pub struct AdaptReport {
 /// Adapt `model` with `method` targeting `target_compression` of total
 /// decode FLOPs at `seq_len` (the paper's 512). Returns the adapted model
 /// and a report with per-layer reconstruction errors + achieved rates.
+/// Per-component FLOP budgets `(mlp, qkv)` for one compression tier.
+/// Shared by the static [`adapt`] and the runtime [`adapt_runtime`] so
+/// both solve identical component budgets for the same rate — the root of
+/// the tier-equivalence guarantee.
+fn component_budgets(
+    cfg: &crate::model::ModelConfig,
+    dense: &crate::flops::DecodeFlops,
+    adapt_qkv: bool,
+    target_compression: f64,
+) -> (f64, f64) {
+    let d = cfg.d_model;
+    let cut = target_compression * dense.total;
+    let (keep_mlp, keep_qkv) = if adapt_qkv {
+        let c = (cut / (dense.mlp + dense.qkv)).min(0.98);
+        (1.0 - c, 1.0 - c)
+    } else {
+        let c = (cut / dense.mlp).min(0.98);
+        (1.0 - c, 1.0)
+    };
+    let dense_mlp_flops = match cfg.arch {
+        crate::model::Arch::SwiGlu => {
+            crate::flops::MlpFlops::dense_swiglu(d, cfg.d_hidden).total()
+        }
+        crate::model::Arch::GeluNeoX => {
+            crate::flops::MlpFlops::dense_gelu(d, cfg.d_hidden).total()
+        }
+    };
+    (keep_mlp * dense_mlp_flops, keep_qkv * crate::flops::linear(3 * d, d))
+}
+
 pub fn adapt(
     model: Arc<Model>,
     calib: &ModelCalib,
@@ -192,31 +222,13 @@ pub fn adapt(
 ) -> (AdaptedModel, AdaptReport) {
     let dense = AdaptedModel::unadapted(Arc::clone(&model)).decode_flops(seq_len);
     let cfg = &model.cfg;
-    let d = cfg.d_model;
     // Llama + Pythia configurations adapt MLP and QKV; the Gemma
     // configuration (RanaMlpOnly) and the MLP-only baselines do not.
     let adapt_qkv = method.adapts_qkv();
 
     // Solve per-component keep fractions for the target total rate.
-    let cut = target_compression * dense.total;
-    let (keep_mlp, keep_qkv) = if adapt_qkv {
-        let c = (cut / (dense.mlp + dense.qkv)).min(0.98);
-        (1.0 - c, 1.0 - c)
-    } else {
-        let c = (cut / dense.mlp).min(0.98);
-        (1.0 - c, 1.0)
-    };
-
-    let dense_mlp_flops = match cfg.arch {
-        crate::model::Arch::SwiGlu => {
-            crate::flops::MlpFlops::dense_swiglu(d, cfg.d_hidden).total()
-        }
-        crate::model::Arch::GeluNeoX => {
-            crate::flops::MlpFlops::dense_gelu(d, cfg.d_hidden).total()
-        }
-    };
-    let mlp_budget = keep_mlp * dense_mlp_flops;
-    let qkv_budget = keep_qkv * crate::flops::linear(3 * d, d);
+    let (mlp_budget, qkv_budget) =
+        component_budgets(cfg, &dense, adapt_qkv, target_compression);
 
     let mut adapted = AdaptedModel::unadapted(Arc::clone(&model));
     adapted.method = method.label().to_string();
@@ -289,6 +301,87 @@ pub fn adapt(
     report.mlp_compression = achieved.mlp_compression_vs(&dense);
     report.qkv_compression = achieved.qkv_compression_vs(&dense);
     (adapted, report)
+}
+
+/// Calibrate ONCE, serve every tier at runtime: builds a single
+/// runtime-budget [`AdaptedModel`] whose RaNA adapters carry budget
+/// schedules over the compressed entries of `rates` (rate 0 is served by
+/// the dense-bypass path and needs no schedule entry).
+///
+/// Versus the engine-ladder path (one `adapt` per tier), the per-linear
+/// SVDs are paid once and one weight set serves all tiers; per tier, the
+/// served decode computation is **bit-identical** to the statically built
+/// `adapt(..., Method::Rana, rate, ..)` model because both run the same
+/// line/grid searches at the same component budgets
+/// ([`component_budgets`]) with the same seeds.
+///
+/// Returns the model plus one [`AdaptReport`] per *compressed* rate (in
+/// `rates` order), each measured with the ambient budget pinned to that
+/// rate. The model is returned with ambient budget 0 (dense).
+pub fn adapt_runtime(
+    model: Arc<Model>,
+    calib: &ModelCalib,
+    rates: &[f64],
+    seq_len: usize,
+    seed: u64,
+) -> (AdaptedModel, Vec<AdaptReport>) {
+    let dense = AdaptedModel::unadapted(Arc::clone(&model)).decode_flops(seq_len);
+    let cfg = model.cfg.clone();
+    let tiers: Vec<(f64, f64, f64)> = rates
+        .iter()
+        .copied()
+        .filter(|&r| r > 0.0)
+        .map(|r| {
+            let (mb, qb) = component_budgets(&cfg, &dense, true, r);
+            (r, mb, qb)
+        })
+        .collect();
+    assert!(!tiers.is_empty(), "adapt_runtime needs at least one compressed rate");
+
+    let mut adapted = AdaptedModel::unadapted(Arc::clone(&model));
+    adapted.method = "RaNA-Runtime".into();
+    adapted.runtime_budget = true;
+    // Per-tier layer reports, indexed [tier][layer].
+    let mut layer_reports: Vec<Vec<LayerReport>> =
+        vec![Vec::with_capacity(cfg.n_layers); tiers.len()];
+
+    for l in 0..cfg.n_layers {
+        let lw = &model.w.layers[l];
+        let lc = &calib.layers[l];
+        let lseed = seed ^ ((l as u64 + 1) << 8);
+        let builder = RanaMlpBuilder::new(cfg.arch, lw, lc, lseed);
+        let mlp_budgets: Vec<(f64, f64)> = tiers.iter().map(|&(r, mb, _)| (r, mb)).collect();
+        let (mlp, mlp_errs) = builder.build_runtime(&mlp_budgets, true);
+        adapted.mlp[l] = Some(Box::new(mlp));
+
+        let fused = fused_qkv_weight(lw);
+        let qkv_budgets: Vec<(f64, f64)> = tiers.iter().map(|&(r, _, qb)| (r, qb)).collect();
+        let (qkv, qkv_errs) = RanaQkv::build_runtime(&fused, lc, &qkv_budgets, lseed ^ 0x51);
+        adapted.qkv[l] = Some(Box::new(qkv));
+
+        for (t, lr) in layer_reports.iter_mut().enumerate() {
+            lr.push(LayerReport { mlp_err: mlp_errs[t], qkv_err: qkv_errs[t] });
+        }
+    }
+
+    // Achieved per-tier compression, measured by pinning the ambient
+    // budget (decode_flops honors the schedule at the ambient rate).
+    let reports: Vec<AdaptReport> = tiers
+        .iter()
+        .enumerate()
+        .map(|(t, &(rate, _, _))| {
+            adapted.set_budget(rate);
+            let achieved = adapted.decode_flops(seq_len);
+            AdaptReport {
+                layers: layer_reports[t].clone(),
+                total_compression: achieved.compression_vs(&dense),
+                mlp_compression: achieved.mlp_compression_vs(&dense),
+                qkv_compression: achieved.qkv_compression_vs(&dense),
+            }
+        })
+        .collect();
+    adapted.set_budget(0.0);
+    (adapted, reports)
 }
 
 #[cfg(test)]

@@ -38,6 +38,11 @@ use crate::model::{BlockOps, Capture, Model, ModelConfig, ModelWeights};
 use crate::tensor::Mat;
 
 /// An adapted MLP block: one of the paper's methods applied to Up/Gate/Down.
+///
+/// The `*_budgeted` surface carries a **runtime compression rate** (0 =
+/// dense-cost budget); fixed-budget adapters ignore it via the defaults,
+/// while schedule-carrying adapters (RaNA) resolve it to per-tier
+/// `(rank_cap, threshold)` views in O(1).
 pub trait MlpAdapter: Send + Sync {
     fn name(&self) -> &'static str;
     /// Decode path (GEMV, real skipping).
@@ -51,8 +56,33 @@ pub trait MlpAdapter: Send + Sync {
         let rows: Vec<Vec<f32>> = (0..xs.rows).map(|r| self.apply_tok(xs.row(r))).collect();
         Mat::from_rows(&rows)
     }
+    /// Decode path under a runtime budget; default ignores the rate.
+    fn apply_tok_budgeted(&self, x: &[f32], _rate: f64) -> Vec<f32> {
+        self.apply_tok(x)
+    }
+    /// Sequence path under a runtime budget; default ignores the rate.
+    fn apply_seq_budgeted(&self, xs: &Mat, _rate: f64) -> Mat {
+        self.apply_seq(xs)
+    }
+    /// Batched decode with a per-row runtime budget; default ignores them.
+    fn apply_tok_batch_budgeted(&self, xs: &Mat, _rates: &[f64]) -> Mat {
+        self.apply_tok_batch(xs)
+    }
+    /// Calibrated fraction of ranks/neurons active at `rate` (`None` for
+    /// fixed-budget adapters).
+    fn effective_rank_frac(&self, _rate: f64) -> Option<f64> {
+        None
+    }
+    /// Adapter weight footprint in bytes (serving-memory accounting).
+    fn param_bytes(&self) -> usize {
+        0
+    }
     /// Expected per-token FLOPs.
     fn flops(&self) -> MlpFlops;
+    /// Expected per-token FLOPs at a runtime rate; default ignores it.
+    fn flops_budgeted(&self, _rate: f64) -> MlpFlops {
+        self.flops()
+    }
 }
 
 /// An adapted (fused) QKV projection.
@@ -64,8 +94,32 @@ pub trait QkvAdapter: Send + Sync {
     fn apply_tok_batch(&self, xs: &Mat) -> (Mat, Mat, Mat) {
         crate::tensor::stack3_rows((0..xs.rows).map(|r| self.apply_tok(xs.row(r))).collect())
     }
+    /// Decode path under a runtime budget; default ignores the rate.
+    fn apply_tok_budgeted(&self, x: &[f32], _rate: f64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        self.apply_tok(x)
+    }
+    /// Sequence path under a runtime budget; default ignores the rate.
+    fn apply_seq_budgeted(&self, xs: &Mat, _rate: f64) -> (Mat, Mat, Mat) {
+        self.apply_seq(xs)
+    }
+    /// Batched decode with a per-row runtime budget; default ignores them.
+    fn apply_tok_batch_budgeted(&self, xs: &Mat, _rates: &[f64]) -> (Mat, Mat, Mat) {
+        self.apply_tok_batch(xs)
+    }
+    /// Calibrated fraction of ranks active at `rate`.
+    fn effective_rank_frac(&self, _rate: f64) -> Option<f64> {
+        None
+    }
+    /// Adapter weight footprint in bytes.
+    fn param_bytes(&self) -> usize {
+        0
+    }
     /// Expected per-token FLOPs of the fused projection.
     fn flops(&self) -> LinearFlops;
+    /// Expected per-token FLOPs at a runtime rate; default ignores it.
+    fn flops_budgeted(&self, _rate: f64) -> LinearFlops {
+        self.flops()
+    }
 }
 
 /// Split a fused `[3d]` vector into (q, k, v).
@@ -105,12 +159,25 @@ pub fn fused_qkv_weight(w: &crate::model::LayerWeights) -> Mat {
 /// A model with per-layer adapters plugged in. Layers without an adapter
 /// fall back to the dense ops — so partially-adapted configurations (e.g.
 /// Gemma-style MLP-only adaptation) are first-class.
+///
+/// **Runtime budgets:** a model built by [`calibrate::adapt_runtime`] has
+/// `runtime_budget = true` and schedule-carrying adapters. Its *ambient*
+/// compression rate is a lock-free scalar ([`AdaptedModel::set_budget`])
+/// that every un-annotated apply resolves; rate `0` routes straight to the
+/// dense base ops (the "dense tier"), and the batched decode path can
+/// override the ambient rate per row (mixed-budget batches). Fixed-budget
+/// models ignore all of this and behave exactly as before.
 pub struct AdaptedModel {
     pub base: Arc<Model>,
     pub mlp: Vec<Option<Box<dyn MlpAdapter>>>,
     pub qkv: Vec<Option<Box<dyn QkvAdapter>>>,
     /// Human-readable method label ("RaNA", "CATS", …).
     pub method: String,
+    /// True when adapters carry budget schedules and rate 0 means dense.
+    pub runtime_budget: bool,
+    /// Ambient compression rate × 1e6 (atomic so the serving controller
+    /// can retune between engine passes without locks).
+    budget_micro: std::sync::atomic::AtomicU64,
 }
 
 impl AdaptedModel {
@@ -121,7 +188,71 @@ impl AdaptedModel {
             mlp: (0..n).map(|_| None).collect(),
             qkv: (0..n).map(|_| None).collect(),
             method: "dense".into(),
+            runtime_budget: false,
+            budget_micro: std::sync::atomic::AtomicU64::new(0),
         }
+    }
+
+    /// Set the ambient compression rate (runtime-budget models; no-op
+    /// semantics for fixed-budget models whose adapters ignore rates).
+    pub fn set_budget(&self, rate: f64) {
+        // Round so `budget()` round-trips the common tier rates exactly.
+        let micro = (rate.clamp(0.0, 1.0) * 1e6).round() as u64;
+        self.budget_micro.store(micro, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Current ambient compression rate.
+    pub fn budget(&self) -> f64 {
+        self.budget_micro.load(std::sync::atomic::Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Resolve a per-row rate: negative = "use the ambient budget"
+    /// ([`crate::model::AMBIENT_BUDGET`]).
+    fn resolve_rate(&self, rate: f64) -> f64 {
+        if rate < 0.0 {
+            self.budget()
+        } else {
+            rate
+        }
+    }
+
+    /// At rate 0 a runtime-budget model serves the dense base bitwise.
+    fn bypass(&self, rate: f64) -> bool {
+        self.runtime_budget && rate <= 0.0
+    }
+
+    /// Mean calibrated active-rank fraction across adapted components at
+    /// `rate` (1.0 when dense or fixed-budget).
+    pub fn effective_rank_frac(&self, rate: f64) -> f64 {
+        if self.bypass(rate) {
+            return 1.0;
+        }
+        let mut acc = 0.0;
+        let mut n = 0usize;
+        for ad in self.mlp.iter().flatten() {
+            if let Some(f) = ad.effective_rank_frac(rate) {
+                acc += f;
+                n += 1;
+            }
+        }
+        for ad in self.qkv.iter().flatten() {
+            if let Some(f) = ad.effective_rank_frac(rate) {
+                acc += f;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            1.0
+        } else {
+            acc / n as f64
+        }
+    }
+
+    /// Adapter weight footprint in bytes (the serving-memory delta a
+    /// budget ladder would multiply by its tier count).
+    pub fn adapter_param_bytes(&self) -> usize {
+        self.mlp.iter().flatten().map(|a| a.param_bytes()).sum::<usize>()
+            + self.qkv.iter().flatten().map(|a| a.param_bytes()).sum::<usize>()
     }
 
     /// Per-token FLOPs of one block at a context length, honoring adapters.
@@ -136,11 +267,14 @@ impl AdaptedModel {
             },
             norms: 8.0 * d as f64,
         };
-        if let Some(ad) = &self.mlp[layer] {
-            b.mlp = ad.flops();
-        }
-        if let Some(ad) = &self.qkv[layer] {
-            b.attn.qkv = ad.flops();
+        let rate = self.budget();
+        if !self.bypass(rate) {
+            if let Some(ad) = &self.mlp[layer] {
+                b.mlp = ad.flops_budgeted(rate);
+            }
+            if let Some(ad) = &self.qkv[layer] {
+                b.attn.qkv = ad.flops_budgeted(rate);
+            }
         }
         b
     }
@@ -169,6 +303,23 @@ impl AdaptedModel {
     }
 }
 
+/// Gather `idx` rows of `xs` into a dense sub-matrix (mixed-budget batch
+/// partitioning; kernels are row-independent, so gather/scatter is exact).
+fn take_rows(xs: &Mat, idx: &[usize]) -> Mat {
+    let mut out = Mat::zeros(idx.len(), xs.cols);
+    for (r, &i) in idx.iter().enumerate() {
+        out.row_mut(r).copy_from_slice(xs.row(i));
+    }
+    out
+}
+
+/// Scatter `rows` back to positions `idx` of `out`.
+fn scatter_rows(out: &mut Mat, idx: &[usize], rows: &Mat) {
+    for (r, &i) in idx.iter().enumerate() {
+        out.row_mut(i).copy_from_slice(rows.row(r));
+    }
+}
+
 impl BlockOps for AdaptedModel {
     fn config(&self) -> &ModelConfig {
         &self.base.cfg
@@ -179,9 +330,10 @@ impl BlockOps for AdaptedModel {
     }
 
     fn qkv_seq(&self, layer: usize, xs: &Mat) -> (Mat, Mat, Mat) {
+        let rate = self.budget();
         match &self.qkv[layer] {
-            Some(ad) => ad.apply_seq(xs),
-            None => self.base.qkv_seq(layer, xs),
+            Some(ad) if !self.bypass(rate) => ad.apply_seq_budgeted(xs, rate),
+            _ => self.base.qkv_seq(layer, xs),
         }
     }
 
@@ -190,16 +342,18 @@ impl BlockOps for AdaptedModel {
     }
 
     fn mlp_seq(&self, layer: usize, xs: &Mat, cap: Option<&mut Capture>) -> Mat {
+        let rate = self.budget();
         match &self.mlp[layer] {
-            Some(ad) => ad.apply_seq(xs),
-            None => self.base.mlp_seq(layer, xs, cap),
+            Some(ad) if !self.bypass(rate) => ad.apply_seq_budgeted(xs, rate),
+            _ => self.base.mlp_seq(layer, xs, cap),
         }
     }
 
     fn qkv_tok(&self, layer: usize, x: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let rate = self.budget();
         match &self.qkv[layer] {
-            Some(ad) => ad.apply_tok(x),
-            None => self.base.qkv_tok(layer, x),
+            Some(ad) if !self.bypass(rate) => ad.apply_tok_budgeted(x, rate),
+            _ => self.base.qkv_tok(layer, x),
         }
     }
 
@@ -208,16 +362,24 @@ impl BlockOps for AdaptedModel {
     }
 
     fn mlp_tok(&self, layer: usize, x: &[f32]) -> Vec<f32> {
+        let rate = self.budget();
         match &self.mlp[layer] {
-            Some(ad) => ad.apply_tok(x),
-            None => self.base.mlp_tok(layer, x),
+            Some(ad) if !self.bypass(rate) => ad.apply_tok_budgeted(x, rate),
+            _ => self.base.mlp_tok(layer, x),
         }
     }
 
     fn qkv_tok_batch(&self, layer: usize, xs: &Mat) -> (Mat, Mat, Mat) {
+        let rate = self.budget();
         match &self.qkv[layer] {
-            Some(ad) => ad.apply_tok_batch(xs),
-            None => self.base.qkv_tok_batch(layer, xs),
+            Some(ad) if !self.bypass(rate) => {
+                if self.runtime_budget {
+                    ad.apply_tok_batch_budgeted(xs, &vec![rate; xs.rows])
+                } else {
+                    ad.apply_tok_batch(xs)
+                }
+            }
+            _ => self.base.qkv_tok_batch(layer, xs),
         }
     }
 
@@ -226,10 +388,83 @@ impl BlockOps for AdaptedModel {
     }
 
     fn mlp_tok_batch(&self, layer: usize, xs: &Mat) -> Mat {
+        let rate = self.budget();
         match &self.mlp[layer] {
-            Some(ad) => ad.apply_tok_batch(xs),
-            None => self.base.mlp_tok_batch(layer, xs),
+            Some(ad) if !self.bypass(rate) => {
+                if self.runtime_budget {
+                    ad.apply_tok_batch_budgeted(xs, &vec![rate; xs.rows])
+                } else {
+                    ad.apply_tok_batch(xs)
+                }
+            }
+            _ => self.base.mlp_tok_batch(layer, xs),
         }
+    }
+
+    /// Per-row budgeted batch: dense-tier rows (rate 0) run the dense base
+    /// kernels, the rest share one masked pass with per-row views; rows are
+    /// gathered/scattered, which is exact because every batched kernel on
+    /// the decode path is row-independent (§2a determinism contract).
+    fn qkv_tok_batch_budgeted(&self, layer: usize, xs: &Mat, rates: &[f64]) -> (Mat, Mat, Mat) {
+        let Some(ad) = &self.qkv[layer] else {
+            return self.base.qkv_tok_batch(layer, xs);
+        };
+        if !self.runtime_budget {
+            return ad.apply_tok_batch(xs);
+        }
+        let resolved: Vec<f64> = rates.iter().map(|&r| self.resolve_rate(r)).collect();
+        let dense_idx: Vec<usize> =
+            (0..xs.rows).filter(|&r| resolved[r] <= 0.0).collect();
+        if dense_idx.is_empty() {
+            return ad.apply_tok_batch_budgeted(xs, &resolved);
+        }
+        if dense_idx.len() == xs.rows {
+            return self.base.qkv_tok_batch(layer, xs);
+        }
+        let adapted_idx: Vec<usize> =
+            (0..xs.rows).filter(|&r| resolved[r] > 0.0).collect();
+        let (dq, dk, dv) = self.base.qkv_tok_batch(layer, &take_rows(xs, &dense_idx));
+        let sub_rates: Vec<f64> = adapted_idx.iter().map(|&r| resolved[r]).collect();
+        let (aq, ak, av) =
+            ad.apply_tok_batch_budgeted(&take_rows(xs, &adapted_idx), &sub_rates);
+        let mut q = Mat::zeros(xs.rows, aq.cols);
+        let mut k = Mat::zeros(xs.rows, ak.cols);
+        let mut v = Mat::zeros(xs.rows, av.cols);
+        scatter_rows(&mut q, &dense_idx, &dq);
+        scatter_rows(&mut k, &dense_idx, &dk);
+        scatter_rows(&mut v, &dense_idx, &dv);
+        scatter_rows(&mut q, &adapted_idx, &aq);
+        scatter_rows(&mut k, &adapted_idx, &ak);
+        scatter_rows(&mut v, &adapted_idx, &av);
+        (q, k, v)
+    }
+
+    fn mlp_tok_batch_budgeted(&self, layer: usize, xs: &Mat, rates: &[f64]) -> Mat {
+        let Some(ad) = &self.mlp[layer] else {
+            return self.base.mlp_tok_batch(layer, xs);
+        };
+        if !self.runtime_budget {
+            return ad.apply_tok_batch(xs);
+        }
+        let resolved: Vec<f64> = rates.iter().map(|&r| self.resolve_rate(r)).collect();
+        let dense_idx: Vec<usize> =
+            (0..xs.rows).filter(|&r| resolved[r] <= 0.0).collect();
+        if dense_idx.is_empty() {
+            return ad.apply_tok_batch_budgeted(xs, &resolved);
+        }
+        if dense_idx.len() == xs.rows {
+            return self.base.mlp_tok_batch(layer, xs);
+        }
+        let adapted_idx: Vec<usize> =
+            (0..xs.rows).filter(|&r| resolved[r] > 0.0).collect();
+        let dense_out = self.base.mlp_tok_batch(layer, &take_rows(xs, &dense_idx));
+        let sub_rates: Vec<f64> = adapted_idx.iter().map(|&r| resolved[r]).collect();
+        let adapted_out =
+            ad.apply_tok_batch_budgeted(&take_rows(xs, &adapted_idx), &sub_rates);
+        let mut out = Mat::zeros(xs.rows, adapted_out.cols);
+        scatter_rows(&mut out, &dense_idx, &dense_out);
+        scatter_rows(&mut out, &adapted_idx, &adapted_out);
+        out
     }
 }
 

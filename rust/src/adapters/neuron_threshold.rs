@@ -63,16 +63,50 @@ impl NeuronThresholdAdapter {
         self.wt.rows
     }
 
+    /// Calibrate the threshold for a different FLOP budget over the same
+    /// weights — the runtime-budget path shares `wt`/`col_norms` across
+    /// every tier and swaps only this scalar. Returns `(t, exp_keep)`,
+    /// identical to what [`NeuronThresholdAdapter::build`] at that budget
+    /// would store.
+    pub fn threshold_for_budget(&self, x_fit: &Mat, budget: f64) -> (f32, f64) {
+        let (o, h) = (self.out_dim(), self.in_dim());
+        let r_target = ((budget - 2.0 * h as f64) / (2.0 * o as f64)).clamp(0.0, h as f64);
+        let k = x_fit.cols;
+        let mut scores: Vec<f32> = Vec::with_capacity(h * k);
+        for i in 0..h {
+            for c in 0..k {
+                scores.push(x_fit.at(i, c).abs() * self.col_norms[i]);
+            }
+        }
+        let keep = ((r_target * k as f64).round() as usize).min(scores.len());
+        let threshold = threshold_for_keep(&mut scores, keep);
+        let mut active = 0usize;
+        for i in 0..h {
+            for c in 0..k {
+                if x_fit.at(i, c).abs() * self.col_norms[i] >= threshold {
+                    active += 1;
+                }
+            }
+        }
+        (threshold, active as f64 / k as f64)
+    }
+
     pub fn mask(&self, x: &[f32]) -> Vec<bool> {
-        x.iter()
-            .zip(&self.col_norms)
-            .map(|(&v, &n)| v.abs() * n >= self.threshold)
-            .collect()
+        self.mask_t(x, self.threshold)
+    }
+
+    pub fn mask_t(&self, x: &[f32], t: f32) -> Vec<bool> {
+        x.iter().zip(&self.col_norms).map(|(&v, &n)| v.abs() * n >= t).collect()
     }
 
     /// Decode path with genuine neuron skipping.
     pub fn apply_tok(&self, x: &[f32]) -> Vec<f32> {
-        let mask = self.mask(x);
+        self.apply_tok_t(x, self.threshold)
+    }
+
+    /// [`NeuronThresholdAdapter::apply_tok`] at a runtime threshold.
+    pub fn apply_tok_t(&self, x: &[f32], t: f32) -> Vec<f32> {
+        let mask = self.mask_t(x, t);
         let mut out = vec![0.0f32; self.out_dim()];
         masked_acc_gemv(&self.wt, &mask, x, &mut out);
         out
@@ -81,10 +115,19 @@ impl NeuronThresholdAdapter {
     /// Batched decode path: per-row neuron masks drive one batched masked
     /// accumulation — active rows of `Wᵀ` stream once per engine pass.
     pub fn apply_tok_batch(&self, xs: &Mat) -> Mat {
+        let ts = vec![self.threshold; xs.rows];
+        self.apply_tok_batch_t(xs, &ts)
+    }
+
+    /// Batched decode with a **per-row** threshold (runtime budgets mixing
+    /// in one engine pass); rows are independent, so each reproduces its
+    /// single-threshold output bitwise.
+    pub fn apply_tok_batch_t(&self, xs: &Mat, thresholds: &[f32]) -> Mat {
+        debug_assert_eq!(thresholds.len(), xs.rows);
         let mut mask = Vec::with_capacity(xs.rows * xs.cols);
-        for r in 0..xs.rows {
+        for (r, &t) in thresholds.iter().enumerate() {
             for (&v, &n) in xs.row(r).iter().zip(&self.col_norms) {
-                mask.push(v.abs() * n >= self.threshold);
+                mask.push(v.abs() * n >= t);
             }
         }
         let mut out = Mat::zeros(xs.rows, self.out_dim());
@@ -94,11 +137,16 @@ impl NeuronThresholdAdapter {
 
     /// Sequence path: zero masked inputs, dense GEMM.
     pub fn apply_seq(&self, xs: &Mat) -> Mat {
+        self.apply_seq_t(xs, self.threshold)
+    }
+
+    /// Sequence path at a runtime threshold.
+    pub fn apply_seq_t(&self, xs: &Mat, t: f32) -> Mat {
         let mut masked = xs.clone();
         for r in 0..masked.rows {
             let row = masked.row_mut(r);
             for (i, v) in row.iter_mut().enumerate() {
-                if v.abs() * self.col_norms[i] < self.threshold {
+                if v.abs() * self.col_norms[i] < t {
                     *v = 0.0;
                 }
             }
@@ -162,6 +210,28 @@ mod tests {
                 .unwrap_or_else(|e| panic!("row {r}: {e}"));
             let solo = ad.apply_tok_batch(&Mat::from_vec(1, 32, xs.row(r).to_vec()));
             assert_eq!(solo.data, batched.row(r).to_vec(), "row {r} batch-dependent");
+        }
+    }
+
+    #[test]
+    fn runtime_threshold_matches_static_build() {
+        // One weight set + a re-fit threshold must reproduce, bitwise, the
+        // adapter statically built for that budget.
+        let (w, x) = setup(16, 32, 11);
+        let base = NeuronThresholdAdapter::build(&w, &x, flops::linear(16, 32) * 0.8);
+        for frac in [0.3, 0.6] {
+            let budget = flops::linear(16, 32) * frac;
+            let stat = NeuronThresholdAdapter::build(&w, &x, budget);
+            let (t, keep) = base.threshold_for_budget(&x, budget);
+            assert_eq!(t, stat.threshold, "frac {frac}");
+            assert_eq!(keep, stat.exp_keep, "frac {frac}");
+            let mut rng = Xoshiro256::new(12);
+            let xs = Mat::gaussian(4, 32, 1.0, &mut rng);
+            for r in 0..xs.rows {
+                assert_eq!(base.apply_tok_t(xs.row(r), t), stat.apply_tok(xs.row(r)));
+            }
+            let ts = vec![t; xs.rows];
+            assert_eq!(base.apply_tok_batch_t(&xs, &ts).data, stat.apply_tok_batch(&xs).data);
         }
     }
 

@@ -5,11 +5,27 @@
 
 use super::calibrate::LayerCalib;
 use super::neuron_threshold::NeuronThresholdAdapter;
-use super::rank_adapter::{RankAdapter, RankPrecomp};
+use super::rank_adapter::{nearest_by_rate, BudgetSchedule, BudgetView, RankAdapter, RankPrecomp};
 use super::{split3, split3_seq, MlpAdapter, QkvAdapter};
 use crate::flops::{LinearFlops, MlpFlops};
 use crate::model::{ops, Arch, LayerWeights};
 use crate::tensor::Mat;
+
+/// One calibrated tier of a runtime-budget [`RanaMlp`]: the Up/Gate budget
+/// views, the Down threshold, and the FLOP split the grid search picked at
+/// this compression rate.
+#[derive(Clone, Copy, Debug)]
+pub struct MlpBudgetEntry {
+    pub rate: f64,
+    /// Budget split chosen by the grid search `(up, gate, down)`.
+    pub split: (f64, f64, f64),
+    pub up: BudgetView,
+    pub up_exp_rank: f64,
+    pub gate: Option<BudgetView>,
+    pub gate_exp_rank: f64,
+    pub down_threshold: f32,
+    pub down_exp_keep: f64,
+}
 
 /// RaNA-adapted MLP block.
 pub struct RanaMlp {
@@ -20,32 +36,62 @@ pub struct RanaMlp {
     pub down: NeuronThresholdAdapter,
     /// Budget split chosen by the grid search `(up, gate, down)`.
     pub split: (f64, f64, f64),
+    /// Runtime budget tiers (rate-sorted; empty for fixed-budget MLPs).
+    pub schedule: Vec<MlpBudgetEntry>,
 }
 
 impl RanaMlp {
-    fn intermediate_tok(&self, x: &[f32]) -> Vec<f32> {
+    /// Resolve a runtime compression rate to the nearest calibrated tier.
+    pub fn entry_for(&self, rate: f64) -> Option<&MlpBudgetEntry> {
+        nearest_by_rate(&self.schedule, rate, |e| e.rate)
+    }
+
+    fn up_view(&self, e: Option<&MlpBudgetEntry>) -> BudgetView {
+        e.map(|e| e.up).unwrap_or_else(|| self.up.full_view())
+    }
+
+    fn gate_view(&self, g: &RankAdapter, e: Option<&MlpBudgetEntry>) -> BudgetView {
+        e.and_then(|e| e.gate).unwrap_or_else(|| g.full_view())
+    }
+
+    fn down_t(&self, e: Option<&MlpBudgetEntry>) -> f32 {
+        e.map(|e| e.down_threshold).unwrap_or(self.down.threshold)
+    }
+
+    fn intermediate_tok(&self, x: &[f32], e: Option<&MlpBudgetEntry>) -> Vec<f32> {
         match self.arch {
             Arch::SwiGlu => {
-                let up = self.up.apply_tok(x);
-                let gate = self.gate.as_ref().unwrap().apply_tok(x);
-                up.iter().zip(&gate).map(|(&u, &g)| u * ops::silu(g)).collect()
+                let up = self.up.apply_tok_at(x, self.up_view(e));
+                let g = self.gate.as_ref().unwrap();
+                let gate = g.apply_tok_at(x, self.gate_view(g, e));
+                up.iter().zip(&gate).map(|(&u, &gv)| u * ops::silu(gv)).collect()
             }
-            Arch::GeluNeoX => {
-                self.up.apply_tok(x).iter().map(|&v| ops::gelu(v)).collect()
-            }
+            Arch::GeluNeoX => self
+                .up
+                .apply_tok_at(x, self.up_view(e))
+                .iter()
+                .map(|&v| ops::gelu(v))
+                .collect(),
         }
     }
 
-    fn intermediate_tok_batch(&self, xs: &Mat) -> Mat {
-        let mut up = self.up.apply_tok_batch(xs);
-        let gate = self.gate.as_ref().map(|g| g.apply_tok_batch(xs));
+    fn intermediate_tok_batch(&self, xs: &Mat, entries: &[Option<&MlpBudgetEntry>]) -> Mat {
+        let up_views: Vec<BudgetView> = entries.iter().map(|e| self.up_view(*e)).collect();
+        let mut up = self.up.apply_tok_batch_views(xs, &up_views);
+        let gate = self.gate.as_ref().map(|g| {
+            let gv: Vec<BudgetView> = entries.iter().map(|e| self.gate_view(g, *e)).collect();
+            g.apply_tok_batch_views(xs, &gv)
+        });
         ops::mlp_activate(self.arch, &mut up, gate.as_ref());
         up
     }
 
-    fn intermediate_seq(&self, xs: &Mat) -> Mat {
-        let mut up = self.up.apply_seq(xs);
-        let gate = self.gate.as_ref().map(|g| g.apply_seq(xs));
+    fn intermediate_seq(&self, xs: &Mat, e: Option<&MlpBudgetEntry>) -> Mat {
+        let mut up = self.up.apply_seq_at(xs, self.up_view(e));
+        let gate = self
+            .gate
+            .as_ref()
+            .map(|g| g.apply_seq_at(xs, self.gate_view(g, e)));
         ops::mlp_activate(self.arch, &mut up, gate.as_ref());
         up
     }
@@ -57,18 +103,61 @@ impl MlpAdapter for RanaMlp {
     }
 
     fn apply_tok(&self, x: &[f32]) -> Vec<f32> {
-        self.down.apply_tok(&self.intermediate_tok(x))
+        self.down.apply_tok(&self.intermediate_tok(x, None))
     }
 
     fn apply_seq(&self, xs: &Mat) -> Mat {
-        self.down.apply_seq(&self.intermediate_seq(xs))
+        self.down.apply_seq(&self.intermediate_seq(xs, None))
     }
 
     /// Batched decode: every stage (Up/Gate rank adapters, Down neuron
     /// thresholding) runs its batched masked kernel across the whole
     /// in-flight set in one pass.
     fn apply_tok_batch(&self, xs: &Mat) -> Mat {
-        self.down.apply_tok_batch(&self.intermediate_tok_batch(xs))
+        self.down.apply_tok_batch(&self.intermediate_tok_batch(xs, &vec![None; xs.rows]))
+    }
+
+    fn apply_tok_budgeted(&self, x: &[f32], rate: f64) -> Vec<f32> {
+        let e = self.entry_for(rate);
+        self.down.apply_tok_t(&self.intermediate_tok(x, e), self.down_t(e))
+    }
+
+    fn apply_seq_budgeted(&self, xs: &Mat, rate: f64) -> Mat {
+        let e = self.entry_for(rate);
+        self.down.apply_seq_t(&self.intermediate_seq(xs, e), self.down_t(e))
+    }
+
+    /// Per-row runtime budgets: rows at different compression rates share
+    /// every batched masked kernel via per-row rank masks / thresholds.
+    fn apply_tok_batch_budgeted(&self, xs: &Mat, rates: &[f64]) -> Mat {
+        if self.schedule.is_empty() {
+            return self.apply_tok_batch(xs);
+        }
+        let entries: Vec<Option<&MlpBudgetEntry>> =
+            rates.iter().map(|&r| self.entry_for(r)).collect();
+        let inter = self.intermediate_tok_batch(xs, &entries);
+        let dts: Vec<f32> = entries.iter().map(|e| self.down_t(*e)).collect();
+        self.down.apply_tok_batch_t(&inter, &dts)
+    }
+
+    fn effective_rank_frac(&self, rate: f64) -> Option<f64> {
+        let e = self.entry_for(rate)?;
+        let mut acc = e.up_exp_rank / self.up.d.max(1) as f64;
+        let mut n = 1.0;
+        if let Some(g) = &self.gate {
+            acc += e.gate_exp_rank / g.d.max(1) as f64;
+            n += 1.0;
+        }
+        acc += e.down_exp_keep / self.down.in_dim().max(1) as f64;
+        n += 1.0;
+        Some(acc / n)
+    }
+
+    fn param_bytes(&self) -> usize {
+        let mats = |a: &RankAdapter| 4 * (a.at.data.len() + a.b.data.len() + a.bt.data.len());
+        mats(&self.up)
+            + self.gate.as_ref().map(mats).unwrap_or(0)
+            + 4 * (self.down.wt.data.len() + self.down.col_norms.len())
     }
 
     fn flops(&self) -> MlpFlops {
@@ -76,6 +165,37 @@ impl MlpAdapter for RanaMlp {
             up: self.up.flops(),
             gate: self.gate.as_ref().map(|g| g.flops()).unwrap_or_default(),
             down: self.down.flops(),
+            act: 2.0 * self.up.out_dim() as f64,
+        }
+    }
+
+    fn flops_budgeted(&self, rate: f64) -> MlpFlops {
+        let Some(e) = self.entry_for(rate) else { return self.flops() };
+        MlpFlops {
+            up: crate::flops::rank_adapter(
+                self.up.out_dim(),
+                self.up.in_dim(),
+                e.up.rank_cap,
+                e.up_exp_rank,
+            ),
+            gate: self
+                .gate
+                .as_ref()
+                .zip(e.gate)
+                .map(|(g, gv)| {
+                    crate::flops::rank_adapter(
+                        g.out_dim(),
+                        g.in_dim(),
+                        gv.rank_cap,
+                        e.gate_exp_rank,
+                    )
+                })
+                .unwrap_or_default(),
+            down: crate::flops::neuron_threshold(
+                self.down.out_dim(),
+                self.down.in_dim(),
+                e.down_exp_keep,
+            ),
             act: 2.0 * self.up.out_dim() as f64,
         }
     }
@@ -182,7 +302,74 @@ impl<'a> RanaMlpBuilder<'a> {
         let down = cache.down.get_or_build(budget * fd, |b| {
             NeuronThresholdAdapter::build(&self.lw.down.w, &self.calib.down_in_fit, b)
         });
-        RanaMlp { arch: self.arch, up, gate, down, split }
+        RanaMlp { arch: self.arch, up, gate, down, split, schedule: Vec::new() }
+    }
+
+    /// Build ONE runtime-budget RaNA MLP serving every `(rate, budget)`
+    /// tier. Each tier runs the exact grid search [`RanaMlpBuilder::build`]
+    /// would run for that budget (so the chosen splits, ranks and
+    /// thresholds are identical by construction), but instead of keeping N
+    /// cloned weight sets, the tiers collapse into one full-basis Up/Gate
+    /// adapter + one Down weight set with a [`MlpBudgetEntry`] per tier.
+    /// Returns the MLP and per-tier eval errors.
+    pub fn build_runtime(&self, budgets: &[(f64, f64)], grid: bool) -> (RanaMlp, Vec<f64>) {
+        assert!(!budgets.is_empty(), "runtime MLP needs at least one tier");
+        let tiers: Vec<(f64, RanaMlp, f64)> = budgets
+            .iter()
+            .map(|&(rate, b)| {
+                let (m, e) = self.build(b, grid);
+                (rate, m, e)
+            })
+            .collect();
+        let errs: Vec<f64> = tiers.iter().map(|t| t.2).collect();
+        let mut entries: Vec<MlpBudgetEntry> = Vec::new();
+        let mut up_sched = BudgetSchedule::default();
+        let mut gate_sched = BudgetSchedule::default();
+        for (rate, m, _) in &tiers {
+            up_sched.push(super::rank_adapter::BudgetEntry {
+                rate: *rate,
+                d: m.up.d,
+                threshold: m.up.threshold,
+                exp_rank: m.up.exp_rank,
+            });
+            if let Some(g) = &m.gate {
+                gate_sched.push(super::rank_adapter::BudgetEntry {
+                    rate: *rate,
+                    d: g.d,
+                    threshold: g.threshold,
+                    exp_rank: g.exp_rank,
+                });
+            }
+            entries.push(MlpBudgetEntry {
+                rate: *rate,
+                split: m.split,
+                up: m.up.full_view(),
+                up_exp_rank: m.up.exp_rank,
+                gate: m.gate.as_ref().map(|g| g.full_view()),
+                gate_exp_rank: m.gate.as_ref().map(|g| g.exp_rank).unwrap_or(0.0),
+                down_threshold: m.down.threshold,
+                down_exp_keep: m.down.exp_keep,
+            });
+        }
+        entries.sort_by(|a, b| a.rate.partial_cmp(&b.rate).unwrap());
+        // Every tier's matrices are row-prefixes of the same precomp basis,
+        // so the widest tier's matrices serve every view bit-identically.
+        let up_idx = (0..tiers.len()).max_by_key(|&i| tiers[i].1.up.d).unwrap();
+        let mut up = tiers[up_idx].1.up.clone();
+        up.schedule = up_sched;
+        let gate = tiers
+            .iter()
+            .filter_map(|t| t.1.gate.as_ref())
+            .max_by_key(|g| g.d)
+            .cloned()
+            .map(|mut g| {
+                g.schedule = gate_sched;
+                g
+            });
+        // Down weights are identical across tiers; keep the first.
+        let down = tiers[0].1.down.clone();
+        let split = tiers[0].1.split;
+        (RanaMlp { arch: self.arch, up, gate, down, split, schedule: entries }, errs)
     }
 
     /// Normalized MLP output error on the eval inputs (paper §5.3 metric).
@@ -251,6 +438,19 @@ impl RanaQkv {
         let (ad, err) = pre.adapter_for_budget(budget);
         (Self { ad }, err)
     }
+
+    /// Runtime-budget variant: one full-basis adapter whose schedule serves
+    /// every `(rate, budget)` tier (see [`RankPrecomp::runtime_adapter`]).
+    pub fn build_runtime(
+        fused_w: &Mat,
+        calib: &LayerCalib,
+        budgets: &[(f64, f64)],
+        seed: u64,
+    ) -> (Self, Vec<f64>) {
+        let pre = RankPrecomp::new(fused_w, &calib.qkv_in_fit, &calib.qkv_in_eval, seed);
+        let (ad, errs) = pre.runtime_adapter(budgets);
+        (Self { ad }, errs)
+    }
 }
 
 impl QkvAdapter for RanaQkv {
@@ -270,8 +470,45 @@ impl QkvAdapter for RanaQkv {
         split3_seq(&self.ad.apply_tok_batch(xs))
     }
 
+    fn apply_tok_budgeted(&self, x: &[f32], rate: f64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        split3(self.ad.apply_tok_at(x, self.ad.view_for(rate)))
+    }
+
+    fn apply_seq_budgeted(&self, xs: &Mat, rate: f64) -> (Mat, Mat, Mat) {
+        split3_seq(&self.ad.apply_seq_at(xs, self.ad.view_for(rate)))
+    }
+
+    fn apply_tok_batch_budgeted(&self, xs: &Mat, rates: &[f64]) -> (Mat, Mat, Mat) {
+        if self.ad.schedule.is_empty() {
+            return self.apply_tok_batch(xs);
+        }
+        let views: Vec<BudgetView> = rates.iter().map(|&r| self.ad.view_for(r)).collect();
+        split3_seq(&self.ad.apply_tok_batch_views(xs, &views))
+    }
+
+    fn effective_rank_frac(&self, rate: f64) -> Option<f64> {
+        let e = self.ad.schedule.entry_for(rate)?;
+        Some(e.exp_rank / self.ad.d.max(1) as f64)
+    }
+
+    fn param_bytes(&self) -> usize {
+        4 * (self.ad.at.data.len() + self.ad.b.data.len() + self.ad.bt.data.len())
+    }
+
     fn flops(&self) -> LinearFlops {
         self.ad.flops()
+    }
+
+    fn flops_budgeted(&self, rate: f64) -> LinearFlops {
+        match self.ad.schedule.entry_for(rate) {
+            Some(e) => crate::flops::rank_adapter(
+                self.ad.out_dim(),
+                self.ad.in_dim(),
+                e.d,
+                e.exp_rank,
+            ),
+            None => self.ad.flops(),
+        }
     }
 }
 

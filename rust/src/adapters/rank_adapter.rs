@@ -21,6 +21,86 @@ use crate::flops::{self, LinearFlops};
 use crate::tensor::linalg::left_sv_of_product;
 use crate::tensor::{gemm, masked_acc_gemm, threshold_for_keep, Mat};
 
+/// A resolved runtime compute budget for one rank adapter: keep ranks
+/// `i < rank_cap` whose score clears `threshold`. Because truncated
+/// adapters are row-prefixes of the full-basis one, applying a view over
+/// the full matrices is **bit-identical** to applying the statically built
+/// `adapter_for_budget` adapter with the same `(d, t)` — every kernel on
+/// the decode path accumulates each output element in ascending rank order
+/// with a zero skip, so the extra (masked-off) ranks contribute nothing.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BudgetView {
+    pub rank_cap: usize,
+    pub threshold: f32,
+}
+
+/// One calibrated point of a [`BudgetSchedule`]: the `(d, t)` the paper's
+/// line search picks at compression `rate`, plus the achieved expected rank.
+#[derive(Clone, Copy, Debug)]
+pub struct BudgetEntry {
+    /// Target model-level compression rate this entry was calibrated for
+    /// (0 = dense-cost budget, larger = more compressed).
+    pub rate: f64,
+    /// Static truncation rank chosen by the line search.
+    pub d: usize,
+    /// B-masker threshold on `(Bx)²`.
+    pub threshold: f32,
+    /// Calibrated `E[‖m(x)‖₀]` at this entry.
+    pub exp_rank: f64,
+}
+
+/// Monotone (rate-sorted) budget schedule: the per-linear table mapping a
+/// runtime compression rate to the `(rank_cap, threshold)` the static line
+/// search would have picked. Resolution is an O(log n) bisect over a
+/// handful of calibrated tiers — effectively O(1) per engine pass.
+#[derive(Clone, Debug, Default)]
+pub struct BudgetSchedule {
+    /// Entries sorted by `rate` ascending.
+    pub entries: Vec<BudgetEntry>,
+}
+
+impl BudgetSchedule {
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn push(&mut self, e: BudgetEntry) {
+        self.entries.push(e);
+        self.entries.sort_by(|a, b| a.rate.partial_cmp(&b.rate).unwrap());
+    }
+
+    /// The calibrated entry nearest to `rate` (ties resolve to the more
+    /// compressed entry, so an uncalibrated request never gets *more*
+    /// compute than the neighbouring tier it rounds to).
+    pub fn entry_for(&self, rate: f64) -> Option<&BudgetEntry> {
+        nearest_by_rate(&self.entries, rate, |e| e.rate)
+    }
+}
+
+/// Nearest-by-rate schedule resolution over rate-sorted entries, shared by
+/// every schedule shape (ties resolve to the more compressed side).
+pub(crate) fn nearest_by_rate<T>(
+    entries: &[T],
+    rate: f64,
+    key: impl Fn(&T) -> f64,
+) -> Option<&T> {
+    if entries.is_empty() {
+        return None;
+    }
+    let idx = entries.partition_point(|e| key(e) < rate).min(entries.len() - 1);
+    let best = if idx > 0 {
+        let (lo, hi) = (key(&entries[idx - 1]), key(&entries[idx]));
+        if (rate - lo).abs() < (hi - rate).abs() {
+            idx - 1
+        } else {
+            idx
+        }
+    } else {
+        idx
+    };
+    Some(&entries[best])
+}
+
 /// A constructed rank adapter, ready for both execution paths.
 #[derive(Clone, Debug)]
 pub struct RankAdapter {
@@ -36,6 +116,8 @@ pub struct RankAdapter {
     pub exp_rank: f64,
     /// Static truncation rank `d`.
     pub d: usize,
+    /// Runtime budget schedule (empty for fixed-budget adapters).
+    pub schedule: BudgetSchedule,
 }
 
 impl RankAdapter {
@@ -52,15 +134,36 @@ impl RankAdapter {
         self.b.matvec(x).iter().map(|&s| s * s).collect()
     }
 
+    /// The adapter's own full budget as a [`BudgetView`].
+    pub fn full_view(&self) -> BudgetView {
+        BudgetView { rank_cap: self.d, threshold: self.threshold }
+    }
+
+    /// Resolve a runtime compression rate against the schedule; adapters
+    /// without a schedule always serve their calibrated full view.
+    pub fn view_for(&self, rate: f64) -> BudgetView {
+        match self.schedule.entry_for(rate) {
+            Some(e) => BudgetView { rank_cap: e.d.min(self.d), threshold: e.threshold },
+            None => self.full_view(),
+        }
+    }
+
     /// Decode path: `A(m ⊙ Bx)` with genuine skipping of masked ranks.
     /// Fused single pass (§Perf L3.6): each rank computes its score
     /// `(b_i·x)` and, if it survives the threshold, immediately accumulates
     /// `s_i · a_i` — no intermediate score/mask vectors, one touch of `B`
     /// and of the surviving rows of `A`.
     pub fn apply_tok(&self, x: &[f32]) -> Vec<f32> {
-        let t = self.threshold;
+        self.apply_tok_at(x, self.full_view())
+    }
+
+    /// [`RankAdapter::apply_tok`] under a runtime [`BudgetView`]: ranks
+    /// beyond `rank_cap` are skipped outright (their `B` rows are never
+    /// touched), so a lower budget is genuinely cheaper on this path.
+    pub fn apply_tok_at(&self, x: &[f32], view: BudgetView) -> Vec<f32> {
+        let t = view.threshold;
         let mut out = vec![0.0f32; self.out_dim()];
-        for i in 0..self.d {
+        for i in 0..view.rank_cap.min(self.d) {
             let s = crate::tensor::dot(self.b.row(i), x);
             if s * s >= t {
                 crate::tensor::axpy(s, self.at.row(i), &mut out);
@@ -81,10 +184,31 @@ impl RankAdapter {
     /// batch size (the kernels' determinism contract), and numerically
     /// matches [`RankAdapter::apply_tok`] / [`RankAdapter::apply_seq`].
     pub fn apply_tok_batch(&self, xs: &Mat) -> Mat {
+        let views = vec![self.full_view(); xs.rows];
+        self.apply_tok_batch_views(xs, &views)
+    }
+
+    /// Batched decode with a **per-row** budget view — the kernel-level
+    /// mechanism that lets requests at different compute budgets share one
+    /// engine pass. Scores are computed once over the full basis (each
+    /// element is an independent ascending-`k` dot product, so shared
+    /// columns are bit-identical to a truncated adapter's scores); row `r`'s
+    /// mask keeps rank `i` iff `i < views[r].rank_cap` and the score clears
+    /// `views[r].threshold`, and [`masked_acc_gemm`] accumulates only
+    /// surviving ranks. Row `r` therefore reproduces, bitwise, both the
+    /// single-budget batch at `views[r]` and the statically truncated
+    /// adapter at that `(d, t)`.
+    pub fn apply_tok_batch_views(&self, xs: &Mat, views: &[BudgetView]) -> Mat {
+        debug_assert_eq!(views.len(), xs.rows);
         let mut s = Mat::zeros(xs.rows, self.d);
         gemm::gemv_batch(xs.rows, xs.cols, self.d, &xs.data, &self.bt.data, &mut s.data, 1.0, 0.0);
-        let t = self.threshold;
-        let mask: Vec<bool> = s.data.iter().map(|&v| v * v >= t).collect();
+        let mut mask: Vec<bool> = Vec::with_capacity(xs.rows * self.d);
+        for (r, view) in views.iter().enumerate() {
+            let (cap, t) = (view.rank_cap.min(self.d), view.threshold);
+            for (i, &v) in s.row(r).iter().enumerate() {
+                mask.push(i < cap && v * v >= t);
+            }
+        }
         let mut out = Mat::zeros(xs.rows, self.out_dim());
         masked_acc_gemm(&self.at, &mask, &s, &mut out);
         out
@@ -95,11 +219,20 @@ impl RankAdapter {
     /// packed GEMM (used by the PPL/accuracy harness where reconstruction,
     /// not wall-clock, matters).
     pub fn apply_seq(&self, xs: &Mat) -> Mat {
+        self.apply_seq_at(xs, self.full_view())
+    }
+
+    /// Sequence path under a runtime view: scores beyond the rank cap (or
+    /// below threshold) are zeroed between the two GEMM stages, so the
+    /// second stage's zero-coefficient rank contributions vanish.
+    pub fn apply_seq_at(&self, xs: &Mat, view: BudgetView) -> Mat {
         let mut s = xs.matmul(&self.bt); // T × d
-        let t = self.threshold;
-        for v in s.data.iter_mut() {
-            if *v * *v < t {
-                *v = 0.0;
+        let (cap, t) = (view.rank_cap.min(self.d), view.threshold);
+        for r in 0..s.rows {
+            for (i, v) in s.row_mut(r).iter_mut().enumerate() {
+                if i >= cap || *v * *v < t {
+                    *v = 0.0;
+                }
             }
         }
         s.matmul(&self.at) // T × o
@@ -176,7 +309,17 @@ impl RankPrecomp {
     /// per-token FLOPs. Returns the adapter and its relative reconstruction
     /// error on the eval set.
     pub fn adapter_for_budget(&self, budget: f64) -> (RankAdapter, f64) {
-        let mut best: Option<(RankAdapter, f64)> = None;
+        let (d, threshold, exp_rank, err) = self.search(budget);
+        (self.build(d, threshold, exp_rank), err)
+    }
+
+    /// The line search itself: the `(d, t)` minimizing calibration error
+    /// under `budget`, without materializing the adapter. Shared by the
+    /// static [`RankPrecomp::adapter_for_budget`] oracle and the runtime
+    /// [`RankPrecomp::runtime_adapter`] schedule construction, so both pick
+    /// identical parameters by construction.
+    fn search(&self, budget: f64) -> (usize, f32, f64, f64) {
+        let mut best: Option<(usize, f32, f64, f64)> = None;
         // Candidate static truncations d (line-search grid).
         let mut cand: Vec<usize> = (1..=16)
             .map(|g| (self.d_max as f64 * g as f64 / 16.0).round() as usize)
@@ -195,16 +338,45 @@ impl RankPrecomp {
             }
             let (threshold, exp_rank) = self.threshold_for_rank(d, r_target);
             let err = self.eval_error(d, threshold);
-            if best.as_ref().map(|(_, e)| err < *e).unwrap_or(true) {
-                let adapter = self.build(d, threshold, exp_rank);
-                best = Some((adapter, err));
+            if best.as_ref().map(|(_, _, _, e)| err < *e).unwrap_or(true) {
+                best = Some((d, threshold, exp_rank, err));
             }
         }
         best.unwrap_or_else(|| {
             // Degenerate budget: keep rank 1 deterministically.
             let (t, r) = self.threshold_for_rank(1, 1.0);
-            (self.build(1, t, r), self.eval_error(1, t))
+            (1, t, r, self.eval_error(1, t))
         })
+    }
+
+    /// Build ONE full-basis adapter whose [`BudgetSchedule`] serves every
+    /// `(rate, budget)` pair: each entry records exactly the `(d, t)` the
+    /// static line search picks at that budget, so `view_for(rate)` applied
+    /// over the shared basis is bit-identical to the per-tier clone that
+    /// [`RankPrecomp::adapter_for_budget`] would have built — one weight
+    /// set replaces N. Returns the adapter and the per-entry eval errors.
+    pub fn runtime_adapter(&self, budgets: &[(f64, f64)]) -> (RankAdapter, Vec<f64>) {
+        assert!(!budgets.is_empty(), "runtime adapter needs at least one tier");
+        let mut schedule = BudgetSchedule::default();
+        let mut errs = Vec::with_capacity(budgets.len());
+        let mut d_cap = 1usize;
+        for &(rate, budget) in budgets {
+            let (d, threshold, exp_rank, err) = self.search(budget);
+            d_cap = d_cap.max(d);
+            schedule.push(BudgetEntry { rate, d, threshold, exp_rank });
+            errs.push(err);
+        }
+        // Base the adapter at the largest rank any tier needs; its own
+        // (d, threshold) default to the least-compressed entry.
+        let full = schedule
+            .entries
+            .iter()
+            .min_by(|a, b| a.rate.partial_cmp(&b.rate).unwrap())
+            .copied()
+            .expect("non-empty schedule");
+        let mut ad = self.build(d_cap, full.threshold, full.exp_rank);
+        ad.schedule = schedule;
+        (ad, errs)
     }
 
     /// Threshold on `(Bx)²` so that on average `r_target` of the first `d`
@@ -259,7 +431,7 @@ impl RankPrecomp {
         }
         let b = self.b_full.top_rows(d);
         let bt = b.transpose();
-        RankAdapter { at, b, bt, threshold, exp_rank, d }
+        RankAdapter { at, b, bt, threshold, exp_rank, d, schedule: BudgetSchedule::default() }
     }
 
     /// Pooled rank-contribution scores on the fit set (Fig. 2 data).
@@ -353,6 +525,75 @@ mod tests {
                 assert_eq!(solo.data, batched.row(r).to_vec(), "frac {frac} row {r}");
             }
         }
+    }
+
+    #[test]
+    fn runtime_views_bitwise_match_static_adapters() {
+        // The budget-schedule contract: one full-basis adapter under a
+        // BudgetView must reproduce, bit for bit on the decode paths, the
+        // statically truncated adapter the line search builds for the same
+        // budget.
+        let (w, xf, xe) = setup(32, 24, 21);
+        let pre = RankPrecomp::new(&w, &xf, &xe, 23);
+        let fracs = [0.3, 0.5, 0.9];
+        let budgets: Vec<(f64, f64)> =
+            fracs.iter().map(|&f| (1.0 - f, pre.dense_flops() * f)).collect();
+        let (runtime, errs) = pre.runtime_adapter(&budgets);
+        assert_eq!(errs.len(), fracs.len());
+        let mut rng = Xoshiro256::new(25);
+        let xs = Mat::gaussian(5, 24, 1.0, &mut rng);
+        for &frac in &fracs {
+            let (stat, _) = pre.adapter_for_budget(pre.dense_flops() * frac);
+            let view = runtime.view_for(1.0 - frac);
+            assert_eq!(view.rank_cap, stat.d, "frac {frac}: schedule rank cap");
+            assert_eq!(view.threshold, stat.threshold, "frac {frac}: schedule threshold");
+            // Fused per-token path.
+            for r in 0..xs.rows {
+                assert_eq!(
+                    runtime.apply_tok_at(xs.row(r), view),
+                    stat.apply_tok(xs.row(r)),
+                    "frac {frac} row {r}: tok path diverged"
+                );
+            }
+            // Batched masked path.
+            let views = vec![view; xs.rows];
+            let batched = runtime.apply_tok_batch_views(&xs, &views);
+            let want = stat.apply_tok_batch(&xs);
+            assert_eq!(batched.data, want.data, "frac {frac}: batched path diverged");
+            // Sequence path re-quantizes through the packed GEMM: ≤1e-6.
+            let seq = runtime.apply_seq_at(&xs, view);
+            let want_seq = stat.apply_seq(&xs);
+            crate::util::prop::close_slices(&seq.data, &want_seq.data, 1e-6, 1e-6).unwrap();
+        }
+        // A batch mixing per-row budgets reproduces each row's single-budget
+        // output bitwise.
+        let mixed_views: Vec<BudgetView> = (0..xs.rows)
+            .map(|r| runtime.view_for(1.0 - fracs[r % fracs.len()]))
+            .collect();
+        let mixed = runtime.apply_tok_batch_views(&xs, &mixed_views);
+        for r in 0..xs.rows {
+            let solo = runtime.apply_tok_batch_views(
+                &Mat::from_vec(1, 24, xs.row(r).to_vec()),
+                &mixed_views[r..r + 1],
+            );
+            assert_eq!(solo.data, mixed.row(r).to_vec(), "mixed-budget row {r}");
+        }
+    }
+
+    #[test]
+    fn budget_schedule_resolves_nearest_entry() {
+        let mut s = BudgetSchedule::default();
+        for (rate, d) in [(0.2, 8), (0.35, 6), (0.5, 4)] {
+            s.push(BudgetEntry { rate, d, threshold: rate as f32, exp_rank: d as f64 });
+        }
+        assert_eq!(s.entry_for(0.2).unwrap().d, 8);
+        assert_eq!(s.entry_for(0.35).unwrap().d, 6);
+        assert_eq!(s.entry_for(0.5).unwrap().d, 4);
+        assert_eq!(s.entry_for(0.0).unwrap().d, 8, "below range clamps to least compressed");
+        assert_eq!(s.entry_for(0.9).unwrap().d, 4, "above range clamps to most compressed");
+        assert_eq!(s.entry_for(0.26).unwrap().d, 8, "nearest below");
+        assert_eq!(s.entry_for(0.44).unwrap().d, 4, "nearest above");
+        assert!(BudgetSchedule::default().entry_for(0.3).is_none());
     }
 
     #[test]

@@ -2,85 +2,114 @@
 //!
 //! Requests enter an admission queue; the batcher thread drains it,
 //! groups compatible scoring jobs into engine batches (up to `max_batch`,
-//! bounded wait), and runs generation jobs on the engine between batches.
+//! bounded wait), and runs generation jobs through an iteration-level
+//! decode session between batches.
 //!
 //! The **adaptive rank-budget controller** implements the paper's
 //! future-work §6 item ("a FLOP allocation strategy at the model level"):
-//! under load it routes batches to more-compressed RaNA variants, trading
-//! a little accuracy for throughput; idle traffic gets the dense model.
+//! under load it turns ONE engine's shared budget scalar up
+//! ([`Engine::set_budget`] — the runtime-budget model re-thresholds in
+//! O(1)) instead of swapping between per-tier engine clones; idle traffic
+//! decodes dense. Individual requests may override the shared budget, and
+//! mixed budgets batch together via per-row rank masks.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use super::engine::{DecodeSession, Engine};
+use super::engine::{DecodeSession, Engine, SeqEvent, SessionRequest};
 use super::metrics::Metrics;
+use super::protocol::{
+    self, cancel_response, generate_response, score_response, GenerateRequest, Request,
+};
 use crate::util::json::Json;
 
-/// A unit of work submitted to the coordinator.
-pub enum Op {
-    Score { text: String },
-    Generate { prompt: String, n: usize },
-    Stats,
+/// Queue-depth → shared-budget policy: depth ≥ thresholds[i] picks
+/// tiers[i+1]. The runtime replacement for the engine ladder — tiers are
+/// compression rates on ONE engine, not engine clones.
+#[derive(Clone, Debug)]
+pub struct BudgetPolicy {
+    /// Compression rates, ascending (index 0 = idle tier, usually 0.0).
+    pub tiers: Vec<f64>,
+    /// Queue-depth thresholds: depth ≥ thresholds[i] → tiers[i+1].
+    pub thresholds: Vec<usize>,
 }
 
+impl BudgetPolicy {
+    /// Serve everything at one fixed rate.
+    pub fn fixed(rate: f64) -> Self {
+        Self { tiers: vec![rate.max(0.0)], thresholds: vec![] }
+    }
+
+    /// Step up one tier per `max_batch` of backlog.
+    pub fn adaptive(tiers: Vec<f64>, max_batch: usize) -> Self {
+        let thresholds = (1..tiers.len()).map(|i| i * max_batch.max(1)).collect();
+        Self { tiers, thresholds }
+    }
+
+    /// Pick the shared rate for the current queue depth.
+    pub fn pick(&self, depth: usize) -> f64 {
+        let mut idx = 0;
+        for (i, &t) in self.thresholds.iter().enumerate() {
+            if depth >= t {
+                idx = (i + 1).min(self.tiers.len() - 1);
+            }
+        }
+        self.tiers[idx]
+    }
+}
+
+/// A unit of work submitted to the coordinator.
 pub struct Job {
-    pub op: Op,
+    pub req: Request,
     pub resp: mpsc::Sender<Json>,
     pub arrived: Instant,
 }
 
-/// A ladder of engines ordered by compression rate (index 0 = dense).
-pub struct BudgetLadder {
-    pub engines: Vec<(f64, Arc<dyn Engine>)>,
-    /// Queue-depth thresholds: depth ≥ thresholds[i] → use engine i+1.
-    pub thresholds: Vec<usize>,
-}
-
-impl BudgetLadder {
-    pub fn single(engine: Arc<dyn Engine>) -> Self {
-        Self { engines: vec![(0.0, engine)], thresholds: vec![] }
-    }
-
-    /// Pick an engine for the current queue depth.
-    pub fn pick(&self, depth: usize) -> (f64, &Arc<dyn Engine>) {
-        let mut idx = 0;
-        for (i, &t) in self.thresholds.iter().enumerate() {
-            if depth >= t {
-                idx = (i + 1).min(self.engines.len() - 1);
-            }
-        }
-        let (rate, e) = &self.engines[idx];
-        (*rate, e)
-    }
-}
+/// Most unmatched cancel targets remembered (a cancel can race ahead of
+/// its generate through the queue).
+const PENDING_CANCEL_CAP: usize = 256;
 
 pub struct Batcher {
     tx: Mutex<Option<mpsc::Sender<Job>>>,
     queue: Arc<Mutex<Option<mpsc::Receiver<Job>>>>,
     pub metrics: Arc<Metrics>,
     max_batch: usize,
-    ladder: Arc<BudgetLadder>,
+    engine: Arc<dyn Engine>,
+    policy: BudgetPolicy,
     batch_wait: Duration,
+    /// Shared rate currently applied to the engine.
+    current_rate: Mutex<f64>,
+    /// Cancel targets seen before their generate (bounded).
+    pending_cancels: Mutex<HashSet<String>>,
 }
 
 impl Batcher {
-    pub fn new(ladder: BudgetLadder, max_batch: usize) -> Self {
+    pub fn new(engine: Arc<dyn Engine>, policy: BudgetPolicy, max_batch: usize) -> Self {
         let (tx, rx) = mpsc::channel();
         let metrics = Arc::new(Metrics::new());
-        // Wire the serving metrics into every engine tier, so batched
-        // decode occupancy/throughput land in the `stats` snapshot.
-        for (_, engine) in &ladder.engines {
-            engine.set_metrics(Arc::clone(&metrics));
-        }
+        engine.set_metrics(Arc::clone(&metrics));
+        assert!(!policy.tiers.is_empty(), "budget policy needs at least one tier");
+        // An engine without a runtime budget knob (PJRT artifacts, plain
+        // dense models) cannot honor the controller: clamp to a dense
+        // fixed policy so reported budgets reflect what was actually
+        // served instead of phantom tier switches.
+        let policy = if engine.supports_runtime_budget() {
+            policy
+        } else {
+            BudgetPolicy::fixed(0.0)
+        };
         Self {
             tx: Mutex::new(Some(tx)),
             queue: Arc::new(Mutex::new(Some(rx))),
             metrics,
             max_batch: max_batch.max(1),
-            ladder: Arc::new(ladder),
+            engine,
+            policy,
             batch_wait: Duration::from_millis(2),
+            current_rate: Mutex::new(0.0),
+            pending_cancels: Mutex::new(HashSet::new()),
         }
     }
 
@@ -94,6 +123,40 @@ impl Batcher {
     /// batcher outlives the server loop via its `Arc`.
     pub fn close(&self) {
         self.tx.lock().unwrap().take();
+    }
+
+    fn current_rate(&self) -> f64 {
+        *self.current_rate.lock().unwrap()
+    }
+
+    /// Retune the engine's shared budget; counts actual tier changes and
+    /// refreshes the budget gauges.
+    fn apply_rate(&self, rate: f64) {
+        {
+            let mut cur = self.current_rate.lock().unwrap();
+            if (*cur - rate).abs() > 1e-12 {
+                self.engine.set_budget(rate);
+                self.metrics.budget_switches.fetch_add(1, Ordering::Relaxed);
+                *cur = rate;
+            }
+        }
+        self.metrics.rank_budget_milli.store((rate * 1000.0) as u64, Ordering::Relaxed);
+        self.metrics.effective_rank_frac_milli.store(
+            (self.engine.effective_rank_frac(rate).clamp(0.0, 1.0) * 1000.0) as u64,
+            Ordering::Relaxed,
+        );
+    }
+
+    fn take_pending_cancel(&self, id: &str) -> bool {
+        self.pending_cancels.lock().unwrap().remove(id)
+    }
+
+    fn remember_cancel(&self, id: &str) {
+        let mut set = self.pending_cancels.lock().unwrap();
+        if set.len() >= PENDING_CANCEL_CAP {
+            set.clear();
+        }
+        set.insert(id.to_string());
     }
 
     /// Run the batching loop until all submitters hang up.
@@ -140,78 +203,132 @@ impl Batcher {
         }
     }
 
+    /// Respond to a generate job without running it (racing cancel won).
+    fn respond_cancelled(&self, job: &Job, g: &GenerateRequest) {
+        self.metrics.observe_latency(job.arrived.elapsed());
+        let _ = job.resp.send(generate_response(
+            &g.id,
+            &g.prompt,
+            0,
+            &self.engine.name(),
+            g.budget.unwrap_or_else(|| self.current_rate()),
+            "cancelled",
+            g.stream,
+        ));
+    }
+
     /// Execute one batch. Returns jobs that arrived *during* a decode
     /// session but belong to the next batch (scores picked up while
     /// admitting generation work between steps).
     fn execute(&self, jobs: Vec<Job>, rx: &mpsc::Receiver<Job>) -> Vec<Job> {
         let depth = jobs.len();
-        let (rate, engine) = self.ladder.pick(depth);
-        self.metrics
-            .rank_budget_milli
-            .store((rate * 1000.0) as u64, Ordering::Relaxed);
+        self.apply_rate(self.policy.pick(depth));
         self.metrics.batches.fetch_add(1, Ordering::Relaxed);
         self.metrics.batched_jobs.fetch_add(depth as u64, Ordering::Relaxed);
 
         // Partition: score jobs batch together, generation jobs share an
-        // iteration-level decode session; stats are instant.
+        // iteration-level decode session; stats/cancel/shutdown are
+        // instant. Cancels are collected first so a cancel+generate pair
+        // landing in one batch resolves regardless of arrival order.
         let mut score_jobs: Vec<Job> = Vec::new();
-        let mut gen_jobs: Vec<(Job, String, usize)> = Vec::new();
+        let mut gen_jobs: Vec<Job> = Vec::new();
+        let mut cancels: Vec<Job> = Vec::new();
         for job in jobs {
             self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-            match job.op {
-                Op::Score { .. } => score_jobs.push(job),
-                Op::Generate { ref prompt, n } => {
-                    let p = prompt.clone();
-                    gen_jobs.push((job, p, n));
+            match &job.req {
+                Request::Score(_) => score_jobs.push(job),
+                Request::Generate(_) => gen_jobs.push(job),
+                Request::Cancel { .. } => cancels.push(job),
+                Request::Stats { id } => {
+                    let mut snap = self.metrics.snapshot();
+                    if let Json::Obj(m) = &mut snap {
+                        m.insert("id".into(), Json::str(id));
+                    }
+                    let _ = job.resp.send(snap);
+                    self.metrics.observe_latency(job.arrived.elapsed());
                 }
-                Op::Stats => {
-                    let _ = job.resp.send(self.metrics.snapshot());
+                Request::Shutdown { id } => {
+                    // Connection-level concern; in-process callers get ack.
+                    let _ = job.resp.send(Json::obj(vec![
+                        ("id", Json::str(id)),
+                        ("ok", Json::Bool(true)),
+                    ]));
                     self.metrics.observe_latency(job.arrived.elapsed());
                 }
             }
         }
+        for cancel in cancels {
+            let Request::Cancel { id, target } = &cancel.req else { unreachable!() };
+            // Same-batch generate? Kill it before it runs.
+            let hit = gen_jobs.iter().position(
+                |j| matches!(&j.req, Request::Generate(g) if g.id == *target),
+            );
+            let matched = match hit {
+                Some(i) => {
+                    let job = gen_jobs.remove(i);
+                    let Request::Generate(g) = &job.req else { unreachable!() };
+                    self.respond_cancelled(&job, g);
+                    true
+                }
+                None => {
+                    self.remember_cancel(target);
+                    false
+                }
+            };
+            let _ = cancel.resp.send(cancel_response(id, target, matched));
+            self.metrics.observe_latency(cancel.arrived.elapsed());
+        }
+
         let mut carried: Vec<Job> = Vec::new();
         if !gen_jobs.is_empty() {
-            if let Some(mut session) = engine.begin_decode_session() {
-                carried = self.run_decode_session(
-                    &mut *session,
-                    gen_jobs,
-                    rx,
-                    &engine.name(),
-                    rate,
-                );
+            if let Some(mut session) = self.engine.begin_decode_session() {
+                carried = self.run_decode_session(&mut *session, gen_jobs, rx);
             } else {
-                // Request-level fallback for engines without sessions.
-                let prompts: Vec<(String, usize)> =
-                    gen_jobs.iter().map(|(_, p, n)| (p.clone(), *n)).collect();
-                let outs = engine.generate_batch(&prompts);
-                for ((job, _, n), out) in gen_jobs.into_iter().zip(outs) {
-                    self.metrics.tokens_generated.fetch_add(n as u64, Ordering::Relaxed);
+                // Request-level fallback for engines without sessions
+                // (PJRT): no mid-flight cancel, stop, or token frames.
+                let prompts: Vec<(String, usize)> = gen_jobs
+                    .iter()
+                    .map(|j| match &j.req {
+                        Request::Generate(g) => (g.prompt.clone(), g.max_tokens),
+                        _ => unreachable!(),
+                    })
+                    .collect();
+                let outs = self.engine.generate_batch(&prompts);
+                for (job, out) in gen_jobs.into_iter().zip(outs) {
+                    let Request::Generate(g) = &job.req else { unreachable!() };
+                    let rate = g.budget.unwrap_or_else(|| self.current_rate());
+                    self.metrics.observe_budget(rate);
+                    self.metrics
+                        .tokens_generated
+                        .fetch_add(g.max_tokens as u64, Ordering::Relaxed);
                     self.metrics.observe_latency(job.arrived.elapsed());
-                    let _ = job.resp.send(Json::obj(vec![
-                        ("text", Json::Str(out)),
-                        ("engine", Json::Str(engine.name())),
-                        ("rank_budget", Json::Num(rate)),
-                    ]));
+                    let _ = job.resp.send(generate_response(
+                        &g.id,
+                        &out,
+                        g.max_tokens,
+                        &self.engine.name(),
+                        rate,
+                        "length",
+                        g.stream,
+                    ));
                 }
             }
         }
         if !score_jobs.is_empty() {
             let texts: Vec<String> = score_jobs
                 .iter()
-                .map(|j| match &j.op {
-                    Op::Score { text } => text.clone(),
+                .map(|j| match &j.req {
+                    Request::Score(s) => s.text.clone(),
                     _ => unreachable!(),
                 })
                 .collect();
-            let scores = engine.score_batch(&texts);
+            let scores = self.engine.score_batch(&texts);
+            let rate = self.current_rate();
             for (job, score) in score_jobs.into_iter().zip(scores) {
+                let Request::Score(s) = &job.req else { unreachable!() };
+                self.metrics.observe_budget(rate);
                 self.metrics.observe_latency(job.arrived.elapsed());
-                let _ = job.resp.send(Json::obj(vec![
-                    ("logprob", Json::Num(score)),
-                    ("engine", Json::Str(engine.name())),
-                    ("rank_budget", Json::Num(rate)),
-                ]));
+                let _ = job.resp.send(score_response(&s.id, score, &self.engine.name(), rate));
             }
         }
         carried
@@ -219,24 +336,26 @@ impl Batcher {
 
     /// Drive one iteration-level decode session: sequences join and retire
     /// *between engine steps*. New `Generate` jobs arriving on the live
-    /// queue are admitted straight into free slots mid-decode (instead of
-    /// waiting for the whole batch to finish); `Stats` is answered
-    /// immediately; anything else is carried to the next batch.
+    /// queue are admitted straight into free slots mid-decode; `Stats` and
+    /// `Cancel` are answered immediately; `Score` is carried to the next
+    /// batch. The shared budget is re-picked **per engine pass** from the
+    /// live generate backlog, so the controller tracks load at token
+    /// granularity without ever swapping engines.
     fn run_decode_session(
         &self,
         session: &mut dyn DecodeSession,
-        gen_jobs: Vec<(Job, String, usize)>,
+        gen_jobs: Vec<Job>,
         rx: &mpsc::Receiver<Job>,
-        engine_name: &str,
-        rate: f64,
     ) -> Vec<Job> {
-        let mut waiting: VecDeque<(Job, String, usize)> = gen_jobs.into();
+        let mut waiting: VecDeque<Job> = gen_jobs.into();
         let mut inflight: HashMap<u64, Job> = HashMap::new();
+        // Request-id → session-id, for mid-flight cancels.
+        let mut sids: HashMap<String, u64> = HashMap::new();
         let mut carried: Vec<Job> = Vec::new();
         // Bound on mid-session admissions: under sustained generate-only
-        // load the session must still drain and return to `run`, so the
-        // ladder tier and queue-depth accounting are re-evaluated instead
-        // of being frozen at the depth seen when the session started.
+        // load the session must still drain and return to `run`, so batch
+        // accounting is re-evaluated instead of being frozen at the depth
+        // seen when the session started.
         let mut fresh_budget = 2 * session.capacity();
         loop {
             // Fill free slots: queued work first, then fresh arrivals.
@@ -250,36 +369,84 @@ impl Batcher {
                     // Admit fresh arrivals only until a score job queues up,
                     // so decode sessions cannot starve the scoring path.
                     match rx.try_recv() {
-                        Ok(job) => match job.op {
-                            Op::Generate { ref prompt, n } => {
-                                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-                                fresh_budget -= 1;
-                                let p = prompt.clone();
-                                Some((job, p, n))
+                        Ok(job) => {
+                            // `requests` counts carried Score jobs when they
+                            // re-enter `execute` with the next batch, not
+                            // here — everything handled in-session is
+                            // counted in-session.
+                            match &job.req {
+                                Request::Generate(_) => {
+                                    self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                                    fresh_budget -= 1;
+                                    Some(job)
+                                }
+                                Request::Stats { id } => {
+                                    self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                                    let mut snap = self.metrics.snapshot();
+                                    if let Json::Obj(m) = &mut snap {
+                                        m.insert("id".into(), Json::str(id));
+                                    }
+                                    let _ = job.resp.send(snap);
+                                    self.metrics.observe_latency(job.arrived.elapsed());
+                                    continue;
+                                }
+                                Request::Cancel { id, target } => {
+                                    self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                                    let matched = self.cancel_in_session(
+                                        session,
+                                        target,
+                                        &mut waiting,
+                                        &sids,
+                                    );
+                                    let _ = job
+                                        .resp
+                                        .send(cancel_response(id, target, matched));
+                                    self.metrics.observe_latency(job.arrived.elapsed());
+                                    continue;
+                                }
+                                Request::Shutdown { id } => {
+                                    self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                                    let _ = job.resp.send(Json::obj(vec![
+                                        ("id", Json::str(id)),
+                                        ("ok", Json::Bool(true)),
+                                    ]));
+                                    self.metrics.observe_latency(job.arrived.elapsed());
+                                    continue;
+                                }
+                                Request::Score(_) => {
+                                    // Counted when it re-enters `execute`.
+                                    carried.push(job);
+                                    continue;
+                                }
                             }
-                            Op::Stats => {
-                                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-                                let _ = job.resp.send(self.metrics.snapshot());
-                                self.metrics.observe_latency(job.arrived.elapsed());
-                                continue;
-                            }
-                            Op::Score { .. } => {
-                                carried.push(job);
-                                continue;
-                            }
-                        },
+                        }
                         Err(_) => None,
                     }
                 } else {
                     None
                 };
-                let Some((job, p, n)) = next else { break };
-                match session.try_join(&p, n) {
-                    Some(id) => {
-                        inflight.insert(id, job);
+                let Some(job) = next else { break };
+                let Request::Generate(g) = &job.req else { unreachable!() };
+                if self.take_pending_cancel(&g.id) {
+                    self.respond_cancelled(&job, g);
+                    continue;
+                }
+                let sreq = SessionRequest {
+                    prompt: g.prompt.clone(),
+                    max_new: g.max_tokens,
+                    sampling: g.sampling,
+                    stop: g.stop.clone(),
+                    budget: g.budget,
+                };
+                match session.try_join(&sreq) {
+                    Some(sid) => {
+                        self.metrics
+                            .observe_budget(g.budget.unwrap_or_else(|| self.current_rate()));
+                        sids.insert(g.id.clone(), sid);
+                        inflight.insert(sid, job);
                     }
                     None => {
-                        waiting.push_front((job, p, n));
+                        waiting.push_front(job);
                         break;
                     }
                 }
@@ -287,31 +454,124 @@ impl Batcher {
             if inflight.is_empty() && waiting.is_empty() {
                 break;
             }
-            for (id, text, generated) in session.step() {
-                if let Some(job) = inflight.remove(&id) {
-                    // Credit the tokens actually decoded, not the requested
-                    // n (the KV cache can cap a sequence short).
-                    self.metrics.tokens_generated.fetch_add(generated as u64, Ordering::Relaxed);
-                    self.metrics.observe_latency(job.arrived.elapsed());
-                    let _ = job.resp.send(Json::obj(vec![
-                        ("text", Json::Str(text)),
-                        ("engine", Json::str(engine_name)),
-                        ("rank_budget", Json::Num(rate)),
-                    ]));
+            // Controller: one shared scalar per engine pass, from the live
+            // generate backlog.
+            self.apply_rate(self.policy.pick(waiting.len() + inflight.len()));
+            for ev in session.step() {
+                match ev {
+                    SeqEvent::Token { id, delta } => {
+                        if let Some(job) = inflight.get(&id) {
+                            if let Request::Generate(g) = &job.req {
+                                if g.stream {
+                                    let _ = job.resp.send(protocol::token_frame(&g.id, &delta));
+                                }
+                            }
+                        }
+                    }
+                    SeqEvent::Finished { id, text, generated, reason } => {
+                        if let Some(job) = inflight.remove(&id) {
+                            let Request::Generate(g) = &job.req else { unreachable!() };
+                            sids.remove(&g.id);
+                            // Credit the tokens actually decoded, not the
+                            // requested n (the KV cache can cap short).
+                            self.metrics
+                                .tokens_generated
+                                .fetch_add(generated as u64, Ordering::Relaxed);
+                            self.metrics.observe_latency(job.arrived.elapsed());
+                            let _ = job.resp.send(generate_response(
+                                &g.id,
+                                &text,
+                                generated,
+                                &self.engine.name(),
+                                g.budget.unwrap_or_else(|| self.current_rate()),
+                                reason.as_str(),
+                                g.stream,
+                            ));
+                        }
+                    }
                 }
             }
         }
         carried
     }
+
+    /// Cancel `target` inside a live session: in-flight sequences are
+    /// cancelled in the engine, queued ones answered directly; unknown
+    /// targets are remembered for a racing generate.
+    fn cancel_in_session(
+        &self,
+        session: &mut dyn DecodeSession,
+        target: &str,
+        waiting: &mut VecDeque<Job>,
+        sids: &HashMap<String, u64>,
+    ) -> bool {
+        if let Some(&sid) = sids.get(target) {
+            return session.cancel(sid);
+        }
+        if let Some(i) = waiting.iter().position(
+            |j| matches!(&j.req, Request::Generate(g) if g.id == target),
+        ) {
+            let job = waiting.remove(i).expect("checked position");
+            let Request::Generate(g) = &job.req else { unreachable!() };
+            self.respond_cancelled(&job, g);
+            return true;
+        }
+        self.remember_cancel(target);
+        false
+    }
 }
 
-/// In-process client: submit one op and wait for the response.
-pub fn call(tx: &mpsc::Sender<Job>, op: Op) -> anyhow::Result<Json> {
+/// In-process client: submit one request and wait for the **final**
+/// response frame (streaming token frames are drained and discarded; use
+/// [`call_frames`] to keep them).
+pub fn call(tx: &mpsc::Sender<Job>, req: Request) -> anyhow::Result<Json> {
+    Ok(call_frames(tx, req)?.pop().expect("call_frames returns at least one frame"))
+}
+
+/// In-process client keeping every frame: token deltas (if streaming) in
+/// order, final frame last.
+pub fn call_frames(tx: &mpsc::Sender<Job>, req: Request) -> anyhow::Result<Vec<Json>> {
     let (rtx, rrx) = mpsc::channel();
-    tx.send(Job { op, resp: rtx, arrived: Instant::now() })
+    tx.send(Job { req, resp: rtx, arrived: Instant::now() })
         .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
-    rrx.recv_timeout(Duration::from_secs(120))
-        .map_err(|_| anyhow::anyhow!("coordinator response timeout"))
+    let mut frames = Vec::new();
+    loop {
+        let frame = rrx
+            .recv_timeout(Duration::from_secs(120))
+            .map_err(|_| anyhow::anyhow!("coordinator response timeout"))?;
+        let done = protocol::is_final_frame(&frame);
+        frames.push(frame);
+        if done {
+            return Ok(frames);
+        }
+    }
+}
+
+/// Convenience constructors for the common ops (tests, benches, examples).
+pub fn score_req(text: &str) -> Request {
+    Request::Score(protocol::ScoreRequest { id: next_local_id(), text: text.to_string() })
+}
+
+pub fn generate_req(prompt: &str, tokens: usize) -> Request {
+    Request::Generate(GenerateRequest {
+        id: next_local_id(),
+        prompt: prompt.to_string(),
+        max_tokens: tokens,
+        sampling: crate::model::Sampling::default(),
+        stop: Vec::new(),
+        budget: None,
+        stream: false,
+    })
+}
+
+pub fn stats_req() -> Request {
+    Request::Stats { id: next_local_id() }
+}
+
+fn next_local_id() -> String {
+    use std::sync::atomic::AtomicU64;
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    format!("loc-{}", NEXT.fetch_add(1, Ordering::Relaxed))
 }
 
 #[cfg(test)]
@@ -326,7 +586,7 @@ mod tests {
         let m = tiny_model(Arch::SwiGlu, 401);
         let engine: Arc<dyn Engine> =
             Arc::new(NativeEngine::new(Arc::new(AdaptedModel::unadapted(m))));
-        let batcher = Arc::new(Batcher::new(BudgetLadder::single(engine), max_batch));
+        let batcher = Arc::new(Batcher::new(engine, BudgetPolicy::fixed(0.0), max_batch));
         let tx = batcher.submitter();
         let b2 = Arc::clone(&batcher);
         std::thread::spawn(move || b2.run());
@@ -336,10 +596,56 @@ mod tests {
     #[test]
     fn score_and_generate_roundtrip() {
         let (_b, tx) = start_batcher(4);
-        let r = call(&tx, Op::Score { text: "hello world".into() }).unwrap();
+        let r = call(&tx, score_req("hello world")).unwrap();
         assert!(r.get_f64("logprob").unwrap() < 0.0);
-        let g = call(&tx, Op::Generate { prompt: "ab".into(), n: 3 }).unwrap();
+        assert!(r.get_str("id").unwrap().starts_with("loc-"));
+        let g = call(&tx, generate_req("ab", 3)).unwrap();
         assert!(g.get_str("text").unwrap().starts_with("ab"));
+        assert_eq!(g.get_str("finish_reason").unwrap(), "length");
+        assert_eq!(g.get_usize("tokens").unwrap(), 3);
+    }
+
+    #[test]
+    fn streaming_generate_emits_token_frames_then_done() {
+        let (_b, tx) = start_batcher(4);
+        let mut req = generate_req("ab", 4);
+        let Request::Generate(g) = &mut req else { unreachable!() };
+        g.stream = true;
+        let id = g.id.clone();
+        let frames = call_frames(&tx, req).unwrap();
+        let done = frames.last().unwrap();
+        assert_eq!(done.get_str("event").unwrap(), "done");
+        let text = done.get_str("text").unwrap();
+        // Empty-decoding tokens (BOS/padding ids from a random-init model)
+        // produce no frames; any visible text must have streamed.
+        if text.len() > "ab".len() {
+            assert!(frames.len() >= 2, "expected token frames + done, got {frames:?}");
+        }
+        let deltas: String = frames[..frames.len() - 1]
+            .iter()
+            .map(|f| {
+                assert_eq!(f.get_str("event").unwrap(), "token");
+                assert_eq!(f.get_str("id").unwrap(), id);
+                f.get_str("delta").unwrap().to_string()
+            })
+            .collect();
+        assert_eq!(format!("ab{deltas}"), text, "frames must reassemble the final text");
+    }
+
+    #[test]
+    fn cancel_of_unknown_target_is_remembered_then_applied() {
+        let (_b, tx) = start_batcher(2);
+        // Cancel first: unmatched, remembered.
+        let c = call(&tx, Request::Cancel { id: "c1".into(), target: "g-future".into() })
+            .unwrap();
+        assert_eq!(c.get("cancelled").unwrap().as_bool(), Some(false));
+        // The generate with that id then gets cancelled at admission.
+        let mut req = generate_req("ab", 8);
+        let Request::Generate(g) = &mut req else { unreachable!() };
+        g.id = "g-future".into();
+        let r = call(&tx, req).unwrap();
+        assert_eq!(r.get_str("finish_reason").unwrap(), "cancelled");
+        assert_eq!(r.get_usize("tokens").unwrap(), 0);
     }
 
     #[test]
@@ -349,7 +655,7 @@ mod tests {
             .map(|i| {
                 let tx = tx.clone();
                 std::thread::spawn(move || {
-                    call(&tx, Op::Score { text: format!("request number {i}") }).unwrap()
+                    call(&tx, score_req(&format!("request number {i}"))).unwrap()
                 })
             })
             .collect();
@@ -370,15 +676,15 @@ mod tests {
             .map(|i| {
                 let tx = tx.clone();
                 std::thread::spawn(move || {
-                    call(&tx, Op::Generate { prompt: format!("p{i}"), n: 12 }).unwrap()
+                    call(&tx, generate_req(&format!("p{i}"), 12)).unwrap()
                 })
             })
             .collect();
         for h in handles {
             let r = h.join().unwrap();
             assert!(r.get_str("text").unwrap().starts_with('p'));
-            // Generate responses now carry the tier's rank budget too.
-            assert!(r.get_f64("rank_budget").is_ok());
+            // Generate responses carry the resolved per-request budget.
+            assert!(r.get_f64("budget").is_ok());
         }
         assert_eq!(b.metrics.tokens_generated.load(Ordering::Relaxed), 96);
         let steps = b.metrics.decode_steps.load(Ordering::Relaxed);
@@ -398,22 +704,22 @@ mod tests {
     #[test]
     fn stats_op_reports_counters() {
         let (_b, tx) = start_batcher(2);
-        call(&tx, Op::Score { text: "x y z".into() }).unwrap();
-        let s = call(&tx, Op::Stats).unwrap();
+        call(&tx, score_req("x y z")).unwrap();
+        let s = call(&tx, stats_req()).unwrap();
         assert!(s.get_f64("requests").unwrap() >= 1.0);
+        assert!(s.get("budget_hist").is_ok());
+        assert!(s.get_str("id").unwrap().starts_with("loc-"));
     }
 
     #[test]
-    fn budget_ladder_picks_by_depth() {
-        let m = tiny_model(Arch::SwiGlu, 403);
-        let e: Arc<dyn Engine> =
-            Arc::new(NativeEngine::new(Arc::new(AdaptedModel::unadapted(m))));
-        let ladder = BudgetLadder {
-            engines: vec![(0.0, Arc::clone(&e)), (0.3, Arc::clone(&e)), (0.5, e)],
-            thresholds: vec![4, 8],
-        };
-        assert_eq!(ladder.pick(1).0, 0.0);
-        assert_eq!(ladder.pick(5).0, 0.3);
-        assert_eq!(ladder.pick(20).0, 0.5);
+    fn budget_policy_picks_by_depth() {
+        let p = BudgetPolicy::adaptive(vec![0.0, 0.3, 0.5], 4);
+        assert_eq!(p.thresholds, vec![4, 8]);
+        assert_eq!(p.pick(1), 0.0);
+        assert_eq!(p.pick(5), 0.3);
+        assert_eq!(p.pick(20), 0.5);
+        let f = BudgetPolicy::fixed(0.35);
+        assert_eq!(f.pick(0), 0.35);
+        assert_eq!(f.pick(100), 0.35);
     }
 }

@@ -11,6 +11,10 @@ use crate::util::json::Json;
 pub const LATENCY_EDGES_US: [u64; 10] =
     [100, 300, 1_000, 3_000, 10_000, 30_000, 100_000, 300_000, 1_000_000, 3_000_000];
 
+/// Upper edges of the per-request budget histogram (compression rate);
+/// bucket 0 counts dense (rate 0) requests, the last bucket clamps.
+pub const BUDGET_EDGES: [f64; 6] = [0.0, 0.2, 0.35, 0.5, 0.75, 1.0];
+
 #[derive(Default)]
 pub struct Metrics {
     pub requests: AtomicU64,
@@ -33,6 +37,12 @@ pub struct Metrics {
     pub prefix_hit_tokens: AtomicU64,
     /// Sequences preempted (blocks released, requeued) under pool pressure.
     pub kv_preemptions: AtomicU64,
+    /// Shared-budget retunes by the controller (tier changes, not swaps).
+    pub budget_switches: AtomicU64,
+    /// Calibrated active-rank fraction at the current shared budget ×1000.
+    pub effective_rank_frac_milli: AtomicU64,
+    /// Per-request resolved-budget histogram over [`BUDGET_EDGES`].
+    budget_hist: [AtomicU64; 6],
     /// Wall-clock spent inside batched decode passes.
     decode_time_us: AtomicU64,
     latency: [AtomicU64; 10],
@@ -50,6 +60,18 @@ impl Metrics {
         self.latency[idx].fetch_add(1, Ordering::Relaxed);
         self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
         self.responses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record the budget a request was actually served at (per-request
+    /// override or the shared scalar).
+    pub fn observe_budget(&self, rate: f64) {
+        let idx = BUDGET_EDGES.iter().position(|&e| rate <= e).unwrap_or(5);
+        self.budget_hist[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Per-bucket counts of the budget histogram.
+    pub fn budget_hist_counts(&self) -> Vec<u64> {
+        self.budget_hist.iter().map(|c| c.load(Ordering::Relaxed)).collect()
     }
 
     /// Record one batched decode pass: `tokens` sequences advanced in `d`.
@@ -142,6 +164,29 @@ impl Metrics {
                 Json::Num(self.prefix_hit_tokens.load(Ordering::Relaxed) as f64),
             ),
             ("kv_preemptions", Json::Num(self.kv_preemptions.load(Ordering::Relaxed) as f64)),
+            (
+                "budget_switches",
+                Json::Num(self.budget_switches.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "effective_rank_frac",
+                Json::Num(
+                    self.effective_rank_frac_milli.load(Ordering::Relaxed) as f64 / 1000.0,
+                ),
+            ),
+            (
+                "budget_hist",
+                Json::Arr(
+                    self.budget_hist_counts()
+                        .into_iter()
+                        .map(|c| Json::Num(c as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "budget_edges",
+                Json::Arr(BUDGET_EDGES.iter().map(|&e| Json::Num(e)).collect()),
+            ),
             ("decode_occupancy", Json::Num(self.decode_occupancy())),
             ("decode_tokens_per_sec", Json::Num(self.decode_tokens_per_sec())),
             ("mean_latency_us", Json::Num(self.mean_latency_us())),
@@ -185,9 +230,28 @@ mod tests {
             "kv_blocks_peak",
             "prefix_hit_tokens",
             "kv_preemptions",
+            "budget_switches",
+            "effective_rank_frac",
+            "budget_hist",
+            "budget_edges",
         ] {
             assert!(s.get(key).is_ok(), "missing {key}");
         }
+    }
+
+    #[test]
+    fn budget_histogram_buckets_by_rate() {
+        let m = Metrics::new();
+        m.observe_budget(0.0); // dense bucket
+        m.observe_budget(0.0);
+        m.observe_budget(0.2);
+        m.observe_budget(0.35);
+        m.observe_budget(0.34); // rounds into the 0.35 bucket
+        m.observe_budget(0.5);
+        m.observe_budget(0.99);
+        let counts = m.budget_hist_counts();
+        assert_eq!(counts, vec![2, 1, 2, 1, 0, 1]);
+        assert_eq!(counts.iter().sum::<u64>(), 7);
     }
 
     #[test]

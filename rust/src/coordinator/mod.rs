@@ -1,28 +1,36 @@
 //! Layer-3 serving coordinator.
 //!
 //! A vLLM-router-shaped serving stack scaled to this reproduction:
-//! TCP line-protocol front end → admission queue → continuous batcher →
-//! engine (native masked-skipping or PJRT AOT artifacts), with an adaptive
-//! rank-budget controller that implements the paper's future-work item of
-//! model-level FLOP allocation under load. Python is never on this path —
-//! after `make artifacts` the binary is self-contained.
+//! TCP line-protocol front end (typed, validated requests — see
+//! [`protocol`]) → admission queue → continuous batcher → ONE engine
+//! whose compute budget is a runtime knob. The adaptive rank-budget
+//! controller retunes that knob per engine pass under load (the paper's
+//! future-work model-level FLOP allocation); per-request `budget`
+//! overrides mix inside one batch via per-row rank masks. Python is never
+//! on this path — after `make artifacts` the binary is self-contained.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod protocol;
 pub mod workload;
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
+use std::time::Duration;
 
-use batcher::{Batcher, BudgetLadder, Job, Op};
+use batcher::{Batcher, BudgetPolicy, Job};
 use engine::{Engine, NativeEngine, PjrtScoreEngine};
+use protocol::{Limits, ProtocolError, Request};
 
-use crate::adapters::calibrate::{self, CalibOptions, Method};
-use crate::adapters::AdaptedModel;
+use crate::adapters::calibrate::{self, CalibOptions};
 use crate::util::json::Json;
+
+/// The default budget tiers of `--adaptive-budget` (compression rates;
+/// index 0 = dense). One calibration serves all of them.
+pub const DEFAULT_BUDGET_TIERS: [f64; 4] = [0.0, 0.2, 0.35, 0.5];
 
 /// Configuration of `rana serve`.
 #[derive(Clone, Debug)]
@@ -32,90 +40,134 @@ pub struct ServerConfig {
     pub max_batch: usize,
     /// Fixed target compression (0 → dense) when `adaptive_budget` is off.
     pub target_compression: f64,
-    /// Enable the adaptive rank-budget ladder (dense/0.2/0.35/0.5).
+    /// Enable the adaptive rank-budget controller over `budget_tiers`.
     pub adaptive_budget: bool,
+    /// Compression tiers the controller steps through (and the rates the
+    /// runtime schedule is calibrated at). Empty → [`DEFAULT_BUDGET_TIERS`].
+    pub budget_tiers: Vec<f64>,
     /// "native" or "pjrt".
     pub engine: String,
+    /// Hidden states captured for adapter calibration.
+    pub calib_fit: usize,
+    /// Protocol edge limits (max tokens per generate, max line bytes).
+    pub limits: Limits,
 }
 
-/// Build the engine ladder for a config (exposed for examples/benches).
-pub fn build_ladder(cfg: &ServerConfig) -> anyhow::Result<BudgetLadder> {
-    if cfg.engine == "pjrt" {
-        let dense: Arc<dyn Engine> = Arc::new(PjrtScoreEngine::load(&cfg.model, "dense")?);
-        // A RaNA-adapted artifact is exported alongside dense; use it as
-        // the loaded tier if present.
-        let mut engines: Vec<(f64, Arc<dyn Engine>)> = vec![(0.0, dense)];
-        if let Ok(rana) = PjrtScoreEngine::load(&cfg.model, "rana") {
-            engines.push((0.35, Arc::new(rana)));
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            model: "llama-sim".into(),
+            port: 7070,
+            max_batch: 8,
+            target_compression: 0.0,
+            adaptive_budget: false,
+            budget_tiers: Vec::new(),
+            engine: "native".into(),
+            calib_fit: 1024,
+            limits: Limits::default(),
         }
-        let thresholds = if cfg.adaptive_budget && engines.len() > 1 {
-            vec![cfg.max_batch]
+    }
+}
+
+impl ServerConfig {
+    /// The compression tiers this server serves (sorted, deduped, with a
+    /// dense tier 0 when adaptive).
+    pub fn tiers(&self) -> Vec<f64> {
+        let mut tiers: Vec<f64> = if self.adaptive_budget {
+            let base = if self.budget_tiers.is_empty() {
+                DEFAULT_BUDGET_TIERS.to_vec()
+            } else {
+                self.budget_tiers.clone()
+            };
+            let mut t: Vec<f64> = base.into_iter().filter(|r| (0.0..1.0).contains(r)).collect();
+            if !t.contains(&0.0) {
+                t.push(0.0);
+            }
+            t
         } else {
-            vec![]
+            vec![self.target_compression.clamp(0.0, 0.99)]
         };
-        return Ok(BudgetLadder { engines, thresholds });
+        tiers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        tiers.dedup();
+        tiers
     }
 
-    let model = Arc::new(crate::model::Model::load(&crate::model::model_dir(&cfg.model))?);
-    let mut engines: Vec<(f64, Arc<dyn Engine>)> = Vec::new();
-    let rates: Vec<f64> = if cfg.adaptive_budget {
-        vec![0.0, 0.2, 0.35, 0.5]
+    /// The queue-depth controller over [`ServerConfig::tiers`].
+    pub fn policy(&self) -> BudgetPolicy {
+        let tiers = self.tiers();
+        if self.adaptive_budget && tiers.len() > 1 {
+            BudgetPolicy::adaptive(tiers, self.max_batch)
+        } else {
+            BudgetPolicy::fixed(*tiers.first().unwrap_or(&0.0))
+        }
+    }
+}
+
+/// Build the ONE engine that serves every tier of `cfg` (exposed for
+/// examples/benches). The native path calibrates once and attaches a
+/// runtime budget schedule ([`calibrate::adapt_runtime`]) — the old
+/// N-clone engine ladder is gone. Falls back to a seeded random init when
+/// trained artifacts are absent (smoke/CI paths).
+pub fn build_engine(cfg: &ServerConfig) -> anyhow::Result<Arc<dyn Engine>> {
+    if cfg.engine == "pjrt" {
+        // PJRT artifacts are AOT-compiled with their compute baked in: no
+        // runtime budget knob. Serve the dense artifact.
+        return Ok(Arc::new(PjrtScoreEngine::load(&cfg.model, "dense")?) as Arc<dyn Engine>);
+    }
+    let model = Arc::new(crate::model::load_or_random(&cfg.model, 0x5E12)?);
+    let compressed: Vec<f64> = cfg.tiers().into_iter().filter(|&r| r > 0.0).collect();
+    let adapted = if compressed.is_empty() {
+        crate::adapters::AdaptedModel::unadapted(model)
     } else {
-        vec![cfg.target_compression.max(0.0)]
-    };
-    let needs_calib = rates.iter().any(|&r| r > 0.0);
-    let calib = if needs_calib {
         let corpus = crate::data::generate_corpus(400_000, 1_000);
-        Some(calibrate::collect(
+        let calib = calibrate::collect(
             &model,
             &corpus.train,
-            &CalibOptions { n_fit: 1024, n_eval: 128, window: 128, seed: 0x5E12 },
-        ))
-    } else {
-        None
+            &CalibOptions { n_fit: cfg.calib_fit, n_eval: 128, window: 128, seed: 0x5E12 },
+        );
+        let (adapted, _reports) =
+            calibrate::adapt_runtime(Arc::clone(&model), &calib, &compressed, 512, 0x5E12);
+        adapted
     };
-    for &rate in &rates {
-        let adapted = if rate > 0.0 {
-            let (a, _) = calibrate::adapt(
-                Arc::clone(&model),
-                calib.as_ref().unwrap(),
-                Method::Rana,
-                rate,
-                512,
-                0x5E12,
-            );
-            a
-        } else {
-            AdaptedModel::unadapted(Arc::clone(&model))
-        };
-        engines.push((rate, Arc::new(NativeEngine::new(Arc::new(adapted)))));
-    }
-    // Queue-depth thresholds: step up one tier per max_batch of backlog.
-    let thresholds: Vec<usize> =
-        (1..engines.len()).map(|i| i * cfg.max_batch.max(1)).collect();
-    Ok(BudgetLadder { engines, thresholds })
+    Ok(Arc::new(NativeEngine::new(Arc::new(adapted))) as Arc<dyn Engine>)
 }
 
 /// Start the coordinator and serve the TCP line protocol until a client
 /// sends `{"op":"shutdown"}`.
 pub fn serve(cfg: ServerConfig) -> anyhow::Result<()> {
-    let ladder = build_ladder(&cfg)?;
+    let engine = build_engine(&cfg)?;
     println!(
-        "coordinator: model={} engine={} tiers={} max_batch={}",
+        "coordinator: model={} engine={} tiers={:?} max_batch={} runtime_budget={}",
         cfg.model,
-        cfg.engine,
-        ladder.engines.len(),
-        cfg.max_batch
+        engine.name(),
+        cfg.tiers(),
+        cfg.max_batch,
+        engine.supports_runtime_budget(),
     );
-    let batcher = Arc::new(Batcher::new(ladder, cfg.max_batch));
+    let listener = TcpListener::bind(("127.0.0.1", cfg.port))?;
+    println!("listening on {}", listener.local_addr()?);
+    serve_on(listener, engine, cfg)
+}
+
+/// Serve an already-bound listener with an already-built engine (test
+/// entry point: bind port 0, inject a tiny engine).
+pub fn serve_on(
+    listener: TcpListener,
+    engine: Arc<dyn Engine>,
+    cfg: ServerConfig,
+) -> anyhow::Result<()> {
+    let batcher = Arc::new(Batcher::new(engine, cfg.policy(), cfg.max_batch));
     let submit = batcher.submitter();
     let b2 = Arc::clone(&batcher);
     let batch_thread = std::thread::spawn(move || b2.run());
 
-    let listener = TcpListener::bind(("127.0.0.1", cfg.port))?;
-    println!("listening on 127.0.0.1:{}", cfg.port);
     let stop = Arc::new(AtomicBool::new(false));
-    let mut conns = Vec::new();
+    struct Conn {
+        handle: std::thread::JoinHandle<()>,
+        done: Arc<AtomicBool>,
+    }
+    let mut conns: Vec<Conn> = Vec::new();
+    let limits = cfg.limits;
     for stream in listener.incoming() {
         if stop.load(Ordering::SeqCst) {
             break;
@@ -123,9 +175,24 @@ pub fn serve(cfg: ServerConfig) -> anyhow::Result<()> {
         let stream = stream?;
         let submit = submit.clone();
         let stop_conn = Arc::clone(&stop);
-        conns.push(std::thread::spawn(move || {
-            let _ = handle_conn(stream, submit, stop_conn);
-        }));
+        let done = Arc::new(AtomicBool::new(false));
+        let done2 = Arc::clone(&done);
+        let handle = std::thread::spawn(move || {
+            let _ = handle_conn(stream, submit, stop_conn, limits);
+            done2.store(true, Ordering::SeqCst);
+        });
+        conns.push(Conn { handle, done });
+        // Reap finished connection threads instead of accumulating them
+        // unboundedly across a long-lived server.
+        let mut i = 0;
+        while i < conns.len() {
+            if conns[i].done.load(Ordering::SeqCst) {
+                let c = conns.swap_remove(i);
+                let _ = c.handle.join();
+            } else {
+                i += 1;
+            }
+        }
         if stop.load(Ordering::SeqCst) {
             break;
         }
@@ -134,64 +201,120 @@ pub fn serve(cfg: ServerConfig) -> anyhow::Result<()> {
     batcher.close();
     let _ = batch_thread.join();
     for c in conns {
-        let _ = c.join();
+        let _ = c.handle.join();
     }
     Ok(())
+}
+
+/// Read one `\n`-terminated line of at most `max` bytes. Returns
+/// `Ok(None)` at EOF and `Err(bytes_discarded)` for an over-long line
+/// (the rest of the line is drained so the connection stays in sync).
+#[allow(clippy::type_complexity)]
+fn read_bounded_line<R: BufRead>(
+    reader: &mut R,
+    max: usize,
+) -> std::io::Result<Option<Result<String, usize>>> {
+    let mut buf: Vec<u8> = Vec::new();
+    let n = reader.by_ref().take(max as u64 + 1).read_until(b'\n', &mut buf)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if buf.last() != Some(&b'\n') && buf.len() > max {
+        // Too long: drain to the newline (or EOF), then report.
+        let mut discarded = buf.len();
+        let mut scratch = Vec::with_capacity(512);
+        loop {
+            scratch.clear();
+            let k = reader.by_ref().take(4096).read_until(b'\n', &mut scratch)?;
+            discarded += k;
+            if k == 0 || scratch.last() == Some(&b'\n') {
+                break;
+            }
+        }
+        return Ok(Some(Err(discarded)));
+    }
+    Ok(Some(Ok(String::from_utf8_lossy(&buf).trim().to_string())))
 }
 
 fn handle_conn(
     stream: TcpStream,
     submit: mpsc::Sender<Job>,
     stop: Arc<AtomicBool>,
+    limits: Limits,
 ) -> anyhow::Result<()> {
     let local = stream.local_addr()?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
+    let mut reader = std::io::BufReader::new(stream);
+    loop {
+        let line = match read_bounded_line(&mut reader, limits.max_line_bytes)? {
+            None => break, // EOF
+            Some(Err(discarded)) => {
+                // Over-long line: structured error, keep serving.
+                let e = ProtocolError::new(
+                    "line_too_long",
+                    format!(
+                        "request line of {discarded} bytes exceeds the {}-byte cap",
+                        limits.max_line_bytes
+                    ),
+                );
+                writeln!(writer, "{}", e.to_json(None))?;
+                continue;
+            }
+            Some(Ok(line)) => line,
+        };
+        if line.is_empty() {
             continue;
         }
-        let resp = match parse_request(&line) {
-            Ok(ParsedOp::Shutdown) => {
+        match protocol::parse_request(&line, &limits) {
+            Err(e) => {
+                // Per-request parse errors never kill the connection.
+                writeln!(writer, "{}", e.to_json(None))?;
+            }
+            Ok(Request::Shutdown { id }) => {
                 stop.store(true, Ordering::SeqCst);
                 // Unblock the accept loop by poking the listener.
                 let _ = TcpStream::connect(local);
-                writeln!(writer, "{}", Json::obj(vec![("ok", Json::Bool(true))]))?;
+                writeln!(
+                    writer,
+                    "{}",
+                    Json::obj(vec![("id", Json::str(&id)), ("ok", Json::Bool(true))])
+                )?;
                 break;
             }
-            Ok(ParsedOp::Op(op)) => match batcher::call(&submit, op) {
-                Ok(j) => j,
-                Err(e) => err_json(&e.to_string()),
-            },
-            Err(e) => err_json(&e.to_string()),
-        };
-        writeln!(writer, "{resp}")?;
+            Ok(req) => {
+                let id = req.id().to_string();
+                let (rtx, rrx) = mpsc::channel();
+                if submit
+                    .send(Job { req, resp: rtx, arrived: std::time::Instant::now() })
+                    .is_err()
+                {
+                    let e = ProtocolError::new("shutting_down", "coordinator stopped");
+                    writeln!(writer, "{}", e.to_json(Some(&id)))?;
+                    continue;
+                }
+                // Relay every frame (token deltas for streaming requests,
+                // then exactly one final frame).
+                loop {
+                    match rrx.recv_timeout(Duration::from_secs(120)) {
+                        Ok(frame) => {
+                            let done = protocol::is_final_frame(&frame);
+                            writeln!(writer, "{frame}")?;
+                            if done {
+                                break;
+                            }
+                        }
+                        Err(_) => {
+                            let e =
+                                ProtocolError::new("timeout", "coordinator response timeout");
+                            writeln!(writer, "{}", e.to_json(Some(&id)))?;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
     }
     Ok(())
-}
-
-enum ParsedOp {
-    Op(Op),
-    Shutdown,
-}
-
-fn parse_request(line: &str) -> anyhow::Result<ParsedOp> {
-    let j = Json::parse(line)?;
-    Ok(match j.get_str("op")? {
-        "score" => ParsedOp::Op(Op::Score { text: j.get_str("text")?.to_string() }),
-        "generate" => ParsedOp::Op(Op::Generate {
-            prompt: j.get_str("prompt")?.to_string(),
-            n: j.get_usize("tokens").unwrap_or(32),
-        }),
-        "stats" => ParsedOp::Op(Op::Stats),
-        "shutdown" => ParsedOp::Shutdown,
-        other => anyhow::bail!("unknown op {other:?}"),
-    })
-}
-
-fn err_json(msg: &str) -> Json {
-    Json::obj(vec![("error", Json::str(msg))])
 }
 
 #[cfg(test)]
@@ -199,20 +322,33 @@ mod tests {
     use super::*;
 
     #[test]
-    fn parse_request_ops() {
-        assert!(matches!(
-            parse_request(r#"{"op":"score","text":"abc"}"#).unwrap(),
-            ParsedOp::Op(Op::Score { .. })
-        ));
-        assert!(matches!(
-            parse_request(r#"{"op":"generate","prompt":"p","tokens":4}"#).unwrap(),
-            ParsedOp::Op(Op::Generate { n: 4, .. })
-        ));
-        assert!(matches!(
-            parse_request(r#"{"op":"shutdown"}"#).unwrap(),
-            ParsedOp::Shutdown
-        ));
-        assert!(parse_request(r#"{"op":"nope"}"#).is_err());
-        assert!(parse_request("not json").is_err());
+    fn config_tiers_sorted_deduped_with_dense() {
+        let cfg = ServerConfig {
+            adaptive_budget: true,
+            budget_tiers: vec![0.5, 0.2, 0.2, 0.35],
+            ..ServerConfig::default()
+        };
+        assert_eq!(cfg.tiers(), vec![0.0, 0.2, 0.35, 0.5]);
+        let p = cfg.policy();
+        assert_eq!(p.tiers, vec![0.0, 0.2, 0.35, 0.5]);
+        assert_eq!(p.thresholds, vec![8, 16, 24]);
+
+        let fixed = ServerConfig { target_compression: 0.3, ..ServerConfig::default() };
+        assert_eq!(fixed.tiers(), vec![0.3]);
+        assert!(fixed.policy().thresholds.is_empty());
+    }
+
+    #[test]
+    fn bounded_line_reader_keeps_stream_in_sync() {
+        let data = b"short line\nxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxx\nafter\n";
+        let mut r = std::io::BufReader::new(&data[..]);
+        let first = read_bounded_line(&mut r, 16).unwrap().unwrap().unwrap();
+        assert_eq!(first, "short line");
+        // 32 x's exceed the 16-byte cap → error, but the stream resumes at
+        // the next line.
+        assert!(read_bounded_line(&mut r, 16).unwrap().unwrap().is_err());
+        let third = read_bounded_line(&mut r, 16).unwrap().unwrap().unwrap();
+        assert_eq!(third, "after");
+        assert!(read_bounded_line(&mut r, 16).unwrap().is_none(), "EOF");
     }
 }

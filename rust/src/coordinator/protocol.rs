@@ -1,0 +1,385 @@
+//! Typed serving protocol: request/response schema of the TCP line
+//! protocol, with validation at the edge.
+//!
+//! Every request line is one JSON object with an `"op"` field; every
+//! response line is one JSON object echoing the request `"id"` (client-
+//! supplied, else server-assigned). Invalid input produces a **structured
+//! error** (`{"id":…,"error":{"code":…,"message":…}}`) instead of a closed
+//! connection or a silent default; `generate` rejects `tokens == 0` and
+//! clamps to the server-side [`Limits::max_tokens_cap`]. Streaming
+//! generates emit incremental `{"event":"token"}` frames followed by a
+//! single `{"event":"done"}` frame.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::model::Sampling;
+use crate::util::json::Json;
+
+/// Server-side protocol limits (configurable via `rana serve` flags).
+#[derive(Clone, Copy, Debug)]
+pub struct Limits {
+    /// Hard cap on `tokens` per generate request (requests above it are
+    /// clamped, not rejected).
+    pub max_tokens_cap: usize,
+    /// Longest accepted request line in bytes; longer lines get a
+    /// `line_too_long` error and the connection keeps serving.
+    pub max_line_bytes: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Self { max_tokens_cap: 512, max_line_bytes: 64 * 1024 }
+    }
+}
+
+/// Most stop sequences a request may carry.
+pub const MAX_STOP_SEQUENCES: usize = 4;
+/// Longest accepted stop sequence, in bytes.
+pub const MAX_STOP_BYTES: usize = 64;
+
+static NEXT_SERVER_ID: AtomicU64 = AtomicU64::new(1);
+
+fn fresh_id() -> String {
+    format!("srv-{}", NEXT_SERVER_ID.fetch_add(1, Ordering::Relaxed))
+}
+
+/// A validated generation request.
+#[derive(Clone, Debug)]
+pub struct GenerateRequest {
+    pub id: String,
+    pub prompt: String,
+    /// Tokens to generate (validated ≥ 1, clamped to the server cap).
+    pub max_tokens: usize,
+    pub sampling: Sampling,
+    /// Stop sequences: generation ends (and the text truncates) at the
+    /// first match in the generated suffix.
+    pub stop: Vec<String>,
+    /// Per-request compression-rate override in `[0, 1)`; `None` = the
+    /// server's shared budget.
+    pub budget: Option<f64>,
+    /// Emit incremental token frames before the final `done` frame.
+    pub stream: bool,
+}
+
+/// A validated scoring request.
+#[derive(Clone, Debug)]
+pub struct ScoreRequest {
+    pub id: String,
+    pub text: String,
+}
+
+/// Every operation the coordinator serves.
+#[derive(Clone, Debug)]
+pub enum Request {
+    Generate(GenerateRequest),
+    Score(ScoreRequest),
+    Stats { id: String },
+    /// Cancel the in-flight or queued generate whose id equals `target`.
+    Cancel { id: String, target: String },
+    Shutdown { id: String },
+}
+
+impl Request {
+    pub fn id(&self) -> &str {
+        match self {
+            Request::Generate(g) => &g.id,
+            Request::Score(s) => &s.id,
+            Request::Stats { id }
+            | Request::Cancel { id, .. }
+            | Request::Shutdown { id } => id,
+        }
+    }
+}
+
+/// A structured protocol error: machine-readable code + human message.
+#[derive(Clone, Debug)]
+pub struct ProtocolError {
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl ProtocolError {
+    pub fn new(code: &'static str, message: impl Into<String>) -> Self {
+        Self { code, message: message.into() }
+    }
+
+    /// The error response line, echoing the request id when known.
+    pub fn to_json(&self, id: Option<&str>) -> Json {
+        let err = Json::obj(vec![
+            ("code", Json::str(self.code)),
+            ("message", Json::str(&self.message)),
+        ]);
+        match id {
+            Some(id) => Json::obj(vec![("id", Json::str(id)), ("error", err)]),
+            None => Json::obj(vec![("error", err)]),
+        }
+    }
+}
+
+fn invalid(message: impl Into<String>) -> ProtocolError {
+    ProtocolError::new("invalid_request", message)
+}
+
+/// Parse + validate one request line. The returned request always carries
+/// an id (client-supplied `"id"` or a fresh server-assigned one).
+pub fn parse_request(line: &str, limits: &Limits) -> Result<Request, ProtocolError> {
+    let j = Json::parse(line).map_err(|e| ProtocolError::new("parse_error", e.to_string()))?;
+    let id = match j.get("id") {
+        Ok(v) => v
+            .as_str()
+            .map(|s| s.to_string())
+            .ok_or_else(|| invalid("\"id\" must be a string"))?,
+        Err(_) => fresh_id(),
+    };
+    let op = j
+        .get_str("op")
+        .map_err(|_| invalid("missing string field \"op\""))?;
+    match op {
+        "generate" => parse_generate(&j, id, limits).map(Request::Generate),
+        "score" => {
+            let text = j
+                .get_str("text")
+                .map_err(|_| invalid("score needs a string \"text\""))?;
+            Ok(Request::Score(ScoreRequest { id, text: text.to_string() }))
+        }
+        "stats" => Ok(Request::Stats { id }),
+        "cancel" => {
+            let target = j
+                .get_str("target")
+                .map_err(|_| invalid("cancel needs a string \"target\" (the generate id)"))?;
+            Ok(Request::Cancel { id, target: target.to_string() })
+        }
+        "shutdown" => Ok(Request::Shutdown { id }),
+        other => Err(ProtocolError::new("unknown_op", format!("unknown op {other:?}"))),
+    }
+}
+
+fn parse_generate(j: &Json, id: String, limits: &Limits) -> Result<GenerateRequest, ProtocolError> {
+    let prompt = j
+        .get_str("prompt")
+        .map_err(|_| invalid("generate needs a string \"prompt\""))?
+        .to_string();
+    // No silent default: `tokens` is required, must be ≥ 1, and clamps to
+    // the server-side cap.
+    let tokens = j
+        .get_f64("tokens")
+        .map_err(|_| invalid("generate needs a numeric \"tokens\""))?;
+    if !tokens.is_finite() || tokens < 1.0 {
+        return Err(invalid(format!(
+            "\"tokens\" must be >= 1 (got {tokens}); the server caps it at {}",
+            limits.max_tokens_cap
+        )));
+    }
+    let max_tokens = (tokens as usize).min(limits.max_tokens_cap);
+
+    let temperature = opt_f64(j, "temperature")?.unwrap_or(0.0);
+    if !(temperature.is_finite() && temperature >= 0.0) {
+        return Err(invalid("\"temperature\" must be a finite number >= 0"));
+    }
+    let top_p = opt_f64(j, "top_p")?.unwrap_or(1.0);
+    if !(top_p > 0.0 && top_p <= 1.0) {
+        return Err(invalid("\"top_p\" must be in (0, 1]"));
+    }
+    let top_k = opt_f64(j, "top_k")?.unwrap_or(0.0);
+    if !(top_k.is_finite() && top_k >= 0.0) {
+        return Err(invalid("\"top_k\" must be a non-negative integer"));
+    }
+    let seed = opt_f64(j, "seed")?.unwrap_or(0.0);
+    if !(seed.is_finite() && seed >= 0.0) {
+        return Err(invalid("\"seed\" must be a non-negative integer"));
+    }
+    let sampling = Sampling { temperature, top_k: top_k as usize, top_p, seed: seed as u64 };
+
+    let mut stop = Vec::new();
+    if let Ok(v) = j.get("stop") {
+        let arr = v.as_arr().ok_or_else(|| invalid("\"stop\" must be an array of strings"))?;
+        if arr.len() > MAX_STOP_SEQUENCES {
+            return Err(invalid(format!("at most {MAX_STOP_SEQUENCES} stop sequences")));
+        }
+        for s in arr {
+            let s = s
+                .as_str()
+                .ok_or_else(|| invalid("\"stop\" must be an array of strings"))?;
+            if s.is_empty() || s.len() > MAX_STOP_BYTES {
+                return Err(invalid(format!(
+                    "stop sequences must be 1..={MAX_STOP_BYTES} bytes"
+                )));
+            }
+            stop.push(s.to_string());
+        }
+    }
+
+    let budget = match opt_f64(j, "budget")? {
+        Some(b) if (0.0..1.0).contains(&b) => Some(b),
+        Some(b) => {
+            return Err(invalid(format!(
+                "\"budget\" must be a compression rate in [0, 1) (got {b})"
+            )))
+        }
+        None => None,
+    };
+
+    let stream = match j.get("stream") {
+        Ok(v) => v.as_bool().ok_or_else(|| invalid("\"stream\" must be a boolean"))?,
+        Err(_) => false,
+    };
+
+    Ok(GenerateRequest { id, prompt, max_tokens, sampling, stop, budget, stream })
+}
+
+fn opt_f64(j: &Json, key: &str) -> Result<Option<f64>, ProtocolError> {
+    match j.get(key) {
+        Ok(v) => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| invalid(format!("\"{key}\" must be a number"))),
+        Err(_) => Ok(None),
+    }
+}
+
+// ---- response builders -------------------------------------------------
+
+pub fn score_response(id: &str, logprob: f64, engine: &str, budget: f64) -> Json {
+    Json::obj(vec![
+        ("id", Json::str(id)),
+        ("logprob", Json::Num(logprob)),
+        ("engine", Json::str(engine)),
+        ("budget", Json::Num(budget)),
+    ])
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn generate_response(
+    id: &str,
+    text: &str,
+    tokens: usize,
+    engine: &str,
+    budget: f64,
+    finish_reason: &str,
+    stream_done: bool,
+) -> Json {
+    let mut pairs = vec![
+        ("id", Json::str(id)),
+        ("text", Json::str(text)),
+        ("tokens", Json::Num(tokens as f64)),
+        ("engine", Json::str(engine)),
+        ("budget", Json::Num(budget)),
+        ("finish_reason", Json::str(finish_reason)),
+    ];
+    if stream_done {
+        pairs.push(("event", Json::str("done")));
+    }
+    Json::obj(pairs)
+}
+
+/// One incremental streaming frame.
+pub fn token_frame(id: &str, delta: &str) -> Json {
+    Json::obj(vec![
+        ("id", Json::str(id)),
+        ("event", Json::str("token")),
+        ("delta", Json::str(delta)),
+    ])
+}
+
+pub fn cancel_response(id: &str, target: &str, cancelled: bool) -> Json {
+    Json::obj(vec![
+        ("id", Json::str(id)),
+        ("target", Json::str(target)),
+        ("cancelled", Json::Bool(cancelled)),
+    ])
+}
+
+/// True for the frame that terminates a request's response stream (every
+/// response except `{"event":"token"}` deltas).
+pub fn is_final_frame(j: &Json) -> bool {
+    !matches!(j.get("event").ok().and_then(|v| v.as_str()), Some("token"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn limits() -> Limits {
+        Limits { max_tokens_cap: 100, max_line_bytes: 4096 }
+    }
+
+    #[test]
+    fn parse_valid_ops() {
+        let r = parse_request(r#"{"op":"score","text":"abc","id":"c1"}"#, &limits()).unwrap();
+        assert!(matches!(&r, Request::Score(s) if s.id == "c1" && s.text == "abc"));
+        let r = parse_request(
+            r#"{"op":"generate","prompt":"p","tokens":4,"temperature":0.7,"top_k":5,"top_p":0.9,"seed":11,"stop":["\n"],"budget":0.35,"stream":true}"#,
+            &limits(),
+        )
+        .unwrap();
+        let Request::Generate(g) = r else { panic!("expected generate") };
+        assert_eq!(g.max_tokens, 4);
+        assert_eq!(g.sampling.temperature, 0.7);
+        assert_eq!(g.sampling.top_k, 5);
+        assert_eq!(g.sampling.top_p, 0.9);
+        assert_eq!(g.sampling.seed, 11);
+        assert_eq!(g.stop, vec!["\n".to_string()]);
+        assert_eq!(g.budget, Some(0.35));
+        assert!(g.stream);
+        assert!(!g.id.is_empty(), "server assigns an id when absent");
+        assert!(matches!(
+            parse_request(r#"{"op":"stats"}"#, &limits()).unwrap(),
+            Request::Stats { .. }
+        ));
+        assert!(matches!(
+            parse_request(r#"{"op":"cancel","target":"r9"}"#, &limits()).unwrap(),
+            Request::Cancel { ref target, .. } if target == "r9"
+        ));
+        assert!(matches!(
+            parse_request(r#"{"op":"shutdown"}"#, &limits()).unwrap(),
+            Request::Shutdown { .. }
+        ));
+    }
+
+    #[test]
+    fn generate_validation_rejects_and_clamps() {
+        // tokens == 0 → structured error, not a silent default.
+        let e = parse_request(r#"{"op":"generate","prompt":"p","tokens":0}"#, &limits())
+            .unwrap_err();
+        assert_eq!(e.code, "invalid_request");
+        // Missing tokens → error too.
+        assert!(parse_request(r#"{"op":"generate","prompt":"p"}"#, &limits()).is_err());
+        // Above cap → clamp.
+        let r = parse_request(
+            r#"{"op":"generate","prompt":"p","tokens":100000}"#,
+            &limits(),
+        )
+        .unwrap();
+        let Request::Generate(g) = r else { panic!() };
+        assert_eq!(g.max_tokens, 100);
+        // Bad params.
+        for bad in [
+            r#"{"op":"generate","prompt":"p","tokens":4,"temperature":-1}"#,
+            r#"{"op":"generate","prompt":"p","tokens":4,"top_p":0}"#,
+            r#"{"op":"generate","prompt":"p","tokens":4,"budget":1.5}"#,
+            r#"{"op":"generate","prompt":"p","tokens":4,"stop":[""]}"#,
+            r#"{"op":"generate","prompt":"p","tokens":4,"stop":"x"}"#,
+        ] {
+            assert!(parse_request(bad, &limits()).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn errors_are_structured() {
+        let e = parse_request("not json", &limits()).unwrap_err();
+        assert_eq!(e.code, "parse_error");
+        let j = e.to_json(Some("x1"));
+        assert_eq!(j.get_str("id").unwrap(), "x1");
+        assert_eq!(j.get("error").unwrap().get_str("code").unwrap(), "parse_error");
+        let e = parse_request(r#"{"op":"nope"}"#, &limits()).unwrap_err();
+        assert_eq!(e.code, "unknown_op");
+    }
+
+    #[test]
+    fn frames_and_finality() {
+        assert!(!is_final_frame(&token_frame("r1", "x")));
+        assert!(is_final_frame(&generate_response("r1", "t", 3, "e", 0.2, "length", true)));
+        assert!(is_final_frame(&score_response("r1", -1.0, "e", 0.0)));
+        assert!(is_final_frame(&cancel_response("c", "r1", true)));
+    }
+}

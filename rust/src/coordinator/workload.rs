@@ -9,7 +9,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-use super::batcher::{Batcher, Job, Op};
+use super::batcher::{generate_req, score_req, Batcher, Job};
+use super::protocol::Request;
 use crate::data::synthlang::Grammar;
 use crate::util::rng::Xoshiro256;
 
@@ -86,7 +87,7 @@ impl LoadReport {
     }
 }
 
-fn make_op(g: &Grammar, mix: &Mix, rng: &mut Xoshiro256) -> Op {
+fn make_op(g: &Grammar, mix: &Mix, rng: &mut Xoshiro256) -> Request {
     if rng.f64() < mix.generate_frac {
         let about = format!("about {} :", g.entities[rng.below(g.entities.len())]);
         let prompt = if mix.prefix_words > 0 && rng.f64() < mix.shared_prefix_frac {
@@ -94,9 +95,9 @@ fn make_op(g: &Grammar, mix: &Mix, rng: &mut Xoshiro256) -> Op {
         } else {
             about
         };
-        Op::Generate { prompt, n: mix.gen_tokens }
+        generate_req(&prompt, mix.gen_tokens)
     } else {
-        Op::Score { text: g.document(rng) }
+        score_req(&g.document(rng))
     }
 }
 
@@ -116,7 +117,7 @@ pub fn run_load(
     let inflight = Arc::new(AtomicU64::new(0));
     let t0 = Instant::now();
 
-    let fire = |op: Op,
+    let fire = |req: Request,
                 tx: &mpsc::Sender<Job>,
                 sink: &Arc<std::sync::Mutex<Vec<(Duration, bool)>>>,
                 inflight: &Arc<AtomicU64>| {
@@ -125,12 +126,12 @@ pub fn run_load(
         let inflight2 = Arc::clone(inflight);
         inflight.fetch_add(1, Ordering::Relaxed);
         let start = Instant::now();
-        let _ = tx.send(Job { op, resp: rtx, arrived: start });
+        let _ = tx.send(Job { req, resp: rtx, arrived: start });
         std::thread::spawn(move || {
             let resp = rrx.recv_timeout(Duration::from_secs(120)).ok();
             let compressed = resp
                 .as_ref()
-                .and_then(|j| j.get_f64("rank_budget").ok())
+                .and_then(|j| j.get_f64("budget").ok())
                 .map(|b| b > 0.0)
                 .unwrap_or(false);
             sink.lock().unwrap().push((start.elapsed(), compressed));
@@ -175,14 +176,14 @@ pub fn run_load(
                             let (rtx, rrx) = mpsc::channel();
                             let start = Instant::now();
                             let _ = tx.send(Job {
-                                op: make_op(&g, &mix, &mut rng),
+                                req: make_op(&g, &mix, &mut rng),
                                 resp: rtx,
                                 arrived: start,
                             });
                             let resp = rrx.recv_timeout(Duration::from_secs(120)).ok();
                             let compressed = resp
                                 .as_ref()
-                                .and_then(|j| j.get_f64("rank_budget").ok())
+                                .and_then(|j| j.get_f64("budget").ok())
                                 .map(|b| b > 0.0)
                                 .unwrap_or(false);
                             sink.lock().unwrap().push((start.elapsed(), compressed));
@@ -224,7 +225,7 @@ mod tests {
     use super::*;
     use crate::adapters::test_support::tiny_model;
     use crate::adapters::AdaptedModel;
-    use crate::coordinator::batcher::BudgetLadder;
+    use crate::coordinator::batcher::BudgetPolicy;
     use crate::coordinator::engine::{Engine, NativeEngine};
     use crate::model::Arch;
 
@@ -232,7 +233,7 @@ mod tests {
         let m = tiny_model(Arch::SwiGlu, 601);
         let e: Arc<dyn Engine> =
             Arc::new(NativeEngine::new(Arc::new(AdaptedModel::unadapted(m))));
-        let b = Arc::new(Batcher::new(BudgetLadder::single(e), 8));
+        let b = Arc::new(Batcher::new(e, BudgetPolicy::fixed(0.0), 8));
         let b2 = Arc::clone(&b);
         std::thread::spawn(move || b2.run());
         b
@@ -275,7 +276,7 @@ mod tests {
         let e: Arc<dyn Engine> = Arc::new(
             NativeEngine::new(Arc::new(AdaptedModel::unadapted(model))).with_paged_cache(8, 0),
         );
-        let b = Arc::new(Batcher::new(BudgetLadder::single(e), 8));
+        let b = Arc::new(Batcher::new(e, BudgetPolicy::fixed(0.0), 8));
         let b2 = Arc::clone(&b);
         std::thread::spawn(move || b2.run());
         let r = run_load(

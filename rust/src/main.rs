@@ -145,13 +145,25 @@ fn decode_cmd(args: &Args) -> anyhow::Result<()> {
 }
 
 fn serve(args: &Args) -> anyhow::Result<()> {
+    // `--tiers 0.2,0.35,0.5` overrides the controller's compression tiers.
+    let budget_tiers: Vec<f64> = args
+        .get_opt("tiers")
+        .map(|s| s.split(',').filter_map(|t| t.trim().parse().ok()).collect())
+        .unwrap_or_default();
+    let defaults = rana::coordinator::ServerConfig::default();
     let cfg = rana::coordinator::ServerConfig {
         model: args.get_str("model", "llama-sim"),
         port: args.get_usize("port", 7070) as u16,
         max_batch: args.get_usize("max-batch", 8),
         target_compression: args.get_f64("rate", 0.0),
         adaptive_budget: args.get_flag("adaptive-budget"),
+        budget_tiers,
         engine: args.get_str("engine", "native"),
+        calib_fit: args.get_usize("calib", defaults.calib_fit),
+        limits: rana::coordinator::protocol::Limits {
+            max_tokens_cap: args.get_usize("max-tokens", defaults.limits.max_tokens_cap),
+            max_line_bytes: args.get_usize("max-line-bytes", defaults.limits.max_line_bytes),
+        },
     };
     rana::coordinator::serve(cfg)
 }

@@ -95,7 +95,25 @@ pub trait BlockOps: Sync {
         let rows: Vec<Vec<f32>> = (0..xs.rows).map(|r| self.mlp_tok(layer, xs.row(r))).collect();
         Mat::from_rows(&rows)
     }
+
+    // --- runtime-budget batched decode ----------------------------------
+    // `rates[r]` is row `r`'s compression rate; [`AMBIENT_BUDGET`] means
+    // "whatever the model's ambient budget is". Defaults ignore the rates,
+    // so the dense model and fixed-budget adapters are untouched; the
+    // runtime-budget `AdaptedModel` overrides these to mix per-request
+    // budgets inside one masked engine pass.
+
+    fn qkv_tok_batch_budgeted(&self, layer: usize, xs: &Mat, _rates: &[f64]) -> (Mat, Mat, Mat) {
+        self.qkv_tok_batch(layer, xs)
+    }
+
+    fn mlp_tok_batch_budgeted(&self, layer: usize, xs: &Mat, _rates: &[f64]) -> Mat {
+        self.mlp_tok_batch(layer, xs)
+    }
 }
+
+/// Per-row budget sentinel: "resolve to the model's ambient budget".
+pub const AMBIENT_BUDGET: f64 = -1.0;
 
 /// The dense (unadapted) model.
 pub struct Model {
@@ -383,6 +401,30 @@ pub fn decode_step_batch<B: BlockOps>(
     tokens: &[u32],
     caches: &mut [&mut KvCache],
 ) -> Result<Mat, CacheError> {
+    decode_step_batch_inner(b, tokens, caches, None)
+}
+
+/// [`decode_step_batch`] with a per-row compute budget: `rates[r]` is row
+/// `r`'s compression rate ([`AMBIENT_BUDGET`] = the model's ambient). Rows
+/// at different budgets share every batched kernel via per-row rank masks;
+/// each row's logits are bit-identical to a uniform-budget pass at its own
+/// rate (the §2a row-independence contract extended to budgets).
+pub fn decode_step_batch_budgeted<B: BlockOps>(
+    b: &B,
+    tokens: &[u32],
+    caches: &mut [&mut KvCache],
+    rates: &[f64],
+) -> Result<Mat, CacheError> {
+    assert_eq!(tokens.len(), rates.len(), "decode_step_batch_budgeted arity");
+    decode_step_batch_inner(b, tokens, caches, Some(rates))
+}
+
+fn decode_step_batch_inner<B: BlockOps>(
+    b: &B,
+    tokens: &[u32],
+    caches: &mut [&mut KvCache],
+    rates: Option<&[f64]>,
+) -> Result<Mat, CacheError> {
     assert_eq!(tokens.len(), caches.len(), "decode_step_batch arity");
     let cfg = b.config().clone();
     let positions: Vec<usize> = caches.iter().map(|c| c.len).collect();
@@ -395,7 +437,7 @@ pub fn decode_step_batch<B: BlockOps>(
     }
 
     let n_heads = cfg.n_heads;
-    let logits = decode_step_body(b, tokens, &positions, |layer, r, q, k, v| {
+    let logits = decode_step_body(b, tokens, &positions, rates, |layer, r, q, k, v| {
         let pos = positions[r];
         let cache = &mut *caches[r];
         cache.k[layer].row_mut(pos).copy_from_slice(k);
@@ -419,6 +461,7 @@ pub(super) fn decode_step_body<B: BlockOps>(
     b: &B,
     tokens: &[u32],
     positions: &[usize],
+    rates: Option<&[f64]>,
     mut append_attend: impl FnMut(usize, usize, &[f32], &[f32], &[f32]) -> Vec<f32>,
 ) -> Mat {
     let cfg = b.config().clone();
@@ -435,7 +478,10 @@ pub(super) fn decode_step_body<B: BlockOps>(
         for r in 0..n {
             h1.row_mut(r).copy_from_slice(&norm_tok(&cfg, &lw.norm1, xs.row(r)));
         }
-        let (mut q, mut k, v) = b.qkv_tok_batch(layer, &h1);
+        let (mut q, mut k, v) = match rates {
+            Some(rates) => b.qkv_tok_batch_budgeted(layer, &h1, rates),
+            None => b.qkv_tok_batch(layer, &h1),
+        };
         let mut attn = Mat::zeros(n, cfg.d_model);
         for r in 0..n {
             let pos = positions[r];
@@ -455,7 +501,10 @@ pub(super) fn decode_step_body<B: BlockOps>(
                 for r in 0..n {
                     h2.row_mut(r).copy_from_slice(&norm_tok(&cfg, &lw.norm2, xs.row(r)));
                 }
-                let m = b.mlp_tok_batch(layer, &h2);
+                let m = match rates {
+                    Some(rates) => b.mlp_tok_batch_budgeted(layer, &h2, rates),
+                    None => b.mlp_tok_batch(layer, &h2),
+                };
                 for i in 0..xs.data.len() {
                     xs.data[i] += m.data[i];
                 }
@@ -465,7 +514,10 @@ pub(super) fn decode_step_body<B: BlockOps>(
                 for r in 0..n {
                     h2.row_mut(r).copy_from_slice(&norm_tok(&cfg, &lw.norm2, xs.row(r)));
                 }
-                let m = b.mlp_tok_batch(layer, &h2);
+                let m = match rates {
+                    Some(rates) => b.mlp_tok_batch_budgeted(layer, &h2, rates),
+                    None => b.mlp_tok_batch(layer, &h2),
+                };
                 for i in 0..xs.data.len() {
                     xs.data[i] += attn_o.data[i] + m.data[i];
                 }
@@ -480,6 +532,29 @@ pub(super) fn decode_step_body<B: BlockOps>(
     w.lm_head.apply_tok_batch(&hf)
 }
 
+/// Everything one decode sequence needs beyond its prompt: how many tokens
+/// to generate, how to pick them, and (optionally) at what compute budget.
+/// The greedy default reproduces the pre-sampler decode bit-for-bit.
+#[derive(Clone, Debug)]
+pub struct SeqSpec {
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub sampling: ops::Sampling,
+    /// Per-sequence compression-rate override; `None` = the model's
+    /// ambient budget.
+    pub budget: Option<f64>,
+}
+
+impl SeqSpec {
+    pub fn greedy(prompt: Vec<u32>, max_new: usize) -> Self {
+        Self { prompt, max_new, sampling: ops::Sampling::default(), budget: None }
+    }
+
+    pub(crate) fn rate(&self) -> f64 {
+        self.budget.unwrap_or(AMBIENT_BUDGET)
+    }
+}
+
 /// State of one in-flight sequence in a [`DecodeBatch`].
 struct SeqState {
     id: u64,
@@ -487,6 +562,9 @@ struct SeqState {
     /// How many prompt tokens have been fed into the cache so far.
     fed: usize,
     n_gen: usize,
+    sampling: ops::Sampling,
+    rng: crate::util::rng::Xoshiro256,
+    budget: Option<f64>,
     generated: Vec<u32>,
     last_logits: Vec<f32>,
     cache: KvCache,
@@ -516,6 +594,9 @@ pub struct DecodeBatch {
     cfg: ModelConfig,
     slots: Vec<Option<SeqState>>,
     next_id: u64,
+    /// Tokens generated since the last [`DecodeBatch::drain_emitted`]
+    /// (streaming surface: the serving layer turns these into frames).
+    emitted: Vec<(u64, u32)>,
     /// Tokens fed across all steps (batch-occupancy accounting).
     pub tokens_processed: u64,
     /// Engine passes executed (steps where at least one sequence advanced).
@@ -528,6 +609,7 @@ impl DecodeBatch {
             cfg: cfg.clone(),
             slots: (0..capacity.max(1)).map(|_| None).collect(),
             next_id: 0,
+            emitted: Vec::new(),
             tokens_processed: 0,
             steps: 0,
         }
@@ -553,16 +635,24 @@ impl DecodeBatch {
     /// after the prompt (fewer if the KV cache fills first, matching
     /// `eval::greedy_decode`'s cap).
     pub fn try_join(&mut self, prompt: Vec<u32>, n_gen: usize) -> Option<u64> {
+        self.try_join_spec(SeqSpec::greedy(prompt, n_gen))
+    }
+
+    /// Admit a sequence with explicit sampling params and budget override.
+    pub fn try_join_spec(&mut self, spec: SeqSpec) -> Option<u64> {
         let slot = self.slots.iter_mut().find(|s| s.is_none())?;
         let id = self.next_id;
         self.next_id += 1;
         // An empty prompt yields no logits to decode from: born finished.
-        let done = prompt.is_empty();
+        let done = spec.prompt.is_empty();
         *slot = Some(SeqState {
             id,
-            prompt,
+            prompt: spec.prompt,
             fed: 0,
-            n_gen,
+            n_gen: spec.max_new,
+            rng: crate::util::rng::Xoshiro256::new(spec.sampling.seed),
+            sampling: spec.sampling,
+            budget: spec.budget,
             generated: Vec::new(),
             last_logits: Vec::new(),
             cache: KvCache::new(&self.cfg),
@@ -571,11 +661,38 @@ impl DecodeBatch {
         Some(id)
     }
 
+    /// Mark a sequence finished where it stands (client cancel); its
+    /// partial result is returned by the next
+    /// [`DecodeBatch::retire_finished`]. Returns false for unknown ids.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        for s in self.slots.iter_mut().flatten() {
+            if s.id == id {
+                s.done = true;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Tokens generated since the last drain, in generation order — the
+    /// incremental stream the serving layer frames to clients.
+    pub fn drain_emitted(&mut self) -> Vec<(u64, u32)> {
+        std::mem::take(&mut self.emitted)
+    }
+
+    /// Put drained-but-unconsumed tokens back at the front of the stream
+    /// (a session on a shared batch returns other sessions' deltas).
+    pub fn restore_emitted(&mut self, mut items: Vec<(u64, u32)>) {
+        items.extend(std::mem::take(&mut self.emitted));
+        self.emitted = items;
+    }
+
     /// One engine pass: every live sequence contributes its next token.
     /// Returns how many sequences advanced (0 = nothing left to do; call
     /// [`DecodeBatch::retire_finished`] to free the slots).
     pub fn step<B: BlockOps>(&mut self, b: &B) -> usize {
         let max_seq = self.cfg.max_seq;
+        let mut emitted: Vec<(u64, u32)> = Vec::new();
         let live: Vec<&mut SeqState> =
             self.slots.iter_mut().flatten().filter(|s| !s.done).collect();
         let mut stepping: Vec<(&mut SeqState, u32)> = Vec::with_capacity(live.len());
@@ -596,8 +713,9 @@ impl DecodeBatch {
                 s.done = true; // same cap as greedy_decode
                 continue;
             } else {
-                let next = crate::eval::argmax(&s.last_logits) as u32;
+                let next = ops::sample_token(&s.last_logits, &s.sampling, &mut s.rng);
                 s.generated.push(next);
+                emitted.push((s.id, next));
                 if s.generated.len() >= s.n_gen {
                     // Final token: recorded, but needs no engine pass.
                     s.done = true;
@@ -607,14 +725,21 @@ impl DecodeBatch {
             };
             stepping.push((s, tok));
         }
+        self.emitted.extend(emitted);
         let logits = loop {
             if stepping.is_empty() {
                 return 0;
             }
             let tokens: Vec<u32> = stepping.iter().map(|(_, t)| *t).collect();
+            // Per-row budgets only when some sequence carries an override;
+            // the all-ambient batch keeps the legacy unbudgeted call.
+            let rates: Option<Vec<f64>> = stepping
+                .iter()
+                .any(|(s, _)| s.budget.is_some())
+                .then(|| stepping.iter().map(|(s, _)| s.budget.unwrap_or(AMBIENT_BUDGET)).collect());
             let mut caches: Vec<&mut KvCache> =
                 stepping.iter_mut().map(|(s, _)| &mut s.cache).collect();
-            match decode_step_batch(b, &tokens, &mut caches) {
+            match decode_step_batch_inner(b, &tokens, &mut caches, rates.as_deref()) {
                 Ok(l) => break l,
                 Err(e) => {
                     // Unreachable given the pre-guards above, but the

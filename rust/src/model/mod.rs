@@ -10,10 +10,13 @@ pub mod weights;
 
 pub use config::{Arch, ModelConfig, PythiaSize};
 pub use forward::{
-    decode_step, decode_step_batch, forward_seq, BlockOps, Capture, DecodeBatch, FinishedSeq,
-    KvCache, Model,
+    decode_step, decode_step_batch, decode_step_batch_budgeted, forward_seq, BlockOps, Capture,
+    DecodeBatch, FinishedSeq, KvCache, Model, SeqSpec, AMBIENT_BUDGET,
 };
-pub use paged::{decode_step_paged, PagedBatchConfig, PagedDecodeBatch};
+pub use ops::Sampling;
+pub use paged::{
+    decode_step_paged, decode_step_paged_budgeted, PagedBatchConfig, PagedDecodeBatch,
+};
 pub use weights::{LayerWeights, Linear, ModelWeights, Norm};
 
 use std::path::PathBuf;

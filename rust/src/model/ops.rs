@@ -70,6 +70,87 @@ pub fn mlp_activate(arch: Arch, up: &mut Mat, gate: Option<&Mat>) {
 /// attention kernels share it bit-for-bit with the sequence path.
 pub use crate::tensor::attention::softmax;
 
+/// Next-token sampling parameters for the decode path. The default
+/// (`temperature = 0`) is exact greedy argmax, which keeps every
+/// pre-existing decode-determinism pin intact; a positive temperature
+/// enables seeded temperature / top-k / top-p (nucleus) sampling.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Sampling {
+    /// 0 = greedy; softmax temperature otherwise.
+    pub temperature: f64,
+    /// Keep only the `top_k` highest logits before sampling (0 = all).
+    pub top_k: usize,
+    /// Nucleus mass: keep the smallest set of tokens whose probability
+    /// exceeds `top_p` (1.0 = all).
+    pub top_p: f64,
+    /// Per-sequence RNG seed — decoding is a pure function of
+    /// `(prompt, params, seed)`, independent of batch composition.
+    pub seed: u64,
+}
+
+impl Default for Sampling {
+    fn default() -> Self {
+        Self { temperature: 0.0, top_k: 0, top_p: 1.0, seed: 0 }
+    }
+}
+
+impl Sampling {
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+}
+
+/// Sample the next token. Greedy when `s.temperature <= 0` (bit-identical
+/// to `eval::argmax`); otherwise temperature-scaled softmax restricted by
+/// top-k then top-p, drawn with the caller's per-sequence RNG.
+pub fn sample_token(logits: &[f32], s: &Sampling, rng: &mut crate::util::rng::Xoshiro256) -> u32 {
+    debug_assert!(!logits.is_empty());
+    if s.is_greedy() {
+        return logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0) as u32;
+    }
+    // Candidates sorted by logit descending (ties by index for determinism).
+    let mut cand: Vec<(usize, f32)> = logits.iter().copied().enumerate().collect();
+    cand.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    if s.top_k > 0 {
+        cand.truncate(s.top_k.max(1));
+    }
+    // Temperature-scaled softmax over the candidate set (stable: max-shift).
+    let inv_t = 1.0 / s.temperature;
+    let max = cand[0].1 as f64;
+    let mut probs: Vec<f64> =
+        cand.iter().map(|&(_, l)| ((l as f64 - max) * inv_t).exp()).collect();
+    let z: f64 = probs.iter().sum();
+    for p in probs.iter_mut() {
+        *p /= z;
+    }
+    // Nucleus truncation: smallest prefix with mass > top_p.
+    let mut n_keep = probs.len();
+    if s.top_p < 1.0 {
+        let mut acc = 0.0;
+        for (i, &p) in probs.iter().enumerate() {
+            acc += p;
+            if acc > s.top_p {
+                n_keep = i + 1;
+                break;
+            }
+        }
+    }
+    let mass: f64 = probs[..n_keep].iter().sum();
+    let mut u = rng.f64() * mass;
+    for i in 0..n_keep {
+        u -= probs[i];
+        if u <= 0.0 {
+            return cand[i].0 as u32;
+        }
+    }
+    cand[n_keep - 1].0 as u32
+}
+
 /// Log-softmax value at one index (used for LM scoring without
 /// materializing the whole normalized distribution).
 pub fn log_softmax_at(logits: &[f32], idx: usize) -> f64 {
@@ -258,6 +339,46 @@ mod tests {
         let seq = causal_attention_seq(&q, &k, &v, heads);
         let step = causal_attention_step(q.row(t - 1), &k, &v, heads);
         crate::util::prop::close_slices(seq.row(t - 1), &step, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn sampler_greedy_matches_argmax_and_is_rng_free() {
+        let logits: Vec<f32> = vec![0.1, 2.5, -1.0, 2.5, 0.0];
+        let mut rng = Xoshiro256::new(1);
+        let s = Sampling::default();
+        assert!(s.is_greedy());
+        // Greedy must not consume randomness and must pick the argmax
+        // (first of tied maxima, like eval::argmax's max_by semantics).
+        let before = rng.next_u64();
+        let mut rng = Xoshiro256::new(1);
+        let tok = sample_token(&logits, &s, &mut rng);
+        assert_eq!(tok, crate::eval::argmax(&logits) as u32);
+        assert_eq!(rng.next_u64(), before, "greedy sampling consumed rng state");
+    }
+
+    #[test]
+    fn sampler_is_deterministic_and_respects_top_k() {
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32) * 0.3).collect();
+        let s = Sampling { temperature: 0.8, top_k: 3, top_p: 1.0, seed: 7 };
+        let mut r1 = Xoshiro256::new(s.seed);
+        let mut r2 = Xoshiro256::new(s.seed);
+        let draws1: Vec<u32> = (0..32).map(|_| sample_token(&logits, &s, &mut r1)).collect();
+        let draws2: Vec<u32> = (0..32).map(|_| sample_token(&logits, &s, &mut r2)).collect();
+        assert_eq!(draws1, draws2, "same seed must reproduce the stream");
+        assert!(draws1.iter().all(|&t| t >= 13), "top-3 of ascending logits is {{13,14,15}}");
+        assert!(draws1.iter().any(|&t| t != draws1[0]), "temperature must actually mix");
+    }
+
+    #[test]
+    fn sampler_top_p_prunes_the_tail() {
+        // One dominant token: a tight nucleus keeps only it.
+        let mut logits = vec![0.0f32; 8];
+        logits[5] = 10.0;
+        let s = Sampling { temperature: 1.0, top_k: 0, top_p: 0.5, seed: 3 };
+        let mut rng = Xoshiro256::new(s.seed);
+        for _ in 0..16 {
+            assert_eq!(sample_token(&logits, &s, &mut rng), 5);
+        }
     }
 
     #[test]

@@ -27,7 +27,8 @@
 use std::collections::VecDeque;
 
 use super::config::ModelConfig;
-use super::forward::{decode_step_body, BlockOps, FinishedSeq};
+use super::forward::{decode_step_body, BlockOps, FinishedSeq, SeqSpec, AMBIENT_BUDGET};
+use super::ops;
 use crate::kvcache::{BlockPool, CacheError, PagedKvCache, PrefixTrie};
 use crate::tensor::{attention_over_paged, Mat};
 
@@ -40,6 +41,30 @@ pub fn decode_step_paged<B: BlockOps>(
     tokens: &[u32],
     pool: &mut BlockPool,
     seqs: &mut [&mut PagedKvCache],
+) -> Result<Mat, CacheError> {
+    decode_step_paged_inner(b, tokens, pool, seqs, None)
+}
+
+/// [`decode_step_paged`] with a per-row compute budget (see
+/// [`super::forward::decode_step_batch_budgeted`] — the budget threading is
+/// identical on both cache layouts by construction).
+pub fn decode_step_paged_budgeted<B: BlockOps>(
+    b: &B,
+    tokens: &[u32],
+    pool: &mut BlockPool,
+    seqs: &mut [&mut PagedKvCache],
+    rates: &[f64],
+) -> Result<Mat, CacheError> {
+    assert_eq!(tokens.len(), rates.len(), "decode_step_paged_budgeted arity");
+    decode_step_paged_inner(b, tokens, pool, seqs, Some(rates))
+}
+
+fn decode_step_paged_inner<B: BlockOps>(
+    b: &B,
+    tokens: &[u32],
+    pool: &mut BlockPool,
+    seqs: &mut [&mut PagedKvCache],
+    rates: Option<&[f64]>,
 ) -> Result<Mat, CacheError> {
     assert_eq!(tokens.len(), seqs.len(), "decode_step_paged arity");
     let cfg = b.config().clone();
@@ -61,7 +86,7 @@ pub fn decode_step_paged<B: BlockOps>(
     // Same per-layer body as the dense path — only the KV addressing in
     // this closure differs, which is what makes the paged logits
     // bit-for-bit identical to the contiguous oracle by construction.
-    let logits = decode_step_body(b, tokens, &positions, |layer, r, q, k, v| {
+    let logits = decode_step_body(b, tokens, &positions, rates, |layer, r, q, k, v| {
         seqs[r].write_kv(pool, layer, k, v);
         attention_over_paged(
             q,
@@ -105,6 +130,9 @@ struct PagedSeqState {
     prompt: Vec<u32>,
     fed: usize,
     n_gen: usize,
+    sampling: ops::Sampling,
+    rng: crate::util::rng::Xoshiro256,
+    budget: Option<f64>,
     generated: Vec<u32>,
     last_logits: Vec<f32>,
     cache: PagedKvCache,
@@ -136,6 +164,10 @@ pub struct PagedDecodeBatch {
     slots: Vec<Option<PagedSeqState>>,
     /// Preempted sequences awaiting re-admission (front = oldest).
     preempted: VecDeque<PagedSeqState>,
+    /// Tokens generated since the last [`PagedDecodeBatch::drain_emitted`].
+    emitted: Vec<(u64, u32)>,
+    /// Sequences cancelled while preempted (no slot to retire from).
+    finished_aside: Vec<FinishedSeq>,
     next_id: u64,
     /// Tokens fed across all steps (batch-occupancy accounting).
     pub tokens_processed: u64,
@@ -159,6 +191,8 @@ impl PagedDecodeBatch {
             trie: PrefixTrie::new(),
             slots: (0..slots).map(|_| None).collect(),
             preempted: VecDeque::new(),
+            emitted: Vec::new(),
+            finished_aside: Vec::new(),
             next_id: 0,
             tokens_processed: 0,
             steps: 0,
@@ -171,10 +205,10 @@ impl PagedDecodeBatch {
         self.slots.len()
     }
 
-    /// Sequences currently admitted or awaiting re-admission (a preempted
-    /// sequence still owes its caller a result).
+    /// Sequences currently admitted, awaiting re-admission, or finished
+    /// aside (all still owe their caller a result).
     pub fn active(&self) -> usize {
-        self.slots.iter().flatten().count() + self.preempted.len()
+        self.slots.iter().flatten().count() + self.preempted.len() + self.finished_aside.len()
     }
 
     pub fn has_work(&self) -> bool {
@@ -208,9 +242,16 @@ impl PagedDecodeBatch {
     fn admit(&mut self, st: &mut PagedSeqState, force: bool) -> bool {
         let bs = self.pool.block_size();
         // At least one stream token must remain to feed (its logits seed
-        // generation), and only prompt tokens live in the trie.
+        // generation), and only prompt tokens live in the trie. Sequences
+        // carrying a per-request budget override bypass the trie entirely:
+        // KV computed at one compute budget must never seed decoding at
+        // another.
         let reusable = st.stream_len().saturating_sub(1).min(st.prompt.len());
-        let chain = self.trie.lookup(&st.prompt, reusable / bs, &mut self.pool);
+        let chain = if st.budget.is_some() {
+            Vec::new()
+        } else {
+            self.trie.lookup(&st.prompt, reusable / bs, &mut self.pool)
+        };
         let matched = chain.len() * bs;
         // Optimistic (vLLM-style) budget: the stream already committed plus
         // one generated token must fit *now*; later decode growth is served
@@ -237,13 +278,21 @@ impl PagedDecodeBatch {
     /// free-block budget refuses the join (retry after steps retire or
     /// preemption frees blocks).
     pub fn try_join(&mut self, prompt: Vec<u32>, n_gen: usize) -> Option<u64> {
+        self.try_join_spec(SeqSpec::greedy(prompt, n_gen))
+    }
+
+    /// Admit a sequence with explicit sampling params and budget override.
+    pub fn try_join_spec(&mut self, spec: SeqSpec) -> Option<u64> {
         let slot_idx = self.slots.iter().position(|s| s.is_none())?;
-        let done = prompt.is_empty();
+        let done = spec.prompt.is_empty();
         let mut st = PagedSeqState {
             id: 0,
-            prompt,
+            prompt: spec.prompt,
             fed: 0,
-            n_gen,
+            n_gen: spec.max_new,
+            rng: crate::util::rng::Xoshiro256::new(spec.sampling.seed),
+            sampling: spec.sampling,
+            budget: spec.budget,
             generated: Vec::new(),
             last_logits: Vec::new(),
             cache: PagedKvCache::new(),
@@ -266,6 +315,56 @@ impl PagedDecodeBatch {
     fn finish(pool: &mut BlockPool, s: &mut PagedSeqState) {
         s.done = true;
         s.cache.release(pool);
+    }
+
+    /// Mark a sequence finished where it stands (client cancel), releasing
+    /// its blocks; its partial result is returned by the next retire. A
+    /// preempted sequence is retired from the side queue. Returns false
+    /// for unknown ids.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        for s in self.slots.iter_mut().flatten() {
+            if s.id == id {
+                if !s.done {
+                    Self::finish(&mut self.pool, s);
+                }
+                return true;
+            }
+        }
+        if let Some(p) = self.preempted.iter().position(|s| s.id == id) {
+            // Blocks were already released at preemption time.
+            let s = self.preempted.remove(p).expect("checked position");
+            self.finished_aside.push(FinishedSeq {
+                id: s.id,
+                prompt: s.prompt,
+                generated: s.generated,
+            });
+            return true;
+        }
+        false
+    }
+
+    /// Tokens generated since the last drain, in generation order.
+    pub fn drain_emitted(&mut self) -> Vec<(u64, u32)> {
+        std::mem::take(&mut self.emitted)
+    }
+
+    /// Put drained-but-unconsumed tokens back at the front of the stream
+    /// (a session on the shared batch returns other sessions' deltas).
+    pub fn restore_emitted(&mut self, mut items: Vec<(u64, u32)>) {
+        items.extend(std::mem::take(&mut self.emitted));
+        self.emitted = items;
+    }
+
+    /// Drop every shared-prefix entry. Called on shared-budget retunes:
+    /// trie blocks hold KV computed at the old budget, which must not seed
+    /// prefills at the new one. In-flight sequences are barred from
+    /// publishing too — a prefill straddling the retune holds
+    /// mixed-budget KV in its private chain, which must stay private.
+    pub fn flush_prefix_cache(&mut self) {
+        self.trie.clear(&mut self.pool);
+        for s in self.slots.iter_mut().flatten() {
+            s.prompt_in_trie = true;
+        }
     }
 
     /// Youngest live sequence other than slot `except` (preemption victim).
@@ -323,8 +422,9 @@ impl PagedDecodeBatch {
                 Self::finish(&mut self.pool, s);
                 continue;
             } else {
-                let next = crate::eval::argmax(&s.last_logits) as u32;
+                let next = ops::sample_token(&s.last_logits, &s.sampling, &mut s.rng);
                 s.generated.push(next);
+                self.emitted.push((s.id, next));
                 if s.generated.len() >= s.n_gen {
                     // Final token: recorded, needs no engine pass.
                     Self::finish(&mut self.pool, s);
@@ -389,6 +489,22 @@ impl PagedDecodeBatch {
                 return 0;
             }
             let res = {
+                // Per-row budgets only when some sequence carries an
+                // override (all-ambient batches keep the legacy call).
+                let rates: Option<Vec<f64>> = stepping
+                    .iter()
+                    .any(|&i| self.slots[i].as_ref().is_some_and(|s| s.budget.is_some()))
+                    .then(|| {
+                        stepping
+                            .iter()
+                            .map(|&i| {
+                                self.slots[i]
+                                    .as_ref()
+                                    .and_then(|s| s.budget)
+                                    .unwrap_or(AMBIENT_BUDGET)
+                            })
+                            .collect()
+                    });
                 let mut seq_refs: Vec<&mut PagedKvCache> = Vec::with_capacity(stepping.len());
                 let mut want = stepping.iter().peekable();
                 for (idx, slot) in self.slots.iter_mut().enumerate() {
@@ -397,7 +513,7 @@ impl PagedDecodeBatch {
                         seq_refs.push(&mut slot.as_mut().expect("stepping slot occupied").cache);
                     }
                 }
-                decode_step_paged(b, &tokens, &mut self.pool, &mut seq_refs)
+                decode_step_paged_inner(b, &tokens, &mut self.pool, &mut seq_refs, rates.as_deref())
             };
             match res {
                 Ok(l) => break l,
@@ -415,6 +531,10 @@ impl PagedDecodeBatch {
         for (r, &idx) in stepping.iter().enumerate() {
             let s = self.slots[idx].as_mut().expect("stepping slot occupied");
             s.last_logits = logits.row(r).to_vec();
+            if s.budget.is_some() {
+                // Budget-overridden KV stays private (see `admit`).
+                s.prompt_in_trie = true;
+            }
             if !s.prompt_in_trie && s.cache.len() >= s.prompt.len() {
                 let n_full = s.prompt.len() / bs;
                 if n_full > 0 {
@@ -441,6 +561,14 @@ impl PagedDecodeBatch {
     /// its own, leaving the rest in their slots for their owners.
     pub fn retire_finished_owned(&mut self, owned: impl Fn(u64) -> bool) -> Vec<FinishedSeq> {
         let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.finished_aside.len() {
+            if owned(self.finished_aside[i].id) {
+                out.push(self.finished_aside.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
         for slot in &mut self.slots {
             if slot.as_ref().map(|s| s.done && owned(s.id)).unwrap_or(false) {
                 let s = slot.take().expect("checked above");

@@ -2,13 +2,13 @@
 //! `decode_step` oracle (dense + RaNA-adapted, both archs, ragged
 //! join/retire schedules), batch-composition determinism of greedy
 //! decoding, and the coordinator under a mixed load through the
-//! `BudgetLadder`.
+//! runtime-budget controller.
 
 use std::sync::Arc;
 
 use rana::adapters::calibrate::{self, CalibOptions, Method};
 use rana::adapters::AdaptedModel;
-use rana::coordinator::batcher::{call, Batcher, BudgetLadder, Op};
+use rana::coordinator::batcher::{call, stats_req, Batcher, BudgetPolicy};
 use rana::coordinator::engine::{Engine, NativeEngine};
 use rana::coordinator::workload::{run_load, Arrivals, Mix};
 use rana::model::{
@@ -177,21 +177,28 @@ fn greedy_text_is_independent_of_batch_size_and_cohabitants() {
 }
 
 #[test]
-fn coordinator_mixed_load_through_budget_ladder() {
-    // Mixed score/generate closed-loop load over a two-tier ladder:
-    // switching must fire at the configured queue depth, and the Stats
-    // counters must reconcile with the submitted jobs.
-    let mk_engine = |seed: u64| -> Arc<dyn Engine> {
-        let cfg = tiny_cfg(Arch::SwiGlu);
-        let w = ModelWeights::random_init(&cfg, seed);
-        let model = Arc::new(Model::new(cfg, w).unwrap());
-        Arc::new(NativeEngine::new(Arc::new(AdaptedModel::unadapted(model))))
-    };
-    let ladder = BudgetLadder {
-        engines: vec![(0.0, mk_engine(0x81)), (0.35, mk_engine(0x82))],
-        thresholds: vec![3],
-    };
-    let batcher = Arc::new(Batcher::new(ladder, 8));
+fn coordinator_mixed_load_through_budget_controller() {
+    // Mixed score/generate closed-loop load over ONE runtime-budget
+    // engine with a two-tier policy: the shared-budget controller must
+    // fire at the configured queue depth, and the Stats counters must
+    // reconcile with the submitted jobs.
+    let cfg = tiny_cfg(Arch::SwiGlu);
+    let w = ModelWeights::random_init(&cfg, 0x81);
+    let model = Arc::new(Model::new(cfg, w).unwrap());
+    let tokens: Vec<u32> = (0..800).map(|i| (i * 13 % 97) as u32).collect();
+    let calib = calibrate::collect(
+        &model,
+        &tokens,
+        &CalibOptions { n_fit: 96, n_eval: 32, window: 24, seed: 0xA5 },
+    );
+    let (adapted, _) =
+        calibrate::adapt_runtime(Arc::clone(&model), &calib, &[0.35], 64, 0x81);
+    let engine: Arc<dyn Engine> = Arc::new(NativeEngine::new(Arc::new(adapted)));
+    let batcher = Arc::new(Batcher::new(
+        engine,
+        BudgetPolicy { tiers: vec![0.0, 0.35], thresholds: vec![3] },
+        8,
+    ));
     let b2 = Arc::clone(&batcher);
     std::thread::spawn(move || b2.run());
 
@@ -207,7 +214,7 @@ fn coordinator_mixed_load_through_budget_ladder() {
     assert!(report.p50 <= report.p99);
     assert!(
         report.compressed_frac > 0.0,
-        "ladder never switched to a compressed tier under 8-client load"
+        "controller never shifted the shared budget under 8-client load"
     );
 
     use std::sync::atomic::Ordering;
@@ -225,7 +232,7 @@ fn coordinator_mixed_load_through_budget_ladder() {
 
     // The stats op reconciles with the live counters (itself included).
     let tx = batcher.submitter();
-    let stats = call(&tx, Op::Stats).unwrap();
+    let stats = call(&tx, stats_req()).unwrap();
     assert_eq!(stats.get_f64("requests").unwrap(), (n_requests + 1) as f64);
     assert_eq!(stats.get_f64("decode_steps").unwrap(), steps as f64);
     assert!(stats.get_f64("decode_occupancy").unwrap() >= 1.0);

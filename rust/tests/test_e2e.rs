@@ -2,12 +2,15 @@
 
 use std::sync::Arc;
 
+use rana::adapters::calibrate::{self, CalibOptions};
 use rana::adapters::AdaptedModel;
-use rana::coordinator::batcher::{call, Batcher, BudgetLadder, Op};
+use rana::coordinator::batcher::{
+    call, generate_req, score_req, stats_req, Batcher, BudgetPolicy,
+};
 use rana::coordinator::engine::{Engine, NativeEngine};
 use rana::model::{Model, ModelConfig, ModelWeights};
 
-fn tiny_engine(seed: u64) -> Arc<dyn Engine> {
+fn tiny_model(seed: u64) -> Arc<Model> {
     let cfg = ModelConfig {
         name: "tiny".into(),
         d_model: 16,
@@ -19,13 +22,30 @@ fn tiny_engine(seed: u64) -> Arc<dyn Engine> {
         ..ModelConfig::llama_sim()
     };
     let w = ModelWeights::random_init(&cfg, seed);
-    let model = Arc::new(Model::new(cfg, w).unwrap());
-    Arc::new(NativeEngine::new(Arc::new(AdaptedModel::unadapted(model))))
+    Arc::new(Model::new(cfg, w).unwrap())
+}
+
+fn tiny_engine(seed: u64) -> Arc<dyn Engine> {
+    Arc::new(NativeEngine::new(Arc::new(AdaptedModel::unadapted(tiny_model(seed)))))
+}
+
+/// One runtime-budget engine serving dense + three compressed tiers.
+fn runtime_engine(seed: u64) -> Arc<dyn Engine> {
+    let model = tiny_model(seed);
+    let tokens: Vec<u32> = (0..1200).map(|i| (i * 13 % 48) as u32).collect();
+    let calib = calibrate::collect(
+        &model,
+        &tokens,
+        &CalibOptions { n_fit: 96, n_eval: 24, window: 24, seed },
+    );
+    let (adapted, _) =
+        calibrate::adapt_runtime(Arc::clone(&model), &calib, &[0.2, 0.35, 0.5], 32, seed);
+    Arc::new(NativeEngine::new(Arc::new(adapted)))
 }
 
 #[test]
 fn coordinator_serves_mixed_workload() {
-    let batcher = Arc::new(Batcher::new(BudgetLadder::single(tiny_engine(1)), 4));
+    let batcher = Arc::new(Batcher::new(tiny_engine(1), BudgetPolicy::fixed(0.0), 4));
     let tx = batcher.submitter();
     let b = Arc::clone(&batcher);
     std::thread::spawn(move || b.run());
@@ -35,9 +55,9 @@ fn coordinator_serves_mixed_workload() {
         let tx = tx.clone();
         handles.push(std::thread::spawn(move || {
             if i % 3 == 0 {
-                call(&tx, Op::Generate { prompt: "ab".into(), n: 2 }).unwrap()
+                call(&tx, generate_req("ab", 2)).unwrap()
             } else {
-                call(&tx, Op::Score { text: format!("sample text {i}") }).unwrap()
+                call(&tx, score_req(&format!("sample text {i}"))).unwrap()
             }
         }));
     }
@@ -45,40 +65,71 @@ fn coordinator_serves_mixed_workload() {
         let r = h.join().unwrap();
         assert!(r.get("error").is_err(), "got error response: {r}");
     }
-    let stats = call(&tx, Op::Stats).unwrap();
+    let stats = call(&tx, stats_req()).unwrap();
     assert!(stats.get_f64("responses").unwrap() >= 12.0);
 }
 
 #[test]
-fn adaptive_budget_ladder_shifts_under_load() {
-    let ladder = BudgetLadder {
-        engines: vec![(0.0, tiny_engine(2)), (0.5, tiny_engine(3))],
-        thresholds: vec![3],
-    };
-    let batcher = Arc::new(Batcher::new(ladder, 8));
+fn adaptive_budget_controller_shifts_one_engine_under_load() {
+    // The ladder replacement: ONE runtime-budget engine; the queue-depth
+    // controller turns its shared budget scalar up under load instead of
+    // swapping engine clones.
+    let engine = runtime_engine(2);
+    assert!(engine.supports_runtime_budget());
+    let batcher = Arc::new(Batcher::new(
+        engine,
+        BudgetPolicy::adaptive(vec![0.0, 0.35, 0.5], 3),
+        8,
+    ));
     let tx = batcher.submitter();
     let b = Arc::clone(&batcher);
     std::thread::spawn(move || b.run());
 
-    // Flood with concurrent requests; at least one batch should run at the
+    // Flood with concurrent requests; at least one batch should run at a
     // compressed tier (queue depth >= 3).
     let handles: Vec<_> = (0..32)
         .map(|i| {
             let tx = tx.clone();
-            std::thread::spawn(move || {
-                call(&tx, Op::Score { text: format!("load {i}") }).unwrap()
-            })
+            std::thread::spawn(move || call(&tx, score_req(&format!("load {i}"))).unwrap())
         })
         .collect();
     let mut budgets = Vec::new();
     for h in handles {
         let r = h.join().unwrap();
-        budgets.push(r.get_f64("rank_budget").unwrap());
+        budgets.push(r.get_f64("budget").unwrap());
     }
     assert!(
         budgets.iter().any(|&b| b > 0.0),
         "adaptive budget never engaged under load: {budgets:?}"
     );
+    use std::sync::atomic::Ordering;
+    assert!(
+        batcher.metrics.budget_switches.load(Ordering::Relaxed) > 0,
+        "controller must record tier changes"
+    );
+    let stats = call(&tx, stats_req()).unwrap();
+    let hist = stats.get("budget_hist").unwrap().as_arr().unwrap();
+    let total: f64 = hist.iter().map(|c| c.as_f64().unwrap()).sum();
+    assert!(total >= 32.0, "every request lands in the budget histogram");
+}
+
+#[test]
+fn per_request_budget_overrides_shared_scalar() {
+    // Explicit budgets mix in one serving process and are echoed back.
+    let batcher = Arc::new(Batcher::new(runtime_engine(5), BudgetPolicy::fixed(0.0), 4));
+    let tx = batcher.submitter();
+    let b = Arc::clone(&batcher);
+    std::thread::spawn(move || b.run());
+
+    let mut req = generate_req("ab", 3);
+    let rana::coordinator::protocol::Request::Generate(g) = &mut req else { unreachable!() };
+    g.budget = Some(0.5);
+    let r = call(&tx, req).unwrap();
+    assert_eq!(r.get_f64("budget").unwrap(), 0.5);
+    assert!(r.get_str("text").unwrap().starts_with("ab"));
+    // An un-annotated request under an idle queue serves dense.
+    let r2 = call(&tx, generate_req("ab", 3)).unwrap();
+    assert_eq!(r2.get_f64("budget").unwrap(), 0.0);
 }
 
 /// Property: under arbitrary interleavings of concurrent score requests,
@@ -100,7 +151,8 @@ fn prop_batcher_routing_preserves_request_response_mapping() {
         |rng, size| {
             let n = size.max(2).min(24);
             let batcher = Arc::new(Batcher::new(
-                BudgetLadder::single(Arc::clone(&engine)),
+                Arc::clone(&engine),
+                BudgetPolicy::fixed(0.0),
                 1 + rng.below(8),
             ));
             let tx = batcher.submitter();
@@ -114,9 +166,7 @@ fn prop_batcher_routing_preserves_request_response_mapping() {
                 .map(|&i| {
                     let tx = tx.clone();
                     let text = texts[i].clone();
-                    std::thread::spawn(move || {
-                        (i, call(&tx, Op::Score { text }).unwrap())
-                    })
+                    std::thread::spawn(move || (i, call(&tx, score_req(&text)).unwrap()))
                 })
                 .collect();
             let mut seen = 0usize;
@@ -144,31 +194,26 @@ fn prop_batcher_routing_preserves_request_response_mapping() {
     );
 }
 
-/// Property: the budget ladder is monotone — deeper queues never pick a
+/// Property: the budget policy is monotone — deeper queues never pick a
 /// *less* compressed tier.
 #[test]
-fn prop_budget_ladder_monotone_in_depth() {
+fn prop_budget_policy_monotone_in_depth() {
     use rana::util::prop::{check, Config};
 
-    let e = tiny_engine(13);
     check(
-        "ladder-monotone",
+        "policy-monotone",
         Config { cases: 32, max_size: 12, ..Default::default() },
         |rng, size| {
             let tiers = 1 + rng.below(size.max(1).min(5));
             let mut rates: Vec<f64> = (0..tiers).map(|i| i as f64 * 0.15).collect();
             rates.dedup();
-            let mut thresholds: Vec<usize> = (1..rates.len())
-                .map(|_| 1 + rng.below(20))
-                .collect();
+            let mut thresholds: Vec<usize> =
+                (1..rates.len()).map(|_| 1 + rng.below(20)).collect();
             thresholds.sort_unstable();
-            let ladder = BudgetLadder {
-                engines: rates.iter().map(|&r| (r, Arc::clone(&e))).collect(),
-                thresholds,
-            };
+            let policy = BudgetPolicy { tiers: rates, thresholds };
             let mut last = -1.0f64;
             for depth in 0..64 {
-                let (rate, _) = ladder.pick(depth);
+                let rate = policy.pick(depth);
                 if rate < last {
                     return Err(format!("depth {depth}: rate {rate} < previous {last}"));
                 }

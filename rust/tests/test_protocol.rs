@@ -1,0 +1,247 @@
+//! End-to-end TCP protocol tests: a real `serve_on` server (ephemeral
+//! port, tiny injected engine) driven over sockets — concurrent clients,
+//! malformed/oversized requests, streaming, mid-flight cancel, and clean
+//! shutdown with requests queued.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use rana::adapters::AdaptedModel;
+use rana::coordinator::engine::{Engine, NativeEngine};
+use rana::coordinator::protocol::Limits;
+use rana::coordinator::{serve_on, ServerConfig};
+use rana::model::{Model, ModelConfig, ModelWeights};
+use rana::util::json::Json;
+
+fn tiny_engine(seed: u64, d_model: usize, n_layers: usize, max_seq: usize) -> Arc<dyn Engine> {
+    let cfg = ModelConfig {
+        name: "tiny".into(),
+        d_model,
+        n_layers,
+        n_heads: 2,
+        d_hidden: 2 * d_model,
+        vocab: 288,
+        max_seq,
+        ..ModelConfig::llama_sim()
+    };
+    let w = ModelWeights::random_init(&cfg, seed);
+    let model = Arc::new(Model::new(cfg, w).unwrap());
+    Arc::new(NativeEngine::new(Arc::new(AdaptedModel::unadapted(model))))
+}
+
+fn start_server(engine: Arc<dyn Engine>, limits: Limits) -> (SocketAddr, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let cfg = ServerConfig { max_batch: 4, limits, ..ServerConfig::default() };
+    let handle = std::thread::spawn(move || {
+        serve_on(listener, engine, cfg).expect("serve_on failed");
+    });
+    (addr, handle)
+}
+
+struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: &SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let writer = stream.try_clone().unwrap();
+        Self { writer, reader: BufReader::new(stream) }
+    }
+
+    fn send_line(&mut self, line: &str) {
+        writeln!(self.writer, "{line}").unwrap();
+    }
+
+    fn recv(&mut self) -> Json {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        assert!(!line.is_empty(), "server closed the connection unexpectedly");
+        Json::parse(line.trim()).unwrap()
+    }
+
+    fn call(&mut self, req: &Json) -> Json {
+        self.send_line(&req.to_string());
+        self.recv()
+    }
+}
+
+fn shutdown(addr: &SocketAddr) {
+    let mut c = Client::connect(addr);
+    let r = c.call(&Json::obj(vec![("op", Json::str("shutdown"))]));
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+}
+
+#[test]
+fn concurrent_clients_get_correct_typed_responses() {
+    let (addr, server) = start_server(tiny_engine(1, 16, 2, 64), Limits::default());
+    let handles: Vec<_> = (0..10)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr);
+                if i % 2 == 0 {
+                    let r = c.call(&Json::obj(vec![
+                        ("op", Json::str("score")),
+                        ("id", Json::str(&format!("s{i}"))),
+                        ("text", Json::str(&format!("text number {i}"))),
+                    ]));
+                    assert_eq!(r.get_str("id").unwrap(), format!("s{i}"));
+                    assert!(r.get_f64("logprob").unwrap().is_finite());
+                } else {
+                    let r = c.call(&Json::obj(vec![
+                        ("op", Json::str("generate")),
+                        ("id", Json::str(&format!("g{i}"))),
+                        ("prompt", Json::str(&format!("p{i} "))),
+                        ("tokens", Json::Num(3.0)),
+                    ]));
+                    assert_eq!(r.get_str("id").unwrap(), format!("g{i}"));
+                    assert!(r.get_str("text").unwrap().starts_with(&format!("p{i} ")));
+                    assert_eq!(r.get_str("finish_reason").unwrap(), "length");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    shutdown(&addr);
+    server.join().unwrap();
+}
+
+#[test]
+fn malformed_and_oversized_requests_keep_the_connection_serving() {
+    let limits = Limits { max_tokens_cap: 5, max_line_bytes: 256 };
+    let (addr, server) = start_server(tiny_engine(3, 16, 2, 64), limits);
+    let mut c = Client::connect(&addr);
+
+    // Malformed JSON → parse_error, connection stays.
+    c.send_line("this is not json");
+    let r = c.recv();
+    assert_eq!(r.get("error").unwrap().get_str("code").unwrap(), "parse_error");
+
+    // Unknown op → unknown_op.
+    let r = c.call(&Json::obj(vec![("op", Json::str("frobnicate"))]));
+    assert_eq!(r.get("error").unwrap().get_str("code").unwrap(), "unknown_op");
+
+    // tokens == 0 → invalid_request (no silent default).
+    let r = c.call(&Json::obj(vec![
+        ("op", Json::str("generate")),
+        ("prompt", Json::str("x")),
+        ("tokens", Json::Num(0.0)),
+    ]));
+    assert_eq!(r.get("error").unwrap().get_str("code").unwrap(), "invalid_request");
+
+    // Oversized line → line_too_long, and the stream stays in sync.
+    let huge = format!("{{\"op\":\"score\",\"text\":\"{}\"}}", "y".repeat(1000));
+    c.send_line(&huge);
+    let r = c.recv();
+    assert_eq!(r.get("error").unwrap().get_str("code").unwrap(), "line_too_long");
+
+    // Over-cap tokens clamp (5) and the same connection still works.
+    let r = c.call(&Json::obj(vec![
+        ("op", Json::str("generate")),
+        ("id", Json::str("gc")),
+        ("prompt", Json::str("ab ")),
+        ("tokens", Json::Num(9999.0)),
+    ]));
+    assert_eq!(r.get_usize("tokens").unwrap(), 5, "server-side max_tokens cap: {r}");
+    assert!(r.get_str("text").unwrap().starts_with("ab "));
+
+    shutdown(&addr);
+    server.join().unwrap();
+}
+
+#[test]
+fn cancel_interrupts_an_in_flight_streaming_generate() {
+    // A deliberately slower model (more layers/width, long generation) so
+    // the cancel reliably lands mid-flight after the first token frame.
+    // Random-init models can greedy-loop on BOS/padding tokens that decode
+    // to nothing (no token frames), so scan seeds for one that streams
+    // visible text.
+    let engine = (0..16u64)
+        .map(|s| tiny_engine(5 + s, 64, 4, 512))
+        .find(|e| e.generate("ab ", 48).len() >= "ab ".len() + 24)
+        .expect("no seed produced a visibly streaming model");
+    let (addr, server) = start_server(engine, Limits::default());
+    let mut c = Client::connect(&addr);
+    c.send_line(
+        &Json::obj(vec![
+            ("op", Json::str("generate")),
+            ("id", Json::str("long1")),
+            ("prompt", Json::str("ab ")),
+            ("tokens", Json::Num(450.0)),
+            ("stream", Json::Bool(true)),
+        ])
+        .to_string(),
+    );
+    // First token frame proves the request is in flight.
+    let first = c.recv();
+    assert_eq!(first.get_str("event").unwrap(), "token");
+
+    let mut c2 = Client::connect(&addr);
+    let cr = c2.call(&Json::obj(vec![
+        ("op", Json::str("cancel")),
+        ("target", Json::str("long1")),
+    ]));
+    assert_eq!(cr.get("cancelled").unwrap().as_bool(), Some(true), "cancel response: {cr}");
+
+    // Drain frames to the done frame: it must report the cancel.
+    let done = loop {
+        let f = c.recv();
+        if f.get("event").unwrap().as_str() == Some("done") {
+            break f;
+        }
+    };
+    assert_eq!(done.get_str("finish_reason").unwrap(), "cancelled", "{done}");
+    assert!(done.get_usize("tokens").unwrap() < 450);
+    assert!(done.get_str("text").unwrap().starts_with("ab "));
+
+    shutdown(&addr);
+    server.join().unwrap();
+}
+
+#[test]
+fn clean_shutdown_with_requests_queued() {
+    let (addr, server) = start_server(tiny_engine(7, 16, 2, 64), Limits::default());
+    // Queue several generates from their own connections…
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel();
+    let clients: Vec<_> = (0..4)
+        .map(|i| {
+            let ready = ready_tx.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr);
+                c.send_line(
+                    &Json::obj(vec![
+                        ("op", Json::str("generate")),
+                        ("id", Json::str(&format!("q{i}"))),
+                        ("prompt", Json::str("ab ")),
+                        ("tokens", Json::Num(6.0)),
+                    ])
+                    .to_string(),
+                );
+                let _ = ready.send(());
+                // Whatever happens (normal completion or shutdown error),
+                // the client must get exactly one well-formed final line.
+                c.recv()
+            })
+        })
+        .collect();
+    // …then shut down once every request is connected and submitted,
+    // while they may still be queued/in flight.
+    for _ in 0..4 {
+        ready_rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+    shutdown(&addr);
+    for h in clients {
+        let r = h.join().unwrap();
+        let ok = r.get_str("text").is_ok() || r.get("error").is_ok();
+        assert!(ok, "queued request got a malformed response: {r}");
+    }
+    // The server loop itself must exit cleanly (join returns).
+    server.join().unwrap();
+}

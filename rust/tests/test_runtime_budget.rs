@@ -1,0 +1,270 @@
+//! Acceptance pins for the runtime rank-budget redesign: ONE adapted
+//! model with a budget schedule must reproduce, **bitwise on the decode
+//! paths**, the statically built `adapter_for_budget` tier at every
+//! calibrated rate — on dense and paged caches, under mixed per-row
+//! budgets, and through the engine — while rate 0 serves the dense base.
+
+use std::sync::Arc;
+
+use rana::adapters::calibrate::{self, CalibOptions, Method, ModelCalib};
+use rana::adapters::AdaptedModel;
+use rana::coordinator::engine::{Engine, NativeEngine};
+use rana::model::{
+    decode_step_batch, decode_step_batch_budgeted, decode_step_paged, forward_seq, Arch,
+    KvCache, Model, ModelConfig, ModelWeights, PagedBatchConfig, PagedDecodeBatch,
+};
+
+const RATES: [f64; 3] = [0.2, 0.35, 0.5];
+
+fn tiny_model(arch: Arch, seed: u64) -> Arc<Model> {
+    let cfg = ModelConfig {
+        name: "tiny".into(),
+        arch,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_hidden: 32,
+        vocab: 288,
+        max_seq: 64,
+        rope_theta: 10_000.0,
+        norm_eps: 1e-5,
+    };
+    let w = ModelWeights::random_init(&cfg, seed);
+    Arc::new(Model::new(cfg, w).unwrap())
+}
+
+fn calib_for(model: &Model, seed: u64) -> ModelCalib {
+    let tokens: Vec<u32> = (0..1000).map(|i| (i * 13 % 97) as u32).collect();
+    calibrate::collect(
+        model,
+        &tokens,
+        &CalibOptions { n_fit: 96, n_eval: 24, window: 24, seed },
+    )
+}
+
+/// Step `streams` through `decode_step_batch` and return per-step logits.
+fn dense_batch_logits(b: &AdaptedModel, streams: &[Vec<u32>]) -> Vec<Vec<f32>> {
+    let mut caches: Vec<KvCache> =
+        streams.iter().map(|_| KvCache::new(&b.base.cfg)).collect();
+    let mut out = Vec::new();
+    for t in 0..streams[0].len() {
+        let toks: Vec<u32> = streams.iter().map(|s| s[t]).collect();
+        let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+        out.push(decode_step_batch(b, &toks, &mut refs).unwrap().data);
+    }
+    out
+}
+
+fn test_streams() -> Vec<Vec<u32>> {
+    vec![vec![1, 5, 9, 30, 2, 17], vec![8, 8, 1, 0, 63, 2]]
+}
+
+#[test]
+fn runtime_budget_is_bitwise_identical_to_static_tiers_dense_decode() {
+    for arch in [Arch::SwiGlu, Arch::GeluNeoX] {
+        let model = tiny_model(arch, 71);
+        let calib = calib_for(&model, 71);
+        let (runtime, reports) =
+            calibrate::adapt_runtime(Arc::clone(&model), &calib, &RATES, 32, 71);
+        assert_eq!(reports.len(), RATES.len());
+        for (i, &rate) in RATES.iter().enumerate() {
+            let (stat, stat_report) =
+                calibrate::adapt(Arc::clone(&model), &calib, Method::Rana, rate, 32, 71);
+            runtime.set_budget(rate);
+            let got = dense_batch_logits(&runtime, &test_streams());
+            let want = dense_batch_logits(&stat, &test_streams());
+            assert_eq!(got, want, "{arch:?} rate {rate}: dense decode diverged bitwise");
+            // Per-tier achieved compression matches the static build too.
+            assert!(
+                (reports[i].total_compression - stat_report.total_compression).abs() < 1e-9,
+                "{arch:?} rate {rate}: compression {} vs static {}",
+                reports[i].total_compression,
+                stat_report.total_compression
+            );
+        }
+        // Rate 0 = the dense tier, bitwise.
+        runtime.set_budget(0.0);
+        let dense = AdaptedModel::unadapted(Arc::clone(&model));
+        assert_eq!(
+            dense_batch_logits(&runtime, &test_streams()),
+            dense_batch_logits(&dense, &test_streams()),
+            "{arch:?}: budget 0 must serve the dense base bitwise"
+        );
+    }
+}
+
+#[test]
+fn runtime_budget_is_bitwise_identical_to_static_tiers_paged_decode() {
+    let model = tiny_model(Arch::SwiGlu, 73);
+    let calib = calib_for(&model, 73);
+    let (runtime, _) = calibrate::adapt_runtime(Arc::clone(&model), &calib, &RATES, 32, 73);
+    let streams = test_streams();
+    for &rate in &RATES {
+        let (stat, _) = calibrate::adapt(Arc::clone(&model), &calib, Method::Rana, rate, 32, 73);
+        runtime.set_budget(rate);
+        // Paged runtime vs dense static: the paged/dense contract is
+        // already bitwise, so this pins the budget threading across cache
+        // layouts in one comparison.
+        let mut pool = rana::kvcache::BlockPool::new(&model.cfg, 7, 64);
+        let mut paged: Vec<rana::kvcache::PagedKvCache> =
+            streams.iter().map(|_| rana::kvcache::PagedKvCache::new()).collect();
+        let mut dense: Vec<KvCache> =
+            streams.iter().map(|_| KvCache::new(&model.cfg)).collect();
+        for t in 0..streams[0].len() {
+            let toks: Vec<u32> = streams.iter().map(|s| s[t]).collect();
+            let mut prefs: Vec<&mut rana::kvcache::PagedKvCache> = paged.iter_mut().collect();
+            let got = decode_step_paged(&runtime, &toks, &mut pool, &mut prefs).unwrap();
+            let mut drefs: Vec<&mut KvCache> = dense.iter_mut().collect();
+            let want = decode_step_batch(&stat, &toks, &mut drefs).unwrap();
+            assert_eq!(got.data, want.data, "rate {rate} step {t}: paged decode diverged");
+        }
+        for mut p in paged {
+            p.release(&mut pool);
+        }
+    }
+}
+
+#[test]
+fn mixed_budget_batch_reproduces_each_rows_single_budget_output_bitwise() {
+    let model = tiny_model(Arch::SwiGlu, 77);
+    let calib = calib_for(&model, 77);
+    let (runtime, _) = calibrate::adapt_runtime(Arc::clone(&model), &calib, &RATES, 32, 77);
+    runtime.set_budget(0.0); // ambient dense: overrides must carry the row
+    let streams =
+        vec![vec![1u32, 5, 9, 30], vec![8, 8, 1, 0], vec![40, 3, 3, 12], vec![2, 9, 60, 4]];
+    // Row budgets: one per tier plus a dense row.
+    let rates = [0.2, 0.35, 0.5, 0.0];
+    let mut caches: Vec<KvCache> =
+        streams.iter().map(|_| KvCache::new(&model.cfg)).collect();
+    let mut mixed_logits: Vec<Vec<Vec<f32>>> = vec![Vec::new(); streams.len()];
+    for t in 0..streams[0].len() {
+        let toks: Vec<u32> = streams.iter().map(|s| s[t]).collect();
+        let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+        let logits = decode_step_batch_budgeted(&runtime, &toks, &mut refs, &rates).unwrap();
+        for r in 0..streams.len() {
+            mixed_logits[r].push(logits.row(r).to_vec());
+        }
+    }
+    // Each row solo at its own uniform budget must match bitwise.
+    for (r, stream) in streams.iter().enumerate() {
+        let mut cache = KvCache::new(&model.cfg);
+        for (t, &tok) in stream.iter().enumerate() {
+            let mut refs = vec![&mut cache];
+            let solo =
+                decode_step_batch_budgeted(&runtime, &[tok], &mut refs, &rates[r..r + 1])
+                    .unwrap();
+            assert_eq!(
+                solo.row(0).to_vec(),
+                mixed_logits[r][t],
+                "row {r} (budget {}) step {t}: mixed batch changed the row",
+                rates[r]
+            );
+        }
+    }
+    // The dense row equals the unadapted model bitwise.
+    let dense = AdaptedModel::unadapted(Arc::clone(&model));
+    let mut cache = KvCache::new(&model.cfg);
+    for (t, &tok) in streams[3].iter().enumerate() {
+        let mut refs = vec![&mut cache];
+        let want = decode_step_batch(&dense, &[tok], &mut refs).unwrap();
+        assert_eq!(want.row(0).to_vec(), mixed_logits[3][t], "dense row step {t}");
+    }
+}
+
+#[test]
+fn scoring_path_tracks_static_tier_within_1e6() {
+    // The sequence (GEMM) path re-quantizes through the packed kernels:
+    // pinned to ≤1e-6 instead of bitwise.
+    let model = tiny_model(Arch::SwiGlu, 79);
+    let calib = calib_for(&model, 79);
+    let (runtime, _) = calibrate::adapt_runtime(Arc::clone(&model), &calib, &RATES, 32, 79);
+    let toks: Vec<u32> = vec![1, 5, 9, 30, 2, 17, 8, 3];
+    for &rate in &RATES {
+        let (stat, _) = calibrate::adapt(Arc::clone(&model), &calib, Method::Rana, rate, 32, 79);
+        runtime.set_budget(rate);
+        let got = forward_seq(&runtime, &toks, None);
+        let want = forward_seq(&stat, &toks, None);
+        rana::util::prop::close_slices(&got.data, &want.data, 1e-6, 1e-6)
+            .unwrap_or_else(|e| panic!("rate {rate}: scoring diverged: {e}"));
+    }
+}
+
+#[test]
+fn one_engine_serves_every_tier_through_set_budget() {
+    // The serving acceptance: a single NativeEngine retunes between tiers
+    // and reproduces each statically built tier's greedy text exactly.
+    let model = tiny_model(Arch::SwiGlu, 83);
+    let calib = calib_for(&model, 83);
+    let (runtime, _) = calibrate::adapt_runtime(Arc::clone(&model), &calib, &RATES, 32, 83);
+    let engine = NativeEngine::new(Arc::new(runtime));
+    assert!(engine.supports_runtime_budget());
+    let prompts: Vec<(String, usize)> =
+        (0..3).map(|i| (format!("ab{i} "), 6)).collect();
+    for &rate in &RATES {
+        let (stat, _) = calibrate::adapt(Arc::clone(&model), &calib, Method::Rana, rate, 32, 83);
+        let stat_engine = NativeEngine::new(Arc::new(stat));
+        engine.set_budget(rate);
+        assert_eq!(engine.budget(), rate);
+        let got = engine.generate_batch(&prompts);
+        let want = stat_engine.generate_batch(&prompts);
+        assert_eq!(got, want, "rate {rate}: engine texts diverged from the static tier");
+        // Effective rank shrinks as compression grows (gauge sanity).
+        assert!(engine.effective_rank_frac(rate) <= 1.0);
+    }
+    // Back to dense.
+    engine.set_budget(0.0);
+    let dense_engine =
+        NativeEngine::new(Arc::new(AdaptedModel::unadapted(Arc::clone(&model))));
+    assert_eq!(
+        engine.generate_batch(&prompts),
+        dense_engine.generate_batch(&prompts),
+        "budget 0 must serve dense texts"
+    );
+}
+
+#[test]
+fn budget_override_bypasses_the_shared_prefix_trie() {
+    // KV computed at one budget must never seed decoding at another: a
+    // budget-overridden sequence neither adopts nor publishes trie blocks.
+    let model = tiny_model(Arch::SwiGlu, 89);
+    let calib = calib_for(&model, 89);
+    let (runtime, _) = calibrate::adapt_runtime(Arc::clone(&model), &calib, &RATES, 32, 89);
+    runtime.set_budget(0.0);
+    let mut batch = PagedDecodeBatch::new(
+        &model.cfg,
+        PagedBatchConfig { block_size: 2, n_blocks: 0, slots: 2 },
+    );
+    let prompt: Vec<u32> = (0..8).map(|i| (i * 3 + 1) % 60).collect();
+    // Warm the trie at ambient (dense) budget.
+    batch.try_join(prompt.clone(), 2).unwrap();
+    while batch.has_work() {
+        batch.step(&runtime);
+    }
+    batch.retire_finished();
+    // A 0.5-budget override on the same prompt must not reuse dense KV…
+    let spec = rana::model::SeqSpec {
+        prompt: prompt.clone(),
+        max_new: 4,
+        sampling: rana::model::Sampling::default(),
+        budget: Some(0.5),
+    };
+    let hits_before = batch.prefix_hit_tokens;
+    batch.try_join_spec(spec).unwrap();
+    while batch.has_work() {
+        batch.step(&runtime);
+    }
+    let got = batch.retire_finished();
+    assert_eq!(batch.prefix_hit_tokens, hits_before, "override adopted cross-budget KV");
+    // …and its text must equal a clean 0.5-tier decode.
+    let (stat, _) = calibrate::adapt(Arc::clone(&model), &calib, Method::Rana, 0.5, 32, 89);
+    let mut clean = PagedDecodeBatch::new(
+        &model.cfg,
+        PagedBatchConfig { block_size: 2, n_blocks: 0, slots: 2 },
+    );
+    clean.try_join(prompt, 4).unwrap();
+    while clean.has_work() {
+        clean.step(&stat);
+    }
+    let want = clean.retire_finished();
+    assert_eq!(got[0].generated, want[0].generated, "override text diverged from tier");
+}
