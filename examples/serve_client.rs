@@ -1,9 +1,11 @@
 //! Example client for the typed serving protocol: drives generate,
-//! streaming, cancel, and stats against a running `rana serve`, asserting
-//! the response schema along the way. Used by the CI serving smoke step.
+//! streaming, speculative (`spec_k`) generation, cancel, and stats against
+//! a running `rana serve`, asserting the response schema along the way.
+//! Used by the CI serving smoke step (`--spec` additionally asserts the
+//! draft/accepted counters move when the server runs with `--spec-k`).
 //!
-//!     rana serve --model llama-sim --adaptive-budget --port 7070 &
-//!     cargo run --release --example serve_client -- --port 7070 [--shutdown]
+//!     rana serve --model llama-sim --adaptive-budget --spec-k 3 --port 7070 &
+//!     cargo run --release --example serve_client -- --port 7070 [--spec] [--shutdown]
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -78,6 +80,20 @@ fn main() -> anyhow::Result<()> {
     ]))?;
     assert_eq!(r.get_f64("budget")?, 0.35, "budget override must be echoed: {r}");
     println!("sampled generate ok at budget 0.35");
+
+    // 2b. Per-request speculative draft length (greedy: text must be the
+    // server's exact non-speculative text — pinned by the bench; here we
+    // assert the request round-trips and finishes normally).
+    let r = c.call(&Json::obj(vec![
+        ("op", Json::str("generate")),
+        ("id", Json::str("g2b")),
+        ("prompt", Json::str("the dax ")),
+        ("tokens", Json::Num(12.0)),
+        ("spec_k", Json::Num(2.0)),
+    ]))?;
+    assert_eq!(r.get_str("id")?, "g2b");
+    assert_eq!(r.get_str("finish_reason")?, "length");
+    println!("speculative generate ok (spec_k=2)");
 
     // 3. Streaming generate: token frames, then one done frame.
     c.send(&Json::obj(vec![
@@ -167,10 +183,31 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(e.get("error")?.get_str("code")?, "unknown_op");
     println!("validation ok: structured errors, connection still live");
 
-    // 6. Stats: runtime-budget metrics present.
+    // 6. Stats: runtime-budget + speculation metrics present.
     let s = c.call(&Json::obj(vec![("op", Json::str("stats"))]))?;
-    for key in ["budget_hist", "budget_switches", "effective_rank_frac", "rank_budget"] {
+    for key in [
+        "budget_hist",
+        "budget_switches",
+        "effective_rank_frac",
+        "rank_budget",
+        "draft_tokens",
+        "accepted_tokens",
+        "spec_acceptance",
+        "spec_rollbacks",
+    ] {
         anyhow::ensure!(s.get(key).is_ok(), "stats missing {key}: {s}");
+    }
+    if args.get_flag("spec") {
+        // Server-side speculation is on (`--spec-k`): the spec_k request
+        // above (and the server default) must have proposed drafts.
+        anyhow::ensure!(
+            s.get_f64("draft_tokens")? > 0.0,
+            "speculation enabled but no draft tokens were proposed: {s}"
+        );
+        anyhow::ensure!(
+            s.get_f64("accepted_tokens")? <= s.get_f64("draft_tokens")?,
+            "accepted tokens exceed proposals: {s}"
+        );
     }
     println!("stats ok: {s}");
 

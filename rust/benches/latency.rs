@@ -204,24 +204,27 @@ fn serving(opts: Opts) -> anyhow::Result<()> {
         );
     }
 
+    // One calibration capture (fast mode trims it so the CI smoke stays
+    // quick) serves BOTH the runtime-budget section and the speculative-
+    // decode section below — the capture is tier-agnostic.
+    let fast = opts.items <= 16;
+    let calib_opts = rana::adapters::calibrate::CalibOptions {
+        n_fit: opts.calib_fit.min(if fast { 384 } else { 1024 }),
+        n_eval: 96,
+        window: 96,
+        seed: 0x5E12,
+    };
+    let corpus = rana::data::generate_corpus(200_000, 1_000);
+    let t0 = Instant::now();
+    let calib = rana::adapters::calibrate::collect(&model, &corpus.train, &calib_opts);
+    let calib_t = t0.elapsed();
+
     println!("\n== Serving: one runtime-budget engine vs the per-tier engine ladder ==");
     {
-        use rana::adapters::calibrate::{self, CalibOptions, Method};
+        use rana::adapters::calibrate::{self, Method};
 
-        // Fast mode trims tiers + calibration so the CI smoke stays quick.
-        let fast = opts.items <= 16;
         let rates: Vec<f64> = if fast { vec![0.35, 0.5] } else { vec![0.2, 0.35, 0.5] };
         let seq_len = 128usize;
-        let calib_opts = CalibOptions {
-            n_fit: opts.calib_fit.min(if fast { 384 } else { 1024 }),
-            n_eval: 96,
-            window: 96,
-            seed: 0x5E12,
-        };
-        let corpus = rana::data::generate_corpus(200_000, 1_000);
-        let t0 = Instant::now();
-        let calib = calibrate::collect(&model, &corpus.train, &calib_opts);
-        let calib_t = t0.elapsed();
 
         // ONE runtime-budget engine: calibration once, one weight set.
         let t0 = Instant::now();
@@ -306,6 +309,75 @@ fn serving(opts: Opts) -> anyhow::Result<()> {
             );
         }
         runtime_engine.set_budget(0.0);
+    }
+
+    println!("\n== Serving: self-speculative decode (draft at 0.5 budget, verify at target) ==");
+    {
+        use rana::adapters::calibrate;
+        use rana::coordinator::metrics::Metrics;
+        use std::sync::atomic::Ordering;
+
+        let draft_rate = 0.5;
+        let spec_k = 4usize;
+        // ONE runtime-budget model over the shared calibration capture:
+        // ambient rate 0 (dense target) with the draft tier calibrated —
+        // speculation turns the cheap tier into a decode speedup with
+        // bit-exact full-budget text.
+        let (runtime, _) =
+            calibrate::adapt_runtime(Arc::clone(&model), &calib, &[draft_rate], 128, 0x5E12);
+        let runtime = Arc::new(runtime);
+        let batch = 4usize;
+        let prompts: Vec<(String, usize)> = (0..batch)
+            .map(|i| (format!("the dax lopa the fep number {i} ."), gen_tokens))
+            .collect();
+        let base_engine =
+            NativeEngine::new(Arc::clone(&runtime)).with_decode_capacity(batch);
+        let spec_engine = NativeEngine::new(Arc::clone(&runtime))
+            .with_decode_capacity(batch)
+            .with_spec(spec_k, draft_rate);
+        let metrics = Arc::new(Metrics::new());
+        spec_engine.set_metrics(Arc::clone(&metrics));
+        // Warm both paths (the spec warm run also measures acceptance).
+        let _ = base_engine.generate_batch(&prompts);
+        let _ = spec_engine.generate_batch(&prompts);
+        let t0 = Instant::now();
+        let base_out = base_engine.generate_batch(&prompts);
+        let base_t = t0.elapsed();
+        let t0 = Instant::now();
+        let spec_out = spec_engine.generate_batch(&prompts);
+        let spec_t = t0.elapsed();
+        let toks = (batch * gen_tokens) as f64;
+        let base_tps = toks / base_t.as_secs_f64().max(1e-12);
+        let spec_tps = toks / spec_t.as_secs_f64().max(1e-12);
+        let drafts = metrics.draft_tokens.load(Ordering::Relaxed);
+        let accepted = metrics.accepted_tokens.load(Ordering::Relaxed);
+        let rollbacks = metrics.spec_rollbacks.load(Ordering::Relaxed);
+        let texts_match = base_out == spec_out;
+        println!(
+            "non-spec {base_tps:7.0} tok/s   spec(k={spec_k}) {spec_tps:7.0} tok/s \
+             ({:.2}x)   acceptance {:.2} ({accepted}/{drafts})   rollbacks {rollbacks}   \
+             texts identical: {texts_match}",
+            spec_tps / base_tps,
+            metrics.spec_acceptance(),
+        );
+        println!(
+            "{}",
+            Json::obj(vec![
+                ("bench", Json::str("serving_spec")),
+                ("batch", Json::Num(batch as f64)),
+                ("gen_tokens", Json::Num(gen_tokens as f64)),
+                ("spec_k", Json::Num(spec_k as f64)),
+                ("draft_rate", Json::Num(draft_rate)),
+                ("base_tok_s", Json::Num(base_tps)),
+                ("spec_tok_s", Json::Num(spec_tps)),
+                ("speedup", Json::Num(spec_tps / base_tps)),
+                ("draft_tokens", Json::Num(drafts as f64)),
+                ("accepted_tokens", Json::Num(accepted as f64)),
+                ("acceptance_rate", Json::Num(metrics.spec_acceptance())),
+                ("spec_rollbacks", Json::Num(rollbacks as f64)),
+                ("texts_match", Json::Bool(texts_match)),
+            ])
+        );
     }
 
     println!("\n== Serving-path overhead: coordinator vs raw engine ==");

@@ -437,6 +437,7 @@ impl Batcher {
                     sampling: g.sampling,
                     stop: g.stop.clone(),
                     budget: g.budget,
+                    spec_k: g.spec_k,
                 };
                 match session.try_join(&sreq) {
                     Some(sid) => {
@@ -560,6 +561,7 @@ pub fn generate_req(prompt: &str, tokens: usize) -> Request {
         sampling: crate::model::Sampling::default(),
         stop: Vec::new(),
         budget: None,
+        spec_k: None,
         stream: false,
     })
 }

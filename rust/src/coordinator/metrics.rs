@@ -37,6 +37,12 @@ pub struct Metrics {
     pub prefix_hit_tokens: AtomicU64,
     /// Sequences preempted (blocks released, requeued) under pool pressure.
     pub kv_preemptions: AtomicU64,
+    /// Speculative decoding: draft tokens proposed at the low budget.
+    pub draft_tokens: AtomicU64,
+    /// Speculative decoding: draft tokens accepted by full-budget verify.
+    pub accepted_tokens: AtomicU64,
+    /// Speculation rounds that rolled the KV cache back (draft rejected).
+    pub spec_rollbacks: AtomicU64,
     /// Shared-budget retunes by the controller (tier changes, not swaps).
     pub budget_switches: AtomicU64,
     /// Calibrated active-rank fraction at the current shared budget ×1000.
@@ -88,6 +94,25 @@ impl Metrics {
         self.kv_blocks_peak.fetch_max(peak as u64, Ordering::Relaxed);
         self.prefix_hit_tokens.fetch_add(new_hits, Ordering::Relaxed);
         self.kv_preemptions.fetch_add(new_preempts, Ordering::Relaxed);
+    }
+
+    /// Record speculation counters accrued since the last report (deltas,
+    /// like [`Metrics::observe_kv_pool`]'s hit/preempt deltas).
+    pub fn observe_spec(&self, new_drafts: u64, new_accepted: u64, new_rollbacks: u64) {
+        self.draft_tokens.fetch_add(new_drafts, Ordering::Relaxed);
+        self.accepted_tokens.fetch_add(new_accepted, Ordering::Relaxed);
+        self.spec_rollbacks.fetch_add(new_rollbacks, Ordering::Relaxed);
+    }
+
+    /// Fraction of proposed draft tokens that survived verification
+    /// (0 when speculation never ran).
+    pub fn spec_acceptance(&self) -> f64 {
+        let drafts = self.draft_tokens.load(Ordering::Relaxed);
+        if drafts == 0 {
+            0.0
+        } else {
+            self.accepted_tokens.load(Ordering::Relaxed) as f64 / drafts as f64
+        }
     }
 
     /// Mean batch occupancy of the decode passes (tokens per engine pass).
@@ -164,6 +189,13 @@ impl Metrics {
                 Json::Num(self.prefix_hit_tokens.load(Ordering::Relaxed) as f64),
             ),
             ("kv_preemptions", Json::Num(self.kv_preemptions.load(Ordering::Relaxed) as f64)),
+            ("draft_tokens", Json::Num(self.draft_tokens.load(Ordering::Relaxed) as f64)),
+            (
+                "accepted_tokens",
+                Json::Num(self.accepted_tokens.load(Ordering::Relaxed) as f64),
+            ),
+            ("spec_rollbacks", Json::Num(self.spec_rollbacks.load(Ordering::Relaxed) as f64)),
+            ("spec_acceptance", Json::Num(self.spec_acceptance())),
             (
                 "budget_switches",
                 Json::Num(self.budget_switches.load(Ordering::Relaxed) as f64),
@@ -230,6 +262,10 @@ mod tests {
             "kv_blocks_peak",
             "prefix_hit_tokens",
             "kv_preemptions",
+            "draft_tokens",
+            "accepted_tokens",
+            "spec_rollbacks",
+            "spec_acceptance",
             "budget_switches",
             "effective_rank_frac",
             "budget_hist",
@@ -266,6 +302,21 @@ mod tests {
         // Peak never regresses.
         m.observe_kv_pool(1, 3, 0, 0);
         assert_eq!(m.kv_blocks_peak.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn spec_counters_accumulate_and_derive_acceptance() {
+        let m = Metrics::new();
+        assert_eq!(m.spec_acceptance(), 0.0, "no drafts yet");
+        m.observe_spec(8, 6, 1);
+        m.observe_spec(4, 3, 1);
+        assert_eq!(m.draft_tokens.load(Ordering::Relaxed), 12);
+        assert_eq!(m.accepted_tokens.load(Ordering::Relaxed), 9);
+        assert_eq!(m.spec_rollbacks.load(Ordering::Relaxed), 2);
+        assert!((m.spec_acceptance() - 0.75).abs() < 1e-12);
+        let s = m.snapshot();
+        assert_eq!(s.get_f64("draft_tokens").unwrap(), 12.0);
+        assert!((s.get_f64("spec_acceptance").unwrap() - 0.75).abs() < 1e-12);
     }
 
     #[test]

@@ -49,6 +49,12 @@ pub struct ServerConfig {
     pub engine: String,
     /// Hidden states captured for adapter calibration.
     pub calib_fit: usize,
+    /// Self-speculative decoding: default draft length per request
+    /// (0 = off; per-request `spec_k` still opts in).
+    pub spec_k: usize,
+    /// Compression rate the speculative draft passes run at (calibrated as
+    /// an extra tier when speculation is enabled).
+    pub spec_draft: f64,
     /// Protocol edge limits (max tokens per generate, max line bytes).
     pub limits: Limits,
 }
@@ -64,6 +70,8 @@ impl Default for ServerConfig {
             budget_tiers: Vec::new(),
             engine: "native".into(),
             calib_fit: 1024,
+            spec_k: 0,
+            spec_draft: 0.5,
             limits: Limits::default(),
         }
     }
@@ -115,7 +123,16 @@ pub fn build_engine(cfg: &ServerConfig) -> anyhow::Result<Arc<dyn Engine>> {
         return Ok(Arc::new(PjrtScoreEngine::load(&cfg.model, "dense")?) as Arc<dyn Engine>);
     }
     let model = Arc::new(crate::model::load_or_random(&cfg.model, 0x5E12)?);
-    let compressed: Vec<f64> = cfg.tiers().into_iter().filter(|&r| r > 0.0).collect();
+    let mut compressed: Vec<f64> = cfg.tiers().into_iter().filter(|&r| r > 0.0).collect();
+    // Speculation drafts at `spec_draft` (clamped into the valid
+    // compression-rate range like every other tier): make sure that tier
+    // is calibrated so the draft passes resolve an exact schedule entry,
+    // not a neighbour.
+    let spec_draft = cfg.spec_draft.clamp(0.0, 0.99);
+    if cfg.spec_k > 0 && spec_draft > 0.0 && !compressed.contains(&spec_draft) {
+        compressed.push(spec_draft);
+        compressed.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    }
     let adapted = if compressed.is_empty() {
         crate::adapters::AdaptedModel::unadapted(model)
     } else {
@@ -129,7 +146,11 @@ pub fn build_engine(cfg: &ServerConfig) -> anyhow::Result<Arc<dyn Engine>> {
             calibrate::adapt_runtime(Arc::clone(&model), &calib, &compressed, 512, 0x5E12);
         adapted
     };
-    Ok(Arc::new(NativeEngine::new(Arc::new(adapted))) as Arc<dyn Engine>)
+    let mut engine = NativeEngine::new(Arc::new(adapted));
+    if cfg.spec_k > 0 {
+        engine = engine.with_spec(cfg.spec_k, spec_draft);
+    }
+    Ok(Arc::new(engine) as Arc<dyn Engine>)
 }
 
 /// Start the coordinator and serve the TCP line protocol until a client
@@ -137,12 +158,15 @@ pub fn build_engine(cfg: &ServerConfig) -> anyhow::Result<Arc<dyn Engine>> {
 pub fn serve(cfg: ServerConfig) -> anyhow::Result<()> {
     let engine = build_engine(&cfg)?;
     println!(
-        "coordinator: model={} engine={} tiers={:?} max_batch={} runtime_budget={}",
+        "coordinator: model={} engine={} tiers={:?} max_batch={} runtime_budget={} \
+         spec_k={} spec_draft={}",
         cfg.model,
         engine.name(),
         cfg.tiers(),
         cfg.max_batch,
         engine.supports_runtime_budget(),
+        cfg.spec_k,
+        cfg.spec_draft,
     );
     let listener = TcpListener::bind(("127.0.0.1", cfg.port))?;
     println!("listening on {}", listener.local_addr()?);

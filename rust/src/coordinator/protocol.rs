@@ -57,6 +57,10 @@ pub struct GenerateRequest {
     /// Per-request compression-rate override in `[0, 1)`; `None` = the
     /// server's shared budget.
     pub budget: Option<f64>,
+    /// Per-request speculative draft length (`None` = the server default,
+    /// `0` = speculation off for this request; clamped to
+    /// [`crate::spec::MAX_SPEC_K`]).
+    pub spec_k: Option<usize>,
     /// Emit incremental token frames before the final `done` frame.
     pub stream: bool,
 }
@@ -219,12 +223,25 @@ fn parse_generate(j: &Json, id: String, limits: &Limits) -> Result<GenerateReque
         None => None,
     };
 
+    let spec_k = match opt_f64(j, "spec_k")? {
+        Some(k) if k.is_finite() && k >= 0.0 => {
+            Some((k as usize).min(crate::spec::MAX_SPEC_K))
+        }
+        Some(_) => {
+            return Err(invalid(format!(
+                "\"spec_k\" must be a non-negative integer (clamped to {})",
+                crate::spec::MAX_SPEC_K
+            )))
+        }
+        None => None,
+    };
+
     let stream = match j.get("stream") {
         Ok(v) => v.as_bool().ok_or_else(|| invalid("\"stream\" must be a boolean"))?,
         Err(_) => false,
     };
 
-    Ok(GenerateRequest { id, prompt, max_tokens, sampling, stop, budget, stream })
+    Ok(GenerateRequest { id, prompt, max_tokens, sampling, stop, budget, spec_k, stream })
 }
 
 fn opt_f64(j: &Json, key: &str) -> Result<Option<f64>, ProtocolError> {
@@ -308,7 +325,7 @@ mod tests {
         let r = parse_request(r#"{"op":"score","text":"abc","id":"c1"}"#, &limits()).unwrap();
         assert!(matches!(&r, Request::Score(s) if s.id == "c1" && s.text == "abc"));
         let r = parse_request(
-            r#"{"op":"generate","prompt":"p","tokens":4,"temperature":0.7,"top_k":5,"top_p":0.9,"seed":11,"stop":["\n"],"budget":0.35,"stream":true}"#,
+            r#"{"op":"generate","prompt":"p","tokens":4,"temperature":0.7,"top_k":5,"top_p":0.9,"seed":11,"stop":["\n"],"budget":0.35,"spec_k":3,"stream":true}"#,
             &limits(),
         )
         .unwrap();
@@ -320,6 +337,7 @@ mod tests {
         assert_eq!(g.sampling.seed, 11);
         assert_eq!(g.stop, vec!["\n".to_string()]);
         assert_eq!(g.budget, Some(0.35));
+        assert_eq!(g.spec_k, Some(3));
         assert!(g.stream);
         assert!(!g.id.is_empty(), "server assigns an id when absent");
         assert!(matches!(
@@ -357,11 +375,27 @@ mod tests {
             r#"{"op":"generate","prompt":"p","tokens":4,"temperature":-1}"#,
             r#"{"op":"generate","prompt":"p","tokens":4,"top_p":0}"#,
             r#"{"op":"generate","prompt":"p","tokens":4,"budget":1.5}"#,
+            r#"{"op":"generate","prompt":"p","tokens":4,"spec_k":-2}"#,
             r#"{"op":"generate","prompt":"p","tokens":4,"stop":[""]}"#,
             r#"{"op":"generate","prompt":"p","tokens":4,"stop":"x"}"#,
         ] {
             assert!(parse_request(bad, &limits()).is_err(), "accepted: {bad}");
         }
+        // spec_k clamps to the protocol cap; 0 explicitly disables.
+        let r = parse_request(
+            r#"{"op":"generate","prompt":"p","tokens":4,"spec_k":99}"#,
+            &limits(),
+        )
+        .unwrap();
+        let Request::Generate(g) = r else { panic!() };
+        assert_eq!(g.spec_k, Some(crate::spec::MAX_SPEC_K));
+        let r = parse_request(
+            r#"{"op":"generate","prompt":"p","tokens":4,"spec_k":0}"#,
+            &limits(),
+        )
+        .unwrap();
+        let Request::Generate(g) = r else { panic!() };
+        assert_eq!(g.spec_k, Some(0));
     }
 
     #[test]

@@ -242,17 +242,78 @@ impl PagedKvCache {
         Ok(())
     }
 
+    /// Make positions `len..len + n` writable in one go (block alloc +
+    /// COW), for multi-token appends (speculative verify). Idempotent for
+    /// already-prepared positions; on failure the chain is rolled back to
+    /// exactly what `len` tokens need, so no blocks leak.
+    pub fn prepare_append_n(&mut self, pool: &mut BlockPool, n: usize) -> Result<(), CacheError> {
+        let base = self.len;
+        for i in 0..n {
+            self.len = base + i;
+            if let Err(e) = self.prepare_append(pool) {
+                self.len = base;
+                let keep = base.div_ceil(pool.block_size());
+                while self.chain.len() > keep {
+                    let b = self.chain.pop().expect("checked length");
+                    pool.release(b);
+                }
+                return Err(e);
+            }
+        }
+        self.len = base;
+        Ok(())
+    }
+
     /// Write one layer's K/V rows for the token at position `len`.
     /// Requires a preceding successful [`PagedKvCache::prepare_append`].
     pub fn write_kv(&self, pool: &mut BlockPool, layer: usize, k: &[f32], v: &[f32]) {
+        self.write_kv_at(pool, layer, self.len, k, v);
+    }
+
+    /// Write one layer's K/V rows at an explicit position in
+    /// `len..len + n` previously made writable by
+    /// [`PagedKvCache::prepare_append_n`] (multi-token appends write several
+    /// positions before a single [`PagedKvCache::advance_n`] commit).
+    pub fn write_kv_at(
+        &self,
+        pool: &mut BlockPool,
+        layer: usize,
+        pos: usize,
+        k: &[f32],
+        v: &[f32],
+    ) {
         let bs = pool.block_size();
-        let idx = self.len / bs;
-        pool.write_kv(layer, self.chain[idx], self.len % bs, k, v);
+        let idx = pos / bs;
+        pool.write_kv(layer, self.chain[idx], pos % bs, k, v);
     }
 
     /// Commit the append: position `len` is now part of the context.
     pub fn advance(&mut self) {
         self.len += 1;
+    }
+
+    /// Commit `n` prepared appends at once.
+    pub fn advance_n(&mut self, n: usize) {
+        self.len += n;
+    }
+
+    /// Roll the cache back to `len` tokens (`len <= self.len()`), releasing
+    /// every whole block past the new end back to the pool. COW-aware by
+    /// construction: only this cache's own references are dropped — a block
+    /// shared with the prefix trie or a fork survives under the other
+    /// holders' references, and the kept tail block is never written here
+    /// (the next [`PagedKvCache::prepare_append`] copies it first if it is
+    /// still shared). Callers must never truncate below a boundary whose
+    /// blocks they have published (the prefix trie keeps its own refs, but
+    /// the chain must keep covering every committed token).
+    pub fn truncate(&mut self, pool: &mut BlockPool, len: usize) {
+        assert!(len <= self.len, "truncate cannot extend ({} -> {len})", self.len);
+        let keep = len.div_ceil(pool.block_size());
+        while self.chain.len() > keep {
+            let b = self.chain.pop().expect("checked length");
+            pool.release(b);
+        }
+        self.len = len;
     }
 
     /// Share the whole cache (including a partial tail block) with a new
@@ -398,9 +459,100 @@ mod tests {
         pool.check_invariants();
     }
 
-    /// Randomized alloc/append/fork/release schedule; the pool invariants
-    /// (refcount ↔ free-list consistency, conservation of blocks) must hold
-    /// at every step, and held-block accounting must reconcile.
+    #[test]
+    fn truncate_releases_whole_blocks_and_is_cow_safe() {
+        let c = cfg();
+        let mut pool = BlockPool::new(&c, 4, 8);
+        let mut a = PagedKvCache::new();
+        for p in 0..10 {
+            a.prepare_append(&mut pool).unwrap();
+            for layer in 0..c.n_layers {
+                let k = vec![p as f32; c.d_model];
+                a.write_kv(&mut pool, layer, &k, &k);
+            }
+            a.advance();
+        }
+        assert_eq!(a.blocks_held(), 3);
+
+        // Fork, then roll the fork back across a block boundary: only the
+        // fork's own references are dropped; the original keeps its chain.
+        let mut b = a.fork(&mut pool);
+        b.truncate(&mut pool, 5);
+        assert_eq!(b.len(), 5);
+        assert_eq!(b.blocks_held(), 2, "5 tokens need 2 blocks of 4");
+        assert_eq!(pool.ref_count(a.chain()[2]), 1, "tail block back to the sole owner");
+        assert_eq!(pool.ref_count(a.chain()[1]), 2, "kept blocks stay shared");
+        pool.check_invariants();
+
+        // The original's contents at the rolled-back positions are intact.
+        let bs = pool.block_size();
+        for p in 4..10 {
+            let row = a.chain()[p / bs] * bs + p % bs;
+            assert_eq!(pool.layer_k(0).row(row)[0], p as f32, "truncate mutated shared KV");
+        }
+
+        // Re-appending on the fork COWs the shared (kept) tail block before
+        // writing, so the original's position 5..8 stay untouched.
+        b.prepare_append(&mut pool).unwrap();
+        assert_ne!(b.chain()[1], a.chain()[1], "shared tail must COW after rollback");
+        for layer in 0..c.n_layers {
+            b.write_kv(&mut pool, layer, &[77.0; 8], &[77.0; 8]);
+        }
+        b.advance();
+        for p in 4..10 {
+            let row = a.chain()[p / bs] * bs + p % bs;
+            assert_eq!(pool.layer_k(0).row(row)[0], p as f32);
+        }
+
+        // Truncate to a block boundary and to zero.
+        b.truncate(&mut pool, 4);
+        assert_eq!(b.blocks_held(), 1);
+        a.truncate(&mut pool, 0);
+        assert_eq!((a.len(), a.blocks_held()), (0, 0));
+        b.release(&mut pool);
+        assert_eq!(pool.free_blocks(), 8);
+        pool.check_invariants();
+    }
+
+    #[test]
+    fn prepare_append_n_allocs_ahead_and_rolls_back_on_exhaustion() {
+        let c = cfg();
+        let mut pool = BlockPool::new(&c, 2, 3);
+        let mut a = PagedKvCache::new();
+        a.prepare_append_n(&mut pool, 4).unwrap();
+        assert_eq!(a.blocks_held(), 2, "4 tokens at block size 2 = 2 blocks");
+        assert_eq!(a.len(), 0, "prepare commits nothing");
+        // Idempotent for already-prepared positions.
+        a.prepare_append_n(&mut pool, 4).unwrap();
+        assert_eq!(a.blocks_held(), 2);
+        for pos in 0..4 {
+            for layer in 0..c.n_layers {
+                a.write_kv_at(&mut pool, layer, pos, &[pos as f32; 8], &[0.0; 8]);
+            }
+        }
+        a.advance_n(4);
+        assert_eq!(a.len(), 4);
+
+        // Asking past the pool: typed error, chain rolled back to cover
+        // exactly the committed tokens, nothing leaked.
+        let mut b = PagedKvCache::new();
+        match b.prepare_append_n(&mut pool, 4) {
+            Err(CacheError::PoolExhausted { .. }) => {}
+            other => panic!("expected PoolExhausted, got {other:?}"),
+        }
+        assert_eq!(b.blocks_held(), 0, "failed prepare must roll its allocations back");
+        pool.check_invariants();
+        a.release(&mut pool);
+        assert!(b.prepare_append_n(&mut pool, 4).is_ok());
+        b.release(&mut pool);
+        assert_eq!(pool.free_blocks(), 3);
+    }
+
+    /// Randomized alloc/append/fork/release/truncate schedule; the pool
+    /// invariants (refcount ↔ free-list consistency, conservation of
+    /// blocks) must hold at every step, and held-block accounting must
+    /// reconcile. The truncate arm models speculative-decode rollback
+    /// interleaved with forks (shared chains) and multi-token prepares.
     #[test]
     fn randomized_alloc_free_fork_keeps_invariants() {
         let c = cfg();
@@ -411,7 +563,7 @@ mod tests {
             let mut pool = BlockPool::new(&c, bs, n_blocks);
             let mut caches: Vec<PagedKvCache> = Vec::new();
             for _ in 0..300 {
-                match rng.below(5) {
+                match rng.below(7) {
                     0 => caches.push(PagedKvCache::new()),
                     1 | 2 => {
                         // Append one token to a random cache (may exhaust).
@@ -429,6 +581,26 @@ mod tests {
                         if let Some(i) = (!caches.is_empty()).then(|| rng.below(caches.len())) {
                             let f = caches[i].fork(&mut pool);
                             caches.push(f);
+                        }
+                    }
+                    4 => {
+                        // Speculative rollback: truncate to a random shorter
+                        // length (possibly across shared/forked blocks).
+                        if let Some(i) = (!caches.is_empty()).then(|| rng.below(caches.len())) {
+                            let new_len = rng.below(caches[i].len() + 1);
+                            caches[i].truncate(&mut pool, new_len);
+                        }
+                    }
+                    5 => {
+                        // Multi-token prepare (speculative verify window):
+                        // may exhaust the pool; either way nothing commits.
+                        if let Some(i) = (!caches.is_empty()).then(|| rng.below(caches.len())) {
+                            let n = 1 + rng.below(2 * bs);
+                            let _ = caches[i].prepare_append_n(&mut pool, n);
+                            // Roll back to the committed length: uncommitted
+                            // prepared blocks must release cleanly too.
+                            let len = caches[i].len();
+                            caches[i].truncate(&mut pool, len);
                         }
                     }
                     _ => {

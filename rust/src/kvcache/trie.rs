@@ -228,6 +228,96 @@ mod tests {
         assert_eq!(pool.free_blocks(), 8);
     }
 
+    /// Randomized publish (insert) / adopt (lookup) / rollback (truncate) /
+    /// evict interleavings over one pool: refcount ↔ free-list invariants
+    /// must hold at every step, rollback must never free a block the trie
+    /// still holds, and a final clear + release must return every block.
+    #[test]
+    fn randomized_publish_rollback_evict_keeps_invariants() {
+        use crate::kvcache::PagedKvCache;
+        use crate::util::rng::Xoshiro256;
+        let c = cfg();
+        for seed in 0..4u64 {
+            let mut rng = Xoshiro256::new(0x7121E ^ seed);
+            let bs = 2usize;
+            let n_blocks = 12;
+            let mut pool = BlockPool::new(&c, bs, n_blocks);
+            let mut trie = PrefixTrie::new();
+            // A few fixed prompts so lookups actually hit published paths.
+            let prompts: Vec<Vec<u32>> =
+                vec![vec![1, 2, 3, 4, 5, 6], vec![1, 2, 3, 4, 9, 9], vec![7, 7, 8, 8]];
+            let mut seqs: Vec<(usize, PagedKvCache)> = Vec::new(); // (prompt idx, cache)
+            for _ in 0..200 {
+                match rng.below(6) {
+                    0 => {
+                        // Admit: adopt the longest published prefix.
+                        let pi = rng.below(prompts.len());
+                        let chain = trie.lookup(&prompts[pi], 8, &mut pool);
+                        let tokens = chain.len() * bs;
+                        seqs.push((pi, PagedKvCache::from_shared_prefix(chain, tokens, bs)));
+                    }
+                    1 | 2 => {
+                        // Grow a sequence toward its full prompt (may COW).
+                        if let Some(i) = (!seqs.is_empty()).then(|| rng.below(seqs.len())) {
+                            let (pi, cache) = &mut seqs[i];
+                            if cache.len() < prompts[*pi].len()
+                                && cache.prepare_append(&mut pool).is_ok()
+                            {
+                                for layer in 0..c.n_layers {
+                                    let k = vec![cache.len() as f32; c.d_model];
+                                    cache.write_kv(&mut pool, layer, &k, &k);
+                                }
+                                cache.advance();
+                            }
+                        }
+                    }
+                    3 => {
+                        // Publish full prompt blocks, then speculatively
+                        // overshoot and roll back — the published boundary
+                        // must survive (trie refs + this chain's refs).
+                        if let Some(i) = (!seqs.is_empty()).then(|| rng.below(seqs.len())) {
+                            let (pi, cache) = &mut seqs[i];
+                            let full = cache.len() / bs;
+                            if full > 0 {
+                                trie.insert(&prompts[*pi], &cache.chain()[..full], &mut pool);
+                            }
+                            let committed = cache.len();
+                            if cache.prepare_append_n(&mut pool, bs + 1).is_ok() {
+                                cache.advance_n(bs + 1);
+                            }
+                            cache.truncate(&mut pool, committed);
+                            assert!(
+                                cache.blocks_held() * bs >= committed,
+                                "rollback released a block still covering committed tokens"
+                            );
+                        }
+                    }
+                    4 => {
+                        let _ = trie.evict(&mut pool, 1 + rng.below(3));
+                    }
+                    _ => {
+                        if let Some(i) = (!seqs.is_empty()).then(|| rng.below(seqs.len())) {
+                            let (_, mut cache) = seqs.swap_remove(i);
+                            cache.release(&mut pool);
+                        }
+                    }
+                }
+                pool.check_invariants();
+                let held: usize =
+                    seqs.iter().map(|(_, s)| s.blocks_held()).sum::<usize>() + trie.blocks_held();
+                let refs: usize =
+                    (0..pool.n_blocks()).map(|b| pool.ref_count(b) as usize).sum();
+                assert_eq!(held, refs, "seed {seed}: dangling or leaked references");
+            }
+            for (_, mut s) in seqs {
+                s.release(&mut pool);
+            }
+            trie.clear(&mut pool);
+            assert_eq!(pool.free_blocks(), n_blocks, "seed {seed}: leaked blocks");
+            pool.check_invariants();
+        }
+    }
+
     #[test]
     fn evict_frees_only_unreferenced_leaf_first() {
         let mut pool = BlockPool::new(&cfg(), 2, 8);

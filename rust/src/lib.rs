@@ -32,5 +32,6 @@ pub mod flops;
 pub mod kvcache;
 pub mod model;
 pub mod runtime;
+pub mod spec;
 pub mod tensor;
 pub mod util;

@@ -7,7 +7,9 @@
 //! * `adapt`          — adapt a trained model and print the report;
 //! * `eval`           — perplexity + downstream accuracy of a (possibly
 //!   adapted) model;
-//! * `decode`         — greedy decode from a prompt (smoke/demo);
+//! * `decode`         — decode from a prompt: adapted (`--method/--rate`
+//!   or runtime `--budget`), sampled (`--temperature/--top-k/--top-p/
+//!   --seed`), and optionally self-speculative (`--spec-k/--spec-draft`);
 //! * `runtime-check`  — load an HLO artifact via PJRT and verify parity
 //!   against the native engine.
 
@@ -133,14 +135,118 @@ fn eval_cmd(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `rana decode`: adapted + sampled + (optionally) speculative decoding
+/// from a prompt, driven through the same engine session surface the
+/// server uses.
+///
+/// Adaptation: `--method`/`--rate` build a fixed-budget adapter (as in
+/// `rana eval`); `--budget <r>` instead builds a runtime-budget model
+/// calibrated at `{r, spec-draft}` and serves at ambient rate `r`
+/// (`--budget 0` = dense target). `--spec-k N` enables self-speculative
+/// decoding (drafting at `--spec-draft`, default 0.5). Sampling:
+/// `--temperature/--top-k/--top-p/--seed` (temperature 0 = exact greedy).
 fn decode_cmd(args: &Args) -> anyhow::Result<()> {
-    let name = args.get_str("model", "llama-sim");
-    let model = Arc::new(rana::model::Model::load(&rana::model::model_dir(&name))?);
+    use rana::coordinator::engine::{DecodeSession as _, Engine, SeqEvent, SessionRequest};
+    use rana::coordinator::metrics::Metrics;
+
     let prompt = args.get_str("prompt", "the ");
     let n = args.get_usize("tokens", 64);
-    let adapted = rana::adapters::AdaptedModel::unadapted(model);
-    let out = rana::eval::greedy_decode(&adapted, &prompt, n);
-    println!("{out}");
+    let spec_k = args.get_usize("spec-k", 0);
+    // Compression rates live in [0, 1): clamp like the serve path so the
+    // drafted tier is always a calibratable rate.
+    let spec_draft = args.get_f64("spec-draft", 0.5).clamp(0.0, 0.99);
+    let sampling = rana::model::Sampling {
+        temperature: args.get_f64("temperature", 0.0),
+        top_k: args.get_usize("top-k", 0),
+        top_p: args.get_f64("top-p", 1.0),
+        seed: args.get_u64("seed", 0),
+    };
+
+    let budget = args.get_opt("budget").and_then(|b| b.parse::<f64>().ok());
+    let adapted = if budget.is_some() || spec_k > 0 {
+        // Runtime-budget path: one calibration serves the target budget
+        // AND the speculative draft tier.
+        let name = args.get_str("model", "llama-sim");
+        let model = Arc::new(rana::model::load_or_random(&name, 0x5E12)?);
+        let target = budget.unwrap_or(0.0).clamp(0.0, 0.99);
+        let mut tiers: Vec<f64> = [target, if spec_k > 0 { spec_draft } else { 0.0 }]
+            .into_iter()
+            .filter(|&r| r > 0.0)
+            .collect();
+        tiers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        tiers.dedup();
+        if tiers.is_empty() {
+            rana::adapters::AdaptedModel::unadapted(model)
+        } else {
+            let corpus = rana::data::generate_corpus(400_000, 1_000);
+            // Calibration seed is fixed (like `serve`'s build_engine):
+            // --seed is the *sampling* seed and must not change the
+            // adapted model itself.
+            let opts = CalibOptions {
+                n_fit: args.get_usize("calib", 1024),
+                n_eval: 128,
+                window: 128,
+                seed: 0xCA11B,
+            };
+            let calib = calibrate::collect(&model, &corpus.train, &opts);
+            let (adapted, _) =
+                calibrate::adapt_runtime(Arc::clone(&model), &calib, &tiers, 512, opts.seed);
+            adapted.set_budget(target);
+            adapted
+        }
+    } else if args.get_f64("rate", 0.0) > 0.0 {
+        // Fixed-budget path honoring --method/--rate. Calibration must not
+        // see the *sampling* seed: strip --seed so load_and_adapt keeps
+        // its own fixed calibration default.
+        let mut calib_args = args.clone();
+        calib_args.options.remove("seed");
+        let (_, adapted, _) = load_and_adapt(&calib_args)?;
+        adapted
+    } else {
+        // No adaptation flags: plain dense decode (the pre-existing
+        // smoke/demo default).
+        let name = args.get_str("model", "llama-sim");
+        let model = Arc::new(rana::model::Model::load(&rana::model::model_dir(&name))?);
+        rana::adapters::AdaptedModel::unadapted(model)
+    };
+
+    let engine = rana::coordinator::engine::NativeEngine::new(Arc::new(adapted))
+        .with_decode_capacity(1)
+        .with_spec(spec_k, spec_draft);
+    let metrics = Arc::new(Metrics::new());
+    engine.set_metrics(Arc::clone(&metrics));
+    let mut session = engine.begin_decode_session().expect("native decode session");
+    let req = SessionRequest {
+        prompt: prompt.clone(),
+        max_new: n,
+        sampling,
+        ..SessionRequest::default()
+    };
+    session.try_join(&req).expect("fresh session has a free slot");
+    let text = loop {
+        let events = session.step();
+        let finished = events.into_iter().find_map(|e| match e {
+            SeqEvent::Finished { text, .. } => Some(text),
+            _ => None,
+        });
+        if let Some(t) = finished {
+            break t;
+        }
+        if session.active() == 0 {
+            break prompt.clone();
+        }
+    };
+    println!("{text}");
+    if spec_k > 0 {
+        use std::sync::atomic::Ordering;
+        eprintln!(
+            "spec: draft_tokens={} accepted={} acceptance={:.2} rollbacks={}",
+            metrics.draft_tokens.load(Ordering::Relaxed),
+            metrics.accepted_tokens.load(Ordering::Relaxed),
+            metrics.spec_acceptance(),
+            metrics.spec_rollbacks.load(Ordering::Relaxed),
+        );
+    }
     Ok(())
 }
 
@@ -160,6 +266,8 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         budget_tiers,
         engine: args.get_str("engine", "native"),
         calib_fit: args.get_usize("calib", defaults.calib_fit),
+        spec_k: args.get_usize("spec-k", defaults.spec_k),
+        spec_draft: args.get_f64("spec-draft", defaults.spec_draft),
         limits: rana::coordinator::protocol::Limits {
             max_tokens_cap: args.get_usize("max-tokens", defaults.limits.max_tokens_cap),
             max_line_bytes: args.get_usize("max-line-bytes", defaults.limits.max_line_bytes),

@@ -328,6 +328,14 @@ impl KvCache {
     pub fn clear(&mut self) {
         self.len = 0;
     }
+
+    /// Roll the cache back to `len` tokens (speculative rollback): rows
+    /// past the new end are logically discarded — the next append at that
+    /// position simply overwrites them.
+    pub fn truncate(&mut self, len: usize) {
+        assert!(len <= self.len, "truncate cannot extend ({} -> {len})", self.len);
+        self.len = len;
+    }
 }
 
 /// One decode step: append `token` at position `cache.len()`, return logits.
@@ -426,26 +434,54 @@ fn decode_step_batch_inner<B: BlockOps>(
     rates: Option<&[f64]>,
 ) -> Result<Mat, CacheError> {
     assert_eq!(tokens.len(), caches.len(), "decode_step_batch arity");
+    let rows: Vec<(usize, u32)> = tokens.iter().copied().enumerate().collect();
+    decode_step_batch_multi(b, &rows, caches, rates)
+}
+
+/// One batched decode pass where a cache may receive **several successive
+/// tokens** — the speculative verify window. `rows[r] = (ci, token)` feeds
+/// `token` to `caches[ci]`; a cache's rows must appear in stream order, so
+/// row `r` lands at position `caches[ci].len() + (rows of ci before r)`.
+///
+/// Within one pass, a later row of a sequence attends over the K/V rows
+/// the sequence's earlier rows just wrote (the per-layer body visits rows
+/// in order), and every linear kernel on this path is row-independent — so
+/// each row computes **bit-for-bit** what the same token fed one pass at a
+/// time would (the §2a contract extended to multi-token rows). That is
+/// what makes speculative verification exact by construction. `rates` is
+/// per **row**. Errors are typed and pre-mutation: `seq` names the
+/// offending row.
+pub fn decode_step_batch_multi<B: BlockOps>(
+    b: &B,
+    rows: &[(usize, u32)],
+    caches: &mut [&mut KvCache],
+    rates: Option<&[f64]>,
+) -> Result<Mat, CacheError> {
     let cfg = b.config().clone();
-    let positions: Vec<usize> = caches.iter().map(|c| c.len).collect();
-    for (r, &pos) in positions.iter().enumerate() {
+    let mut counts = vec![0usize; caches.len()];
+    let mut positions = Vec::with_capacity(rows.len());
+    for &(ci, _) in rows {
+        let pos = caches[ci].len + counts[ci];
         if pos >= cfg.max_seq {
             // Typed, pre-state-mutation: no cache has been written yet, so
-            // the caller can drop row `r` and retry the pass.
-            return Err(CacheError::CacheFull { seq: r, pos, capacity: cfg.max_seq });
+            // the caller can drop the offending sequence and retry.
+            return Err(CacheError::CacheFull { seq: positions.len(), pos, capacity: cfg.max_seq });
         }
+        positions.push(pos);
+        counts[ci] += 1;
     }
+    let tokens: Vec<u32> = rows.iter().map(|&(_, t)| t).collect();
 
     let n_heads = cfg.n_heads;
-    let logits = decode_step_body(b, tokens, &positions, rates, |layer, r, q, k, v| {
+    let logits = decode_step_body(b, &tokens, &positions, rates, |layer, r, q, k, v| {
         let pos = positions[r];
-        let cache = &mut *caches[r];
+        let cache = &mut *caches[rows[r].0];
         cache.k[layer].row_mut(pos).copy_from_slice(k);
         cache.v[layer].row_mut(pos).copy_from_slice(v);
         attention_over_cache(q, &cache.k[layer], &cache.v[layer], pos + 1, n_heads)
     });
-    for (r, cache) in caches.iter_mut().enumerate() {
-        cache.len = positions[r] + 1;
+    for (ci, cache) in caches.iter_mut().enumerate() {
+        cache.len += counts[ci];
     }
     Ok(logits)
 }
@@ -543,15 +579,39 @@ pub struct SeqSpec {
     /// Per-sequence compression-rate override; `None` = the model's
     /// ambient budget.
     pub budget: Option<f64>,
+    /// Per-sequence speculative draft length: `None` = the batch default
+    /// ([`crate::spec::SpecConfig::default_k`]), `Some(0)` = explicitly
+    /// off, `Some(k)` = draft up to `k` tokens per round.
+    pub spec_k: Option<usize>,
 }
 
 impl SeqSpec {
     pub fn greedy(prompt: Vec<u32>, max_new: usize) -> Self {
-        Self { prompt, max_new, sampling: ops::Sampling::default(), budget: None }
+        Self {
+            prompt,
+            max_new,
+            sampling: ops::Sampling::default(),
+            budget: None,
+            spec_k: None,
+        }
     }
+}
 
-    pub(crate) fn rate(&self) -> f64 {
-        self.budget.unwrap_or(AMBIENT_BUDGET)
+/// Per-sequence speculative-decoding state: the adaptive draft-length
+/// controller plus a corrected token from a rejected round that has been
+/// sampled and emitted but still needs its full-budget engine pass.
+pub(super) struct SpecSeq {
+    pub(super) ctrl: crate::spec::DraftController,
+    pub(super) pending: Option<u32>,
+}
+
+impl SpecSeq {
+    pub(super) fn for_join(cfg: &crate::spec::SpecConfig, spec_k: Option<usize>) -> Option<Self> {
+        let k = cfg.resolve_k(spec_k);
+        (k > 0).then(|| SpecSeq {
+            ctrl: crate::spec::DraftController::new(k),
+            pending: None,
+        })
     }
 }
 
@@ -565,6 +625,8 @@ struct SeqState {
     sampling: ops::Sampling,
     rng: crate::util::rng::Xoshiro256,
     budget: Option<f64>,
+    /// Speculative decoding state (`None` = plain decoding).
+    spec: Option<SpecSeq>,
     generated: Vec<u32>,
     last_logits: Vec<f32>,
     cache: KvCache,
@@ -597,10 +659,19 @@ pub struct DecodeBatch {
     /// Tokens generated since the last [`DecodeBatch::drain_emitted`]
     /// (streaming surface: the serving layer turns these into frames).
     emitted: Vec<(u64, u32)>,
-    /// Tokens fed across all steps (batch-occupancy accounting).
+    /// Speculation defaults (draft length, draft budget) for joins.
+    spec: crate::spec::SpecConfig,
+    /// Tokens fed across all steps (batch-occupancy accounting; committed
+    /// tokens only — rolled-back draft/verify rows are not counted here).
     pub tokens_processed: u64,
     /// Engine passes executed (steps where at least one sequence advanced).
     pub steps: u64,
+    /// Draft tokens proposed by speculation rounds.
+    pub draft_tokens: u64,
+    /// Draft tokens that survived full-budget verification.
+    pub accepted_tokens: u64,
+    /// Speculation rounds that rolled the cache back (some draft rejected).
+    pub spec_rollbacks: u64,
 }
 
 impl DecodeBatch {
@@ -610,9 +681,23 @@ impl DecodeBatch {
             slots: (0..capacity.max(1)).map(|_| None).collect(),
             next_id: 0,
             emitted: Vec::new(),
+            spec: crate::spec::SpecConfig::default(),
             tokens_processed: 0,
             steps: 0,
+            draft_tokens: 0,
+            accepted_tokens: 0,
+            spec_rollbacks: 0,
         }
+    }
+
+    /// Configure speculation defaults for sequences joined from now on.
+    pub fn set_spec(&mut self, spec: crate::spec::SpecConfig) {
+        self.spec = spec;
+    }
+
+    /// `(draft_tokens, accepted_tokens, spec_rollbacks)` running totals.
+    pub fn spec_stats(&self) -> (u64, u64, u64) {
+        (self.draft_tokens, self.accepted_tokens, self.spec_rollbacks)
     }
 
     pub fn capacity(&self) -> usize {
@@ -640,6 +725,7 @@ impl DecodeBatch {
 
     /// Admit a sequence with explicit sampling params and budget override.
     pub fn try_join_spec(&mut self, spec: SeqSpec) -> Option<u64> {
+        let speculation = SpecSeq::for_join(&self.spec, spec.spec_k);
         let slot = self.slots.iter_mut().find(|s| s.is_none())?;
         let id = self.next_id;
         self.next_id += 1;
@@ -653,6 +739,7 @@ impl DecodeBatch {
             rng: crate::util::rng::Xoshiro256::new(spec.sampling.seed),
             sampling: spec.sampling,
             budget: spec.budget,
+            spec: speculation,
             generated: Vec::new(),
             last_logits: Vec::new(),
             cache: KvCache::new(&self.cfg),
@@ -687,25 +774,54 @@ impl DecodeBatch {
         self.emitted = items;
     }
 
-    /// One engine pass: every live sequence contributes its next token.
+    /// One engine pass: every live sequence contributes its next token —
+    /// and, when speculation is on for a generation-phase sequence, a
+    /// whole draft/verify round (DESIGN.md §2d):
+    ///
+    /// 1. draft `k` tokens at the low draft budget (batched across spec
+    ///    sequences),
+    /// 2. roll the draft KV back ([`KvCache::truncate`]),
+    /// 3. verify `x0, d_1..d_k` in ONE full-budget pass shared with every
+    ///    plain/prefill row ([`decode_step_batch_multi`]),
+    /// 4. commit the accepted prefix and roll back the rest.
+    ///
+    /// Greedy speculative text is bit-identical to non-speculative decode;
+    /// sampled text is distribution-identical (see `crate::spec`).
+    ///
     /// Returns how many sequences advanced (0 = nothing left to do; call
     /// [`DecodeBatch::retire_finished`] to free the slots).
     pub fn step<B: BlockOps>(&mut self, b: &B) -> usize {
         let max_seq = self.cfg.max_seq;
-        let mut emitted: Vec<(u64, u32)> = Vec::new();
-        let live: Vec<&mut SeqState> =
-            self.slots.iter_mut().flatten().filter(|s| !s.done).collect();
-        let mut stepping: Vec<(&mut SeqState, u32)> = Vec::with_capacity(live.len());
-        for s in live {
+
+        // --- 1. Token selection (the schedule is unchanged: speculation
+        // only changes HOW a generation-phase token is fed, never which
+        // token is selected). `k > 0` marks a speculation round; `base` is
+        // the rollback target.
+        struct Plan {
+            idx: usize,
+            tok: u32,
+            k: usize,
+            base: usize,
+        }
+        let mut plan: Vec<Plan> = Vec::new();
+        for idx in 0..self.slots.len() {
+            let Some(s) = self.slots[idx].as_mut() else { continue };
+            if s.done {
+                continue;
+            }
             if s.cache.len() >= max_seq {
                 // Over-long prompt: truncate prefill rather than overflow.
                 s.done = true;
                 continue;
             }
-            let tok = if s.fed < s.prompt.len() {
+            let (tok, gen_phase) = if s.fed < s.prompt.len() {
                 let t = s.prompt[s.fed];
                 s.fed += 1;
-                t
+                (t, false)
+            } else if let Some(c) = s.spec.as_mut().and_then(|sp| sp.pending.take()) {
+                // Corrected token from a rejected round: sampled and
+                // emitted last pass, still owed its full-budget KV.
+                (c, true)
             } else if s.generated.len() >= s.n_gen {
                 s.done = true; // n_gen == 0, or finished last step
                 continue;
@@ -715,47 +831,221 @@ impl DecodeBatch {
             } else {
                 let next = ops::sample_token(&s.last_logits, &s.sampling, &mut s.rng);
                 s.generated.push(next);
-                emitted.push((s.id, next));
+                self.emitted.push((s.id, next));
                 if s.generated.len() >= s.n_gen {
                     // Final token: recorded, but needs no engine pass.
                     s.done = true;
                     continue;
                 }
-                next
+                (next, true)
             };
-            stepping.push((s, tok));
+            // Draft length: the controller's pick, clamped so accepted
+            // drafts can neither exceed the request nor the positional
+            // capacity. Plain decode refuses to sample once
+            // `len + 1 >= max_seq`, so draft d_i (sampled at len base + i)
+            // is only emittable while `base + i + 1 < max_seq`: k caps at
+            // `max_seq - base - 2` — one tighter than the feed capacity —
+            // or the speculative stream would outrun the plain one at the
+            // cache boundary.
+            let k = if gen_phase {
+                s.spec
+                    .as_ref()
+                    .map(|sp| {
+                        sp.ctrl
+                            .k()
+                            .min(s.n_gen.saturating_sub(s.generated.len()))
+                            .min(max_seq.saturating_sub(s.cache.len() + 2))
+                    })
+                    .unwrap_or(0)
+            } else {
+                0
+            };
+            plan.push(Plan { idx, tok, k, base: s.cache.len() });
         }
-        self.emitted.extend(emitted);
+
+        // --- 2. Draft phase: k low-budget passes batched across the
+        // speculating sequences; pass j feeds x0 (j = 0) or d_j and its
+        // logits propose d_{j+1}.
+        let mut drafts: Vec<Vec<u32>> = (0..plan.len()).map(|_| Vec::new()).collect();
+        let mut dists: Vec<crate::spec::DraftDists> =
+            (0..plan.len()).map(|_| Vec::new()).collect();
+        if plan.iter().any(|p| p.k > 0) {
+            let draft_rate = self.spec.draft_rate;
+            let mut j = 0;
+            loop {
+                let active: Vec<usize> = (0..plan.len()).filter(|&p| plan[p].k > j).collect();
+                if active.is_empty() {
+                    break;
+                }
+                let tokens: Vec<u32> = active
+                    .iter()
+                    .map(|&p| if j == 0 { plan[p].tok } else { drafts[p][j - 1] })
+                    .collect();
+                let rates: Vec<f64> = vec![draft_rate; active.len()];
+                let res = {
+                    let mut caches: Vec<&mut KvCache> = Vec::with_capacity(active.len());
+                    let mut want = active.iter().map(|&p| plan[p].idx).peekable();
+                    for (idx, slot) in self.slots.iter_mut().enumerate() {
+                        if want.peek() == Some(&idx) {
+                            want.next();
+                            caches
+                                .push(&mut slot.as_mut().expect("planned slot occupied").cache);
+                        }
+                    }
+                    decode_step_batch_inner(b, &tokens, &mut caches, Some(&rates))
+                };
+                let logits = match res {
+                    Ok(l) => l,
+                    Err(e) => {
+                        // Unreachable given the clamps above; degrade the
+                        // offending sequence to the drafts it already has.
+                        let p = active[e.seq().min(active.len() - 1)];
+                        plan[p].k = drafts[p].len();
+                        continue;
+                    }
+                };
+                for (r, &p) in active.iter().enumerate() {
+                    let s = self.slots[plan[p].idx].as_mut().expect("planned slot occupied");
+                    let row = logits.row(r);
+                    let d = ops::sample_token(row, &s.sampling, &mut s.rng);
+                    if !s.sampling.is_greedy() {
+                        dists[p].push(ops::sampling_dist(row, &s.sampling));
+                    }
+                    drafts[p].push(d);
+                }
+                j += 1;
+            }
+            // Roll every draft append back: draft KV is low-budget KV and
+            // must never seed a full-budget context.
+            for p in &plan {
+                if p.k > 0 {
+                    let s = self.slots[p.idx].as_mut().expect("planned slot occupied");
+                    s.cache.truncate(p.base);
+                }
+            }
+        }
+
+        // --- 3. One full-budget pass over all rows: plain/prefill rows
+        // feed one token, speculating rows feed x0 + their drafts.
         let logits = loop {
-            if stepping.is_empty() {
+            if plan.is_empty() {
                 return 0;
             }
-            let tokens: Vec<u32> = stepping.iter().map(|(_, t)| *t).collect();
+            let mut rows: Vec<(usize, u32)> = Vec::new();
+            for (ci, p) in plan.iter().enumerate() {
+                rows.push((ci, p.tok));
+                for &d in &drafts[ci][..p.k] {
+                    rows.push((ci, d));
+                }
+            }
             // Per-row budgets only when some sequence carries an override;
             // the all-ambient batch keeps the legacy unbudgeted call.
-            let rates: Option<Vec<f64>> = stepping
+            let rates: Option<Vec<f64>> = plan
                 .iter()
-                .any(|(s, _)| s.budget.is_some())
-                .then(|| stepping.iter().map(|(s, _)| s.budget.unwrap_or(AMBIENT_BUDGET)).collect());
-            let mut caches: Vec<&mut KvCache> =
-                stepping.iter_mut().map(|(s, _)| &mut s.cache).collect();
-            match decode_step_batch_inner(b, &tokens, &mut caches, rates.as_deref()) {
+                .any(|p| {
+                    self.slots[p.idx].as_ref().is_some_and(|s| s.budget.is_some())
+                })
+                .then(|| {
+                    rows.iter()
+                        .map(|&(ci, _)| {
+                            self.slots[plan[ci].idx]
+                                .as_ref()
+                                .and_then(|s| s.budget)
+                                .unwrap_or(AMBIENT_BUDGET)
+                        })
+                        .collect()
+                });
+            let res = {
+                let mut caches: Vec<&mut KvCache> = Vec::with_capacity(plan.len());
+                let mut want = plan.iter().map(|p| p.idx).peekable();
+                for (idx, slot) in self.slots.iter_mut().enumerate() {
+                    if want.peek() == Some(&idx) {
+                        want.next();
+                        caches.push(&mut slot.as_mut().expect("planned slot occupied").cache);
+                    }
+                }
+                decode_step_batch_multi(b, &rows, &mut caches, rates.as_deref())
+            };
+            match res {
                 Ok(l) => break l,
                 Err(e) => {
                     // Unreachable given the pre-guards above, but the
                     // contract stands: a full sequence retires; the rest of
                     // the pass proceeds.
-                    let r = e.seq().min(stepping.len() - 1);
-                    stepping.remove(r).0.done = true;
+                    let row = e.seq().min(rows.len() - 1);
+                    let ci = rows[row].0;
+                    self.slots[plan[ci].idx].as_mut().expect("planned slot occupied").done =
+                        true;
+                    plan.remove(ci);
+                    drafts.remove(ci);
+                    dists.remove(ci);
                 }
             }
         };
-        for (r, (s, _)) in stepping.iter_mut().enumerate() {
-            s.last_logits = logits.row(r).to_vec();
+
+        // --- 4. Record logits; accept/roll back speculation rounds.
+        let mut committed = 0u64;
+        let mut cursor = 0usize;
+        for (ci, p) in plan.iter().enumerate() {
+            let s = self.slots[p.idx].as_mut().expect("planned slot occupied");
+            if p.k == 0 {
+                s.last_logits = logits.row(cursor).to_vec();
+                committed += 1;
+                cursor += 1;
+                continue;
+            }
+            let verify: Vec<&[f32]> = (0..=p.k).map(|i| logits.row(cursor + i)).collect();
+            let out = crate::spec::accept_drafts(
+                &drafts[ci][..p.k],
+                &dists[ci],
+                &verify,
+                &s.sampling,
+                &mut s.rng,
+            );
+            let a = out.accepted;
+            self.draft_tokens += p.k as u64;
+            self.accepted_tokens += a as u64;
+            committed += 1 + a as u64;
+            for &d in &drafts[ci][..a] {
+                s.generated.push(d);
+                self.emitted.push((s.id, d));
+            }
+            if a < p.k {
+                // Rejected tail: roll the cache back to the accepted
+                // prefix; the target logits at the first rejected position
+                // become the held logits, exactly as plain decoding would
+                // hold them.
+                self.spec_rollbacks += 1;
+                s.cache.truncate(p.base + 1 + a);
+                s.last_logits = logits.row(cursor + a).to_vec();
+                if s.generated.len() >= s.n_gen || s.cache.len() + 1 >= max_seq {
+                    s.done = true;
+                } else {
+                    let c = out.corrected.expect("rejection carries a corrected token");
+                    s.generated.push(c);
+                    self.emitted.push((s.id, c));
+                    if s.generated.len() >= s.n_gen {
+                        s.done = true;
+                    } else {
+                        s.spec.as_mut().expect("speculating sequence").pending = Some(c);
+                    }
+                }
+            } else {
+                // Full acceptance: the bonus row V_k is the next held
+                // logits (the standard free token).
+                s.last_logits = logits.row(cursor + p.k).to_vec();
+                if s.generated.len() >= s.n_gen {
+                    s.done = true;
+                }
+            }
+            if let Some(sp) = s.spec.as_mut() {
+                sp.ctrl.observe(p.k, a);
+            }
+            cursor += 1 + p.k;
         }
-        let n = stepping.len();
+        let n = plan.len();
         self.steps += 1;
-        self.tokens_processed += n as u64;
+        self.tokens_processed += committed;
         n
     }
 

@@ -10,12 +10,14 @@ pub mod weights;
 
 pub use config::{Arch, ModelConfig, PythiaSize};
 pub use forward::{
-    decode_step, decode_step_batch, decode_step_batch_budgeted, forward_seq, BlockOps, Capture,
-    DecodeBatch, FinishedSeq, KvCache, Model, SeqSpec, AMBIENT_BUDGET,
+    decode_step, decode_step_batch, decode_step_batch_budgeted, decode_step_batch_multi,
+    forward_seq, BlockOps, Capture, DecodeBatch, FinishedSeq, KvCache, Model, SeqSpec,
+    AMBIENT_BUDGET,
 };
 pub use ops::Sampling;
 pub use paged::{
-    decode_step_paged, decode_step_paged_budgeted, PagedBatchConfig, PagedDecodeBatch,
+    decode_step_paged, decode_step_paged_budgeted, decode_step_paged_multi, PagedBatchConfig,
+    PagedDecodeBatch,
 };
 pub use weights::{LayerWeights, Linear, ModelWeights, Norm};
 

@@ -83,8 +83,14 @@ pub struct Sampling {
     /// Nucleus mass: keep the smallest set of tokens whose probability
     /// exceeds `top_p` (1.0 = all).
     pub top_p: f64,
-    /// Per-sequence RNG seed — decoding is a pure function of
+    /// Per-sequence RNG seed — plain decoding is a pure function of
     /// `(prompt, params, seed)`, independent of batch composition.
+    /// Speculative decoding (`spec_k > 0`) keeps this bitwise guarantee at
+    /// temperature 0 (greedy consumes no randomness); at a positive
+    /// temperature its draft/accept schedule may consume the RNG
+    /// differently under memory pressure, so sampled speculative output is
+    /// **distribution**-identical rather than bitwise reproducible across
+    /// batch compositions (DESIGN.md §2d).
     pub seed: u64,
 }
 
@@ -103,6 +109,12 @@ impl Sampling {
 /// Sample the next token. Greedy when `s.temperature <= 0` (bit-identical
 /// to `eval::argmax`); otherwise temperature-scaled softmax restricted by
 /// top-k then top-p, drawn with the caller's per-sequence RNG.
+///
+/// NOTE: the non-greedy candidate pipeline here is intentionally mirrored
+/// by [`sampling_dist`] (kept separate so this function's seeded draw
+/// stream stays bitwise-pinned); any change to the filtering below must be
+/// applied there too, or speculative rejection sampling stops drawing its
+/// `q` from the distribution this sampler actually uses.
 pub fn sample_token(logits: &[f32], s: &Sampling, rng: &mut crate::util::rng::Xoshiro256) -> u32 {
     debug_assert!(!logits.is_empty());
     if s.is_greedy() {
@@ -149,6 +161,63 @@ pub fn sample_token(logits: &[f32], s: &Sampling, rng: &mut crate::util::rng::Xo
         }
     }
     cand[n_keep - 1].0 as u32
+}
+
+/// The filtered next-token distribution `sample_token` draws from at
+/// `s` (temperature scaling, then top-k, then top-p), as `(token, prob)`
+/// pairs sorted by logit descending (ties by index), probabilities
+/// normalized over the kept candidates. Used by speculative decoding's
+/// rejection sampler, which needs explicit draft (`q`) and target (`p`)
+/// probabilities rather than a single draw. Requires `temperature > 0`
+/// (greedy has no distribution to reject against).
+pub fn sampling_dist(logits: &[f32], s: &Sampling) -> Vec<(u32, f64)> {
+    debug_assert!(!s.is_greedy(), "sampling_dist needs a positive temperature");
+    let mut cand: Vec<(usize, f32)> = logits.iter().copied().enumerate().collect();
+    cand.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    if s.top_k > 0 {
+        cand.truncate(s.top_k.max(1));
+    }
+    let inv_t = 1.0 / s.temperature;
+    let max = cand[0].1 as f64;
+    let mut probs: Vec<f64> =
+        cand.iter().map(|&(_, l)| ((l as f64 - max) * inv_t).exp()).collect();
+    let z: f64 = probs.iter().sum();
+    for p in probs.iter_mut() {
+        *p /= z;
+    }
+    let mut n_keep = probs.len();
+    if s.top_p < 1.0 {
+        let mut acc = 0.0;
+        for (i, &p) in probs.iter().enumerate() {
+            acc += p;
+            if acc > s.top_p {
+                n_keep = i + 1;
+                break;
+            }
+        }
+    }
+    let mass: f64 = probs[..n_keep].iter().sum();
+    cand[..n_keep]
+        .iter()
+        .zip(&probs)
+        .map(|(&(tok, _), &p)| (tok as u32, p / mass))
+        .collect()
+}
+
+/// Draw from an explicit `(token, prob)` distribution (probabilities need
+/// not be normalized; the draw scales by their sum). Deterministic given
+/// the RNG state and the pair order.
+pub fn sample_from_dist(dist: &[(u32, f64)], rng: &mut crate::util::rng::Xoshiro256) -> u32 {
+    debug_assert!(!dist.is_empty());
+    let mass: f64 = dist.iter().map(|&(_, p)| p).sum();
+    let mut u = rng.f64() * mass;
+    for &(tok, p) in dist {
+        u -= p;
+        if u <= 0.0 {
+            return tok;
+        }
+    }
+    dist[dist.len() - 1].0
 }
 
 /// Log-softmax value at one index (used for LM scoring without
@@ -367,6 +436,49 @@ mod tests {
         assert_eq!(draws1, draws2, "same seed must reproduce the stream");
         assert!(draws1.iter().all(|&t| t >= 13), "top-3 of ascending logits is {{13,14,15}}");
         assert!(draws1.iter().any(|&t| t != draws1[0]), "temperature must actually mix");
+    }
+
+    #[test]
+    fn sampling_dist_matches_sampler_support_and_normalizes() {
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32) * 0.3).collect();
+        let s = Sampling { temperature: 0.8, top_k: 3, top_p: 1.0, seed: 7 };
+        let dist = sampling_dist(&logits, &s);
+        assert_eq!(dist.len(), 3);
+        assert!(dist.iter().all(|&(t, _)| t >= 13), "top-3 of ascending logits is {{13,14,15}}");
+        let mass: f64 = dist.iter().map(|&(_, p)| p).sum();
+        assert!((mass - 1.0).abs() < 1e-12);
+        // Probabilities are logit-ordered descending.
+        assert!(dist.windows(2).all(|w| w[0].1 >= w[1].1));
+        // Every token the sampler can draw lies in the dist's support.
+        let mut rng = Xoshiro256::new(s.seed);
+        for _ in 0..64 {
+            let tok = sample_token(&logits, &s, &mut rng);
+            assert!(dist.iter().any(|&(t, _)| t == tok));
+        }
+        // A tight nucleus collapses the support like the sampler does.
+        let mut peaked = vec![0.0f32; 8];
+        peaked[5] = 10.0;
+        let s = Sampling { temperature: 1.0, top_k: 0, top_p: 0.5, seed: 3 };
+        let dist = sampling_dist(&peaked, &s);
+        assert_eq!(dist.len(), 1);
+        assert_eq!(dist[0].0, 5);
+    }
+
+    #[test]
+    fn sample_from_dist_is_deterministic_and_weighted() {
+        let dist = vec![(4u32, 0.7), (9u32, 0.3)];
+        let mut r1 = Xoshiro256::new(11);
+        let mut r2 = Xoshiro256::new(11);
+        let a: Vec<u32> = (0..64).map(|_| sample_from_dist(&dist, &mut r1)).collect();
+        let b: Vec<u32> = (0..64).map(|_| sample_from_dist(&dist, &mut r2)).collect();
+        assert_eq!(a, b);
+        let n4 = a.iter().filter(|&&t| t == 4).count();
+        assert!(n4 > 32, "0.7-mass token drawn only {n4}/64 times");
+        // Unnormalized weights scale the draw, not the outcome set.
+        let scaled: Vec<(u32, f64)> = dist.iter().map(|&(t, p)| (t, p * 8.0)).collect();
+        let mut r3 = Xoshiro256::new(11);
+        let c: Vec<u32> = (0..64).map(|_| sample_from_dist(&scaled, &mut r3)).collect();
+        assert_eq!(a, c);
     }
 
     #[test]

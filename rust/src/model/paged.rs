@@ -67,39 +67,71 @@ fn decode_step_paged_inner<B: BlockOps>(
     rates: Option<&[f64]>,
 ) -> Result<Mat, CacheError> {
     assert_eq!(tokens.len(), seqs.len(), "decode_step_paged arity");
+    let rows: Vec<(usize, u32)> = tokens.iter().copied().enumerate().collect();
+    decode_step_paged_multi(b, &rows, pool, seqs, rates)
+}
+
+/// The paged sibling of `decode_step_batch_multi`: one batched pass where
+/// a sequence may receive several successive tokens (the speculative
+/// verify window). `rows[r] = (si, token)` feeds `token` to `seqs[si]` at
+/// position `seqs[si].len() + (rows of si before r)`; a sequence's rows
+/// must appear in stream order. Block allocation/COW for every target
+/// position happens up front ([`PagedKvCache::prepare_append_n`]), so a
+/// pool failure surfaces as a typed error *before* any KV row is written
+/// (the error's `seq` names the offending row). Bit-for-bit identical to
+/// the dense multi pass by the §2a/§2b construction — same per-layer body,
+/// only KV addressing differs.
+pub fn decode_step_paged_multi<B: BlockOps>(
+    b: &B,
+    rows: &[(usize, u32)],
+    pool: &mut BlockPool,
+    seqs: &mut [&mut PagedKvCache],
+    rates: Option<&[f64]>,
+) -> Result<Mat, CacheError> {
     let cfg = b.config().clone();
-    let positions: Vec<usize> = seqs.iter().map(|s| s.len()).collect();
-    for (r, &pos) in positions.iter().enumerate() {
+    let mut counts = vec![0usize; seqs.len()];
+    let mut positions = Vec::with_capacity(rows.len());
+    for &(si, _) in rows {
+        let pos = seqs[si].len() + counts[si];
         if pos >= cfg.max_seq {
-            return Err(CacheError::CacheFull { seq: r, pos, capacity: cfg.max_seq });
+            return Err(CacheError::CacheFull { seq: positions.len(), pos, capacity: cfg.max_seq });
         }
+        positions.push(pos);
+        counts[si] += 1;
     }
     // Make every append target writable up front (block alloc + COW), so a
     // pool failure surfaces before any state is mutated. Idempotent for
     // callers (the batcher) that already prepared.
-    for (r, s) in seqs.iter_mut().enumerate() {
-        s.prepare_append(pool).map_err(|e| e.with_seq(r))?;
+    for (si, s) in seqs.iter_mut().enumerate() {
+        if counts[si] > 0 {
+            s.prepare_append_n(pool, counts[si]).map_err(|e| {
+                let first_row = rows.iter().position(|&(x, _)| x == si).expect("counted row");
+                e.with_seq(first_row)
+            })?;
+        }
     }
+    let tokens: Vec<u32> = rows.iter().map(|&(_, t)| t).collect();
 
     let bs = pool.block_size();
     let n_heads = cfg.n_heads;
     // Same per-layer body as the dense path — only the KV addressing in
     // this closure differs, which is what makes the paged logits
     // bit-for-bit identical to the contiguous oracle by construction.
-    let logits = decode_step_body(b, tokens, &positions, rates, |layer, r, q, k, v| {
-        seqs[r].write_kv(pool, layer, k, v);
+    let logits = decode_step_body(b, &tokens, &positions, rates, |layer, r, q, k, v| {
+        let si = rows[r].0;
+        seqs[si].write_kv_at(pool, layer, positions[r], k, v);
         attention_over_paged(
             q,
             pool.layer_k(layer),
             pool.layer_v(layer),
-            seqs[r].chain(),
+            seqs[si].chain(),
             bs,
             positions[r] + 1,
             n_heads,
         )
     });
-    for s in seqs.iter_mut() {
-        s.advance();
+    for (si, s) in seqs.iter_mut().enumerate() {
+        s.advance_n(counts[si]);
     }
     Ok(logits)
 }
@@ -133,6 +165,11 @@ struct PagedSeqState {
     sampling: ops::Sampling,
     rng: crate::util::rng::Xoshiro256,
     budget: Option<f64>,
+    /// Speculative decoding state (`None` = plain decoding). The paged
+    /// path needs no pending-token slot: a corrected token lands in
+    /// `generated` without advancing `fed`, so the virtual stream feeds it
+    /// on the next pass (and preemption refeeds replay it for free).
+    spec: Option<super::forward::SpecSeq>,
     generated: Vec<u32>,
     last_logits: Vec<f32>,
     cache: PagedKvCache,
@@ -169,7 +206,10 @@ pub struct PagedDecodeBatch {
     /// Sequences cancelled while preempted (no slot to retire from).
     finished_aside: Vec<FinishedSeq>,
     next_id: u64,
-    /// Tokens fed across all steps (batch-occupancy accounting).
+    /// Speculation defaults (draft length, draft budget) for joins.
+    spec: crate::spec::SpecConfig,
+    /// Tokens fed across all steps (batch-occupancy accounting; committed
+    /// tokens only — rolled-back draft/verify rows are not counted here).
     pub tokens_processed: u64,
     /// Engine passes executed.
     pub steps: u64,
@@ -177,6 +217,12 @@ pub struct PagedDecodeBatch {
     pub prefix_hit_tokens: u64,
     /// Sequences preempted (blocks released, requeued) under pool pressure.
     pub preemptions: u64,
+    /// Draft tokens proposed by speculation rounds.
+    pub draft_tokens: u64,
+    /// Draft tokens that survived full-budget verification.
+    pub accepted_tokens: u64,
+    /// Speculation rounds that rolled the cache back (some draft rejected).
+    pub spec_rollbacks: u64,
 }
 
 impl PagedDecodeBatch {
@@ -194,11 +240,25 @@ impl PagedDecodeBatch {
             emitted: Vec::new(),
             finished_aside: Vec::new(),
             next_id: 0,
+            spec: crate::spec::SpecConfig::default(),
             tokens_processed: 0,
             steps: 0,
             prefix_hit_tokens: 0,
             preemptions: 0,
+            draft_tokens: 0,
+            accepted_tokens: 0,
+            spec_rollbacks: 0,
         }
+    }
+
+    /// Configure speculation defaults for sequences joined from now on.
+    pub fn set_spec(&mut self, spec: crate::spec::SpecConfig) {
+        self.spec = spec;
+    }
+
+    /// `(draft_tokens, accepted_tokens, spec_rollbacks)` running totals.
+    pub fn spec_stats(&self) -> (u64, u64, u64) {
+        (self.draft_tokens, self.accepted_tokens, self.spec_rollbacks)
     }
 
     pub fn capacity(&self) -> usize {
@@ -283,6 +343,7 @@ impl PagedDecodeBatch {
 
     /// Admit a sequence with explicit sampling params and budget override.
     pub fn try_join_spec(&mut self, spec: SeqSpec) -> Option<u64> {
+        let speculation = super::forward::SpecSeq::for_join(&self.spec, spec.spec_k);
         let slot_idx = self.slots.iter().position(|s| s.is_none())?;
         let done = spec.prompt.is_empty();
         let mut st = PagedSeqState {
@@ -293,6 +354,7 @@ impl PagedDecodeBatch {
             rng: crate::util::rng::Xoshiro256::new(spec.sampling.seed),
             sampling: spec.sampling,
             budget: spec.budget,
+            spec: speculation,
             generated: Vec::new(),
             last_logits: Vec::new(),
             cache: PagedKvCache::new(),
@@ -380,7 +442,8 @@ impl PagedDecodeBatch {
     /// One engine pass; returns how many sequences advanced. Handles
     /// re-admission of preempted sequences, per-sequence block preparation
     /// with eviction/preemption under pool pressure, the batched paged
-    /// forward, and trie publication of completed prefills.
+    /// forward (including speculative draft/verify rounds, DESIGN.md §2d),
+    /// and trie publication of completed prefills.
     pub fn step<B: BlockOps>(&mut self, b: &B) -> usize {
         let max_seq = self.cfg.max_seq;
         let bs = self.pool.block_size();
@@ -398,23 +461,38 @@ impl PagedDecodeBatch {
         }
 
         // 2. Token selection over the virtual stream (same schedule as the
-        // dense DecodeBatch; `fed` resets on preemption).
-        let mut stepping: Vec<usize> = Vec::new();
-        let mut tokens: Vec<u32> = Vec::new();
+        // dense DecodeBatch; `fed` resets on preemption). A generation-
+        // phase selection may open a speculation round (`k > 0`); `base`
+        // is the rollback target.
+        struct Plan {
+            idx: usize,
+            tok: u32,
+            k: usize,
+            base: usize,
+        }
+        let mut plan: Vec<Plan> = Vec::new();
         for idx in 0..self.slots.len() {
             let Some(s) = self.slots[idx].as_mut() else { continue };
             if s.done {
                 continue;
             }
             if s.cache.len() >= max_seq {
-                // Over-long prompt: truncate prefill rather than overflow.
+                // Over-long prompt: truncate prefill rather than overflow
+                // (same truncation point as the dense batch: exactly
+                // max_seq stream tokens enter the cache, zero generated).
                 Self::finish(&mut self.pool, s);
                 continue;
             }
-            let tok = if s.fed < s.stream_len() {
+            let (tok, gen_phase) = if s.fed < s.stream_len() {
                 let t = s.stream_tok(s.fed);
                 s.fed += 1;
-                t
+                // A backlog of exactly one generated token — the corrected
+                // token of a rejected round — may speculate onward; prompt
+                // prefill and deeper refeed backlogs stay plain.
+                let gen = s.fed == s.stream_len()
+                    && s.fed > s.prompt.len()
+                    && !s.last_logits.is_empty();
+                (t, gen)
             } else if s.generated.len() >= s.n_gen {
                 Self::finish(&mut self.pool, s);
                 continue;
@@ -431,26 +509,121 @@ impl PagedDecodeBatch {
                     continue;
                 }
                 s.fed += 1;
-                next
+                (next, true)
             };
-            stepping.push(idx);
-            tokens.push(tok);
+            // Draft length: the controller's pick, clamped so accepted
+            // drafts can neither exceed the request nor the positional
+            // capacity. Plain decode refuses to sample once
+            // `len + 1 >= max_seq`, so draft d_i (sampled at len base + i)
+            // is only emittable while `base + i + 1 < max_seq`: k caps at
+            // `max_seq - base - 2` — one tighter than the feed capacity —
+            // or the speculative stream would outrun the plain one at the
+            // cache boundary.
+            let k = if gen_phase {
+                s.spec
+                    .as_ref()
+                    .map(|sp| {
+                        sp.ctrl
+                            .k()
+                            .min(s.n_gen.saturating_sub(s.generated.len()))
+                            .min(max_seq.saturating_sub(s.cache.len() + 2))
+                    })
+                    .unwrap_or(0)
+            } else {
+                0
+            };
+            plan.push(Plan { idx, tok, k, base: s.cache.len() });
         }
 
-        // 3. Prepare every append (alloc/COW). On exhaustion: evict
-        // trie-only blocks, else preempt the youngest other live sequence;
-        // a sequence the pool cannot hold even alone is truncated.
+        // 2b. Draft phase: low-budget passes batched across speculating
+        // sequences; pass j feeds x0 (j = 0) or d_j, its logits propose
+        // d_{j+1}. Pool pressure degrades a sequence's round gracefully.
+        let mut drafts: Vec<Vec<u32>> = (0..plan.len()).map(|_| Vec::new()).collect();
+        let mut dists: Vec<crate::spec::DraftDists> =
+            (0..plan.len()).map(|_| Vec::new()).collect();
+        if plan.iter().any(|p| p.k > 0) {
+            let draft_rate = self.spec.draft_rate;
+            let mut j = 0;
+            loop {
+                let active: Vec<usize> = (0..plan.len()).filter(|&p| plan[p].k > j).collect();
+                if active.is_empty() {
+                    break;
+                }
+                let tokens: Vec<u32> = active
+                    .iter()
+                    .map(|&p| if j == 0 { plan[p].tok } else { drafts[p][j - 1] })
+                    .collect();
+                let rates: Vec<f64> = vec![draft_rate; active.len()];
+                let res = {
+                    let mut seq_refs: Vec<&mut PagedKvCache> = Vec::with_capacity(active.len());
+                    let mut want = active.iter().map(|&p| plan[p].idx).peekable();
+                    for (idx, slot) in self.slots.iter_mut().enumerate() {
+                        if want.peek() == Some(&idx) {
+                            want.next();
+                            seq_refs
+                                .push(&mut slot.as_mut().expect("planned slot occupied").cache);
+                        }
+                    }
+                    decode_step_paged_inner(b, &tokens, &mut self.pool, &mut seq_refs, Some(&rates))
+                };
+                let logits = match res {
+                    Ok(l) => l,
+                    Err(e) => {
+                        // Pool pressure mid-draft: keep the drafts already
+                        // proposed for the offending sequence and move on —
+                        // speculation degrades, correctness is unaffected.
+                        let p = active[e.seq().min(active.len() - 1)];
+                        plan[p].k = drafts[p].len();
+                        continue;
+                    }
+                };
+                for (r, &p) in active.iter().enumerate() {
+                    let s = self.slots[plan[p].idx].as_mut().expect("planned slot occupied");
+                    let row = logits.row(r);
+                    let d = ops::sample_token(row, &s.sampling, &mut s.rng);
+                    if !s.sampling.is_greedy() {
+                        dists[p].push(ops::sampling_dist(row, &s.sampling));
+                    }
+                    drafts[p].push(d);
+                }
+                j += 1;
+            }
+            // Roll every draft append back: draft KV is low-budget KV and
+            // must never seed a full-budget context (blocks return to the
+            // pool; shared prefix blocks only lose this chain's refs).
+            for p in &plan {
+                if p.k > 0 {
+                    let s = self.slots[p.idx].as_mut().expect("planned slot occupied");
+                    s.cache.truncate(&mut self.pool, p.base);
+                }
+            }
+        }
+
+        // 3. Prepare every append window (alloc/COW): 1 + k positions for
+        // a speculation round, 1 for a plain row. On exhaustion the ladder
+        // is: degrade the round to a plain append, evict trie-only blocks,
+        // preempt the youngest other live sequence; a sequence the pool
+        // cannot hold even alone is truncated.
         let mut i = 0;
-        while i < stepping.len() {
-            let idx = stepping[i];
+        while i < plan.len() {
+            let idx = plan[i].idx;
+            let need = 1 + plan[i].k;
             let res = self.slots[idx]
                 .as_mut()
-                .expect("stepping slot occupied")
+                .expect("planned slot occupied")
                 .cache
-                .prepare_append(&mut self.pool);
+                .prepare_append_n(&mut self.pool, need);
             match res {
                 Ok(()) => i += 1,
                 Err(_) => {
+                    if plan[i].k > 0 {
+                        // Shrink this sequence's own footprint before
+                        // taking blocks from anyone else.
+                        plan[i].k = 0;
+                        drafts[i].clear();
+                        dists[i].clear();
+                        continue;
+                    }
                     if self.trie.evict(&mut self.pool, 1) > 0 {
                         continue; // retry this sequence
                     }
@@ -462,75 +635,89 @@ impl PagedDecodeBatch {
                             st.prompt_in_trie = false;
                             self.preemptions += 1;
                             self.preempted.push_back(st);
-                            if let Some(p) = stepping.iter().position(|&x| x == v) {
-                                if p < i {
+                            if let Some(q) = plan.iter().position(|p| p.idx == v) {
+                                if q < i {
                                     i -= 1;
                                 }
-                                stepping.remove(p);
-                                tokens.remove(p);
+                                plan.remove(q);
+                                drafts.remove(q);
+                                dists.remove(q);
                             }
                         }
                         None => {
-                            let s = self.slots[idx].as_mut().expect("stepping slot occupied");
+                            let s = self.slots[idx].as_mut().expect("planned slot occupied");
                             Self::finish(&mut self.pool, s);
-                            stepping.remove(i);
-                            tokens.remove(i);
+                            plan.remove(i);
+                            drafts.remove(i);
+                            dists.remove(i);
                         }
                     }
                 }
             }
         }
 
-        // 4. Batched paged forward. CacheErrors are unreachable after the
-        // guards above, but the contract stands: the offending sequence
-        // retires; the pass retries with the rest.
+        // 4. One full-budget paged pass over all rows: plain rows feed one
+        // token, speculating rows feed x0 + their drafts. CacheErrors are
+        // unreachable after the guards above, but the contract stands: the
+        // offending sequence retires; the pass retries with the rest.
         let logits = loop {
-            if stepping.is_empty() {
+            if plan.is_empty() {
                 return 0;
             }
+            let mut rows: Vec<(usize, u32)> = Vec::new();
+            for (si, p) in plan.iter().enumerate() {
+                rows.push((si, p.tok));
+                for &d in &drafts[si][..p.k] {
+                    rows.push((si, d));
+                }
+            }
+            // Per-row budgets only when some sequence carries an override
+            // (all-ambient batches keep the legacy call).
+            let rates: Option<Vec<f64>> = plan
+                .iter()
+                .any(|p| self.slots[p.idx].as_ref().is_some_and(|s| s.budget.is_some()))
+                .then(|| {
+                    rows.iter()
+                        .map(|&(si, _)| {
+                            self.slots[plan[si].idx]
+                                .as_ref()
+                                .and_then(|s| s.budget)
+                                .unwrap_or(AMBIENT_BUDGET)
+                        })
+                        .collect()
+                });
             let res = {
-                // Per-row budgets only when some sequence carries an
-                // override (all-ambient batches keep the legacy call).
-                let rates: Option<Vec<f64>> = stepping
-                    .iter()
-                    .any(|&i| self.slots[i].as_ref().is_some_and(|s| s.budget.is_some()))
-                    .then(|| {
-                        stepping
-                            .iter()
-                            .map(|&i| {
-                                self.slots[i]
-                                    .as_ref()
-                                    .and_then(|s| s.budget)
-                                    .unwrap_or(AMBIENT_BUDGET)
-                            })
-                            .collect()
-                    });
-                let mut seq_refs: Vec<&mut PagedKvCache> = Vec::with_capacity(stepping.len());
-                let mut want = stepping.iter().peekable();
+                let mut seq_refs: Vec<&mut PagedKvCache> = Vec::with_capacity(plan.len());
+                let mut want = plan.iter().map(|p| p.idx).peekable();
                 for (idx, slot) in self.slots.iter_mut().enumerate() {
-                    if want.peek() == Some(&&idx) {
+                    if want.peek() == Some(&idx) {
                         want.next();
-                        seq_refs.push(&mut slot.as_mut().expect("stepping slot occupied").cache);
+                        seq_refs.push(&mut slot.as_mut().expect("planned slot occupied").cache);
                     }
                 }
-                decode_step_paged_inner(b, &tokens, &mut self.pool, &mut seq_refs, rates.as_deref())
+                decode_step_paged_multi(b, &rows, &mut self.pool, &mut seq_refs, rates.as_deref())
             };
             match res {
                 Ok(l) => break l,
                 Err(e) => {
-                    let p = e.seq().min(stepping.len() - 1);
-                    let idx = stepping.remove(p);
-                    tokens.remove(p);
-                    let s = self.slots[idx].as_mut().expect("stepping slot occupied");
+                    let row = e.seq().min(rows.len() - 1);
+                    let si = rows[row].0;
+                    let s = self.slots[plan[si].idx].as_mut().expect("planned slot occupied");
                     Self::finish(&mut self.pool, s);
+                    plan.remove(si);
+                    drafts.remove(si);
+                    dists.remove(si);
                 }
             }
         };
 
-        // 5. Record logits; publish completed prefills' full prompt blocks.
-        for (r, &idx) in stepping.iter().enumerate() {
-            let s = self.slots[idx].as_mut().expect("stepping slot occupied");
-            s.last_logits = logits.row(r).to_vec();
+        // 5. Publish completed prefills' full prompt blocks; record logits
+        // and settle speculation rounds (accept prefix, roll back the
+        // rejected tail).
+        let mut committed = 0u64;
+        let mut cursor = 0usize;
+        for (si, p) in plan.iter().enumerate() {
+            let s = self.slots[p.idx].as_mut().expect("planned slot occupied");
             if s.budget.is_some() {
                 // Budget-overridden KV stays private (see `admit`).
                 s.prompt_in_trie = true;
@@ -542,10 +729,64 @@ impl PagedDecodeBatch {
                 }
                 s.prompt_in_trie = true;
             }
+            if p.k == 0 {
+                s.last_logits = logits.row(cursor).to_vec();
+                committed += 1;
+                cursor += 1;
+                continue;
+            }
+            let verify: Vec<&[f32]> = (0..=p.k).map(|r| logits.row(cursor + r)).collect();
+            let out = crate::spec::accept_drafts(
+                &drafts[si][..p.k],
+                &dists[si],
+                &verify,
+                &s.sampling,
+                &mut s.rng,
+            );
+            let a = out.accepted;
+            self.draft_tokens += p.k as u64;
+            self.accepted_tokens += a as u64;
+            committed += 1 + a as u64;
+            for &d in &drafts[si][..a] {
+                s.generated.push(d);
+                self.emitted.push((s.id, d));
+                s.fed += 1;
+            }
+            if a < p.k {
+                // Rejected tail: whole blocks past the accepted prefix
+                // return to the pool; the published-prefix boundary is
+                // never crossed (base >= prompt length in a generation
+                // round).
+                self.spec_rollbacks += 1;
+                debug_assert!(p.base >= s.prompt.len().min(max_seq));
+                s.cache.truncate(&mut self.pool, p.base + 1 + a);
+                s.last_logits = logits.row(cursor + a).to_vec();
+                if s.generated.len() >= s.n_gen || s.cache.len() + 1 >= max_seq {
+                    Self::finish(&mut self.pool, s);
+                } else {
+                    let c = out.corrected.expect("rejection carries a corrected token");
+                    s.generated.push(c);
+                    self.emitted.push((s.id, c));
+                    // `fed` stays put: the virtual stream feeds c next pass.
+                    if s.generated.len() >= s.n_gen {
+                        Self::finish(&mut self.pool, s);
+                    }
+                }
+            } else {
+                // Full acceptance: the bonus row V_k seeds the next round.
+                s.last_logits = logits.row(cursor + p.k).to_vec();
+                if s.generated.len() >= s.n_gen {
+                    Self::finish(&mut self.pool, s);
+                }
+            }
+            if let Some(sp) = s.spec.as_mut() {
+                sp.ctrl.observe(p.k, a);
+            }
+            cursor += 1 + p.k;
         }
-        let n = stepping.len();
+        let n = plan.len();
         self.steps += 1;
-        self.tokens_processed += n as u64;
+        self.tokens_processed += committed;
         n
     }
 

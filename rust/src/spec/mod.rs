@@ -1,0 +1,321 @@
+//! Self-speculative decoding: the RaNA-adapted model drafts its own
+//! continuations at a **low rank budget** and verifies them at the **full
+//! (target) budget**, so the low-budget tier becomes a pure decode speedup
+//! instead of a quality trade (DESIGN.md §2d).
+//!
+//! One speculation round for a sequence whose cache holds `base` committed
+//! tokens and whose next token `x0` has just been selected from held
+//! target logits:
+//!
+//! 1. **Draft** — run `k` decode steps at [`SpecConfig::draft_rate`]
+//!    (per-row `BudgetView` dispatch through the same batched masked
+//!    kernels), proposing `d_1..d_k`. Draft KV is written at the draft
+//!    budget and is therefore *contaminated* for the target model.
+//! 2. **Rollback** — `truncate(base)` on the cache discards every draft
+//!    KV row (dense: length reset; paged: whole blocks return to the
+//!    [`crate::kvcache::BlockPool`], COW-aware).
+//! 3. **Verify** — one full-budget batched pass feeds `x0, d_1..d_k`
+//!    (`k + 1` positions) through the shared per-layer decode body, writing
+//!    clean target-budget KV and returning target logits `V_0..V_k`.
+//! 4. **Accept** — the longest draft prefix consistent with the target:
+//!    exact argmax matching at temperature 0 ([`accept_drafts`] greedy
+//!    path), rejection sampling against the seeded sampler otherwise — so
+//!    emitted text is **bit-identical** to non-speculative decode in the
+//!    greedy case and distribution-identical under sampling. Rejected
+//!    positions roll back via `truncate(base + 1 + accepted)`.
+//!
+//! The per-sequence [`DraftController`] adapts the draft length to the
+//! observed acceptance rate (EWMA), so sequences the draft tier predicts
+//! well speculate deeper while adversarial ones fall back toward plain
+//! decoding. Orchestration lives in `model::DecodeBatch` /
+//! `model::PagedDecodeBatch`; this module owns the policy pieces: config,
+//! controller, and the exactness-preserving acceptance rule.
+
+use crate::model::ops::{self, Sampling};
+use crate::util::rng::Xoshiro256;
+
+/// Hard cap on per-request draft length (protocol-level sanity bound).
+pub const MAX_SPEC_K: usize = 16;
+
+/// One sequence's per-draft filtered distributions (`q_1..q_k`), recorded
+/// during drafting for the rejection sampler (unused for greedy rounds).
+pub type DraftDists = Vec<Vec<(u32, f64)>>;
+
+/// Acceptance-EWMA smoothing factor (weight of the newest round).
+const EWMA_ALPHA: f64 = 0.3;
+/// Grow the draft length when the acceptance EWMA exceeds this.
+const GROW_THRESHOLD: f64 = 0.8;
+/// Shrink the draft length when the acceptance EWMA falls below this.
+const SHRINK_THRESHOLD: f64 = 0.4;
+
+/// Batch-level speculation settings (engine defaults; per-request `spec_k`
+/// overrides the draft length).
+#[derive(Clone, Copy, Debug)]
+pub struct SpecConfig {
+    /// Default draft length for requests that don't carry `spec_k`
+    /// (0 disables speculation by default).
+    pub default_k: usize,
+    /// Compression rate the draft passes run at (the cheap tier; should be
+    /// one of the engine's calibrated budget tiers).
+    pub draft_rate: f64,
+}
+
+impl Default for SpecConfig {
+    fn default() -> Self {
+        Self { default_k: 0, draft_rate: 0.5 }
+    }
+}
+
+impl SpecConfig {
+    /// Resolve a request's draft length: its own `spec_k` when given, else
+    /// the batch default, clamped to [`MAX_SPEC_K`]. 0 = speculation off.
+    pub fn resolve_k(&self, request_k: Option<usize>) -> usize {
+        request_k.unwrap_or(self.default_k).min(MAX_SPEC_K)
+    }
+}
+
+/// Per-sequence adaptive draft-length controller: tracks an acceptance-rate
+/// EWMA and walks the draft length within `[1, max_k]` — deep speculation
+/// while the draft tier agrees with the target, graceful degradation to
+/// near-plain decoding when it doesn't. Deterministic (no randomness), so
+/// greedy speculative schedules are reproducible.
+#[derive(Clone, Debug)]
+pub struct DraftController {
+    k: usize,
+    max_k: usize,
+    ewma: f64,
+}
+
+impl DraftController {
+    /// Start at the requested maximum (optimistic: the first rounds measure
+    /// the actual acceptance rate and shrink if needed).
+    pub fn new(max_k: usize) -> Self {
+        let max_k = max_k.clamp(1, MAX_SPEC_K);
+        Self { k: max_k, max_k, ewma: 1.0 }
+    }
+
+    /// Current draft length.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Current acceptance-rate estimate.
+    pub fn acceptance_ewma(&self) -> f64 {
+        self.ewma
+    }
+
+    /// Record one round: `accepted` of `proposed` drafts survived
+    /// verification.
+    pub fn observe(&mut self, proposed: usize, accepted: usize) {
+        if proposed == 0 {
+            return;
+        }
+        debug_assert!(accepted <= proposed);
+        let frac = accepted as f64 / proposed as f64;
+        self.ewma = (1.0 - EWMA_ALPHA) * self.ewma + EWMA_ALPHA * frac;
+        if self.ewma > GROW_THRESHOLD && self.k < self.max_k {
+            self.k += 1;
+        } else if self.ewma < SHRINK_THRESHOLD && self.k > 1 {
+            self.k -= 1;
+        }
+    }
+}
+
+/// Result of verifying one round's drafts against target logits.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpecOutcome {
+    /// Leading drafts that survived (`d_1..d_accepted` commit).
+    pub accepted: usize,
+    /// Token selected at the first rejected position — the greedy argmax
+    /// of the target logits there, or a residual-distribution draw under
+    /// sampling. `None` when every draft was accepted (the next token then
+    /// comes from the bonus target logits `V_k`, exactly like plain
+    /// decoding from held logits).
+    pub corrected: Option<u32>,
+}
+
+/// Decide how much of a draft run survives full-budget verification.
+///
+/// `drafts` are the proposed tokens `d_1..d_k`; `verify[i]` is the target
+/// logits row `V_i` produced after feeding `x0, d_1..d_i` (so `d_{i+1}` is
+/// checked against `verify[i]`; `verify.len() == drafts.len() + 1`, the
+/// last row being the bonus position). `draft_dists[i]` is the filtered
+/// draft distribution `d_{i+1}` was sampled from (empty slice allowed for
+/// greedy).
+///
+/// Exactness:
+/// * **Greedy** (`s.is_greedy()`): accept while `d_{i+1}` equals the
+///   target argmax; the corrected token is that argmax — precisely the
+///   token non-speculative greedy decode would have picked at the same
+///   position, so the emitted stream is bit-identical.
+/// * **Sampling**: standard speculative rejection sampling over the
+///   *filtered* distributions (temperature/top-k/top-p applied to both
+///   sides): accept `d ~ q` with probability `min(1, p(d)/q(d))`, else
+///   emit from the normalized residual `max(p - q, 0)`. The emitted
+///   marginal at every position is exactly `p` — the distribution the
+///   seeded sampler draws from in non-speculative decode.
+pub fn accept_drafts(
+    drafts: &[u32],
+    draft_dists: &[Vec<(u32, f64)>],
+    verify: &[&[f32]],
+    s: &Sampling,
+    rng: &mut Xoshiro256,
+) -> SpecOutcome {
+    debug_assert_eq!(verify.len(), drafts.len() + 1, "verify rows = drafts + bonus");
+    if s.is_greedy() {
+        for (i, &d) in drafts.iter().enumerate() {
+            let am = crate::eval::argmax(verify[i]) as u32;
+            if d != am {
+                return SpecOutcome { accepted: i, corrected: Some(am) };
+            }
+        }
+        return SpecOutcome { accepted: drafts.len(), corrected: None };
+    }
+    debug_assert_eq!(draft_dists.len(), drafts.len());
+    for (i, &d) in drafts.iter().enumerate() {
+        let p = ops::sampling_dist(verify[i], s);
+        let q = &draft_dists[i];
+        let pd = prob_of(&p, d);
+        // d was drawn from q, so q(d) > 0; guard against degenerate dists.
+        let qd = prob_of(q, d).max(f64::MIN_POSITIVE);
+        if rng.f64() < (pd / qd).min(1.0) {
+            continue;
+        }
+        let corrected = sample_residual(&p, q, rng);
+        return SpecOutcome { accepted: i, corrected: Some(corrected) };
+    }
+    SpecOutcome { accepted: drafts.len(), corrected: None }
+}
+
+fn prob_of(dist: &[(u32, f64)], tok: u32) -> f64 {
+    dist.iter().find(|&&(t, _)| t == tok).map(|&(_, p)| p).unwrap_or(0.0)
+}
+
+/// Draw from the normalized residual `max(p - q, 0)` (the distribution
+/// that makes rejection sampling exact). Falls back to `p` itself when the
+/// residual has no mass (p ≡ q), which preserves exactness trivially.
+fn sample_residual(
+    p: &[(u32, f64)],
+    q: &[(u32, f64)],
+    rng: &mut Xoshiro256,
+) -> u32 {
+    let residual: Vec<(u32, f64)> = p
+        .iter()
+        .map(|&(t, pp)| (t, (pp - prob_of(q, t)).max(0.0)))
+        .filter(|&(_, r)| r > 0.0)
+        .collect();
+    if residual.is_empty() {
+        return ops::sample_from_dist(p, rng);
+    }
+    ops::sample_from_dist(&residual, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn controller_shrinks_on_rejection_and_regrows_on_acceptance() {
+        let mut c = DraftController::new(6);
+        assert_eq!(c.k(), 6);
+        // Sustained total rejection walks k down to 1.
+        for _ in 0..32 {
+            let k = c.k();
+            c.observe(k, 0);
+        }
+        assert_eq!(c.k(), 1, "ewma {}", c.acceptance_ewma());
+        // Sustained full acceptance walks it back up to the cap.
+        for _ in 0..32 {
+            let k = c.k();
+            c.observe(k, k);
+        }
+        assert_eq!(c.k(), 6);
+        // Zero-length rounds are ignored.
+        let before = c.acceptance_ewma();
+        c.observe(0, 0);
+        assert_eq!(c.acceptance_ewma(), before);
+    }
+
+    #[test]
+    fn controller_clamps_to_protocol_bounds() {
+        assert_eq!(DraftController::new(0).k(), 1);
+        assert_eq!(DraftController::new(1000).k(), MAX_SPEC_K);
+        assert_eq!(SpecConfig::default().resolve_k(Some(99)), MAX_SPEC_K);
+        assert_eq!(SpecConfig::default().resolve_k(Some(3)), 3);
+        assert_eq!(SpecConfig { default_k: 4, draft_rate: 0.5 }.resolve_k(None), 4);
+        assert_eq!(SpecConfig { default_k: 4, draft_rate: 0.5 }.resolve_k(Some(0)), 0);
+    }
+
+    /// Logits with a unique argmax at `top`.
+    fn peaked(vocab: usize, top: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..vocab).map(|i| -(i as f32) * 0.01).collect();
+        v[top] = 5.0;
+        v
+    }
+
+    #[test]
+    fn greedy_acceptance_is_exact_prefix_matching() {
+        let s = Sampling::default();
+        let mut rng = Xoshiro256::new(1);
+        let rows = [peaked(8, 3), peaked(8, 5), peaked(8, 1), peaked(8, 7)];
+        let verify: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        // All three drafts match their target argmax.
+        let out = accept_drafts(&[3, 5, 1], &[], &verify, &s, &mut rng);
+        assert_eq!(out, SpecOutcome { accepted: 3, corrected: None });
+        // Mismatch at the second draft: one accepted, corrected = argmax.
+        let out = accept_drafts(&[3, 4, 1], &[], &verify, &s, &mut rng);
+        assert_eq!(out, SpecOutcome { accepted: 1, corrected: Some(5) });
+        // Greedy acceptance must consume no randomness.
+        let mut r1 = Xoshiro256::new(9);
+        let before = r1.next_u64();
+        let mut r1 = Xoshiro256::new(9);
+        let _ = accept_drafts(&[3, 5], &[], &verify[..3].to_vec(), &s, &mut r1);
+        assert_eq!(r1.next_u64(), before, "greedy acceptance consumed rng state");
+    }
+
+    #[test]
+    fn stochastic_acceptance_always_accepts_when_draft_equals_target() {
+        // q == p → acceptance probability 1 at every position, no rng
+        // outcome can reject.
+        let s = Sampling { temperature: 1.0, top_k: 0, top_p: 1.0, seed: 4 };
+        let rows = [peaked(8, 3), peaked(8, 5)];
+        let verify: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let q0 = ops::sampling_dist(&rows[0], &s);
+        for seed in 0..16 {
+            let mut rng = Xoshiro256::new(seed);
+            let out = accept_drafts(&[q0[0].0], &[q0.clone()], &verify, &s, &mut rng);
+            assert_eq!(out.accepted, 1);
+            assert!(out.corrected.is_none());
+        }
+    }
+
+    #[test]
+    fn stochastic_rejection_emits_from_the_residual() {
+        // Draft distribution is a point mass on token 0; target is peaked
+        // on token 6. The residual places (almost) all mass on tokens the
+        // draft under-covers — a rejected round must never emit token 0
+        // with probability above its residual share, and in this extreme
+        // case essentially always emits a non-draft token.
+        let s = Sampling { temperature: 1.0, top_k: 0, top_p: 1.0, seed: 0 };
+        let target = peaked(8, 6);
+        let rows = [target.clone(), peaked(8, 1)];
+        let verify: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let q = vec![(0u32, 1.0f64)];
+        let mut rejections = 0;
+        let mut corrected_zero = 0;
+        for seed in 0..64 {
+            let mut rng = Xoshiro256::new(seed);
+            let out = accept_drafts(&[0], &[q.clone()], &verify, &s, &mut rng);
+            if out.accepted == 0 {
+                rejections += 1;
+                if out.corrected == Some(0) {
+                    corrected_zero += 1;
+                }
+            }
+        }
+        // p(0) is tiny, q(0)=1 → almost every round rejects, and the
+        // residual max(p-q, 0) gives token 0 zero mass.
+        assert!(rejections > 56, "only {rejections}/64 rounds rejected");
+        assert_eq!(corrected_zero, 0, "residual must exclude the over-covered draft token");
+    }
+}

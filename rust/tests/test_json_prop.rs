@@ -1,0 +1,136 @@
+//! Round-trip property tests for the hand-rolled `util::json` parser —
+//! the typed serving protocol (PR 4) and every bench artifact ride on it,
+//! so `serialize → parse → serialize` must be a fixpoint over adversarial
+//! values: escape-heavy strings, unicode (including astral-plane chars),
+//! deep nesting, and numeric edge cases.
+
+use rana::util::json::Json;
+use rana::util::rng::Xoshiro256;
+
+/// A pool of adversarial strings: escapes, quotes, control chars,
+/// multi-byte UTF-8, astral-plane (surrogate-pair) codepoints, and
+/// plausible protocol payloads.
+fn string_pool() -> Vec<String> {
+    vec![
+        String::new(),
+        "plain".into(),
+        "tab\t newline\n return\r quote\" backslash\\ slash/".into(),
+        "control \u{1} \u{8} \u{c} \u{1f}".into(),
+        "π ≈ 3.14159 — ümlaut àccents".into(),
+        "🙂🚀 astral \u{10348}".into(),
+        "{\"looks\":\"like json\"}".into(),
+        "trailing backslash \\".into(),
+        "\u{0}zero".into(),
+        "mixed 🙂 \"x\" \\u0041 not-an-escape".into(),
+    ]
+}
+
+/// Numeric edge cases the writer/parser must round-trip (JSON has no
+/// NaN/Inf, so finite values only).
+fn number_pool() -> Vec<f64> {
+    vec![
+        0.0,
+        -0.0,
+        1.0,
+        -1.0,
+        0.5,
+        -3.5e2,
+        3e-4,
+        1e15,          // the writer's integer-formatting boundary
+        1e15 + 2.0,
+        -1e15,
+        1e20,
+        f64::MIN_POSITIVE,
+        f64::MAX,
+        -f64::MAX,
+        2f64.powi(53),        // largest exactly-representable integer
+        2f64.powi(53) - 1.0,
+        123456.789,
+        -0.000001,
+    ]
+}
+
+/// Generate a random Json value with bounded depth.
+fn gen_value(rng: &mut Xoshiro256, depth: usize, strings: &[String], nums: &[f64]) -> Json {
+    let leaf_only = depth == 0;
+    match if leaf_only { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => Json::Num(nums[rng.below(nums.len())]),
+        3 => Json::Str(strings[rng.below(strings.len())].clone()),
+        4 => {
+            let n = rng.below(5);
+            Json::Arr((0..n).map(|_| gen_value(rng, depth - 1, strings, nums)).collect())
+        }
+        _ => {
+            let n = rng.below(5);
+            Json::Obj(
+                (0..n)
+                    .map(|i| {
+                        // Keys drawn from the same adversarial pool, made
+                        // unique so the BTreeMap keeps all of them.
+                        let key = format!("{}#{i}", strings[rng.below(strings.len())]);
+                        (key, gen_value(rng, depth - 1, strings, nums))
+                    })
+                    .collect(),
+            )
+        }
+    }
+}
+
+fn assert_roundtrip(v: &Json) {
+    let s1 = v.to_string();
+    let parsed = Json::parse(&s1)
+        .unwrap_or_else(|e| panic!("serialized value failed to parse: {e}\n  text: {s1}"));
+    assert_eq!(&parsed, v, "parse(serialize(v)) != v for {s1}");
+    let s2 = parsed.to_string();
+    assert_eq!(s1, s2, "serialize is not a fixpoint");
+}
+
+#[test]
+fn randomized_values_roundtrip_to_a_fixpoint() {
+    let strings = string_pool();
+    let nums = number_pool();
+    for seed in 0..8u64 {
+        let mut rng = Xoshiro256::new(0x150B ^ seed);
+        for _ in 0..200 {
+            let v = gen_value(&mut rng, 4, &strings, &nums);
+            assert_roundtrip(&v);
+        }
+    }
+}
+
+#[test]
+fn every_pool_string_and_number_roundtrips_as_a_scalar() {
+    for s in string_pool() {
+        assert_roundtrip(&Json::Str(s));
+    }
+    for n in number_pool() {
+        assert_roundtrip(&Json::Num(n));
+    }
+}
+
+#[test]
+fn deep_nesting_roundtrips() {
+    // 64 levels of alternating array/object nesting.
+    let mut v = Json::Str("leaf 🙂 \"deep\"".into());
+    for i in 0..64 {
+        v = if i % 2 == 0 {
+            Json::Arr(vec![v, Json::Num(i as f64)])
+        } else {
+            Json::obj(vec![("nested\n", v), ("level", Json::Num(i as f64))])
+        };
+    }
+    assert_roundtrip(&v);
+}
+
+#[test]
+fn escaped_input_forms_parse_to_the_same_value() {
+    // Different source spellings of the same logical string must converge
+    // to one canonical serialization (the fixpoint).
+    let a = Json::parse("\"\\u0041\\u00e9\\ud83d\\ude42\"").unwrap();
+    let b = Json::parse("\"Aé🙂\"").unwrap();
+    assert_eq!(a, b);
+    assert_eq!(a.to_string(), b.to_string());
+    assert_roundtrip(&a);
+}

@@ -243,10 +243,8 @@ fn budget_override_bypasses_the_shared_prefix_trie() {
     batch.retire_finished();
     // A 0.5-budget override on the same prompt must not reuse dense KV…
     let spec = rana::model::SeqSpec {
-        prompt: prompt.clone(),
-        max_new: 4,
-        sampling: rana::model::Sampling::default(),
         budget: Some(0.5),
+        ..rana::model::SeqSpec::greedy(prompt.clone(), 4)
     };
     let hits_before = batch.prefix_hit_tokens;
     batch.try_join_spec(spec).unwrap();

@@ -1,0 +1,418 @@
+//! Acceptance pins for self-speculative decoding (DESIGN.md §2d):
+//! greedy speculative decode must emit **byte-identical** token streams to
+//! non-speculative decode on BOTH cache layouts, across batch sizes,
+//! ragged schedules, mixed spec/non-spec rows and per-request budget
+//! overrides; KV rollback (`truncate`) must reconcile the block pool; and
+//! the paged path must pin the dense over-long-prompt truncation contract.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use rana::adapters::calibrate::{self, CalibOptions, ModelCalib};
+use rana::adapters::AdaptedModel;
+use rana::coordinator::engine::{Engine, NativeEngine};
+use rana::coordinator::metrics::Metrics;
+use rana::kvcache::{BlockPool, PagedKvCache};
+use rana::model::{
+    decode_step_batch, decode_step_paged, Arch, DecodeBatch, KvCache, Model, ModelConfig,
+    ModelWeights, PagedBatchConfig, PagedDecodeBatch, Sampling, SeqSpec,
+};
+use rana::spec::SpecConfig;
+
+fn tiny_model(arch: Arch, seed: u64) -> Arc<Model> {
+    let cfg = ModelConfig {
+        name: "tiny".into(),
+        arch,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_hidden: 32,
+        vocab: 288,
+        max_seq: 64,
+        rope_theta: 10_000.0,
+        norm_eps: 1e-5,
+    };
+    let w = ModelWeights::random_init(&cfg, seed);
+    Arc::new(Model::new(cfg, w).unwrap())
+}
+
+fn calib_for(model: &Model, seed: u64) -> ModelCalib {
+    let tokens: Vec<u32> = (0..1000).map(|i| (i * 13 % 97) as u32).collect();
+    calibrate::collect(
+        model,
+        &tokens,
+        &CalibOptions { n_fit: 96, n_eval: 24, window: 24, seed },
+    )
+}
+
+/// ONE runtime-budget model whose schedule serves every tier in `rates`
+/// (ambient budget starts at 0 = dense target; drafts run at a tier).
+fn runtime_model(arch: Arch, seed: u64, rates: &[f64]) -> AdaptedModel {
+    let model = tiny_model(arch, seed);
+    let calib = calib_for(&model, seed);
+    let (runtime, _) = calibrate::adapt_runtime(Arc::clone(&model), &calib, rates, 32, seed);
+    runtime
+}
+
+/// Drive a dense batch to completion; returns each request's generated
+/// tokens in join order.
+fn run_dense(
+    m: &AdaptedModel,
+    reqs: &[SeqSpec],
+    capacity: usize,
+    spec: SpecConfig,
+) -> Vec<Vec<u32>> {
+    let mut batch = DecodeBatch::new(&m.base.cfg, capacity);
+    batch.set_spec(spec);
+    let mut out: Vec<Option<Vec<u32>>> = vec![None; reqs.len()];
+    let mut ids: HashMap<u64, usize> = HashMap::new();
+    let mut next = 0usize;
+    let mut guard = 0;
+    while out.iter().any(|o| o.is_none()) {
+        while next < reqs.len() {
+            match batch.try_join_spec(reqs[next].clone()) {
+                Some(id) => {
+                    ids.insert(id, next);
+                    next += 1;
+                }
+                None => break,
+            }
+        }
+        batch.step(m);
+        for f in batch.retire_finished() {
+            if let Some(&i) = ids.get(&f.id) {
+                out[i] = Some(f.generated);
+            }
+        }
+        guard += 1;
+        assert!(guard < 4096, "dense run failed to converge");
+    }
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Drive a paged batch to completion; returns each request's generated
+/// tokens in join order.
+fn run_paged(
+    m: &AdaptedModel,
+    reqs: &[SeqSpec],
+    pc: PagedBatchConfig,
+    spec: SpecConfig,
+) -> Vec<Vec<u32>> {
+    let mut batch = PagedDecodeBatch::new(&m.base.cfg, pc);
+    batch.set_spec(spec);
+    let mut out: Vec<Option<Vec<u32>>> = vec![None; reqs.len()];
+    let mut ids: HashMap<u64, usize> = HashMap::new();
+    let mut next = 0usize;
+    let mut guard = 0;
+    while out.iter().any(|o| o.is_none()) {
+        while next < reqs.len() {
+            match batch.try_join_spec(reqs[next].clone()) {
+                Some(id) => {
+                    ids.insert(id, next);
+                    next += 1;
+                }
+                None => break, // pool-budget refusal: retry after steps
+            }
+        }
+        batch.step(m);
+        for f in batch.retire_finished() {
+            if let Some(&i) = ids.get(&f.id) {
+                out[i] = Some(f.generated);
+            }
+        }
+        guard += 1;
+        assert!(guard < 4096, "paged run failed to converge");
+    }
+    assert_eq!(batch.active(), 0);
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Ragged request set: mixed prompt lengths and generation lengths,
+/// including the degenerate 1-token and prefill-heavy cases.
+fn ragged_reqs() -> Vec<SeqSpec> {
+    vec![
+        SeqSpec::greedy(vec![1, 5, 9, 30, 2, 17], 8),
+        SeqSpec::greedy(vec![4, 5], 6),
+        SeqSpec::greedy(vec![9, 9, 9, 9, 7, 6, 5, 4, 3], 5),
+        SeqSpec::greedy(vec![2], 1),
+        SeqSpec::greedy(vec![8, 8, 1, 0, 63, 2], 2),
+        SeqSpec::greedy(vec![40, 3, 3, 12], 10),
+        SeqSpec::greedy(vec![7, 7], 7),
+        SeqSpec::greedy(vec![11, 30, 11, 30, 11], 4),
+    ]
+}
+
+#[test]
+fn greedy_spec_is_bitwise_identical_to_nonspec_dense_and_paged() {
+    for arch in [Arch::SwiGlu, Arch::GeluNeoX] {
+        // Draft tier 0.5, target = the dense ambient (budget 0): the draft
+        // model genuinely diverges from the target, so acceptance and
+        // rollback both exercise.
+        let runtime = runtime_model(arch, 71, &[0.5]);
+        let reqs = ragged_reqs();
+        let spec_on = SpecConfig { default_k: 4, draft_rate: 0.5 };
+        let baseline = run_dense(&runtime, &reqs, 8, SpecConfig::default());
+        for capacity in [1usize, 3, 8] {
+            let spec = run_dense(&runtime, &reqs, capacity, spec_on);
+            assert_eq!(
+                spec, baseline,
+                "{arch:?} capacity {capacity}: dense speculative text diverged"
+            );
+            let paged = run_paged(
+                &runtime,
+                &reqs,
+                PagedBatchConfig { block_size: 4, n_blocks: 0, slots: capacity },
+                spec_on,
+            );
+            assert_eq!(
+                paged, baseline,
+                "{arch:?} capacity {capacity}: paged speculative text diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn greedy_spec_matches_nonspec_at_an_adapted_target_budget() {
+    // Target = the 0.35 tier (via the ambient scalar), draft = 0.5: verify
+    // must run at the row's target budget, not dense.
+    let runtime = runtime_model(Arch::SwiGlu, 73, &[0.35, 0.5]);
+    runtime.set_budget(0.35);
+    let reqs = ragged_reqs();
+    let baseline = run_dense(&runtime, &reqs, 8, SpecConfig::default());
+    let spec = run_dense(&runtime, &reqs, 3, SpecConfig { default_k: 3, draft_rate: 0.5 });
+    assert_eq!(spec, baseline, "speculation at an adapted target budget diverged");
+    let paged = run_paged(
+        &runtime,
+        &reqs,
+        PagedBatchConfig { block_size: 7, n_blocks: 0, slots: 3 },
+        SpecConfig { default_k: 3, draft_rate: 0.5 },
+    );
+    assert_eq!(paged, baseline, "paged speculation at an adapted target budget diverged");
+    runtime.set_budget(0.0);
+}
+
+#[test]
+fn mixed_spec_nonspec_and_budget_override_rows_stay_bitwise_stable() {
+    let runtime = runtime_model(Arch::SwiGlu, 79, &[0.35, 0.5]);
+    // Per-request spec_k: explicitly off, explicitly on, and batch default;
+    // one row carries a budget override (its verify runs at 0.35).
+    let mut reqs = ragged_reqs()[..4].to_vec();
+    reqs[0].spec_k = Some(0);
+    reqs[1].spec_k = Some(4);
+    reqs[2].spec_k = None; // batch default (2)
+    reqs[3].spec_k = Some(4);
+    reqs[3].budget = Some(0.35);
+    // Baseline: every request solo, speculation off, same budgets.
+    let baseline: Vec<Vec<u32>> = reqs
+        .iter()
+        .map(|r| {
+            let mut solo = r.clone();
+            solo.spec_k = Some(0);
+            run_dense(&runtime, &[solo], 1, SpecConfig::default())
+                .pop()
+                .unwrap()
+        })
+        .collect();
+    let spec_cfg = SpecConfig { default_k: 2, draft_rate: 0.5 };
+    let mixed = run_dense(&runtime, &reqs, 4, spec_cfg);
+    assert_eq!(mixed, baseline, "mixed dense spec/non-spec batch diverged");
+    let paged = run_paged(
+        &runtime,
+        &reqs,
+        PagedBatchConfig { block_size: 4, n_blocks: 0, slots: 4 },
+        spec_cfg,
+    );
+    assert_eq!(paged, baseline, "mixed paged spec/non-spec batch diverged");
+}
+
+#[test]
+fn spec_survives_tiny_pool_preemption_with_exact_text() {
+    // A pool far smaller than demand: speculation must degrade (draft
+    // windows shrink to plain appends) and preemption must requeue
+    // sequences, but every text stays bit-identical to the oracle.
+    let runtime = runtime_model(Arch::GeluNeoX, 83, &[0.5]);
+    let reqs: Vec<SeqSpec> = vec![
+        SeqSpec::greedy(vec![1, 2, 3, 4], 6),
+        SeqSpec::greedy(vec![5, 6, 7], 6),
+        SeqSpec::greedy(vec![8, 9], 6),
+    ];
+    let baseline = run_dense(&runtime, &reqs, 3, SpecConfig::default());
+    let spec_cfg = SpecConfig { default_k: 4, draft_rate: 0.5 };
+    let paged = run_paged(
+        &runtime,
+        &reqs,
+        PagedBatchConfig { block_size: 2, n_blocks: 8, slots: 3 },
+        spec_cfg,
+    );
+    assert_eq!(paged, baseline, "tiny-pool speculative text diverged");
+}
+
+#[test]
+fn sampled_spec_is_deterministic_and_completes_requests() {
+    let runtime = runtime_model(Arch::SwiGlu, 89, &[0.5]);
+    let sampling = Sampling { temperature: 0.9, top_k: 8, top_p: 0.95, seed: 5 };
+    let reqs: Vec<SeqSpec> = vec![
+        SeqSpec { sampling, ..SeqSpec::greedy(vec![1, 2, 3], 10) },
+        SeqSpec { sampling: Sampling { seed: 11, ..sampling }, ..SeqSpec::greedy(vec![4, 5], 8) },
+    ];
+    let spec_cfg = SpecConfig { default_k: 3, draft_rate: 0.5 };
+    let a = run_dense(&runtime, &reqs, 2, spec_cfg);
+    let b = run_dense(&runtime, &reqs, 2, spec_cfg);
+    assert_eq!(a, b, "same seeds must reproduce the speculative sampled stream");
+    assert_eq!(a[0].len(), 10, "sampled speculation must honour max_new");
+    assert_eq!(a[1].len(), 8);
+    let p = run_paged(
+        &runtime,
+        &reqs,
+        PagedBatchConfig { block_size: 4, n_blocks: 0, slots: 2 },
+        spec_cfg,
+    );
+    let p2 = run_paged(
+        &runtime,
+        &reqs,
+        PagedBatchConfig { block_size: 4, n_blocks: 0, slots: 2 },
+        spec_cfg,
+    );
+    assert_eq!(p, p2, "paged sampled speculation must be reproducible");
+}
+
+#[test]
+fn full_acceptance_when_draft_budget_equals_target_budget() {
+    // Ambient = draft tier: the draft distribution IS the target
+    // distribution, so greedy speculation must accept every draft and
+    // never roll back.
+    let runtime = runtime_model(Arch::SwiGlu, 97, &[0.5]);
+    runtime.set_budget(0.5);
+    let cfg = runtime.base.cfg.clone();
+    let mut batch = DecodeBatch::new(&cfg, 2);
+    batch.set_spec(SpecConfig { default_k: 4, draft_rate: 0.5 });
+    batch.try_join_spec(SeqSpec::greedy(vec![1, 2, 3], 12)).unwrap();
+    batch.try_join_spec(SeqSpec::greedy(vec![4, 5], 9)).unwrap();
+    let mut guard = 0;
+    while batch.has_work() {
+        batch.step(&runtime);
+        batch.retire_finished();
+        guard += 1;
+        assert!(guard < 128);
+    }
+    let (drafts, accepted, rollbacks) = batch.spec_stats();
+    assert!(drafts > 0, "speculation never ran");
+    assert_eq!(accepted, drafts, "draft == target must accept everything");
+    assert_eq!(rollbacks, 0);
+    runtime.set_budget(0.0);
+}
+
+#[test]
+fn engine_sessions_report_spec_metrics_and_exact_text() {
+    // End-to-end through the engine (paged decode sessions by default):
+    // speculative generate_batch must match the non-speculative engine
+    // bitwise and surface draft/accepted counters via Metrics.
+    let runtime = Arc::new(runtime_model(Arch::SwiGlu, 101, &[0.5]));
+    let prompts: Vec<(String, usize)> =
+        vec![("ab".into(), 8), ("the dax ".into(), 10), ("x".into(), 4)];
+    let base = NativeEngine::new(Arc::clone(&runtime)).with_decode_capacity(3);
+    let spec = NativeEngine::new(Arc::clone(&runtime))
+        .with_decode_capacity(3)
+        .with_spec(3, 0.5);
+    let metrics = Arc::new(Metrics::new());
+    spec.set_metrics(Arc::clone(&metrics));
+    let want = base.generate_batch(&prompts);
+    let got = spec.generate_batch(&prompts);
+    assert_eq!(got, want, "engine-level speculative text diverged");
+    use std::sync::atomic::Ordering;
+    let drafts = metrics.draft_tokens.load(Ordering::Relaxed);
+    let accepted = metrics.accepted_tokens.load(Ordering::Relaxed);
+    assert!(drafts > 0, "engine speculation proposed no drafts");
+    assert!(accepted <= drafts);
+    assert!(metrics.spec_acceptance() <= 1.0);
+}
+
+#[test]
+fn overlong_prompt_paged_prefill_matches_dense_truncation_contract() {
+    // Satellite pin: prompts at and past the positional capacity must
+    // truncate prefill at the same point on both cache layouts — no
+    // panic, no overflow, same (empty or capped) generations.
+    let runtime = AdaptedModel::unadapted(tiny_model(Arch::SwiGlu, 103));
+    let max_seq = runtime.base.cfg.max_seq;
+    for spec_cfg in [SpecConfig::default(), SpecConfig { default_k: 3, draft_rate: 0.5 }] {
+        for extra in [0usize, 1, 9] {
+            let long: Vec<u32> = (0..(max_seq + extra) as u32).map(|i| i % 60).collect();
+            let short: Vec<u32> = (0..(max_seq - 2) as u32).map(|i| i % 60).collect();
+            let reqs = vec![
+                SeqSpec::greedy(long, 3),
+                SeqSpec::greedy(short, 5),
+                SeqSpec::greedy(vec![], 2),
+            ];
+            let dense = run_dense(&runtime, &reqs, 3, spec_cfg);
+            let paged = run_paged(
+                &runtime,
+                &reqs,
+                PagedBatchConfig { block_size: 4, n_blocks: 0, slots: 3 },
+                spec_cfg,
+            );
+            assert_eq!(
+                paged, dense,
+                "extra {extra}: paged over-long-prompt behavior diverged from dense"
+            );
+            assert_eq!(dense[0], Vec::<u32>::new(), "truncated prefill must generate nothing");
+            assert_eq!(dense[2], Vec::<u32>::new(), "empty prompt must generate nothing");
+        }
+    }
+}
+
+#[test]
+fn truncate_then_redecode_matches_fresh_decode_bitwise() {
+    // The rollback primitive itself: decode 6 tokens, roll back to 3,
+    // decode a different continuation — logits must equal a fresh cache
+    // fed the merged stream, bit for bit, on both layouts.
+    let m = tiny_model(Arch::SwiGlu, 107);
+    let dense_m = AdaptedModel::unadapted(Arc::clone(&m));
+    let stream: Vec<u32> = vec![1, 5, 9, 30, 2, 17];
+    let alt: Vec<u32> = vec![41, 7, 22];
+    let merged: Vec<u32> = stream[..3].iter().chain(&alt).copied().collect();
+
+    // Dense.
+    let mut cache = KvCache::new(&m.cfg);
+    for &t in &stream {
+        let mut refs = vec![&mut cache];
+        decode_step_batch(&dense_m, &[t], &mut refs).unwrap();
+    }
+    cache.truncate(3);
+    let mut rolled = Vec::new();
+    for &t in &alt {
+        let mut refs = vec![&mut cache];
+        rolled = decode_step_batch(&dense_m, &[t], &mut refs).unwrap().data;
+    }
+    let mut fresh_cache = KvCache::new(&m.cfg);
+    let mut fresh = Vec::new();
+    for &t in &merged {
+        let mut refs = vec![&mut fresh_cache];
+        fresh = decode_step_batch(&dense_m, &[t], &mut refs).unwrap().data;
+    }
+    assert_eq!(rolled, fresh, "dense rollback+redecode diverged from fresh decode");
+
+    // Paged (block size 2 → rollback crosses block boundaries).
+    let mut pool = BlockPool::new(&m.cfg, 2, 64);
+    let mut seq = PagedKvCache::new();
+    for &t in &stream {
+        let mut refs = vec![&mut seq];
+        decode_step_paged(&dense_m, &[t], &mut pool, &mut refs).unwrap();
+    }
+    seq.truncate(&mut pool, 3);
+    let mut rolled = Vec::new();
+    for &t in &alt {
+        let mut refs = vec![&mut seq];
+        rolled = decode_step_paged(&dense_m, &[t], &mut pool, &mut refs).unwrap().data;
+    }
+    let mut fresh_seq = PagedKvCache::new();
+    let mut fresh = Vec::new();
+    for &t in &merged {
+        let mut refs = vec![&mut fresh_seq];
+        fresh = decode_step_paged(&dense_m, &[t], &mut pool, &mut refs).unwrap().data;
+    }
+    assert_eq!(rolled, fresh, "paged rollback+redecode diverged from fresh decode");
+    seq.release(&mut pool);
+    fresh_seq.release(&mut pool);
+    assert_eq!(pool.free_blocks(), 64, "rollback leaked pool blocks");
+}
