@@ -121,6 +121,7 @@ fn serving(opts: Opts) -> anyhow::Result<()> {
             "{}",
             Json::obj(vec![
                 ("bench", Json::str("serving_decode")),
+                ("kernel", Json::str(rana::tensor::kernels::backend_name())),
                 ("batch", Json::Num(batch as f64)),
                 ("gen_tokens", Json::Num(gen_tokens as f64)),
                 ("threads_tok_s", Json::Num(threads_tps)),

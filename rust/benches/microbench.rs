@@ -7,13 +7,19 @@
 //! so the packed-vs-axpy speedup lands in the bench trajectory as data,
 //! not prose.
 //!
-//! Usage: cargo bench --bench microbench [-- gemv|gemm|svd|decode]
+//! The kernel suite pits every backend the host can run (generic scalar,
+//! AVX2, NEON — `tensor::kernels`) against each other on GEMM/GEMV/softmax
+//! and emits one `{"bench":"kernel_backend",...}` JSON row per (backend,
+//! op), so SIMD-vs-generic speedups land in the trajectory as data.
+//!
+//! Usage: cargo bench --bench microbench [-- gemv|gemm|svd|decode|kernel]
 
 use std::time::Duration;
 
 use rana::bench::harness::bench;
 use rana::model::BlockOps;
-use rana::tensor::gemm::{gemm_packed, gemm_rows_axpy};
+use rana::tensor::gemm::{gemm_packed, gemm_packed_with, gemm_rows_axpy};
+use rana::tensor::kernels::{self, Kernel};
 use rana::tensor::{masked_acc_gemv, Mat};
 use rana::util::cli::Args;
 use rana::util::json::Json;
@@ -163,6 +169,91 @@ fn decode_suite() {
     s.print();
 }
 
+fn kernel_backend_suite() {
+    println!(
+        "\n== kernel backends: gemm/gemv/softmax per available backend \
+         (dispatched: {}) ==",
+        kernels::backend_name()
+    );
+    let mut rng = Xoshiro256::new(7);
+    // One representative hot shape per op: a square packed GEMM, the
+    // decode-path 512×2048 GEMV, and a long-context softmax row.
+    let (gm, gk, gn) = (256usize, 256usize, 256usize);
+    let ga = Mat::gaussian(gm, gk, 1.0, &mut rng);
+    let gb = Mat::gaussian(gk, gn, 1.0, &mut rng);
+    let (vk, vn) = (512usize, 2048usize);
+    let vx: Vec<f32> = (0..vk).map(|_| rng.gaussian()).collect();
+    let vb = Mat::gaussian(vk, vn, 1.0, &mut rng);
+    let sn = 4096usize;
+    let logits: Vec<f32> = (0..sn).map(|_| 4.0 * rng.gaussian()).collect();
+
+    let mut generic_ms: std::collections::HashMap<&'static str, f64> =
+        std::collections::HashMap::new();
+    for kern in kernels::available() {
+        let name = kern.name();
+        let mut emit = |op: &str, ms: f64, gflops: f64| {
+            println!(
+                "{}",
+                Json::obj(vec![
+                    ("bench", Json::str("kernel_backend")),
+                    ("backend", Json::str(name)),
+                    ("op", Json::str(op)),
+                    ("ms", Json::Num(ms)),
+                    ("gflops", Json::Num(gflops)),
+                ])
+            );
+        };
+
+        let mut out = Mat::zeros(gm, gn);
+        let s = bench(&format!("[{name}] gemm {gm}×{gk}×{gn}"), Duration::from_millis(300), || {
+            gemm_packed_with(kern, gm, gk, gn, &ga.data, &gb.data, &mut out.data, 1.0, 0.0);
+            std::hint::black_box(&out);
+        });
+        s.print();
+        let ms = s.mean.as_secs_f64() * 1e3;
+        let gemm_gflops = 2.0 * (gm * gk * gn) as f64 / s.mean.as_secs_f64() / 1e9;
+        emit("gemm", ms, gemm_gflops);
+        if name == "generic" {
+            generic_ms.insert("gemm", ms);
+        } else if let Some(&base) = generic_ms.get("gemm") {
+            println!("    → {:.2}× vs generic", base / ms);
+        }
+
+        let mut vout = vec![0.0f32; vn];
+        let s = bench(&format!("[{name}] gemv {vk}×{vn}"), Duration::from_millis(300), || {
+            kern.gemv(&mut vout, &vx, &vb.data, vk, vn, 1.0, 0.0);
+            std::hint::black_box(&vout);
+        });
+        s.print();
+        let ms = s.mean.as_secs_f64() * 1e3;
+        let gemv_gflops = 2.0 * (vk * vn) as f64 / s.mean.as_secs_f64() / 1e9;
+        emit("gemv", ms, gemv_gflops);
+        if name == "generic" {
+            generic_ms.insert("gemv", ms);
+        } else if let Some(&base) = generic_ms.get("gemv") {
+            println!("    → {:.2}× vs generic", base / ms);
+        }
+
+        let mut srow = logits.clone();
+        let s = bench(&format!("[{name}] softmax n={sn}"), Duration::from_millis(300), || {
+            srow.copy_from_slice(&logits);
+            kern.softmax(&mut srow);
+            std::hint::black_box(&srow);
+        });
+        s.print();
+        let ms = s.mean.as_secs_f64() * 1e3;
+        // ~1 exp + 2 passes per element; count exp as one "flop" for a
+        // stable per-backend rate, not a hardware-true FLOP count.
+        let softmax_gflops = 3.0 * sn as f64 / s.mean.as_secs_f64() / 1e9;
+        emit("softmax", ms, softmax_gflops);
+        if name == "generic" {
+            generic_ms.insert("softmax", ms);
+        } else if let Some(&base) = generic_ms.get("softmax") {
+            println!("    → {:.2}× vs generic", base / ms);
+        }
+    }
+}
+
 fn main() {
     let args = Args::from_env();
     if args.filter_matches("gemv") {
@@ -176,5 +267,8 @@ fn main() {
     }
     if args.filter_matches("decode") {
         decode_suite();
+    }
+    if args.filter_matches("kernel") {
+        kernel_backend_suite();
     }
 }

@@ -17,21 +17,13 @@
 
 use super::Mat;
 
-/// Numerically-stable in-place softmax (max-subtracted, f64 sum).
+/// Numerically-stable in-place softmax (max-subtracted, vectorized exp,
+/// f64 sum), dispatched to the process-wide kernel backend.
 ///
 /// Lives in `tensor` so the contiguous and paged attention kernels share one
 /// implementation; `model::ops::softmax` re-exports it.
 pub fn softmax(x: &mut [f32]) {
-    let max = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-    let mut sum = 0.0f64;
-    for v in x.iter_mut() {
-        *v = (*v - max).exp();
-        sum += *v as f64;
-    }
-    let inv = (1.0 / sum) as f32;
-    for v in x.iter_mut() {
-        *v *= inv;
-    }
+    super::kernels::kernel().softmax(x)
 }
 
 /// Attention for the decode path against the first `ctx` rows of a

@@ -8,10 +8,11 @@
 //! three-level blocked kernel in the style of rten's `GenericKernel` /
 //! BLIS:
 //!
-//! * **Microkernel** — an `MR×NR` (8×8) register tile; the innermost loop
-//!   does `acc[r][c] += a[r] * b[c]` over the depth, which LLVM reliably
-//!   auto-vectorizes to one FMA vector op per accumulator row. Every loaded
-//!   `a`/`b` element is reused 8 times from registers instead of once.
+//! * **Microkernel** — an `MR×NR` (8×8) register tile supplied by the
+//!   dispatched [`Kernel`] backend (`tensor::kernels`): hand-written AVX2+FMA
+//!   or NEON where the CPU has it, the autovectorized scalar loop otherwise.
+//!   Every loaded `a`/`b` element is reused 8 times from registers instead
+//!   of once.
 //! * **Packing** — before the microkernel runs, the operands are repacked
 //!   into contiguous panels: `A` blocks become `MR`-tall column-interleaved
 //!   panels, `B` blocks become `NR`-wide row-interleaved panels, so the
@@ -33,13 +34,12 @@
 //! `cargo bench --bench microbench -- gemm`, which emits the packed-vs-axpy
 //! comparison as JSON.
 
-use super::{axpy, dot, Mat};
+use super::kernels::{self, scale, Kernel};
+use super::Mat;
 use crate::util::pool::{default_parallelism, parallel_chunks};
 
-/// Microkernel tile height (rows of `A` per register tile).
-pub const MR: usize = 8;
-/// Microkernel tile width (cols of `B` per register tile).
-pub const NR: usize = 8;
+pub use super::kernels::{MR, NR};
+
 /// Depth (k) cache block: packed B panel bytes per column ≈ KC·4.
 const KC: usize = 256;
 /// Row (m) cache block: packed A block is at most MC·KC floats (64 KiB).
@@ -95,18 +95,6 @@ pub fn gemm_slices(
     }
 }
 
-/// `out = beta·out` (with `beta = 0` short-circuiting possible NaNs away).
-#[inline]
-fn scale(out: &mut [f32], beta: f32) {
-    if beta == 0.0 {
-        out.fill(0.0);
-    } else if beta != 1.0 {
-        for v in out.iter_mut() {
-            *v *= beta;
-        }
-    }
-}
-
 /// Row-vector × matrix: `out = alpha·(x @ b) + beta·out` for `x: 1×k`,
 /// `b: k×n`. The k-outer axpy loop streams each `b` row exactly once and
 /// keeps the whole output row cache-resident — the GEMV fast path of the
@@ -118,36 +106,30 @@ pub fn gemv_into(out: &mut [f32], x: &[f32], b: &Mat, alpha: f32, beta: f32) {
 }
 
 fn gemv_slices(out: &mut [f32], x: &[f32], b: &[f32], k: usize, n: usize, alpha: f32, beta: f32) {
-    scale(out, beta);
-    for kk in 0..k {
-        let av = alpha * x[kk];
-        if av != 0.0 {
-            axpy(av, &b[kk * n..(kk + 1) * n], out);
-        }
-    }
+    kernels::kernel().gemv(out, x, b, k, n, alpha, beta);
 }
 
 /// Matrix × column-vector: `out[r] = w.row(r) · x` — the decode-path
 /// product. One dot per row (streams `w` exactly once); parallel over row
-/// stripes only when the matrix is large enough to amortize the scoped
-/// thread fork (`parallel_chunks` has no persistent pool, so the threshold
-/// must sit well above the sim models' decode matvecs — forking per token
-/// would swamp the ~20 µs of dot work and poison the latency baselines).
+/// stripes only when the matrix is large enough to amortize handing work to
+/// the persistent pool — below the threshold the ~20 µs of dot work is
+/// cheaper done inline than woken across workers.
 pub fn matvec_into(out: &mut [f32], w: &Mat, x: &[f32]) {
     assert_eq!(x.len(), w.cols, "matvec shape mismatch");
     assert_eq!(out.len(), w.rows, "matvec out len");
+    let kern = kernels::kernel();
     if w.rows * w.cols >= 1 << 20 {
         let out_ptr = SendPtr(out.as_mut_ptr());
         parallel_chunks(w.rows, 32, |range| {
             let out_ptr = &out_ptr;
             for r in range {
                 // SAFETY: each output element is written by exactly one chunk.
-                unsafe { *out_ptr.0.add(r) = dot(w.row(r), x) };
+                unsafe { *out_ptr.0.add(r) = kern.dot(w.row(r), x) };
             }
         });
     } else {
         for (r, o) in out.iter_mut().enumerate() {
-            *o = dot(w.row(r), x);
+            *o = kern.dot(w.row(r), x);
         }
     }
 }
@@ -190,9 +172,10 @@ pub fn gemv_batch(
     const CB: usize = 256;
     let blocks = n.div_ceil(CB);
     let out_ptr = SendPtr(out.as_mut_ptr());
+    let kern = kernels::kernel();
     if blocks < 2 || m * k * n < (1 << 18) {
         // SAFETY: single caller owns the whole output.
-        unsafe { gemv_batch_stripe(m, k, n, a, b, out_ptr.0, alpha, beta, 0, n) };
+        unsafe { kern.gemv_batch_stripe(m, k, n, a, b, out_ptr.0, alpha, beta, 0, n) };
         return;
     }
     parallel_chunks(blocks, 1, |range| {
@@ -201,44 +184,9 @@ pub fn gemv_batch(
             let c0 = blk * CB;
             let c1 = (c0 + CB).min(n);
             // SAFETY: column stripes [c0, c1) are disjoint across workers.
-            unsafe { gemv_batch_stripe(m, k, n, a, b, out_ptr.0, alpha, beta, c0, c1) };
+            unsafe { kern.gemv_batch_stripe(m, k, n, a, b, out_ptr.0, alpha, beta, c0, c1) };
         }
     });
-}
-
-/// One column stripe of [`gemv_batch`].
-///
-/// # Safety
-/// The caller must guarantee exclusive access to columns `[c0, c1)` of the
-/// `m × n` output behind `out`, and that the stripe is in-bounds.
-#[allow(clippy::too_many_arguments)]
-unsafe fn gemv_batch_stripe(
-    m: usize,
-    k: usize,
-    n: usize,
-    a: &[f32],
-    b: &[f32],
-    out: *mut f32,
-    alpha: f32,
-    beta: f32,
-    c0: usize,
-    c1: usize,
-) {
-    let w = c1 - c0;
-    for r in 0..m {
-        let orow = std::slice::from_raw_parts_mut(out.add(r * n + c0), w);
-        scale(orow, beta);
-    }
-    for kk in 0..k {
-        let brow = &b[kk * n + c0..kk * n + c1];
-        for r in 0..m {
-            let av = alpha * a[r * k + kk];
-            if av != 0.0 {
-                let orow = std::slice::from_raw_parts_mut(out.add(r * n + c0), w);
-                axpy(av, brow, orow);
-            }
-        }
-    }
 }
 
 /// The seed's algorithm: one output row at a time, k-outer axpy over rows
@@ -256,6 +204,7 @@ pub fn gemm_rows_axpy(
     beta: f32,
 ) {
     let out_ptr = SendPtr(out.as_mut_ptr());
+    let kern = kernels::kernel();
     parallel_chunks(m, 8, |range| {
         let out_ptr = &out_ptr;
         for r in range {
@@ -267,18 +216,37 @@ pub fn gemm_rows_axpy(
             for kk in 0..k {
                 let av = alpha * arow[kk];
                 if av != 0.0 {
-                    axpy(av, &b[kk * n..(kk + 1) * n], orow);
+                    kern.axpy(av, &b[kk * n..(kk + 1) * n], orow);
                 }
             }
         }
     });
 }
 
-/// The packed, blocked kernel. Public so benches and property tests can pit
-/// it against the reference regardless of where the dispatcher's crossover
-/// sits.
+/// The packed, blocked kernel on the process-wide dispatched backend.
+/// Public so benches and property tests can pit it against the reference
+/// regardless of where the dispatcher's crossover sits.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_packed(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    alpha: f32,
+    beta: f32,
+) {
+    gemm_packed_with(kernels::kernel(), m, k, n, a, b, out, alpha, beta)
+}
+
+/// [`gemm_packed`] on an explicit backend — lets the `kernel_backend`
+/// microbench and the cross-backend parity tests pit implementations
+/// against each other inside one process (the global dispatch is frozen at
+/// first use).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_packed_with(
+    kern: &dyn Kernel,
     m: usize,
     k: usize,
     n: usize,
@@ -352,7 +320,8 @@ pub fn gemm_packed(
                     for q in 0..n_panels {
                         let col0 = q * NR;
                         let cols = NR.min(n - col0);
-                        let acc = microkernel(ap_panel, &bp[q * NR * kc..(q + 1) * NR * kc], kc);
+                        let mut acc = [[0.0f32; NR]; MR];
+                        kern.microkernel(ap_panel, &bp[q * NR * kc..(q + 1) * NR * kc], kc, &mut acc);
                         // SAFETY: this worker owns rows [i0, i0+mc).
                         unsafe {
                             store_tile(
@@ -402,25 +371,6 @@ fn pack_a_panel(
             panel[kk * MR + rows..(kk + 1) * MR].fill(0.0);
         }
     }
-}
-
-/// The `MR×NR` register tile: `acc[r][c] += ap[kk·MR+r] · bp[kk·NR+c]`.
-/// The `c` loop vectorizes to one FMA per accumulator row; `a` elements are
-/// broadcast. Operands come pre-packed so every load is sequential.
-#[inline(always)]
-fn microkernel(ap: &[f32], bp: &[f32], kc: usize) -> [[f32; NR]; MR] {
-    let mut acc = [[0.0f32; NR]; MR];
-    for kk in 0..kc {
-        let av = &ap[kk * MR..kk * MR + MR];
-        let bv = &bp[kk * NR..kk * NR + NR];
-        for r in 0..MR {
-            let ar = av[r];
-            for c in 0..NR {
-                acc[r][c] += ar * bv[c];
-            }
-        }
-    }
-    acc
 }
 
 /// Write an accumulator tile into `out` honoring alpha/beta and edge clips.

@@ -1,0 +1,225 @@
+//! x86_64 AVX2 + FMA backend.
+//!
+//! 8-lane (`__m256`) fused-multiply-add implementations of the four
+//! primitives. FMA rounds the multiply-add once (the scalar backend rounds
+//! twice), so results are *not* bitwise comparable to `generic` — the
+//! determinism contract is per-backend (see `kernels` module docs). Within
+//! this backend everything is deterministic: fixed lane order, fixed
+//! horizontal-reduction trees, and scalar tails that use `f32::mul_add` so
+//! the tail rounds exactly like the vector body.
+//!
+//! The vectorized exp is the classic Cephes polynomial (as in
+//! `rten-vecmath` / `avx_mathfun`): range-reduce by powers of two with a
+//! Cody–Waite split of ln 2, a degree-5 polynomial on the remainder, and a
+//! `2^n` rebuild via exponent-field bit surgery. Max relative error is
+//! ≈ 2 ulp — far inside the engine's f64-oracle test tolerances.
+//!
+//! Safety model: every `#[target_feature]` function in this module is only
+//! reachable through [`Avx2Kernel`], and the dispatcher (`kernels::kernel`,
+//! `for_name`, `available`) only hands out an `Avx2Kernel` after
+//! [`supported`] confirmed AVX2 and FMA at runtime.
+
+use std::arch::x86_64::*;
+
+use super::{Kernel, Tile, MR, NR};
+
+/// AVX2 + FMA backend; constructed by the dispatcher only when
+/// [`supported`] returns true.
+pub struct Avx2Kernel;
+
+/// Runtime CPU-feature check gating this backend.
+pub fn supported() -> bool {
+    std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+}
+
+impl Kernel for Avx2Kernel {
+    fn name(&self) -> &'static str {
+        "avx2"
+    }
+
+    fn axpy(&self, a: f32, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), out.len(), "axpy length mismatch");
+        // SAFETY: lengths checked; CPU support guaranteed by the dispatcher.
+        unsafe { axpy_fma(a, x, out) }
+    }
+
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len(), "dot length mismatch");
+        // SAFETY: lengths checked; CPU support guaranteed by the dispatcher.
+        unsafe { dot_fma(a, b) }
+    }
+
+    fn microkernel(&self, ap: &[f32], bp: &[f32], kc: usize, acc: &mut Tile) {
+        assert!(ap.len() >= kc * MR && bp.len() >= kc * NR, "panel too short");
+        // SAFETY: panel bounds checked; CPU support guaranteed by dispatcher.
+        unsafe { micro_fma(ap, bp, kc, acc) }
+    }
+
+    fn exp_minus_max_sum(&self, v: &mut [f32], max: f32) -> f64 {
+        // SAFETY: operates within `v`'s bounds; CPU support guaranteed.
+        unsafe { exp_minus_max_sum_fma(v, max) }
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy_fma(a: f32, x: &[f32], out: &mut [f32]) {
+    let n = x.len();
+    let xp = x.as_ptr();
+    let op = out.as_mut_ptr();
+    let av = _mm256_set1_ps(a);
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let x0 = _mm256_loadu_ps(xp.add(i));
+        let x1 = _mm256_loadu_ps(xp.add(i + 8));
+        let o0 = _mm256_loadu_ps(op.add(i));
+        let o1 = _mm256_loadu_ps(op.add(i + 8));
+        _mm256_storeu_ps(op.add(i), _mm256_fmadd_ps(av, x0, o0));
+        _mm256_storeu_ps(op.add(i + 8), _mm256_fmadd_ps(av, x1, o1));
+        i += 16;
+    }
+    while i + 8 <= n {
+        let x0 = _mm256_loadu_ps(xp.add(i));
+        let o0 = _mm256_loadu_ps(op.add(i));
+        _mm256_storeu_ps(op.add(i), _mm256_fmadd_ps(av, x0, o0));
+        i += 8;
+    }
+    while i < n {
+        // Scalar FMA so the tail rounds exactly like the vector body.
+        *op.add(i) = a.mul_add(*xp.add(i), *op.add(i));
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_fma(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+        acc1 =
+            _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i + 8)), _mm256_loadu_ps(bp.add(i + 8)), acc1);
+        i += 16;
+    }
+    while i + 8 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+        i += 8;
+    }
+    // Fixed reduction tree over the 8 lanes of acc0 + acc1.
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), _mm256_add_ps(acc0, acc1));
+    let mut s = ((lanes[0] + lanes[4]) + (lanes[1] + lanes[5]))
+        + ((lanes[2] + lanes[6]) + (lanes[3] + lanes[7]));
+    while i < n {
+        s = (*ap.add(i)).mul_add(*bp.add(i), s);
+        i += 1;
+    }
+    s
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn micro_fma(ap: &[f32], bp: &[f32], kc: usize, acc: &mut Tile) {
+    // One 8-lane register per output row: 8 accumulators + the broadcast
+    // `a` element + the `b` row vector fit comfortably in 16 ymm registers.
+    let a = ap.as_ptr();
+    let b = bp.as_ptr();
+    let mut rows = [_mm256_setzero_ps(); MR];
+    for kk in 0..kc {
+        let bv = _mm256_loadu_ps(b.add(kk * NR));
+        let ak = a.add(kk * MR);
+        for (r, row) in rows.iter_mut().enumerate() {
+            *row = _mm256_fmadd_ps(_mm256_set1_ps(*ak.add(r)), bv, *row);
+        }
+    }
+    for (r, row) in rows.iter().enumerate() {
+        let cur = _mm256_loadu_ps(acc[r].as_ptr());
+        _mm256_storeu_ps(acc[r].as_mut_ptr(), _mm256_add_ps(cur, *row));
+    }
+}
+
+// --- Cephes exp -----------------------------------------------------------
+
+const EXP_HI: f32 = 88.376_26;
+const EXP_LO: f32 = -88.376_26;
+const LOG2EF: f32 = 1.442_695;
+const C1: f32 = 0.693_359_4;
+const C2: f32 = -2.121_944_4e-4;
+const P0: f32 = 1.987_569_2e-4;
+const P1: f32 = 1.398_199_9e-3;
+const P2: f32 = 8.333_452e-3;
+const P3: f32 = 4.166_579_6e-2;
+const P4: f32 = 1.666_666_5e-1;
+const P5: f32 = 5.000_000_3e-1;
+
+/// 8-lane exp(x). Inlined into same-feature callers.
+#[inline]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn exp256(x: __m256) -> __m256 {
+    let x = _mm256_max_ps(_mm256_min_ps(x, _mm256_set1_ps(EXP_HI)), _mm256_set1_ps(EXP_LO));
+    // n = floor(x·log2(e) + 0.5)
+    let fx = _mm256_floor_ps(_mm256_fmadd_ps(x, _mm256_set1_ps(LOG2EF), _mm256_set1_ps(0.5)));
+    // r = x − n·ln2 (Cody–Waite two-constant split, both steps fused)
+    let x = _mm256_fnmadd_ps(fx, _mm256_set1_ps(C1), x);
+    let x = _mm256_fnmadd_ps(fx, _mm256_set1_ps(C2), x);
+    // degree-5 polynomial on r
+    let z = _mm256_mul_ps(x, x);
+    let mut y = _mm256_set1_ps(P0);
+    y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(P1));
+    y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(P2));
+    y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(P3));
+    y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(P4));
+    y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(P5));
+    y = _mm256_fmadd_ps(y, z, x);
+    y = _mm256_add_ps(y, _mm256_set1_ps(1.0));
+    // · 2^n via the exponent field
+    let n = _mm256_add_epi32(_mm256_cvttps_epi32(fx), _mm256_set1_epi32(0x7f));
+    let pow2n = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(n));
+    _mm256_mul_ps(y, pow2n)
+}
+
+/// Scalar mirror of [`exp256`] for the tail: same constants, `mul_add` for
+/// the same single-rounding FMA steps, so a tail element gets the same
+/// value it would in a vector lane.
+#[inline(always)]
+fn exp_cephes_scalar(x: f32) -> f32 {
+    let x = x.clamp(EXP_LO, EXP_HI);
+    let fx = x.mul_add(LOG2EF, 0.5).floor();
+    let x = (-fx).mul_add(C1, x);
+    let x = (-fx).mul_add(C2, x);
+    let z = x * x;
+    let mut y = P0;
+    y = y.mul_add(x, P1);
+    y = y.mul_add(x, P2);
+    y = y.mul_add(x, P3);
+    y = y.mul_add(x, P4);
+    y = y.mul_add(x, P5);
+    y = y.mul_add(z, x) + 1.0;
+    let n = ((fx as i32 + 0x7f) << 23) as u32;
+    y * f32::from_bits(n)
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn exp_minus_max_sum_fma(v: &mut [f32], max: f32) -> f64 {
+    let n = v.len();
+    let p = v.as_mut_ptr();
+    let maxv = _mm256_set1_ps(max);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let x = _mm256_sub_ps(_mm256_loadu_ps(p.add(i)), maxv);
+        _mm256_storeu_ps(p.add(i), exp256(x));
+        i += 8;
+    }
+    while i < n {
+        *p.add(i) = exp_cephes_scalar(*p.add(i) - max);
+        i += 1;
+    }
+    // f64 sum in ascending order (same order as the generic backend).
+    let mut sum = 0.0f64;
+    for &e in v.iter() {
+        sum += e as f64;
+    }
+    sum
+}

@@ -1,0 +1,90 @@
+//! Generic scalar backend — the seed's loops, extracted verbatim.
+//!
+//! The 8-wide unrolls are shaped so LLVM reliably autovectorizes them (SSE
+//! on a bare x86_64 target, wider if `-C target-cpu` allows), which is why
+//! this backend is "generic scalar", not "slow": it is the portable floor,
+//! the bench baseline, and the tolerance-bounded oracle for the SIMD
+//! backends. Forced via `RANA_KERNEL=generic`.
+
+use super::{Kernel, Tile, MR, NR};
+
+/// Always-supported scalar backend.
+pub struct GenericKernel;
+
+impl Kernel for GenericKernel {
+    fn name(&self) -> &'static str {
+        "generic"
+    }
+
+    fn axpy(&self, a: f32, x: &[f32], out: &mut [f32]) {
+        axpy_scalar(a, x, out)
+    }
+
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        dot_scalar(a, b)
+    }
+
+    fn microkernel(&self, ap: &[f32], bp: &[f32], kc: usize, acc: &mut Tile) {
+        for kk in 0..kc {
+            let av = &ap[kk * MR..kk * MR + MR];
+            let bv = &bp[kk * NR..kk * NR + NR];
+            for r in 0..MR {
+                let ar = av[r];
+                for c in 0..NR {
+                    acc[r][c] += ar * bv[c];
+                }
+            }
+        }
+    }
+
+    fn exp_minus_max_sum(&self, v: &mut [f32], max: f32) -> f64 {
+        let mut sum = 0.0f64;
+        for x in v.iter_mut() {
+            *x = (*x - max).exp();
+            sum += *x as f64;
+        }
+        sum
+    }
+}
+
+/// `out += a * x` — 8-wide unroll; LLVM lifts this to vector FMA when the
+/// target has it, but the *semantics* stay mul-then-add per element.
+#[inline(always)]
+pub(crate) fn axpy_scalar(a: f32, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    let n = x.len();
+    let chunks = n / 8;
+    let (xs, os) = (&x[..chunks * 8], &mut out[..chunks * 8]);
+    for (xc, oc) in xs.chunks_exact(8).zip(os.chunks_exact_mut(8)) {
+        oc[0] += a * xc[0];
+        oc[1] += a * xc[1];
+        oc[2] += a * xc[2];
+        oc[3] += a * xc[3];
+        oc[4] += a * xc[4];
+        oc[5] += a * xc[5];
+        oc[6] += a * xc[6];
+        oc[7] += a * xc[7];
+    }
+    for i in chunks * 8..n {
+        out[i] += a * x[i];
+    }
+}
+
+/// Dot product with an 8-accumulator unroll and a fixed reduction tree.
+#[inline(always)]
+pub(crate) fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = [0.0f32; 8];
+    for (ac, bc) in a[..chunks * 8].chunks_exact(8).zip(b[..chunks * 8].chunks_exact(8)) {
+        for j in 0..8 {
+            acc[j] += ac[j] * bc[j];
+        }
+    }
+    let mut s = (acc[0] + acc[4]) + (acc[1] + acc[5]) + (acc[2] + acc[6]) + (acc[3] + acc[7]);
+    for i in chunks * 8..n {
+        s += a[i] * b[i];
+    }
+    s
+}

@@ -1,0 +1,263 @@
+//! Runtime-dispatched compute kernels — the SIMD substrate of the tensor
+//! layer.
+//!
+//! Every hot loop in the engine (GEMM microkernel, single-row and batched
+//! GEMV, masked accumulation, the attention softmax) bottoms out in one of
+//! the primitives on the [`Kernel`] trait. Three implementations exist:
+//!
+//! * [`generic::GenericKernel`] — the seed's scalar loops, extracted. Always
+//!   available; relies on LLVM autovectorization. This is the baseline the
+//!   SIMD backends are benched against and the oracle they are property-
+//!   tested against (tolerance-bounded — FMA contraction legitimately
+//!   changes low-order bits).
+//! * `avx2::Avx2Kernel` (x86_64) — AVX2 + FMA intrinsics: 8-wide fused
+//!   multiply-add axpy/dot/microkernel and a Cephes-style vectorized exp.
+//! * `neon::NeonKernel` (aarch64) — the same shapes on 128-bit NEON.
+//!
+//! **Dispatch.** [`kernel()`] picks the backend once per process: the
+//! `RANA_KERNEL` environment variable (`generic` | `avx2` | `neon`) forces a
+//! backend (panicking if the host cannot run it), otherwise runtime CPU
+//! feature detection picks the widest supported one. The choice is cached in
+//! a `OnceLock`, so the per-call cost is one atomic load plus an indirect
+//! call — negligible against even a 32-float axpy.
+//!
+//! **Determinism contract (DESIGN.md §2e).** All of the engine's bitwise
+//! pins — paged-vs-dense attention, batched-vs-solo GEMV, spec-vs-plain
+//! greedy decode, budget-tier equivalence — hold *within* any chosen
+//! backend, because every code path reaches the arithmetic through the one
+//! dispatched kernel and each backend is itself deterministic (fixed
+//! accumulation order, fixed reduction trees, no data-dependent shortcuts
+//! beyond the shared `av != 0` skip). Outputs are *not* bitwise comparable
+//! **across** backends: FMA fuses the multiply-add rounding step and the
+//! vectorized exp is a polynomial, not libm. Cross-backend agreement is
+//! tolerance-bounded and enforced by `rust/tests/test_kernel_backends.rs`.
+
+pub mod generic;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+
+use std::sync::OnceLock;
+
+/// Microkernel tile height (rows of `A` per register tile).
+pub const MR: usize = 8;
+/// Microkernel tile width (cols of `B` per register tile).
+pub const NR: usize = 8;
+
+/// The GEMM register tile accumulated by [`Kernel::microkernel`].
+pub type Tile = [[f32; NR]; MR];
+
+/// `out = beta·out`, with `beta = 0` short-circuiting possible NaNs away.
+/// Shared by the GEMV entry points of every backend and by `tensor::gemm`.
+#[inline]
+pub(crate) fn scale(out: &mut [f32], beta: f32) {
+    if beta == 0.0 {
+        out.fill(0.0);
+    } else if beta != 1.0 {
+        for v in out.iter_mut() {
+            *v *= beta;
+        }
+    }
+}
+
+/// One backend of the compute substrate. The four required methods are the
+/// arch-specific primitives; the provided methods compose them into the
+/// GEMV / masked-accumulate / softmax entry points so that every call path
+/// of a given backend shares one accumulation order by construction.
+pub trait Kernel: Sync {
+    /// Backend name as reported in benches and forced via `RANA_KERNEL`.
+    fn name(&self) -> &'static str;
+
+    /// `out += a · x`. Requires `x.len() == out.len()`.
+    fn axpy(&self, a: f32, x: &[f32], out: &mut [f32]);
+
+    /// Dot product with a fixed (backend-specific) reduction tree.
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32;
+
+    /// `acc[r][c] += Σ_kk ap[kk·MR + r] · bp[kk·NR + c]` over packed panels
+    /// (`ap.len() ≥ kc·MR`, `bp.len() ≥ kc·NR`) — the GEMM register tile.
+    fn microkernel(&self, ap: &[f32], bp: &[f32], kc: usize, acc: &mut Tile);
+
+    /// `v[i] = exp(v[i] - max)` in place; returns `Σ v[i]` (post-exp)
+    /// accumulated in f64 ascending order — the softmax core.
+    fn exp_minus_max_sum(&self, v: &mut [f32], max: f32) -> f64;
+
+    /// Single-row GEMV: `out = alpha·(x @ b) + beta·out` for `x: 1×k`,
+    /// `b: k×n` row-major. k-outer axpy in ascending `k` with the `av != 0`
+    /// skip — the bit-stability anchor of the decode paths.
+    #[allow(clippy::too_many_arguments)]
+    fn gemv(&self, out: &mut [f32], x: &[f32], b: &[f32], k: usize, n: usize, alpha: f32, beta: f32) {
+        debug_assert_eq!(x.len(), k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(out.len(), n);
+        scale(out, beta);
+        for kk in 0..k {
+            let av = alpha * x[kk];
+            if av != 0.0 {
+                self.axpy(av, &b[kk * n..(kk + 1) * n], out);
+            }
+        }
+    }
+
+    /// One column stripe `[c0, c1)` of the shared-stream batched GEMV
+    /// (`a: m×k`, `b: k×n`, `out: m×n`): each `b` row is streamed once and
+    /// applied to every batch row before moving on. Ascending-`k` order and
+    /// the `av != 0` skip match [`Kernel::gemv`] element-for-element, so a
+    /// row's result is bitwise independent of its batch cohabitants.
+    /// Parallel orchestration (disjoint stripes) lives in `tensor::gemm`.
+    ///
+    /// # Safety
+    /// The caller must have exclusive access to columns `[c0, c1)` of the
+    /// `m × n` output behind `out`, and the stripe must be in-bounds
+    /// (`c1 ≤ n`, `a.len() = m·k`, `b.len() = k·n`).
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn gemv_batch_stripe(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        out: *mut f32,
+        alpha: f32,
+        beta: f32,
+        c0: usize,
+        c1: usize,
+    ) {
+        let w = c1 - c0;
+        for r in 0..m {
+            let orow = std::slice::from_raw_parts_mut(out.add(r * n + c0), w);
+            scale(orow, beta);
+        }
+        for kk in 0..k {
+            let brow = &b[kk * n + c0..kk * n + c1];
+            for r in 0..m {
+                let av = alpha * a[r * k + kk];
+                if av != 0.0 {
+                    let orow = std::slice::from_raw_parts_mut(out.add(r * n + c0), w);
+                    self.axpy(av, brow, orow);
+                }
+            }
+        }
+    }
+
+    /// Masked accumulate: `out += Σ_{i : mask[i]} c[i] · at[i·n .. (i+1)·n]`
+    /// with `at = Aᵀ` row-major. Rows with a false mask are genuinely
+    /// skipped (work ∝ active ranks); no coefficient-zero skip — that is
+    /// [`crate::tensor::masked_acc_gemv`]'s documented contract.
+    fn masked_acc(&self, at: &[f32], n: usize, mask: &[bool], c: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(mask.len(), c.len());
+        debug_assert_eq!(out.len(), n);
+        for (i, &m) in mask.iter().enumerate() {
+            if m {
+                self.axpy(c[i], &at[i * n..(i + 1) * n], out);
+            }
+        }
+    }
+
+    /// Numerically-stable in-place softmax: max-subtract, vectorized exp,
+    /// f64 sum, then an element-wise scale (order-independent per element).
+    fn softmax(&self, x: &mut [f32]) {
+        let max = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let sum = self.exp_minus_max_sum(x, max);
+        let inv = (1.0 / sum) as f32;
+        for v in x.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// The process-wide kernel backend. Selected on first call — `RANA_KERNEL`
+/// if set (panics on an unknown/unsupported name: a forced backend that
+/// silently fell back would invalidate what the force is for, i.e. testing
+/// a specific backend), otherwise the widest SIMD the CPU supports.
+pub fn kernel() -> &'static dyn Kernel {
+    static CHOICE: OnceLock<&'static dyn Kernel> = OnceLock::new();
+    *CHOICE.get_or_init(|| match std::env::var("RANA_KERNEL") {
+        Ok(name) => for_name(name.trim()).unwrap_or_else(|| {
+            panic!(
+                "RANA_KERNEL={name:?}: unknown or unsupported on this host \
+                 (available: {:?})",
+                available().iter().map(|k| k.name()).collect::<Vec<_>>()
+            )
+        }),
+        Err(_) => native(),
+    })
+}
+
+/// Name of the dispatched backend (bench/metrics reporting).
+pub fn backend_name() -> &'static str {
+    kernel().name()
+}
+
+/// Every backend this host can run, generic first. The cross-backend parity
+/// tests and the `kernel_backend` microbench iterate this list.
+pub fn available() -> Vec<&'static dyn Kernel> {
+    #[allow(unused_mut)]
+    let mut v: Vec<&'static dyn Kernel> = vec![&generic::GenericKernel];
+    #[cfg(target_arch = "x86_64")]
+    if avx2::supported() {
+        v.push(&avx2::Avx2Kernel);
+    }
+    #[cfg(target_arch = "aarch64")]
+    if neon::supported() {
+        v.push(&neon::NeonKernel);
+    }
+    v
+}
+
+/// Resolve a `RANA_KERNEL` name to a backend, `None` if unknown or not
+/// runnable on this host.
+pub fn for_name(name: &str) -> Option<&'static dyn Kernel> {
+    match name {
+        "generic" => Some(&generic::GenericKernel),
+        #[cfg(target_arch = "x86_64")]
+        "avx2" if avx2::supported() => Some(&avx2::Avx2Kernel),
+        #[cfg(target_arch = "aarch64")]
+        "neon" if neon::supported() => Some(&neon::NeonKernel),
+        _ => None,
+    }
+}
+
+/// CPU-feature-detected default backend.
+fn native() -> &'static dyn Kernel {
+    #[cfg(target_arch = "x86_64")]
+    if avx2::supported() {
+        return &avx2::Avx2Kernel;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if neon::supported() {
+        return &neon::NeonKernel;
+    }
+    &generic::GenericKernel
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_picks_an_available_backend() {
+        let chosen = kernel().name();
+        assert!(
+            available().iter().any(|k| k.name() == chosen),
+            "dispatched backend {chosen:?} not in available set"
+        );
+    }
+
+    #[test]
+    fn for_name_resolves_generic_and_rejects_unknown() {
+        assert_eq!(for_name("generic").unwrap().name(), "generic");
+        assert!(for_name("bogus").is_none());
+        assert!(for_name("").is_none());
+    }
+
+    #[test]
+    fn generic_is_always_first_available() {
+        let v = available();
+        assert_eq!(v[0].name(), "generic");
+    }
+}

@@ -1,0 +1,224 @@
+//! aarch64 NEON backend.
+//!
+//! Same shapes as the AVX2 backend mapped onto 128-bit `float32x4_t`
+//! registers: the 8-wide rows become register *pairs*, FMAs are `vfmaq_f32`
+//! (which, like x86 FMA, rounds the multiply-add once), and the vectorized
+//! exp is the identical Cephes polynomial with the same constants. The
+//! scalar tails mirror the vector math via `f32::mul_add`, so a tail element
+//! rounds exactly like a vector lane. As with AVX2, results are bitwise
+//! deterministic *within* this backend but only tolerance-close to the
+//! generic backend (see `kernels` module docs).
+//!
+//! Safety model: every `#[target_feature]` function here is reachable only
+//! through [`NeonKernel`], which the dispatcher hands out only after
+//! [`supported`] confirmed NEON at runtime.
+
+use std::arch::aarch64::*;
+
+use super::{Kernel, Tile, MR, NR};
+
+/// NEON backend; constructed by the dispatcher only when [`supported`]
+/// returns true.
+pub struct NeonKernel;
+
+/// Runtime CPU-feature check gating this backend (NEON is mandatory on
+/// AArch64, but we gate explicitly to keep the dispatcher uniform).
+pub fn supported() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+impl Kernel for NeonKernel {
+    fn name(&self) -> &'static str {
+        "neon"
+    }
+
+    fn axpy(&self, a: f32, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), out.len(), "axpy length mismatch");
+        // SAFETY: lengths checked; CPU support guaranteed by the dispatcher.
+        unsafe { axpy_neon(a, x, out) }
+    }
+
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len(), "dot length mismatch");
+        // SAFETY: lengths checked; CPU support guaranteed by the dispatcher.
+        unsafe { dot_neon(a, b) }
+    }
+
+    fn microkernel(&self, ap: &[f32], bp: &[f32], kc: usize, acc: &mut Tile) {
+        assert!(ap.len() >= kc * MR && bp.len() >= kc * NR, "panel too short");
+        // SAFETY: panel bounds checked; CPU support guaranteed by dispatcher.
+        unsafe { micro_neon(ap, bp, kc, acc) }
+    }
+
+    fn exp_minus_max_sum(&self, v: &mut [f32], max: f32) -> f64 {
+        // SAFETY: operates within `v`'s bounds; CPU support guaranteed.
+        unsafe { exp_minus_max_sum_neon(v, max) }
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn axpy_neon(a: f32, x: &[f32], out: &mut [f32]) {
+    let n = x.len();
+    let xp = x.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let x0 = vld1q_f32(xp.add(i));
+        let x1 = vld1q_f32(xp.add(i + 4));
+        let o0 = vld1q_f32(op.add(i));
+        let o1 = vld1q_f32(op.add(i + 4));
+        vst1q_f32(op.add(i), vfmaq_n_f32(o0, x0, a));
+        vst1q_f32(op.add(i + 4), vfmaq_n_f32(o1, x1, a));
+        i += 8;
+    }
+    while i + 4 <= n {
+        let x0 = vld1q_f32(xp.add(i));
+        let o0 = vld1q_f32(op.add(i));
+        vst1q_f32(op.add(i), vfmaq_n_f32(o0, x0, a));
+        i += 4;
+    }
+    while i < n {
+        // Scalar FMA so the tail rounds exactly like the vector body.
+        *op.add(i) = a.mul_add(*xp.add(i), *op.add(i));
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(ap.add(i)), vld1q_f32(bp.add(i)));
+        acc1 = vfmaq_f32(acc1, vld1q_f32(ap.add(i + 4)), vld1q_f32(bp.add(i + 4)));
+        i += 8;
+    }
+    while i + 4 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(ap.add(i)), vld1q_f32(bp.add(i)));
+        i += 4;
+    }
+    // Fixed reduction tree over the 8 lanes of (acc0, acc1).
+    let mut lanes = [0.0f32; 8];
+    vst1q_f32(lanes.as_mut_ptr(), acc0);
+    vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+    let mut s = ((lanes[0] + lanes[4]) + (lanes[1] + lanes[5]))
+        + ((lanes[2] + lanes[6]) + (lanes[3] + lanes[7]));
+    while i < n {
+        s = (*ap.add(i)).mul_add(*bp.add(i), s);
+        i += 1;
+    }
+    s
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn micro_neon(ap: &[f32], bp: &[f32], kc: usize, acc: &mut Tile) {
+    // Two q-registers per output row: 16 accumulators + the streamed `b`
+    // pair fit easily in AArch64's 32 vector registers.
+    let a = ap.as_ptr();
+    let b = bp.as_ptr();
+    let mut lo = [vdupq_n_f32(0.0); MR];
+    let mut hi = [vdupq_n_f32(0.0); MR];
+    for kk in 0..kc {
+        let b0 = vld1q_f32(b.add(kk * NR));
+        let b1 = vld1q_f32(b.add(kk * NR + 4));
+        let ak = a.add(kk * MR);
+        for r in 0..MR {
+            let ar = *ak.add(r);
+            lo[r] = vfmaq_n_f32(lo[r], b0, ar);
+            hi[r] = vfmaq_n_f32(hi[r], b1, ar);
+        }
+    }
+    for r in 0..MR {
+        let c0 = vld1q_f32(acc[r].as_ptr());
+        let c1 = vld1q_f32(acc[r].as_ptr().add(4));
+        vst1q_f32(acc[r].as_mut_ptr(), vaddq_f32(c0, lo[r]));
+        vst1q_f32(acc[r].as_mut_ptr().add(4), vaddq_f32(c1, hi[r]));
+    }
+}
+
+// --- Cephes exp (same constants as the AVX2 backend) ----------------------
+
+const EXP_HI: f32 = 88.376_26;
+const EXP_LO: f32 = -88.376_26;
+const LOG2EF: f32 = 1.442_695;
+const C1: f32 = 0.693_359_4;
+const C2: f32 = -2.121_944_4e-4;
+const P0: f32 = 1.987_569_2e-4;
+const P1: f32 = 1.398_199_9e-3;
+const P2: f32 = 8.333_452e-3;
+const P3: f32 = 4.166_579_6e-2;
+const P4: f32 = 1.666_666_5e-1;
+const P5: f32 = 5.000_000_3e-1;
+
+/// 4-lane exp(x). Inlined into same-feature callers.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn exp128(x: float32x4_t) -> float32x4_t {
+    let x = vmaxq_f32(vminq_f32(x, vdupq_n_f32(EXP_HI)), vdupq_n_f32(EXP_LO));
+    // n = floor(x·log2(e) + 0.5)
+    let fx = vrndmq_f32(vfmaq_n_f32(vdupq_n_f32(0.5), x, LOG2EF));
+    // r = x − n·ln2 (Cody–Waite two-constant split, both steps fused)
+    let x = vfmsq_f32(x, fx, vdupq_n_f32(C1));
+    let x = vfmsq_f32(x, fx, vdupq_n_f32(C2));
+    // degree-5 polynomial on r
+    let z = vmulq_f32(x, x);
+    let mut y = vdupq_n_f32(P0);
+    y = vfmaq_f32(vdupq_n_f32(P1), y, x);
+    y = vfmaq_f32(vdupq_n_f32(P2), y, x);
+    y = vfmaq_f32(vdupq_n_f32(P3), y, x);
+    y = vfmaq_f32(vdupq_n_f32(P4), y, x);
+    y = vfmaq_f32(vdupq_n_f32(P5), y, x);
+    y = vfmaq_f32(x, y, z);
+    y = vaddq_f32(y, vdupq_n_f32(1.0));
+    // · 2^n via the exponent field
+    let n = vaddq_s32(vcvtq_s32_f32(fx), vdupq_n_s32(0x7f));
+    let pow2n = vreinterpretq_f32_s32(vshlq_n_s32::<23>(n));
+    vmulq_f32(y, pow2n)
+}
+
+/// Scalar mirror of [`exp128`] for the tail: same constants, `mul_add` for
+/// the same single-rounding FMA steps.
+#[inline(always)]
+fn exp_cephes_scalar(x: f32) -> f32 {
+    let x = x.clamp(EXP_LO, EXP_HI);
+    let fx = x.mul_add(LOG2EF, 0.5).floor();
+    let x = (-fx).mul_add(C1, x);
+    let x = (-fx).mul_add(C2, x);
+    let z = x * x;
+    let mut y = P0;
+    y = y.mul_add(x, P1);
+    y = y.mul_add(x, P2);
+    y = y.mul_add(x, P3);
+    y = y.mul_add(x, P4);
+    y = y.mul_add(x, P5);
+    y = y.mul_add(z, x) + 1.0;
+    let n = ((fx as i32 + 0x7f) << 23) as u32;
+    y * f32::from_bits(n)
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn exp_minus_max_sum_neon(v: &mut [f32], max: f32) -> f64 {
+    let n = v.len();
+    let p = v.as_mut_ptr();
+    let maxv = vdupq_n_f32(max);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let x = vsubq_f32(vld1q_f32(p.add(i)), maxv);
+        vst1q_f32(p.add(i), exp128(x));
+        i += 4;
+    }
+    while i < n {
+        *p.add(i) = exp_cephes_scalar(*p.add(i) - max);
+        i += 1;
+    }
+    // f64 sum in ascending order (same order as the generic backend).
+    let mut sum = 0.0f64;
+    for &e in v.iter() {
+        sum += e as f64;
+    }
+    sum
+}

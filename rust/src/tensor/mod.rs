@@ -15,6 +15,7 @@
 
 pub mod attention;
 pub mod gemm;
+pub mod kernels;
 pub mod linalg;
 
 pub use attention::{attention_over_cache, attention_over_paged};
@@ -179,46 +180,17 @@ impl Mat {
     }
 }
 
-/// `out += a * x` — the auto-vectorized hot loop of the whole engine.
-#[inline(always)]
+/// `out += a * x` — the hot loop of the whole engine, dispatched to the
+/// process-wide SIMD backend ([`kernels::kernel`]).
+#[inline]
 pub fn axpy(a: f32, x: &[f32], out: &mut [f32]) {
-    debug_assert_eq!(x.len(), out.len());
-    // 8-wide unroll: LLVM reliably lifts this to AVX2 vfmadd.
-    let n = x.len();
-    let chunks = n / 8;
-    let (xs, os) = (&x[..chunks * 8], &mut out[..chunks * 8]);
-    for (xc, oc) in xs.chunks_exact(8).zip(os.chunks_exact_mut(8)) {
-        oc[0] += a * xc[0];
-        oc[1] += a * xc[1];
-        oc[2] += a * xc[2];
-        oc[3] += a * xc[3];
-        oc[4] += a * xc[4];
-        oc[5] += a * xc[5];
-        oc[6] += a * xc[6];
-        oc[7] += a * xc[7];
-    }
-    for i in chunks * 8..n {
-        out[i] += a * x[i];
-    }
+    kernels::kernel().axpy(a, x, out)
 }
 
-/// Dot product with 8-wide unroll.
-#[inline(always)]
+/// Dot product, dispatched to the process-wide SIMD backend.
+#[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 8;
-    let mut acc = [0.0f32; 8];
-    for (ac, bc) in a[..chunks * 8].chunks_exact(8).zip(b[..chunks * 8].chunks_exact(8)) {
-        for j in 0..8 {
-            acc[j] += ac[j] * bc[j];
-        }
-    }
-    let mut s = (acc[0] + acc[4]) + (acc[1] + acc[5]) + (acc[2] + acc[6]) + (acc[3] + acc[7]);
-    for i in chunks * 8..n {
-        s += a[i] * b[i];
-    }
-    s
+    kernels::kernel().dot(a, b)
 }
 
 // ---------------------------------------------------------------------------
@@ -238,19 +210,16 @@ pub fn masked_acc_gemv(at: &Mat, mask: &[bool], c: &[f32], out: &mut [f32]) {
         gemm::gemv_into(out, c, at, 1.0, 1.0);
         return;
     }
-    for i in 0..at.rows {
-        if mask[i] {
-            axpy(c[i], at.row(i), out);
-        }
-    }
+    kernels::kernel().masked_acc(&at.data, at.cols, mask, c, out);
 }
 
 /// Same contraction driven by an explicit active-index list (pre-gathered
 /// masks amortize the branch when one mask feeds several products).
 pub fn indexed_acc_gemv(at: &Mat, active: &[usize], c: &[f32], out: &mut [f32]) {
     debug_assert_eq!(at.cols, out.len());
+    let kern = kernels::kernel();
     for &i in active {
-        axpy(c[i], at.row(i), out);
+        kern.axpy(c[i], at.row(i), out);
     }
 }
 
@@ -260,8 +229,9 @@ pub fn indexed_acc_gemv(at: &Mat, active: &[usize], c: &[f32], out: &mut [f32]) 
 pub fn masked_rows_gemv(w: &Mat, mask: &[bool], x: &[f32], out: &mut [f32]) {
     debug_assert_eq!(w.rows, mask.len());
     debug_assert_eq!(w.rows, out.len());
+    let kern = kernels::kernel();
     for i in 0..w.rows {
-        out[i] = if mask[i] { dot(w.row(i), x) } else { 0.0 };
+        out[i] = if mask[i] { kern.dot(w.row(i), x) } else { 0.0 };
     }
 }
 
@@ -296,13 +266,14 @@ pub fn masked_acc_gemm(at: &Mat, mask: &[bool], c: &Mat, out: &mut Mat) {
         gemm::gemv_batch(c.rows, c.cols, at.cols, &mc.data, &at.data, &mut out.data, 1.0, 1.0);
         return;
     }
+    let kern = kernels::kernel();
     for r in 0..c.rows {
         let rm = &mask[r * c.cols..(r + 1) * c.cols];
         let crow = c.row(r);
         let orow = out.row_mut(r);
         for (i, (&m, &cv)) in rm.iter().zip(crow).enumerate() {
             if m && cv != 0.0 {
-                axpy(cv, at.row(i), orow);
+                kern.axpy(cv, at.row(i), orow);
             }
         }
     }

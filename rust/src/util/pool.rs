@@ -1,119 +1,285 @@
-//! Thread pool + data-parallel helpers.
+//! Persistent work-stealing thread pool + data-parallel helpers.
 //!
-//! There is no tokio/rayon in this environment; the coordinator's event loop
-//! and the tensor layer's parallel GEMM both run on this small, dependency-
-//! free pool built from `std::thread` and channels.
+//! There is no tokio/rayon in this environment; the tensor layer's parallel
+//! GEMM and the engine's fan-outs run on this small, dependency-free pool
+//! built from `std::thread` + mutex/condvar.
+//!
+//! The original implementation forked fresh scoped threads on every
+//! [`parallel_chunks`] call — fine for second-long prefills, ruinous for
+//! per-token decode work (thread spawn ≈ 10–50 µs against ~20 µs of dots).
+//! Now a **lazily initialized persistent pool** serves every call:
+//!
+//! * One deque per worker. A parallel region pushes *tickets* (an
+//!   `Arc<Task>` each) round-robin across the deques; idle workers pop
+//!   their own deque front and **steal** from other deques' backs.
+//! * A ticket is a claim check, not a chunk: the actual index ranges are
+//!   handed out by an atomic cursor inside the `Task`, so load balance does
+//!   not depend on which workers wake up (and a stale ticket for a finished
+//!   task is a cheap no-op).
+//! * The **caller participates**: after submitting tickets it chews chunks
+//!   itself, so a region never waits on a sleeping worker to make progress,
+//!   and `RANA_THREADS=1` (or a single-core box) never touches the pool.
+//! * Workers run with the nested-parallelism guard set permanently: a
+//!   parallel region entered *from* a worker degrades to serial inline
+//!   execution instead of oversubscribing (same contract as before — a 15×
+//!   sys-time win on the evaluation harness, see EXPERIMENTS.md §Perf).
+//!
+//! Chunk→index mapping is identical to the old scoped-thread version, and
+//! every index is still executed exactly once, so bitwise results of
+//! parallel regions are unchanged (the split points themselves never
+//! depended on thread identity).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::collections::VecDeque;
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
-
-/// Fixed-size thread pool with a shared work queue.
-pub struct ThreadPool {
-    tx: Option<mpsc::Sender<Job>>,
-    workers: Vec<thread::JoinHandle<()>>,
-    size: usize,
+/// Number of worker threads for data-parallel tensor work. `RANA_THREADS`
+/// overrides (any value ≥ 1, **not** capped); otherwise the machine's
+/// available parallelism capped at a default of 16. Resolved once per
+/// process — the persistent pool is sized from it.
+pub fn default_parallelism() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        parallelism_from(std::env::var("RANA_THREADS").ok().as_deref(), avail)
+    })
 }
 
-impl ThreadPool {
-    pub fn new(size: usize) -> Self {
-        let size = size.max(1);
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let workers = (0..size)
-            .map(|i| {
-                let rx = Arc::clone(&rx);
-                thread::Builder::new()
-                    .name(format!("rana-pool-{i}"))
-                    .spawn(move || loop {
-                        let job = {
-                            let guard = rx.lock().unwrap();
-                            guard.recv()
-                        };
-                        match job {
-                            Ok(job) => job(),
-                            Err(_) => break, // channel closed → shut down
-                        }
-                    })
-                    .expect("spawn pool worker")
-            })
-            .collect();
-        Self { tx: Some(tx), workers, size }
-    }
-
-    pub fn size(&self) -> usize {
-        self.size
-    }
-
-    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx
-            .as_ref()
-            .expect("pool already shut down")
-            .send(Box::new(f))
-            .expect("pool worker hung up");
+/// Pure resolution logic behind [`default_parallelism`] (unit-testable):
+/// a valid `RANA_THREADS` wins uncapped; absent or invalid values fall back
+/// to `available.min(16)` — 16 is a *default*, not a ceiling.
+fn parallelism_from(env: Option<&str>, available: usize) -> usize {
+    match env {
+        Some(s) => match s.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                eprintln!("RANA_THREADS={s:?}: expected an integer >= 1, using default");
+                available.min(16)
+            }
+        },
+        None => available.min(16),
     }
 }
 
-impl Drop for ThreadPool {
-    fn drop(&mut self) {
-        drop(self.tx.take());
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+thread_local! {
+    /// Set permanently on pool workers (and on the caller while it
+    /// participates in a region): nested [`parallel_chunks`] calls run
+    /// serially instead of oversubscribing the machine.
+    static IN_PARALLEL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Type-erased pointer to a caller's `Fn(Range<usize>) + Sync` closure.
+///
+/// The pointee lives on the caller's stack; validity is guaranteed by the
+/// completion protocol (see [`run_task`]): the caller does not return from
+/// `parallel_chunks` until `pending` hits zero, and no worker dereferences
+/// the pointer except between a successful chunk grab and the matching
+/// `pending` decrement.
+struct FnPtr(*const (dyn Fn(Range<usize>) + Sync));
+unsafe impl Send for FnPtr {}
+unsafe impl Sync for FnPtr {}
+
+/// One parallel region in flight. Tickets in worker deques hold `Arc`s to
+/// this; the caller holds one too and blocks on `done`.
+struct Task {
+    f: FnPtr,
+    n: usize,
+    chunk: usize,
+    /// Next index to hand out; chunks are `[cursor, cursor+chunk)` clipped
+    /// to `n` — the same mapping the scoped-thread version used.
+    cursor: AtomicUsize,
+    /// Chunks not yet completed. The last decrement flips `done`.
+    pending: AtomicUsize,
+    /// Any chunk panicked (the panic itself is swallowed by `catch_unwind`
+    /// so sibling workers and the pool survive; the caller re-raises).
+    panicked: AtomicBool,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+/// Chew chunks off `task` until the cursor runs out. Shared verbatim by
+/// workers and the submitting caller so both execute identical per-chunk
+/// logic. Panics inside a chunk are caught: the `pending` count must reach
+/// zero even on failure, or the caller would deadlock.
+fn run_task(task: &Task) {
+    loop {
+        let start = task.cursor.fetch_add(task.chunk, Ordering::Relaxed);
+        if start >= task.n {
+            return;
+        }
+        let end = (start + task.chunk).min(task.n);
+        // SAFETY: we grabbed an unclaimed chunk, so our `pending` decrement
+        // has not happened yet and `pending > 0`; the caller blocks until
+        // `pending == 0`, so the closure behind the pointer is still alive.
+        let f = unsafe { &*task.f.0 };
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(start..end))).is_err() {
+            task.panicked.store(true, Ordering::Relaxed);
+        }
+        // AcqRel: makes this chunk's writes visible to whoever observes the
+        // final decrement (the caller, via the `done` mutex).
+        if task.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let mut done = task.done.lock().unwrap();
+            *done = true;
+            task.done_cv.notify_all();
         }
     }
 }
 
-/// Number of worker threads to use for data-parallel tensor work.
-pub fn default_parallelism() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-        .min(16)
+struct Shared {
+    /// One ticket deque per worker: owner pops the front, thieves pop the
+    /// back.
+    deques: Vec<Mutex<VecDeque<Arc<Task>>>>,
+    /// Wakeup generation counter; bumped under this mutex on every submit
+    /// so a worker that re-checked empty deques before the push still sees
+    /// the generation change and never sleeps through work.
+    sleep: Mutex<u64>,
+    wakeup: Condvar,
+    /// Round-robin start offset so consecutive small regions spread their
+    /// tickets over different workers.
+    rr: AtomicUsize,
 }
 
-thread_local! {
-    /// Set inside `parallel_chunks` workers: nested calls run serially
-    /// instead of oversubscribing the machine (a 15× sys-time win on the
-    /// evaluation harness — see EXPERIMENTS.md §Perf).
-    static IN_PARALLEL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+impl Shared {
+    fn find_task(&self, idx: usize) -> Option<Arc<Task>> {
+        if let Some(t) = self.deques[idx].lock().unwrap().pop_front() {
+            return Some(t);
+        }
+        let k = self.deques.len();
+        for off in 1..k {
+            if let Some(t) = self.deques[(idx + off) % k].lock().unwrap().pop_back() {
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    fn any_nonempty(&self) -> bool {
+        self.deques.iter().any(|d| !d.lock().unwrap().is_empty())
+    }
 }
 
-/// Run `f(i)` for every `i in 0..n`, splitting into contiguous chunks across
-/// scoped threads. `f` receives the index range it owns. This avoids the
-/// `'static` bound of the pool and is the workhorse of the tensor layer.
-/// Nested invocations (a parallel region inside a parallel worker) degrade
-/// gracefully to serial execution.
+fn worker_loop(shared: Arc<Shared>, idx: usize) {
+    // Workers only ever run parallel-region bodies: nested regions inside
+    // them must degrade to serial, so the guard is set once, permanently.
+    IN_PARALLEL.with(|g| g.set(true));
+    loop {
+        if let Some(task) = shared.find_task(idx) {
+            run_task(&task);
+            continue;
+        }
+        let gen = shared.sleep.lock().unwrap();
+        // Re-check under the sleep lock: a submit that pushed after our
+        // scan above must either be visible here or bump the generation
+        // after we release the lock inside `wait_while`.
+        if shared.any_nonempty() {
+            continue;
+        }
+        let cur = *gen;
+        drop(shared.wakeup.wait_while(gen, |g| *g == cur).unwrap());
+    }
+}
+
+/// The process-wide persistent pool.
+struct Pool {
+    shared: Arc<Shared>,
+}
+
+impl Pool {
+    fn new(workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            deques: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            sleep: Mutex::new(0),
+            wakeup: Condvar::new(),
+            rr: AtomicUsize::new(0),
+        });
+        for i in 0..workers {
+            let shared = Arc::clone(&shared);
+            thread::Builder::new()
+                .name(format!("rana-worker-{i}"))
+                .spawn(move || worker_loop(shared, i))
+                .expect("spawn pool worker");
+        }
+        Self { shared }
+    }
+
+    /// Caller thread participates in every region, so the pool holds one
+    /// worker fewer than the target parallelism. Initialized on the first
+    /// parallel region large enough to split; a serial-only process (or
+    /// `RANA_THREADS=1`) never spawns it.
+    fn global() -> &'static Pool {
+        static POOL: OnceLock<Pool> = OnceLock::new();
+        POOL.get_or_init(|| Pool::new(default_parallelism().saturating_sub(1).max(1)))
+    }
+
+    /// Push up to `tickets` claim checks for `task`, round-robin across the
+    /// worker deques, then wake everyone. More tickets than workers is
+    /// pointless (a ticket is not a chunk — any worker drains the whole
+    /// cursor), so the count is clamped.
+    fn submit(&self, task: &Arc<Task>, tickets: usize) {
+        let k = self.shared.deques.len();
+        let tickets = tickets.min(k);
+        let start = self.shared.rr.fetch_add(1, Ordering::Relaxed);
+        for t in 0..tickets {
+            self.shared.deques[(start + t) % k].lock().unwrap().push_back(Arc::clone(task));
+        }
+        let mut gen = self.shared.sleep.lock().unwrap();
+        *gen = gen.wrapping_add(1);
+        self.shared.wakeup.notify_all();
+    }
+}
+
+/// Run `f` over every index in `0..n`, splitting into contiguous chunks
+/// across the persistent pool. `f` receives the index range it owns; every
+/// index is executed exactly once. Nested invocations (a parallel region
+/// inside a pool worker) degrade gracefully to serial execution, as do
+/// regions too small to split.
+///
+/// If any chunk panics, the remaining chunks still run (the pool and
+/// sibling regions are unaffected) and the panic is re-raised here once the
+/// region completes.
 pub fn parallel_chunks<F>(n: usize, min_chunk: usize, f: F)
 where
-    F: Fn(std::ops::Range<usize>) + Sync,
+    F: Fn(Range<usize>) + Sync,
 {
     let threads = default_parallelism();
     if n == 0 {
         return;
     }
     let chunk = (n.div_ceil(threads)).max(min_chunk.max(1));
-    if chunk >= n || IN_PARALLEL.with(|g| g.get()) {
+    if chunk >= n || threads == 1 || IN_PARALLEL.with(|g| g.get()) {
         f(0..n);
         return;
     }
-    let next = AtomicUsize::new(0);
-    thread::scope(|scope| {
-        for _ in 0..threads.min(n.div_ceil(chunk)) {
-            scope.spawn(|| {
-                IN_PARALLEL.with(|g| g.set(true));
-                loop {
-                    let start = next.fetch_add(chunk, Ordering::Relaxed);
-                    if start >= n {
-                        break;
-                    }
-                    let end = (start + chunk).min(n);
-                    f(start..end);
-                }
-            });
-        }
+    let n_chunks = n.div_ceil(chunk);
+    // Erase the closure's stack lifetime: the completion protocol (see
+    // `run_task` / `Task`) guarantees no dereference outlives this frame.
+    let f_ref: &(dyn Fn(Range<usize>) + Sync) = &f;
+    let task = Arc::new(Task {
+        f: FnPtr(f_ref as *const (dyn Fn(Range<usize>) + Sync)),
+        n,
+        chunk,
+        cursor: AtomicUsize::new(0),
+        pending: AtomicUsize::new(n_chunks),
+        panicked: AtomicBool::new(false),
+        done: Mutex::new(false),
+        done_cv: Condvar::new(),
     });
+    // The caller takes one share of the work itself, so it only needs
+    // n_chunks - 1 helpers at most.
+    Pool::global().submit(&task, n_chunks - 1);
+    IN_PARALLEL.with(|g| g.set(true));
+    run_task(&task);
+    IN_PARALLEL.with(|g| g.set(false));
+    let mut done = task.done.lock().unwrap();
+    while !*done {
+        done = task.done_cv.wait(done).unwrap();
+    }
+    drop(done);
+    if task.panicked.load(Ordering::Relaxed) {
+        panic!("parallel_chunks: worker panicked");
+    }
 }
 
 /// Map `f` over `0..n` in parallel, collecting results in order.
@@ -141,34 +307,99 @@ mod tests {
     use std::sync::atomic::AtomicU64;
 
     #[test]
-    fn pool_runs_all_jobs() {
-        let pool = ThreadPool::new(4);
-        let counter = Arc::new(AtomicU64::new(0));
-        let (tx, rx) = mpsc::channel();
-        for _ in 0..100 {
-            let c = Arc::clone(&counter);
-            let tx = tx.clone();
-            pool.execute(move || {
-                c.fetch_add(1, Ordering::SeqCst);
-                tx.send(()).unwrap();
-            });
-        }
-        for _ in 0..100 {
-            rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
-        }
-        assert_eq!(counter.load(Ordering::SeqCst), 100);
-    }
-
-    #[test]
-    fn pool_drop_joins_workers() {
-        let pool = ThreadPool::new(2);
-        pool.execute(|| {});
-        drop(pool); // must not hang
+    fn parallelism_from_env_override() {
+        // Default: available capped at 16.
+        assert_eq!(parallelism_from(None, 8), 8);
+        assert_eq!(parallelism_from(None, 64), 16);
+        // RANA_THREADS wins and is NOT capped at 16.
+        assert_eq!(parallelism_from(Some("32"), 8), 32);
+        assert_eq!(parallelism_from(Some("1"), 64), 1);
+        assert_eq!(parallelism_from(Some(" 4 "), 64), 4);
+        // Invalid values fall back to the default.
+        assert_eq!(parallelism_from(Some("0"), 64), 16);
+        assert_eq!(parallelism_from(Some("lots"), 8), 8);
+        assert_eq!(parallelism_from(Some(""), 8), 8);
     }
 
     #[test]
     fn parallel_chunks_covers_every_index_once() {
         let n = 10_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_chunks(n, 8, |range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_chunks_covers_under_concurrent_sessions() {
+        // Several independent std threads each drive their own regions
+        // through the one shared pool at the same time; every index of
+        // every region must still be hit exactly once.
+        thread::scope(|scope| {
+            for t in 0..4 {
+                scope.spawn(move || {
+                    for round in 0..20 {
+                        let n = 500 + 37 * t + round;
+                        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+                        parallel_chunks(n, 4, |range| {
+                            for i in range {
+                                hits[i].fetch_add(1, Ordering::Relaxed);
+                            }
+                        });
+                        assert!(
+                            hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                            "session {t} round {round}"
+                        );
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn nested_parallel_chunks_cover_exactly_once() {
+        let n = 64;
+        let m = 128;
+        let hits: Vec<AtomicU64> = (0..n * m).map(|_| AtomicU64::new(0)).collect();
+        parallel_chunks(n, 1, |outer| {
+            for i in outer {
+                // Inner region: serial inline on workers, but must still
+                // cover its indices exactly once.
+                parallel_chunks(m, 1, |inner| {
+                    for j in inner {
+                        hits[i * m + j].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "worker panicked")]
+    fn parallel_chunks_propagates_worker_panic() {
+        parallel_chunks(1024, 1, |range| {
+            if range.contains(&517) {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_region() {
+        let r = std::panic::catch_unwind(|| {
+            parallel_chunks(1024, 1, |range| {
+                if range.start % 3 == 0 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(r.is_err(), "panic must propagate to the caller");
+        // The pool must still serve subsequent regions correctly.
+        let n = 4096;
         let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
         parallel_chunks(n, 8, |range| {
             for i in range {

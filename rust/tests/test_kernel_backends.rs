@@ -1,0 +1,324 @@
+//! Cross-backend parity tests for the `tensor::kernels` seam.
+//!
+//! Every backend the host can run (`kernels::available()` — generic always,
+//! plus AVX2 and/or NEON when the CPU supports them) is checked three ways:
+//!
+//! 1. **Against an f64 oracle** — each primitive (axpy, dot, microkernel,
+//!    gemv, masked-accumulate, softmax) must be tolerance-close to an
+//!    f64-accumulating reference over ragged/empty property-swept shapes.
+//! 2. **Against the generic backend** — tolerance-bounded, *not* bitwise:
+//!    FMA contraction and the polynomial exp legitimately change low-order
+//!    bits (the determinism contract is per-backend; see DESIGN.md §2e).
+//! 3. **Within itself, bitwise** — the batched GEMV stripe must reproduce
+//!    the single-row GEMV exactly, per backend, because batched decode's
+//!    batch-size-independence pin rests on it.
+
+use rana::tensor::gemm::gemm_packed_with;
+use rana::tensor::kernels::{self, Kernel, MR, NR};
+use rana::util::prop::{check, close_slices, Config};
+use rana::util::rng::Xoshiro256;
+
+fn rand_vec(n: usize, rng: &mut Xoshiro256) -> Vec<f32> {
+    (0..n).map(|_| rng.gaussian()).collect()
+}
+
+/// f64 reference: `out0 + a·x`.
+fn oracle_axpy(a: f32, x: &[f32], out0: &[f32]) -> Vec<f32> {
+    x.iter()
+        .zip(out0)
+        .map(|(&xv, &ov)| (ov as f64 + a as f64 * xv as f64) as f32)
+        .collect()
+}
+
+/// f64 reference dot.
+fn oracle_dot(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+#[test]
+fn axpy_matches_f64_oracle_on_every_backend() {
+    for kern in kernels::available() {
+        check(
+            &format!("axpy[{}]==oracle", kern.name()),
+            Config { cases: 48, max_size: 80, ..Default::default() },
+            |rng, size| {
+                // Ragged lengths straddling the 4/8/16-lane strides, plus
+                // empty and singleton.
+                let n = rng.below(4 * size);
+                let a = rng.gaussian();
+                let x = rand_vec(n, rng);
+                let out0 = rand_vec(n, rng);
+                let mut got = out0.clone();
+                kern.axpy(a, &x, &mut got);
+                close_slices(&got, &oracle_axpy(a, &x, &out0), 1e-5, 1e-4)
+            },
+        );
+    }
+}
+
+#[test]
+fn dot_matches_f64_oracle_on_every_backend() {
+    for kern in kernels::available() {
+        check(
+            &format!("dot[{}]==oracle", kern.name()),
+            Config { cases: 48, max_size: 200, ..Default::default() },
+            |rng, size| {
+                let n = rng.below(4 * size);
+                let a = rand_vec(n, rng);
+                let b = rand_vec(n, rng);
+                let got = kern.dot(&a, &b);
+                let want = oracle_dot(&a, &b) as f32;
+                close_slices(&[got], &[want], 1e-4, 1e-3)
+            },
+        );
+    }
+}
+
+#[test]
+fn microkernel_matches_f64_oracle_on_every_backend() {
+    for kern in kernels::available() {
+        check(
+            &format!("microkernel[{}]==oracle", kern.name()),
+            Config { cases: 32, max_size: 300, ..Default::default() },
+            |rng, size| {
+                let kc = rng.below(size); // including kc = 0
+                let ap = rand_vec(kc * MR, rng);
+                let bp = rand_vec(kc * NR, rng);
+                let init = rand_vec(MR * NR, rng);
+                let mut acc = [[0.0f32; NR]; MR];
+                for r in 0..MR {
+                    acc[r].copy_from_slice(&init[r * NR..(r + 1) * NR]);
+                }
+                kern.microkernel(&ap, &bp, kc, &mut acc);
+                let mut got = Vec::with_capacity(MR * NR);
+                let mut want = Vec::with_capacity(MR * NR);
+                for r in 0..MR {
+                    for c in 0..NR {
+                        got.push(acc[r][c]);
+                        let mut s = init[r * NR + c] as f64;
+                        for kk in 0..kc {
+                            s += ap[kk * MR + r] as f64 * bp[kk * NR + c] as f64;
+                        }
+                        want.push(s as f32);
+                    }
+                }
+                close_slices(&got, &want, 1e-4, 1e-3)
+            },
+        );
+    }
+}
+
+#[test]
+fn gemv_matches_f64_oracle_on_every_backend() {
+    for kern in kernels::available() {
+        check(
+            &format!("gemv[{}]==oracle", kern.name()),
+            Config { cases: 48, max_size: 64, ..Default::default() },
+            |rng, size| {
+                // k = 0 (beta-scale only) through ragged k, n.
+                let k = rng.below(2 * size);
+                let n = 1 + rng.below(2 * size);
+                let (alpha, beta) = match rng.below(4) {
+                    0 => (1.0, 0.0),
+                    1 => (0.5, 1.0),
+                    2 => (-2.0, 0.25),
+                    _ => (0.0, 0.5),
+                };
+                let x = rand_vec(k, rng);
+                let b = rand_vec(k * n, rng);
+                let out0 = rand_vec(n, rng);
+                let mut got = out0.clone();
+                kern.gemv(&mut got, &x, &b, k, n, alpha, beta);
+                let want: Vec<f32> = (0..n)
+                    .map(|j| {
+                        let mut s = 0.0f64;
+                        for kk in 0..k {
+                            s += x[kk] as f64 * b[kk * n + j] as f64;
+                        }
+                        (alpha as f64 * s + beta as f64 * out0[j] as f64) as f32
+                    })
+                    .collect();
+                close_slices(&got, &want, 1e-4, 1e-3)
+            },
+        );
+    }
+}
+
+#[test]
+fn masked_acc_matches_f64_oracle_on_every_backend() {
+    for kern in kernels::available() {
+        check(
+            &format!("masked_acc[{}]==oracle", kern.name()),
+            Config { cases: 32, max_size: 48, ..Default::default() },
+            |rng, size| {
+                let d = rng.below(2 * size);
+                let n = 1 + rng.below(size);
+                let at = rand_vec(d * n, rng);
+                let c = rand_vec(d, rng);
+                let p = rng.f32();
+                let mask: Vec<bool> = (0..d).map(|_| rng.f32() < p).collect();
+                let out0 = rand_vec(n, rng);
+                let mut got = out0.clone();
+                kern.masked_acc(&at, n, &mask, &c, &mut got);
+                let want: Vec<f32> = (0..n)
+                    .map(|j| {
+                        let mut s = out0[j] as f64;
+                        for i in 0..d {
+                            if mask[i] {
+                                s += c[i] as f64 * at[i * n + j] as f64;
+                            }
+                        }
+                        s as f32
+                    })
+                    .collect();
+                close_slices(&got, &want, 1e-4, 1e-3)
+            },
+        );
+    }
+}
+
+#[test]
+fn softmax_matches_f64_oracle_on_every_backend() {
+    for kern in kernels::available() {
+        check(
+            &format!("softmax[{}]==oracle", kern.name()),
+            Config { cases: 48, max_size: 300, ..Default::default() },
+            |rng, size| {
+                let n = 1 + rng.below(2 * size);
+                // Mix moderate logits with extreme ones (the max-subtract
+                // must keep everything finite; the Cephes clamp must not
+                // distort in-range values).
+                let x: Vec<f32> = (0..n)
+                    .map(|_| match rng.below(10) {
+                        0 => 1000.0,
+                        1 => -1000.0,
+                        _ => 8.0 * rng.gaussian(),
+                    })
+                    .collect();
+                let mut got = x.clone();
+                kern.softmax(&mut got);
+                if got.iter().any(|v| !v.is_finite()) {
+                    return Err(format!("[{}] non-finite softmax output", kern.name()));
+                }
+                let max = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let exps: Vec<f64> = x.iter().map(|&v| ((v - max) as f64).exp()).collect();
+                let sum: f64 = exps.iter().sum();
+                let want: Vec<f32> = exps.iter().map(|&e| (e / sum) as f32).collect();
+                // The vectorized exp is a polynomial (≈2 ulp), so the bound
+                // is looser than pure-rounding accumulation error.
+                close_slices(&got, &want, 1e-5, 1e-4)?;
+                let total: f64 = got.iter().map(|&v| v as f64).sum();
+                if (total - 1.0).abs() > 1e-4 {
+                    return Err(format!("[{}] softmax sums to {total}", kern.name()));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn simd_backends_agree_with_generic_within_tolerance() {
+    let generic = kernels::for_name("generic").unwrap();
+    for kern in kernels::available() {
+        if kern.name() == "generic" {
+            continue;
+        }
+        check(
+            &format!("{}≈generic", kern.name()),
+            Config { cases: 32, max_size: 64, ..Default::default() },
+            |rng, size| {
+                let k = rng.below(2 * size);
+                let n = 1 + rng.below(2 * size);
+                let x = rand_vec(k, rng);
+                let b = rand_vec(k * n, rng);
+                let mut got = vec![0.0f32; n];
+                let mut want = vec![0.0f32; n];
+                kern.gemv(&mut got, &x, &b, k, n, 1.0, 0.0);
+                generic.gemv(&mut want, &x, &b, k, n, 1.0, 0.0);
+                close_slices(&got, &want, 1e-4, 1e-3).map_err(|e| format!("gemv: {e}"))?;
+
+                let d_got = kern.dot(&x, &x);
+                let d_want = generic.dot(&x, &x);
+                close_slices(&[d_got], &[d_want], 1e-4, 1e-3).map_err(|e| format!("dot: {e}"))?;
+
+                let logits = rand_vec(n, rng);
+                let mut s_got = logits.clone();
+                let mut s_want = logits;
+                kern.softmax(&mut s_got);
+                generic.softmax(&mut s_want);
+                close_slices(&s_got, &s_want, 1e-5, 1e-4).map_err(|e| format!("softmax: {e}"))
+            },
+        );
+    }
+}
+
+#[test]
+fn gemv_batch_stripe_is_bitwise_equal_to_per_row_gemv_per_backend() {
+    // The decode-determinism anchor: within ONE backend, a batched stripe
+    // covering the full width must reproduce each row's solo GEMV exactly.
+    let mut rng = Xoshiro256::new(0xBEEF);
+    for kern in kernels::available() {
+        for (m, k, n) in [(1usize, 17usize, 29usize), (5, 64, 96), (8, 33, 257)] {
+            let a = rand_vec(m * k, &mut rng);
+            let b = rand_vec(k * n, &mut rng);
+            let mut batched = vec![0.5f32; m * n];
+            // SAFETY: single-threaded full-width stripe over an owned buffer.
+            unsafe {
+                kern.gemv_batch_stripe(m, k, n, &a, &b, batched.as_mut_ptr(), 1.0, 0.0, 0, n)
+            };
+            for r in 0..m {
+                let mut solo = vec![0.0f32; n];
+                kern.gemv(&mut solo, &a[r * k..(r + 1) * k], &b, k, n, 1.0, 0.0);
+                assert_eq!(
+                    solo,
+                    batched[r * n..(r + 1) * n].to_vec(),
+                    "[{}] row {r} of {m}x{k}x{n}",
+                    kern.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn gemm_packed_with_matches_f64_oracle_on_every_backend() {
+    for kern in kernels::available() {
+        check(
+            &format!("gemm_packed[{}]==oracle", kern.name()),
+            Config { cases: 24, max_size: 40, ..Default::default() },
+            |rng, size| {
+                let m = 1 + rng.below(2 * size);
+                let k = 1 + rng.below(2 * size);
+                let n = 1 + rng.below(2 * size);
+                let a = rand_vec(m * k, rng);
+                let b = rand_vec(k * n, rng);
+                let mut got = vec![0.0f32; m * n];
+                gemm_packed_with(kern, m, k, n, &a, &b, &mut got, 1.0, 0.0);
+                let mut want = vec![0.0f32; m * n];
+                for i in 0..m {
+                    for j in 0..n {
+                        let mut s = 0.0f64;
+                        for kk in 0..k {
+                            s += a[i * k + kk] as f64 * b[kk * n + j] as f64;
+                        }
+                        want[i * n + j] = s as f32;
+                    }
+                }
+                close_slices(&got, &want, 1e-4, 1e-3)
+            },
+        );
+    }
+}
+
+#[test]
+fn dispatcher_resolves_names_and_picks_an_available_backend() {
+    assert_eq!(kernels::for_name("generic").unwrap().name(), "generic");
+    assert!(kernels::for_name("no-such-backend").is_none());
+    let chosen = kernels::kernel().name();
+    assert!(
+        kernels::available().iter().any(|k| k.name() == chosen),
+        "dispatched backend {chosen:?} not in the available set"
+    );
+    assert_eq!(kernels::backend_name(), chosen);
+}
