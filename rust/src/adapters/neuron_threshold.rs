@@ -31,27 +31,7 @@ impl NeuronThresholdAdapter {
         let col_norms: Vec<f32> = (0..h)
             .map(|i| wt.row(i).iter().map(|&v| v * v).sum::<f32>().sqrt())
             .collect();
-        // budget = masker (2h) + 2·o·E[r]  →  E[r]
-        let r_target = ((budget - 2.0 * h as f64) / (2.0 * o as f64)).clamp(0.0, h as f64);
-        let k = x_fit.cols;
-        let mut scores: Vec<f32> = Vec::with_capacity(h * k);
-        for i in 0..h {
-            for c in 0..k {
-                scores.push(x_fit.at(i, c).abs() * col_norms[i]);
-            }
-        }
-        let keep = ((r_target * k as f64).round() as usize).min(scores.len());
-        let threshold = threshold_for_keep(&mut scores, keep);
-        // Achieved keep rate on the fit set.
-        let mut active = 0usize;
-        for i in 0..h {
-            for c in 0..k {
-                if x_fit.at(i, c).abs() * col_norms[i] >= threshold {
-                    active += 1;
-                }
-            }
-        }
-        let exp_keep = active as f64 / k as f64;
+        let (threshold, exp_keep) = calibrate_threshold(&col_norms, x_fit, o, h, budget);
         Self { wt, col_norms, threshold, exp_keep }
     }
 
@@ -70,25 +50,7 @@ impl NeuronThresholdAdapter {
     /// would store.
     pub fn threshold_for_budget(&self, x_fit: &Mat, budget: f64) -> (f32, f64) {
         let (o, h) = (self.out_dim(), self.in_dim());
-        let r_target = ((budget - 2.0 * h as f64) / (2.0 * o as f64)).clamp(0.0, h as f64);
-        let k = x_fit.cols;
-        let mut scores: Vec<f32> = Vec::with_capacity(h * k);
-        for i in 0..h {
-            for c in 0..k {
-                scores.push(x_fit.at(i, c).abs() * self.col_norms[i]);
-            }
-        }
-        let keep = ((r_target * k as f64).round() as usize).min(scores.len());
-        let threshold = threshold_for_keep(&mut scores, keep);
-        let mut active = 0usize;
-        for i in 0..h {
-            for c in 0..k {
-                if x_fit.at(i, c).abs() * self.col_norms[i] >= threshold {
-                    active += 1;
-                }
-            }
-        }
-        (threshold, active as f64 / k as f64)
+        calibrate_threshold(&self.col_norms, x_fit, o, h, budget)
     }
 
     pub fn mask(&self, x: &[f32]) -> Vec<bool> {
@@ -157,6 +119,47 @@ impl NeuronThresholdAdapter {
     pub fn flops(&self) -> LinearFlops {
         flops::neuron_threshold(self.out_dim(), self.in_dim(), self.exp_keep)
     }
+}
+
+/// Shared threshold calibration for [`NeuronThresholdAdapter::build`] and
+/// [`NeuronThresholdAdapter::threshold_for_budget`]: the pooled-quantile
+/// threshold hitting `budget` per-token FLOPs, with every edge clamped —
+/// an over-generous budget keeps all neurons, a sub-masker budget (e.g. a
+/// compression rate above 1.0 driving `budget` negative) keeps none, and
+/// an **empty fit set** degrades to the dense identity (`t = -∞`, all
+/// neurons kept) instead of dividing by zero: with no calibration evidence
+/// the only keep rate that cannot hurt quality is 100 %.
+fn calibrate_threshold(
+    col_norms: &[f32],
+    x_fit: &Mat,
+    o: usize,
+    h: usize,
+    budget: f64,
+) -> (f32, f64) {
+    let k = x_fit.cols;
+    if k == 0 {
+        return (f32::NEG_INFINITY, h as f64);
+    }
+    // budget = masker (2h) + 2·o·E[r]  →  E[r]
+    let r_target = ((budget - 2.0 * h as f64) / (2.0 * o as f64)).clamp(0.0, h as f64);
+    let mut scores: Vec<f32> = Vec::with_capacity(h * k);
+    for i in 0..h {
+        for c in 0..k {
+            scores.push(x_fit.at(i, c).abs() * col_norms[i]);
+        }
+    }
+    let keep = ((r_target * k as f64).round() as usize).min(scores.len());
+    let threshold = threshold_for_keep(&mut scores, keep);
+    // Achieved keep rate on the fit set.
+    let mut active = 0usize;
+    for i in 0..h {
+        for c in 0..k {
+            if x_fit.at(i, c).abs() * col_norms[i] >= threshold {
+                active += 1;
+            }
+        }
+    }
+    (threshold, active as f64 / k as f64)
 }
 
 #[cfg(test)]
@@ -233,6 +236,41 @@ mod tests {
             let ts = vec![t; xs.rows];
             assert_eq!(base.apply_tok_batch_t(&xs, &ts).data, stat.apply_tok_batch(&xs).data);
         }
+    }
+
+    #[test]
+    fn degenerate_budgets_and_fit_sets_never_panic() {
+        let (w, x) = setup(12, 24, 15);
+        let base = NeuronThresholdAdapter::build(&w, &x, flops::linear(12, 24) * 0.5);
+
+        // Compression rate above 1.0 drives the component budget negative:
+        // the threshold must clamp to keep-none, not panic or go NaN.
+        for budget in [-1.0e6, 0.0, 1.0] {
+            let (t, keep) = base.threshold_for_budget(&x, budget);
+            assert_eq!(t, f32::INFINITY, "budget {budget}: sub-masker budget keeps none");
+            assert_eq!(keep, 0.0, "budget {budget}");
+            let out = base.apply_tok_t(&[1.0; 24], t);
+            assert!(out.iter().all(|&v| v == 0.0), "keep-none output must be zero");
+        }
+
+        // Over-generous budget keeps everything.
+        let (t, keep) = base.threshold_for_budget(&x, flops::linear(12, 24) * 10.0);
+        assert!(keep > 0.0 && keep.is_finite());
+        assert!(t.is_finite() || t == f32::NEG_INFINITY);
+
+        // Empty fit set: no calibration evidence → dense identity, finite
+        // exp_keep (the old code divided by zero columns here).
+        let empty = Mat::zeros(24, 0);
+        let (t, keep) = base.threshold_for_budget(&empty, flops::linear(12, 24) * 0.5);
+        assert_eq!(t, f32::NEG_INFINITY, "empty fit set must degrade dense");
+        assert_eq!(keep, 24.0);
+        assert!(keep.is_finite(), "exp_keep must never be NaN");
+        let built = NeuronThresholdAdapter::build(&w, &empty, flops::linear(12, 24) * 0.5);
+        assert!(built.exp_keep.is_finite(), "build on empty fit set must not NaN");
+        let mut rng = Xoshiro256::new(16);
+        let v: Vec<f32> = (0..24).map(|_| rng.gaussian()).collect();
+        crate::util::prop::close_slices(&built.apply_tok(&v), &w.matvec(&v), 1e-4, 1e-4)
+            .expect("dense fallback must reproduce the dense layer");
     }
 
     #[test]

@@ -597,6 +597,43 @@ mod tests {
     }
 
     #[test]
+    fn schedule_lookups_clamp_on_every_degenerate_rate() {
+        // Satellite regression: empty schedules, rates below the first
+        // entry, above 1.0, negative, and non-finite must all resolve to a
+        // defined view — never panic or index out of range.
+        let mut s = BudgetSchedule::default();
+        for (rate, d) in [(0.2, 8), (0.5, 4)] {
+            s.push(BudgetEntry { rate, d, threshold: 0.1, exp_rank: d as f64 });
+        }
+        assert_eq!(s.entry_for(-3.0).unwrap().d, 8, "negative clamps to least compressed");
+        assert_eq!(s.entry_for(1.0).unwrap().d, 4, "1.0 clamps to most compressed");
+        assert_eq!(s.entry_for(7.5).unwrap().d, 4, "above 1.0 clamps to most compressed");
+        assert_eq!(s.entry_for(f64::INFINITY).unwrap().d, 4);
+        // A single-entry schedule answers every rate with that entry.
+        let mut one = BudgetSchedule::default();
+        one.push(BudgetEntry { rate: 0.35, d: 6, threshold: 0.2, exp_rank: 6.0 });
+        for rate in [-1.0, 0.0, 0.35, 0.99, 2.0] {
+            assert_eq!(one.entry_for(rate).unwrap().d, 6, "rate {rate}");
+        }
+
+        // view_for over an adapter WITHOUT a schedule (fixed-budget build)
+        // serves its calibrated full view for any rate.
+        let (w, xf, xe) = setup(16, 12, 31);
+        let pre = RankPrecomp::new(&w, &xf, &xe, 33);
+        let (ad, _) = pre.adapter_for_budget(pre.dense_flops() * 0.5);
+        assert!(ad.schedule.is_empty());
+        for rate in [-1.0, 0.0, 0.5, 1.0, 10.0] {
+            assert_eq!(ad.view_for(rate), ad.full_view(), "rate {rate}");
+        }
+        // And a scheduled adapter's view rank cap never exceeds its basis.
+        let budgets = vec![(0.5, pre.dense_flops() * 0.5)];
+        let (runtime, _) = pre.runtime_adapter(&budgets);
+        for rate in [-1.0, 0.0, 0.5, 1.0, 10.0] {
+            assert!(runtime.view_for(rate).rank_cap <= runtime.d, "rate {rate}");
+        }
+    }
+
+    #[test]
     fn budget_is_respected() {
         let (w, xf, xe) = setup(40, 20, 3);
         let pre = RankPrecomp::new(&w, &xf, &xe, 5);

@@ -71,6 +71,16 @@ pub struct Job {
 /// its generate through the queue).
 const PENDING_CANCEL_CAP: usize = 256;
 
+/// Lock a batcher mutex, recovering from poisoning. A connection thread
+/// that panics while holding one of these locks (submitter clone, cancel
+/// bookkeeping, rate gauge) must not take the whole serving loop down with
+/// it: every value protected here is a plain handle or scalar that is
+/// consistent at every instruction boundary, so the poisoned state is safe
+/// to keep serving from — the offending request died with its thread.
+fn lock_recover<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
 pub struct Batcher {
     tx: Mutex<Option<mpsc::Sender<Job>>>,
     queue: Arc<Mutex<Option<mpsc::Receiver<Job>>>>,
@@ -115,25 +125,25 @@ impl Batcher {
 
     /// Handle used by the server / in-process clients to submit work.
     pub fn submitter(&self) -> mpsc::Sender<Job> {
-        self.tx.lock().unwrap().as_ref().expect("batcher closed").clone()
+        lock_recover(&self.tx).as_ref().expect("batcher closed").clone()
     }
 
     /// Drop the batcher's own sender: `run` exits once all external
     /// submitters are gone too. Required for clean shutdown because the
     /// batcher outlives the server loop via its `Arc`.
     pub fn close(&self) {
-        self.tx.lock().unwrap().take();
+        lock_recover(&self.tx).take();
     }
 
     fn current_rate(&self) -> f64 {
-        *self.current_rate.lock().unwrap()
+        *lock_recover(&self.current_rate)
     }
 
     /// Retune the engine's shared budget; counts actual tier changes and
     /// refreshes the budget gauges.
     fn apply_rate(&self, rate: f64) {
         {
-            let mut cur = self.current_rate.lock().unwrap();
+            let mut cur = lock_recover(&self.current_rate);
             if (*cur - rate).abs() > 1e-12 {
                 self.engine.set_budget(rate);
                 self.metrics.budget_switches.fetch_add(1, Ordering::Relaxed);
@@ -148,11 +158,11 @@ impl Batcher {
     }
 
     fn take_pending_cancel(&self, id: &str) -> bool {
-        self.pending_cancels.lock().unwrap().remove(id)
+        lock_recover(&self.pending_cancels).remove(id)
     }
 
     fn remember_cancel(&self, id: &str) {
-        let mut set = self.pending_cancels.lock().unwrap();
+        let mut set = lock_recover(&self.pending_cancels);
         if set.len() >= PENDING_CANCEL_CAP {
             set.clear();
         }
@@ -162,12 +172,7 @@ impl Batcher {
     /// Run the batching loop until all submitters hang up.
     /// Call from a dedicated thread.
     pub fn run(&self) {
-        let rx = self
-            .queue
-            .lock()
-            .unwrap()
-            .take()
-            .expect("Batcher::run called twice");
+        let rx = lock_recover(&self.queue).take().expect("Batcher::run called twice");
         let mut pending: Vec<Job> = Vec::new();
         loop {
             // Block for the first job (or shut down on disconnect).
@@ -711,6 +716,33 @@ mod tests {
         assert!(s.get_f64("requests").unwrap() >= 1.0);
         assert!(s.get("budget_hist").is_ok());
         assert!(s.get_str("id").unwrap().starts_with("loc-"));
+    }
+
+    #[test]
+    fn poisoned_batcher_locks_recover_and_serving_continues() {
+        let (b, tx) = start_batcher(4);
+        // Simulate a connection thread dying mid-request while holding
+        // batcher state: panic with the rate and cancel locks held.
+        let b2 = Arc::clone(&b);
+        let injected = std::thread::spawn(move || {
+            let _rate = b2.current_rate.lock().unwrap();
+            let _cancels = b2.pending_cancels.lock().unwrap();
+            panic!("injected connection-thread panic");
+        })
+        .join();
+        assert!(injected.is_err(), "injection thread must have panicked");
+        assert!(b.current_rate.lock().is_err(), "rate lock must actually be poisoned");
+        assert!(b.pending_cancels.lock().is_err(), "cancel lock must actually be poisoned");
+        // Every lock site degrades gracefully: gauges read, cancel
+        // bookkeeping works, and full request round-trips keep serving.
+        assert_eq!(b.current_rate(), 0.0);
+        b.remember_cancel("poisoned-target");
+        assert!(b.take_pending_cancel("poisoned-target"));
+        let r = call(&tx, score_req("still serving after poison")).unwrap();
+        assert!(r.get_f64("logprob").unwrap().is_finite());
+        let g = call(&tx, generate_req("ab", 2)).unwrap();
+        assert_eq!(g.get_str("finish_reason").unwrap(), "length");
+        let _fresh = b.submitter(); // submitter clone survives poisoning too
     }
 
     #[test]

@@ -291,6 +291,49 @@ mod tests {
     }
 
     #[test]
+    fn budget_histogram_bucket_edges_are_total() {
+        // Every rate — exactly on a bucket edge, 0.0, 1.0, above 1.0,
+        // negative, even non-finite — must land in a defined bucket: the
+        // histogram is a total function with no index out of range.
+        let m = Metrics::new();
+        // Exact edges bucket inclusively (rate <= edge).
+        for (i, &edge) in BUDGET_EDGES.iter().enumerate() {
+            let before = m.budget_hist_counts();
+            m.observe_budget(edge);
+            let after = m.budget_hist_counts();
+            assert_eq!(after[i], before[i] + 1, "edge {edge} must land in its own bucket");
+        }
+        // Rates above the last edge clamp into the last bucket.
+        let before = m.budget_hist_counts();
+        m.observe_budget(1.5);
+        m.observe_budget(f64::INFINITY);
+        assert_eq!(m.budget_hist_counts()[5], before[5] + 2);
+        // Negative rates land in the dense bucket (rate <= 0.0).
+        let before = m.budget_hist_counts();
+        m.observe_budget(-0.1);
+        assert_eq!(m.budget_hist_counts()[0], before[0] + 1);
+        // Nothing was ever dropped: total observations == total counts.
+        let total: u64 = m.budget_hist_counts().iter().sum();
+        assert_eq!(total, BUDGET_EDGES.len() as u64 + 3);
+    }
+
+    #[test]
+    fn budget_hist_and_edges_lengths_agree_in_snapshot() {
+        let m = Metrics::new();
+        m.observe_budget(0.2);
+        let s = m.snapshot();
+        let Json::Arr(hist) = s.get("budget_hist").unwrap() else {
+            panic!("budget_hist must be an array")
+        };
+        let Json::Arr(edges) = s.get("budget_edges").unwrap() else {
+            panic!("budget_edges must be an array")
+        };
+        assert_eq!(hist.len(), edges.len(), "stats consumers zip these two arrays");
+        assert_eq!(edges.len(), BUDGET_EDGES.len());
+        assert_eq!(hist.len(), m.budget_hist_counts().len());
+    }
+
+    #[test]
     fn kv_pool_metrics_track_gauge_peak_and_counters() {
         let m = Metrics::new();
         m.observe_kv_pool(4, 6, 16, 0);
