@@ -215,7 +215,8 @@ fn serving(opts: Opts) -> anyhow::Result<()> {
         window: 96,
         seed: 0x5E12,
     };
-    let corpus = rana::data::generate_corpus(200_000, 1_000);
+    // Heldout sized for the layer-wise quality comparison below.
+    let corpus = rana::data::generate_corpus(200_000, 20_000);
     let t0 = Instant::now();
     let calib = rana::adapters::calibrate::collect(&model, &corpus.train, &calib_opts);
     let calib_t = t0.elapsed();
@@ -379,6 +380,88 @@ fn serving(opts: Opts) -> anyhow::Result<()> {
                 ("texts_match", Json::Bool(texts_match)),
             ])
         );
+    }
+
+    println!("\n== Serving: layer-wise allocation vs uniform at matched FLOP budgets ==");
+    {
+        use rana::adapters::calibrate;
+        use rana::eval::perplexity;
+
+        let rates: Vec<f64> = if fast { vec![0.35, 0.5] } else { vec![0.2, 0.35, 0.5] };
+        let seq_len = 128usize;
+        // Same calibration capture, same seeds: the only difference is how
+        // each tier's rank is spread over the layers.
+        let (uniform, _) =
+            calibrate::adapt_runtime(Arc::clone(&model), &calib, &rates, seq_len, 0x5E12);
+        let (layered, reports) = calibrate::adapt_runtime_layerwise(
+            Arc::clone(&model),
+            &calib,
+            &rates,
+            seq_len,
+            0x5E12,
+            None,
+        );
+        let uniform = Arc::new(uniform);
+        let layered = Arc::new(layered);
+        let u_engine = NativeEngine::new(Arc::clone(&uniform));
+        let l_engine = NativeEngine::new(Arc::clone(&layered));
+        let eval_tokens =
+            corpus.heldout.len().saturating_sub(1).min(if fast { 2_048 } else { 8_192 });
+        let prompts: Vec<(String, usize)> = (0..4)
+            .map(|i| (format!("the dax lopa the fep number {i} ."), gen_tokens))
+            .collect();
+        for (i, &rate) in rates.iter().enumerate() {
+            uniform.set_budget(rate);
+            layered.set_budget(rate);
+            // Mean-preserving allocation over affine component budgets ⇒
+            // matched FLOPs by construction; measured here, asserted in CI.
+            let u_flops = uniform.decode_flops(seq_len).total;
+            let l_flops = layered.decode_flops(seq_len).total;
+            let flops_matched = (l_flops - u_flops).abs() / u_flops < 0.06;
+            // Quality at equal FLOPs: held-out perplexity (lower wins).
+            let u_ppl = perplexity(&*uniform, &corpus.heldout, eval_tokens, 96);
+            let l_ppl = perplexity(&*layered, &corpus.heldout, eval_tokens, 96);
+            // Throughput at the same knob value.
+            let _ = u_engine.generate_batch(&prompts); // warm
+            let t0 = Instant::now();
+            let _ = u_engine.generate_batch(&prompts);
+            let u_t = t0.elapsed();
+            let _ = l_engine.generate_batch(&prompts); // warm
+            let t0 = Instant::now();
+            let _ = l_engine.generate_batch(&prompts);
+            let l_t = t0.elapsed();
+            let toks = (prompts.len() * gen_tokens) as f64;
+            let u_tps = toks / u_t.as_secs_f64().max(1e-12);
+            let l_tps = toks / l_t.as_secs_f64().max(1e-12);
+            let lr = &reports[i].layer_rates;
+            let spread = lr.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+                - lr.iter().cloned().fold(f64::INFINITY, f64::min);
+            println!(
+                "tier {rate:.2}: ppl uniform {u_ppl:8.2} vs layerwise {l_ppl:8.2} \
+                 ({})   tok/s {u_tps:7.0} vs {l_tps:7.0}   flops matched: \
+                 {flops_matched}   allocation spread {spread:.3}",
+                if l_ppl <= u_ppl { "layerwise wins" } else { "uniform wins" },
+            );
+            println!(
+                "{}",
+                Json::obj(vec![
+                    ("bench", Json::str("serving_layerwise")),
+                    ("rate", Json::Num(rate)),
+                    ("eval_tokens", Json::Num(eval_tokens as f64)),
+                    ("uniform_ppl", Json::Num(u_ppl)),
+                    ("layerwise_ppl", Json::Num(l_ppl)),
+                    ("ppl_win", Json::Bool(l_ppl <= u_ppl)),
+                    ("uniform_tok_s", Json::Num(u_tps)),
+                    ("layerwise_tok_s", Json::Num(l_tps)),
+                    ("uniform_flops", Json::Num(u_flops)),
+                    ("layerwise_flops", Json::Num(l_flops)),
+                    ("flops_matched", Json::Bool(flops_matched)),
+                    ("allocation_spread", Json::Num(spread)),
+                ])
+            );
+        }
+        uniform.set_budget(0.0);
+        layered.set_budget(0.0);
     }
 
     println!("\n== Serving-path overhead: coordinator vs raw engine ==");

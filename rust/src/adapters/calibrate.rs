@@ -177,6 +177,9 @@ pub struct AdaptReport {
     pub total_compression: f64,
     pub mlp_compression: f64,
     pub qkv_compression: f64,
+    /// Per-layer compression rates this tier was built at (empty for
+    /// uniform allocations; filled by [`adapt_runtime_layerwise`]).
+    pub layer_rates: Vec<f64>,
 }
 
 /// Adapt `model` with `method` targeting `target_compression` of total
@@ -377,6 +380,102 @@ pub fn adapt_runtime(
                 total_compression: achieved.compression_vs(&dense),
                 mlp_compression: achieved.mlp_compression_vs(&dense),
                 qkv_compression: achieved.qkv_compression_vs(&dense),
+                layer_rates: Vec::new(),
+            }
+        })
+        .collect();
+    adapted.set_budget(0.0);
+    (adapted, reports)
+}
+
+/// Like [`adapt_runtime`], but each global tier rate is distributed over
+/// the layers by [`super::layerwise::allocate_tiers`] before the
+/// per-layer budgets are solved: the **schedule keys stay the global
+/// rates** (so `set_budget`, the wire `budget` field and the queue-depth
+/// controller move along the precomputed frontier with the same O(1)
+/// resolution and zero API change), while the budget each layer's line
+/// search runs at is its allocated share. [`component_budgets`] is affine
+/// in the rate, so the mean-preserving allocation is FLOP-matched to the
+/// uniform build at every tier by construction.
+///
+/// Seeds are shared with [`adapt_runtime`] (same `lseed` per layer, same
+/// `^ 0x51` for QKV), so the per-layer SVD bases — and hence the spectra
+/// the allocator pools — are identical to what the uniform build uses.
+///
+/// `draft_rate` marks the tier serving speculative drafts; it gets the
+/// aggressive [`super::layerwise::DRAFT_SKEW`] (drafts are verified at
+/// full budget, so a lopsided allocation costs nothing on miss and raises
+/// acceptance at equal draft FLOPs).
+///
+/// Each returned [`AdaptReport`] carries its tier's `layer_rates`.
+pub fn adapt_runtime_layerwise(
+    model: Arc<Model>,
+    calib: &ModelCalib,
+    rates: &[f64],
+    seq_len: usize,
+    seed: u64,
+    draft_rate: Option<f64>,
+) -> (AdaptedModel, Vec<AdaptReport>) {
+    let dense = AdaptedModel::unadapted(Arc::clone(&model)).decode_flops(seq_len);
+    let cfg = model.cfg.clone();
+    let global: Vec<f64> = rates.iter().copied().filter(|&r| r > 0.0).collect();
+    assert!(!global.is_empty(), "adapt_runtime_layerwise needs at least one compressed rate");
+
+    // Pass A: per-layer builders — one SVD per linear, shared by every
+    // tier — and their pooled spectra.
+    let builders: Vec<RanaMlpBuilder> = (0..cfg.n_layers)
+        .map(|l| {
+            let lseed = seed ^ ((l as u64 + 1) << 8);
+            RanaMlpBuilder::new(cfg.arch, &model.w.layers[l], &calib.layers[l], lseed)
+        })
+        .collect();
+    let spectra: Vec<Vec<f32>> = builders.iter().map(|b| b.spectrum().to_vec()).collect();
+    let alloc = super::layerwise::allocate_tiers(&spectra, &global, draft_rate);
+
+    let mut adapted = AdaptedModel::unadapted(Arc::clone(&model));
+    adapted.method = "RaNA-Layerwise".into();
+    adapted.runtime_budget = true;
+    let mut layer_reports: Vec<Vec<LayerReport>> =
+        vec![Vec::with_capacity(cfg.n_layers); alloc.len()];
+
+    // Pass B: build each layer's runtime adapters at its allocated budgets,
+    // keyed by the GLOBAL tier rates.
+    for (l, builder) in builders.iter().enumerate() {
+        let lw = &model.w.layers[l];
+        let lc = &calib.layers[l];
+        let lseed = seed ^ ((l as u64 + 1) << 8);
+        let mlp_budgets: Vec<(f64, f64)> = alloc
+            .iter()
+            .map(|t| (t.rate, component_budgets(&cfg, &dense, true, t.rates[l]).0))
+            .collect();
+        let (mlp, mlp_errs) = builder.build_runtime(&mlp_budgets, true);
+        adapted.mlp[l] = Some(Box::new(mlp));
+
+        let fused = fused_qkv_weight(lw);
+        let qkv_budgets: Vec<(f64, f64)> = alloc
+            .iter()
+            .map(|t| (t.rate, component_budgets(&cfg, &dense, true, t.rates[l]).1))
+            .collect();
+        let (qkv, qkv_errs) = RanaQkv::build_runtime(&fused, lc, &qkv_budgets, lseed ^ 0x51);
+        adapted.qkv[l] = Some(Box::new(qkv));
+
+        for (t, lr) in layer_reports.iter_mut().enumerate() {
+            lr.push(LayerReport { mlp_err: mlp_errs[t], qkv_err: qkv_errs[t] });
+        }
+    }
+
+    let reports: Vec<AdaptReport> = alloc
+        .iter()
+        .enumerate()
+        .map(|(t, ta)| {
+            adapted.set_budget(ta.rate);
+            let achieved = adapted.decode_flops(seq_len);
+            AdaptReport {
+                layers: layer_reports[t].clone(),
+                total_compression: achieved.compression_vs(&dense),
+                mlp_compression: achieved.mlp_compression_vs(&dense),
+                qkv_compression: achieved.qkv_compression_vs(&dense),
+                layer_rates: ta.rates.clone(),
             }
         })
         .collect();
@@ -438,6 +537,43 @@ mod tests {
         assert!(adapted.qkv.iter().all(|a| a.is_none()));
         assert!(report.qkv_compression.abs() < 1e-9);
         assert!(report.mlp_compression > 0.1);
+    }
+
+    #[test]
+    fn layerwise_build_is_flop_matched_and_records_allocation() {
+        let m = tiny_model(Arch::SwiGlu, 47);
+        let opts = CalibOptions { n_fit: 96, n_eval: 24, window: 24, seed: 4 };
+        let calib = collect(&m, &calib_tokens(), &opts);
+        let rates = [0.2, 0.5];
+        let (_uniform, u_reports) =
+            adapt_runtime(Arc::clone(&m), &calib, &rates, 32, 91);
+        let (layered, l_reports) =
+            adapt_runtime_layerwise(Arc::clone(&m), &calib, &rates, 32, 91, Some(0.5));
+        assert!(layered.runtime_budget);
+        assert_eq!(l_reports.len(), u_reports.len());
+        for (t, (ur, lr)) in u_reports.iter().zip(&l_reports).enumerate() {
+            // Allocation recorded, mean-preserving over the global rate.
+            assert_eq!(lr.layer_rates.len(), m.cfg.n_layers);
+            let mean: f64 =
+                lr.layer_rates.iter().sum::<f64>() / lr.layer_rates.len() as f64;
+            assert!((mean - rates[t]).abs() < 1e-6, "tier {t}: mean {mean}");
+            // FLOP-matched to the uniform build at the same knob value
+            // (affine component budgets + mean preservation; the line
+            // search quantizes ranks, hence the tolerance).
+            assert!(
+                (lr.total_compression - ur.total_compression).abs() < 0.06,
+                "tier {t}: layerwise {} vs uniform {}",
+                lr.total_compression,
+                ur.total_compression
+            );
+            assert!(ur.layer_rates.is_empty());
+        }
+        // The scalar knob still resolves every tier on the layered model.
+        for &r in &rates {
+            layered.set_budget(r);
+            assert!((layered.budget() - r).abs() < 1e-6);
+        }
+        layered.set_budget(0.0);
     }
 
     #[test]

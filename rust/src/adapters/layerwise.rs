@@ -1,0 +1,267 @@
+//! Layer-wise adaptive rank allocation.
+//!
+//! The paper's line search allocates FLOPs per *linear inside one layer*
+//! (Up vs Gate vs Down, §4.2); every budget knob above it in this repo
+//! applied one uniform compression rate to all layers. Related work says
+//! non-uniform wins across layers too (AdapterDrop removes adapters from
+//! lower layers entirely; L1RA reassigns rank across layers during
+//! training), so this module adds the missing axis: a calibration-time
+//! **global line search over pooled singular-value mass** that turns one
+//! model-level compression rate into a per-layer rate vector.
+//!
+//! Mechanics: each layer contributes its spectrum `σ_{l,·}` of `W·X` (the
+//! same randomized SVD the rank adapters are built from — no extra
+//! factorization). Normalizing each layer's energy profile makes layers
+//! comparable; pooling all directions and keeping the globally largest
+//! `K = Σ_l d_l · (1 − rate)` of them spends rank where the spectrum says
+//! it pays. A layer whose energy is concentrated in few directions gives
+//! up directions to a layer with a flat spectrum. The pooled keep-count is
+//! then mean-corrected so the per-layer rates average *exactly* to the
+//! requested global rate: because `calibrate::component_budgets`
+//! is affine in the rate, a mean-preserving rate vector is FLOP-matched to
+//! the uniform allocation by construction — the "equal FLOPs" half of the
+//! quality-at-equal-FLOPs acceptance gate is an identity, not a tuning
+//! outcome.
+//!
+//! The `skew` exponent sharpens (`> 1`) or flattens (`< 1`) the pooled
+//! scores. The speculative draft tier uses an aggressive skew
+//! ([`DRAFT_SKEW`]): drafts are verified at full budget anyway, so the
+//! draft pass can afford a lopsided allocation that keeps the layers that
+//! matter for agreement with the target and guts the rest — raising
+//! acceptance at equal draft FLOPs.
+
+/// Default score exponent for served tiers.
+pub const DEFAULT_SKEW: f64 = 1.0;
+/// Aggressive exponent for the speculative draft tier.
+pub const DRAFT_SKEW: f64 = 2.0;
+/// Per-layer rates stay inside `[rate·(1−SPREAD), rate·(1+SPREAD)]` (and
+/// `[0, MAX_RATE]`): no layer is ever fully dense or fully deleted, so
+/// every layer keeps a schedule entry for every tier and the O(1)
+/// rate→view resolution is untouched.
+pub const SPREAD: f64 = 0.6;
+/// Hard ceiling on any per-layer compression rate (matches the 0.98 keep
+/// clamp in `component_budgets`).
+pub const MAX_RATE: f64 = 0.9;
+
+/// One global tier's layer-wise outcome.
+#[derive(Clone, Debug, Default)]
+pub struct TierAllocation {
+    /// The scalar knob value this row materializes (schedule key).
+    pub rate: f64,
+    /// Per-layer compression rates; `mean(rates) == rate` up to clamping.
+    pub rates: Vec<f64>,
+    /// Score exponent used.
+    pub skew: f64,
+}
+
+/// Distribute one global compression `rate` over `spectra.len()` layers by
+/// pooled singular-value mass. Returns per-layer rates whose mean equals
+/// `rate` (exactly, up to the clamp corner cases described on [`SPREAD`]).
+///
+/// Deterministic: ties in the pooled sort break on `(layer, index)`, so
+/// identical inputs always produce identical allocations (the bitwise
+/// pins depend on this).
+pub fn allocate(spectra: &[Vec<f32>], rate: f64, skew: f64) -> Vec<f64> {
+    let n = spectra.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let rate = rate.clamp(0.0, MAX_RATE);
+    if rate == 0.0 {
+        return vec![0.0; n];
+    }
+    let lo = (rate * (1.0 - SPREAD)).max(0.0);
+    let hi = (rate * (1.0 + SPREAD)).min(MAX_RATE);
+
+    // Pool per-layer *normalized* energy profiles: σ² scaled to unit sum
+    // within each layer, raised to `skew`. Degenerate layers (empty or
+    // zero-mass spectra) fall back to the uniform rate.
+    let mut pooled: Vec<(f64, usize, usize)> = Vec::new();
+    let mut degenerate = vec![false; n];
+    for (l, sv) in spectra.iter().enumerate() {
+        let mass: f64 = sv.iter().map(|&s| (s as f64) * (s as f64)).sum();
+        if sv.is_empty() || !mass.is_finite() || mass <= 0.0 {
+            degenerate[l] = true;
+            continue;
+        }
+        for (i, &s) in sv.iter().enumerate() {
+            let e = (s as f64) * (s as f64) / mass;
+            pooled.push((e.powf(skew), l, i));
+        }
+    }
+    if pooled.is_empty() {
+        return vec![rate; n];
+    }
+    // Descending by score; deterministic (layer, index) tiebreak.
+    pooled.sort_by(|a, b| {
+        b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+    });
+    let keep_total = ((1.0 - rate) * pooled.len() as f64).round() as usize;
+    let mut kept = vec![0usize; n];
+    for &(_, l, _) in pooled.iter().take(keep_total) {
+        kept[l] += 1;
+    }
+
+    // Raw per-layer rates from the global keep, uniform for degenerate
+    // layers, then mean-correct and clamp.
+    let mut rates: Vec<f64> = (0..n)
+        .map(|l| {
+            if degenerate[l] {
+                rate
+            } else {
+                1.0 - kept[l] as f64 / spectra[l].len() as f64
+            }
+        })
+        .collect();
+    mean_correct(&mut rates, rate, lo, hi);
+    rates
+}
+
+/// Shift-and-clamp so `mean(rates) == target` with every entry in
+/// `[lo, hi]`. Iterative: clamped entries absorb no correction, so the
+/// residual is redistributed over the free entries until it vanishes.
+fn mean_correct(rates: &mut [f64], target: f64, lo: f64, hi: f64) {
+    let n = rates.len() as f64;
+    for r in rates.iter_mut() {
+        *r = r.clamp(lo, hi);
+    }
+    for _ in 0..16 {
+        let mean: f64 = rates.iter().sum::<f64>() / n;
+        let residual = target - mean;
+        if residual.abs() < 1e-12 {
+            return;
+        }
+        let free: Vec<usize> = rates
+            .iter()
+            .enumerate()
+            .filter(|&(_, &r)| if residual > 0.0 { r < hi } else { r > lo })
+            .map(|(i, _)| i)
+            .collect();
+        if free.is_empty() {
+            return; // saturated; mean is as close as the clamps allow
+        }
+        let shift = residual * n / free.len() as f64;
+        for i in free {
+            rates[i] = (rates[i] + shift).clamp(lo, hi);
+        }
+    }
+}
+
+/// Allocate every tier of a budget ladder: `tiers` are the global scalar
+/// rates (schedule keys); the tier equal to `draft_rate` (if any) gets
+/// [`DRAFT_SKEW`], the rest [`DEFAULT_SKEW`].
+pub fn allocate_tiers(
+    spectra: &[Vec<f32>],
+    tiers: &[f64],
+    draft_rate: Option<f64>,
+) -> Vec<TierAllocation> {
+    tiers
+        .iter()
+        .map(|&rate| {
+            let is_draft =
+                draft_rate.map(|d| (d - rate).abs() < 1e-9).unwrap_or(false);
+            let skew = if is_draft { DRAFT_SKEW } else { DEFAULT_SKEW };
+            TierAllocation { rate, rates: allocate(spectra, rate, skew), skew }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean(v: &[f64]) -> f64 {
+        v.iter().sum::<f64>() / v.len() as f64
+    }
+
+    /// Geometric spectrum `σ_i = decay^i`, length `d`.
+    fn geo(d: usize, decay: f32) -> Vec<f32> {
+        (0..d).map(|i| decay.powi(i as i32)).collect()
+    }
+
+    #[test]
+    fn allocation_is_mean_preserving() {
+        let spectra = vec![geo(32, 0.5), geo(32, 0.9), geo(32, 0.99), geo(32, 0.7)];
+        for rate in [0.1, 0.2, 0.35, 0.5] {
+            let r = allocate(&spectra, rate, DEFAULT_SKEW);
+            assert_eq!(r.len(), 4);
+            assert!((mean(&r) - rate).abs() < 1e-9, "mean {} != {}", mean(&r), rate);
+            for &x in &r {
+                assert!((0.0..=MAX_RATE).contains(&x));
+            }
+        }
+    }
+
+    #[test]
+    fn fast_decay_layers_are_compressed_harder() {
+        // Layer 0 concentrates its energy in a few directions (decay 0.5);
+        // layer 1 is nearly flat (decay 0.99). The allocator must compress
+        // layer 0 harder and spend the saved rank on layer 1.
+        let spectra = vec![geo(32, 0.5), geo(32, 0.99)];
+        let r = allocate(&spectra, 0.35, DEFAULT_SKEW);
+        assert!(
+            r[0] > r[1] + 0.05,
+            "expected fast-decay layer compressed harder: {r:?}"
+        );
+    }
+
+    #[test]
+    fn uniform_spectra_give_uniform_allocation() {
+        let spectra = vec![geo(16, 0.8); 5];
+        let r = allocate(&spectra, 0.4, DEFAULT_SKEW);
+        for &x in &r {
+            assert!((x - 0.4).abs() < 0.07, "near-uniform expected, got {r:?}");
+        }
+        assert!((mean(&r) - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn draft_skew_is_more_aggressive() {
+        let spectra = vec![geo(32, 0.5), geo(32, 0.99)];
+        let plain = allocate(&spectra, 0.5, DEFAULT_SKEW);
+        let skewed = allocate(&spectra, 0.5, DRAFT_SKEW);
+        let spread = |r: &[f64]| (r[0] - r[1]).abs();
+        assert!(
+            spread(&skewed) >= spread(&plain) - 1e-9,
+            "draft skew should widen the allocation: {plain:?} vs {skewed:?}"
+        );
+        assert!((mean(&skewed) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_inputs_clamp_not_panic() {
+        // Empty spectra set.
+        assert!(allocate(&[], 0.3, 1.0).is_empty());
+        // Rate 0 → all-dense; negative and >1 rates clamp.
+        let spectra = vec![geo(8, 0.6), geo(8, 0.9)];
+        assert_eq!(allocate(&spectra, 0.0, 1.0), vec![0.0, 0.0]);
+        assert_eq!(allocate(&spectra, -3.0, 1.0), vec![0.0, 0.0]);
+        let r = allocate(&spectra, 7.5, 1.0);
+        assert!(r.iter().all(|&x| x <= MAX_RATE));
+        // Zero-mass and empty per-layer spectra fall back to uniform.
+        let r = allocate(&[vec![0.0; 8], Vec::new()], 0.35, 1.0);
+        assert_eq!(r, vec![0.35, 0.35]);
+        // One healthy + one degenerate layer: degenerate gets the uniform
+        // rate, the mean still holds.
+        let r = allocate(&[geo(8, 0.6), vec![0.0; 8]], 0.35, 1.0);
+        assert!((mean(&r) - 0.35).abs() < 1e-9);
+    }
+
+    #[test]
+    fn allocate_tiers_applies_draft_skew_to_the_draft_tier() {
+        let spectra = vec![geo(32, 0.5), geo(32, 0.99)];
+        let tiers = allocate_tiers(&spectra, &[0.2, 0.5], Some(0.5));
+        assert_eq!(tiers.len(), 2);
+        assert_eq!(tiers[0].skew, DEFAULT_SKEW);
+        assert_eq!(tiers[1].skew, DRAFT_SKEW);
+        assert!((mean(&tiers[1].rates) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn allocation_is_deterministic() {
+        let spectra = vec![geo(24, 0.7), geo(24, 0.85), geo(24, 0.95)];
+        let a = allocate(&spectra, 0.35, DEFAULT_SKEW);
+        let b = allocate(&spectra, 0.35, DEFAULT_SKEW);
+        assert_eq!(a, b);
+    }
+}

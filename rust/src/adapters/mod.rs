@@ -20,6 +20,7 @@
 
 pub mod calibrate;
 pub mod cats;
+pub mod layerwise;
 pub mod llra;
 pub mod maskers;
 pub mod model_alloc;
@@ -246,6 +247,41 @@ impl AdaptedModel {
         } else {
             acc / n as f64
         }
+    }
+
+    /// Per-layer calibrated active-rank fractions at `rate` (1.0 for a
+    /// dense/bypassed layer). Under a layer-wise allocation
+    /// ([`calibrate::adapt_runtime_layerwise`]) these differ across layers
+    /// at the same scalar knob value — the serving metrics export them so
+    /// the frontier is observable in `stats`.
+    pub fn layer_effective_rank_fracs(&self, rate: f64) -> Vec<f64> {
+        let n = self.base.cfg.n_layers;
+        if self.bypass(rate) {
+            return vec![1.0; n];
+        }
+        (0..n)
+            .map(|l| {
+                let mut acc = 0.0;
+                let mut cnt = 0usize;
+                if let Some(f) =
+                    self.mlp[l].as_ref().and_then(|a| a.effective_rank_frac(rate))
+                {
+                    acc += f;
+                    cnt += 1;
+                }
+                if let Some(f) =
+                    self.qkv[l].as_ref().and_then(|a| a.effective_rank_frac(rate))
+                {
+                    acc += f;
+                    cnt += 1;
+                }
+                if cnt == 0 {
+                    1.0
+                } else {
+                    acc / cnt as f64
+                }
+            })
+            .collect()
     }
 
     /// Adapter weight footprint in bytes (the serving-memory delta a

@@ -225,6 +225,14 @@ impl<'a> RanaMlpBuilder<'a> {
         Self { arch, lw, calib, pre_up, pre_gate, eval_rows }
     }
 
+    /// Singular-value spectrum of the Up projection's `W·X` (descending).
+    /// The layer-wise allocator pools these across layers: the Up spectrum
+    /// is the cheapest faithful proxy for how compressible the whole layer
+    /// is, and it is already computed — no extra factorization.
+    pub fn spectrum(&self) -> &[f32] {
+        self.pre_up.singular_values()
+    }
+
     /// Dense per-token FLOPs of this MLP.
     pub fn dense_flops(&self) -> f64 {
         match self.arch {

@@ -266,6 +266,9 @@ pub struct RankPrecomp {
     s_eval: Mat,
     /// `‖W x_j‖²` for each eval column (exact, via one GEMM).
     wx_eval_sq: Vec<f64>,
+    /// Singular values of `W·X_basis` (descending, length `d_max`) — the
+    /// per-linear spectrum the layer-wise allocator pools across layers.
+    s: Vec<f32>,
     pub o: usize,
     pub i: usize,
     pub d_max: usize,
@@ -297,7 +300,12 @@ impl RankPrecomp {
                 *acc += v * v;
             }
         }
-        Self { u: svd.u, b_full, s_fit, s_eval, wx_eval_sq, o, i, d_max }
+        Self { u: svd.u, b_full, s_fit, s_eval, wx_eval_sq, s: svd.s, o, i, d_max }
+    }
+
+    /// Singular values of `W·X_basis`, descending (length [`Self::d_max`]).
+    pub fn singular_values(&self) -> &[f32] {
+        &self.s
     }
 
     /// Dense-layer FLOPs this adapter is replacing.

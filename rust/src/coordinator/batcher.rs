@@ -155,6 +155,7 @@ impl Batcher {
             (self.engine.effective_rank_frac(rate).clamp(0.0, 1.0) * 1000.0) as u64,
             Ordering::Relaxed,
         );
+        self.metrics.set_layer_rank_fracs(self.engine.layer_effective_rank_fracs(rate));
     }
 
     fn take_pending_cancel(&self, id: &str) -> bool {

@@ -47,6 +47,10 @@ pub struct Metrics {
     pub budget_switches: AtomicU64,
     /// Calibrated active-rank fraction at the current shared budget ×1000.
     pub effective_rank_frac_milli: AtomicU64,
+    /// Per-layer active-rank fractions at the current shared budget —
+    /// non-uniform when the engine carries a layer-wise allocation. A
+    /// gauge like `effective_rank_frac`, refreshed on every retune.
+    layer_rank_fracs: std::sync::Mutex<Vec<f64>>,
     /// Per-request resolved-budget histogram over [`BUDGET_EDGES`].
     budget_hist: [AtomicU64; 6],
     /// Wall-clock spent inside batched decode passes.
@@ -78,6 +82,25 @@ impl Metrics {
     /// Per-bucket counts of the budget histogram.
     pub fn budget_hist_counts(&self) -> Vec<u64> {
         self.budget_hist.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Refresh the per-layer active-rank gauge (layer-wise allocations;
+    /// empty when the engine has no per-layer notion). Recovers from a
+    /// poisoned lock: the gauge is a plain `Vec` swap, consistent at every
+    /// instruction boundary.
+    pub fn set_layer_rank_fracs(&self, fracs: Vec<f64>) {
+        *self
+            .layer_rank_fracs
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner()) = fracs;
+    }
+
+    /// Current per-layer active-rank gauge.
+    pub fn layer_rank_fracs(&self) -> Vec<f64> {
+        self.layer_rank_fracs
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+            .clone()
     }
 
     /// Record one batched decode pass: `tokens` sequences advanced in `d`.
@@ -207,6 +230,12 @@ impl Metrics {
                 ),
             ),
             (
+                "layer_rank_frac",
+                Json::Arr(
+                    self.layer_rank_fracs().into_iter().map(Json::Num).collect(),
+                ),
+            ),
+            (
                 "budget_hist",
                 Json::Arr(
                     self.budget_hist_counts()
@@ -268,6 +297,7 @@ mod tests {
             "spec_acceptance",
             "budget_switches",
             "effective_rank_frac",
+            "layer_rank_frac",
             "budget_hist",
             "budget_edges",
         ] {
@@ -331,6 +361,25 @@ mod tests {
         assert_eq!(hist.len(), edges.len(), "stats consumers zip these two arrays");
         assert_eq!(edges.len(), BUDGET_EDGES.len());
         assert_eq!(hist.len(), m.budget_hist_counts().len());
+    }
+
+    #[test]
+    fn layer_rank_gauge_round_trips_through_snapshot() {
+        let m = Metrics::new();
+        // Default: no per-layer notion → empty array, key still present.
+        let Json::Arr(a) = m.snapshot().get("layer_rank_frac").unwrap() else {
+            panic!("layer_rank_frac must be an array")
+        };
+        assert!(a.is_empty());
+        m.set_layer_rank_fracs(vec![0.9, 0.4, 0.65]);
+        assert_eq!(m.layer_rank_fracs(), vec![0.9, 0.4, 0.65]);
+        let Json::Arr(a) = m.snapshot().get("layer_rank_frac").unwrap() else {
+            panic!("layer_rank_frac must be an array")
+        };
+        assert_eq!(a.len(), 3);
+        // Gauge semantics: a retune replaces, never appends.
+        m.set_layer_rank_fracs(vec![1.0, 1.0]);
+        assert_eq!(m.layer_rank_fracs().len(), 2);
     }
 
     #[test]

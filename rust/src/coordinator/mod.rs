@@ -113,9 +113,13 @@ impl ServerConfig {
 
 /// Build the ONE engine that serves every tier of `cfg` (exposed for
 /// examples/benches). The native path calibrates once and attaches a
-/// runtime budget schedule ([`calibrate::adapt_runtime`]) — the old
-/// N-clone engine ladder is gone. Falls back to a seeded random init when
-/// trained artifacts are absent (smoke/CI paths).
+/// runtime budget schedule with a **layer-wise allocation**
+/// ([`calibrate::adapt_runtime_layerwise`]): each tier's rank is
+/// distributed over the layers by singular-value mass, but the schedule
+/// keys stay the scalar tier rates, so the protocol `budget` field and
+/// the queue-depth controller are unchanged — the old N-clone engine
+/// ladder is gone. Falls back to a seeded random init when trained
+/// artifacts are absent (smoke/CI paths).
 pub fn build_engine(cfg: &ServerConfig) -> anyhow::Result<Arc<dyn Engine>> {
     if cfg.engine == "pjrt" {
         // PJRT artifacts are AOT-compiled with their compute baked in: no
@@ -142,8 +146,19 @@ pub fn build_engine(cfg: &ServerConfig) -> anyhow::Result<Arc<dyn Engine>> {
             &corpus.train,
             &CalibOptions { n_fit: cfg.calib_fit, n_eval: 128, window: 128, seed: 0x5E12 },
         );
-        let (adapted, _reports) =
-            calibrate::adapt_runtime(Arc::clone(&model), &calib, &compressed, 512, 0x5E12);
+        // The draft tier (if any) gets the aggressive layer skew: drafts
+        // are verified at full budget, so lopsided allocations only raise
+        // acceptance, never output quality.
+        let draft =
+            (cfg.spec_k > 0 && spec_draft > 0.0).then_some(spec_draft);
+        let (adapted, _reports) = calibrate::adapt_runtime_layerwise(
+            Arc::clone(&model),
+            &calib,
+            &compressed,
+            512,
+            0x5E12,
+            draft,
+        );
         adapted
     };
     let mut engine = NativeEngine::new(Arc::new(adapted));

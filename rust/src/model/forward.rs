@@ -101,7 +101,11 @@ pub trait BlockOps: Sync {
     // "whatever the model's ambient budget is". Defaults ignore the rates,
     // so the dense model and fixed-budget adapters are untouched; the
     // runtime-budget `AdaptedModel` overrides these to mix per-request
-    // budgets inside one masked engine pass.
+    // budgets inside one masked engine pass. A rate is a *scalar key*:
+    // under a layer-wise allocation each layer's adapter resolves the same
+    // key to its own (rank, threshold) view, so `decode_step_body` and
+    // both decode batches thread per-layer budgets without carrying
+    // anything more than this one f64 per row.
 
     fn qkv_tok_batch_budgeted(&self, layer: usize, xs: &Mat, _rates: &[f64]) -> (Mat, Mat, Mat) {
         self.qkv_tok_batch(layer, xs)

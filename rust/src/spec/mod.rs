@@ -56,7 +56,12 @@ pub struct SpecConfig {
     /// (0 disables speculation by default).
     pub default_k: usize,
     /// Compression rate the draft passes run at (the cheap tier; should be
-    /// one of the engine's calibrated budget tiers).
+    /// one of the engine's calibrated budget tiers). Under the layer-wise
+    /// allocation this tier is calibrated with the aggressive
+    /// [`crate::adapters::layerwise::DRAFT_SKEW`]: the draft can afford a
+    /// lopsided per-layer rank split because verification at the full
+    /// budget catches any damage — the skew only moves acceptance, and it
+    /// moves it up at equal draft FLOPs.
     pub draft_rate: f64,
 }
 

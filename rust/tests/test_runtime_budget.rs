@@ -223,6 +223,121 @@ fn one_engine_serves_every_tier_through_set_budget() {
 }
 
 #[test]
+fn layerwise_schedules_keep_paged_and_mixed_budget_decode_bitwise() {
+    // The layer-wise allocation changes WHAT each tier computes (per-layer
+    // budgets), never HOW rates resolve: paged-vs-dense equality and
+    // mixed-budget row independence must hold unchanged.
+    let model = tiny_model(Arch::SwiGlu, 97);
+    let calib = calib_for(&model, 97);
+    let (runtime, _) = calibrate::adapt_runtime_layerwise(
+        Arc::clone(&model),
+        &calib,
+        &RATES,
+        32,
+        97,
+        Some(0.5),
+    );
+    let streams = test_streams();
+    // Paged decode equals dense-cache decode bitwise at every tier.
+    for &rate in &RATES {
+        runtime.set_budget(rate);
+        let mut pool = rana::kvcache::BlockPool::new(&model.cfg, 7, 64);
+        let mut paged: Vec<rana::kvcache::PagedKvCache> =
+            streams.iter().map(|_| rana::kvcache::PagedKvCache::new()).collect();
+        let mut dense: Vec<KvCache> =
+            streams.iter().map(|_| KvCache::new(&model.cfg)).collect();
+        for t in 0..streams[0].len() {
+            let toks: Vec<u32> = streams.iter().map(|s| s[t]).collect();
+            let mut prefs: Vec<&mut rana::kvcache::PagedKvCache> = paged.iter_mut().collect();
+            let got = decode_step_paged(&runtime, &toks, &mut pool, &mut prefs).unwrap();
+            let mut drefs: Vec<&mut KvCache> = dense.iter_mut().collect();
+            let want = decode_step_batch(&runtime, &toks, &mut drefs).unwrap();
+            assert_eq!(got.data, want.data, "layerwise rate {rate} step {t}: paged diverged");
+        }
+        for mut p in paged {
+            p.release(&mut pool);
+        }
+    }
+    // Mixed-budget batch rows equal their solo single-budget runs bitwise.
+    runtime.set_budget(0.0);
+    let rates = [0.2, 0.5, 0.0];
+    let streams = vec![vec![1u32, 5, 9, 30], vec![8, 8, 1, 0], vec![2, 9, 60, 4]];
+    let mut caches: Vec<KvCache> =
+        streams.iter().map(|_| KvCache::new(&model.cfg)).collect();
+    let mut mixed: Vec<Vec<Vec<f32>>> = vec![Vec::new(); streams.len()];
+    for t in 0..streams[0].len() {
+        let toks: Vec<u32> = streams.iter().map(|s| s[t]).collect();
+        let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+        let logits = decode_step_batch_budgeted(&runtime, &toks, &mut refs, &rates).unwrap();
+        for r in 0..streams.len() {
+            mixed[r].push(logits.row(r).to_vec());
+        }
+    }
+    for (r, stream) in streams.iter().enumerate() {
+        let mut cache = KvCache::new(&model.cfg);
+        for (t, &tok) in stream.iter().enumerate() {
+            let mut refs = vec![&mut cache];
+            let solo =
+                decode_step_batch_budgeted(&runtime, &[tok], &mut refs, &rates[r..r + 1])
+                    .unwrap();
+            assert_eq!(
+                solo.row(0).to_vec(),
+                mixed[r][t],
+                "layerwise row {r} (budget {}) step {t}: batch composition leaked",
+                rates[r]
+            );
+        }
+    }
+}
+
+#[test]
+fn layerwise_engine_matches_uniform_flops_and_reports_per_layer_ranks() {
+    let model = tiny_model(Arch::SwiGlu, 101);
+    let calib = calib_for(&model, 101);
+    let (uniform, _) =
+        calibrate::adapt_runtime(Arc::clone(&model), &calib, &RATES, 32, 101);
+    let (layered, reports) = calibrate::adapt_runtime_layerwise(
+        Arc::clone(&model),
+        &calib,
+        &RATES,
+        32,
+        101,
+        None,
+    );
+    for (t, &rate) in RATES.iter().enumerate() {
+        // Equal-FLOPs gate: mean-preserving allocation over affine
+        // component budgets — same knob value, same decode cost (the line
+        // search quantizes ranks, hence the tolerance).
+        uniform.set_budget(rate);
+        layered.set_budget(rate);
+        let u = uniform.decode_flops(32).total;
+        let l = layered.decode_flops(32).total;
+        assert!(
+            (l - u).abs() / u < 0.06,
+            "rate {rate}: layerwise {l} vs uniform {u} FLOPs"
+        );
+        // The report records a mean-preserving allocation.
+        let lr = &reports[t].layer_rates;
+        assert_eq!(lr.len(), model.cfg.n_layers);
+        let mean: f64 = lr.iter().sum::<f64>() / lr.len() as f64;
+        assert!((mean - rate).abs() < 1e-6, "rate {rate}: allocation mean {mean}");
+    }
+    layered.set_budget(0.0);
+    uniform.set_budget(0.0);
+    // The engine exports the per-layer gauge the metrics surface.
+    let engine = NativeEngine::new(Arc::new(layered));
+    for &rate in &RATES {
+        let fracs = engine.layer_effective_rank_fracs(rate);
+        assert_eq!(fracs.len(), model.cfg.n_layers);
+        for &f in &fracs {
+            assert!((0.0..=1.0).contains(&f), "rate {rate}: frac {f} out of range");
+        }
+    }
+    // Dense tier: every layer reports full rank.
+    assert!(engine.layer_effective_rank_fracs(0.0).iter().all(|&f| f == 1.0));
+}
+
+#[test]
 fn budget_override_bypasses_the_shared_prefix_trie() {
     // KV computed at one budget must never seed decoding at another: a
     // budget-overridden sequence neither adopts nor publishes trie blocks.
