@@ -1,6 +1,7 @@
 //! Example client for the typed serving protocol: drives generate,
-//! streaming, speculative (`spec_k`) generation, cancel, and stats against
-//! a running `rana serve`, asserting the response schema along the way.
+//! streaming, speculative (`spec_k`) generation, cancel, stats (including
+//! windowed reset), and trace against a running `rana serve`, asserting
+//! the response schema — timing blocks included — along the way.
 //! Used by the CI serving smoke step (`--spec` additionally asserts the
 //! draft/accepted counters move when the server runs with `--spec-k`).
 //!
@@ -65,7 +66,20 @@ fn main() -> anyhow::Result<()> {
     assert!(r.get_str("text")?.starts_with("the dax "), "echoed prompt prefix: {r}");
     assert_eq!(r.get_str("finish_reason")?, "length");
     assert!(r.get_f64("budget").is_ok());
-    println!("generate ok: {} tokens at budget {}", r.get_usize("tokens")?, r.get_f64("budget")?);
+    let timing = r.get("timing")?;
+    for key in ["queue_us", "ttft_us", "itl_mean_us", "total_us", "tokens"] {
+        anyhow::ensure!(timing.get(key).is_ok(), "timing block missing {key}: {r}");
+    }
+    anyhow::ensure!(
+        timing.get_f64("ttft_us")? <= timing.get_f64("total_us")?,
+        "TTFT must not exceed total: {timing}"
+    );
+    println!(
+        "generate ok: {} tokens at budget {} (ttft {} µs)",
+        r.get_usize("tokens")?,
+        r.get_f64("budget")?,
+        timing.get_f64("ttft_us")?,
+    );
 
     // 2. Sampled generate with a budget override.
     let r = c.call(&Json::obj(vec![
@@ -117,6 +131,10 @@ fn main() -> anyhow::Result<()> {
     // Frames must reassemble the final text exactly (tokens that decode to
     // nothing — BOS/padding on a random-init model — produce no frames).
     assert_eq!(format!("the lopa {deltas}"), done.get_str("text")?.to_string());
+    anyhow::ensure!(
+        done.get("timing")?.get("ttft_us").is_ok(),
+        "stream done frame must carry a timing block: {done}"
+    );
     println!("streaming ok: {frames} frames reassemble the text");
 
     // 4. Cancel an in-flight streaming generate from a second connection
@@ -183,7 +201,8 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(e.get("error")?.get_str("code")?, "unknown_op");
     println!("validation ok: structured errors, connection still live");
 
-    // 6. Stats: runtime-budget + speculation metrics present.
+    // 6. Stats: runtime-budget + speculation + latency/tracing metrics
+    // present.
     let s = c.call(&Json::obj(vec![("op", Json::str("stats"))]))?;
     for key in [
         "budget_hist",
@@ -194,9 +213,24 @@ fn main() -> anyhow::Result<()> {
         "accepted_tokens",
         "spec_acceptance",
         "spec_rollbacks",
+        "ttft_hist",
+        "ttft_edges",
+        "itl_hist",
+        "itl_edges",
+        "queue_wait_hist",
+        "queue_wait_edges",
+        "mean_ttft_us",
+        "mean_itl_us",
+        "p50_ttft_us",
+        "p99_ttft_us",
+        "phase_us",
     ] {
         anyhow::ensure!(s.get(key).is_ok(), "stats missing {key}: {s}");
     }
+    anyhow::ensure!(
+        s.get_f64("mean_ttft_us")? > 0.0,
+        "generates above must have produced TTFT samples: {s}"
+    );
     if args.get_flag("spec") {
         // Server-side speculation is on (`--spec-k`): the spec_k request
         // above (and the server default) must have proposed drafts.
@@ -211,11 +245,43 @@ fn main() -> anyhow::Result<()> {
     }
     println!("stats ok: {s}");
 
+    // 7. Trace: the finished requests above are in the timeline ring.
+    let t = c.call(&Json::obj(vec![
+        ("op", Json::str("trace")),
+        ("last", Json::Num(5.0)),
+    ]))?;
+    anyhow::ensure!(t.get_f64("count")? >= 1.0, "trace ring must hold timelines: {t}");
+    let timelines = t
+        .get("timelines")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("timelines must be an array: {t}"))?;
+    for tl in timelines {
+        anyhow::ensure!(tl.get("total_us").is_ok() && tl.get("events").is_ok());
+    }
+    println!("trace ok: {} timelines", timelines.len());
+
+    // 8. stats reset closes the window: the next snapshot starts clean.
+    let closing = c.call(&Json::obj(vec![
+        ("op", Json::str("stats")),
+        ("reset", Json::Bool(true)),
+    ]))?;
+    anyhow::ensure!(closing.get_f64("tokens_generated")? > 0.0, "closing window: {closing}");
+    let fresh = c.call(&Json::obj(vec![("op", Json::str("stats"))]))?;
+    anyhow::ensure!(
+        fresh.get_f64("tokens_generated")? == 0.0,
+        "reset must zero the token counter: {fresh}"
+    );
+    anyhow::ensure!(
+        fresh.get_f64("mean_ttft_us")? == 0.0,
+        "reset must zero the TTFT window: {fresh}"
+    );
+    println!("stats reset ok: window restarted");
+
     if args.get_flag("shutdown") {
         let r = c.call(&Json::obj(vec![("op", Json::str("shutdown"))]))?;
         anyhow::ensure!(r.get("ok")?.as_bool() == Some(true));
         println!("shutdown ok");
     }
-    println!("serve_client OK — generate/stream/cancel/stats all verified");
+    println!("serve_client OK — generate/stream/cancel/stats/trace all verified");
     Ok(())
 }

@@ -464,6 +464,85 @@ fn serving(opts: Opts) -> anyhow::Result<()> {
         layered.set_budget(0.0);
     }
 
+    println!("\n== Serving: request-tracing overhead + TTFT/ITL quantiles ==");
+    {
+        use rana::coordinator::batcher::generate_req;
+
+        let batch = 4usize;
+        let n_req = 12usize;
+        let engine: Arc<dyn Engine> = Arc::new(
+            NativeEngine::new(Arc::clone(&adapted)).with_decode_capacity(batch),
+        );
+        // Drive the same closed-loop generate burst with the tracer's event
+        // log + ring ON vs OFF (timing scalars are always recorded — they
+        // back the response timing blocks). Returns tok/s and the batcher
+        // so the traced run's histograms can be read back.
+        let run = |traced: bool| {
+            let batcher =
+                Arc::new(Batcher::new(Arc::clone(&engine), BudgetPolicy::fixed(0.0), batch));
+            batcher.tracer().set_enabled(traced);
+            let tx = batcher.submitter();
+            let b2 = Arc::clone(&batcher);
+            std::thread::spawn(move || b2.run());
+            let _ = call(&tx, generate_req("the dax lopa warm .", gen_tokens)); // warm
+            let t0 = Instant::now();
+            let handles: Vec<_> = (0..n_req)
+                .map(|i| {
+                    let tx = tx.clone();
+                    std::thread::spawn(move || {
+                        call(&tx, generate_req(&format!("the dax lopa number {i} ."), gen_tokens))
+                            .unwrap()
+                    })
+                })
+                .collect();
+            let mut toks = 0usize;
+            for h in handles {
+                toks += h.join().unwrap().get_usize("tokens").unwrap();
+            }
+            let tps = toks as f64 / t0.elapsed().as_secs_f64().max(1e-12);
+            batcher.close();
+            (tps, batcher)
+        };
+        let (no_trace_tps, _) = run(false);
+        let (trace_tps, traced) = run(true);
+        let m = &traced.metrics;
+        let overhead_pct = (no_trace_tps / trace_tps.max(1e-12) - 1.0) * 100.0;
+        println!(
+            "traced {trace_tps:7.0} tok/s   untraced {no_trace_tps:7.0} tok/s   \
+             overhead {overhead_pct:.2}% (target < 2% — DESIGN.md §2g)"
+        );
+        println!(
+            "TTFT p50/p95/p99: {}/{}/{} µs   ITL p50/p95/p99: {}/{}/{} µs   \
+             queue p50: {} µs",
+            m.ttft_quantile_us(0.50),
+            m.ttft_quantile_us(0.95),
+            m.ttft_quantile_us(0.99),
+            m.itl_quantile_us(0.50),
+            m.itl_quantile_us(0.95),
+            m.itl_quantile_us(0.99),
+            m.queue_wait_quantile_us(0.50),
+        );
+        println!(
+            "{}",
+            Json::obj(vec![
+                ("bench", Json::str("serving_trace")),
+                ("batch", Json::Num(batch as f64)),
+                ("requests", Json::Num(n_req as f64)),
+                ("gen_tokens", Json::Num(gen_tokens as f64)),
+                ("trace_tok_s", Json::Num(trace_tps)),
+                ("no_trace_tok_s", Json::Num(no_trace_tps)),
+                ("trace_overhead_pct", Json::Num(overhead_pct)),
+                ("ttft_p50_us", Json::Num(m.ttft_quantile_us(0.50) as f64)),
+                ("ttft_p95_us", Json::Num(m.ttft_quantile_us(0.95) as f64)),
+                ("ttft_p99_us", Json::Num(m.ttft_quantile_us(0.99) as f64)),
+                ("itl_p50_us", Json::Num(m.itl_quantile_us(0.50) as f64)),
+                ("itl_p95_us", Json::Num(m.itl_quantile_us(0.95) as f64)),
+                ("itl_p99_us", Json::Num(m.itl_quantile_us(0.99) as f64)),
+                ("timelines_recorded", Json::Num(traced.tracer().ring_len() as f64)),
+            ])
+        );
+    }
+
     println!("\n== Serving-path overhead: coordinator vs raw engine ==");
     let engine: Arc<dyn Engine> = Arc::new(NativeEngine::new(Arc::clone(&adapted)));
     let texts: Vec<String> =

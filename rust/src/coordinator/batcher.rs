@@ -21,8 +21,10 @@ use std::time::{Duration, Instant};
 use super::engine::{DecodeSession, Engine, SeqEvent, SessionRequest};
 use super::metrics::Metrics;
 use super::protocol::{
-    self, cancel_response, generate_response, score_response, GenerateRequest, Request,
+    self, cancel_response, generate_response, score_response, trace_response, GenerateRequest,
+    Request,
 };
+use crate::trace::{RequestTimeline, Tracer, TIMELINE_RING_CAP};
 use crate::util::json::Json;
 
 /// Queue-depth → shared-budget policy: depth ≥ thresholds[i] picks
@@ -93,6 +95,8 @@ pub struct Batcher {
     current_rate: Mutex<f64>,
     /// Cancel targets seen before their generate (bounded).
     pending_cancels: Mutex<HashSet<String>>,
+    /// Request-lifecycle trace collector (ring of finished timelines).
+    tracer: Arc<Tracer>,
 }
 
 impl Batcher {
@@ -120,7 +124,14 @@ impl Batcher {
             batch_wait: Duration::from_millis(2),
             current_rate: Mutex::new(0.0),
             pending_cancels: Mutex::new(HashSet::new()),
+            tracer: Arc::new(Tracer::new(TIMELINE_RING_CAP)),
         }
+    }
+
+    /// The trace collector: `serve` exports it at shutdown (`--trace-out`),
+    /// benches toggle it for the overhead A/B.
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.tracer
     }
 
     /// Handle used by the server / in-process clients to submit work.
@@ -212,6 +223,10 @@ impl Batcher {
     /// Respond to a generate job without running it (racing cancel won).
     fn respond_cancelled(&self, job: &Job, g: &GenerateRequest) {
         self.metrics.observe_latency(job.arrived.elapsed());
+        // Even a cancelled request gets a timeline (queue time, 0 tokens):
+        // the trace must account for every admission-queue occupant.
+        let tl = RequestTimeline::new(Arc::clone(&self.tracer), &g.id, job.arrived);
+        tl.finish();
         let _ = job.resp.send(generate_response(
             &g.id,
             &g.prompt,
@@ -220,7 +235,29 @@ impl Batcher {
             g.budget.unwrap_or_else(|| self.current_rate()),
             "cancelled",
             g.stream,
+            Some(tl.timing_json()),
         ));
+    }
+
+    /// Answer a `stats` op: snapshot (tagged with the request id), then
+    /// optionally reset the windowed counters *after* the snapshot so the
+    /// caller sees the window it is closing.
+    fn respond_stats(&self, job: &Job, id: &str, reset: bool) {
+        let mut snap = self.metrics.snapshot();
+        if let Json::Obj(m) = &mut snap {
+            m.insert("id".into(), Json::str(id));
+        }
+        let _ = job.resp.send(snap);
+        if reset {
+            self.metrics.reset_window();
+        }
+        self.metrics.observe_latency(job.arrived.elapsed());
+    }
+
+    /// Answer a `trace` op with the last `last` finished-request timelines.
+    fn respond_trace(&self, job: &Job, id: &str, last: usize) {
+        let _ = job.resp.send(trace_response(id, self.tracer.timelines_json(last)));
+        self.metrics.observe_latency(job.arrived.elapsed());
     }
 
     /// Execute one batch. Returns jobs that arrived *during* a decode
@@ -245,13 +282,13 @@ impl Batcher {
                 Request::Score(_) => score_jobs.push(job),
                 Request::Generate(_) => gen_jobs.push(job),
                 Request::Cancel { .. } => cancels.push(job),
-                Request::Stats { id } => {
-                    let mut snap = self.metrics.snapshot();
-                    if let Json::Obj(m) = &mut snap {
-                        m.insert("id".into(), Json::str(id));
-                    }
-                    let _ = job.resp.send(snap);
-                    self.metrics.observe_latency(job.arrived.elapsed());
+                Request::Stats { id, reset } => {
+                    let (id, reset) = (id.clone(), *reset);
+                    self.respond_stats(&job, &id, reset);
+                }
+                Request::Trace { id, last } => {
+                    let (id, last) = (id.clone(), *last);
+                    self.respond_trace(&job, &id, last);
                 }
                 Request::Shutdown { id } => {
                     // Connection-level concern; in-process callers get ack.
@@ -299,8 +336,21 @@ impl Batcher {
                         _ => unreachable!(),
                     })
                     .collect();
+                // Request-level timelines: admission happens here, tokens
+                // arrive as one opaque block, so TTFT/ITL stay unsampled.
+                let timelines: Vec<RequestTimeline> = gen_jobs
+                    .iter()
+                    .map(|j| {
+                        let Request::Generate(g) = &j.req else { unreachable!() };
+                        let tl =
+                            RequestTimeline::new(Arc::clone(&self.tracer), &g.id, j.arrived);
+                        tl.mark_admit();
+                        self.metrics.observe_queue_wait(j.arrived.elapsed());
+                        tl
+                    })
+                    .collect();
                 let outs = self.engine.generate_batch(&prompts);
-                for (job, out) in gen_jobs.into_iter().zip(outs) {
+                for ((job, out), tl) in gen_jobs.into_iter().zip(outs).zip(timelines) {
                     let Request::Generate(g) = &job.req else { unreachable!() };
                     let rate = g.budget.unwrap_or_else(|| self.current_rate());
                     self.metrics.observe_budget(rate);
@@ -308,6 +358,7 @@ impl Batcher {
                         .tokens_generated
                         .fetch_add(g.max_tokens as u64, Ordering::Relaxed);
                     self.metrics.observe_latency(job.arrived.elapsed());
+                    tl.finish();
                     let _ = job.resp.send(generate_response(
                         &g.id,
                         &out,
@@ -316,6 +367,7 @@ impl Batcher {
                         rate,
                         "length",
                         g.stream,
+                        Some(tl.timing_json()),
                     ));
                 }
             }
@@ -357,6 +409,8 @@ impl Batcher {
         let mut inflight: HashMap<u64, Job> = HashMap::new();
         // Request-id → session-id, for mid-flight cancels.
         let mut sids: HashMap<String, u64> = HashMap::new();
+        // Session-id → live timeline, closed out on `Finished`.
+        let mut timelines: HashMap<u64, RequestTimeline> = HashMap::new();
         let mut carried: Vec<Job> = Vec::new();
         // Bound on mid-session admissions: under sustained generate-only
         // load the session must still drain and return to `run`, so batch
@@ -386,14 +440,16 @@ impl Batcher {
                                     fresh_budget -= 1;
                                     Some(job)
                                 }
-                                Request::Stats { id } => {
+                                Request::Stats { id, reset } => {
                                     self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-                                    let mut snap = self.metrics.snapshot();
-                                    if let Json::Obj(m) = &mut snap {
-                                        m.insert("id".into(), Json::str(id));
-                                    }
-                                    let _ = job.resp.send(snap);
-                                    self.metrics.observe_latency(job.arrived.elapsed());
+                                    let (id, reset) = (id.clone(), *reset);
+                                    self.respond_stats(&job, &id, reset);
+                                    continue;
+                                }
+                                Request::Trace { id, last } => {
+                                    self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                                    let (id, last) = (id.clone(), *last);
+                                    self.respond_trace(&job, &id, last);
                                     continue;
                                 }
                                 Request::Cancel { id, target } => {
@@ -437,6 +493,9 @@ impl Batcher {
                     self.respond_cancelled(&job, g);
                     continue;
                 }
+                // The timeline's enqueue instant back-dates to arrival; the
+                // engine marks tokens on the clone carried by the request.
+                let tl = RequestTimeline::new(Arc::clone(&self.tracer), &g.id, job.arrived);
                 let sreq = SessionRequest {
                     prompt: g.prompt.clone(),
                     max_new: g.max_tokens,
@@ -444,15 +503,21 @@ impl Batcher {
                     stop: g.stop.clone(),
                     budget: g.budget,
                     spec_k: g.spec_k,
+                    timeline: Some(tl.clone()),
                 };
                 match session.try_join(&sreq) {
                     Some(sid) => {
                         self.metrics
                             .observe_budget(g.budget.unwrap_or_else(|| self.current_rate()));
+                        tl.mark_admit();
+                        self.metrics.observe_queue_wait(job.arrived.elapsed());
                         sids.insert(g.id.clone(), sid);
                         inflight.insert(sid, job);
+                        timelines.insert(sid, tl);
                     }
                     None => {
+                        // Unadmitted: drop the tentative timeline; a fresh one
+                        // (same arrival instant) is created on the next try.
                         waiting.push_front(job);
                         break;
                     }
@@ -485,6 +550,10 @@ impl Batcher {
                                 .tokens_generated
                                 .fetch_add(generated as u64, Ordering::Relaxed);
                             self.metrics.observe_latency(job.arrived.elapsed());
+                            let timing = timelines.remove(&id).map(|tl| {
+                                tl.finish();
+                                tl.timing_json()
+                            });
                             let _ = job.resp.send(generate_response(
                                 &g.id,
                                 &text,
@@ -493,6 +562,7 @@ impl Batcher {
                                 g.budget.unwrap_or_else(|| self.current_rate()),
                                 reason.as_str(),
                                 g.stream,
+                                timing,
                             ));
                         }
                     }
@@ -573,7 +643,17 @@ pub fn generate_req(prompt: &str, tokens: usize) -> Request {
 }
 
 pub fn stats_req() -> Request {
-    Request::Stats { id: next_local_id() }
+    Request::Stats { id: next_local_id(), reset: false }
+}
+
+/// `stats` that also resets the windowed counters after the snapshot.
+pub fn stats_reset_req() -> Request {
+    Request::Stats { id: next_local_id(), reset: true }
+}
+
+/// Fetch the last `last` finished-request timelines.
+pub fn trace_req(last: usize) -> Request {
+    Request::Trace { id: next_local_id(), last }
 }
 
 fn next_local_id() -> String {
@@ -611,6 +691,9 @@ mod tests {
         assert!(g.get_str("text").unwrap().starts_with("ab"));
         assert_eq!(g.get_str("finish_reason").unwrap(), "length");
         assert_eq!(g.get_usize("tokens").unwrap(), 3);
+        let timing = g.get("timing").expect("generate responses carry a timing block");
+        assert_eq!(timing.get_usize("tokens").unwrap(), 3);
+        assert!(timing.get_f64("ttft_us").unwrap() <= timing.get_f64("total_us").unwrap());
     }
 
     #[test]

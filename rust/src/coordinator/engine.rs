@@ -5,7 +5,9 @@
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+use crate::trace::{PhaseTotals, RequestTimeline, SeqBatchEvent};
 
 use super::metrics::Metrics;
 use crate::adapters::AdaptedModel;
@@ -31,6 +33,10 @@ pub struct SessionRequest {
     /// Per-request speculative draft length (`None` = the engine default,
     /// `Some(0)` = speculation off for this request).
     pub spec_k: Option<usize>,
+    /// Lifecycle timeline handle (`None` = untraced). The session marks
+    /// tokens and routes batch events onto it; timing only, never read by
+    /// the schedule.
+    pub timeline: Option<RequestTimeline>,
 }
 
 impl SessionRequest {
@@ -387,6 +393,19 @@ trait SessionBatch: Send {
     fn spec_stats(&self) -> (u64, u64, u64) {
         (0, 0, 0)
     }
+    /// Per-phase wall-clock running totals (zero when the batch layer does
+    /// not time its passes).
+    fn phase_stats(&self) -> PhaseTotals {
+        PhaseTotals::default()
+    }
+    /// Structural per-sequence events since the last drain. May include
+    /// events of sequences owned by other sessions on a shared batch —
+    /// callers filter by ownership.
+    fn drain_seq_events(&mut self) -> Vec<(u64, SeqBatchEvent)> {
+        Vec::new()
+    }
+    /// Return drained events that belong to other sessions.
+    fn restore_seq_events(&mut self, _items: Vec<(u64, SeqBatchEvent)>) {}
 }
 
 impl SessionBatch for DecodeBatch {
@@ -425,6 +444,18 @@ impl SessionBatch for DecodeBatch {
 
     fn spec_stats(&self) -> (u64, u64, u64) {
         DecodeBatch::spec_stats(self)
+    }
+
+    fn phase_stats(&self) -> PhaseTotals {
+        DecodeBatch::phase_stats(self)
+    }
+
+    fn drain_seq_events(&mut self) -> Vec<(u64, SeqBatchEvent)> {
+        DecodeBatch::drain_seq_events(self)
+    }
+
+    fn restore_seq_events(&mut self, items: Vec<(u64, SeqBatchEvent)>) {
+        DecodeBatch::restore_seq_events(self, items)
     }
 }
 
@@ -472,6 +503,18 @@ impl SessionBatch for Arc<Mutex<PagedDecodeBatch>> {
     fn spec_stats(&self) -> (u64, u64, u64) {
         self.lock().unwrap().spec_stats()
     }
+
+    fn phase_stats(&self) -> PhaseTotals {
+        self.lock().unwrap().phase_stats()
+    }
+
+    fn drain_seq_events(&mut self) -> Vec<(u64, SeqBatchEvent)> {
+        self.lock().unwrap().drain_seq_events()
+    }
+
+    fn restore_seq_events(&mut self, items: Vec<(u64, SeqBatchEvent)>) {
+        self.lock().unwrap().restore_seq_events(items)
+    }
 }
 
 /// Per-sequence session state: original prompt text, accumulated generated
@@ -488,6 +531,9 @@ struct GenState {
     /// could still become a stop match is held back, so concatenated
     /// frames always equal the (possibly stop-truncated) final text.
     emitted_len: usize,
+    /// Lifecycle timeline to mark tokens and batch events on (untraced
+    /// requests carry `None`).
+    timeline: Option<RequestTimeline>,
 }
 
 /// Longest suffix of `text` that is a *proper* prefix of some stop
@@ -520,6 +566,8 @@ struct NativeDecodeSession<T: SessionBatch> {
     reported_preempts: u64,
     /// Cumulative speculation counters already forwarded to `metrics`.
     reported_spec: (u64, u64, u64),
+    /// Cumulative per-phase timers already forwarded to `metrics`.
+    reported_phases: PhaseTotals,
 }
 
 impl<T: SessionBatch> NativeDecodeSession<T> {
@@ -529,6 +577,7 @@ impl<T: SessionBatch> NativeDecodeSession<T> {
         let (reported_hits, reported_preempts) =
             batch.kv_stats().map(|(_, _, h, p)| (h, p)).unwrap_or((0, 0));
         let reported_spec = batch.spec_stats();
+        let reported_phases = batch.phase_stats();
         Self {
             model,
             batch,
@@ -537,6 +586,7 @@ impl<T: SessionBatch> NativeDecodeSession<T> {
             reported_hits,
             reported_preempts,
             reported_spec,
+            reported_phases,
         }
     }
 }
@@ -561,6 +611,7 @@ impl<T: SessionBatch> DecodeSession for NativeDecodeSession<T> {
                 reason: FinishReason::Length,
                 trunc: None,
                 emitted_len: 0,
+                timeline: req.timeline.clone(),
             },
         );
         Some(id)
@@ -592,6 +643,32 @@ impl<T: SessionBatch> DecodeSession for NativeDecodeSession<T> {
                 self.reported_spec = (drafts, accepted, rollbacks);
             }
         }
+        // Forward per-phase timing deltas (running totals on the batch,
+        // possibly shared across sessions — same delta pattern as above).
+        let phases = self.batch.phase_stats();
+        let phase_delta = phases.delta_since(&self.reported_phases);
+        if !phase_delta.is_zero() {
+            if let Some(m) = &self.metrics {
+                m.observe_phases(&phase_delta);
+            }
+            self.reported_phases = phases;
+        }
+        // Route structural batch events to their owners' timelines; events
+        // of other sessions' sequences go back for their owners.
+        let mut foreign_events: Vec<(u64, SeqBatchEvent)> = Vec::new();
+        for (id, ev) in self.batch.drain_seq_events() {
+            match self.gen.get(&id) {
+                Some(g) => {
+                    if let Some(tl) = &g.timeline {
+                        tl.record_batch_event(ev);
+                    }
+                }
+                None => foreign_events.push((id, ev)),
+            }
+        }
+        if !foreign_events.is_empty() {
+            self.batch.restore_seq_events(foreign_events);
+        }
         let mut events: Vec<SeqEvent> = Vec::new();
         // Stream deltas: decode this pass's tokens, accumulate text, match
         // stop sequences. Tokens of sequences owned by other sessions (on
@@ -602,6 +679,19 @@ impl<T: SessionBatch> DecodeSession for NativeDecodeSession<T> {
                 theirs.push((id, tok));
                 continue;
             };
+            // Every committed token marks the timeline — before the stop /
+            // cancel skip, so TTFT and ITL cover what the engine produced.
+            if let Some(tl) = &g.timeline {
+                let mark = tl.mark_token();
+                if let Some(m) = &self.metrics {
+                    if let Some(us) = mark.ttft_us {
+                        m.observe_ttft(Duration::from_micros(us));
+                    }
+                    if let Some(us) = mark.itl_us {
+                        m.observe_itl(Duration::from_micros(us));
+                    }
+                }
+            }
             if g.trunc.is_some() || g.reason == FinishReason::Cancelled {
                 continue; // stragglers after a stop match / cancel
             }

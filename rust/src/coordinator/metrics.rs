@@ -4,12 +4,68 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
+use crate::trace::PhaseTotals;
 use crate::util::json::Json;
 
 /// Upper edges of the latency histogram buckets, in microseconds.
-/// Samples above the last edge clamp into the last bucket.
+/// Samples above the last edge clamp into the last bucket. Shared by the
+/// whole-request, TTFT, and queue-wait histograms.
 pub const LATENCY_EDGES_US: [u64; 10] =
     [100, 300, 1_000, 3_000, 10_000, 30_000, 100_000, 300_000, 1_000_000, 3_000_000];
+
+/// Upper edges of the inter-token-latency histogram, in microseconds —
+/// shifted one decade finer than [`LATENCY_EDGES_US`] because per-token gaps
+/// sit well below whole-request latencies.
+pub const ITL_EDGES_US: [u64; 10] =
+    [50, 100, 300, 1_000, 3_000, 10_000, 30_000, 100_000, 300_000, 1_000_000];
+
+fn bucket_add(hist: &[AtomicU64; 10], edges: &[u64; 10], us: u64) {
+    let idx = edges.iter().position(|&e| us <= e).unwrap_or(edges.len() - 1);
+    hist[idx].fetch_add(1, Ordering::Relaxed);
+}
+
+/// Quantile from bucket counts with linear interpolation inside the bucket
+/// (the old behavior returned the bucket's upper edge, overstating p50 by up
+/// to the bucket width — 3× at these edges).
+fn hist_quantile_us(counts: &[u64], edges: &[u64], q: f64) -> u64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let target = ((q * total as f64).ceil() as u64).max(1);
+    let mut acc = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        if acc + c >= target {
+            let lo = if i == 0 { 0 } else { edges[i - 1] };
+            let hi = edges[i];
+            let frac = (target - acc) as f64 / c as f64;
+            return lo + ((hi - lo) as f64 * frac).round() as u64;
+        }
+        acc += c;
+    }
+    edges[edges.len() - 1]
+}
+
+fn edges_json(edges: &[u64]) -> Json {
+    Json::Arr(edges.iter().map(|&e| Json::Num(e as f64)).collect())
+}
+
+fn hist_json(hist: &[AtomicU64; 10]) -> Json {
+    Json::Arr(hist.iter().map(|c| Json::Num(c.load(Ordering::Relaxed) as f64)).collect())
+}
+
+fn hist_counts(hist: &[AtomicU64; 10]) -> Vec<u64> {
+    hist.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+}
+
+fn hist_zero(hist: &[AtomicU64; 10]) {
+    for c in hist {
+        c.store(0, Ordering::Relaxed);
+    }
+}
 
 /// Upper edges of the per-request budget histogram (compression rate);
 /// bucket 0 counts dense (rate 0) requests, the last bucket clamps.
@@ -57,6 +113,24 @@ pub struct Metrics {
     decode_time_us: AtomicU64,
     latency: [AtomicU64; 10],
     latency_sum_us: AtomicU64,
+    /// Time-to-first-token histogram over [`LATENCY_EDGES_US`].
+    ttft_hist: [AtomicU64; 10],
+    ttft_sum_us: AtomicU64,
+    ttft_count: AtomicU64,
+    /// Inter-token-latency histogram over [`ITL_EDGES_US`].
+    itl_hist: [AtomicU64; 10],
+    itl_sum_us: AtomicU64,
+    itl_count: AtomicU64,
+    /// Enqueue→admission wait histogram over [`LATENCY_EDGES_US`].
+    queue_wait_hist: [AtomicU64; 10],
+    queue_wait_sum_us: AtomicU64,
+    queue_wait_count: AtomicU64,
+    /// Per-phase engine-pass timers (running totals, µs).
+    phase_prefill_us: AtomicU64,
+    phase_decode_us: AtomicU64,
+    phase_spec_draft_us: AtomicU64,
+    phase_spec_verify_us: AtomicU64,
+    phase_maintenance_us: AtomicU64,
 }
 
 impl Metrics {
@@ -66,10 +140,53 @@ impl Metrics {
 
     pub fn observe_latency(&self, d: Duration) {
         let us = d.as_micros() as u64;
-        let idx = LATENCY_EDGES_US.iter().position(|&e| us <= e).unwrap_or(9);
-        self.latency[idx].fetch_add(1, Ordering::Relaxed);
+        bucket_add(&self.latency, &LATENCY_EDGES_US, us);
         self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
         self.responses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one request's time-to-first-token (enqueue → first token).
+    pub fn observe_ttft(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        bucket_add(&self.ttft_hist, &LATENCY_EDGES_US, us);
+        self.ttft_sum_us.fetch_add(us, Ordering::Relaxed);
+        self.ttft_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one inter-token gap.
+    pub fn observe_itl(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        bucket_add(&self.itl_hist, &ITL_EDGES_US, us);
+        self.itl_sum_us.fetch_add(us, Ordering::Relaxed);
+        self.itl_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one request's enqueue→admission wait.
+    pub fn observe_queue_wait(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        bucket_add(&self.queue_wait_hist, &LATENCY_EDGES_US, us);
+        self.queue_wait_sum_us.fetch_add(us, Ordering::Relaxed);
+        self.queue_wait_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Accumulate a per-phase timing delta reported by a decode session.
+    pub fn observe_phases(&self, d: &PhaseTotals) {
+        self.phase_prefill_us.fetch_add(d.prefill_us, Ordering::Relaxed);
+        self.phase_decode_us.fetch_add(d.decode_us, Ordering::Relaxed);
+        self.phase_spec_draft_us.fetch_add(d.spec_draft_us, Ordering::Relaxed);
+        self.phase_spec_verify_us.fetch_add(d.spec_verify_us, Ordering::Relaxed);
+        self.phase_maintenance_us.fetch_add(d.maintenance_us, Ordering::Relaxed);
+    }
+
+    /// Current per-phase totals.
+    pub fn phase_totals(&self) -> PhaseTotals {
+        PhaseTotals {
+            prefill_us: self.phase_prefill_us.load(Ordering::Relaxed),
+            decode_us: self.phase_decode_us.load(Ordering::Relaxed),
+            spec_draft_us: self.phase_spec_draft_us.load(Ordering::Relaxed),
+            spec_verify_us: self.phase_spec_verify_us.load(Ordering::Relaxed),
+            maintenance_us: self.phase_maintenance_us.load(Ordering::Relaxed),
+        }
     }
 
     /// Record the budget a request was actually served at (per-request
@@ -158,22 +275,25 @@ impl Metrics {
         }
     }
 
-    /// Approximate latency quantile from the histogram (upper-edge bound).
+    /// Approximate latency quantile from the histogram, linearly
+    /// interpolated within the landing bucket.
     pub fn latency_quantile_us(&self, q: f64) -> u64 {
-        let counts: Vec<u64> = self.latency.iter().map(|c| c.load(Ordering::Relaxed)).collect();
-        let total: u64 = counts.iter().sum();
-        if total == 0 {
-            return 0;
-        }
-        let target = (q * total as f64).ceil() as u64;
-        let mut acc = 0;
-        for (i, &c) in counts.iter().enumerate() {
-            acc += c;
-            if acc >= target {
-                return LATENCY_EDGES_US[i];
-            }
-        }
-        LATENCY_EDGES_US[9]
+        hist_quantile_us(&hist_counts(&self.latency), &LATENCY_EDGES_US, q)
+    }
+
+    /// Approximate TTFT quantile (same interpolation as latency).
+    pub fn ttft_quantile_us(&self, q: f64) -> u64 {
+        hist_quantile_us(&hist_counts(&self.ttft_hist), &LATENCY_EDGES_US, q)
+    }
+
+    /// Approximate inter-token-latency quantile.
+    pub fn itl_quantile_us(&self, q: f64) -> u64 {
+        hist_quantile_us(&hist_counts(&self.itl_hist), &ITL_EDGES_US, q)
+    }
+
+    /// Approximate queue-wait quantile.
+    pub fn queue_wait_quantile_us(&self, q: f64) -> u64 {
+        hist_quantile_us(&hist_counts(&self.queue_wait_hist), &LATENCY_EDGES_US, q)
     }
 
     pub fn mean_latency_us(&self) -> f64 {
@@ -183,6 +303,79 @@ impl Metrics {
         } else {
             self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
         }
+    }
+
+    pub fn mean_ttft_us(&self) -> f64 {
+        let n = self.ttft_count.load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.ttft_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    pub fn mean_itl_us(&self) -> f64 {
+        let n = self.itl_count.load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.itl_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    pub fn mean_queue_wait_us(&self) -> f64 {
+        let n = self.queue_wait_count.load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.queue_wait_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Reset the per-interval window: zero every counter and histogram, keep
+    /// gauges (queue depth, budgets, layer fractions, pool occupancy) and
+    /// re-seed the pool high-water mark from current occupancy. Backs the
+    /// `stats` op's `{"reset": true}` so pollers read per-interval rates.
+    pub fn reset_window(&self) {
+        for c in [
+            &self.requests,
+            &self.responses,
+            &self.batches,
+            &self.batched_jobs,
+            &self.tokens_generated,
+            &self.decode_steps,
+            &self.decode_tokens,
+            &self.decode_time_us,
+            &self.prefix_hit_tokens,
+            &self.kv_preemptions,
+            &self.draft_tokens,
+            &self.accepted_tokens,
+            &self.spec_rollbacks,
+            &self.budget_switches,
+            &self.latency_sum_us,
+            &self.ttft_sum_us,
+            &self.ttft_count,
+            &self.itl_sum_us,
+            &self.itl_count,
+            &self.queue_wait_sum_us,
+            &self.queue_wait_count,
+            &self.phase_prefill_us,
+            &self.phase_decode_us,
+            &self.phase_spec_draft_us,
+            &self.phase_spec_verify_us,
+            &self.phase_maintenance_us,
+        ] {
+            c.store(0, Ordering::Relaxed);
+        }
+        hist_zero(&self.latency);
+        hist_zero(&self.ttft_hist);
+        hist_zero(&self.itl_hist);
+        hist_zero(&self.queue_wait_hist);
+        for c in &self.budget_hist {
+            c.store(0, Ordering::Relaxed);
+        }
+        let in_use = self.kv_blocks_in_use.load(Ordering::Relaxed);
+        self.kv_blocks_peak.store(in_use, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> Json {
@@ -252,7 +445,52 @@ impl Metrics {
             ("decode_tokens_per_sec", Json::Num(self.decode_tokens_per_sec())),
             ("mean_latency_us", Json::Num(self.mean_latency_us())),
             ("p50_latency_us", Json::Num(self.latency_quantile_us(0.5) as f64)),
+            ("p95_latency_us", Json::Num(self.latency_quantile_us(0.95) as f64)),
             ("p99_latency_us", Json::Num(self.latency_quantile_us(0.99) as f64)),
+            ("latency_hist", hist_json(&self.latency)),
+            ("latency_edges", edges_json(&LATENCY_EDGES_US)),
+            ("ttft_hist", hist_json(&self.ttft_hist)),
+            ("ttft_edges", edges_json(&LATENCY_EDGES_US)),
+            ("mean_ttft_us", Json::Num(self.mean_ttft_us())),
+            ("p50_ttft_us", Json::Num(self.ttft_quantile_us(0.5) as f64)),
+            ("p95_ttft_us", Json::Num(self.ttft_quantile_us(0.95) as f64)),
+            ("p99_ttft_us", Json::Num(self.ttft_quantile_us(0.99) as f64)),
+            ("itl_hist", hist_json(&self.itl_hist)),
+            ("itl_edges", edges_json(&ITL_EDGES_US)),
+            ("mean_itl_us", Json::Num(self.mean_itl_us())),
+            ("p50_itl_us", Json::Num(self.itl_quantile_us(0.5) as f64)),
+            ("p95_itl_us", Json::Num(self.itl_quantile_us(0.95) as f64)),
+            ("p99_itl_us", Json::Num(self.itl_quantile_us(0.99) as f64)),
+            ("queue_wait_hist", hist_json(&self.queue_wait_hist)),
+            ("queue_wait_edges", edges_json(&LATENCY_EDGES_US)),
+            ("mean_queue_wait_us", Json::Num(self.mean_queue_wait_us())),
+            ("p50_queue_wait_us", Json::Num(self.queue_wait_quantile_us(0.5) as f64)),
+            ("p99_queue_wait_us", Json::Num(self.queue_wait_quantile_us(0.99) as f64)),
+            (
+                "phase_us",
+                Json::obj(vec![
+                    (
+                        "prefill",
+                        Json::Num(self.phase_prefill_us.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "decode",
+                        Json::Num(self.phase_decode_us.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "spec_draft",
+                        Json::Num(self.phase_spec_draft_us.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "spec_verify",
+                        Json::Num(self.phase_spec_verify_us.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "maintenance",
+                        Json::Num(self.phase_maintenance_us.load(Ordering::Relaxed) as f64),
+                    ),
+                ]),
+            ),
         ])
     }
 }
@@ -272,6 +510,167 @@ mod tests {
         assert!(p50 <= p99);
         assert!(p50 >= 1_000 && p99 >= 100_000, "p50={p50} p99={p99}");
         assert!(m.mean_latency_us() > 0.0);
+    }
+
+    #[test]
+    fn quantiles_interpolate_within_buckets() {
+        // 100 samples all in the (1_000, 3_000] bucket: the old upper-edge
+        // rule pinned every quantile to 3_000; interpolation spreads them.
+        let m = Metrics::new();
+        for _ in 0..100 {
+            m.observe_latency(Duration::from_micros(2_000));
+        }
+        let p50 = m.latency_quantile_us(0.5);
+        let p99 = m.latency_quantile_us(0.99);
+        assert!(p50 < 3_000, "p50 must not sit on the bucket's upper edge, got {p50}");
+        assert!(p50 > 1_000, "p50 must stay inside the landing bucket, got {p50}");
+        assert!(p50 < p99, "interpolation must keep quantiles ordered");
+        assert_eq!(m.latency_quantile_us(1.0), 3_000, "p100 is the bucket's upper edge");
+        // Direct check of the interpolation arithmetic: 4 samples in one
+        // bucket → p25 lands a quarter of the way through it.
+        let counts = [0, 0, 0, 4, 0, 0, 0, 0, 0, 0];
+        assert_eq!(hist_quantile_us(&counts, &LATENCY_EDGES_US, 0.25), 1_500);
+        assert_eq!(hist_quantile_us(&counts, &LATENCY_EDGES_US, 0.5), 2_000);
+        assert_eq!(hist_quantile_us(&counts, &LATENCY_EDGES_US, 1.0), 3_000);
+        assert_eq!(hist_quantile_us(&[0; 10], &LATENCY_EDGES_US, 0.5), 0, "empty hist → 0");
+    }
+
+    #[test]
+    fn ttft_itl_queue_histograms_bucket_and_quantile() {
+        let m = Metrics::new();
+        for us in [500u64, 2_000, 8_000, 40_000] {
+            m.observe_ttft(Duration::from_micros(us));
+            m.observe_queue_wait(Duration::from_micros(us / 10));
+        }
+        for us in [80u64, 200, 700, 2_500] {
+            m.observe_itl(Duration::from_micros(us));
+        }
+        assert!(m.ttft_quantile_us(0.5) <= m.ttft_quantile_us(0.99));
+        assert!(m.itl_quantile_us(0.5) <= m.itl_quantile_us(0.99));
+        assert!(m.queue_wait_quantile_us(0.5) <= m.queue_wait_quantile_us(0.99));
+        assert!(m.mean_ttft_us() > 0.0 && m.mean_itl_us() > 0.0 && m.mean_queue_wait_us() > 0.0);
+        // Counts land where expected and the snapshot zips hist with edges.
+        let s = m.snapshot();
+        for (hist_key, edges_key) in [
+            ("ttft_hist", "ttft_edges"),
+            ("itl_hist", "itl_edges"),
+            ("queue_wait_hist", "queue_wait_edges"),
+            ("latency_hist", "latency_edges"),
+        ] {
+            let Json::Arr(h) = s.get(hist_key).unwrap() else { panic!("{hist_key} not array") };
+            let Json::Arr(e) = s.get(edges_key).unwrap() else { panic!("{edges_key} not array") };
+            assert_eq!(h.len(), e.len(), "{hist_key} must zip with {edges_key}");
+        }
+        let Json::Arr(h) = s.get("ttft_hist").unwrap() else { unreachable!() };
+        let total: f64 = h.iter().map(|c| c.as_f64().unwrap()).sum();
+        assert_eq!(total, 4.0, "every TTFT observation must land in a bucket");
+    }
+
+    #[test]
+    fn phase_totals_accumulate_and_snapshot() {
+        let m = Metrics::new();
+        m.observe_phases(&PhaseTotals {
+            prefill_us: 100,
+            decode_us: 200,
+            spec_draft_us: 30,
+            spec_verify_us: 40,
+            maintenance_us: 5,
+        });
+        m.observe_phases(&PhaseTotals { decode_us: 50, ..PhaseTotals::default() });
+        let t = m.phase_totals();
+        assert_eq!((t.prefill_us, t.decode_us), (100, 250));
+        let s = m.snapshot();
+        let p = s.get("phase_us").unwrap();
+        assert_eq!(p.get_f64("decode").unwrap(), 250.0);
+        assert_eq!(p.get_f64("spec_verify").unwrap(), 40.0);
+        assert_eq!(p.get_f64("maintenance").unwrap(), 5.0);
+    }
+
+    #[test]
+    fn reset_window_zeros_counters_but_keeps_gauges() {
+        let m = Metrics::new();
+        m.requests.fetch_add(7, Ordering::Relaxed);
+        m.queue_depth.store(3, Ordering::Relaxed);
+        m.rank_budget_milli.store(500, Ordering::Relaxed);
+        m.set_layer_rank_fracs(vec![0.5, 0.9]);
+        m.observe_latency(Duration::from_micros(2_000));
+        m.observe_ttft(Duration::from_micros(1_000));
+        m.observe_itl(Duration::from_micros(100));
+        m.observe_queue_wait(Duration::from_micros(50));
+        m.observe_budget(0.5);
+        m.observe_spec(8, 6, 1);
+        m.observe_kv_pool(4, 9, 16, 2);
+        m.observe_phases(&PhaseTotals { decode_us: 99, ..PhaseTotals::default() });
+        m.reset_window();
+        assert_eq!(m.requests.load(Ordering::Relaxed), 0);
+        assert_eq!(m.responses.load(Ordering::Relaxed), 0);
+        assert_eq!(m.draft_tokens.load(Ordering::Relaxed), 0);
+        assert_eq!(m.kv_preemptions.load(Ordering::Relaxed), 0);
+        assert_eq!(m.latency_quantile_us(0.5), 0);
+        assert_eq!(m.ttft_quantile_us(0.5), 0);
+        assert_eq!(m.itl_quantile_us(0.5), 0);
+        assert!(m.phase_totals().is_zero());
+        assert_eq!(m.budget_hist_counts().iter().sum::<u64>(), 0);
+        // Gauges survive the window reset.
+        assert_eq!(m.queue_depth.load(Ordering::Relaxed), 3);
+        assert_eq!(m.rank_budget_milli.load(Ordering::Relaxed), 500);
+        assert_eq!(m.layer_rank_fracs(), vec![0.5, 0.9]);
+        assert_eq!(m.kv_blocks_in_use.load(Ordering::Relaxed), 4);
+        assert_eq!(m.kv_blocks_peak.load(Ordering::Relaxed), 4, "peak re-seeds from occupancy");
+    }
+
+    #[test]
+    fn concurrent_hammer_loses_no_counts_and_snapshots_stay_well_formed() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        let threads = 8;
+        let per_thread = 500u64;
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let m = Arc::clone(&m);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per_thread {
+                    let us = (t as u64 * 37 + i * 13) % 400_000 + 1;
+                    m.observe_latency(Duration::from_micros(us));
+                    m.observe_ttft(Duration::from_micros(us / 2));
+                    m.observe_itl(Duration::from_micros(us / 100 + 1));
+                    m.observe_queue_wait(Duration::from_micros(us / 4));
+                    m.observe_budget((i % 5) as f64 / 4.0);
+                    m.observe_spec(2, 1, 0);
+                    m.observe_phases(&PhaseTotals {
+                        decode_us: 3,
+                        prefill_us: 1,
+                        ..PhaseTotals::default()
+                    });
+                    m.requests.fetch_add(1, Ordering::Relaxed);
+                }
+            }));
+        }
+        // Snapshot concurrently with the writers: must never panic and every
+        // histogram must zip with its edge array mid-load.
+        for _ in 0..50 {
+            let s = m.snapshot();
+            let Json::Arr(h) = s.get("ttft_hist").unwrap() else { panic!("ttft_hist not array") };
+            assert_eq!(h.len(), LATENCY_EDGES_US.len());
+            assert!(s.get_f64("p99_ttft_us").is_ok());
+            assert!(s.get("phase_us").unwrap().get_f64("decode").is_ok());
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let n = threads as u64 * per_thread;
+        assert_eq!(m.requests.load(Ordering::Relaxed), n);
+        assert_eq!(m.responses.load(Ordering::Relaxed), n, "observe_latency counts responses");
+        assert_eq!(m.ttft_count.load(Ordering::Relaxed), n);
+        assert_eq!(m.itl_count.load(Ordering::Relaxed), n);
+        assert_eq!(m.queue_wait_count.load(Ordering::Relaxed), n);
+        assert_eq!(hist_counts(&m.latency).iter().sum::<u64>(), n, "no latency sample lost");
+        assert_eq!(hist_counts(&m.ttft_hist).iter().sum::<u64>(), n, "no TTFT sample lost");
+        assert_eq!(hist_counts(&m.itl_hist).iter().sum::<u64>(), n, "no ITL sample lost");
+        assert_eq!(m.budget_hist_counts().iter().sum::<u64>(), n);
+        assert_eq!(m.draft_tokens.load(Ordering::Relaxed), 2 * n);
+        assert_eq!(m.phase_totals().decode_us, 3 * n);
+        assert_eq!(m.phase_totals().prefill_us, n);
     }
 
     #[test]
@@ -300,6 +699,27 @@ mod tests {
             "layer_rank_frac",
             "budget_hist",
             "budget_edges",
+            "p95_latency_us",
+            "latency_hist",
+            "latency_edges",
+            "ttft_hist",
+            "ttft_edges",
+            "mean_ttft_us",
+            "p50_ttft_us",
+            "p95_ttft_us",
+            "p99_ttft_us",
+            "itl_hist",
+            "itl_edges",
+            "mean_itl_us",
+            "p50_itl_us",
+            "p95_itl_us",
+            "p99_itl_us",
+            "queue_wait_hist",
+            "queue_wait_edges",
+            "mean_queue_wait_us",
+            "p50_queue_wait_us",
+            "p99_queue_wait_us",
+            "phase_us",
         ] {
             assert!(s.get(key).is_ok(), "missing {key}");
         }

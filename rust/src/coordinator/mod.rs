@@ -57,6 +57,9 @@ pub struct ServerConfig {
     pub spec_draft: f64,
     /// Protocol edge limits (max tokens per generate, max line bytes).
     pub limits: Limits,
+    /// Write a Chrome `trace_event` JSON of the finished-request ring to
+    /// this path at shutdown (`--trace-out`; None = no export).
+    pub trace_out: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -73,6 +76,7 @@ impl Default for ServerConfig {
             spec_k: 0,
             spec_draft: 0.5,
             limits: Limits::default(),
+            trace_out: None,
         }
     }
 }
@@ -241,6 +245,13 @@ pub fn serve_on(
     let _ = batch_thread.join();
     for c in conns {
         let _ = c.handle.join();
+    }
+    // Export AFTER the batcher thread joins so every in-flight timeline has
+    // been closed into the ring.
+    if let Some(path) = &cfg.trace_out {
+        let trace = batcher.tracer().chrome_trace();
+        std::fs::write(path, format!("{trace}\n"))?;
+        println!("wrote trace ({} timelines) to {path}", batcher.tracer().ring_len());
     }
     Ok(())
 }

@@ -72,12 +72,20 @@ pub struct ScoreRequest {
     pub text: String,
 }
 
+/// Default / maximum count of recent request timelines a `trace` op may ask
+/// for (bounded by the tracer ring; see [`crate::trace::TIMELINE_RING_CAP`]).
+pub const TRACE_DEFAULT_LAST: usize = 32;
+
 /// Every operation the coordinator serves.
 #[derive(Clone, Debug)]
 pub enum Request {
     Generate(GenerateRequest),
     Score(ScoreRequest),
-    Stats { id: String },
+    /// Metrics snapshot; `reset` additionally zeroes the counter window
+    /// after the snapshot (gauges survive), for per-interval pollers.
+    Stats { id: String, reset: bool },
+    /// The last `last` finished-request lifecycle timelines.
+    Trace { id: String, last: usize },
     /// Cancel the in-flight or queued generate whose id equals `target`.
     Cancel { id: String, target: String },
     Shutdown { id: String },
@@ -88,7 +96,8 @@ impl Request {
         match self {
             Request::Generate(g) => &g.id,
             Request::Score(s) => &s.id,
-            Request::Stats { id }
+            Request::Stats { id, .. }
+            | Request::Trace { id, .. }
             | Request::Cancel { id, .. }
             | Request::Shutdown { id } => id,
         }
@@ -146,7 +155,30 @@ pub fn parse_request(line: &str, limits: &Limits) -> Result<Request, ProtocolErr
                 .map_err(|_| invalid("score needs a string \"text\""))?;
             Ok(Request::Score(ScoreRequest { id, text: text.to_string() }))
         }
-        "stats" => Ok(Request::Stats { id }),
+        "stats" => {
+            let reset = match j.get("reset") {
+                Ok(v) => v
+                    .as_bool()
+                    .ok_or_else(|| invalid("\"reset\" must be a boolean"))?,
+                Err(_) => false,
+            };
+            Ok(Request::Stats { id, reset })
+        }
+        "trace" => {
+            let last = match opt_f64(&j, "last")? {
+                Some(n) if n.is_finite() && n >= 1.0 => {
+                    (n as usize).min(crate::trace::TIMELINE_RING_CAP)
+                }
+                Some(n) => {
+                    return Err(invalid(format!(
+                        "\"last\" must be a positive integer (got {n}); the server caps it at {}",
+                        crate::trace::TIMELINE_RING_CAP
+                    )))
+                }
+                None => TRACE_DEFAULT_LAST,
+            };
+            Ok(Request::Trace { id, last })
+        }
         "cancel" => {
             let target = j
                 .get_str("target")
@@ -274,6 +306,7 @@ pub fn generate_response(
     budget: f64,
     finish_reason: &str,
     stream_done: bool,
+    timing: Option<Json>,
 ) -> Json {
     let mut pairs = vec![
         ("id", Json::str(id)),
@@ -283,10 +316,23 @@ pub fn generate_response(
         ("budget", Json::Num(budget)),
         ("finish_reason", Json::str(finish_reason)),
     ];
+    if let Some(t) = timing {
+        pairs.push(("timing", t));
+    }
     if stream_done {
         pairs.push(("event", Json::str("done")));
     }
     Json::obj(pairs)
+}
+
+/// The `trace` op response: the last `n` finished-request timelines.
+pub fn trace_response(id: &str, timelines: Json) -> Json {
+    let count = timelines.as_arr().map(|a| a.len()).unwrap_or(0);
+    Json::obj(vec![
+        ("id", Json::str(id)),
+        ("count", Json::Num(count as f64)),
+        ("timelines", timelines),
+    ])
 }
 
 /// One incremental streaming frame.
@@ -342,8 +388,32 @@ mod tests {
         assert!(!g.id.is_empty(), "server assigns an id when absent");
         assert!(matches!(
             parse_request(r#"{"op":"stats"}"#, &limits()).unwrap(),
-            Request::Stats { .. }
+            Request::Stats { reset: false, .. }
         ));
+        assert!(matches!(
+            parse_request(r#"{"op":"stats","reset":true}"#, &limits()).unwrap(),
+            Request::Stats { reset: true, .. }
+        ));
+        assert!(
+            parse_request(r#"{"op":"stats","reset":1}"#, &limits()).is_err(),
+            "non-boolean reset must be rejected"
+        );
+        assert!(matches!(
+            parse_request(r#"{"op":"trace"}"#, &limits()).unwrap(),
+            Request::Trace { last: TRACE_DEFAULT_LAST, .. }
+        ));
+        assert!(matches!(
+            parse_request(r#"{"op":"trace","last":5}"#, &limits()).unwrap(),
+            Request::Trace { last: 5, .. }
+        ));
+        // `last` clamps to the ring capacity; non-positive values error.
+        let Request::Trace { last, .. } =
+            parse_request(r#"{"op":"trace","last":100000}"#, &limits()).unwrap()
+        else {
+            panic!("expected trace")
+        };
+        assert_eq!(last, crate::trace::TIMELINE_RING_CAP);
+        assert!(parse_request(r#"{"op":"trace","last":0}"#, &limits()).is_err());
         assert!(matches!(
             parse_request(r#"{"op":"cancel","target":"r9"}"#, &limits()).unwrap(),
             Request::Cancel { ref target, .. } if target == "r9"
@@ -412,8 +482,37 @@ mod tests {
     #[test]
     fn frames_and_finality() {
         assert!(!is_final_frame(&token_frame("r1", "x")));
-        assert!(is_final_frame(&generate_response("r1", "t", 3, "e", 0.2, "length", true)));
+        assert!(is_final_frame(&generate_response(
+            "r1", "t", 3, "e", 0.2, "length", true, None
+        )));
         assert!(is_final_frame(&score_response("r1", -1.0, "e", 0.0)));
         assert!(is_final_frame(&cancel_response("c", "r1", true)));
+        assert!(is_final_frame(&trace_response("t1", Json::Arr(vec![]))));
+    }
+
+    #[test]
+    fn generate_response_carries_timing_block() {
+        let timing = Json::obj(vec![
+            ("ttft_us", Json::Num(1200.0)),
+            ("itl_mean_us", Json::Num(300.0)),
+            ("queue_us", Json::Num(50.0)),
+            ("total_us", Json::Num(5000.0)),
+            ("tokens", Json::Num(8.0)),
+        ]);
+        let r = generate_response("r1", "t", 8, "e", 0.0, "length", true, Some(timing));
+        let t = r.get("timing").expect("timing block attached");
+        assert_eq!(t.get_f64("ttft_us").unwrap(), 1200.0);
+        assert_eq!(t.get_f64("tokens").unwrap(), 8.0);
+        assert!(is_final_frame(&r));
+        // Untimed responses simply omit the block.
+        let r = generate_response("r1", "t", 8, "e", 0.0, "length", false, None);
+        assert!(r.get("timing").is_err());
+    }
+
+    #[test]
+    fn trace_response_counts_timelines() {
+        let r = trace_response("t1", Json::Arr(vec![Json::obj(vec![]), Json::obj(vec![])]));
+        assert_eq!(r.get_f64("count").unwrap(), 2.0);
+        assert_eq!(r.get("timelines").unwrap().as_arr().unwrap().len(), 2);
     }
 }

@@ -34,4 +34,5 @@ pub mod model;
 pub mod runtime;
 pub mod spec;
 pub mod tensor;
+pub mod trace;
 pub mod util;

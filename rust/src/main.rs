@@ -272,6 +272,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             max_tokens_cap: args.get_usize("max-tokens", defaults.limits.max_tokens_cap),
             max_line_bytes: args.get_usize("max-line-bytes", defaults.limits.max_line_bytes),
         },
+        trace_out: args.get_opt("trace-out").map(String::from),
     };
     rana::coordinator::serve(cfg)
 }

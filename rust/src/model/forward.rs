@@ -20,6 +20,7 @@ use super::ops;
 use super::weights::ModelWeights;
 use crate::kvcache::CacheError;
 use crate::tensor::{attention_over_cache, Mat};
+use crate::trace::{PhaseTotals, SeqBatchEvent, SEQ_EVENT_BUF_CAP};
 
 /// Calibration capture: hidden states observed at adapter insertion points.
 /// Rows are samples; `to_x_matrix` transposes into the `X ∈ R^{i×k}` layout
@@ -676,6 +677,12 @@ pub struct DecodeBatch {
     pub accepted_tokens: u64,
     /// Speculation rounds that rolled the cache back (some draft rejected).
     pub spec_rollbacks: u64,
+    /// Wall-clock split of the engine passes (timing only — never read by
+    /// the schedule).
+    phases: PhaseTotals,
+    /// Structural per-sequence events since the last drain (prefill chunks,
+    /// settled speculation rounds), bounded by [`SEQ_EVENT_BUF_CAP`].
+    seq_events: Vec<(u64, SeqBatchEvent)>,
 }
 
 impl DecodeBatch {
@@ -691,6 +698,8 @@ impl DecodeBatch {
             draft_tokens: 0,
             accepted_tokens: 0,
             spec_rollbacks: 0,
+            phases: PhaseTotals::default(),
+            seq_events: Vec::new(),
         }
     }
 
@@ -702,6 +711,24 @@ impl DecodeBatch {
     /// `(draft_tokens, accepted_tokens, spec_rollbacks)` running totals.
     pub fn spec_stats(&self) -> (u64, u64, u64) {
         (self.draft_tokens, self.accepted_tokens, self.spec_rollbacks)
+    }
+
+    /// Running per-phase wall-clock totals (sessions report deltas upward).
+    pub fn phase_stats(&self) -> PhaseTotals {
+        self.phases
+    }
+
+    /// Structural per-sequence events since the last drain.
+    pub fn drain_seq_events(&mut self) -> Vec<(u64, SeqBatchEvent)> {
+        std::mem::take(&mut self.seq_events)
+    }
+
+    /// Put drained-but-foreign events back at the front (shared-batch
+    /// sessions return other sessions' events, like
+    /// [`DecodeBatch::restore_emitted`]).
+    pub fn restore_seq_events(&mut self, mut items: Vec<(u64, SeqBatchEvent)>) {
+        items.extend(std::mem::take(&mut self.seq_events));
+        self.seq_events = items;
     }
 
     pub fn capacity(&self) -> usize {
@@ -806,6 +833,8 @@ impl DecodeBatch {
             tok: u32,
             k: usize,
             base: usize,
+            /// Prompt-feed row (timing attribution only).
+            prefill: bool,
         }
         let mut plan: Vec<Plan> = Vec::new();
         for idx in 0..self.slots.len() {
@@ -821,6 +850,9 @@ impl DecodeBatch {
             let (tok, gen_phase) = if s.fed < s.prompt.len() {
                 let t = s.prompt[s.fed];
                 s.fed += 1;
+                if self.seq_events.len() < SEQ_EVENT_BUF_CAP {
+                    self.seq_events.push((s.id, SeqBatchEvent::Prefill { tokens: 1 }));
+                }
                 (t, false)
             } else if let Some(c) = s.spec.as_mut().and_then(|sp| sp.pending.take()) {
                 // Corrected token from a rejected round: sampled and
@@ -864,7 +896,7 @@ impl DecodeBatch {
             } else {
                 0
             };
-            plan.push(Plan { idx, tok, k, base: s.cache.len() });
+            plan.push(Plan { idx, tok, k, base: s.cache.len(), prefill: !gen_phase });
         }
 
         // --- 2. Draft phase: k low-budget passes batched across the
@@ -874,6 +906,7 @@ impl DecodeBatch {
         let mut dists: Vec<crate::spec::DraftDists> =
             (0..plan.len()).map(|_| Vec::new()).collect();
         if plan.iter().any(|p| p.k > 0) {
+            let t_draft = std::time::Instant::now();
             let draft_rate = self.spec.draft_rate;
             let mut j = 0;
             loop {
@@ -927,10 +960,12 @@ impl DecodeBatch {
                     s.cache.truncate(p.base);
                 }
             }
+            self.phases.spec_draft_us += t_draft.elapsed().as_micros() as u64;
         }
 
         // --- 3. One full-budget pass over all rows: plain/prefill rows
         // feed one token, speculating rows feed x0 + their drafts.
+        let t_pass = std::time::Instant::now();
         let logits = loop {
             if plan.is_empty() {
                 return 0;
@@ -986,6 +1021,15 @@ impl DecodeBatch {
                 }
             }
         };
+        {
+            // Split the shared pass across prefill / decode / verify rows by
+            // row count — timing attribution only, no compute branch.
+            let pass_us = t_pass.elapsed().as_micros() as u64;
+            let prefill_rows = plan.iter().filter(|p| p.prefill).count() as u64;
+            let verify_rows: u64 = plan.iter().map(|p| p.k as u64).sum();
+            let decode_rows = plan.len() as u64 - prefill_rows;
+            self.phases.attribute_pass(pass_us, prefill_rows, decode_rows, verify_rows);
+        }
 
         // --- 4. Record logits; accept/roll back speculation rounds.
         let mut committed = 0u64;
@@ -1009,6 +1053,12 @@ impl DecodeBatch {
             let a = out.accepted;
             self.draft_tokens += p.k as u64;
             self.accepted_tokens += a as u64;
+            if self.seq_events.len() < SEQ_EVENT_BUF_CAP {
+                self.seq_events.push((
+                    s.id,
+                    SeqBatchEvent::SpecRound { drafted: p.k as u32, accepted: a as u32 },
+                ));
+            }
             committed += 1 + a as u64;
             for &d in &drafts[ci][..a] {
                 s.generated.push(d);

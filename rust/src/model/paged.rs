@@ -31,6 +31,7 @@ use super::forward::{decode_step_body, BlockOps, FinishedSeq, SeqSpec, AMBIENT_B
 use super::ops;
 use crate::kvcache::{BlockPool, CacheError, PagedKvCache, PrefixTrie};
 use crate::tensor::{attention_over_paged, Mat};
+use crate::trace::{PhaseTotals, SeqBatchEvent, SEQ_EVENT_BUF_CAP};
 
 /// One batched decode step over paged caches: row `r` of `tokens`/`seqs`
 /// appends at its own position `seqs[r].len()`. Returns logits `[N, vocab]`
@@ -223,6 +224,12 @@ pub struct PagedDecodeBatch {
     pub accepted_tokens: u64,
     /// Speculation rounds that rolled the cache back (some draft rejected).
     pub spec_rollbacks: u64,
+    /// Wall-clock split of the engine passes (timing only — never read by
+    /// the schedule).
+    phases: PhaseTotals,
+    /// Structural per-sequence events since the last drain (prefill chunks,
+    /// spec rounds, preempt/readmit), bounded by [`SEQ_EVENT_BUF_CAP`].
+    seq_events: Vec<(u64, SeqBatchEvent)>,
 }
 
 impl PagedDecodeBatch {
@@ -248,6 +255,8 @@ impl PagedDecodeBatch {
             draft_tokens: 0,
             accepted_tokens: 0,
             spec_rollbacks: 0,
+            phases: PhaseTotals::default(),
+            seq_events: Vec::new(),
         }
     }
 
@@ -259,6 +268,24 @@ impl PagedDecodeBatch {
     /// `(draft_tokens, accepted_tokens, spec_rollbacks)` running totals.
     pub fn spec_stats(&self) -> (u64, u64, u64) {
         (self.draft_tokens, self.accepted_tokens, self.spec_rollbacks)
+    }
+
+    /// Running per-phase wall-clock totals (sessions report deltas upward).
+    pub fn phase_stats(&self) -> PhaseTotals {
+        self.phases
+    }
+
+    /// Structural per-sequence events since the last drain.
+    pub fn drain_seq_events(&mut self) -> Vec<(u64, SeqBatchEvent)> {
+        std::mem::take(&mut self.seq_events)
+    }
+
+    /// Put drained-but-foreign events back at the front (shared-batch
+    /// sessions return other sessions' events, like
+    /// [`PagedDecodeBatch::restore_emitted`]).
+    pub fn restore_seq_events(&mut self, mut items: Vec<(u64, SeqBatchEvent)>) {
+        items.extend(std::mem::take(&mut self.seq_events));
+        self.seq_events = items;
     }
 
     pub fn capacity(&self) -> usize {
@@ -449,16 +476,21 @@ impl PagedDecodeBatch {
         let bs = self.pool.block_size();
 
         // 1. Re-admit preempted sequences into free slots, oldest first.
+        let t_readmit = std::time::Instant::now();
         while let Some(free_idx) = self.slots.iter().position(|s| s.is_none()) {
             let Some(mut st) = self.preempted.pop_front() else { break };
             let force = self.live_count() == 0;
             if self.admit(&mut st, force) {
+                if self.seq_events.len() < SEQ_EVENT_BUF_CAP {
+                    self.seq_events.push((st.id, SeqBatchEvent::Readmit));
+                }
                 self.slots[free_idx] = Some(st);
             } else {
                 self.preempted.push_front(st);
                 break;
             }
         }
+        self.phases.maintenance_us += t_readmit.elapsed().as_micros() as u64;
 
         // 2. Token selection over the virtual stream (same schedule as the
         // dense DecodeBatch; `fed` resets on preemption). A generation-
@@ -469,6 +501,9 @@ impl PagedDecodeBatch {
             tok: u32,
             k: usize,
             base: usize,
+            /// Stream-feed row (prompt prefill or preemption refeed) —
+            /// timing attribution only.
+            prefill: bool,
         }
         let mut plan: Vec<Plan> = Vec::new();
         for idx in 0..self.slots.len() {
@@ -492,6 +527,9 @@ impl PagedDecodeBatch {
                 let gen = s.fed == s.stream_len()
                     && s.fed > s.prompt.len()
                     && !s.last_logits.is_empty();
+                if !gen && self.seq_events.len() < SEQ_EVENT_BUF_CAP {
+                    self.seq_events.push((s.id, SeqBatchEvent::Prefill { tokens: 1 }));
+                }
                 (t, gen)
             } else if s.generated.len() >= s.n_gen {
                 Self::finish(&mut self.pool, s);
@@ -532,7 +570,7 @@ impl PagedDecodeBatch {
             } else {
                 0
             };
-            plan.push(Plan { idx, tok, k, base: s.cache.len() });
+            plan.push(Plan { idx, tok, k, base: s.cache.len(), prefill: !gen_phase });
         }
 
         // 2b. Draft phase: low-budget passes batched across speculating
@@ -542,6 +580,7 @@ impl PagedDecodeBatch {
         let mut dists: Vec<crate::spec::DraftDists> =
             (0..plan.len()).map(|_| Vec::new()).collect();
         if plan.iter().any(|p| p.k > 0) {
+            let t_draft = std::time::Instant::now();
             let draft_rate = self.spec.draft_rate;
             let mut j = 0;
             loop {
@@ -597,6 +636,7 @@ impl PagedDecodeBatch {
                     s.cache.truncate(&mut self.pool, p.base);
                 }
             }
+            self.phases.spec_draft_us += t_draft.elapsed().as_micros() as u64;
         }
 
         // 3. Prepare every append window (alloc/COW): 1 + k positions for
@@ -604,6 +644,7 @@ impl PagedDecodeBatch {
         // is: degrade the round to a plain append, evict trie-only blocks,
         // preempt the youngest other live sequence; a sequence the pool
         // cannot hold even alone is truncated.
+        let t_prepare = std::time::Instant::now();
         let mut i = 0;
         while i < plan.len() {
             let idx = plan[i].idx;
@@ -634,6 +675,9 @@ impl PagedDecodeBatch {
                             st.fed = 0;
                             st.prompt_in_trie = false;
                             self.preemptions += 1;
+                            if self.seq_events.len() < SEQ_EVENT_BUF_CAP {
+                                self.seq_events.push((st.id, SeqBatchEvent::Preempt));
+                            }
                             self.preempted.push_back(st);
                             if let Some(q) = plan.iter().position(|p| p.idx == v) {
                                 if q < i {
@@ -655,11 +699,13 @@ impl PagedDecodeBatch {
                 }
             }
         }
+        self.phases.maintenance_us += t_prepare.elapsed().as_micros() as u64;
 
         // 4. One full-budget paged pass over all rows: plain rows feed one
         // token, speculating rows feed x0 + their drafts. CacheErrors are
         // unreachable after the guards above, but the contract stands: the
         // offending sequence retires; the pass retries with the rest.
+        let t_pass = std::time::Instant::now();
         let logits = loop {
             if plan.is_empty() {
                 return 0;
@@ -710,6 +756,15 @@ impl PagedDecodeBatch {
                 }
             }
         };
+        {
+            // Split the shared pass across prefill / decode / verify rows by
+            // row count — timing attribution only, no compute branch.
+            let pass_us = t_pass.elapsed().as_micros() as u64;
+            let prefill_rows = plan.iter().filter(|p| p.prefill).count() as u64;
+            let verify_rows: u64 = plan.iter().map(|p| p.k as u64).sum();
+            let decode_rows = plan.len() as u64 - prefill_rows;
+            self.phases.attribute_pass(pass_us, prefill_rows, decode_rows, verify_rows);
+        }
 
         // 5. Publish completed prefills' full prompt blocks; record logits
         // and settle speculation rounds (accept prefix, roll back the
@@ -746,6 +801,12 @@ impl PagedDecodeBatch {
             let a = out.accepted;
             self.draft_tokens += p.k as u64;
             self.accepted_tokens += a as u64;
+            if self.seq_events.len() < SEQ_EVENT_BUF_CAP {
+                self.seq_events.push((
+                    s.id,
+                    SeqBatchEvent::SpecRound { drafted: p.k as u32, accepted: a as u32 },
+                ));
+            }
             committed += 1 + a as u64;
             for &d in &drafts[si][..a] {
                 s.generated.push(d);

@@ -1,0 +1,636 @@
+//! Request-lifecycle tracing: per-request timelines, per-phase engine timers,
+//! and a bounded ring of finished-request summaries exportable as Chrome
+//! `trace_event` JSON.
+//!
+//! The design contract is *timing only*: nothing in this module feeds back
+//! into scheduling or decoding, so every bitwise determinism pin (paged vs
+//! dense, spec vs plain, budget tiers, batch composition) holds with tracing
+//! on or off. A [`RequestTimeline`] is a cheap `Arc<Mutex<_>>` handle created
+//! by the batcher at admission and threaded through the decode session; the
+//! engine marks tokens on it, the batch layers report structural events
+//! ([`SeqBatchEvent`]) through the session, and the batcher closes it out and
+//! attaches a `timing` block to the response. Timing scalars (TTFT, ITL,
+//! queue wait) are always recorded because responses always carry them; the
+//! [`Tracer`] `enabled` flag only gates the event log and the summary ring,
+//! which is what the overhead bench toggles.
+
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+/// Finished-request summaries retained by the [`Tracer`] ring.
+pub const TIMELINE_RING_CAP: usize = 256;
+/// Per-request event-log cap; overflow increments `events_dropped` instead of
+/// growing without bound.
+pub const MAX_EVENTS_PER_TIMELINE: usize = 256;
+/// Cap on the per-batch structural-event buffer between session drains.
+pub const SEQ_EVENT_BUF_CAP: usize = 4096;
+
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Wall-clock split of one engine pass, accumulated by the batch layers as
+/// running totals (sessions report deltas to [`crate::coordinator::Metrics`]).
+/// The full-budget pass serves prefill rows, plain decode rows, and
+/// spec-verify rows in a single matmul, so its duration is attributed
+/// proportionally by row count — an arithmetic split, not a compute branch.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhaseTotals {
+    pub prefill_us: u64,
+    pub decode_us: u64,
+    pub spec_draft_us: u64,
+    pub spec_verify_us: u64,
+    pub maintenance_us: u64,
+}
+
+impl PhaseTotals {
+    pub fn delta_since(&self, prev: &PhaseTotals) -> PhaseTotals {
+        PhaseTotals {
+            prefill_us: self.prefill_us.saturating_sub(prev.prefill_us),
+            decode_us: self.decode_us.saturating_sub(prev.decode_us),
+            spec_draft_us: self.spec_draft_us.saturating_sub(prev.spec_draft_us),
+            spec_verify_us: self.spec_verify_us.saturating_sub(prev.spec_verify_us),
+            maintenance_us: self.maintenance_us.saturating_sub(prev.maintenance_us),
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        *self == PhaseTotals::default()
+    }
+
+    /// Split `dur_us` across prefill/decode/verify by row counts. Remainder
+    /// microseconds go to the largest bucket so the total is preserved.
+    pub fn attribute_pass(&mut self, dur_us: u64, prefill_rows: u64, decode_rows: u64, verify_rows: u64) {
+        let total_rows = prefill_rows + decode_rows + verify_rows;
+        if total_rows == 0 {
+            self.decode_us += dur_us;
+            return;
+        }
+        let p = dur_us * prefill_rows / total_rows;
+        let d = dur_us * decode_rows / total_rows;
+        let v = dur_us * verify_rows / total_rows;
+        let rem = dur_us - p - d - v;
+        self.prefill_us += p;
+        self.decode_us += d;
+        self.spec_verify_us += v;
+        if prefill_rows >= decode_rows && prefill_rows >= verify_rows {
+            self.prefill_us += rem;
+        } else if verify_rows > decode_rows {
+            self.spec_verify_us += rem;
+        } else {
+            self.decode_us += rem;
+        }
+    }
+}
+
+/// Structural event reported by a batch layer for one sequence, keyed by the
+/// batch-local sequence id and drained by the owning session each step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeqBatchEvent {
+    /// One prompt (or preemption-refeed) row fed this pass.
+    Prefill { tokens: u32 },
+    /// One speculation round settled: `drafted` proposed, `accepted` kept.
+    SpecRound { drafted: u32, accepted: u32 },
+    /// Sequence evicted from the KV pool and queued for re-admission.
+    Preempt,
+    /// Preempted sequence re-admitted (its stream will be re-fed).
+    Readmit,
+}
+
+/// What kind of instant a [`TimelineEvent`] marks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    Enqueue,
+    Admit,
+    PrefillChunk,
+    FirstToken,
+    SpecRound,
+    Preempt,
+    Readmit,
+    Finish,
+}
+
+impl EventKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EventKind::Enqueue => "enqueue",
+            EventKind::Admit => "admit",
+            EventKind::PrefillChunk => "prefill_chunk",
+            EventKind::FirstToken => "first_token",
+            EventKind::SpecRound => "spec_round",
+            EventKind::Preempt => "preempt",
+            EventKind::Readmit => "readmit",
+            EventKind::Finish => "finish",
+        }
+    }
+}
+
+/// One instant on a request's timeline. `ts_us` is relative to the tracer
+/// epoch; `n` carries a kind-specific count (tokens fed, tokens accepted).
+#[derive(Clone, Copy, Debug)]
+pub struct TimelineEvent {
+    pub kind: EventKind,
+    pub ts_us: u64,
+    pub n: u64,
+}
+
+/// Immutable record of a finished request, retained in the tracer ring.
+#[derive(Clone, Debug)]
+pub struct TimelineSummary {
+    pub id: String,
+    pub enqueue_us: u64,
+    pub admit_us: Option<u64>,
+    pub first_token_us: Option<u64>,
+    pub finish_us: u64,
+    pub tokens: u64,
+    pub itl_sum_us: u64,
+    pub itl_count: u64,
+    pub prefill_chunks: u64,
+    pub spec_rounds: u64,
+    pub preempts: u64,
+    pub readmits: u64,
+    pub events: Vec<TimelineEvent>,
+    pub events_dropped: u64,
+}
+
+impl TimelineSummary {
+    pub fn queue_us(&self) -> Option<u64> {
+        self.admit_us.map(|a| a.saturating_sub(self.enqueue_us))
+    }
+
+    pub fn ttft_us(&self) -> Option<u64> {
+        self.first_token_us.map(|f| f.saturating_sub(self.enqueue_us))
+    }
+
+    pub fn total_us(&self) -> u64 {
+        self.finish_us.saturating_sub(self.enqueue_us)
+    }
+
+    pub fn itl_mean_us(&self) -> Option<f64> {
+        if self.itl_count == 0 {
+            None
+        } else {
+            Some(self.itl_sum_us as f64 / self.itl_count as f64)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<u64>| v.map(|x| Json::Num(x as f64)).unwrap_or(Json::Null);
+        let events = self
+            .events
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("kind", Json::str(e.kind.as_str())),
+                    ("ts_us", Json::Num(e.ts_us as f64)),
+                    ("n", Json::Num(e.n as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("id", Json::str(&self.id)),
+            ("enqueue_us", Json::Num(self.enqueue_us as f64)),
+            ("queue_us", opt(self.queue_us())),
+            ("ttft_us", opt(self.ttft_us())),
+            ("itl_mean_us", self.itl_mean_us().map(Json::Num).unwrap_or(Json::Null)),
+            ("total_us", Json::Num(self.total_us() as f64)),
+            ("tokens", Json::Num(self.tokens as f64)),
+            ("itl_count", Json::Num(self.itl_count as f64)),
+            ("prefill_chunks", Json::Num(self.prefill_chunks as f64)),
+            ("spec_rounds", Json::Num(self.spec_rounds as f64)),
+            ("preempts", Json::Num(self.preempts as f64)),
+            ("readmits", Json::Num(self.readmits as f64)),
+            ("events", Json::Arr(events)),
+            ("events_dropped", Json::Num(self.events_dropped as f64)),
+        ])
+    }
+}
+
+#[derive(Debug)]
+struct TimelineState {
+    id: String,
+    enqueue_us: u64,
+    admit_us: Option<u64>,
+    first_token_us: Option<u64>,
+    last_token_us: Option<u64>,
+    finish_us: Option<u64>,
+    tokens: u64,
+    itl_sum_us: u64,
+    itl_count: u64,
+    prefill_chunks: u64,
+    spec_rounds: u64,
+    preempts: u64,
+    readmits: u64,
+    events: Vec<TimelineEvent>,
+    events_dropped: u64,
+}
+
+impl TimelineState {
+    fn push_event(&mut self, enabled: bool, kind: EventKind, ts_us: u64, n: u64) {
+        if !enabled {
+            return;
+        }
+        if self.events.len() >= MAX_EVENTS_PER_TIMELINE {
+            self.events_dropped += 1;
+        } else {
+            self.events.push(TimelineEvent { kind, ts_us, n });
+        }
+    }
+
+    fn summary(&self, finish_us: u64) -> TimelineSummary {
+        TimelineSummary {
+            id: self.id.clone(),
+            enqueue_us: self.enqueue_us,
+            admit_us: self.admit_us,
+            first_token_us: self.first_token_us,
+            finish_us,
+            tokens: self.tokens,
+            itl_sum_us: self.itl_sum_us,
+            itl_count: self.itl_count,
+            prefill_chunks: self.prefill_chunks,
+            spec_rounds: self.spec_rounds,
+            preempts: self.preempts,
+            readmits: self.readmits,
+            events: self.events.clone(),
+            events_dropped: self.events_dropped,
+        }
+    }
+}
+
+/// Returned by [`RequestTimeline::mark_token`]: the first token yields a
+/// TTFT sample, every later token yields an ITL sample.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TokenMark {
+    pub ttft_us: Option<u64>,
+    pub itl_us: Option<u64>,
+}
+
+/// Cheap clonable handle to one request's lifecycle record.
+#[derive(Clone, Debug)]
+pub struct RequestTimeline {
+    tracer: Arc<Tracer>,
+    inner: Arc<Mutex<TimelineState>>,
+}
+
+impl RequestTimeline {
+    /// Create a timeline whose enqueue instant is back-dated to `enqueued`
+    /// (the batcher records arrival before admission).
+    pub fn new(tracer: Arc<Tracer>, id: &str, enqueued: Instant) -> Self {
+        let enqueue_us = tracer.us_since_epoch(enqueued);
+        let enabled = tracer.enabled();
+        let mut st = TimelineState {
+            id: id.to_string(),
+            enqueue_us,
+            admit_us: None,
+            first_token_us: None,
+            last_token_us: None,
+            finish_us: None,
+            tokens: 0,
+            itl_sum_us: 0,
+            itl_count: 0,
+            prefill_chunks: 0,
+            spec_rounds: 0,
+            preempts: 0,
+            readmits: 0,
+            events: Vec::new(),
+            events_dropped: 0,
+        };
+        st.push_event(enabled, EventKind::Enqueue, enqueue_us, 0);
+        RequestTimeline { tracer, inner: Arc::new(Mutex::new(st)) }
+    }
+
+    /// Mark admission into a decode session (first call wins).
+    pub fn mark_admit(&self) {
+        let ts = self.tracer.now_us();
+        let enabled = self.tracer.enabled();
+        let mut st = lock_recover(&self.inner);
+        if st.admit_us.is_none() {
+            st.admit_us = Some(ts);
+            st.push_event(enabled, EventKind::Admit, ts, 0);
+        }
+    }
+
+    /// Mark one emitted token; returns the TTFT or ITL sample it produced.
+    pub fn mark_token(&self) -> TokenMark {
+        let ts = self.tracer.now_us();
+        let enabled = self.tracer.enabled();
+        let mut st = lock_recover(&self.inner);
+        st.tokens += 1;
+        let mut mark = TokenMark::default();
+        if st.first_token_us.is_none() {
+            st.first_token_us = Some(ts);
+            mark.ttft_us = Some(ts.saturating_sub(st.enqueue_us));
+            st.push_event(enabled, EventKind::FirstToken, ts, 0);
+        } else if let Some(prev) = st.last_token_us {
+            let itl = ts.saturating_sub(prev);
+            st.itl_sum_us += itl;
+            st.itl_count += 1;
+            mark.itl_us = Some(itl);
+        }
+        st.last_token_us = Some(ts);
+        mark
+    }
+
+    /// Record a structural event forwarded from the batch layer.
+    pub fn record_batch_event(&self, ev: SeqBatchEvent) {
+        let ts = self.tracer.now_us();
+        let enabled = self.tracer.enabled();
+        let mut st = lock_recover(&self.inner);
+        match ev {
+            SeqBatchEvent::Prefill { tokens } => {
+                st.prefill_chunks += 1;
+                st.push_event(enabled, EventKind::PrefillChunk, ts, tokens as u64);
+            }
+            SeqBatchEvent::SpecRound { drafted: _, accepted } => {
+                st.spec_rounds += 1;
+                st.push_event(enabled, EventKind::SpecRound, ts, accepted as u64);
+            }
+            SeqBatchEvent::Preempt => {
+                st.preempts += 1;
+                st.push_event(enabled, EventKind::Preempt, ts, 0);
+            }
+            SeqBatchEvent::Readmit => {
+                st.readmits += 1;
+                st.push_event(enabled, EventKind::Readmit, ts, 0);
+            }
+        }
+    }
+
+    /// Close the timeline (idempotent) and retain its summary in the tracer
+    /// ring when tracing is enabled.
+    pub fn finish(&self) {
+        let ts = self.tracer.now_us();
+        let enabled = self.tracer.enabled();
+        let summary = {
+            let mut st = lock_recover(&self.inner);
+            if st.finish_us.is_some() {
+                return;
+            }
+            st.finish_us = Some(ts);
+            st.push_event(enabled, EventKind::Finish, ts, st.tokens);
+            st.summary(ts)
+        };
+        if enabled {
+            self.tracer.push_summary(summary);
+        }
+    }
+
+    /// Current view of the timeline (finish defaults to "now" if still open).
+    pub fn summary(&self) -> TimelineSummary {
+        let now = self.tracer.now_us();
+        let st = lock_recover(&self.inner);
+        st.summary(st.finish_us.unwrap_or(now))
+    }
+
+    /// Per-request `timing` block attached to generate responses and
+    /// stream-finish frames.
+    pub fn timing_json(&self) -> Json {
+        let s = self.summary();
+        let opt = |v: Option<u64>| v.map(|x| Json::Num(x as f64)).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("queue_us", opt(s.queue_us())),
+            ("ttft_us", opt(s.ttft_us())),
+            ("itl_mean_us", s.itl_mean_us().map(Json::Num).unwrap_or(Json::Null)),
+            ("total_us", Json::Num(s.total_us() as f64)),
+            ("tokens", Json::Num(s.tokens as f64)),
+        ])
+    }
+}
+
+/// Process-wide trace collector: an epoch for relative timestamps plus a
+/// bounded ring of finished-request summaries.
+#[derive(Debug)]
+pub struct Tracer {
+    enabled: AtomicBool,
+    epoch: Instant,
+    cap: usize,
+    ring: Mutex<VecDeque<TimelineSummary>>,
+}
+
+impl Tracer {
+    pub fn new(cap: usize) -> Self {
+        Tracer {
+            enabled: AtomicBool::new(true),
+            epoch: Instant::now(),
+            cap: cap.max(1),
+            ring: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    fn us_since_epoch(&self, at: Instant) -> u64 {
+        at.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    fn push_summary(&self, s: TimelineSummary) {
+        let mut ring = lock_recover(&self.ring);
+        if ring.len() >= self.cap {
+            ring.pop_front();
+        }
+        ring.push_back(s);
+    }
+
+    pub fn ring_len(&self) -> usize {
+        lock_recover(&self.ring).len()
+    }
+
+    /// JSON array of the last `last` finished-request summaries, oldest first.
+    pub fn timelines_json(&self, last: usize) -> Json {
+        let ring = lock_recover(&self.ring);
+        let skip = ring.len().saturating_sub(last);
+        Json::Arr(ring.iter().skip(skip).map(|s| s.to_json()).collect())
+    }
+
+    /// Export the ring as Chrome `trace_event` JSON (load in `about:tracing`
+    /// or Perfetto). Each request becomes one "thread" carrying queue /
+    /// prefill / decode complete-spans plus instant events.
+    pub fn chrome_trace(&self) -> Json {
+        let ring = lock_recover(&self.ring);
+        let mut evs: Vec<Json> = Vec::new();
+        let span = |name: &str, ts: u64, dur: u64, tid: u64, args: Vec<(&str, Json)>| {
+            Json::obj(vec![
+                ("name", Json::str(name)),
+                ("cat", Json::str("request")),
+                ("ph", Json::str("X")),
+                ("ts", Json::Num(ts as f64)),
+                ("dur", Json::Num(dur as f64)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(tid as f64)),
+                ("args", Json::obj(args)),
+            ])
+        };
+        for (i, s) in ring.iter().enumerate() {
+            let tid = i as u64 + 1;
+            evs.push(span(
+                &format!("request {}", s.id),
+                s.enqueue_us,
+                s.total_us(),
+                tid,
+                vec![
+                    ("id", Json::str(&s.id)),
+                    ("tokens", Json::Num(s.tokens as f64)),
+                    ("preempts", Json::Num(s.preempts as f64)),
+                ],
+            ));
+            if let Some(admit) = s.admit_us {
+                evs.push(span("queue", s.enqueue_us, admit.saturating_sub(s.enqueue_us), tid, vec![]));
+                if let Some(ft) = s.first_token_us {
+                    evs.push(span("prefill", admit, ft.saturating_sub(admit), tid, vec![]));
+                    evs.push(span("decode", ft, s.finish_us.saturating_sub(ft), tid, vec![]));
+                }
+            }
+            for e in &s.events {
+                evs.push(Json::obj(vec![
+                    ("name", Json::str(e.kind.as_str())),
+                    ("cat", Json::str("event")),
+                    ("ph", Json::str("i")),
+                    ("ts", Json::Num(e.ts_us as f64)),
+                    ("pid", Json::Num(1.0)),
+                    ("tid", Json::Num(tid as f64)),
+                    ("s", Json::str("t")),
+                    ("args", Json::obj(vec![("n", Json::Num(e.n as f64))])),
+                ]));
+            }
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(evs)),
+            ("displayTimeUnit", Json::str("ms")),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finished_timeline(tracer: &Arc<Tracer>, id: &str, tokens: usize) -> RequestTimeline {
+        let tl = RequestTimeline::new(Arc::clone(tracer), id, Instant::now());
+        tl.mark_admit();
+        tl.record_batch_event(SeqBatchEvent::Prefill { tokens: 4 });
+        for _ in 0..tokens {
+            tl.mark_token();
+        }
+        tl.finish();
+        tl
+    }
+
+    #[test]
+    fn timeline_invariants_hold() {
+        let tracer = Arc::new(Tracer::new(8));
+        let tl = finished_timeline(&tracer, "r1", 5);
+        let s = tl.summary();
+        assert_eq!(s.tokens, 5);
+        assert_eq!(s.itl_count, s.tokens - 1, "ITL count must be tokens-1");
+        assert!(s.ttft_us().unwrap() <= s.total_us(), "TTFT must not exceed total");
+        assert!(s.queue_us().unwrap() <= s.total_us());
+        let ts: Vec<u64> = s.events.iter().map(|e| e.ts_us).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "event order must be monotone: {ts:?}");
+        assert_eq!(s.events.first().unwrap().kind, EventKind::Enqueue);
+        assert_eq!(s.events.last().unwrap().kind, EventKind::Finish);
+        assert_eq!(s.prefill_chunks, 1);
+    }
+
+    #[test]
+    fn finish_is_idempotent_and_ring_is_bounded() {
+        let tracer = Arc::new(Tracer::new(4));
+        for i in 0..10 {
+            let tl = finished_timeline(&tracer, &format!("r{i}"), 2);
+            tl.finish(); // double finish must not double-record
+        }
+        assert_eq!(tracer.ring_len(), 4, "ring must stay bounded at its cap");
+        let last = tracer.timelines_json(2);
+        let arr = last.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        // newest entries survive: r8, r9
+        assert_eq!(arr[1].get_str("id").unwrap(), "r9");
+    }
+
+    #[test]
+    fn disabled_tracer_skips_ring_but_keeps_timing() {
+        let tracer = Arc::new(Tracer::new(4));
+        tracer.set_enabled(false);
+        let tl = finished_timeline(&tracer, "r1", 3);
+        assert_eq!(tracer.ring_len(), 0, "disabled tracer must not retain summaries");
+        let timing = tl.timing_json();
+        assert_eq!(timing.get_usize("tokens").unwrap(), 3);
+        assert!(timing.get("ttft_us").unwrap().as_f64().is_some(), "timing scalars stay live");
+        let s = tl.summary();
+        assert!(s.events.is_empty(), "event log is gated by the enable flag");
+    }
+
+    #[test]
+    fn preempt_and_readmit_events_are_counted() {
+        let tracer = Arc::new(Tracer::new(4));
+        let tl = RequestTimeline::new(Arc::clone(&tracer), "r1", Instant::now());
+        tl.mark_admit();
+        tl.mark_token();
+        tl.record_batch_event(SeqBatchEvent::Preempt);
+        tl.record_batch_event(SeqBatchEvent::Readmit);
+        tl.record_batch_event(SeqBatchEvent::SpecRound { drafted: 3, accepted: 2 });
+        tl.mark_token();
+        tl.finish();
+        let s = tl.summary();
+        assert_eq!((s.preempts, s.readmits, s.spec_rounds), (1, 1, 1));
+        assert_eq!(s.itl_count, 1);
+    }
+
+    #[test]
+    fn event_log_is_bounded_per_timeline() {
+        let tracer = Arc::new(Tracer::new(4));
+        let tl = RequestTimeline::new(Arc::clone(&tracer), "r1", Instant::now());
+        for _ in 0..(MAX_EVENTS_PER_TIMELINE + 50) {
+            tl.record_batch_event(SeqBatchEvent::Prefill { tokens: 1 });
+        }
+        let s = tl.summary();
+        assert_eq!(s.events.len(), MAX_EVENTS_PER_TIMELINE);
+        assert!(s.events_dropped >= 50);
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_trace_events() {
+        let tracer = Arc::new(Tracer::new(8));
+        finished_timeline(&tracer, "a", 3);
+        finished_timeline(&tracer, "b", 2);
+        let trace = tracer.chrome_trace();
+        let text = trace.to_string();
+        let parsed = Json::parse(&text).expect("chrome trace must serialize to valid JSON");
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!evs.is_empty());
+        for e in evs {
+            let ph = e.get_str("ph").unwrap();
+            assert!(ph == "X" || ph == "i", "only complete spans and instants are emitted");
+            assert!(e.get_f64("ts").is_ok());
+            if ph == "X" {
+                assert!(e.get_f64("dur").is_ok());
+            }
+        }
+    }
+
+    #[test]
+    fn phase_totals_attribution_preserves_duration() {
+        let mut p = PhaseTotals::default();
+        p.attribute_pass(1000, 2, 5, 3);
+        assert_eq!(p.prefill_us + p.decode_us + p.spec_verify_us, 1000);
+        let mut q = PhaseTotals::default();
+        q.attribute_pass(777, 0, 0, 0);
+        assert_eq!(q.decode_us, 777, "row-less pass falls back to decode bucket");
+        let d = p.delta_since(&PhaseTotals::default());
+        assert_eq!(d, p);
+        assert!(!p.is_zero());
+        assert!(PhaseTotals::default().is_zero());
+    }
+}

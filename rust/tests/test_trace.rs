@@ -1,0 +1,204 @@
+//! End-to-end pins for the request-lifecycle tracing layer (DESIGN.md §2g):
+//! `timing` blocks on generate responses (plain and streaming), windowed
+//! `stats {"reset":true}`, the `trace` op, Chrome trace export, and timeline
+//! invariants under preemption-refeed on a tiny paged KV pool.
+
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use rana::adapters::AdaptedModel;
+use rana::coordinator::batcher::{
+    call, call_frames, generate_req, stats_req, stats_reset_req, trace_req, Batcher,
+    BudgetPolicy, Job,
+};
+use rana::coordinator::engine::{Engine, NativeEngine, SeqEvent, SessionRequest};
+use rana::coordinator::metrics::Metrics;
+use rana::model::{Arch, Model, ModelConfig, ModelWeights};
+use rana::trace::{RequestTimeline, Tracer};
+use rana::util::json::Json;
+
+fn tiny_model(arch: Arch, seed: u64) -> Arc<Model> {
+    let cfg = ModelConfig {
+        name: "tiny".into(),
+        arch,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_hidden: 32,
+        vocab: 288,
+        max_seq: 64,
+        rope_theta: 10_000.0,
+        norm_eps: 1e-5,
+    };
+    let w = ModelWeights::random_init(&cfg, seed);
+    Arc::new(Model::new(cfg, w).unwrap())
+}
+
+fn start_batcher(max_batch: usize) -> (Arc<Batcher>, mpsc::Sender<Job>) {
+    let m = tiny_model(Arch::SwiGlu, 811);
+    let engine: Arc<dyn Engine> =
+        Arc::new(NativeEngine::new(Arc::new(AdaptedModel::unadapted(m))));
+    let batcher = Arc::new(Batcher::new(engine, BudgetPolicy::fixed(0.0), max_batch));
+    let tx = batcher.submitter();
+    let b2 = Arc::clone(&batcher);
+    std::thread::spawn(move || b2.run());
+    (batcher, tx)
+}
+
+fn assert_timing_block(timing: &Json) {
+    for key in ["queue_us", "ttft_us", "itl_mean_us", "total_us", "tokens"] {
+        assert!(timing.get(key).is_ok(), "timing block must carry {key}: {timing}");
+    }
+    let total = timing.get_f64("total_us").unwrap();
+    if let Some(ttft) = timing.get("ttft_us").unwrap().as_f64() {
+        assert!(ttft <= total, "TTFT {ttft} exceeds total {total}");
+    }
+    if let Some(queue) = timing.get("queue_us").unwrap().as_f64() {
+        assert!(queue <= total, "queue wait {queue} exceeds total {total}");
+    }
+}
+
+#[test]
+fn generate_responses_carry_timing_and_trace_op_returns_timelines() {
+    let (b, tx) = start_batcher(4);
+    let g = call(&tx, generate_req("ab", 4)).unwrap();
+    let timing = g.get("timing").expect("generate response must carry a timing block");
+    assert_timing_block(timing);
+    assert_eq!(
+        timing.get_usize("tokens").unwrap(),
+        g.get_usize("tokens").unwrap(),
+        "timing token count must match the response's"
+    );
+    assert!(
+        timing.get("ttft_us").unwrap().as_f64().is_some(),
+        "a completed generate has a first token"
+    );
+
+    // Streaming: the final `done` frame carries the same timing block.
+    let mut req = generate_req("cd", 3);
+    let rana::coordinator::protocol::Request::Generate(gr) = &mut req else { unreachable!() };
+    gr.stream = true;
+    let frames = call_frames(&tx, req).unwrap();
+    let done = frames.last().unwrap();
+    assert_eq!(done.get_str("event").unwrap(), "done");
+    assert_timing_block(done.get("timing").expect("stream done frame carries timing"));
+
+    // `trace` returns the finished timelines, newest last.
+    let t = call(&tx, trace_req(8)).unwrap();
+    assert!(t.get_f64("count").unwrap() >= 2.0, "both generates must be in the ring: {t}");
+    let timelines = t.get("timelines").unwrap().as_arr().unwrap();
+    assert_eq!(timelines.len(), t.get_usize("count").unwrap());
+    for tl in timelines {
+        assert!(tl.get_str("id").unwrap().starts_with("loc-"));
+        assert!(tl.get_f64("total_us").is_ok());
+        let events = tl.get("events").unwrap().as_arr().unwrap();
+        let ts: Vec<f64> = events.iter().map(|e| e.get_f64("ts_us").unwrap()).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "event order must be monotone: {ts:?}");
+    }
+
+    // The Chrome export of the same ring parses back as JSON with spans.
+    let chrome = b.tracer().chrome_trace().to_string();
+    let parsed = Json::parse(&chrome).expect("chrome trace must be valid JSON");
+    assert!(!parsed.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+}
+
+#[test]
+fn stats_reset_zeros_windowed_counters_but_keeps_serving() {
+    let (_b, tx) = start_batcher(4);
+    call(&tx, generate_req("ab", 3)).unwrap();
+    let before = call(&tx, stats_req()).unwrap();
+    assert!(before.get_f64("tokens_generated").unwrap() >= 3.0);
+    assert!(before.get_f64("mean_ttft_us").unwrap() >= 0.0);
+    assert!(before.get("ttft_hist").is_ok() && before.get("ttft_edges").is_ok());
+    assert!(before.get("itl_hist").is_ok() && before.get("itl_edges").is_ok());
+    assert!(before.get("queue_wait_hist").is_ok());
+    assert!(before.get("phase_us").is_ok());
+
+    // The reset snapshot itself still shows the closing window...
+    let closing = call(&tx, stats_reset_req()).unwrap();
+    assert!(closing.get_f64("tokens_generated").unwrap() >= 3.0);
+    // ...and the next window starts from zero (modulo the stats ops
+    // themselves, which count as requests).
+    let after = call(&tx, stats_req()).unwrap();
+    assert_eq!(after.get_f64("tokens_generated").unwrap(), 0.0);
+    assert_eq!(after.get_f64("mean_ttft_us").unwrap(), 0.0);
+    let hist = after.get("ttft_hist").unwrap().as_arr().unwrap();
+    assert!(hist.iter().all(|c| c.as_f64() == Some(0.0)), "reset must zero histograms");
+    // Serving continues and repopulates the new window.
+    call(&tx, generate_req("ef", 2)).unwrap();
+    let repop = call(&tx, stats_req()).unwrap();
+    assert!(repop.get_f64("tokens_generated").unwrap() >= 2.0);
+}
+
+/// Property pins on timelines routed through the engine under
+/// preemption-refeed: a paged pool of 12 tokens (block_size 2 × 6 blocks)
+/// serving 3 concurrent requests whose total demand is ~24 tokens must
+/// preempt, and every timeline must still satisfy the ordering invariants.
+#[test]
+fn timeline_invariants_hold_under_preemption_refeed() {
+    let m = tiny_model(Arch::SwiGlu, 813);
+    let engine = NativeEngine::new(Arc::new(AdaptedModel::unadapted(m)))
+        .with_decode_capacity(3)
+        .with_paged_cache(2, 6);
+    let metrics = Arc::new(Metrics::new());
+    engine.set_metrics(Arc::clone(&metrics));
+    let tracer = Arc::new(Tracer::new(16));
+
+    let mut session = engine.begin_decode_session().expect("native session");
+    let mut tls: Vec<RequestTimeline> = Vec::new();
+    for (i, prompt) in ["abcd", "efg", "hi"].iter().enumerate() {
+        let tl = RequestTimeline::new(Arc::clone(&tracer), &format!("p{i}"), Instant::now());
+        let req = SessionRequest {
+            prompt: prompt.to_string(),
+            max_new: 4,
+            timeline: Some(tl.clone()),
+            ..SessionRequest::default()
+        };
+        session.try_join(&req).expect("3 slots fit 3 requests");
+        tl.mark_admit();
+        tls.push(tl);
+    }
+    let mut finished = 0usize;
+    for _ in 0..500 {
+        for ev in session.step() {
+            if matches!(ev, SeqEvent::Finished { .. }) {
+                finished += 1;
+            }
+        }
+        if finished == 3 {
+            break;
+        }
+    }
+    assert_eq!(finished, 3, "tiny-pool session must still complete all requests");
+
+    let mut total_preempts = 0;
+    let mut total_readmits = 0;
+    for tl in &tls {
+        tl.finish();
+        let s = tl.summary();
+        assert!(s.tokens >= 1, "every request decoded at least one token");
+        assert_eq!(s.itl_count, s.tokens - 1, "ITL count must be tokens-1: {s:?}");
+        assert!(s.ttft_us().unwrap() <= s.total_us(), "TTFT must not exceed total");
+        assert!(s.queue_us().unwrap() <= s.total_us());
+        let ts: Vec<u64> = s.events.iter().map(|e| e.ts_us).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "event order must be monotone: {ts:?}");
+        assert!(s.prefill_chunks >= 1, "prompt feeding must record prefill chunks");
+        total_preempts += s.preempts;
+        total_readmits += s.readmits;
+    }
+    assert!(
+        total_preempts >= 1,
+        "24-token demand on a 12-token pool must preempt (got {total_preempts})"
+    );
+    assert_eq!(
+        total_preempts, total_readmits,
+        "every preempted sequence must be re-admitted to finish"
+    );
+    assert_eq!(
+        total_preempts,
+        metrics.kv_preemptions.load(Ordering::Relaxed),
+        "timeline preempts must agree with the metrics counter"
+    );
+    assert_eq!(tracer.ring_len(), 3, "all finished timelines land in the ring");
+}
