@@ -543,6 +543,184 @@ fn serving(opts: Opts) -> anyhow::Result<()> {
         );
     }
 
+    println!("\n== Serving: SLO scheduler (chunked prefill + controller) vs FIFO ==");
+    {
+        use rana::adapters::calibrate;
+        use rana::coordinator::batcher::generate_req;
+        use rana::coordinator::protocol::Request;
+        use rana::sched::{Priority, SloConfig, SloController};
+        use rana::util::rng::Xoshiro256;
+        use std::sync::atomic::Ordering;
+
+        // Runtime-budget model so the SLO controller's rank knob is live
+        // (the controller clamps to a no-op on fixed-budget engines).
+        let tiers = vec![0.35, 0.5];
+        let (runtime, _) =
+            calibrate::adapt_runtime(Arc::clone(&model), &calib, &tiers, 128, 0x5E12);
+        let runtime = Arc::new(runtime);
+
+        // Bursty long-prompt mix, built once so both configs replay the
+        // byte-identical request sequence: ~60% of requests carry a long
+        // sampled context (prefill-dominated), the rest are short.
+        let n_req = if fast { 24usize } else { 48 };
+        let batch = 4usize;
+        let slo_tokens = 8usize;
+        let g = rana::data::grammar();
+        let mut rng = Xoshiro256::new(0x510);
+        let specs: Vec<(String, Priority, Option<String>)> = (0..n_req)
+            .map(|i| {
+                let long = rng.f64() < 0.6;
+                let mut prompt = String::new();
+                if long {
+                    prompt.push_str("ctx:");
+                    for _ in 0..40 {
+                        prompt.push(' ');
+                        prompt.push_str(&g.entities[rng.below(g.entities.len())]);
+                    }
+                    prompt.push(' ');
+                }
+                prompt.push_str(&format!("about request {i} :"));
+                let prio = match rng.below(4) {
+                    0 => Priority::High,
+                    1 => Priority::Low,
+                    _ => Priority::Normal,
+                };
+                (prompt, prio, Some(format!("t{}", rng.below(2))))
+            })
+            .collect();
+
+        let quant = |samples: &mut Vec<f64>, p: f64| -> f64 {
+            if samples.is_empty() {
+                return 0.0;
+            }
+            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            samples[(((samples.len() - 1) as f64) * p).round() as usize]
+        };
+
+        // One load run: fire the spec list in bursts of 6 (30 ms off-gap)
+        // against a batcher configured FIFO (chunk 1, untagged, no
+        // controller) or chunked+SLO (chunk 64, priority/tenant tags, SLO
+        // controller on the rank knob). Quantiles come from the
+        // per-response timing blocks, NOT batcher histograms — the
+        // controller resets the metrics window on every decision.
+        let run = |chunk: usize, slo: bool| {
+            let engine: Arc<dyn Engine> = Arc::new(
+                NativeEngine::new(Arc::clone(&runtime))
+                    .with_decode_capacity(batch)
+                    .with_prefill_chunk(chunk),
+            );
+            let mut b = Batcher::new(engine, BudgetPolicy::fixed(0.0), batch);
+            if slo {
+                // Ladder rung 0 is dense: the controller only trades
+                // quality away when the latency targets are breached.
+                let mut ladder = vec![0.0];
+                ladder.extend_from_slice(&tiers);
+                let cfg = SloConfig::new(
+                    Some(Duration::from_millis(5)),
+                    Some(Duration::from_millis(2)),
+                    ladder,
+                );
+                b = b.with_slo_controller(SloController::new(cfg));
+            }
+            let batcher = Arc::new(b);
+            let tx = batcher.submitter();
+            let b2 = Arc::clone(&batcher);
+            std::thread::spawn(move || b2.run());
+            let _ = call(&tx, generate_req("the dax lopa warm .", slo_tokens)); // warm
+            let t0 = Instant::now();
+            let mut handles = Vec::with_capacity(n_req);
+            for (i, (prompt, prio, tenant)) in specs.iter().enumerate() {
+                if i > 0 && i % 6 == 0 {
+                    std::thread::sleep(Duration::from_millis(30)); // burst gap
+                }
+                let mut req = generate_req(prompt, slo_tokens);
+                if slo {
+                    if let Request::Generate(gr) = &mut req {
+                        gr.sched.priority = *prio;
+                        gr.sched.tenant = tenant.clone();
+                        if *prio == Priority::High {
+                            gr.sched.deadline = Some(Duration::from_millis(50));
+                        }
+                    }
+                }
+                let tx = tx.clone();
+                handles.push(std::thread::spawn(move || call(&tx, req).unwrap()));
+            }
+            let (mut ttfts, mut itls, mut toks) = (Vec::new(), Vec::new(), 0usize);
+            for h in handles {
+                let resp = h.join().unwrap();
+                toks += resp.get_usize("tokens").unwrap_or(0);
+                if let Ok(t) = resp.get("timing") {
+                    if let Ok(us) = t.get_f64("ttft_us") {
+                        ttfts.push(us);
+                    }
+                    if let Ok(us) = t.get_f64("itl_mean_us") {
+                        itls.push(us);
+                    }
+                }
+            }
+            let tok_s = toks as f64 / t0.elapsed().as_secs_f64().max(1e-12);
+            let retunes = batcher.metrics.slo_retunes.load(Ordering::Relaxed);
+            batcher.close();
+            (ttfts, itls, tok_s, retunes)
+        };
+
+        let mut rows = Vec::new();
+        for (config, chunk, slo) in [("fifo", 1usize, false), ("chunked_slo", 64, true)] {
+            let (mut ttfts, mut itls, tok_s, retunes) = run(chunk, slo);
+            let (t50, t95, t99) =
+                (quant(&mut ttfts, 0.50), quant(&mut ttfts, 0.95), quant(&mut ttfts, 0.99));
+            let (i50, i95, i99) =
+                (quant(&mut itls, 0.50), quant(&mut itls, 0.95), quant(&mut itls, 0.99));
+            println!(
+                "{config:>11}: TTFT p50/p95/p99 {t50:8.0}/{t95:8.0}/{t99:8.0} µs   \
+                 ITL p50/p95/p99 {i50:6.0}/{i95:6.0}/{i99:6.0} µs   \
+                 {tok_s:6.0} tok/s   retunes {retunes}"
+            );
+            println!(
+                "{}",
+                Json::obj(vec![
+                    ("bench", Json::str("serving_slo")),
+                    ("config", Json::str(config)),
+                    ("prefill_chunk", Json::Num(chunk as f64)),
+                    ("requests", Json::Num(n_req as f64)),
+                    ("gen_tokens", Json::Num(slo_tokens as f64)),
+                    ("ttft_p50_us", Json::Num(t50)),
+                    ("ttft_p95_us", Json::Num(t95)),
+                    ("ttft_p99_us", Json::Num(t99)),
+                    ("itl_p50_us", Json::Num(i50)),
+                    ("itl_p95_us", Json::Num(i95)),
+                    ("itl_p99_us", Json::Num(i99)),
+                    ("tok_s", Json::Num(tok_s)),
+                    ("slo_retunes", Json::Num(retunes as f64)),
+                ])
+            );
+            rows.push((t99, tok_s));
+        }
+        let (fifo_p99, fifo_tps) = rows[0];
+        let (chunk_p99, chunk_tps) = rows[1];
+        let ttft_win = chunk_p99 <= fifo_p99;
+        let tps_ok = chunk_tps >= 0.9 * fifo_tps;
+        println!(
+            "p99 TTFT: chunked+SLO {chunk_p99:.0} µs vs FIFO {fifo_p99:.0} µs \
+             ({:.2}x)   tok/s within 10%: {tps_ok}",
+            fifo_p99 / chunk_p99.max(1.0),
+        );
+        println!(
+            "{}",
+            Json::obj(vec![
+                ("bench", Json::str("serving_slo")),
+                ("config", Json::str("compare")),
+                ("fifo_ttft_p99_us", Json::Num(fifo_p99)),
+                ("chunked_ttft_p99_us", Json::Num(chunk_p99)),
+                ("chunked_ttft_p99_leq_fifo", Json::Bool(ttft_win)),
+                ("fifo_tok_s", Json::Num(fifo_tps)),
+                ("chunked_tok_s", Json::Num(chunk_tps)),
+                ("tok_s_within_10pct", Json::Bool(tps_ok)),
+            ])
+        );
+    }
+
     println!("\n== Serving-path overhead: coordinator vs raw engine ==");
     let engine: Arc<dyn Engine> = Arc::new(NativeEngine::new(Arc::clone(&adapted)));
     let texts: Vec<String> =

@@ -13,7 +13,7 @@
 //! decodes dense. Individual requests may override the shared budget, and
 //! mixed budgets batch together via per-row rank masks.
 
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -24,6 +24,7 @@ use super::protocol::{
     self, cancel_response, generate_response, score_response, trace_response, GenerateRequest,
     Request,
 };
+use crate::sched::{Scheduler, SloController, SloWindow};
 use crate::trace::{RequestTimeline, Tracer, TIMELINE_RING_CAP};
 use crate::util::json::Json;
 
@@ -97,6 +98,10 @@ pub struct Batcher {
     pending_cancels: Mutex<HashSet<String>>,
     /// Request-lifecycle trace collector (ring of finished timelines).
     tracer: Arc<Tracer>,
+    /// Closed-loop SLO controller; when set it replaces the queue-depth
+    /// [`BudgetPolicy`] as the source of the shared rate (its own tier
+    /// ladder and quality floor bound what it may pick).
+    slo: Option<Mutex<SloController>>,
 }
 
 impl Batcher {
@@ -125,7 +130,19 @@ impl Batcher {
             current_rate: Mutex::new(0.0),
             pending_cancels: Mutex::new(HashSet::new()),
             tracer: Arc::new(Tracer::new(TIMELINE_RING_CAP)),
+            slo: None,
         }
+    }
+
+    /// Drive the shared budget from measured p95 TTFT/ITL instead of queue
+    /// depth. Ignored on engines without a runtime budget knob (same
+    /// clamping rule as the depth policy — reported budgets must reflect
+    /// what was served).
+    pub fn with_slo_controller(mut self, ctl: SloController) -> Self {
+        if self.engine.supports_runtime_budget() {
+            self.slo = Some(Mutex::new(ctl));
+        }
+        self
     }
 
     /// The trace collector: `serve` exports it at shutdown (`--trace-out`),
@@ -167,6 +184,30 @@ impl Batcher {
             Ordering::Relaxed,
         );
         self.metrics.set_layer_rank_fracs(self.engine.layer_effective_rank_fracs(rate));
+    }
+
+    /// Pick the shared rate for the current backlog: the SLO controller's
+    /// closed-loop tier when one is attached, else the depth policy.
+    /// Evaluated controller decisions close the measurement window
+    /// (stats-reset semantics), so each decision judges fresh evidence.
+    fn pick_rate(&self, depth: usize) -> f64 {
+        let Some(slo) = &self.slo else {
+            return self.policy.pick(depth);
+        };
+        let mut ctl = lock_recover(slo);
+        let w = SloWindow {
+            ttft_p95: Some(Duration::from_micros(self.metrics.ttft_quantile_us(0.95))),
+            itl_p95: Some(Duration::from_micros(self.metrics.itl_quantile_us(0.95))),
+            samples: self.metrics.ttft_samples(),
+        };
+        let decision = ctl.observe(Instant::now(), &w);
+        if decision.evaluated {
+            self.metrics.reset_window();
+        }
+        // Cumulative store (not add): repairs the counter after window
+        // resets, since the controller owns the authoritative total.
+        self.metrics.slo_retunes.store(ctl.retunes, Ordering::Relaxed);
+        ctl.rate()
     }
 
     fn take_pending_cancel(&self, id: &str) -> bool {
@@ -265,7 +306,7 @@ impl Batcher {
     /// admitting generation work between steps).
     fn execute(&self, jobs: Vec<Job>, rx: &mpsc::Receiver<Job>) -> Vec<Job> {
         let depth = jobs.len();
-        self.apply_rate(self.policy.pick(depth));
+        self.apply_rate(self.pick_rate(depth));
         self.metrics.batches.fetch_add(1, Ordering::Relaxed);
         self.metrics.batched_jobs.fetch_add(depth as u64, Ordering::Relaxed);
 
@@ -398,14 +439,21 @@ impl Batcher {
     /// `Cancel` are answered immediately; `Score` is carried to the next
     /// batch. The shared budget is re-picked **per engine pass** from the
     /// live generate backlog, so the controller tracks load at token
-    /// granularity without ever swapping engines.
+    /// granularity without ever swapping engines. Admission order over the
+    /// queued backlog is the [`Scheduler`]'s priority/deadline/tenant key,
+    /// not FIFO.
     fn run_decode_session(
         &self,
         session: &mut dyn DecodeSession,
         gen_jobs: Vec<Job>,
         rx: &mpsc::Receiver<Job>,
     ) -> Vec<Job> {
-        let mut waiting: VecDeque<Job> = gen_jobs.into();
+        let mut waiting: Scheduler<Job> = Scheduler::new();
+        for job in gen_jobs {
+            let Request::Generate(g) = &job.req else { unreachable!() };
+            let (meta, arrived) = (g.sched.clone(), job.arrived);
+            waiting.push(job, meta, arrived);
+        }
         let mut inflight: HashMap<u64, Job> = HashMap::new();
         // Request-id → session-id, for mid-flight cancels.
         let mut sids: HashMap<String, u64> = HashMap::new();
@@ -420,8 +468,8 @@ impl Batcher {
         loop {
             // Fill free slots: queued work first, then fresh arrivals.
             loop {
-                let next = if let Some(w) = waiting.pop_front() {
-                    Some(w)
+                let next = if let Some(e) = waiting.pop(Instant::now()) {
+                    Some(e)
                 } else if carried.is_empty()
                     && fresh_budget > 0
                     && session.active() < session.capacity()
@@ -435,10 +483,15 @@ impl Batcher {
                             // here — everything handled in-session is
                             // counted in-session.
                             match &job.req {
-                                Request::Generate(_) => {
+                                Request::Generate(g) => {
                                     self.metrics.requests.fetch_add(1, Ordering::Relaxed);
                                     fresh_budget -= 1;
-                                    Some(job)
+                                    // Through the scheduler, not straight in:
+                                    // the next pop re-ranks it against any
+                                    // requeued (join-refused) entries.
+                                    let (meta, arrived) = (g.sched.clone(), job.arrived);
+                                    waiting.push(job, meta, arrived);
+                                    continue;
                                 }
                                 Request::Stats { id, reset } => {
                                     self.metrics.requests.fetch_add(1, Ordering::Relaxed);
@@ -487,15 +540,17 @@ impl Batcher {
                 } else {
                     None
                 };
-                let Some(job) = next else { break };
-                let Request::Generate(g) = &job.req else { unreachable!() };
+                let Some(entry) = next else { break };
+                let Request::Generate(g) = &entry.item.req else { unreachable!() };
                 if self.take_pending_cancel(&g.id) {
-                    self.respond_cancelled(&job, g);
+                    self.respond_cancelled(&entry.item, g);
                     continue;
                 }
                 // The timeline's enqueue instant back-dates to arrival; the
                 // engine marks tokens on the clone carried by the request.
-                let tl = RequestTimeline::new(Arc::clone(&self.tracer), &g.id, job.arrived);
+                let tl =
+                    RequestTimeline::new(Arc::clone(&self.tracer), &g.id, entry.item.arrived);
+                tl.set_sched_class(entry.meta.label());
                 let sreq = SessionRequest {
                     prompt: g.prompt.clone(),
                     max_new: g.max_tokens,
@@ -503,6 +558,7 @@ impl Batcher {
                     stop: g.stop.clone(),
                     budget: g.budget,
                     spec_k: g.spec_k,
+                    sched: entry.meta.clone(),
                     timeline: Some(tl.clone()),
                 };
                 match session.try_join(&sreq) {
@@ -510,15 +566,16 @@ impl Batcher {
                         self.metrics
                             .observe_budget(g.budget.unwrap_or_else(|| self.current_rate()));
                         tl.mark_admit();
-                        self.metrics.observe_queue_wait(job.arrived.elapsed());
+                        self.metrics.observe_queue_wait(entry.item.arrived.elapsed());
                         sids.insert(g.id.clone(), sid);
-                        inflight.insert(sid, job);
                         timelines.insert(sid, tl);
+                        inflight.insert(sid, entry.item);
                     }
                     None => {
-                        // Unadmitted: drop the tentative timeline; a fresh one
-                        // (same arrival instant) is created on the next try.
-                        waiting.push_front(job);
+                        // Unadmitted: drop the tentative timeline (a fresh one
+                        // with the same arrival instant is created on the next
+                        // try) and requeue with rank + service refund intact.
+                        waiting.requeue(entry);
                         break;
                     }
                 }
@@ -527,8 +584,8 @@ impl Batcher {
                 break;
             }
             // Controller: one shared scalar per engine pass, from the live
-            // generate backlog.
-            self.apply_rate(self.policy.pick(waiting.len() + inflight.len()));
+            // generate backlog (or the SLO loop when one is attached).
+            self.apply_rate(self.pick_rate(waiting.len() + inflight.len()));
             for ev in session.step() {
                 match ev {
                     SeqEvent::Token { id, delta } => {
@@ -579,16 +636,15 @@ impl Batcher {
         &self,
         session: &mut dyn DecodeSession,
         target: &str,
-        waiting: &mut VecDeque<Job>,
+        waiting: &mut Scheduler<Job>,
         sids: &HashMap<String, u64>,
     ) -> bool {
         if let Some(&sid) = sids.get(target) {
             return session.cancel(sid);
         }
-        if let Some(i) = waiting.iter().position(
-            |j| matches!(&j.req, Request::Generate(g) if g.id == target),
-        ) {
-            let job = waiting.remove(i).expect("checked position");
+        if let Some(job) = waiting
+            .remove_where(|j| matches!(&j.req, Request::Generate(g) if g.id == target))
+        {
             let Request::Generate(g) = &job.req else { unreachable!() };
             self.respond_cancelled(&job, g);
             return true;
@@ -639,6 +695,7 @@ pub fn generate_req(prompt: &str, tokens: usize) -> Request {
         budget: None,
         spec_k: None,
         stream: false,
+        sched: crate::sched::SchedClass::default(),
     })
 }
 

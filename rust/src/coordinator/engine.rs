@@ -33,6 +33,10 @@ pub struct SessionRequest {
     /// Per-request speculative draft length (`None` = the engine default,
     /// `Some(0)` = speculation off for this request).
     pub spec_k: Option<usize>,
+    /// Scheduling annotation (priority/deadline/tenant) from the wire
+    /// protocol; the admission queue keys on it, the decode schedule
+    /// never reads it.
+    pub sched: crate::sched::SchedClass,
     /// Lifecycle timeline handle (`None` = untraced). The session marks
     /// tokens and routes batch events onto it; timing only, never read by
     /// the schedule.
@@ -171,6 +175,9 @@ pub struct NativeEngine {
     /// Speculative-decoding defaults applied to every decode session
     /// (`default_k == 0` leaves speculation per-request opt-in).
     spec: crate::spec::SpecConfig,
+    /// Max prompt tokens fed per sequence per engine pass (chunked prefill;
+    /// 1 = legacy one-token-per-pass interleave).
+    prefill_chunk: usize,
     /// Persistent paged state: the block pool and prefix trie outlive
     /// individual decode sessions, so shared prefixes are reused across
     /// batches, not just within one (lazily built on first session).
@@ -187,6 +194,7 @@ impl NativeEngine {
             decode_capacity: 8,
             cache_mode: CacheMode::default(),
             spec: crate::spec::SpecConfig::default(),
+            prefill_chunk: 1,
             paged: Mutex::new(None),
             metrics: Mutex::new(None),
         }
@@ -205,6 +213,15 @@ impl NativeEngine {
             default_k: k.min(crate::spec::MAX_SPEC_K),
             draft_rate: draft_rate.clamp(0.0, 1.0),
         };
+        self
+    }
+
+    /// Chunked prefill: feed up to `chunk` prompt tokens per sequence per
+    /// engine pass, interleaved with decode rows in the same batch. Bitwise
+    /// equivalent to the one-token interleave (chunk 1) — it only changes
+    /// how many passes a long prompt occupies before its first token.
+    pub fn with_prefill_chunk(mut self, chunk: usize) -> Self {
+        self.prefill_chunk = chunk.max(1);
         self
     }
 
@@ -337,6 +354,7 @@ impl Engine for NativeEngine {
             CacheMode::Dense => {
                 let mut batch = DecodeBatch::new(cfg, self.decode_capacity);
                 batch.set_spec(self.spec);
+                batch.set_prefill_chunk(self.prefill_chunk);
                 Some(Box::new(NativeDecodeSession::new(
                     Arc::clone(&self.model),
                     batch,
@@ -352,6 +370,9 @@ impl Engine for NativeEngine {
                     batch.set_spec(self.spec);
                     Arc::new(Mutex::new(batch))
                 }));
+                // Idempotent: covers a persistent batch created before the
+                // engine's chunk setting (or by an earlier session).
+                shared.lock().unwrap().set_prefill_chunk(self.prefill_chunk);
                 Some(Box::new(NativeDecodeSession::new(
                     Arc::clone(&self.model),
                     shared,
@@ -600,6 +621,7 @@ impl<T: SessionBatch> DecodeSession for NativeDecodeSession<T> {
             sampling: req.sampling,
             budget: req.budget,
             spec_k: req.spec_k,
+            sched: req.sched.clone(),
         };
         let id = self.batch.try_join(spec)?;
         self.gen.insert(

@@ -101,6 +101,10 @@ pub struct Metrics {
     pub spec_rollbacks: AtomicU64,
     /// Shared-budget retunes by the controller (tier changes, not swaps).
     pub budget_switches: AtomicU64,
+    /// Tier changes made by the closed-loop SLO controller (cumulative —
+    /// the batcher re-stores the controller's authoritative total after
+    /// every decision, so it survives window resets).
+    pub slo_retunes: AtomicU64,
     /// Calibrated active-rank fraction at the current shared budget ×1000.
     pub effective_rank_frac_milli: AtomicU64,
     /// Per-layer active-rank fractions at the current shared budget —
@@ -291,6 +295,12 @@ impl Metrics {
         hist_quantile_us(&hist_counts(&self.itl_hist), &ITL_EDGES_US, q)
     }
 
+    /// TTFT samples recorded in the current window — the SLO controller's
+    /// evidence gate (`SloWindow::samples`).
+    pub fn ttft_samples(&self) -> u64 {
+        self.ttft_count.load(Ordering::Relaxed)
+    }
+
     /// Approximate queue-wait quantile.
     pub fn queue_wait_quantile_us(&self, q: f64) -> u64 {
         hist_quantile_us(&hist_counts(&self.queue_wait_hist), &LATENCY_EDGES_US, q)
@@ -415,6 +425,10 @@ impl Metrics {
             (
                 "budget_switches",
                 Json::Num(self.budget_switches.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "slo_retunes",
+                Json::Num(self.slo_retunes.load(Ordering::Relaxed) as f64),
             ),
             (
                 "effective_rank_frac",
@@ -695,6 +709,7 @@ mod tests {
             "spec_rollbacks",
             "spec_acceptance",
             "budget_switches",
+            "slo_retunes",
             "effective_rank_frac",
             "layer_rank_frac",
             "budget_hist",

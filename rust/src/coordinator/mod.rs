@@ -60,6 +60,16 @@ pub struct ServerConfig {
     /// Write a Chrome `trace_event` JSON of the finished-request ring to
     /// this path at shutdown (`--trace-out`; None = no export).
     pub trace_out: Option<String>,
+    /// Max prompt tokens fed per sequence per engine pass (`--prefill-chunk`;
+    /// chunked prefill interleaves prompt chunks with decode rows, bitwise
+    /// equivalent to monolithic prefill).
+    pub prefill_chunk: usize,
+    /// p95 TTFT target in milliseconds (`--slo-ttft-ms`). Setting either
+    /// SLO target attaches the closed-loop [`crate::sched::SloController`]
+    /// in place of the queue-depth budget policy.
+    pub slo_ttft_ms: Option<f64>,
+    /// p95 ITL target in milliseconds (`--slo-itl-ms`).
+    pub slo_itl_ms: Option<f64>,
 }
 
 impl Default for ServerConfig {
@@ -77,6 +87,9 @@ impl Default for ServerConfig {
             spec_draft: 0.5,
             limits: Limits::default(),
             trace_out: None,
+            prefill_chunk: 256,
+            slo_ttft_ms: None,
+            slo_itl_ms: None,
         }
     }
 }
@@ -112,6 +125,22 @@ impl ServerConfig {
         } else {
             BudgetPolicy::fixed(*tiers.first().unwrap_or(&0.0))
         }
+    }
+
+    /// The closed-loop SLO controller's configuration over the same tier
+    /// ladder, when either latency target is set (`--slo-ttft-ms` /
+    /// `--slo-itl-ms`). Non-positive targets are ignored.
+    pub fn slo(&self) -> Option<crate::sched::SloConfig> {
+        let dur = |ms: Option<f64>| {
+            ms.filter(|m| m.is_finite() && *m > 0.0)
+                .map(|m| Duration::from_micros((m * 1000.0) as u64))
+        };
+        let cfg = crate::sched::SloConfig::new(
+            dur(self.slo_ttft_ms),
+            dur(self.slo_itl_ms),
+            self.tiers(),
+        );
+        cfg.enabled().then_some(cfg)
     }
 }
 
@@ -165,7 +194,8 @@ pub fn build_engine(cfg: &ServerConfig) -> anyhow::Result<Arc<dyn Engine>> {
         );
         adapted
     };
-    let mut engine = NativeEngine::new(Arc::new(adapted));
+    let mut engine =
+        NativeEngine::new(Arc::new(adapted)).with_prefill_chunk(cfg.prefill_chunk);
     if cfg.spec_k > 0 {
         engine = engine.with_spec(cfg.spec_k, spec_draft);
     }
@@ -199,7 +229,11 @@ pub fn serve_on(
     engine: Arc<dyn Engine>,
     cfg: ServerConfig,
 ) -> anyhow::Result<()> {
-    let batcher = Arc::new(Batcher::new(engine, cfg.policy(), cfg.max_batch));
+    let mut batcher = Batcher::new(engine, cfg.policy(), cfg.max_batch);
+    if let Some(slo_cfg) = cfg.slo() {
+        batcher = batcher.with_slo_controller(crate::sched::SloController::new(slo_cfg));
+    }
+    let batcher = Arc::new(batcher);
     let submit = batcher.submitter();
     let b2 = Arc::clone(&batcher);
     let batch_thread = std::thread::spawn(move || b2.run());
@@ -386,6 +420,22 @@ mod tests {
         let fixed = ServerConfig { target_compression: 0.3, ..ServerConfig::default() };
         assert_eq!(fixed.tiers(), vec![0.3]);
         assert!(fixed.policy().thresholds.is_empty());
+    }
+
+    #[test]
+    fn slo_config_built_from_flags() {
+        let cfg = ServerConfig {
+            adaptive_budget: true,
+            slo_ttft_ms: Some(50.0),
+            ..ServerConfig::default()
+        };
+        let slo = cfg.slo().expect("a TTFT target enables the controller");
+        assert_eq!(slo.ttft_target, Some(Duration::from_millis(50)));
+        assert_eq!(slo.itl_target, None);
+        assert_eq!(slo.tiers, cfg.tiers(), "controller walks the server's tier ladder");
+        assert!(ServerConfig::default().slo().is_none(), "no targets → no controller");
+        let bad = ServerConfig { slo_ttft_ms: Some(-1.0), ..ServerConfig::default() };
+        assert!(bad.slo().is_none(), "non-positive targets are ignored");
     }
 
     #[test]

@@ -63,6 +63,10 @@ pub struct GenerateRequest {
     pub spec_k: Option<usize>,
     /// Emit incremental token frames before the final `done` frame.
     pub stream: bool,
+    /// Scheduling class: priority ("high"/"normal"/"low"), optional
+    /// deadline, optional tenant for weighted fair queuing. Annotation
+    /// for the admission queue only — decode itself never reads it.
+    pub sched: crate::sched::SchedClass,
 }
 
 /// A validated scoring request.
@@ -273,7 +277,41 @@ fn parse_generate(j: &Json, id: String, limits: &Limits) -> Result<GenerateReque
         Err(_) => false,
     };
 
-    Ok(GenerateRequest { id, prompt, max_tokens, sampling, stop, budget, spec_k, stream })
+    let priority = match j.get("priority") {
+        Ok(v) => {
+            let s = v
+                .as_str()
+                .ok_or_else(|| invalid("\"priority\" must be \"high\", \"normal\" or \"low\""))?;
+            crate::sched::Priority::parse(s).ok_or_else(|| {
+                invalid(format!(
+                    "\"priority\" must be \"high\", \"normal\" or \"low\" (got {s:?})"
+                ))
+            })?
+        }
+        Err(_) => crate::sched::Priority::default(),
+    };
+    let deadline = match opt_f64(j, "deadline_ms")? {
+        Some(ms) if ms.is_finite() && ms >= 0.0 => {
+            Some(std::time::Duration::from_micros((ms * 1000.0) as u64))
+        }
+        Some(ms) => {
+            return Err(invalid(format!(
+                "\"deadline_ms\" must be a non-negative number (got {ms})"
+            )))
+        }
+        None => None,
+    };
+    let tenant = match j.get("tenant") {
+        Ok(v) => Some(
+            v.as_str()
+                .ok_or_else(|| invalid("\"tenant\" must be a string"))?
+                .to_string(),
+        ),
+        Err(_) => None,
+    };
+    let sched = crate::sched::SchedClass { priority, deadline, tenant };
+
+    Ok(GenerateRequest { id, prompt, max_tokens, sampling, stop, budget, spec_k, stream, sched })
 }
 
 fn opt_f64(j: &Json, key: &str) -> Result<Option<f64>, ProtocolError> {
@@ -466,6 +504,36 @@ mod tests {
         .unwrap();
         let Request::Generate(g) = r else { panic!() };
         assert_eq!(g.spec_k, Some(0));
+    }
+
+    #[test]
+    fn sched_fields_parse_and_validate() {
+        use crate::sched::Priority;
+        // Defaults: normal priority, no deadline, no tenant.
+        let r = parse_request(r#"{"op":"generate","prompt":"p","tokens":4}"#, &limits()).unwrap();
+        let Request::Generate(g) = r else { panic!() };
+        assert_eq!(g.sched.priority, Priority::Normal);
+        assert!(g.sched.deadline.is_none() && g.sched.tenant.is_none());
+        // Full set round-trips.
+        let r = parse_request(
+            r#"{"op":"generate","prompt":"p","tokens":4,"priority":"high","deadline_ms":250.5,"tenant":"acme"}"#,
+            &limits(),
+        )
+        .unwrap();
+        let Request::Generate(g) = r else { panic!() };
+        assert_eq!(g.sched.priority, Priority::High);
+        assert_eq!(g.sched.deadline, Some(std::time::Duration::from_micros(250_500)));
+        assert_eq!(g.sched.tenant.as_deref(), Some("acme"));
+        // Invalid values are structured errors, not silent defaults.
+        for bad in [
+            r#"{"op":"generate","prompt":"p","tokens":4,"priority":"urgent"}"#,
+            r#"{"op":"generate","prompt":"p","tokens":4,"priority":3}"#,
+            r#"{"op":"generate","prompt":"p","tokens":4,"deadline_ms":-5}"#,
+            r#"{"op":"generate","prompt":"p","tokens":4,"tenant":7}"#,
+        ] {
+            let e = parse_request(bad, &limits()).unwrap_err();
+            assert_eq!(e.code, "invalid_request", "accepted: {bad}");
+        }
     }
 
     #[test]

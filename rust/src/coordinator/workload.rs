@@ -37,11 +37,34 @@ pub struct Mix {
     pub shared_prefix_frac: f64,
     /// Length of that shared prefix in words (0 disables it).
     pub prefix_words: usize,
+    /// Fraction of generate requests carrying a long sampled context
+    /// (exercises chunked prefill; 0 disables).
+    pub long_prompt_frac: f64,
+    /// Length of that long context in words (0 disables it).
+    pub long_prompt_words: usize,
+    /// Fraction of generate requests tagged high priority.
+    pub high_frac: f64,
+    /// Fraction of generate requests tagged low priority (the remainder
+    /// after `high_frac` + `low_frac` stays normal).
+    pub low_frac: f64,
+    /// Sample each generate's tenant uniformly from `t0..t{n-1}`
+    /// (0 = untagged, the shared anonymous tenant).
+    pub tenants: usize,
 }
 
 impl Default for Mix {
     fn default() -> Self {
-        Self { generate_frac: 0.25, gen_tokens: 16, shared_prefix_frac: 0.0, prefix_words: 0 }
+        Self {
+            generate_frac: 0.25,
+            gen_tokens: 16,
+            shared_prefix_frac: 0.0,
+            prefix_words: 0,
+            long_prompt_frac: 0.0,
+            long_prompt_words: 0,
+            high_frac: 0.0,
+            low_frac: 0.0,
+            tenants: 0,
+        }
     }
 }
 
@@ -90,12 +113,37 @@ impl LoadReport {
 fn make_op(g: &Grammar, mix: &Mix, rng: &mut Xoshiro256) -> Request {
     if rng.f64() < mix.generate_frac {
         let about = format!("about {} :", g.entities[rng.below(g.entities.len())]);
-        let prompt = if mix.prefix_words > 0 && rng.f64() < mix.shared_prefix_frac {
+        let mut prompt = if mix.prefix_words > 0 && rng.f64() < mix.shared_prefix_frac {
             format!("{}{about}", shared_prefix(g, mix.prefix_words))
         } else {
             about
         };
-        generate_req(&prompt, mix.gen_tokens)
+        if mix.long_prompt_words > 0 && rng.f64() < mix.long_prompt_frac {
+            // A long sampled context ahead of the question: many prompt
+            // tokens, so prefill dominates this request's first-token path.
+            let mut ctx = String::from("ctx:");
+            for _ in 0..mix.long_prompt_words {
+                ctx.push(' ');
+                ctx.push_str(&g.entities[rng.below(g.entities.len())]);
+            }
+            ctx.push(' ');
+            prompt = format!("{ctx}{prompt}");
+        }
+        let mut req = generate_req(&prompt, mix.gen_tokens);
+        if let Request::Generate(gr) = &mut req {
+            let r = rng.f64();
+            gr.sched.priority = if r < mix.high_frac {
+                crate::sched::Priority::High
+            } else if r < mix.high_frac + mix.low_frac {
+                crate::sched::Priority::Low
+            } else {
+                crate::sched::Priority::Normal
+            };
+            if mix.tenants > 0 {
+                gr.sched.tenant = Some(format!("t{}", rng.below(mix.tenants)));
+            }
+        }
+        req
     } else {
         score_req(&g.document(rng))
     }
@@ -304,6 +352,42 @@ mod tests {
         assert!(a.starts_with("sys:") && a.len() > 8);
         let longer = shared_prefix(&g, 16);
         assert!(longer.starts_with(&a[..a.len() - 3]), "prefixes nest by construction");
+    }
+
+    #[test]
+    fn mix_samples_priority_tenant_and_long_prompts() {
+        let g = crate::data::grammar();
+        let mut rng = Xoshiro256::new(42);
+        let mix = Mix {
+            generate_frac: 1.0,
+            gen_tokens: 2,
+            long_prompt_frac: 0.5,
+            long_prompt_words: 12,
+            high_frac: 0.3,
+            low_frac: 0.3,
+            tenants: 2,
+            ..Mix::default()
+        };
+        let mut long = 0;
+        let mut prios = std::collections::HashSet::new();
+        let mut tenants = std::collections::HashSet::new();
+        for _ in 0..64 {
+            let Request::Generate(gr) = make_op(&g, &mix, &mut rng) else { panic!() };
+            if gr.prompt.starts_with("ctx:") {
+                long += 1;
+                assert!(gr.prompt.len() > 40, "long prompts must actually be long");
+            }
+            prios.insert(gr.sched.priority.as_str());
+            tenants.insert(gr.sched.tenant.clone().expect("tenants > 0 tags every request"));
+        }
+        assert!(long > 0 && long < 64, "long-prompt fraction must mix, got {long}/64");
+        assert_eq!(prios.len(), 3, "all three priority classes must appear");
+        assert_eq!(tenants.len(), 2, "both tenants must appear");
+        // The default mix stays untagged (FIFO-equivalent annotations).
+        let plain = Mix { generate_frac: 1.0, ..Mix::default() };
+        let Request::Generate(gr) = make_op(&g, &plain, &mut rng) else { panic!() };
+        assert_eq!(gr.sched.priority, crate::sched::Priority::Normal);
+        assert!(gr.sched.tenant.is_none() && !gr.prompt.starts_with("ctx:"));
     }
 
     #[test]

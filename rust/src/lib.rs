@@ -32,6 +32,7 @@ pub mod flops;
 pub mod kvcache;
 pub mod model;
 pub mod runtime;
+pub mod sched;
 pub mod spec;
 pub mod tensor;
 pub mod trace;

@@ -273,6 +273,9 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             max_line_bytes: args.get_usize("max-line-bytes", defaults.limits.max_line_bytes),
         },
         trace_out: args.get_opt("trace-out").map(String::from),
+        prefill_chunk: args.get_usize("prefill-chunk", defaults.prefill_chunk),
+        slo_ttft_ms: args.get_opt("slo-ttft-ms").and_then(|s| s.parse().ok()),
+        slo_itl_ms: args.get_opt("slo-itl-ms").and_then(|s| s.parse().ok()),
     };
     rana::coordinator::serve(cfg)
 }

@@ -588,6 +588,10 @@ pub struct SeqSpec {
     /// ([`crate::spec::SpecConfig::default_k`]), `Some(0)` = explicitly
     /// off, `Some(k)` = draft up to `k` tokens per round.
     pub spec_k: Option<usize>,
+    /// Scheduling annotation (priority/deadline/tenant) carried from the
+    /// wire protocol for observability — never read by the decode
+    /// schedule, so it cannot perturb any determinism pin.
+    pub sched: crate::sched::SchedClass,
 }
 
 impl SeqSpec {
@@ -598,6 +602,7 @@ impl SeqSpec {
             sampling: ops::Sampling::default(),
             budget: None,
             spec_k: None,
+            sched: crate::sched::SchedClass::default(),
         }
     }
 }
@@ -666,6 +671,11 @@ pub struct DecodeBatch {
     emitted: Vec<(u64, u32)>,
     /// Speculation defaults (draft length, draft budget) for joins.
     spec: crate::spec::SpecConfig,
+    /// Prompt tokens fed per sequence per engine pass (chunked prefill,
+    /// DESIGN.md §2h). 1 = the legacy one-token-per-pass interleave; larger
+    /// chunks cut a length-L prefill from L passes to ⌈L/C⌉ while the
+    /// multi-row pass keeps the outputs bitwise identical.
+    prefill_chunk: usize,
     /// Tokens fed across all steps (batch-occupancy accounting; committed
     /// tokens only — rolled-back draft/verify rows are not counted here).
     pub tokens_processed: u64,
@@ -693,6 +703,7 @@ impl DecodeBatch {
             next_id: 0,
             emitted: Vec::new(),
             spec: crate::spec::SpecConfig::default(),
+            prefill_chunk: 1,
             tokens_processed: 0,
             steps: 0,
             draft_tokens: 0,
@@ -706,6 +717,14 @@ impl DecodeBatch {
     /// Configure speculation defaults for sequences joined from now on.
     pub fn set_spec(&mut self, spec: crate::spec::SpecConfig) {
         self.spec = spec;
+    }
+
+    /// Prompt tokens fed per sequence per engine pass (clamped to ≥ 1).
+    /// Chunked and monolithic prefill are bitwise-equivalent — the chunk
+    /// size only trades passes-to-first-token against per-pass latency for
+    /// the decode rows sharing the pass.
+    pub fn set_prefill_chunk(&mut self, chunk: usize) {
+        self.prefill_chunk = chunk.max(1);
     }
 
     /// `(draft_tokens, accepted_tokens, spec_rollbacks)` running totals.
@@ -826,11 +845,14 @@ impl DecodeBatch {
 
         // --- 1. Token selection (the schedule is unchanged: speculation
         // only changes HOW a generation-phase token is fed, never which
-        // token is selected). `k > 0` marks a speculation round; `base` is
+        // token is selected; chunking only changes how many *prompt* rows
+        // one pass carries). `k > 0` marks a speculation round; `base` is
         // the rollback target.
         struct Plan {
             idx: usize,
-            tok: u32,
+            /// Tokens this sequence feeds this pass: one prefill chunk
+            /// (stream order) or a single generation-phase token.
+            toks: Vec<u32>,
             k: usize,
             base: usize,
             /// Prompt-feed row (timing attribution only).
@@ -847,17 +869,26 @@ impl DecodeBatch {
                 s.done = true;
                 continue;
             }
-            let (tok, gen_phase) = if s.fed < s.prompt.len() {
-                let t = s.prompt[s.fed];
-                s.fed += 1;
+            let (toks, gen_phase) = if s.fed < s.prompt.len() {
+                // Prefill chunk: up to `prefill_chunk` prompt tokens in one
+                // pass, clamped to the remaining prompt and the positional
+                // capacity (cache.len() < max_seq was checked above).
+                let chunk = self
+                    .prefill_chunk
+                    .min(s.prompt.len() - s.fed)
+                    .min(max_seq - s.cache.len())
+                    .max(1);
+                let toks = s.prompt[s.fed..s.fed + chunk].to_vec();
+                s.fed += chunk;
                 if self.seq_events.len() < SEQ_EVENT_BUF_CAP {
-                    self.seq_events.push((s.id, SeqBatchEvent::Prefill { tokens: 1 }));
+                    self.seq_events
+                        .push((s.id, SeqBatchEvent::Prefill { tokens: chunk as u32 }));
                 }
-                (t, false)
+                (toks, false)
             } else if let Some(c) = s.spec.as_mut().and_then(|sp| sp.pending.take()) {
                 // Corrected token from a rejected round: sampled and
                 // emitted last pass, still owed its full-budget KV.
-                (c, true)
+                (vec![c], true)
             } else if s.generated.len() >= s.n_gen {
                 s.done = true; // n_gen == 0, or finished last step
                 continue;
@@ -873,7 +904,7 @@ impl DecodeBatch {
                     s.done = true;
                     continue;
                 }
-                (next, true)
+                (vec![next], true)
             };
             // Draft length: the controller's pick, clamped so accepted
             // drafts can neither exceed the request nor the positional
@@ -896,7 +927,7 @@ impl DecodeBatch {
             } else {
                 0
             };
-            plan.push(Plan { idx, tok, k, base: s.cache.len(), prefill: !gen_phase });
+            plan.push(Plan { idx, toks, k, base: s.cache.len(), prefill: !gen_phase });
         }
 
         // --- 2. Draft phase: k low-budget passes batched across the
@@ -916,7 +947,9 @@ impl DecodeBatch {
                 }
                 let tokens: Vec<u32> = active
                     .iter()
-                    .map(|&p| if j == 0 { plan[p].tok } else { drafts[p][j - 1] })
+                    // k > 0 only on generation-phase rows, whose `toks` is
+                    // the single token x0 the draft round starts from.
+                    .map(|&p| if j == 0 { plan[p].toks[0] } else { drafts[p][j - 1] })
                     .collect();
                 let rates: Vec<f64> = vec![draft_rate; active.len()];
                 let res = {
@@ -972,7 +1005,9 @@ impl DecodeBatch {
             }
             let mut rows: Vec<(usize, u32)> = Vec::new();
             for (ci, p) in plan.iter().enumerate() {
-                rows.push((ci, p.tok));
+                for &t in &p.toks {
+                    rows.push((ci, t));
+                }
                 for &d in &drafts[ci][..p.k] {
                     rows.push((ci, d));
                 }
@@ -1025,9 +1060,10 @@ impl DecodeBatch {
             // Split the shared pass across prefill / decode / verify rows by
             // row count — timing attribution only, no compute branch.
             let pass_us = t_pass.elapsed().as_micros() as u64;
-            let prefill_rows = plan.iter().filter(|p| p.prefill).count() as u64;
+            let prefill_rows: u64 =
+                plan.iter().filter(|p| p.prefill).map(|p| p.toks.len() as u64).sum();
             let verify_rows: u64 = plan.iter().map(|p| p.k as u64).sum();
-            let decode_rows = plan.len() as u64 - prefill_rows;
+            let decode_rows = plan.iter().filter(|p| !p.prefill).count() as u64;
             self.phases.attribute_pass(pass_us, prefill_rows, decode_rows, verify_rows);
         }
 
@@ -1037,9 +1073,13 @@ impl DecodeBatch {
         for (ci, p) in plan.iter().enumerate() {
             let s = self.slots[p.idx].as_mut().expect("planned slot occupied");
             if p.k == 0 {
-                s.last_logits = logits.row(cursor).to_vec();
-                committed += 1;
-                cursor += 1;
+                // The held logits are the final fed row's — for a prefill
+                // chunk that is the logits after its last prompt token,
+                // exactly what feeding the chunk one pass at a time (or a
+                // monolithic prefill) would have held.
+                s.last_logits = logits.row(cursor + p.toks.len() - 1).to_vec();
+                committed += p.toks.len() as u64;
+                cursor += p.toks.len();
                 continue;
             }
             let verify: Vec<&[f32]> = (0..=p.k).map(|i| logits.row(cursor + i)).collect();
@@ -1333,6 +1373,119 @@ mod tests {
         }
         batch.retire_finished();
         assert_eq!(batch.active(), 0);
+    }
+
+    #[test]
+    fn chunked_multi_pass_prefill_is_bitwise_identical_to_single_rows() {
+        // Kernel-level pin for chunked prefill: feeding a prompt through
+        // decode_step_batch_multi in chunks of C produces byte-identical
+        // per-position logits AND byte-identical KV to feeding it one
+        // token per pass — in-pass causality makes the chunk exact, not
+        // approximately equal.
+        let m = tiny_model(Arch::SwiGlu);
+        let prompt: Vec<u32> = (0..20u32).map(|i| (i * 7 + 3) % 60).collect();
+        // Oracle: one token per pass.
+        let mut oracle_cache = KvCache::new(&m.cfg);
+        let mut oracle_logits: Vec<Vec<f32>> = Vec::new();
+        for &t in &prompt {
+            let rows = [(0usize, t)];
+            let mut refs = vec![&mut oracle_cache];
+            let l = decode_step_batch_multi(&m, &rows, &mut refs, None).unwrap();
+            oracle_logits.push(l.row(0).to_vec());
+        }
+        for chunk in [1usize, 4, 7, 16, 256] {
+            let mut cache = KvCache::new(&m.cfg);
+            let mut got: Vec<Vec<f32>> = Vec::new();
+            let mut fed = 0;
+            while fed < prompt.len() {
+                let c = chunk.min(prompt.len() - fed);
+                let rows: Vec<(usize, u32)> =
+                    prompt[fed..fed + c].iter().map(|&t| (0usize, t)).collect();
+                let mut refs = vec![&mut cache];
+                let l = decode_step_batch_multi(&m, &rows, &mut refs, None).unwrap();
+                for r in 0..c {
+                    got.push(l.row(r).to_vec());
+                }
+                fed += c;
+            }
+            assert_eq!(got, oracle_logits, "chunk {chunk}: logits must be bitwise equal");
+            assert_eq!(cache.len(), oracle_cache.len());
+            for layer in 0..m.cfg.n_layers {
+                let n = cache.len() * m.cfg.d_model;
+                assert_eq!(
+                    cache.k[layer].data[..n],
+                    oracle_cache.k[layer].data[..n],
+                    "chunk {chunk} layer {layer}: K cache must be bitwise equal"
+                );
+                assert_eq!(
+                    cache.v[layer].data[..n],
+                    oracle_cache.v[layer].data[..n],
+                    "chunk {chunk} layer {layer}: V cache must be bitwise equal"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decode_batch_chunked_prefill_matches_monolithic_with_spec_rows() {
+        // End-to-end pin: a DecodeBatch running chunked prefill emits
+        // byte-identical token streams to the chunk=1 baseline, including
+        // when a speculative-decoding row shares the batch and when rows
+        // at different prefill depths interleave. Chunk 256 ≥ every
+        // prompt, so it also covers the "whole prompt in one pass" case.
+        let m = tiny_model(Arch::GeluNeoX);
+        let run = |chunk: usize| -> Vec<(u64, Vec<u32>)> {
+            let mut batch = DecodeBatch::new(&m.cfg, 3);
+            batch.set_prefill_chunk(chunk);
+            batch.set_spec(crate::spec::SpecConfig { default_k: 0, draft_rate: 0.5 });
+            let long: Vec<u32> = (0..20u32).map(|i| (i * 5 + 1) % 60).collect();
+            batch.try_join(long, 6).unwrap();
+            let mut spec = SeqSpec::greedy(vec![9, 1, 2, 3, 4], 8);
+            spec.spec_k = Some(3); // speculative row sharing the batch
+            batch.try_join_spec(spec).unwrap();
+            batch.try_join(vec![40, 3, 3], 5).unwrap();
+            let mut out = Vec::new();
+            let mut guard = 0;
+            while batch.has_work() {
+                batch.step(&m);
+                out.extend(
+                    batch.retire_finished().into_iter().map(|f| (f.id, f.generated)),
+                );
+                guard += 1;
+                assert!(guard < 128, "chunk {chunk}: did not converge");
+            }
+            out.extend(batch.retire_finished().into_iter().map(|f| (f.id, f.generated)));
+            out.sort_by_key(|&(id, _)| id);
+            out
+        };
+        let baseline = run(1);
+        assert_eq!(baseline.len(), 3);
+        assert!(baseline.iter().all(|(_, g)| !g.is_empty()));
+        for chunk in [4usize, 16, 256] {
+            assert_eq!(run(chunk), baseline, "chunk {chunk} diverged from chunk 1");
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_reduces_passes_to_first_token() {
+        // The mechanism behind the TTFT win: a length-L prefill takes
+        // ⌈L/C⌉ passes instead of L.
+        let m = tiny_model(Arch::SwiGlu);
+        let prompt: Vec<u32> = (0..24u32).map(|i| i % 60).collect();
+        let passes = |chunk: usize| -> u64 {
+            let mut batch = DecodeBatch::new(&m.cfg, 1);
+            batch.set_prefill_chunk(chunk);
+            batch.try_join(prompt.clone(), 1).unwrap();
+            while batch.drain_emitted().is_empty() && batch.has_work() {
+                batch.step(&m);
+            }
+            batch.steps
+        };
+        // The first token is sampled from held logits during selection (no
+        // extra engine pass), so passes-to-first-token = prefill passes.
+        assert_eq!(passes(1), 24, "chunk 1: one engine pass per prompt token");
+        assert_eq!(passes(8), 3, "chunk 8: ⌈24/8⌉ prefill passes");
+        assert_eq!(passes(256), 1, "whole prompt in one pass");
     }
 
     #[test]

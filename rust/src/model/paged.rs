@@ -209,6 +209,11 @@ pub struct PagedDecodeBatch {
     next_id: u64,
     /// Speculation defaults (draft length, draft budget) for joins.
     spec: crate::spec::SpecConfig,
+    /// Stream tokens fed per sequence per engine pass during prefill /
+    /// refeed (chunked prefill, DESIGN.md §2h). 1 = the legacy
+    /// one-token-per-pass interleave; larger chunks cut a length-L prefill
+    /// to ⌈L/C⌉ passes with bitwise-identical outputs and trie blocks.
+    prefill_chunk: usize,
     /// Tokens fed across all steps (batch-occupancy accounting; committed
     /// tokens only — rolled-back draft/verify rows are not counted here).
     pub tokens_processed: u64,
@@ -248,6 +253,7 @@ impl PagedDecodeBatch {
             finished_aside: Vec::new(),
             next_id: 0,
             spec: crate::spec::SpecConfig::default(),
+            prefill_chunk: 1,
             tokens_processed: 0,
             steps: 0,
             prefix_hit_tokens: 0,
@@ -263,6 +269,13 @@ impl PagedDecodeBatch {
     /// Configure speculation defaults for sequences joined from now on.
     pub fn set_spec(&mut self, spec: crate::spec::SpecConfig) {
         self.spec = spec;
+    }
+
+    /// Stream tokens fed per sequence per prefill/refeed pass (clamped to
+    /// ≥ 1). Chunked and monolithic prefill are bitwise-equivalent,
+    /// including the prefix-trie blocks a completed prefill publishes.
+    pub fn set_prefill_chunk(&mut self, chunk: usize) {
+        self.prefill_chunk = chunk.max(1);
     }
 
     /// `(draft_tokens, accepted_tokens, spec_rollbacks)` running totals.
@@ -498,7 +511,9 @@ impl PagedDecodeBatch {
         // is the rollback target.
         struct Plan {
             idx: usize,
-            tok: u32,
+            /// Tokens this sequence feeds this pass: one prefill/refeed
+            /// chunk (stream order) or a single generation-phase token.
+            toks: Vec<u32>,
             k: usize,
             base: usize,
             /// Stream-feed row (prompt prefill or preemption refeed) —
@@ -518,19 +533,31 @@ impl PagedDecodeBatch {
                 Self::finish(&mut self.pool, s);
                 continue;
             }
-            let (tok, gen_phase) = if s.fed < s.stream_len() {
-                let t = s.stream_tok(s.fed);
-                s.fed += 1;
+            let (toks, gen_phase) = if s.fed < s.stream_len() {
                 // A backlog of exactly one generated token — the corrected
                 // token of a rejected round — may speculate onward; prompt
-                // prefill and deeper refeed backlogs stay plain.
-                let gen = s.fed == s.stream_len()
-                    && s.fed > s.prompt.len()
-                    && !s.last_logits.is_empty();
-                if !gen && self.seq_events.len() < SEQ_EVENT_BUF_CAP {
-                    self.seq_events.push((s.id, SeqBatchEvent::Prefill { tokens: 1 }));
+                // prefill and deeper refeed backlogs are fed as plain
+                // chunks of up to `prefill_chunk` stream tokens, clamped
+                // to the backlog and the positional capacity
+                // (cache.len() < max_seq was checked above).
+                let rem = s.stream_len() - s.fed;
+                let gen_single =
+                    rem == 1 && s.fed + 1 > s.prompt.len() && !s.last_logits.is_empty();
+                if gen_single {
+                    let t = s.stream_tok(s.fed);
+                    s.fed += 1;
+                    (vec![t], true)
+                } else {
+                    let chunk = self
+                        .prefill_chunk
+                        .min(rem)
+                        .min(max_seq - s.cache.len())
+                        .max(1);
+                    let toks: Vec<u32> =
+                        (s.fed..s.fed + chunk).map(|i| s.stream_tok(i)).collect();
+                    s.fed += chunk;
+                    (toks, false)
                 }
-                (t, gen)
             } else if s.generated.len() >= s.n_gen {
                 Self::finish(&mut self.pool, s);
                 continue;
@@ -547,7 +574,7 @@ impl PagedDecodeBatch {
                     continue;
                 }
                 s.fed += 1;
-                (next, true)
+                (vec![next], true)
             };
             // Draft length: the controller's pick, clamped so accepted
             // drafts can neither exceed the request nor the positional
@@ -570,7 +597,7 @@ impl PagedDecodeBatch {
             } else {
                 0
             };
-            plan.push(Plan { idx, tok, k, base: s.cache.len(), prefill: !gen_phase });
+            plan.push(Plan { idx, toks, k, base: s.cache.len(), prefill: !gen_phase });
         }
 
         // 2b. Draft phase: low-budget passes batched across speculating
@@ -590,7 +617,9 @@ impl PagedDecodeBatch {
                 }
                 let tokens: Vec<u32> = active
                     .iter()
-                    .map(|&p| if j == 0 { plan[p].tok } else { drafts[p][j - 1] })
+                    // k > 0 only on generation-phase rows, whose `toks` is
+                    // the single token x0 the draft round starts from.
+                    .map(|&p| if j == 0 { plan[p].toks[0] } else { drafts[p][j - 1] })
                     .collect();
                 let rates: Vec<f64> = vec![draft_rate; active.len()];
                 let res = {
@@ -639,16 +668,17 @@ impl PagedDecodeBatch {
             self.phases.spec_draft_us += t_draft.elapsed().as_micros() as u64;
         }
 
-        // 3. Prepare every append window (alloc/COW): 1 + k positions for
-        // a speculation round, 1 for a plain row. On exhaustion the ladder
-        // is: degrade the round to a plain append, evict trie-only blocks,
-        // preempt the youngest other live sequence; a sequence the pool
-        // cannot hold even alone is truncated.
+        // 3. Prepare every append window (alloc/COW): toks + k positions
+        // for a speculation round, the chunk length for a prefill row. On
+        // exhaustion the ladder is: degrade the round to a plain append,
+        // evict trie-only blocks, shrink the prefill chunk to one token
+        // (today's footprint), preempt the youngest other live sequence;
+        // a sequence the pool cannot hold even alone is truncated.
         let t_prepare = std::time::Instant::now();
         let mut i = 0;
         while i < plan.len() {
             let idx = plan[i].idx;
-            let need = 1 + plan[i].k;
+            let need = plan[i].toks.len() + plan[i].k;
             let res = self.slots[idx]
                 .as_mut()
                 .expect("planned slot occupied")
@@ -667,6 +697,15 @@ impl PagedDecodeBatch {
                     }
                     if self.trie.evict(&mut self.pool, 1) > 0 {
                         continue; // retry this sequence
+                    }
+                    if plan[i].toks.len() > 1 {
+                        // Pool pressure degrades chunked prefill back to
+                        // the one-token-per-pass interleave: return the
+                        // unfed tail to the stream backlog and retry.
+                        let s = self.slots[idx].as_mut().expect("planned slot occupied");
+                        s.fed -= plan[i].toks.len() - 1;
+                        plan[i].toks.truncate(1);
+                        continue;
                     }
                     match self.youngest_other_live(idx) {
                         Some(v) => {
@@ -712,7 +751,9 @@ impl PagedDecodeBatch {
             }
             let mut rows: Vec<(usize, u32)> = Vec::new();
             for (si, p) in plan.iter().enumerate() {
-                rows.push((si, p.tok));
+                for &t in &p.toks {
+                    rows.push((si, t));
+                }
                 for &d in &drafts[si][..p.k] {
                     rows.push((si, d));
                 }
@@ -760,9 +801,10 @@ impl PagedDecodeBatch {
             // Split the shared pass across prefill / decode / verify rows by
             // row count — timing attribution only, no compute branch.
             let pass_us = t_pass.elapsed().as_micros() as u64;
-            let prefill_rows = plan.iter().filter(|p| p.prefill).count() as u64;
+            let prefill_rows: u64 =
+                plan.iter().filter(|p| p.prefill).map(|p| p.toks.len() as u64).sum();
             let verify_rows: u64 = plan.iter().map(|p| p.k as u64).sum();
-            let decode_rows = plan.len() as u64 - prefill_rows;
+            let decode_rows = plan.iter().filter(|p| !p.prefill).count() as u64;
             self.phases.attribute_pass(pass_us, prefill_rows, decode_rows, verify_rows);
         }
 
@@ -785,9 +827,19 @@ impl PagedDecodeBatch {
                 s.prompt_in_trie = true;
             }
             if p.k == 0 {
-                s.last_logits = logits.row(cursor).to_vec();
-                committed += 1;
-                cursor += 1;
+                // The held logits are the final fed row's — for a chunk
+                // that is the logits after its last stream token, exactly
+                // what the one-token-per-pass interleave would have held.
+                // The Prefill event is recorded here (not at selection) so
+                // it reflects the chunk size that actually ran after any
+                // pool-pressure shrink in the prepare ladder.
+                if p.prefill && self.seq_events.len() < SEQ_EVENT_BUF_CAP {
+                    self.seq_events
+                        .push((s.id, SeqBatchEvent::Prefill { tokens: p.toks.len() as u32 }));
+                }
+                s.last_logits = logits.row(cursor + p.toks.len() - 1).to_vec();
+                committed += p.toks.len() as u64;
+                cursor += p.toks.len();
                 continue;
             }
             let verify: Vec<&[f32]> = (0..=p.k).map(|r| logits.row(cursor + r)).collect();
@@ -1083,6 +1135,161 @@ mod tests {
             paged.preemptions > 0,
             "a 6-block pool under ~11 blocks of demand must preempt"
         );
+    }
+
+    #[test]
+    fn paged_chunked_multi_pass_is_bitwise_identical_to_single_rows() {
+        // Kernel-level pin, paged sibling of the dense test: feeding a
+        // prompt through decode_step_paged_multi in chunks of C produces
+        // byte-identical per-position logits to one token per pass.
+        let m = tiny_model(Arch::GeluNeoX);
+        let prompt: Vec<u32> = (0..20u32).map(|i| (i * 7 + 3) % 60).collect();
+        let mut oracle_pool = BlockPool::new(&m.cfg, 4, 32);
+        let mut oracle_cache = PagedKvCache::new();
+        let mut oracle_logits: Vec<Vec<f32>> = Vec::new();
+        for &t in &prompt {
+            let rows = [(0usize, t)];
+            let mut refs = vec![&mut oracle_cache];
+            let l =
+                decode_step_paged_multi(&m, &rows, &mut oracle_pool, &mut refs, None).unwrap();
+            oracle_logits.push(l.row(0).to_vec());
+        }
+        for chunk in [1usize, 4, 7, 16, 256] {
+            let mut pool = BlockPool::new(&m.cfg, 4, 32);
+            let mut cache = PagedKvCache::new();
+            let mut got: Vec<Vec<f32>> = Vec::new();
+            let mut fed = 0;
+            while fed < prompt.len() {
+                let c = chunk.min(prompt.len() - fed);
+                let rows: Vec<(usize, u32)> =
+                    prompt[fed..fed + c].iter().map(|&t| (0usize, t)).collect();
+                let mut refs = vec![&mut cache];
+                let l = decode_step_paged_multi(&m, &rows, &mut pool, &mut refs, None).unwrap();
+                for r in 0..c {
+                    got.push(l.row(r).to_vec());
+                }
+                fed += c;
+            }
+            assert_eq!(got, oracle_logits, "chunk {chunk}: paged logits must be bitwise equal");
+            cache.release(&mut pool);
+        }
+    }
+
+    #[test]
+    fn paged_chunked_prefill_matches_monolithic_and_publishes_same_trie() {
+        // End-to-end pin: a PagedDecodeBatch running chunked prefill emits
+        // byte-identical token streams, publishes the same number of
+        // prefix-trie blocks, and serves the same trie hits to a
+        // follow-up shared-prefix join as the chunk=1 baseline — with a
+        // speculative row sharing the batch. Chunk 256 ≥ every prompt.
+        let m = tiny_model(Arch::SwiGlu);
+        let prefix: Vec<u32> = (0..12u32).map(|i| (i * 3 + 1) % 60).collect();
+        let run = |chunk: usize| -> (Vec<(Vec<u32>, Vec<u32>)>, usize, u64, Vec<u32>) {
+            let mut paged = PagedDecodeBatch::new(
+                &m.cfg,
+                PagedBatchConfig { block_size: 4, n_blocks: 0, slots: 3 },
+            );
+            paged.set_prefill_chunk(chunk);
+            let mut long = prefix.clone();
+            long.extend_from_slice(&[7, 8]);
+            paged.try_join(long, 4).unwrap();
+            let mut spec = SeqSpec::greedy(vec![9, 1, 2, 3, 4], 6);
+            spec.spec_k = Some(3);
+            paged.try_join_spec(spec).unwrap();
+            paged.try_join(vec![40, 3, 3], 4).unwrap();
+            let mut out = Vec::new();
+            let mut guard = 0;
+            while paged.has_work() {
+                paged.step(&m);
+                out.extend(
+                    paged.retire_finished().into_iter().map(|f| (f.prompt, f.generated)),
+                );
+                guard += 1;
+                assert!(guard < 128, "chunk {chunk}: did not converge");
+            }
+            out.extend(paged.retire_finished().into_iter().map(|f| (f.prompt, f.generated)));
+            out.sort();
+            let published = paged.trie.blocks_held();
+            // Follow-up join sharing the 12-token prefix: its trie hits
+            // and its text certify the published blocks are the same KV.
+            let mut tail = prefix.clone();
+            tail.extend_from_slice(&[50, 51]);
+            paged.try_join(tail, 3).unwrap();
+            let mut follow = Vec::new();
+            let mut guard = 0;
+            while paged.has_work() {
+                paged.step(&m);
+                follow.extend(paged.retire_finished().into_iter().map(|f| f.generated));
+                guard += 1;
+                assert!(guard < 64, "chunk {chunk}: follow-up did not converge");
+            }
+            follow.extend(paged.retire_finished().into_iter().map(|f| f.generated));
+            assert_eq!(follow.len(), 1);
+            (out, published, paged.prefix_hit_tokens, follow.remove(0))
+        };
+        let (base_out, base_published, base_hits, base_follow) = run(1);
+        assert_eq!(base_out.len(), 3);
+        assert!(base_published > 0, "completed prefills must publish blocks");
+        assert_eq!(base_hits, 12, "3 full blocks of 4 must be reused by the follow-up");
+        for chunk in [4usize, 16, 256] {
+            let (out, published, hits, follow) = run(chunk);
+            assert_eq!(out, base_out, "chunk {chunk}: token streams diverged");
+            assert_eq!(published, base_published, "chunk {chunk}: trie publication diverged");
+            assert_eq!(hits, base_hits, "chunk {chunk}: prefix reuse diverged");
+            assert_eq!(follow, base_follow, "chunk {chunk}: reused-prefix decode diverged");
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_under_tiny_pool_degrades_and_stays_correct() {
+        // Pool pressure must shrink chunks / preempt without changing any
+        // text: same oracle pin as the preemption test, chunk 4.
+        let m = tiny_model(Arch::GeluNeoX);
+        let prompts: Vec<(Vec<u32>, usize)> =
+            vec![(vec![1, 2, 3, 4], 4), (vec![5, 6, 7], 4), (vec![8, 9], 4)];
+        let mut oracle_texts = Vec::new();
+        for (p, n) in &prompts {
+            let mut cache = KvCache::new(&m.cfg);
+            let mut logits = Vec::new();
+            for &t in p {
+                logits = decode_step(&m, t, &mut cache).unwrap();
+            }
+            let mut gen = Vec::new();
+            for _ in 0..*n {
+                let next = crate::eval::argmax(&logits) as u32;
+                gen.push(next);
+                logits = decode_step(&m, next, &mut cache).unwrap();
+            }
+            oracle_texts.push(gen);
+        }
+        let mut paged = PagedDecodeBatch::new(
+            &m.cfg,
+            PagedBatchConfig { block_size: 2, n_blocks: 6, slots: 3 },
+        );
+        paged.set_prefill_chunk(4);
+        let mut joined: Vec<Option<u64>> = prompts.iter().map(|_| None).collect();
+        let mut finished: Vec<FinishedSeq> = Vec::new();
+        let mut guard = 0;
+        loop {
+            for (i, (p, n)) in prompts.iter().enumerate() {
+                if joined[i].is_none() {
+                    joined[i] = paged.try_join(p.clone(), *n);
+                }
+            }
+            if !paged.has_work() && joined.iter().all(|j| j.is_some()) {
+                break;
+            }
+            paged.step(&m);
+            finished.extend(paged.retire_finished());
+            guard += 1;
+            assert!(guard < 512, "tiny-pool chunked schedule failed to converge");
+        }
+        finished.extend(paged.retire_finished());
+        assert_eq!(finished.len(), 3);
+        for (i, (p, _)) in prompts.iter().enumerate() {
+            let f = finished.iter().find(|f| f.prompt == *p).unwrap();
+            assert_eq!(f.generated, oracle_texts[i], "prompt {i} text diverged under pressure");
+        }
     }
 
     #[test]

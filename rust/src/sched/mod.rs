@@ -1,0 +1,632 @@
+//! SLO-aware scheduling (DESIGN.md §2h): the admission queue and the
+//! latency-budget controller that together turn the serving loop from a
+//! FIFO batcher into a traffic-shaped scheduler.
+//!
+//! Two pieces, both policy-only — neither ever touches the decode math, so
+//! every bitwise determinism pin (paged vs dense, spec vs plain, chunked vs
+//! monolithic prefill) is unaffected by scheduling decisions:
+//!
+//! * [`Scheduler`] — a priority/deadline/tenant admission queue replacing
+//!   the batcher's FIFO `VecDeque`. Selection is by *effective class*:
+//!   the request's priority class minus one per [`AGING_QUANTUM`] waited
+//!   (aging), with over-deadline work promoted ahead of everything else
+//!   and weighted fair queuing across tenants breaking ties inside a
+//!   class. Aging makes the queue starvation-free: any entry's effective
+//!   class decreases without bound while fresh arrivals start at a fixed
+//!   class, so every entry is eventually the minimum.
+//! * [`SloController`] — a closed-loop rank-budget controller: instead of
+//!   retuning the engine's compression rate from raw queue depth
+//!   ([`crate::coordinator::BudgetPolicy::pick`]), it walks the same tier
+//!   ladder from *measured* p95 TTFT/ITL (the PR 8 histograms, windowed
+//!   via stats-reset semantics) against explicit SLO targets, with
+//!   hysteresis (dwell time + a relax band) and a quality floor.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// Effective class improves (numerically decreases) by one per quantum a
+/// request has waited — the aging term of the admission key.
+pub const AGING_QUANTUM: Duration = Duration::from_millis(500);
+
+/// Request priority class. Lower class number = served sooner.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    High,
+    #[default]
+    Normal,
+    Low,
+}
+
+impl Priority {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+
+    /// Parse a wire value; `None` for unknown strings (the protocol layer
+    /// turns that into a structured validation error).
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "high" => Some(Priority::High),
+            "normal" => Some(Priority::Normal),
+            "low" => Some(Priority::Low),
+            _ => None,
+        }
+    }
+
+    fn class(&self) -> i64 {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+
+    /// WFQ service cost: admitting a request charges its tenant this many
+    /// service units, so high-priority traffic consumes a tenant's fair
+    /// share more slowly (the "weighted" in weighted fair queuing).
+    fn service_cost(&self) -> u64 {
+        match self {
+            Priority::High => 1,
+            Priority::Normal => 2,
+            Priority::Low => 4,
+        }
+    }
+}
+
+/// Scheduling annotation carried by a request from the wire protocol down
+/// to the decode batch (`protocol::GenerateRequest` → `SessionRequest` →
+/// `SeqSpec`). Admission bookkeeping only — never read by the decode math.
+#[derive(Clone, Debug, Default)]
+pub struct SchedClass {
+    pub priority: Priority,
+    /// Latest acceptable first-token latency, relative to arrival. Not a
+    /// hard drop: an over-deadline request is *promoted*, not rejected.
+    pub deadline: Option<Duration>,
+    /// Fair-queuing tenant key; `None` = the shared anonymous tenant.
+    pub tenant: Option<String>,
+}
+
+impl SchedClass {
+    /// Label recorded in the request timeline's `sched_class` field.
+    pub fn label(&self) -> &'static str {
+        self.priority.as_str()
+    }
+}
+
+/// One queued request plus its admission metadata. Returned whole by
+/// [`Scheduler::pop`] so a failed join can [`Scheduler::requeue`] it with
+/// its original arrival time and FIFO rank intact.
+pub struct Entry<T> {
+    pub item: T,
+    pub meta: SchedClass,
+    pub arrived: Instant,
+    seq: u64,
+}
+
+/// Priority/deadline/tenant admission queue (see module docs for the
+/// selection law). `pop` is O(n) over the queue — admission queues are
+/// bounded by client concurrency, not corpus size, so a scan beats the
+/// bookkeeping a priority heap would need for aging keys that change with
+/// the clock.
+pub struct Scheduler<T> {
+    entries: Vec<Entry<T>>,
+    next_seq: u64,
+    /// WFQ service accumulated per tenant key ("" = anonymous).
+    served: HashMap<String, u64>,
+}
+
+impl<T> Default for Scheduler<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Scheduler<T> {
+    pub fn new() -> Self {
+        Scheduler { entries: Vec::new(), next_seq: 0, served: HashMap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Enqueue a request that arrived at `arrived` (the batcher back-dates
+    /// to the socket-read instant, same as its timeline enqueue mark).
+    pub fn push(&mut self, item: T, meta: SchedClass, arrived: Instant) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.entries.push(Entry { item, meta, arrived, seq });
+    }
+
+    /// Put back an entry whose join was refused (no free slot / no blocks):
+    /// it keeps its original arrival time and FIFO rank, and the service
+    /// charge taken by [`Scheduler::pop`] is refunded — the tenant only
+    /// pays for admissions that stick.
+    pub fn requeue(&mut self, e: Entry<T>) {
+        let key = e.meta.tenant.clone().unwrap_or_default();
+        let cost = e.meta.priority.service_cost();
+        if let Some(s) = self.served.get_mut(&key) {
+            *s = s.saturating_sub(cost);
+        }
+        self.entries.push(e);
+    }
+
+    /// Effective class at `now`: the priority class minus one per
+    /// [`AGING_QUANTUM`] waited. Unbounded below, which is the
+    /// starvation-freedom argument: a waiting entry's key eventually drops
+    /// beneath any fresh arrival's.
+    fn eff_class(meta: &SchedClass, arrived: Instant, now: Instant) -> i64 {
+        let waited = now.saturating_duration_since(arrived);
+        let aged = (waited.as_millis() / AGING_QUANTUM.as_millis().max(1)) as i64;
+        meta.priority.class() - aged
+    }
+
+    /// Select and remove the next request to admit. The admission key, in
+    /// lexicographic order: over-deadline first, then effective class
+    /// (aged priority), then least-served tenant (WFQ), then arrival
+    /// order. Charges the winner's tenant its WFQ service cost.
+    pub fn pop(&mut self, now: Instant) -> Option<Entry<T>> {
+        let best = self
+            .entries
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| {
+                let waited = now.saturating_duration_since(e.arrived);
+                let overdue = e.meta.deadline.is_some_and(|d| waited >= d);
+                let key = e.meta.tenant.as_deref().unwrap_or("");
+                let served = self.served.get(key).copied().unwrap_or(0);
+                (!overdue, Self::eff_class(&e.meta, e.arrived, now), served, e.seq)
+            })
+            .map(|(i, _)| i)?;
+        let e = self.entries.remove(best);
+        let key = e.meta.tenant.clone().unwrap_or_default();
+        *self.served.entry(key).or_insert(0) += e.meta.priority.service_cost();
+        Some(e)
+    }
+
+    /// Remove the first queued entry matching `pred` (client cancel of a
+    /// not-yet-admitted request).
+    pub fn remove_where(&mut self, pred: impl Fn(&T) -> bool) -> Option<T> {
+        let i = self.entries.iter().position(|e| pred(&e.item))?;
+        Some(self.entries.remove(i).item)
+    }
+
+    /// Drain everything in arrival order (session teardown: the remainder
+    /// is carried back to the outer loop as a plain FIFO batch).
+    pub fn drain(&mut self) -> Vec<Entry<T>> {
+        let mut out = std::mem::take(&mut self.entries);
+        out.sort_by_key(|e| e.seq);
+        out
+    }
+}
+
+/// One measurement window handed to [`SloController::observe`] — decoupled
+/// from [`crate::coordinator::Metrics`] so the control law is unit-testable
+/// without a serving stack.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SloWindow {
+    pub ttft_p95: Option<Duration>,
+    pub itl_p95: Option<Duration>,
+    /// TTFT samples in the window (gates decisions on thin evidence).
+    pub samples: u64,
+}
+
+/// Controller configuration. `tiers` is the same ascending-compression
+/// ladder as [`crate::coordinator::BudgetPolicy::tiers`]; the controller
+/// walks it one step per decision instead of indexing it by queue depth.
+#[derive(Clone, Debug)]
+pub struct SloConfig {
+    /// p95 time-to-first-token target; `None` = don't control on TTFT.
+    pub ttft_target: Option<Duration>,
+    /// p95 inter-token-latency target; `None` = don't control on ITL.
+    pub itl_target: Option<Duration>,
+    /// Ascending compression-rate ladder; `tiers[0]` is best quality.
+    pub tiers: Vec<f64>,
+    /// Quality floor: highest tier index the controller may escalate to.
+    pub max_tier: usize,
+    /// Minimum time between retunes (hysteresis in time).
+    pub dwell: Duration,
+    /// Relax only when every targeted p95 is below `target × relax_frac`
+    /// (hysteresis in amplitude — the band between `relax_frac` and 1.0
+    /// holds the current tier).
+    pub relax_frac: f64,
+    /// Minimum window samples before any decision.
+    pub min_samples: u64,
+}
+
+impl SloConfig {
+    /// Controller over a tier ladder with default hysteresis. Targets that
+    /// are `None` leave that latency axis uncontrolled.
+    pub fn new(
+        ttft_target: Option<Duration>,
+        itl_target: Option<Duration>,
+        tiers: Vec<f64>,
+    ) -> Self {
+        let mut tiers = if tiers.is_empty() { vec![0.0] } else { tiers };
+        tiers.sort_by(|a, b| a.partial_cmp(b).expect("finite tiers"));
+        tiers.dedup();
+        let max_tier = tiers.len() - 1;
+        SloConfig {
+            ttft_target,
+            itl_target,
+            tiers,
+            max_tier,
+            dwell: Duration::from_millis(250),
+            relax_frac: 0.6,
+            min_samples: 8,
+        }
+    }
+
+    /// Clamp the quality floor: the controller never compresses past
+    /// `rate` (the closest tier not exceeding it).
+    pub fn with_quality_floor(mut self, rate: f64) -> Self {
+        let idx = self
+            .tiers
+            .iter()
+            .rposition(|&t| t <= rate + 1e-12)
+            .unwrap_or(0);
+        self.max_tier = idx;
+        self
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.ttft_target.is_some() || self.itl_target.is_some()
+    }
+}
+
+/// What one [`SloController::observe`] call did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SloDecision {
+    /// The rate to apply from now on (current tier's, changed or not).
+    pub changed: bool,
+    /// True when the window was actually judged (dwell elapsed and enough
+    /// samples) — the caller resets the measurement window on this.
+    pub evaluated: bool,
+}
+
+/// Closed-loop latency-budget controller. Escalates one tier (more
+/// compression, faster) when a targeted p95 breaches its SLO; relaxes one
+/// tier (more quality) when every targeted p95 sits below the relax band.
+/// See [`SloConfig`] for the hysteresis and the quality floor.
+pub struct SloController {
+    cfg: SloConfig,
+    tier: usize,
+    last_change: Option<Instant>,
+    /// Tier changes made (mirrored into the serving metrics).
+    pub retunes: u64,
+}
+
+impl SloController {
+    pub fn new(cfg: SloConfig) -> Self {
+        SloController { cfg, tier: 0, last_change: None, retunes: 0 }
+    }
+
+    /// Current compression rate (the active tier's).
+    pub fn rate(&self) -> f64 {
+        self.cfg.tiers[self.tier.min(self.cfg.tiers.len() - 1)]
+    }
+
+    pub fn tier(&self) -> usize {
+        self.tier
+    }
+
+    fn breach(target: Option<Duration>, measured: Option<Duration>) -> bool {
+        match (target, measured) {
+            (Some(t), Some(m)) => m > t,
+            _ => false,
+        }
+    }
+
+    fn relaxed(&self, target: Option<Duration>, measured: Option<Duration>) -> bool {
+        match (target, measured) {
+            // An uncontrolled or unmeasured axis never blocks relaxing.
+            (None, _) | (_, None) => true,
+            (Some(t), Some(m)) => m.as_secs_f64() < t.as_secs_f64() * self.cfg.relax_frac,
+        }
+    }
+
+    /// One control decision over a measurement window.
+    pub fn observe(&mut self, now: Instant, w: &SloWindow) -> SloDecision {
+        if let Some(last) = self.last_change {
+            if now.saturating_duration_since(last) < self.cfg.dwell {
+                return SloDecision { changed: false, evaluated: false };
+            }
+        }
+        if w.samples < self.cfg.min_samples {
+            return SloDecision { changed: false, evaluated: false };
+        }
+        let breach = Self::breach(self.cfg.ttft_target, w.ttft_p95)
+            || Self::breach(self.cfg.itl_target, w.itl_p95);
+        let relax = self.relaxed(self.cfg.ttft_target, w.ttft_p95)
+            && self.relaxed(self.cfg.itl_target, w.itl_p95);
+        let max_tier = self.cfg.max_tier.min(self.cfg.tiers.len() - 1);
+        let changed = if breach && self.tier < max_tier {
+            self.tier += 1;
+            true
+        } else if !breach && relax && self.tier > 0 {
+            self.tier -= 1;
+            true
+        } else {
+            false
+        };
+        if changed {
+            self.retunes += 1;
+            self.last_change = Some(now);
+        }
+        SloDecision { changed, evaluated: true }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(p: Priority) -> SchedClass {
+        SchedClass { priority: p, deadline: None, tenant: None }
+    }
+
+    fn meta_t(p: Priority, tenant: &str) -> SchedClass {
+        SchedClass { priority: p, deadline: None, tenant: Some(tenant.to_string()) }
+    }
+
+    #[test]
+    fn priority_classes_order_and_parse() {
+        let t0 = Instant::now();
+        let mut s = Scheduler::new();
+        s.push("low", meta(Priority::Low), t0);
+        s.push("normal", meta(Priority::Normal), t0);
+        s.push("high", meta(Priority::High), t0);
+        let now = t0 + Duration::from_millis(1);
+        assert_eq!(s.pop(now).unwrap().item, "high");
+        assert_eq!(s.pop(now).unwrap().item, "normal");
+        assert_eq!(s.pop(now).unwrap().item, "low");
+        assert!(s.pop(now).is_none());
+        for p in [Priority::High, Priority::Normal, Priority::Low] {
+            assert_eq!(Priority::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(Priority::parse("urgent"), None);
+    }
+
+    #[test]
+    fn fifo_within_a_class() {
+        let t0 = Instant::now();
+        let mut s = Scheduler::new();
+        for i in 0..4 {
+            s.push(i, meta(Priority::Normal), t0);
+        }
+        let now = t0 + Duration::from_millis(1);
+        let order: Vec<i32> = (0..4).map(|_| s.pop(now).unwrap().item).collect();
+        assert_eq!(order, vec![0, 1, 2, 3], "equal keys must serve in arrival order");
+    }
+
+    #[test]
+    fn aging_promotes_old_low_priority_work() {
+        let t0 = Instant::now();
+        let mut s = Scheduler::new();
+        // A Low request two aging quanta old beats a fresh High request:
+        // 2 - 2 = 0 vs 0, FIFO tiebreak on seq (low arrived first).
+        s.push("old-low", meta(Priority::Low), t0);
+        s.push("fresh-high", meta(Priority::High), t0 + 2 * AGING_QUANTUM);
+        let now = t0 + 2 * AGING_QUANTUM;
+        assert_eq!(s.pop(now).unwrap().item, "old-low", "aging must promote the elder");
+        // One quantum earlier the fresh High still wins.
+        let mut s = Scheduler::new();
+        s.push("old-low", meta(Priority::Low), t0);
+        s.push("fresh-high", meta(Priority::High), t0 + AGING_QUANTUM);
+        assert_eq!(s.pop(t0 + AGING_QUANTUM).unwrap().item, "fresh-high");
+    }
+
+    #[test]
+    fn overdue_deadline_jumps_the_queue() {
+        let t0 = Instant::now();
+        let mut s = Scheduler::new();
+        s.push("high", meta(Priority::High), t0);
+        let dl = SchedClass {
+            priority: Priority::Low,
+            deadline: Some(Duration::from_millis(10)),
+            tenant: None,
+        };
+        s.push("deadline-low", dl, t0);
+        // Before the deadline, class order holds.
+        assert_eq!(s.pop(t0 + Duration::from_millis(1)).unwrap().item, "high");
+        s.push("high2", meta(Priority::High), t0);
+        // Past the deadline, the low-priority request is overdue and wins.
+        assert_eq!(s.pop(t0 + Duration::from_millis(11)).unwrap().item, "deadline-low");
+    }
+
+    #[test]
+    fn wfq_alternates_tenants_and_weights_by_priority() {
+        let t0 = Instant::now();
+        let mut s = Scheduler::new();
+        // Tenant a floods first; tenant b arrives after. Same class, so
+        // the WFQ service counter must alternate admissions.
+        for i in 0..3 {
+            s.push(format!("a{i}"), meta_t(Priority::Normal, "a"), t0);
+        }
+        for i in 0..3 {
+            s.push(format!("b{i}"), meta_t(Priority::Normal, "b"), t0);
+        }
+        let now = t0 + Duration::from_millis(1);
+        let order: Vec<String> = (0..6).map(|_| s.pop(now).unwrap().item).collect();
+        assert_eq!(order[0], "a0", "first pop: both tenants at zero service, FIFO");
+        assert_eq!(order[1], "b0", "after charging a, b must be least-served");
+        let first_four: Vec<&str> = order[..4].iter().map(|s| &s[..1]).collect();
+        assert_eq!(first_four, vec!["a", "b", "a", "b"], "tenants must alternate");
+        // Weighting: a tenant sending High traffic is charged less per
+        // admission (cost 1 vs 2), so it gets 2 admissions per Normal
+        // tenant admission once both have history.
+        let mut s = Scheduler::new();
+        for i in 0..4 {
+            s.push(format!("h{i}"), meta_t(Priority::High, "hi"), t0);
+            s.push(format!("n{i}"), meta_t(Priority::Normal, "no"), t0);
+        }
+        // Drain the High class first (class key dominates WFQ), charging
+        // "hi" 4 × 1 = 4 service; then Normal admissions proceed.
+        let order: Vec<String> = (0..8).map(|_| s.pop(now).unwrap().item).collect();
+        assert!(order[..4].iter().all(|x| x.starts_with('h')), "class dominates: {order:?}");
+    }
+
+    #[test]
+    fn requeue_refunds_service_and_keeps_rank() {
+        let t0 = Instant::now();
+        let mut s = Scheduler::new();
+        s.push("first", meta_t(Priority::Normal, "a"), t0);
+        s.push("second", meta_t(Priority::Normal, "a"), t0);
+        let now = t0 + Duration::from_millis(1);
+        let e = s.pop(now).unwrap();
+        assert_eq!(e.item, "first");
+        s.requeue(e); // join failed: back with original seq + refund
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.pop(now).unwrap().item, "first", "requeue must keep FIFO rank");
+        assert_eq!(s.pop(now).unwrap().item, "second");
+    }
+
+    #[test]
+    fn remove_where_and_drain() {
+        let t0 = Instant::now();
+        let mut s = Scheduler::new();
+        s.push(1, meta(Priority::Low), t0);
+        s.push(2, meta(Priority::High), t0);
+        s.push(3, meta(Priority::Normal), t0);
+        assert_eq!(s.remove_where(|&x| x == 2), Some(2));
+        assert_eq!(s.remove_where(|&x| x == 9), None);
+        let rest: Vec<i32> = s.drain().into_iter().map(|e| e.item).collect();
+        assert_eq!(rest, vec![1, 3], "drain returns arrival order regardless of class");
+        assert!(s.is_empty());
+    }
+
+    fn ctl(ttft_ms: u64, tiers: Vec<f64>) -> SloController {
+        SloController::new(SloConfig::new(
+            Some(Duration::from_millis(ttft_ms)),
+            None,
+            tiers,
+        ))
+    }
+
+    fn win(ttft_ms: u64, samples: u64) -> SloWindow {
+        SloWindow {
+            ttft_p95: Some(Duration::from_millis(ttft_ms)),
+            itl_p95: None,
+            samples,
+        }
+    }
+
+    #[test]
+    fn controller_escalates_on_breach_and_relaxes_in_band() {
+        let t0 = Instant::now();
+        let mut c = ctl(100, vec![0.0, 0.2, 0.5]);
+        assert_eq!(c.rate(), 0.0);
+        // Breach: p95 150ms > 100ms target → one tier up.
+        let d = c.observe(t0, &win(150, 20));
+        assert!(d.changed && d.evaluated);
+        assert_eq!(c.rate(), 0.2);
+        // Inside the hold band (60..=100): no change.
+        let t1 = t0 + Duration::from_millis(300);
+        let d = c.observe(t1, &win(80, 20));
+        assert!(!d.changed && d.evaluated);
+        assert_eq!(c.rate(), 0.2);
+        // Below the relax band (< 60ms): one tier down.
+        let t2 = t1 + Duration::from_millis(300);
+        assert!(c.observe(t2, &win(40, 20)).changed);
+        assert_eq!(c.rate(), 0.0);
+        assert_eq!(c.retunes, 2);
+    }
+
+    #[test]
+    fn controller_dwell_and_sample_gates_hold() {
+        let t0 = Instant::now();
+        let mut c = ctl(100, vec![0.0, 0.2, 0.5]);
+        assert!(c.observe(t0, &win(500, 20)).changed);
+        // Second breach immediately after: dwell blocks it.
+        let d = c.observe(t0 + Duration::from_millis(10), &win(500, 20));
+        assert!(!d.changed && !d.evaluated, "dwell must hold the tier");
+        assert_eq!(c.rate(), 0.2);
+        // After the dwell, thin windows still don't act.
+        let t1 = t0 + Duration::from_millis(300);
+        let d = c.observe(t1, &win(500, 2));
+        assert!(!d.changed && !d.evaluated, "min_samples must gate decisions");
+        // A full window does.
+        assert!(c.observe(t1, &win(500, 20)).changed);
+        assert_eq!(c.rate(), 0.5);
+    }
+
+    #[test]
+    fn controller_respects_quality_floor_and_ladder_ends() {
+        let t0 = Instant::now();
+        let cfg = SloConfig::new(
+            Some(Duration::from_millis(100)),
+            None,
+            vec![0.0, 0.2, 0.35, 0.5],
+        )
+        .with_quality_floor(0.35);
+        let mut c = SloController::new(cfg);
+        let mut t = t0;
+        for _ in 0..6 {
+            c.observe(t, &win(500, 20));
+            t += Duration::from_millis(300);
+        }
+        assert_eq!(c.rate(), 0.35, "quality floor must cap escalation below 0.5");
+        // Relaxing stops at tier 0.
+        for _ in 0..6 {
+            c.observe(t, &win(1, 20));
+            t += Duration::from_millis(300);
+        }
+        assert_eq!(c.rate(), 0.0);
+    }
+
+    #[test]
+    fn controller_controls_on_itl_too_and_needs_both_axes_to_relax() {
+        let t0 = Instant::now();
+        let mut c = SloController::new(SloConfig::new(
+            Some(Duration::from_millis(100)),
+            Some(Duration::from_millis(10)),
+            vec![0.0, 0.5],
+        ));
+        // TTFT fine, ITL breached → escalate.
+        let w = SloWindow {
+            ttft_p95: Some(Duration::from_millis(20)),
+            itl_p95: Some(Duration::from_millis(50)),
+            samples: 20,
+        };
+        assert!(c.observe(t0, &w).changed);
+        assert_eq!(c.rate(), 0.5);
+        // TTFT deep in the relax band but ITL only in the hold band: stay.
+        let t1 = t0 + Duration::from_millis(300);
+        let w = SloWindow {
+            ttft_p95: Some(Duration::from_millis(20)),
+            itl_p95: Some(Duration::from_millis(8)),
+            samples: 20,
+        };
+        let d = c.observe(t1, &w);
+        assert!(!d.changed && d.evaluated);
+        // Both deep below their bands → relax.
+        let t2 = t1 + Duration::from_millis(300);
+        let w = SloWindow {
+            ttft_p95: Some(Duration::from_millis(20)),
+            itl_p95: Some(Duration::from_millis(2)),
+            samples: 20,
+        };
+        assert!(c.observe(t2, &w).changed);
+        assert_eq!(c.rate(), 0.0);
+    }
+
+    #[test]
+    fn empty_tier_ladder_degrades_to_dense() {
+        let mut c = SloController::new(SloConfig::new(
+            Some(Duration::from_millis(1)),
+            None,
+            Vec::new(),
+        ));
+        assert_eq!(c.rate(), 0.0);
+        let d = c.observe(Instant::now(), &win(500, 20));
+        assert!(d.evaluated && !d.changed, "single-tier ladder has nowhere to go");
+    }
+}

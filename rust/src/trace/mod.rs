@@ -90,7 +90,8 @@ impl PhaseTotals {
 /// batch-local sequence id and drained by the owning session each step.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SeqBatchEvent {
-    /// One prompt (or preemption-refeed) row fed this pass.
+    /// One prompt (or preemption-refeed) chunk fed this pass: `tokens` rows
+    /// of the sequence's backlog went through the batched forward together.
     Prefill { tokens: u32 },
     /// One speculation round settled: `drafted` proposed, `accepted` kept.
     SpecRound { drafted: u32, accepted: u32 },
@@ -141,6 +142,9 @@ pub struct TimelineEvent {
 #[derive(Clone, Debug)]
 pub struct TimelineSummary {
     pub id: String,
+    /// Scheduling-class label ("high"/"normal"/"low") stamped at admission;
+    /// `None` for requests admitted outside the priority scheduler.
+    pub sched_class: Option<String>,
     pub enqueue_us: u64,
     pub admit_us: Option<u64>,
     pub first_token_us: Option<u64>,
@@ -192,6 +196,10 @@ impl TimelineSummary {
             .collect();
         Json::obj(vec![
             ("id", Json::str(&self.id)),
+            (
+                "sched_class",
+                self.sched_class.as_deref().map(Json::str).unwrap_or(Json::Null),
+            ),
             ("enqueue_us", Json::Num(self.enqueue_us as f64)),
             ("queue_us", opt(self.queue_us())),
             ("ttft_us", opt(self.ttft_us())),
@@ -212,6 +220,7 @@ impl TimelineSummary {
 #[derive(Debug)]
 struct TimelineState {
     id: String,
+    sched_class: Option<String>,
     enqueue_us: u64,
     admit_us: Option<u64>,
     first_token_us: Option<u64>,
@@ -243,6 +252,7 @@ impl TimelineState {
     fn summary(&self, finish_us: u64) -> TimelineSummary {
         TimelineSummary {
             id: self.id.clone(),
+            sched_class: self.sched_class.clone(),
             enqueue_us: self.enqueue_us,
             admit_us: self.admit_us,
             first_token_us: self.first_token_us,
@@ -283,6 +293,7 @@ impl RequestTimeline {
         let enabled = tracer.enabled();
         let mut st = TimelineState {
             id: id.to_string(),
+            sched_class: None,
             enqueue_us,
             admit_us: None,
             first_token_us: None,
@@ -300,6 +311,15 @@ impl RequestTimeline {
         };
         st.push_event(enabled, EventKind::Enqueue, enqueue_us, 0);
         RequestTimeline { tracer, inner: Arc::new(Mutex::new(st)) }
+    }
+
+    /// Stamp the scheduling-class label the admission queue ranked this
+    /// request under (first call wins, matching `mark_admit`).
+    pub fn set_sched_class(&self, class: &str) {
+        let mut st = lock_recover(&self.inner);
+        if st.sched_class.is_none() {
+            st.sched_class = Some(class.to_string());
+        }
     }
 
     /// Mark admission into a decode session (first call wins).
@@ -396,6 +416,10 @@ impl RequestTimeline {
             ("itl_mean_us", s.itl_mean_us().map(Json::Num).unwrap_or(Json::Null)),
             ("total_us", Json::Num(s.total_us() as f64)),
             ("tokens", Json::Num(s.tokens as f64)),
+            (
+                "sched_class",
+                s.sched_class.as_deref().map(Json::str).unwrap_or(Json::Null),
+            ),
         ])
     }
 }
@@ -570,6 +594,21 @@ mod tests {
         assert!(timing.get("ttft_us").unwrap().as_f64().is_some(), "timing scalars stay live");
         let s = tl.summary();
         assert!(s.events.is_empty(), "event log is gated by the enable flag");
+    }
+
+    #[test]
+    fn sched_class_stamps_once_and_lands_in_timing() {
+        let tracer = Arc::new(Tracer::new(4));
+        let tl = RequestTimeline::new(Arc::clone(&tracer), "r1", Instant::now());
+        tl.set_sched_class("high");
+        tl.set_sched_class("low"); // first call wins, like mark_admit
+        tl.mark_admit();
+        tl.mark_token();
+        tl.finish();
+        assert_eq!(tl.summary().sched_class.as_deref(), Some("high"));
+        assert_eq!(tl.timing_json().get_str("sched_class").unwrap(), "high");
+        let untagged = finished_timeline(&tracer, "r2", 1);
+        assert!(untagged.summary().sched_class.is_none());
     }
 
     #[test]
