@@ -464,6 +464,116 @@ fn serving(opts: Opts) -> anyhow::Result<()> {
         layered.set_budget(0.0);
     }
 
+    println!("\n== Serving: measured FLOPs/token vs the analytic schedule ==");
+    {
+        use rana::adapters::calibrate;
+        use rana::data::tokenizer;
+        use rana::flops::measured;
+
+        let rates: Vec<f64> = if fast { vec![0.35, 0.5] } else { vec![0.2, 0.35, 0.5] };
+        let (runtime, _) =
+            calibrate::adapt_runtime(Arc::clone(&model), &calib, &rates, 128, 0x5E12);
+        let runtime = Arc::new(runtime);
+        // Dense KV slots on purpose: the paged engine's prefix trie would
+        // reuse cached prompt blocks across tiers and skip their measured
+        // prefill FLOPs, skewing the tier-to-tier comparison.
+        let flops_engine = NativeEngine::new(Arc::clone(&runtime)).with_dense_cache();
+        let prompts: Vec<(String, usize)> = (0..4)
+            .map(|i| (format!("the dax lopa the fep number {i} ."), gen_tokens))
+            .collect();
+        // Measured-convention positions per sequence: every forward pass —
+        // prompt prefill included — except the final emitted token.
+        let steps_of = |texts: &[String]| -> Vec<usize> {
+            texts.iter().map(|t| tokenizer::encode(t, true).len().saturating_sub(1)).collect()
+        };
+
+        let mut tiers = vec![0.0];
+        tiers.extend(rates.iter().copied());
+        let mut dense_fpt = 0.0f64;
+        for &rate in &tiers {
+            flops_engine.set_budget(rate);
+            let _ = flops_engine.generate_batch(&prompts); // warm (not measured)
+            let before = measured::snapshot();
+            let out = flops_engine.generate_batch(&prompts);
+            let delta = measured::snapshot().delta_since(&before);
+            let steps = steps_of(&out);
+            let analytic: f64 = steps
+                .iter()
+                .map(|&s| {
+                    if rate == 0.0 {
+                        runtime.measured_dense_flops(s)
+                    } else {
+                        runtime.runtime_decode_flops(s, rate)
+                    }
+                })
+                .sum();
+            let rel_err = (delta.flops as f64 - analytic).abs() / analytic.max(1.0);
+            let within = rel_err <= 0.05;
+            let fpt = delta.flops as f64 / steps.iter().sum::<usize>().max(1) as f64;
+            if rate == 0.0 {
+                dense_fpt = fpt;
+            }
+            let compression = 1.0 - fpt / dense_fpt.max(1.0);
+            println!(
+                "tier {rate:.2}: measured {:.3} MFLOPs/tok   analytic err {:.2}%   \
+                 compression vs dense {:.1}%   within 5%: {within}",
+                fpt / 1e6,
+                rel_err * 100.0,
+                compression * 100.0,
+            );
+            println!(
+                "{}",
+                Json::obj(vec![
+                    ("bench", Json::str("serving_flops")),
+                    ("kind", Json::str("tier")),
+                    ("rate", Json::Num(rate)),
+                    ("gen_tokens", Json::Num(gen_tokens as f64)),
+                    ("measured_flops", Json::Num(delta.flops as f64)),
+                    ("measured_bytes", Json::Num(delta.bytes as f64)),
+                    ("analytic_flops", Json::Num(analytic)),
+                    ("flops_per_token", Json::Num(fpt)),
+                    ("measured_compression", Json::Num(compression)),
+                    ("rel_err", Json::Num(rel_err)),
+                    ("measured_vs_analytic_within_5pct", Json::Bool(within)),
+                ])
+            );
+        }
+
+        // Counter-overhead contract: one relaxed add per kernel call must
+        // stay in the noise. Best-of-3 either way, dense budget.
+        flops_engine.set_budget(0.0);
+        let toks = (prompts.len() * gen_tokens) as f64;
+        let (mut best_off, mut best_on) = (0.0f64, 0.0f64);
+        for _ in 0..3 {
+            measured::set_enabled(false);
+            let t0 = Instant::now();
+            let _ = flops_engine.generate_batch(&prompts);
+            best_off = best_off.max(toks / t0.elapsed().as_secs_f64().max(1e-12));
+            measured::set_enabled(true);
+            let t0 = Instant::now();
+            let _ = flops_engine.generate_batch(&prompts);
+            best_on = best_on.max(toks / t0.elapsed().as_secs_f64().max(1e-12));
+        }
+        let overhead_pct = (best_off / best_on.max(1e-12) - 1.0) * 100.0;
+        let overhead_ok = overhead_pct <= 3.0;
+        println!(
+            "counters on {best_on:7.0} tok/s   off {best_off:7.0} tok/s   \
+             overhead {overhead_pct:.2}% (target ≤ 3% — DESIGN.md §2i)"
+        );
+        println!(
+            "{}",
+            Json::obj(vec![
+                ("bench", Json::str("serving_flops")),
+                ("kind", Json::str("overhead")),
+                ("gen_tokens", Json::Num(gen_tokens as f64)),
+                ("counters_on_tok_s", Json::Num(best_on)),
+                ("counters_off_tok_s", Json::Num(best_off)),
+                ("overhead_pct", Json::Num(overhead_pct)),
+                ("overhead_within_3pct", Json::Bool(overhead_ok)),
+            ])
+        );
+    }
+
     println!("\n== Serving: request-tracing overhead + TTFT/ITL quantiles ==");
     {
         use rana::coordinator::batcher::generate_req;

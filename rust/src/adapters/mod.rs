@@ -84,6 +84,14 @@ pub trait MlpAdapter: Send + Sync {
     fn flops_budgeted(&self, _rate: f64) -> MlpFlops {
         self.flops()
     }
+    /// Expected per-token FLOPs at a runtime rate as the *batched decode
+    /// kernels* execute it (the quantity the measured counters record).
+    /// Differs from [`MlpAdapter::flops_budgeted`] only for adapters whose
+    /// batched masker scores more than the tier's rank cap (RaNA scores
+    /// the full shared basis; see `rank_adapter::RankAdapter`).
+    fn flops_runtime(&self, rate: f64) -> MlpFlops {
+        self.flops_budgeted(rate)
+    }
 }
 
 /// An adapted (fused) QKV projection.
@@ -120,6 +128,11 @@ pub trait QkvAdapter: Send + Sync {
     /// Expected per-token FLOPs at a runtime rate; default ignores it.
     fn flops_budgeted(&self, _rate: f64) -> LinearFlops {
         self.flops()
+    }
+    /// Expected per-token FLOPs at a runtime rate as the *batched decode
+    /// kernels* execute it (see [`MlpAdapter::flops_runtime`]).
+    fn flops_runtime(&self, rate: f64) -> LinearFlops {
+        self.flops_budgeted(rate)
     }
 }
 
@@ -336,6 +349,77 @@ impl AdaptedModel {
         out.lm_head /= n;
         out.total = out.mlp + out.qkv + out.attn_other + out.lm_head;
         out
+    }
+
+    /// Per-block analytic FLOPs matching the **measured-counter**
+    /// conventions: norms/residuals/embeds uncounted, batched maskers
+    /// scored as the decode kernels actually execute them
+    /// ([`MlpAdapter::flops_runtime`]). The prediction the conservation
+    /// tests and the `serving_flops` bench compare the counters against.
+    pub fn runtime_block_flops(
+        &self,
+        layer: usize,
+        ctx: usize,
+        rate: f64,
+    ) -> crate::flops::BlockFlops {
+        let cfg = &self.base.cfg;
+        let (d, h) = (cfg.d_model, cfg.d_hidden);
+        let mut b = crate::flops::BlockFlops {
+            attn: crate::flops::AttnFlops::dense(d, ctx),
+            mlp: match cfg.arch {
+                crate::model::Arch::SwiGlu => MlpFlops::dense_swiglu(d, h),
+                crate::model::Arch::GeluNeoX => MlpFlops::dense_gelu(d, h),
+            },
+            norms: 0.0,
+        };
+        if !self.bypass(rate) {
+            if let Some(ad) = &self.mlp[layer] {
+                b.mlp = ad.flops_runtime(rate);
+            }
+            if let Some(ad) = &self.qkv[layer] {
+                b.attn.qkv = ad.flops_runtime(rate);
+            }
+        }
+        b
+    }
+
+    /// Total analytic FLOPs to decode `seq_len` tokens at `rate` under the
+    /// measured-counter conventions (undivided, like
+    /// [`crate::flops::decode_flops_sum`]).
+    pub fn runtime_decode_flops(&self, seq_len: usize, rate: f64) -> f64 {
+        let cfg = &self.base.cfg;
+        let mut total = 0.0;
+        for ctx in 1..=seq_len {
+            for layer in 0..cfg.n_layers {
+                let b = self.runtime_block_flops(layer, ctx, rate);
+                total += b.mlp.total() + b.attn.total() + b.norms;
+            }
+            total += crate::flops::linear(cfg.vocab, cfg.d_model);
+        }
+        total
+    }
+
+    /// Dense-baseline analytic FLOPs for a `seq_len`-token decode under
+    /// the measured conventions — the denominator of the per-request
+    /// `flops_saved_frac` in the serving timing block.
+    pub fn measured_dense_flops(&self, seq_len: usize) -> f64 {
+        let cfg = &self.base.cfg;
+        let (d, h) = (cfg.d_model, cfg.d_hidden);
+        let mlp = match cfg.arch {
+            crate::model::Arch::SwiGlu => MlpFlops::dense_swiglu(d, h),
+            crate::model::Arch::GeluNeoX => MlpFlops::dense_gelu(d, h),
+        };
+        crate::flops::decode_flops_sum(
+            |ctx| crate::flops::BlockFlops {
+                attn: crate::flops::AttnFlops::dense(d, ctx),
+                mlp,
+                norms: 0.0,
+            },
+            cfg.n_layers,
+            d,
+            cfg.vocab,
+            seq_len,
+        )
     }
 }
 

@@ -68,6 +68,8 @@ impl NeuronThresholdAdapter {
 
     /// [`NeuronThresholdAdapter::apply_tok`] at a runtime threshold.
     pub fn apply_tok_t(&self, x: &[f32], t: f32) -> Vec<f32> {
+        let h = self.in_dim();
+        crate::flops::measured::add(2 * h as u64, 9 * h as u64);
         let mask = self.mask_t(x, t);
         let mut out = vec![0.0f32; self.out_dim()];
         masked_acc_gemv(&self.wt, &mask, x, &mut out);
@@ -86,6 +88,10 @@ impl NeuronThresholdAdapter {
     /// single-threshold output bitwise.
     pub fn apply_tok_batch_t(&self, xs: &Mat, thresholds: &[f32]) -> Mat {
         debug_assert_eq!(thresholds.len(), xs.rows);
+        crate::flops::measured::add(
+            2 * (xs.rows * xs.cols) as u64,
+            9 * (xs.rows * xs.cols) as u64,
+        );
         let mut mask = Vec::with_capacity(xs.rows * xs.cols);
         for (r, &t) in thresholds.iter().enumerate() {
             for (&v, &n) in xs.row(r).iter().zip(&self.col_norms) {
@@ -104,6 +110,10 @@ impl NeuronThresholdAdapter {
 
     /// Sequence path at a runtime threshold.
     pub fn apply_seq_t(&self, xs: &Mat, t: f32) -> Mat {
+        crate::flops::measured::add(
+            2 * (xs.rows * xs.cols) as u64,
+            9 * (xs.rows * xs.cols) as u64,
+        );
         let mut masked = xs.clone();
         for r in 0..masked.rows {
             let row = masked.row_mut(r);

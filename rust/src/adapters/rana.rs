@@ -199,6 +199,45 @@ impl MlpAdapter for RanaMlp {
             act: 2.0 * self.up.out_dim() as f64,
         }
     }
+
+    /// Batched-decode cost as the measured counters see it: the shared
+    /// masked kernels score the **full shared basis** (`d` rows of B) for
+    /// every tier, not the tier's rank cap — only the A-side contraction
+    /// shrinks with the budget. (The single-token `apply_tok_at` path does
+    /// clamp scoring to the cap; serving rides the batched path.)
+    fn flops_runtime(&self, rate: f64) -> MlpFlops {
+        let Some(e) = self.entry_for(rate) else { return self.flops() };
+        let act = match self.arch {
+            Arch::SwiGlu => 2.0 * self.up.out_dim() as f64,
+            Arch::GeluNeoX => self.up.out_dim() as f64,
+        };
+        MlpFlops {
+            up: crate::flops::rank_adapter(
+                self.up.out_dim(),
+                self.up.in_dim(),
+                self.up.d,
+                e.up_exp_rank,
+            ),
+            gate: self
+                .gate
+                .as_ref()
+                .map(|g| {
+                    crate::flops::rank_adapter(
+                        g.out_dim(),
+                        g.in_dim(),
+                        g.d,
+                        e.gate_exp_rank,
+                    )
+                })
+                .unwrap_or_default(),
+            down: crate::flops::neuron_threshold(
+                self.down.out_dim(),
+                self.down.in_dim(),
+                e.down_exp_keep,
+            ),
+            act,
+        }
+    }
 }
 
 /// Per-layer builder: owns the expensive [`RankPrecomp`]s so that grid
@@ -513,6 +552,21 @@ impl QkvAdapter for RanaQkv {
                 self.ad.out_dim(),
                 self.ad.in_dim(),
                 e.d,
+                e.exp_rank,
+            ),
+            None => self.ad.flops(),
+        }
+    }
+
+    /// Batched-decode cost as the measured counters see it: the shared
+    /// masked kernel scores the full basis for every tier (see
+    /// [`RanaMlp::flops_runtime`]).
+    fn flops_runtime(&self, rate: f64) -> LinearFlops {
+        match self.ad.schedule.entry_for(rate) {
+            Some(e) => crate::flops::rank_adapter(
+                self.ad.out_dim(),
+                self.ad.in_dim(),
+                self.ad.d,
                 e.exp_rank,
             ),
             None => self.ad.flops(),

@@ -162,13 +162,27 @@ impl RankAdapter {
     /// touched), so a lower budget is genuinely cheaper on this path.
     pub fn apply_tok_at(&self, x: &[f32], view: BudgetView) -> Vec<f32> {
         let t = view.threshold;
+        let cap = view.rank_cap.min(self.d);
         let mut out = vec![0.0f32; self.out_dim()];
-        for i in 0..view.rank_cap.min(self.d) {
+        let mut active = 0usize;
+        for i in 0..cap {
             let s = crate::tensor::dot(self.b.row(i), x);
             if s * s >= t {
+                active += 1;
                 crate::tensor::axpy(s, self.at.row(i), &mut out);
             }
         }
+        // Fused scoring (2·cap·i) + thresholding (cap) + surviving-rank
+        // accumulation (2·active·o). NB: this path clamps scoring to the
+        // rank cap; the batched path scores the full basis (see
+        // `apply_tok_batch_views`).
+        crate::flops::measured::add(
+            (2 * cap * self.in_dim() + cap + 2 * active * self.out_dim()) as u64,
+            4 * (cap * self.in_dim()
+                + self.in_dim()
+                + active * self.out_dim()
+                + self.out_dim()) as u64,
+        );
         out
     }
 
@@ -209,6 +223,9 @@ impl RankAdapter {
                 mask.push(i < cap && v * v >= t);
             }
         }
+        // Mask build: one threshold compare per (row, rank) — the masker's
+        // `+d` term per row (scoring itself was booked by `gemv_batch`).
+        crate::flops::measured::add((xs.rows * self.d) as u64, 5 * (xs.rows * self.d) as u64);
         let mut out = Mat::zeros(xs.rows, self.out_dim());
         masked_acc_gemm(&self.at, &mask, &s, &mut out);
         out
@@ -228,6 +245,9 @@ impl RankAdapter {
     pub fn apply_seq_at(&self, xs: &Mat, view: BudgetView) -> Mat {
         let mut s = xs.matmul(&self.bt); // T × d
         let (cap, t) = (view.rank_cap.min(self.d), view.threshold);
+        // Thresholding pass (the GEMM stages book themselves; mask-as-zero
+        // means the second stage stays nominally dense on this path).
+        crate::flops::measured::add((s.rows * cap) as u64, 8 * (s.rows * self.d) as u64);
         for r in 0..s.rows {
             for (i, v) in s.row_mut(r).iter_mut().enumerate() {
                 if i >= cap || *v * *v < t {

@@ -145,6 +145,14 @@ impl Batcher {
         self
     }
 
+    /// Size the finished-request trace ring (`rana serve --trace-ring`;
+    /// default [`TIMELINE_RING_CAP`]). Replaces the tracer wholesale, so
+    /// call during construction, before any request is admitted.
+    pub fn with_trace_ring(mut self, cap: usize) -> Self {
+        self.tracer = Arc::new(Tracer::new(cap));
+        self
+    }
+
     /// The trace collector: `serve` exports it at shutdown (`--trace-out`),
     /// benches toggle it for the overhead A/B.
     pub fn tracer(&self) -> &Arc<Tracer> {
@@ -295,8 +303,11 @@ impl Batcher {
         self.metrics.observe_latency(job.arrived.elapsed());
     }
 
-    /// Answer a `trace` op with the last `last` finished-request timelines.
+    /// Answer a `trace` op with the last `last` finished-request timelines,
+    /// clamped to the configured ring capacity (the parse layer validates
+    /// but does not know the cap).
     fn respond_trace(&self, job: &Job, id: &str, last: usize) {
+        let last = last.min(self.tracer.cap());
         let _ = job.resp.send(trace_response(id, self.tracer.timelines_json(last)));
         self.metrics.observe_latency(job.arrived.elapsed());
     }
@@ -597,7 +608,7 @@ impl Batcher {
                             }
                         }
                     }
-                    SeqEvent::Finished { id, text, generated, reason } => {
+                    SeqEvent::Finished { id, text, generated, reason, flops, .. } => {
                         if let Some(job) = inflight.remove(&id) {
                             let Request::Generate(g) = &job.req else { unreachable!() };
                             sids.remove(&g.id);
@@ -607,6 +618,10 @@ impl Batcher {
                                 .tokens_generated
                                 .fetch_add(generated as u64, Ordering::Relaxed);
                             self.metrics.observe_latency(job.arrived.elapsed());
+                            let rate = g.budget.unwrap_or_else(|| self.current_rate());
+                            if flops > 0 {
+                                self.metrics.observe_request_flops(rate, flops);
+                            }
                             let timing = timelines.remove(&id).map(|tl| {
                                 tl.finish();
                                 tl.timing_json()
@@ -616,7 +631,7 @@ impl Batcher {
                                 &text,
                                 generated,
                                 &self.engine.name(),
-                                g.budget.unwrap_or_else(|| self.current_rate()),
+                                rate,
                                 reason.as_str(),
                                 g.stream,
                                 timing,

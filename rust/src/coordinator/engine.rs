@@ -7,6 +7,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::flops::measured::FlopPhases;
 use crate::trace::{PhaseTotals, RequestTimeline, SeqBatchEvent};
 
 use super::metrics::Metrics;
@@ -76,8 +77,18 @@ pub enum SeqEvent {
     /// A newly generated token's text (streaming delta).
     Token { id: u64, delta: String },
     /// The sequence retired: full text (prompt + generated, truncated at a
-    /// stop match), tokens actually generated, and why it stopped.
-    Finished { id: u64, text: String, generated: usize, reason: FinishReason },
+    /// stop match), tokens actually generated, why it stopped, the measured
+    /// FLOPs attributed to it (0 when counters are off), and its savings
+    /// fraction against the analytic dense baseline (`None` when counters
+    /// are off).
+    Finished {
+        id: u64,
+        text: String,
+        generated: usize,
+        reason: FinishReason,
+        flops: u64,
+        flops_saved_frac: Option<f64>,
+    },
 }
 
 pub trait Engine: Send + Sync {
@@ -419,6 +430,11 @@ trait SessionBatch: Send {
     fn phase_stats(&self) -> PhaseTotals {
         PhaseTotals::default()
     }
+    /// Measured per-phase FLOP/byte running totals (zero when the batch
+    /// layer does not count, or the kernel counters are disabled).
+    fn flop_stats(&self) -> FlopPhases {
+        FlopPhases::default()
+    }
     /// Structural per-sequence events since the last drain. May include
     /// events of sequences owned by other sessions on a shared batch —
     /// callers filter by ownership.
@@ -469,6 +485,10 @@ impl SessionBatch for DecodeBatch {
 
     fn phase_stats(&self) -> PhaseTotals {
         DecodeBatch::phase_stats(self)
+    }
+
+    fn flop_stats(&self) -> FlopPhases {
+        DecodeBatch::flop_stats(self)
     }
 
     fn drain_seq_events(&mut self) -> Vec<(u64, SeqBatchEvent)> {
@@ -527,6 +547,10 @@ impl SessionBatch for Arc<Mutex<PagedDecodeBatch>> {
 
     fn phase_stats(&self) -> PhaseTotals {
         self.lock().unwrap().phase_stats()
+    }
+
+    fn flop_stats(&self) -> FlopPhases {
+        self.lock().unwrap().flop_stats()
     }
 
     fn drain_seq_events(&mut self) -> Vec<(u64, SeqBatchEvent)> {
@@ -589,6 +613,8 @@ struct NativeDecodeSession<T: SessionBatch> {
     reported_spec: (u64, u64, u64),
     /// Cumulative per-phase timers already forwarded to `metrics`.
     reported_phases: PhaseTotals,
+    /// Cumulative per-phase measured FLOPs already forwarded to `metrics`.
+    reported_flops: FlopPhases,
 }
 
 impl<T: SessionBatch> NativeDecodeSession<T> {
@@ -599,6 +625,7 @@ impl<T: SessionBatch> NativeDecodeSession<T> {
             batch.kv_stats().map(|(_, _, h, p)| (h, p)).unwrap_or((0, 0));
         let reported_spec = batch.spec_stats();
         let reported_phases = batch.phase_stats();
+        let reported_flops = batch.flop_stats();
         Self {
             model,
             batch,
@@ -608,6 +635,7 @@ impl<T: SessionBatch> NativeDecodeSession<T> {
             reported_preempts,
             reported_spec,
             reported_phases,
+            reported_flops,
         }
     }
 }
@@ -674,6 +702,15 @@ impl<T: SessionBatch> DecodeSession for NativeDecodeSession<T> {
                 m.observe_phases(&phase_delta);
             }
             self.reported_phases = phases;
+        }
+        // Same drain for measured per-phase FLOPs.
+        let flops = self.batch.flop_stats();
+        let flop_delta = flops.delta_since(&self.reported_flops);
+        if !flop_delta.is_zero() {
+            if let Some(m) = &self.metrics {
+                m.observe_flops(&flop_delta);
+            }
+            self.reported_flops = flops;
         }
         // Route structural batch events to their owners' timelines; events
         // of other sessions' sequences go back for their owners.
@@ -753,8 +790,23 @@ impl<T: SessionBatch> DecodeSession for NativeDecodeSession<T> {
             self.batch.restore_emitted(theirs);
         }
         for f in self.batch.retire_finished(&self.gen) {
+            // Savings fraction against the analytic dense baseline for the
+            // positions this sequence actually ran (the final sampled token
+            // needs no forward pass). Speculative drafting can push the
+            // measured count past the baseline, so the fraction may go
+            // negative — reported as-is.
+            let steps = (f.prompt.len() + f.generated.len()).saturating_sub(1);
+            let flops_saved_frac = if f.flops > 0 {
+                let baseline = self.model.measured_dense_flops(steps);
+                (baseline > 0.0).then(|| 1.0 - f.flops as f64 / baseline)
+            } else {
+                None
+            };
             let (text, reason) = match self.gen.remove(&f.id) {
                 Some(g) => {
+                    if let Some(tl) = &g.timeline {
+                        tl.set_flops(f.flops, flops_saved_frac);
+                    }
                     // Flush held-back text so frames reassemble the final
                     // text even when stop sequences forced a hold-back.
                     if g.trunc.is_none() && g.emitted_len < g.gen_text.len() {
@@ -784,6 +836,8 @@ impl<T: SessionBatch> DecodeSession for NativeDecodeSession<T> {
                 text,
                 generated: f.generated.len(),
                 reason,
+                flops: f.flops,
+                flops_saved_frac,
             });
         }
         events
@@ -1021,7 +1075,7 @@ mod tests {
         for e in events {
             match e {
                 SeqEvent::Token { id, delta } => toks.push((id, delta)),
-                SeqEvent::Finished { id, text, generated, reason } => {
+                SeqEvent::Finished { id, text, generated, reason, .. } => {
                     fins.push((id, text, generated, reason))
                 }
             }

@@ -2,8 +2,9 @@
 //! snapshotted to JSON for the `stats` op and the benches.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Duration;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
+use crate::flops::measured::{self, FlopPhases};
 use crate::trace::PhaseTotals;
 use crate::util::json::Json;
 
@@ -71,6 +72,16 @@ fn hist_zero(hist: &[AtomicU64; 10]) {
 /// bucket 0 counts dense (rate 0) requests, the last bucket clamps.
 pub const BUDGET_EDGES: [f64; 6] = [0.0, 0.2, 0.35, 0.5, 0.75, 1.0];
 
+/// Process-start anchor for the uptime gauge, wrapped so [`Metrics`] keeps
+/// deriving `Default` (`Instant` has no `Default`).
+struct StartTime(Instant);
+
+impl Default for StartTime {
+    fn default() -> Self {
+        Self(Instant::now())
+    }
+}
+
 #[derive(Default)]
 pub struct Metrics {
     pub requests: AtomicU64,
@@ -135,6 +146,17 @@ pub struct Metrics {
     phase_spec_draft_us: AtomicU64,
     phase_spec_verify_us: AtomicU64,
     phase_maintenance_us: AtomicU64,
+    /// Measured multiply-add FLOPs per engine phase (windowed — drained from
+    /// batch [`FlopPhases`] deltas exactly like the phase timers above).
+    flops_prefill: AtomicU64,
+    flops_decode: AtomicU64,
+    flops_spec_draft: AtomicU64,
+    flops_spec_verify: AtomicU64,
+    /// Measured FLOPs of finished requests bucketed by resolved budget tier
+    /// over [`BUDGET_EDGES`] (windowed, companion to `budget_hist`).
+    request_flops_by_tier: [AtomicU64; 6],
+    /// Process-start anchor for `uptime_us`.
+    created: StartTime,
 }
 
 impl Metrics {
@@ -191,6 +213,32 @@ impl Metrics {
             spec_verify_us: self.phase_spec_verify_us.load(Ordering::Relaxed),
             maintenance_us: self.phase_maintenance_us.load(Ordering::Relaxed),
         }
+    }
+
+    /// Accumulate a measured-FLOP delta reported by a decode session (same
+    /// session-drain pattern as [`Metrics::observe_phases`]).
+    pub fn observe_flops(&self, d: &FlopPhases) {
+        self.flops_prefill.fetch_add(d.prefill.flops, Ordering::Relaxed);
+        self.flops_decode.fetch_add(d.decode.flops, Ordering::Relaxed);
+        self.flops_spec_draft.fetch_add(d.draft.flops, Ordering::Relaxed);
+        self.flops_spec_verify.fetch_add(d.verify.flops, Ordering::Relaxed);
+    }
+
+    /// Record one finished request's measured FLOPs under its resolved
+    /// budget tier (same bucketing as [`Metrics::observe_budget`]).
+    pub fn observe_request_flops(&self, rate: f64, flops: u64) {
+        let idx = BUDGET_EDGES.iter().position(|&e| rate <= e).unwrap_or(5);
+        self.request_flops_by_tier[idx].fetch_add(flops, Ordering::Relaxed);
+    }
+
+    /// Per-tier measured-FLOP totals (zipped with [`BUDGET_EDGES`]).
+    pub fn request_flops_counts(&self) -> Vec<u64> {
+        self.request_flops_by_tier.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Microseconds since this `Metrics` (the process, in practice) started.
+    pub fn uptime_us(&self) -> u64 {
+        self.created.0.elapsed().as_micros() as u64
     }
 
     /// Record the budget a request was actually served at (per-request
@@ -374,6 +422,10 @@ impl Metrics {
             &self.phase_spec_draft_us,
             &self.phase_spec_verify_us,
             &self.phase_maintenance_us,
+            &self.flops_prefill,
+            &self.flops_decode,
+            &self.flops_spec_draft,
+            &self.flops_spec_verify,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -384,12 +436,25 @@ impl Metrics {
         for c in &self.budget_hist {
             c.store(0, Ordering::Relaxed);
         }
+        for c in &self.request_flops_by_tier {
+            c.store(0, Ordering::Relaxed);
+        }
         let in_use = self.kv_blocks_in_use.load(Ordering::Relaxed);
         self.kv_blocks_peak.store(in_use, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> Json {
+        // Process-cumulative measured compute: read straight off the kernel
+        // counters at snapshot time, deliberately NOT zeroed by
+        // `reset_window` (conservation checks need the lifetime totals).
+        let mc = measured::snapshot();
+        let ts_us = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0);
         Json::obj(vec![
+            ("snapshot_ts_us", Json::Num(ts_us as f64)),
+            ("uptime_us", Json::Num(self.uptime_us() as f64)),
             ("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
             ("responses", Json::Num(self.responses.load(Ordering::Relaxed) as f64)),
             ("batches", Json::Num(self.batches.load(Ordering::Relaxed) as f64)),
@@ -505,8 +570,252 @@ impl Metrics {
                     ),
                 ]),
             ),
+            ("measured_flops", Json::Num(mc.flops as f64)),
+            ("measured_bytes", Json::Num(mc.bytes as f64)),
+            (
+                "layer_flops",
+                Json::Arr(
+                    measured::layer_snapshot()
+                        .into_iter()
+                        .map(|f| Json::Num(f as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "flops_by_phase",
+                Json::obj(vec![
+                    (
+                        "prefill",
+                        Json::Num(self.flops_prefill.load(Ordering::Relaxed) as f64),
+                    ),
+                    ("decode", Json::Num(self.flops_decode.load(Ordering::Relaxed) as f64)),
+                    (
+                        "spec_draft",
+                        Json::Num(self.flops_spec_draft.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "spec_verify",
+                        Json::Num(self.flops_spec_verify.load(Ordering::Relaxed) as f64),
+                    ),
+                ]),
+            ),
+            (
+                "request_flops_by_tier",
+                Json::Arr(
+                    self.request_flops_counts()
+                        .into_iter()
+                        .map(|c| Json::Num(c as f64))
+                        .collect(),
+                ),
+            ),
         ])
     }
+
+    /// Render every counter, gauge, and histogram in Prometheus text
+    /// exposition format (version 0.0.4). Durations export in seconds per
+    /// convention; the in-struct overflow bucket (the last histogram slot,
+    /// which `bucket_add` clamps into) folds into `+Inf`.
+    pub fn prometheus(&self) -> String {
+        let mut o = String::with_capacity(8192);
+        let ld = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
+        let mc = measured::snapshot();
+
+        prom_scalar(&mut o, "rana_requests_total", "counter", "Requests received.", ld(&self.requests));
+        prom_scalar(&mut o, "rana_responses_total", "counter", "Responses sent.", ld(&self.responses));
+        prom_scalar(&mut o, "rana_batches_total", "counter", "Batches formed.", ld(&self.batches));
+        prom_scalar(&mut o, "rana_batched_jobs_total", "counter", "Jobs served through batches.", ld(&self.batched_jobs));
+        prom_scalar(&mut o, "rana_tokens_generated_total", "counter", "Tokens generated.", ld(&self.tokens_generated));
+        prom_scalar(&mut o, "rana_decode_steps_total", "counter", "Batched decode engine passes.", ld(&self.decode_steps));
+        prom_scalar(&mut o, "rana_decode_tokens_total", "counter", "Tokens fed across decode passes.", ld(&self.decode_tokens));
+        prom_scalar(&mut o, "rana_decode_busy_seconds_total", "counter", "Wall-clock inside decode passes.", ld(&self.decode_time_us) / 1e6);
+        prom_scalar(&mut o, "rana_prefix_hit_tokens_total", "counter", "Prompt tokens skipped via prefix-trie hits.", ld(&self.prefix_hit_tokens));
+        prom_scalar(&mut o, "rana_kv_preemptions_total", "counter", "Sequences preempted under pool pressure.", ld(&self.kv_preemptions));
+        prom_scalar(&mut o, "rana_draft_tokens_total", "counter", "Speculative draft tokens proposed.", ld(&self.draft_tokens));
+        prom_scalar(&mut o, "rana_accepted_tokens_total", "counter", "Speculative draft tokens accepted.", ld(&self.accepted_tokens));
+        prom_scalar(&mut o, "rana_spec_rollbacks_total", "counter", "Speculation rounds rolled back.", ld(&self.spec_rollbacks));
+        prom_scalar(&mut o, "rana_budget_switches_total", "counter", "Shared-budget retunes.", ld(&self.budget_switches));
+        prom_scalar(&mut o, "rana_slo_retunes_total", "counter", "SLO-controller tier changes.", ld(&self.slo_retunes));
+        prom_scalar(&mut o, "rana_measured_flops_total", "counter", "Measured multiply-add FLOPs (process lifetime).", mc.flops as f64);
+        prom_scalar(&mut o, "rana_measured_bytes_total", "counter", "Measured bytes touched (process lifetime).", mc.bytes as f64);
+
+        prom_scalar(&mut o, "rana_queue_depth", "gauge", "Requests waiting for admission.", ld(&self.queue_depth));
+        prom_scalar(&mut o, "rana_rank_budget", "gauge", "Current shared compression rate.", ld(&self.rank_budget_milli) / 1000.0);
+        prom_scalar(&mut o, "rana_kv_blocks_in_use", "gauge", "KV pool blocks currently allocated.", ld(&self.kv_blocks_in_use));
+        prom_scalar(&mut o, "rana_kv_blocks_peak", "gauge", "KV pool high-water mark this window.", ld(&self.kv_blocks_peak));
+        prom_scalar(&mut o, "rana_effective_rank_frac", "gauge", "Active-rank fraction at the shared budget.", ld(&self.effective_rank_frac_milli) / 1000.0);
+        prom_scalar(&mut o, "rana_uptime_seconds", "gauge", "Seconds since process start.", self.uptime_us() as f64 / 1e6);
+
+        let phase = self.phase_totals();
+        prom_labeled(
+            &mut o,
+            "rana_phase_seconds_total",
+            "counter",
+            "Engine-pass wall-clock by phase.",
+            "phase",
+            &[
+                ("prefill", phase.prefill_us as f64 / 1e6),
+                ("decode", phase.decode_us as f64 / 1e6),
+                ("spec_draft", phase.spec_draft_us as f64 / 1e6),
+                ("spec_verify", phase.spec_verify_us as f64 / 1e6),
+                ("maintenance", phase.maintenance_us as f64 / 1e6),
+            ],
+        );
+        prom_labeled(
+            &mut o,
+            "rana_phase_flops_total",
+            "counter",
+            "Measured multiply-add FLOPs by phase.",
+            "phase",
+            &[
+                ("prefill", ld(&self.flops_prefill)),
+                ("decode", ld(&self.flops_decode)),
+                ("spec_draft", ld(&self.flops_spec_draft)),
+                ("spec_verify", ld(&self.flops_spec_verify)),
+            ],
+        );
+        let layer_flops = measured::layer_snapshot();
+        let layer_series: Vec<(String, f64)> = layer_flops
+            .iter()
+            .enumerate()
+            .map(|(i, &f)| (i.to_string(), f as f64))
+            .collect();
+        let layer_refs: Vec<(&str, f64)> =
+            layer_series.iter().map(|(l, v)| (l.as_str(), *v)).collect();
+        prom_labeled(
+            &mut o,
+            "rana_layer_flops_total",
+            "counter",
+            "Measured FLOPs by layer (last index is the LM head).",
+            "layer",
+            &layer_refs,
+        );
+        let fracs = self.layer_rank_fracs();
+        let frac_series: Vec<(String, f64)> =
+            fracs.iter().enumerate().map(|(i, &f)| (i.to_string(), f)).collect();
+        let frac_refs: Vec<(&str, f64)> =
+            frac_series.iter().map(|(l, v)| (l.as_str(), *v)).collect();
+        prom_labeled(
+            &mut o,
+            "rana_layer_rank_frac",
+            "gauge",
+            "Per-layer active-rank fraction.",
+            "layer",
+            &frac_refs,
+        );
+        let tier_labels: Vec<String> = BUDGET_EDGES.iter().map(|e| e.to_string()).collect();
+        let budget_counts = self.budget_hist_counts();
+        let budget_series: Vec<(&str, f64)> = tier_labels
+            .iter()
+            .zip(&budget_counts)
+            .map(|(l, &c)| (l.as_str(), c as f64))
+            .collect();
+        prom_labeled(
+            &mut o,
+            "rana_budget_requests_total",
+            "counter",
+            "Requests served by resolved budget tier.",
+            "tier",
+            &budget_series,
+        );
+        let tier_flops = self.request_flops_counts();
+        let tier_flop_series: Vec<(&str, f64)> = tier_labels
+            .iter()
+            .zip(&tier_flops)
+            .map(|(l, &c)| (l.as_str(), c as f64))
+            .collect();
+        prom_labeled(
+            &mut o,
+            "rana_request_flops_total",
+            "counter",
+            "Measured FLOPs of finished requests by budget tier.",
+            "tier",
+            &tier_flop_series,
+        );
+
+        prom_hist(
+            &mut o,
+            "rana_request_latency_seconds",
+            "Whole-request latency.",
+            &hist_counts(&self.latency),
+            &LATENCY_EDGES_US,
+            self.latency_sum_us.load(Ordering::Relaxed),
+        );
+        prom_hist(
+            &mut o,
+            "rana_ttft_seconds",
+            "Time to first token.",
+            &hist_counts(&self.ttft_hist),
+            &LATENCY_EDGES_US,
+            self.ttft_sum_us.load(Ordering::Relaxed),
+        );
+        prom_hist(
+            &mut o,
+            "rana_itl_seconds",
+            "Inter-token latency.",
+            &hist_counts(&self.itl_hist),
+            &ITL_EDGES_US,
+            self.itl_sum_us.load(Ordering::Relaxed),
+        );
+        prom_hist(
+            &mut o,
+            "rana_queue_wait_seconds",
+            "Enqueue-to-admission wait.",
+            &hist_counts(&self.queue_wait_hist),
+            &LATENCY_EDGES_US,
+            self.queue_wait_sum_us.load(Ordering::Relaxed),
+        );
+        o
+    }
+}
+
+/// One `# HELP`/`# TYPE` header plus an unlabeled sample line.
+fn prom_scalar(out: &mut String, name: &str, kind: &str, help: &str, v: f64) {
+    use std::fmt::Write;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+/// One header plus a labeled sample line per series.
+fn prom_labeled(
+    out: &mut String,
+    name: &str,
+    kind: &str,
+    help: &str,
+    label: &str,
+    series: &[(&str, f64)],
+) {
+    use std::fmt::Write;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+    for (lv, v) in series {
+        let _ = writeln!(out, "{name}{{{label}=\"{lv}\"}} {v}");
+    }
+}
+
+/// Cumulative-bucket histogram: `le` edges in seconds over the first nine
+/// in-struct buckets, `+Inf` absorbing the clamped overflow bucket, then
+/// `_sum` (seconds) and `_count`.
+fn prom_hist(
+    out: &mut String,
+    name: &str,
+    help: &str,
+    counts: &[u64],
+    edges: &[u64],
+    sum_us: u64,
+) {
+    use std::fmt::Write;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let total: u64 = counts.iter().sum();
+    let mut cum = 0u64;
+    for i in 0..edges.len() - 1 {
+        cum += counts[i];
+        let _ = writeln!(out, "{name}_bucket{{le=\"{}\"}} {cum}", edges[i] as f64 / 1e6);
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {total}");
+    let _ = writeln!(out, "{name}_sum {}", sum_us as f64 / 1e6);
+    let _ = writeln!(out, "{name}_count {total}");
 }
 
 #[cfg(test)]
@@ -735,8 +1044,107 @@ mod tests {
             "p50_queue_wait_us",
             "p99_queue_wait_us",
             "phase_us",
+            "snapshot_ts_us",
+            "uptime_us",
+            "measured_flops",
+            "measured_bytes",
+            "layer_flops",
+            "flops_by_phase",
+            "request_flops_by_tier",
         ] {
             assert!(s.get(key).is_ok(), "missing {key}");
+        }
+        assert!(s.get_f64("snapshot_ts_us").unwrap() > 1e15, "unix micros, not relative");
+    }
+
+    #[test]
+    fn flop_observers_accumulate_and_reset_with_window() {
+        let m = Metrics::new();
+        m.observe_flops(&FlopPhases {
+            prefill: measured::Counts { flops: 100, bytes: 400 },
+            decode: measured::Counts { flops: 50, bytes: 200 },
+            verify: measured::Counts { flops: 20, bytes: 80 },
+            draft: measured::Counts { flops: 10, bytes: 40 },
+        });
+        m.observe_flops(&FlopPhases {
+            decode: measured::Counts { flops: 25, bytes: 100 },
+            ..FlopPhases::default()
+        });
+        m.observe_request_flops(0.35, 1000);
+        m.observe_request_flops(0.0, 500);
+        m.observe_request_flops(2.0, 7); // clamps into the last tier
+        let s = m.snapshot();
+        let p = s.get("flops_by_phase").unwrap();
+        assert_eq!(p.get_f64("prefill").unwrap(), 100.0);
+        assert_eq!(p.get_f64("decode").unwrap(), 75.0);
+        assert_eq!(p.get_f64("spec_draft").unwrap(), 10.0);
+        assert_eq!(p.get_f64("spec_verify").unwrap(), 20.0);
+        assert_eq!(m.request_flops_counts(), vec![500, 0, 1000, 0, 0, 7]);
+        m.reset_window();
+        let s = m.snapshot();
+        assert_eq!(s.get("flops_by_phase").unwrap().get_f64("decode").unwrap(), 0.0);
+        assert_eq!(m.request_flops_counts(), vec![0; 6]);
+    }
+
+    #[test]
+    fn prometheus_exposition_is_well_formed() {
+        let m = Metrics::new();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.observe_latency(Duration::from_micros(2_000));
+        m.observe_ttft(Duration::from_micros(500));
+        m.observe_itl(Duration::from_micros(80));
+        m.observe_queue_wait(Duration::from_micros(40));
+        m.observe_budget(0.35);
+        m.observe_request_flops(0.35, 1234);
+        m.set_layer_rank_fracs(vec![0.5, 0.9]);
+        let text = m.prometheus();
+        // Every sample line's metric has a HELP and TYPE header.
+        for name in [
+            "rana_requests_total",
+            "rana_measured_flops_total",
+            "rana_measured_bytes_total",
+            "rana_queue_depth",
+            "rana_uptime_seconds",
+            "rana_phase_seconds_total",
+            "rana_phase_flops_total",
+            "rana_layer_rank_frac",
+            "rana_budget_requests_total",
+            "rana_request_flops_total",
+            "rana_request_latency_seconds",
+            "rana_ttft_seconds",
+            "rana_itl_seconds",
+            "rana_queue_wait_seconds",
+        ] {
+            assert!(text.contains(&format!("# HELP {name} ")), "missing HELP for {name}");
+            assert!(text.contains(&format!("# TYPE {name} ")), "missing TYPE for {name}");
+        }
+        assert!(text.contains("rana_request_flops_total{tier=\"0.35\"} 1234"));
+        assert!(text.contains("rana_layer_rank_frac{layer=\"1\"} 0.9"));
+        // Histogram buckets are cumulative and end at +Inf == _count.
+        for hist in ["rana_ttft_seconds", "rana_itl_seconds", "rana_request_latency_seconds"] {
+            let buckets: Vec<u64> = text
+                .lines()
+                .filter(|l| l.starts_with(&format!("{hist}_bucket")))
+                .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+                .collect();
+            assert_eq!(buckets.len(), 10, "{hist}: 9 finite edges + +Inf");
+            assert!(buckets.windows(2).all(|w| w[0] <= w[1]), "{hist} buckets not cumulative");
+            let count: u64 = text
+                .lines()
+                .find(|l| l.starts_with(&format!("{hist}_count")))
+                .and_then(|l| l.rsplit(' ').next())
+                .unwrap()
+                .parse()
+                .unwrap();
+            assert_eq!(*buckets.last().unwrap(), count, "{hist}: +Inf bucket != _count");
+            assert_eq!(count, 1, "{hist}: one observation recorded");
+        }
+        // No stray unprefixed metric lines: every sample starts with rana_.
+        for line in text.lines() {
+            assert!(
+                line.starts_with("# ") || line.starts_with("rana_"),
+                "unexpected exposition line: {line}"
+            );
         }
     }
 

@@ -70,6 +70,12 @@ pub struct ServerConfig {
     pub slo_ttft_ms: Option<f64>,
     /// p95 ITL target in milliseconds (`--slo-itl-ms`).
     pub slo_itl_ms: Option<f64>,
+    /// Serve the Prometheus text exposition on this address
+    /// (`--metrics-addr`, e.g. `127.0.0.1:9095`; None = no endpoint).
+    pub metrics_addr: Option<String>,
+    /// Finished-request timeline ring capacity (`--trace-ring`). The
+    /// `trace` op's `last` clamps to this.
+    pub trace_ring: usize,
 }
 
 impl Default for ServerConfig {
@@ -90,6 +96,8 @@ impl Default for ServerConfig {
             prefill_chunk: 256,
             slo_ttft_ms: None,
             slo_itl_ms: None,
+            metrics_addr: None,
+            trace_ring: crate::trace::TIMELINE_RING_CAP,
         }
     }
 }
@@ -229,11 +237,16 @@ pub fn serve_on(
     engine: Arc<dyn Engine>,
     cfg: ServerConfig,
 ) -> anyhow::Result<()> {
-    let mut batcher = Batcher::new(engine, cfg.policy(), cfg.max_batch);
+    let mut batcher =
+        Batcher::new(engine, cfg.policy(), cfg.max_batch).with_trace_ring(cfg.trace_ring);
     if let Some(slo_cfg) = cfg.slo() {
         batcher = batcher.with_slo_controller(crate::sched::SloController::new(slo_cfg));
     }
     let batcher = Arc::new(batcher);
+    if let Some(addr) = &cfg.metrics_addr {
+        let bound = spawn_metrics_server(addr, Arc::clone(&batcher.metrics))?;
+        println!("metrics on http://{bound}/metrics");
+    }
     let submit = batcher.submitter();
     let b2 = Arc::clone(&batcher);
     let batch_thread = std::thread::spawn(move || b2.run());
@@ -288,6 +301,64 @@ pub fn serve_on(
         println!("wrote trace ({} timelines) to {path}", batcher.tracer().ring_len());
     }
     Ok(())
+}
+
+/// Serve the Prometheus text exposition (`GET /metrics`) on `addr` from a
+/// detached thread. Returns the bound address (so tests can bind port 0).
+///
+/// Deliberately minimal — one blocking accept loop, one request per
+/// connection — because scrapers poll at seconds-scale intervals and the
+/// render is a lock-free counter walk. The thread holds only the metrics
+/// handle, so it never blocks shutdown: it dies with the process.
+pub fn spawn_metrics_server(
+    addr: &str,
+    metrics: Arc<metrics::Metrics>,
+) -> anyhow::Result<std::net::SocketAddr> {
+    let listener = TcpListener::bind(addr)?;
+    let bound = listener.local_addr()?;
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(mut stream) = stream else { continue };
+            let mut reader = std::io::BufReader::new(match stream.try_clone() {
+                Ok(s) => s,
+                Err(_) => continue,
+            });
+            let mut line = String::new();
+            if reader.read_line(&mut line).is_err() {
+                continue;
+            }
+            // Drain headers so the client sees a clean close.
+            let mut hdr = String::new();
+            while let Ok(n) = reader.read_line(&mut hdr) {
+                if n == 0 || hdr.trim().is_empty() {
+                    break;
+                }
+                hdr.clear();
+            }
+            let mut parts = line.split_whitespace();
+            let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+            let resp = if method == "GET" && (path == "/metrics" || path == "/metrics/") {
+                let body = metrics.prometheus();
+                format!(
+                    "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+                     Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+                    body.len(),
+                    body
+                )
+            } else {
+                let body = "not found\n";
+                format!(
+                    "HTTP/1.1 404 Not Found\r\nContent-Type: text/plain\r\n\
+                     Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+                    body.len(),
+                    body
+                )
+            };
+            let _ = stream.write_all(resp.as_bytes());
+            let _ = stream.flush();
+        }
+    });
+    Ok(bound)
 }
 
 /// Read one `\n`-terminated line of at most `max` bytes. Returns
@@ -436,6 +507,40 @@ mod tests {
         assert!(ServerConfig::default().slo().is_none(), "no targets → no controller");
         let bad = ServerConfig { slo_ttft_ms: Some(-1.0), ..ServerConfig::default() };
         assert!(bad.slo().is_none(), "non-positive targets are ignored");
+    }
+
+    #[test]
+    fn metrics_endpoint_serves_exposition_and_404s() {
+        let metrics = Arc::new(metrics::Metrics::default());
+        metrics.observe_ttft(Duration::from_millis(5));
+        let addr = spawn_metrics_server("127.0.0.1:0", Arc::clone(&metrics)).unwrap();
+
+        let get = |path: &str| -> String {
+            let mut s = TcpStream::connect(addr).unwrap();
+            write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+            let mut out = String::new();
+            s.read_to_string(&mut out).unwrap();
+            out
+        };
+
+        let resp = get("/metrics");
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "got: {resp}");
+        assert!(resp.contains("Content-Type: text/plain; version=0.0.4"));
+        assert!(resp.contains("# TYPE rana_ttft_seconds histogram"));
+        assert!(resp.contains("rana_ttft_seconds_count 1"));
+        // Content-Length matches the body exactly.
+        let body = resp.split("\r\n\r\n").nth(1).unwrap();
+        let clen: usize = resp
+            .lines()
+            .find(|l| l.starts_with("Content-Length:"))
+            .and_then(|l| l.split(':').nth(1))
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        assert_eq!(clen, body.len());
+
+        assert!(get("/nope").starts_with("HTTP/1.1 404"));
     }
 
     #[test]

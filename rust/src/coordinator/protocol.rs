@@ -169,14 +169,15 @@ pub fn parse_request(line: &str, limits: &Limits) -> Result<Request, ProtocolErr
             Ok(Request::Stats { id, reset })
         }
         "trace" => {
+            // Validation only: the batcher clamps `last` to the *configured*
+            // ring capacity (`--trace-ring`), which the parse layer cannot
+            // know.
             let last = match opt_f64(&j, "last")? {
-                Some(n) if n.is_finite() && n >= 1.0 => {
-                    (n as usize).min(crate::trace::TIMELINE_RING_CAP)
-                }
+                Some(n) if n.is_finite() && n >= 1.0 => n as usize,
                 Some(n) => {
                     return Err(invalid(format!(
-                        "\"last\" must be a positive integer (got {n}); the server caps it at {}",
-                        crate::trace::TIMELINE_RING_CAP
+                        "\"last\" must be a positive integer (got {n}); the server clamps it \
+                         to its trace-ring capacity"
                     )))
                 }
                 None => TRACE_DEFAULT_LAST,
@@ -444,13 +445,14 @@ mod tests {
             parse_request(r#"{"op":"trace","last":5}"#, &limits()).unwrap(),
             Request::Trace { last: 5, .. }
         ));
-        // `last` clamps to the ring capacity; non-positive values error.
+        // `last` passes through unclamped (the batcher clamps to the
+        // configured ring); non-positive values error at the parse edge.
         let Request::Trace { last, .. } =
             parse_request(r#"{"op":"trace","last":100000}"#, &limits()).unwrap()
         else {
             panic!("expected trace")
         };
-        assert_eq!(last, crate::trace::TIMELINE_RING_CAP);
+        assert_eq!(last, 100000);
         assert!(parse_request(r#"{"op":"trace","last":0}"#, &limits()).is_err());
         assert!(matches!(
             parse_request(r#"{"op":"cancel","target":"r9"}"#, &limits()).unwrap(),

@@ -1,0 +1,387 @@
+//! Measured compute accounting: cheap thread-local multiply-add and
+//! bytes-touched counters incremented at the kernel *composition* call
+//! sites (GEMV/GEMM entry points, masked kernels, attention, activations)
+//! — one relaxed add per kernel call, never per element — so the engine
+//! can report the FLOPs it actually executed next to the analytic
+//! estimates in [`crate::flops`].
+//!
+//! Design contract (DESIGN.md §2i):
+//!
+//! * **Zero compute-path branches.** Counting never changes what a kernel
+//!   computes — every bitwise determinism pin (§2a–§2h) holds with
+//!   counting on or off. The only per-call branch is one relaxed
+//!   `AtomicBool` load.
+//! * **Composition-level sites.** Counts are added where kernels are
+//!   *composed* (`gemv_slices`, `gemv_batch` stripes, `gemm_rows_axpy`
+//!   chunks, `gemm_packed` panels, the masked accumulators,
+//!   `attention_over_*`, activations, adapter maskers), never inside the
+//!   `Kernel` trait primitives — each executed multiply-add is counted
+//!   exactly once regardless of backend or dispatch path.
+//! * **FLOPs = 2 × multiply-adds**, the same convention as
+//!   [`crate::flops::linear`]. Masked kernels count their *actual* active
+//!   rows; dense kernels count nominal `2·m·k·n` (the exact-zero skip in
+//!   the accumulation loops is an implementation detail, not a FLOP
+//!   saving the schedule planned). Norms, residual adds, embedding
+//!   lookups and the sampler are not counted, matching the analytic
+//!   formulas at `norms = 0`.
+//! * **Bytes are nominal touched bytes** — 4 × (elements read + written)
+//!   per call: an arithmetic-intensity denominator for bandwidth
+//!   accounting, not a cache-traffic measurement.
+//!
+//! Counters are **process-global**: each thread owns a registered slot of
+//! two relaxed `AtomicU64`s; [`snapshot`] folds dead threads' retired
+//! totals plus every live slot under a registry lock (thread exit folds
+//! the slot into the dead totals under the same lock, so no count is ever
+//! lost or double-read). Per-layer attribution
+//! ([`add_layer`]/[`layer_snapshot`]) is likewise process-global and
+//! cumulative; with several engines in one process the totals aggregate
+//! across them, so tests that assert exact counts serialize on a lock.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Cumulative measured totals. `flops` counts 2 × multiply-adds; `bytes`
+/// counts nominal touched bytes (see module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Counts {
+    pub flops: u64,
+    pub bytes: u64,
+}
+
+impl Counts {
+    /// Saturating element-wise `self − base` (running totals vs a
+    /// baseline — same delta shape as `trace::PhaseTotals::delta_since`).
+    pub fn delta_since(&self, base: &Counts) -> Counts {
+        Counts {
+            flops: self.flops.saturating_sub(base.flops),
+            bytes: self.bytes.saturating_sub(base.bytes),
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.flops == 0 && self.bytes == 0
+    }
+}
+
+impl std::ops::AddAssign for Counts {
+    fn add_assign(&mut self, rhs: Counts) {
+        self.flops = self.flops.saturating_add(rhs.flops);
+        self.bytes = self.bytes.saturating_add(rhs.bytes);
+    }
+}
+
+/// Measured compute split by engine phase, the compute-side sibling of
+/// `trace::PhaseTotals`: batches keep running totals, sessions report
+/// deltas upward into `Metrics`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FlopPhases {
+    /// Prompt prefill / preemption-refeed rows.
+    pub prefill: Counts,
+    /// Plain generation rows.
+    pub decode: Counts,
+    /// Speculative verify rows (the drafted tail of a spec round).
+    pub verify: Counts,
+    /// Low-budget draft passes.
+    pub draft: Counts,
+}
+
+impl FlopPhases {
+    pub fn delta_since(&self, base: &FlopPhases) -> FlopPhases {
+        FlopPhases {
+            prefill: self.prefill.delta_since(&base.prefill),
+            decode: self.decode.delta_since(&base.decode),
+            verify: self.verify.delta_since(&base.verify),
+            draft: self.draft.delta_since(&base.draft),
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.prefill.is_zero()
+            && self.decode.is_zero()
+            && self.verify.is_zero()
+            && self.draft.is_zero()
+    }
+
+    /// Total measured compute across all phases.
+    pub fn total(&self) -> Counts {
+        Counts {
+            flops: self.prefill.flops + self.decode.flops + self.verify.flops + self.draft.flops,
+            bytes: self.prefill.bytes + self.decode.bytes + self.verify.bytes + self.draft.bytes,
+        }
+    }
+
+    /// Attribute one full-budget engine pass's measured delta across the
+    /// row kinds it served, proportionally by row count with the
+    /// remainder going to the largest share — the same arithmetic
+    /// attribution rule as `PhaseTotals::attribute_pass` (one pass is one
+    /// fused matmul; the split is accounting, never a compute branch).
+    pub fn attribute_pass(
+        &mut self,
+        delta: Counts,
+        prefill_rows: u64,
+        decode_rows: u64,
+        verify_rows: u64,
+    ) {
+        let (pf, df, vf) = split_three(delta.flops, prefill_rows, decode_rows, verify_rows);
+        let (pb, db, vb) = split_three(delta.bytes, prefill_rows, decode_rows, verify_rows);
+        self.prefill.flops += pf;
+        self.prefill.bytes += pb;
+        self.decode.flops += df;
+        self.decode.bytes += db;
+        self.verify.flops += vf;
+        self.verify.bytes += vb;
+    }
+}
+
+/// Split `total` proportionally over three row counts; all-zero rows put
+/// everything in the decode share; the integer remainder goes to the
+/// largest share (verify beats decode on ties only when strictly larger,
+/// mirroring `PhaseTotals`).
+fn split_three(total: u64, prefill: u64, decode: u64, verify: u64) -> (u64, u64, u64) {
+    let rows = prefill + decode + verify;
+    if rows == 0 {
+        return (0, total, 0);
+    }
+    let share = |r: u64| ((total as u128 * r as u128) / rows as u128) as u64;
+    let (mut p, mut d, mut v) = (share(prefill), share(decode), share(verify));
+    let rem = total - (p + d + v);
+    if prefill >= decode && prefill >= verify {
+        p += rem;
+    } else if verify > decode {
+        v += rem;
+    } else {
+        d += rem;
+    }
+    (p, d, v)
+}
+
+struct ThreadSlot {
+    flops: AtomicU64,
+    bytes: AtomicU64,
+}
+
+struct Registry {
+    /// Live per-thread slots; each registered thread holds one `Arc`.
+    slots: Mutex<Vec<Arc<ThreadSlot>>>,
+    /// Totals folded in from threads that have exited.
+    dead_flops: AtomicU64,
+    dead_bytes: AtomicU64,
+}
+
+fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(|| Registry {
+        slots: Mutex::new(Vec::new()),
+        dead_flops: AtomicU64::new(0),
+        dead_bytes: AtomicU64::new(0),
+    })
+}
+
+fn lock_slots() -> std::sync::MutexGuard<'static, Vec<Arc<ThreadSlot>>> {
+    // Counter state is monotone totals — safe to keep using after a
+    // panicking holder (same recovery stance as `trace::lock_recover`).
+    match registry().slots.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// On thread exit: remove the slot from the registry and fold its totals
+/// into the dead counters under the registry lock, so a concurrent
+/// [`snapshot`] sees the slot exactly once (live xor dead).
+struct SlotHandle(Arc<ThreadSlot>);
+
+impl Drop for SlotHandle {
+    fn drop(&mut self) {
+        let reg = registry();
+        let mut slots = lock_slots();
+        slots.retain(|s| !Arc::ptr_eq(s, &self.0));
+        reg.dead_flops.fetch_add(self.0.flops.load(Ordering::Relaxed), Ordering::Relaxed);
+        reg.dead_bytes.fetch_add(self.0.bytes.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+thread_local! {
+    static SLOT: SlotHandle = {
+        let slot = Arc::new(ThreadSlot { flops: AtomicU64::new(0), bytes: AtomicU64::new(0) });
+        lock_slots().push(Arc::clone(&slot));
+        SlotHandle(slot)
+    };
+}
+
+/// Global counting switch (default on). Turning it off skips the counter
+/// adds and the per-layer snapshots — it never alters what any kernel
+/// computes; it exists so the overhead bench can A/B the counters
+/// themselves.
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Record one kernel call's nominal work: `flops` = 2 × multiply-adds,
+/// `bytes` = 4 × (elements read + written). One relaxed add per counter
+/// on the calling thread's slot.
+#[inline]
+pub fn add(flops: u64, bytes: u64) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    SLOT.with(|s| {
+        s.0.flops.fetch_add(flops, Ordering::Relaxed);
+        s.0.bytes.fetch_add(bytes, Ordering::Relaxed);
+    });
+}
+
+/// Process-wide cumulative totals: dead threads' folded totals plus every
+/// live slot. Exact with respect to completed parallel regions — the
+/// pool's region-completion synchronization orders worker adds before the
+/// caller's read.
+pub fn snapshot() -> Counts {
+    let reg = registry();
+    let slots = lock_slots();
+    let mut c = Counts {
+        flops: reg.dead_flops.load(Ordering::Relaxed),
+        bytes: reg.dead_bytes.load(Ordering::Relaxed),
+    };
+    for s in slots.iter() {
+        c.flops += s.flops.load(Ordering::Relaxed);
+        c.bytes += s.bytes.load(Ordering::Relaxed);
+    }
+    c
+}
+
+/// FLOPs-only snapshot — the cheap probe `decode_step_body` diffs around
+/// each layer for per-layer attribution.
+pub fn flops_now() -> u64 {
+    let reg = registry();
+    let slots = lock_slots();
+    let mut f = reg.dead_flops.load(Ordering::Relaxed);
+    for s in slots.iter() {
+        f += s.flops.load(Ordering::Relaxed);
+    }
+    f
+}
+
+fn layer_flops() -> &'static Mutex<Vec<u64>> {
+    static LAYERS: OnceLock<Mutex<Vec<u64>>> = OnceLock::new();
+    LAYERS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn lock_layers() -> std::sync::MutexGuard<'static, Vec<u64>> {
+    match layer_flops().lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// Credit `flops` to `layer` (the model's last slot + 1 is the lm-head
+/// pseudo-layer). Called once per layer per engine pass by
+/// `decode_step_body`; the vector grows to fit the largest layer seen.
+pub fn add_layer(layer: usize, flops: u64) {
+    if flops == 0 {
+        return;
+    }
+    let mut v = lock_layers();
+    if v.len() <= layer {
+        v.resize(layer + 1, 0);
+    }
+    v[layer] = v[layer].saturating_add(flops);
+}
+
+/// Cumulative per-layer measured FLOPs, index = layer (last entry = the
+/// lm-head pseudo-layer). Empty until the first counted pass.
+pub fn layer_snapshot() -> Vec<u64> {
+    lock_layers().clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_and_split_arithmetic() {
+        let a = Counts { flops: 10, bytes: 100 };
+        let b = Counts { flops: 4, bytes: 40 };
+        assert_eq!(b.delta_since(&a), Counts::default(), "saturates below zero");
+        assert_eq!(a.delta_since(&b), Counts { flops: 6, bytes: 60 });
+
+        // Shares sum exactly to the total, remainder to the largest.
+        let (p, d, v) = split_three(10, 1, 1, 1);
+        assert_eq!(p + d + v, 10);
+        assert_eq!(p, 4, "remainder lands on prefill when it ties for largest");
+        assert_eq!(split_three(7, 0, 0, 0), (0, 7, 0), "no rows → decode");
+        let (p, d, v) = split_three(100, 0, 1, 3);
+        assert_eq!((p, d, v), (0, 25, 75));
+    }
+
+    #[test]
+    fn attribute_pass_accumulates_by_row_kind() {
+        let mut f = FlopPhases::default();
+        f.attribute_pass(Counts { flops: 90, bytes: 9 }, 1, 1, 1);
+        assert_eq!(f.prefill.flops, 30);
+        assert_eq!(f.decode.flops, 30);
+        assert_eq!(f.verify.flops, 30);
+        assert_eq!(f.total().flops, 90);
+        assert_eq!(f.total().bytes, 9);
+        f.draft.flops += 10;
+        assert_eq!(f.total().flops, 100);
+        let base = FlopPhases::default();
+        assert_eq!(f.delta_since(&base), f);
+        assert!(f.delta_since(&f).is_zero());
+    }
+
+    // ONE lock shared by every test that mutates the global switch or
+    // asserts on global deltas — separate locks would let `set_enabled`
+    // race the fold test's adds. Exact-count assertions still can't run
+    // here: other tests in this binary drive kernels concurrently, so
+    // global deltas are lower bounds (the exact conservation laws live in
+    // `tests/test_measured_flops.rs`, a binary that serializes fully).
+    static GLOBAL_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn thread_slots_fold_without_losing_counts() {
+        let _g = GLOBAL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let before = snapshot();
+        add(5, 50);
+        let spawned: Vec<_> = (0..4)
+            .map(|_| std::thread::spawn(|| add(100, 1000)))
+            .collect();
+        for h in spawned {
+            h.join().unwrap();
+        }
+        let d = snapshot().delta_since(&before);
+        assert!(d.flops >= 405, "dead-thread folds lost adds: {}", d.flops);
+        assert!(d.bytes >= 4050, "dead-thread folds lost bytes: {}", d.bytes);
+    }
+
+    #[test]
+    fn layer_vector_grows_and_accumulates() {
+        let before = layer_snapshot();
+        let at = |v: &[u64], i: usize| v.get(i).copied().unwrap_or(0);
+        add_layer(2, 7);
+        add_layer(0, 3);
+        add_layer(2, 1);
+        let after = layer_snapshot();
+        assert!(after.len() >= 3);
+        assert!(at(&after, 0) - at(&before, 0) >= 3);
+        assert!(at(&after, 2) - at(&before, 2) >= 8);
+    }
+
+    #[test]
+    fn disabled_counters_stand_still() {
+        let _g = GLOBAL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        set_enabled(false);
+        let before = SLOT.with(|s| s.0.flops.load(Ordering::Relaxed));
+        add(1_000, 1_000);
+        let after = SLOT.with(|s| s.0.flops.load(Ordering::Relaxed));
+        set_enabled(true);
+        // This thread's own slot is immune to other tests' adds.
+        assert_eq!(after, before, "disabled adds must not count");
+    }
+}

@@ -10,6 +10,13 @@
 //! Conventions: a dense linear `o×i` costs `2·o·i` FLOPs per token
 //! (multiply + add). Adaptive components report *expected* FLOPs under the
 //! calibration distribution (the paper's constraint `E_x[‖m(x)‖₀] = r`).
+//!
+//! The analytic formulas here are the *prediction*; [`measured`] holds the
+//! kernel-level counters that record what the engine actually executed, and
+//! the `serving_flops` bench plus the conservation tests pin the two
+//! against each other.
+
+pub mod measured;
 
 /// FLOPs of a dense linear layer per token.
 pub fn linear(o: usize, i: usize) -> f64 {
@@ -195,6 +202,32 @@ pub fn decode_flops(
     out
 }
 
+/// Undivided sibling of [`decode_flops`]: the *total* FLOPs to decode
+/// `seq_len` tokens (context grows 1..=seq_len), without the per-token
+/// averaging — the quantity the measured counters accumulate over a full
+/// sequence, so conservation tests can compare exactly.
+pub fn decode_flops_sum(
+    per_block: impl Fn(usize) -> BlockFlops, // ctx → per-layer flops
+    n_layers: usize,
+    d: usize,
+    vocab: usize,
+    seq_len: usize,
+) -> f64 {
+    let mut total = 0.0;
+    for ctx in 1..=seq_len {
+        let b = per_block(ctx);
+        total += n_layers as f64
+            * (b.mlp.total()
+                + b.attn.qkv.total()
+                + b.attn.out_proj
+                + b.attn.attention
+                + b.attn.rope
+                + b.norms);
+        total += linear(vocab, d);
+    }
+    total
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -236,6 +269,19 @@ mod tests {
         assert!((adapted.compression_vs(&dense) - 0.42).abs() < 1e-12);
         assert!((adapted.mlp_compression_vs(&dense) - 0.5).abs() < 1e-12);
         assert!((adapted.qkv_compression_vs(&dense) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decode_flops_sum_is_undivided_average() {
+        let d = 32;
+        let per_block = |ctx: usize| BlockFlops {
+            attn: AttnFlops::dense(d, ctx),
+            mlp: MlpFlops::dense_swiglu(d, 4 * d),
+            norms: 0.0,
+        };
+        let avg = decode_flops(per_block, 3, d, 50, 24);
+        let sum = decode_flops_sum(per_block, 3, d, 50, 24);
+        assert!((sum - avg.total * 24.0).abs() < 1e-6 * sum);
     }
 
     #[test]

@@ -276,6 +276,8 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         prefill_chunk: args.get_usize("prefill-chunk", defaults.prefill_chunk),
         slo_ttft_ms: args.get_opt("slo-ttft-ms").and_then(|s| s.parse().ok()),
         slo_itl_ms: args.get_opt("slo-itl-ms").and_then(|s| s.parse().ok()),
+        metrics_addr: args.get_opt("metrics-addr").map(String::from),
+        trace_ring: args.get_usize("trace-ring", defaults.trace_ring),
     };
     rana::coordinator::serve(cfg)
 }

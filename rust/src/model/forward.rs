@@ -18,6 +18,7 @@
 use super::config::{Arch, ModelConfig};
 use super::ops;
 use super::weights::ModelWeights;
+use crate::flops::measured::{self, FlopPhases};
 use crate::kvcache::CacheError;
 use crate::tensor::{attention_over_cache, Mat};
 use crate::trace::{PhaseTotals, SeqBatchEvent, SEQ_EVENT_BUF_CAP};
@@ -154,9 +155,15 @@ impl Model {
             Arch::SwiGlu => {
                 let up = l.up.apply(x);
                 let gate = l.gate.as_ref().unwrap().apply(x);
+                // Same activation books as `ops::mlp_activate` (SwiGlu: 2·h).
+                measured::add(2 * up.len() as u64, 12 * up.len() as u64);
                 up.iter().zip(&gate).map(|(&u, &g)| u * ops::silu(g)).collect()
             }
-            Arch::GeluNeoX => l.up.apply(x).iter().map(|&v| ops::gelu(v)).collect(),
+            Arch::GeluNeoX => {
+                let up = l.up.apply(x);
+                measured::add(up.len() as u64, 8 * up.len() as u64);
+                up.iter().map(|&v| ops::gelu(v)).collect()
+            }
         };
         l.down.apply(&inter)
     }
@@ -513,6 +520,12 @@ pub(super) fn decode_step_body<B: BlockOps>(
         xs.row_mut(r).copy_from_slice(w.embed.row(tok as usize));
     }
 
+    // Per-layer measured-FLOP attribution: diff the process-global counter
+    // around each layer (and the lm-head tail). Off the compute path — the
+    // arithmetic below is identical whether or not counters are enabled.
+    let track = measured::enabled();
+    let mut f_prev = if track { measured::flops_now() } else { 0 };
+
     for layer in 0..cfg.n_layers {
         let lw = &w.layers[layer];
         let mut h1 = Mat::zeros(n, cfg.d_model);
@@ -564,13 +577,24 @@ pub(super) fn decode_step_body<B: BlockOps>(
                 }
             }
         }
+        if track {
+            let now = measured::flops_now();
+            measured::add_layer(layer, now.saturating_sub(f_prev));
+            f_prev = now;
+        }
     }
 
     let mut hf = Mat::zeros(n, cfg.d_model);
     for r in 0..n {
         hf.row_mut(r).copy_from_slice(&norm_tok(&cfg, &w.final_norm, xs.row(r)));
     }
-    w.lm_head.apply_tok_batch(&hf)
+    let logits = w.lm_head.apply_tok_batch(&hf);
+    if track {
+        // Pseudo-layer `n_layers` books the lm-head (plus the uncounted
+        // final norm, which contributes zero by convention).
+        measured::add_layer(cfg.n_layers, measured::flops_now().saturating_sub(f_prev));
+    }
+    logits
 }
 
 /// Everything one decode sequence needs beyond its prompt: how many tokens
@@ -641,6 +665,9 @@ struct SeqState {
     last_logits: Vec<f32>,
     cache: KvCache,
     done: bool,
+    /// Measured FLOPs attributed to this sequence (its share of every
+    /// engine pass it rode, split proportionally by row count).
+    flops: u64,
 }
 
 /// A retired sequence returned by [`DecodeBatch::retire_finished`].
@@ -648,6 +675,8 @@ pub struct FinishedSeq {
     pub id: u64,
     pub prompt: Vec<u32>,
     pub generated: Vec<u32>,
+    /// Measured FLOPs attributed to this sequence over its lifetime.
+    pub flops: u64,
 }
 
 /// Iteration-level batched greedy decoder: up to `capacity` in-flight
@@ -690,6 +719,9 @@ pub struct DecodeBatch {
     /// Wall-clock split of the engine passes (timing only — never read by
     /// the schedule).
     phases: PhaseTotals,
+    /// Measured FLOP/byte split of the engine passes, attributed to phases
+    /// by the same row-kind rule as `phases` (observability only).
+    flops: FlopPhases,
     /// Structural per-sequence events since the last drain (prefill chunks,
     /// settled speculation rounds), bounded by [`SEQ_EVENT_BUF_CAP`].
     seq_events: Vec<(u64, SeqBatchEvent)>,
@@ -710,6 +742,7 @@ impl DecodeBatch {
             accepted_tokens: 0,
             spec_rollbacks: 0,
             phases: PhaseTotals::default(),
+            flops: FlopPhases::default(),
             seq_events: Vec::new(),
         }
     }
@@ -735,6 +768,12 @@ impl DecodeBatch {
     /// Running per-phase wall-clock totals (sessions report deltas upward).
     pub fn phase_stats(&self) -> PhaseTotals {
         self.phases
+    }
+
+    /// Running per-phase measured FLOP/byte totals (sessions report deltas
+    /// upward, mirroring [`DecodeBatch::phase_stats`]).
+    pub fn flop_stats(&self) -> FlopPhases {
+        self.flops
     }
 
     /// Structural per-sequence events since the last drain.
@@ -794,6 +833,7 @@ impl DecodeBatch {
             last_logits: Vec::new(),
             cache: KvCache::new(&self.cfg),
             done,
+            flops: 0,
         });
         Some(id)
     }
@@ -938,6 +978,7 @@ impl DecodeBatch {
             (0..plan.len()).map(|_| Vec::new()).collect();
         if plan.iter().any(|p| p.k > 0) {
             let t_draft = std::time::Instant::now();
+            let f_draft0 = measured::enabled().then(measured::snapshot);
             let draft_rate = self.spec.draft_rate;
             let mut j = 0;
             loop {
@@ -994,11 +1035,31 @@ impl DecodeBatch {
                 }
             }
             self.phases.spec_draft_us += t_draft.elapsed().as_micros() as u64;
+            if let Some(base) = f_draft0 {
+                // Draft-phase measured compute; per-sequence shares split
+                // proportionally by draft length (u128 to avoid overflow).
+                let delta = measured::snapshot().delta_since(&base);
+                self.flops.draft += delta;
+                let total_k: u64 = plan.iter().map(|p| p.k as u64).sum();
+                if total_k > 0 && delta.flops > 0 {
+                    for p in &plan {
+                        if p.k == 0 {
+                            continue;
+                        }
+                        let share =
+                            (delta.flops as u128 * p.k as u128 / total_k as u128) as u64;
+                        if let Some(s) = self.slots[p.idx].as_mut() {
+                            s.flops += share;
+                        }
+                    }
+                }
+            }
         }
 
         // --- 3. One full-budget pass over all rows: plain/prefill rows
         // feed one token, speculating rows feed x0 + their drafts.
         let t_pass = std::time::Instant::now();
+        let f_pass0 = measured::enabled().then(measured::snapshot);
         let logits = loop {
             if plan.is_empty() {
                 return 0;
@@ -1065,6 +1126,24 @@ impl DecodeBatch {
             let verify_rows: u64 = plan.iter().map(|p| p.k as u64).sum();
             let decode_rows = plan.iter().filter(|p| !p.prefill).count() as u64;
             self.phases.attribute_pass(pass_us, prefill_rows, decode_rows, verify_rows);
+            if let Some(base) = f_pass0 {
+                // Measured compute of the shared pass: same row-kind split
+                // as the timing above, plus per-sequence shares by row count.
+                let delta = measured::snapshot().delta_since(&base);
+                self.flops.attribute_pass(delta, prefill_rows, decode_rows, verify_rows);
+                let total_rows: u64 =
+                    plan.iter().map(|p| (p.toks.len() + p.k) as u64).sum();
+                if total_rows > 0 && delta.flops > 0 {
+                    for p in &plan {
+                        let share = (delta.flops as u128
+                            * (p.toks.len() + p.k) as u128
+                            / total_rows as u128) as u64;
+                        if let Some(s) = self.slots[p.idx].as_mut() {
+                            s.flops += share;
+                        }
+                    }
+                }
+            }
         }
 
         // --- 4. Record logits; accept/roll back speculation rounds.
@@ -1149,7 +1228,12 @@ impl DecodeBatch {
         for slot in &mut self.slots {
             if slot.as_ref().map(|s| s.done).unwrap_or(false) {
                 let s = slot.take().expect("checked above");
-                out.push(FinishedSeq { id: s.id, prompt: s.prompt, generated: s.generated });
+                out.push(FinishedSeq {
+                    id: s.id,
+                    prompt: s.prompt,
+                    generated: s.generated,
+                    flops: s.flops,
+                });
             }
         }
         out

@@ -3,6 +3,7 @@
 //! exactly (tested against exported JAX goldens in `rust/tests/`).
 
 use super::config::Arch;
+use crate::flops::measured;
 use crate::tensor::Mat;
 
 /// RMSNorm: `x / sqrt(mean(x²) + eps) * scale`.
@@ -49,6 +50,12 @@ pub fn sigmoid(x: f32) -> f32 {
 /// `up` alone. Shared by the sequence and batched-decode MLP paths of the
 /// dense model and the RaNA adapters.
 pub fn mlp_activate(arch: Arch, up: &mut Mat, gate: Option<&Mat>) {
+    // 2 FLOPs/element with a gate, 1 without — `MlpFlops::{dense_swiglu,
+    // dense_gelu}.act` at batch width `rows`.
+    match arch {
+        Arch::SwiGlu => measured::add(2 * up.data.len() as u64, 12 * up.data.len() as u64),
+        Arch::GeluNeoX => measured::add(up.data.len() as u64, 8 * up.data.len() as u64),
+    }
     match arch {
         Arch::SwiGlu => {
             let gate = gate.expect("swiglu activation needs a gate");
@@ -248,6 +255,9 @@ pub fn rope_in_place(v: &mut [f32], pos: usize, theta: f32) {
 
 /// Apply RoPE to every head of a packed `[n_heads * head_dim]` vector.
 pub fn rope_heads(v: &mut [f32], n_heads: usize, pos: usize, theta: f32) {
+    // 2·d per call; q and k each take one call per token, matching
+    // `AttnFlops::dense`'s rope = 4·d.
+    measured::add(2 * v.len() as u64, 8 * v.len() as u64);
     let hd = v.len() / n_heads;
     for h in 0..n_heads {
         rope_in_place(&mut v[h * hd..(h + 1) * hd], pos, theta);
@@ -259,6 +269,9 @@ pub fn rope_heads(v: &mut [f32], n_heads: usize, pos: usize, theta: f32) {
 pub fn causal_attention_seq(q: &Mat, k: &Mat, v: &Mat, n_heads: usize) -> Mat {
     let t = q.rows;
     let d = q.cols;
+    // Σ_{qi} 4·d·(qi+1) = 2·d·t·(t+1): the sequence-path sum of the
+    // per-token attention cost model.
+    measured::add(2 * (d * t * (t + 1)) as u64, 4 * (3 * t * d) as u64);
     let hd = d / n_heads;
     let scale = 1.0 / (hd as f32).sqrt();
     let mut out = Mat::zeros(t, d);
@@ -293,6 +306,8 @@ pub fn causal_attention_step(
 ) -> Vec<f32> {
     let ctx = k_cache.rows;
     let d = q.len();
+    // Same per-token cost model as `tensor::attention_over_cache`.
+    measured::add(4 * (d * ctx) as u64, 4 * (2 * d * ctx + 2 * d) as u64);
     let hd = d / n_heads;
     let scale = 1.0 / (hd as f32).sqrt();
     let mut out = vec![0.0f32; d];

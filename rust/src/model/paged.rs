@@ -29,6 +29,7 @@ use std::collections::VecDeque;
 use super::config::ModelConfig;
 use super::forward::{decode_step_body, BlockOps, FinishedSeq, SeqSpec, AMBIENT_BUDGET};
 use super::ops;
+use crate::flops::measured::{self, FlopPhases};
 use crate::kvcache::{BlockPool, CacheError, PagedKvCache, PrefixTrie};
 use crate::tensor::{attention_over_paged, Mat};
 use crate::trace::{PhaseTotals, SeqBatchEvent, SEQ_EVENT_BUF_CAP};
@@ -177,6 +178,9 @@ struct PagedSeqState {
     done: bool,
     /// Prompt's full blocks have been published to the trie.
     prompt_in_trie: bool,
+    /// Measured FLOPs attributed to this sequence (its share of every
+    /// engine pass it rode, split proportionally by row count).
+    flops: u64,
 }
 
 impl PagedSeqState {
@@ -232,6 +236,9 @@ pub struct PagedDecodeBatch {
     /// Wall-clock split of the engine passes (timing only — never read by
     /// the schedule).
     phases: PhaseTotals,
+    /// Measured FLOP/byte split of the engine passes, attributed to phases
+    /// by the same row-kind rule as `phases` (observability only).
+    flops: FlopPhases,
     /// Structural per-sequence events since the last drain (prefill chunks,
     /// spec rounds, preempt/readmit), bounded by [`SEQ_EVENT_BUF_CAP`].
     seq_events: Vec<(u64, SeqBatchEvent)>,
@@ -262,6 +269,7 @@ impl PagedDecodeBatch {
             accepted_tokens: 0,
             spec_rollbacks: 0,
             phases: PhaseTotals::default(),
+            flops: FlopPhases::default(),
             seq_events: Vec::new(),
         }
     }
@@ -286,6 +294,12 @@ impl PagedDecodeBatch {
     /// Running per-phase wall-clock totals (sessions report deltas upward).
     pub fn phase_stats(&self) -> PhaseTotals {
         self.phases
+    }
+
+    /// Running per-phase measured FLOP/byte totals (sessions report deltas
+    /// upward, mirroring [`PagedDecodeBatch::phase_stats`]).
+    pub fn flop_stats(&self) -> FlopPhases {
+        self.flops
     }
 
     /// Structural per-sequence events since the last drain.
@@ -400,6 +414,7 @@ impl PagedDecodeBatch {
             cache: PagedKvCache::new(),
             done,
             prompt_in_trie: false,
+            flops: 0,
         };
         if !done {
             let force = self.live_count() == 0 && self.preempted.is_empty();
@@ -439,6 +454,7 @@ impl PagedDecodeBatch {
                 id: s.id,
                 prompt: s.prompt,
                 generated: s.generated,
+                flops: s.flops,
             });
             return true;
         }
@@ -608,6 +624,7 @@ impl PagedDecodeBatch {
             (0..plan.len()).map(|_| Vec::new()).collect();
         if plan.iter().any(|p| p.k > 0) {
             let t_draft = std::time::Instant::now();
+            let f_draft0 = measured::enabled().then(measured::snapshot);
             let draft_rate = self.spec.draft_rate;
             let mut j = 0;
             loop {
@@ -666,6 +683,25 @@ impl PagedDecodeBatch {
                 }
             }
             self.phases.spec_draft_us += t_draft.elapsed().as_micros() as u64;
+            if let Some(base) = f_draft0 {
+                // Draft-phase measured compute; per-sequence shares split
+                // proportionally by draft length (u128 to avoid overflow).
+                let delta = measured::snapshot().delta_since(&base);
+                self.flops.draft += delta;
+                let total_k: u64 = plan.iter().map(|p| p.k as u64).sum();
+                if total_k > 0 && delta.flops > 0 {
+                    for p in &plan {
+                        if p.k == 0 {
+                            continue;
+                        }
+                        let share =
+                            (delta.flops as u128 * p.k as u128 / total_k as u128) as u64;
+                        if let Some(s) = self.slots[p.idx].as_mut() {
+                            s.flops += share;
+                        }
+                    }
+                }
+            }
         }
 
         // 3. Prepare every append window (alloc/COW): toks + k positions
@@ -745,6 +781,7 @@ impl PagedDecodeBatch {
         // unreachable after the guards above, but the contract stands: the
         // offending sequence retires; the pass retries with the rest.
         let t_pass = std::time::Instant::now();
+        let f_pass0 = measured::enabled().then(measured::snapshot);
         let logits = loop {
             if plan.is_empty() {
                 return 0;
@@ -806,6 +843,24 @@ impl PagedDecodeBatch {
             let verify_rows: u64 = plan.iter().map(|p| p.k as u64).sum();
             let decode_rows = plan.iter().filter(|p| !p.prefill).count() as u64;
             self.phases.attribute_pass(pass_us, prefill_rows, decode_rows, verify_rows);
+            if let Some(base) = f_pass0 {
+                // Measured compute of the shared pass: same row-kind split
+                // as the timing above, plus per-sequence shares by row count.
+                let delta = measured::snapshot().delta_since(&base);
+                self.flops.attribute_pass(delta, prefill_rows, decode_rows, verify_rows);
+                let total_rows: u64 =
+                    plan.iter().map(|p| (p.toks.len() + p.k) as u64).sum();
+                if total_rows > 0 && delta.flops > 0 {
+                    for p in &plan {
+                        let share = (delta.flops as u128
+                            * (p.toks.len() + p.k) as u128
+                            / total_rows as u128) as u64;
+                        if let Some(s) = self.slots[p.idx].as_mut() {
+                            s.flops += share;
+                        }
+                    }
+                }
+            }
         }
 
         // 5. Publish completed prefills' full prompt blocks; record logits
@@ -926,7 +981,12 @@ impl PagedDecodeBatch {
         for slot in &mut self.slots {
             if slot.as_ref().map(|s| s.done && owned(s.id)).unwrap_or(false) {
                 let s = slot.take().expect("checked above");
-                out.push(FinishedSeq { id: s.id, prompt: s.prompt, generated: s.generated });
+                out.push(FinishedSeq {
+                    id: s.id,
+                    prompt: s.prompt,
+                    generated: s.generated,
+                    flops: s.flops,
+                });
             }
         }
         out

@@ -23,6 +23,9 @@ use super::Mat;
 /// Lives in `tensor` so the contiguous and paged attention kernels share one
 /// implementation; `model::ops::softmax` re-exports it.
 pub fn softmax(x: &mut [f32]) {
+    // Bytes only: the analytic model books no FLOPs for softmax, and the
+    // measured counters mirror that convention exactly.
+    crate::flops::measured::add(0, 8 * x.len() as u64);
     super::kernels::kernel().softmax(x)
 }
 
@@ -31,6 +34,9 @@ pub fn softmax(x: &mut [f32]) {
 /// interleaved along the feature dimension.
 pub fn attention_over_cache(q: &[f32], k: &Mat, v: &Mat, ctx: usize, n_heads: usize) -> Vec<f32> {
     let d = q.len();
+    // Scores (2·hd·ctx) + value accumulation (2·hd·ctx) per head = 4·d·ctx,
+    // the same convention as `flops::AttnFlops::dense`.
+    crate::flops::measured::add(4 * (d * ctx) as u64, 4 * (2 * d * ctx + 2 * d) as u64);
     let hd = d / n_heads;
     let scale = 1.0 / (hd as f32).sqrt();
     let mut out = vec![0.0f32; d];
@@ -70,6 +76,9 @@ pub fn attention_over_paged(
         chain.len() * block_size
     );
     let d = q.len();
+    // Identical cost model to the contiguous kernel: paging changes row
+    // addressing, never the arithmetic.
+    crate::flops::measured::add(4 * (d * ctx) as u64, 4 * (2 * d * ctx + 2 * d) as u64);
     let hd = d / n_heads;
     let scale = 1.0 / (hd as f32).sqrt();
     let mut out = vec![0.0f32; d];

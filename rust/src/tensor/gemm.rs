@@ -36,6 +36,7 @@
 
 use super::kernels::{self, scale, Kernel};
 use super::Mat;
+use crate::flops::measured;
 use crate::util::pool::{default_parallelism, parallel_chunks};
 
 pub use super::kernels::{MR, NR};
@@ -106,6 +107,7 @@ pub fn gemv_into(out: &mut [f32], x: &[f32], b: &Mat, alpha: f32, beta: f32) {
 }
 
 fn gemv_slices(out: &mut [f32], x: &[f32], b: &[f32], k: usize, n: usize, alpha: f32, beta: f32) {
+    measured::add(2 * (k * n) as u64, 4 * (k * n + k + n) as u64);
     kernels::kernel().gemv(out, x, b, k, n, alpha, beta);
 }
 
@@ -117,6 +119,7 @@ fn gemv_slices(out: &mut [f32], x: &[f32], b: &[f32], k: usize, n: usize, alpha:
 pub fn matvec_into(out: &mut [f32], w: &Mat, x: &[f32]) {
     assert_eq!(x.len(), w.cols, "matvec shape mismatch");
     assert_eq!(out.len(), w.rows, "matvec out len");
+    measured::add(2 * (w.rows * w.cols) as u64, 4 * (w.rows * w.cols + w.cols + w.rows) as u64);
     let kern = kernels::kernel();
     if w.rows * w.cols >= 1 << 20 {
         let out_ptr = SendPtr(out.as_mut_ptr());
@@ -158,6 +161,38 @@ pub fn gemv_batch(
     alpha: f32,
     beta: f32,
 ) {
+    gemv_batch_impl(m, k, n, a, b, out, alpha, beta, true)
+}
+
+/// [`gemv_batch`] without the measured-FLOP adds — for callers that already
+/// counted this product at a higher composition level (the masked-GEMM
+/// dense fallback counts its *active* coefficients at the mask site).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemv_batch_uncounted(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    alpha: f32,
+    beta: f32,
+) {
+    gemv_batch_impl(m, k, n, a, b, out, alpha, beta, false)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemv_batch_impl(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    alpha: f32,
+    beta: f32,
+    count: bool,
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
@@ -174,6 +209,9 @@ pub fn gemv_batch(
     let out_ptr = SendPtr(out.as_mut_ptr());
     let kern = kernels::kernel();
     if blocks < 2 || m * k * n < (1 << 18) {
+        if count {
+            measured::add(2 * (m * k * n) as u64, 4 * (m * k + k * n + m * n) as u64);
+        }
         // SAFETY: single caller owns the whole output.
         unsafe { kern.gemv_batch_stripe(m, k, n, a, b, out_ptr.0, alpha, beta, 0, n) };
         return;
@@ -183,6 +221,11 @@ pub fn gemv_batch(
         for blk in range {
             let c0 = blk * CB;
             let c1 = (c0 + CB).min(n);
+            if count {
+                // Per-stripe adds sum exactly to 2·m·k·n across workers.
+                let w = c1 - c0;
+                measured::add(2 * (m * k * w) as u64, 4 * (m * k + (k + m) * w) as u64);
+            }
             // SAFETY: column stripes [c0, c1) are disjoint across workers.
             unsafe { kern.gemv_batch_stripe(m, k, n, a, b, out_ptr.0, alpha, beta, c0, c1) };
         }
@@ -206,6 +249,12 @@ pub fn gemm_rows_axpy(
     let out_ptr = SendPtr(out.as_mut_ptr());
     let kern = kernels::kernel();
     parallel_chunks(m, 8, |range| {
+        // Nominal 2·rows·k·n per chunk: the `av != 0` skip below is an
+        // implementation shortcut, not FLOP savings the schedule planned.
+        measured::add(
+            2 * (range.len() * k * n) as u64,
+            4 * (range.len() * (k + 2 * n) + k * n) as u64,
+        );
         let out_ptr = &out_ptr;
         for r in range {
             // SAFETY: each row of `out` is written by exactly one chunk.
@@ -299,6 +348,12 @@ pub fn gemm_packed_with(
             for blk in range {
                 let i0 = blk * mc_block;
                 let mc = mc_block.min(m - i0);
+                // Unpadded dims, so row-block × depth-block adds sum
+                // exactly to 2·m·k·n over the whole product.
+                measured::add(
+                    2 * (mc * kc * n) as u64,
+                    4 * (mc * kc + kc * n + mc * n) as u64,
+                );
                 let mr_panels = mc.div_ceil(MR);
                 let mut ap = vec![0.0f32; mr_panels * MR * kc];
                 for p in 0..mr_panels {

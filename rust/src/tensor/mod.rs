@@ -20,6 +20,7 @@ pub mod linalg;
 
 pub use attention::{attention_over_cache, attention_over_paged};
 
+use crate::flops::measured;
 use crate::util::rng::Xoshiro256;
 
 /// Dense row-major f32 matrix.
@@ -207,9 +208,16 @@ pub fn masked_acc_gemv(at: &Mat, mask: &[bool], c: &[f32], out: &mut [f32]) {
     // Dense fallback: a fully-active mask is just an accumulating GEMV, so
     // route it through the gemm subsystem (no per-row branch).
     if mask.iter().all(|&m| m) {
-        gemm::gemv_into(out, c, at, 1.0, 1.0);
+        gemm::gemv_into(out, c, at, 1.0, 1.0); // counted as a dense GEMV
         return;
     }
+    // Measured work is proportional to *active* rows — the FLOP saving the
+    // masked kernel realizes is exactly what the counters must reflect.
+    let active = mask.iter().filter(|&&m| m).count();
+    measured::add(
+        2 * (active * at.cols) as u64,
+        4 * (active * at.cols + at.rows + at.cols) as u64,
+    );
     kernels::kernel().masked_acc(&at.data, at.cols, mask, c, out);
 }
 
@@ -217,6 +225,10 @@ pub fn masked_acc_gemv(at: &Mat, mask: &[bool], c: &[f32], out: &mut [f32]) {
 /// masks amortize the branch when one mask feeds several products).
 pub fn indexed_acc_gemv(at: &Mat, active: &[usize], c: &[f32], out: &mut [f32]) {
     debug_assert_eq!(at.cols, out.len());
+    measured::add(
+        2 * (active.len() * at.cols) as u64,
+        4 * (active.len() * (at.cols + 1) + at.cols) as u64,
+    );
     let kern = kernels::kernel();
     for &i in active {
         kern.axpy(c[i], at.row(i), out);
@@ -229,6 +241,11 @@ pub fn indexed_acc_gemv(at: &Mat, active: &[usize], c: &[f32], out: &mut [f32]) 
 pub fn masked_rows_gemv(w: &Mat, mask: &[bool], x: &[f32], out: &mut [f32]) {
     debug_assert_eq!(w.rows, mask.len());
     debug_assert_eq!(w.rows, out.len());
+    let n_active = mask.iter().filter(|&&m| m).count();
+    measured::add(
+        2 * (n_active * w.cols) as u64,
+        4 * (n_active * w.cols + w.cols + w.rows) as u64,
+    );
     let kern = kernels::kernel();
     for i in 0..w.rows {
         out[i] = if mask[i] { kern.dot(w.row(i), x) } else { 0.0 };
@@ -256,6 +273,14 @@ pub fn masked_acc_gemm(at: &Mat, mask: &[bool], c: &Mat, out: &mut Mat) {
         return;
     }
     let active = mask.iter().filter(|&&m| m).count();
+    // Count active coefficients once here, for *both* dispatch paths — the
+    // dense fallback zeroes masked entries and relies on the batched GEMV's
+    // `av != 0` skip, so its honest work is the active count too (the
+    // uncounted inner entry avoids double-charging the nominal 2·B·d·o).
+    measured::add(
+        2 * (active * at.cols) as u64,
+        4 * (active * at.cols + c.rows * at.cols) as u64 + mask.len() as u64,
+    );
     if 2 * active >= mask.len() {
         let mut mc = c.clone();
         for (v, &m) in mc.data.iter_mut().zip(mask) {
@@ -263,7 +288,16 @@ pub fn masked_acc_gemm(at: &Mat, mask: &[bool], c: &Mat, out: &mut Mat) {
                 *v = 0.0;
             }
         }
-        gemm::gemv_batch(c.rows, c.cols, at.cols, &mc.data, &at.data, &mut out.data, 1.0, 1.0);
+        gemm::gemv_batch_uncounted(
+            c.rows,
+            c.cols,
+            at.cols,
+            &mc.data,
+            &at.data,
+            &mut out.data,
+            1.0,
+            1.0,
+        );
         return;
     }
     let kern = kernels::kernel();

@@ -158,6 +158,12 @@ pub struct TimelineSummary {
     pub readmits: u64,
     pub events: Vec<TimelineEvent>,
     pub events_dropped: u64,
+    /// Measured multiply-add FLOPs attributed to this request (0 when the
+    /// kernel counters are disabled).
+    pub flops: u64,
+    /// Fraction of the dense-baseline FLOPs this request saved via adapters
+    /// (`None` when counters were off or no baseline was computable).
+    pub flops_saved_frac: Option<f64>,
 }
 
 impl TimelineSummary {
@@ -213,6 +219,11 @@ impl TimelineSummary {
             ("readmits", Json::Num(self.readmits as f64)),
             ("events", Json::Arr(events)),
             ("events_dropped", Json::Num(self.events_dropped as f64)),
+            ("flops", Json::Num(self.flops as f64)),
+            (
+                "flops_saved_frac",
+                self.flops_saved_frac.map(Json::Num).unwrap_or(Json::Null),
+            ),
         ])
     }
 }
@@ -235,6 +246,8 @@ struct TimelineState {
     readmits: u64,
     events: Vec<TimelineEvent>,
     events_dropped: u64,
+    flops: u64,
+    flops_saved_frac: Option<f64>,
 }
 
 impl TimelineState {
@@ -266,6 +279,8 @@ impl TimelineState {
             readmits: self.readmits,
             events: self.events.clone(),
             events_dropped: self.events_dropped,
+            flops: self.flops,
+            flops_saved_frac: self.flops_saved_frac,
         }
     }
 }
@@ -308,6 +323,8 @@ impl RequestTimeline {
             readmits: 0,
             events: Vec::new(),
             events_dropped: 0,
+            flops: 0,
+            flops_saved_frac: None,
         };
         st.push_event(enabled, EventKind::Enqueue, enqueue_us, 0);
         RequestTimeline { tracer, inner: Arc::new(Mutex::new(st)) }
@@ -352,6 +369,15 @@ impl RequestTimeline {
         }
         st.last_token_us = Some(ts);
         mark
+    }
+
+    /// Stamp the measured FLOPs attributed to this request and its savings
+    /// fraction against the analytic dense baseline. Called once when the
+    /// session retires the sequence; last call wins.
+    pub fn set_flops(&self, flops: u64, saved_frac: Option<f64>) {
+        let mut st = lock_recover(&self.inner);
+        st.flops = flops;
+        st.flops_saved_frac = saved_frac;
     }
 
     /// Record a structural event forwarded from the batch layer.
@@ -420,6 +446,11 @@ impl RequestTimeline {
                 "sched_class",
                 s.sched_class.as_deref().map(Json::str).unwrap_or(Json::Null),
             ),
+            ("flops", Json::Num(s.flops as f64)),
+            (
+                "flops_saved_frac",
+                s.flops_saved_frac.map(Json::Num).unwrap_or(Json::Null),
+            ),
         ])
     }
 }
@@ -450,6 +481,11 @@ impl Tracer {
 
     pub fn set_enabled(&self, on: bool) {
         self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Configured ring capacity (summaries retained / max `trace` op window).
+    pub fn cap(&self) -> usize {
+        self.cap
     }
 
     pub fn now_us(&self) -> u64 {
@@ -657,6 +693,26 @@ mod tests {
                 assert!(e.get_f64("dur").is_ok());
             }
         }
+    }
+
+    #[test]
+    fn flops_stamp_round_trips_through_timing() {
+        let tracer = Arc::new(Tracer::new(4));
+        let tl = finished_timeline(&tracer, "r1", 2);
+        let timing = tl.timing_json();
+        assert_eq!(timing.get_f64("flops").unwrap(), 0.0, "unstamped timeline reports 0");
+        assert!(matches!(timing.get("flops_saved_frac").unwrap(), Json::Null));
+        tl.set_flops(12_345, Some(0.4));
+        let timing = tl.timing_json();
+        assert_eq!(timing.get_f64("flops").unwrap(), 12_345.0);
+        assert!((timing.get_f64("flops_saved_frac").unwrap() - 0.4).abs() < 1e-12);
+        assert_eq!(tl.summary().flops, 12_345);
+    }
+
+    #[test]
+    fn tracer_reports_configured_cap() {
+        assert_eq!(Tracer::new(7).cap(), 7);
+        assert_eq!(Tracer::new(0).cap(), 1, "cap clamps to at least one slot");
     }
 
     #[test]

@@ -1,0 +1,209 @@
+//! Conservation laws for the measured compute counters (DESIGN.md §2i):
+//! a dense decode's measured FLOPs equal the analytic cost model
+//! *exactly*; adapted tiers track the runtime schedule's analytic
+//! prediction within 5%; measured work shrinks monotonically in the
+//! budget rate; and the per-layer / per-sequence attributions conserve
+//! the pass totals they split.
+//!
+//! The counters are process-global, so every test here serializes on one
+//! lock — this binary is the only place exact global-delta assertions are
+//! safe (the lib tests drive kernels concurrently).
+
+use std::sync::{Arc, Mutex};
+
+use rana::adapters::calibrate::{self, CalibOptions, ModelCalib};
+use rana::adapters::AdaptedModel;
+use rana::flops::measured;
+use rana::model::{Arch, DecodeBatch, Model, ModelConfig, ModelWeights};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn tiny_model(seed: u64) -> Arc<Model> {
+    let cfg = ModelConfig {
+        name: "tiny".into(),
+        arch: Arch::SwiGlu,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_hidden: 32,
+        vocab: 288,
+        max_seq: 64,
+        rope_theta: 10_000.0,
+        norm_eps: 1e-5,
+    };
+    let w = ModelWeights::random_init(&cfg, seed);
+    Arc::new(Model::new(cfg, w).unwrap())
+}
+
+fn calib_for(model: &Model, seed: u64) -> ModelCalib {
+    let tokens: Vec<u32> = (0..1000).map(|i| (i * 13 % 97) as u32).collect();
+    calibrate::collect(
+        model,
+        &tokens,
+        &CalibOptions { n_fit: 96, n_eval: 24, window: 24, seed },
+    )
+}
+
+fn prompts() -> Vec<Vec<u32>> {
+    vec![vec![1, 5, 9, 30, 2, 17], vec![8, 8, 1, 0, 63, 2]]
+}
+
+/// Decode `prompts` to completion through one [`DecodeBatch`]; returns
+/// (global measured delta, per-position total, finished sequences, batch
+/// phase totals, per-layer delta).
+fn run_batch(
+    b: &AdaptedModel,
+    n_gen: usize,
+) -> (measured::Counts, usize, Vec<rana::model::FinishedSeq>, measured::FlopPhases, Vec<u64>) {
+    let mut batch = DecodeBatch::new(&b.base.cfg, 2);
+    for p in prompts() {
+        batch.try_join(p, n_gen).unwrap();
+    }
+    let layers_before = measured::layer_snapshot();
+    let before = measured::snapshot();
+    while batch.has_work() {
+        batch.step(b);
+    }
+    let delta = measured::snapshot().delta_since(&before);
+    let layers_after = measured::layer_snapshot();
+    let at = |v: &[u64], i: usize| v.get(i).copied().unwrap_or(0);
+    let layer_delta: Vec<u64> = (0..layers_after.len())
+        .map(|i| at(&layers_after, i) - at(&layers_before, i))
+        .collect();
+    let finished = batch.retire_finished();
+    // Measured-convention positions: every forward pass except the final
+    // emitted token.
+    let positions: usize =
+        finished.iter().map(|f| (f.prompt.len() + f.generated.len()).saturating_sub(1)).sum();
+    (delta, positions, finished, batch.flop_stats(), layer_delta)
+}
+
+#[test]
+fn dense_pass_measured_flops_match_analytic_exactly() {
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let model = tiny_model(71);
+    let cfg = model.cfg.clone();
+    let dense = AdaptedModel::unadapted(Arc::clone(&model));
+    let n_gen = 6usize;
+    let (delta, _, finished, phases, layer_delta) = run_batch(&dense, n_gen);
+
+    // Integer-exact analytic sum under the measured conventions
+    // (norms/residuals/embeds/sampler = 0): per position at context `ctx`,
+    // per layer qkv 6d² + rope 4d + attention 4·d·ctx + out-proj 2d² +
+    // SwiGlu MLP 6dh + 2h; plus the lm-head 2·v·d (applied to every row,
+    // prefill included).
+    let (d, h, v, nl) = (cfg.d_model as u64, cfg.d_hidden as u64, cfg.vocab as u64, cfg.n_layers as u64);
+    let mut want = 0u64;
+    for f in &finished {
+        let steps = (f.prompt.len() + f.generated.len()).saturating_sub(1) as u64;
+        assert_eq!(f.generated.len(), n_gen, "dense decode must run to the length cap");
+        for ctx in 1..=steps {
+            want += nl * (6 * d * d + 4 * d + 4 * d * ctx + 2 * d * d + 6 * d * h + 2 * h);
+            want += 2 * v * d;
+        }
+    }
+    assert_eq!(delta.flops, want, "dense measured FLOPs must equal the cost model exactly");
+    assert!(delta.bytes > 0);
+
+    // Conservation of the attributions that split this same total.
+    let total = phases.total();
+    assert_eq!(total.flops, delta.flops, "batch phase totals must conserve the pass deltas");
+    assert!(phases.prefill.flops > 0 && phases.decode.flops > 0);
+    assert_eq!(phases.draft, measured::Counts::default(), "no speculation here");
+    let layer_sum: u64 = layer_delta.iter().sum();
+    assert_eq!(layer_sum, delta.flops, "per-layer attribution must partition the total");
+    assert!(layer_delta.len() >= cfg.n_layers + 1, "lm-head pseudo-layer present");
+    assert!(layer_delta[cfg.n_layers] > 0);
+    let seq_sum: u64 = finished.iter().map(|f| f.flops).sum();
+    assert!(seq_sum <= total.flops);
+    assert!(
+        total.flops - seq_sum <= 1_000,
+        "per-sequence shares lost more than rounding: {} vs {}",
+        seq_sum,
+        total.flops
+    );
+}
+
+#[test]
+fn adapted_tiers_track_analytic_within_5pct_and_shrink_monotonically() {
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let model = tiny_model(73);
+    let calib = calib_for(&model, 73);
+    let rates = [0.2, 0.35, 0.5];
+    let (runtime, _) = calibrate::adapt_runtime(Arc::clone(&model), &calib, &rates, 32, 73);
+    let n_gen = 20usize;
+
+    let mut per_position = Vec::new();
+    for &rate in [0.0].iter().chain(rates.iter()) {
+        runtime.set_budget(rate);
+        let (delta, positions, finished, _, _) = run_batch(&runtime, n_gen);
+        assert!(positions > 0);
+        per_position.push(delta.flops as f64 / positions as f64);
+        if rate > 0.0 {
+            let analytic: f64 = finished
+                .iter()
+                .map(|f| {
+                    let steps = (f.prompt.len() + f.generated.len()).saturating_sub(1);
+                    runtime.runtime_decode_flops(steps, rate)
+                })
+                .sum();
+            let rel = (delta.flops as f64 - analytic).abs() / analytic;
+            assert!(
+                rel <= 0.05,
+                "rate {rate}: measured {} vs analytic {analytic} ({:.1}% off)",
+                delta.flops,
+                rel * 100.0
+            );
+        } else {
+            let analytic: f64 = finished
+                .iter()
+                .map(|f| {
+                    let steps = (f.prompt.len() + f.generated.len()).saturating_sub(1);
+                    runtime.measured_dense_flops(steps)
+                })
+                .sum();
+            assert_eq!(delta.flops, analytic as u64, "budget 0 serves the dense base exactly");
+        }
+    }
+    runtime.set_budget(0.0);
+    // Deeper compression must never cost more measured work per position
+    // (tiny slack for the stochastic masker keep counts).
+    for w in per_position.windows(2) {
+        assert!(
+            w[1] <= w[0] * 1.01,
+            "measured FLOPs/position not monotone in budget: {per_position:?}"
+        );
+    }
+    // And the deepest tier must be a real saving, not noise.
+    assert!(
+        per_position[rates.len()] < 0.95 * per_position[0],
+        "0.5 budget saved <5% vs dense: {per_position:?}"
+    );
+}
+
+#[test]
+fn parallel_gemv_stripe_counts_sum_exactly_across_pool_threads() {
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    // m·k·n ≥ 2^18 with ≥2 column stripes forces the work-stealing pool
+    // path: per-stripe adds land on worker-thread slots and must fold to
+    // exactly 2·m·k·n.
+    let (m, k, n) = (4usize, 128usize, 512usize);
+    let a = vec![1.0f32; m * k];
+    let b = vec![0.5f32; k * n];
+    let mut out = vec![0.0f32; m * n];
+    let before = measured::snapshot();
+    rana::tensor::gemm::gemv_batch(m, k, n, &a, &b, &mut out, 1.0, 0.0);
+    let delta = measured::snapshot().delta_since(&before);
+    assert_eq!(delta.flops, 2 * (m * k * n) as u64, "stripe adds must sum to 2·m·k·n");
+    assert!(delta.bytes > 0);
+
+    // The off switch silences the same path without changing the result.
+    let prev = out.clone();
+    measured::set_enabled(false);
+    let before = measured::snapshot();
+    rana::tensor::gemm::gemv_batch(m, k, n, &a, &b, &mut out, 1.0, 0.0);
+    let delta = measured::snapshot().delta_since(&before);
+    measured::set_enabled(true);
+    assert!(delta.is_zero(), "disabled counters must stand still");
+    assert_eq!(out, prev, "counting must never change kernel output");
+}
